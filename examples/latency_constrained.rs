@@ -1,0 +1,49 @@
+//! Algorithm 2 live: sweep the per-token deadline D and watch the
+//! early-exit controller walk its escalation ladder — full-precision KV
+//! shipping at generous deadlines, harder TAB-Q recompression as D
+//! shrinks, then I_kv = 0, then token reduction.
+//!
+//!   make artifacts && cargo run --release --example latency_constrained
+
+use std::rc::Rc;
+
+use splitserve::coordinator::{build_pipeline, DeploymentSpec, Request};
+use splitserve::model::ModelConfig;
+use splitserve::runtime::Engine;
+use splitserve::util::bench::Table;
+use splitserve::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env(false);
+    let n_layers = args.usize_or("layers", 8);
+    let split = args.usize_or("split", n_layers / 2);
+
+    let mut cfg = ModelConfig::sim7b();
+    cfg.n_layers = n_layers;
+    let engine = Rc::new(Engine::load("artifacts", &cfg)?);
+
+    let mut table = Table::new(
+        "early exit under shrinking deadlines (Algorithm 2)",
+        &["deadline ms", "tokens", "dropped", "final bits", "kv on", "mean step ms", "outages"],
+    );
+    for deadline_ms in [2000.0, 400.0, 120.0, 60.0, 25.0, 8.0, 0.5f64] {
+        let mut spec = DeploymentSpec::defaults(cfg.clone(), split);
+        spec.deadline_s = Some(deadline_ms / 1e3);
+        let mut pipe = build_pipeline(engine.clone(), &spec)?;
+        let res = pipe.generate(&Request::new(1, vec![5, 50, 250, 125], 14))?;
+        let fs = res.final_settings.unwrap();
+        let outages = res.steps.iter().filter(|s| s.outage).count();
+        table.row(&[
+            format!("{deadline_ms:.1}"),
+            format!("{}", res.tokens.len()),
+            format!("{}", res.tokens_dropped),
+            format!("{}", fs.qa_bits),
+            format!("{}", fs.include_kv),
+            format!("{:.1}", res.mean_step_latency_s() * 1e3),
+            format!("{outages}"),
+        ]);
+    }
+    table.print();
+    println!("\nladder reading: bits shrink first, then kv drops, then tokens are cut.");
+    Ok(())
+}

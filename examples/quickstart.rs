@@ -1,0 +1,65 @@
+//! Quickstart: plan a memory-feasible split configuration (paper Eq. 8),
+//! build the edge/cloud deployment over the AOT artifacts, and serve one
+//! prompt end to end.
+//!
+//!   make artifacts && cargo run --release --example quickstart
+
+use std::rc::Rc;
+
+use splitserve::coordinator::{build_pipeline, DeploymentSpec, Request};
+use splitserve::model::ModelConfig;
+use splitserve::planner::{plan, AnalyticAccuracyModel, PlanInputs};
+use splitserve::quant::OpscConfig;
+use splitserve::runtime::Engine;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = ModelConfig::sim7b();
+    println!("model: {} ({} layers, d={})", cfg.name, cfg.n_layers, cfg.d_model);
+
+    // 1. Plan: maximize activation precision Ψ under a 16 MB edge budget
+    //    (Eq. 8) at the full token budget W̄ = max_seq.
+    let mut inputs = PlanInputs::defaults(cfg.clone(), 16 * 1024 * 1024, cfg.max_seq);
+    // demonstrate a true split deployment: keep >= 4 layers on the cloud
+    inputs.split_candidates.retain(|&s| s <= cfg.n_layers - 4);
+    let choice = plan(&inputs, &AnalyticAccuracyModel)
+        .ok_or_else(|| anyhow::anyhow!("no feasible configuration"))?;
+    println!(
+        "planned: split l={} Qw={}b/{}b Qa={}b/{}b  psi={}  edge mem {:.1} MB  predicted drop {:.2}%",
+        choice.opsc.split_layer,
+        choice.opsc.qw_front,
+        choice.opsc.qw_back,
+        choice.qa.front,
+        choice.qa.back,
+        choice.psi,
+        choice.edge_bytes as f64 / (1024.0 * 1024.0),
+        choice.predicted_drop,
+    );
+
+    // 2. Build the deployment (edge front quantized per the plan, cloud
+    //    back full precision, ε-outage link at the Eq. 13 optimal rate).
+    let engine = Rc::new(Engine::load("artifacts", &cfg)?);
+    let mut spec = DeploymentSpec::defaults(cfg, choice.opsc.split_layer);
+    spec.opsc = OpscConfig::new(choice.opsc.split_layer, choice.opsc.qw_front, 16);
+    spec.compression.q_bar = choice.qa.front.clamp(2, 8);
+    let mut pipeline = build_pipeline(engine, &spec)?;
+    println!("link rate: {:.2} Mbps (Eq. 13 optimum)", pipeline.link.rate_bps / 1e6);
+
+    // 3. Serve one request.
+    let prompt: Vec<u32> = vec![12, 345, 67, 89, 101, 202];
+    let res = pipeline.generate(&Request::new(1, prompt.clone(), 16))?;
+    println!("\nprompt:  {prompt:?}");
+    println!("tokens:  {:?}", res.tokens);
+    println!(
+        "latency: prefill {:.1} ms, mean decode step {:.1} ms",
+        res.prefill.total_latency_s() * 1e3,
+        res.mean_step_latency_s() * 1e3
+    );
+    println!(
+        "wire:    {} B up ({} B/step avg), {} B down; TAB-Q bits used: {:?}",
+        res.total_uplink_bytes(),
+        res.total_uplink_bytes() / (res.steps.len().max(1) as u64 + 1),
+        res.total_downlink_bytes(),
+        res.steps.iter().map(|s| s.chosen_bits).collect::<Vec<_>>(),
+    );
+    Ok(())
+}

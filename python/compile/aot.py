@@ -1,0 +1,212 @@
+"""AOT export: lower every L2 entrypoint to HLO *text* artifacts.
+
+Run once via `make artifacts` (python -m compile.aot --out-dir ../artifacts).
+Python never runs on the request path; the Rust runtime loads these files via
+HloModuleProto::from_text_file + PJRT compile.
+
+Interchange format is HLO TEXT, not a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/load_hlo/).
+
+Besides the .hlo.txt files this writes:
+  manifest.json      — shape classes, artifact input orders, dims (read by
+                       rust/src/runtime/artifacts.rs)
+  golden/*.bin + golden.json — deterministic input/output vectors computed by
+                       jax, replayed by Rust integration tests to pin the
+                       python->rust numerics end to end.
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import tabq
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*dims):
+    return jax.ShapeDtypeStruct(dims, jnp.float32)
+
+
+def i32(*dims):
+    return jax.ShapeDtypeStruct(dims, jnp.int32)
+
+
+def layer_weight_specs(cfg):
+    shapes = model.layer_weight_shapes(cfg)
+    return [f32(*shapes[n]) for n in model.LAYER_WEIGHT_NAMES]
+
+
+def entrypoints(cfg):
+    """(name, fn, arg_specs, arg_names) for every artifact of one shape class."""
+    P, d, W = cfg.prefill_len, cfg.d_model, cfg.max_seq
+    kvw, V = cfg.kv_width, cfg.vocab
+    wnames = list(model.LAYER_WEIGHT_NAMES)
+    d2 = cfg.head_dim // 2
+    eps = [
+        (
+            "layer_prefill",
+            functools.partial(model.layer_prefill, cfg=cfg),
+            [f32(P, d), f32(P, d2), f32(P, d2)] + layer_weight_specs(cfg),
+            ["x", "cos", "sin"] + wnames,
+        ),
+        (
+            "layer_decode",
+            functools.partial(model.layer_decode, cfg=cfg),
+            [f32(1, d), f32(W, kvw), f32(W, kvw), i32(1), f32(1, d2), f32(1, d2)]
+            + layer_weight_specs(cfg),
+            ["x", "k_cache", "v_cache", "pos", "cos", "sin"] + wnames,
+        ),
+        (
+            "lm_head_prefill",
+            model.lm_head,
+            [f32(P, d), f32(d), f32(d, V)],
+            ["x", "gf", "w_out"],
+        ),
+        (
+            "lm_head_decode",
+            model.lm_head,
+            [f32(1, d), f32(d), f32(d, V)],
+            ["x", "gf", "w_out"],
+        ),
+        (
+            "tabq4",
+            functools.partial(tabq.tabq_quant, bits=4),
+            [f32(P, d)],
+            ["t"],
+        ),
+    ]
+    return eps
+
+
+def export_config(cfg, out_dir):
+    os.makedirs(out_dir, exist_ok=True)
+    arts = {}
+    for name, fn, specs, argnames in entrypoints(cfg):
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        arts[name] = {
+            "file": f"{name}.hlo.txt",
+            "args": argnames,
+            "arg_shapes": [list(s.shape) for s in specs],
+        }
+        print(f"  {cfg.name}/{name}: {len(text)} chars")
+    return arts
+
+
+def _rand(rng, *dims, scale=0.05):
+    return np.asarray(rng.standard_normal(dims) * scale, dtype=np.float32)
+
+
+def write_golden(cfg, out_root):
+    """Deterministic input/output vectors for the Rust integration tests."""
+    gdir = os.path.join(out_root, "golden")
+    os.makedirs(gdir, exist_ok=True)
+    rng = np.random.default_rng(12345)
+    shapes = model.layer_weight_shapes(cfg)
+    weights = {n: _rand(rng, *shapes[n]) for n in model.LAYER_WEIGHT_NAMES}
+    weights["g1"] = weights["g1"] * 0 + 1.0  # norms near 1 like trained models
+    weights["g2"] = weights["g2"] * 0 + 1.0
+    entries = []
+
+    def dump(name, arr):
+        arr = np.asarray(arr, dtype=np.float32)
+        fname = f"{cfg.name}_{name}.bin"
+        arr.tofile(os.path.join(gdir, fname))
+        entries.append({"name": name, "file": fname, "shape": list(arr.shape)})
+
+    # RoPE tables (host-side; full table to max_seq, goldens use slices)
+    cos_full, sin_full = model.rope_tables(cfg, cfg.max_seq)
+    cos_full = np.asarray(cos_full, dtype=np.float32)
+    sin_full = np.asarray(sin_full, dtype=np.float32)
+    dump("rope_cos", cos_full)
+    dump("rope_sin", sin_full)
+    P = cfg.prefill_len
+
+    # layer_prefill golden
+    x = _rand(rng, cfg.prefill_len, cfg.d_model, scale=0.5)
+    wargs = [weights[n] for n in model.LAYER_WEIGHT_NAMES]
+    y, k, v = model.layer_prefill(x, cos_full[:P], sin_full[:P], *wargs, cfg=cfg)
+    dump("prefill_x", x)
+    for n in model.LAYER_WEIGHT_NAMES:
+        dump(f"w_{n}", weights[n])
+    dump("prefill_y", y)
+    dump("prefill_k", k)
+    dump("prefill_v", v)
+
+    # layer_decode golden (pos = 5, caches prefilled with noise then masked)
+    xd = _rand(rng, 1, cfg.d_model, scale=0.5)
+    kc = _rand(rng, cfg.max_seq, cfg.kv_width, scale=0.5)
+    vc = _rand(rng, cfg.max_seq, cfg.kv_width, scale=0.5)
+    pos = np.array([5], dtype=np.int32)
+    yd, kc2, vc2 = model.layer_decode(
+        xd, kc, vc, pos, cos_full[5:6], sin_full[5:6], *wargs, cfg=cfg
+    )
+    dump("decode_x", xd)
+    dump("decode_kc", kc)
+    dump("decode_vc", vc)
+    dump("decode_y", yd)
+    dump("decode_kc_out", kc2)
+    dump("decode_vc_out", vc2)
+
+    # lm_head golden
+    gf = np.ones(cfg.d_model, dtype=np.float32)
+    w_out = _rand(rng, cfg.d_model, cfg.vocab)
+    logits = model.lm_head(x, gf, w_out)
+    dump("lmh_gf", gf)
+    dump("lmh_w_out", w_out)
+    dump("lmh_logits", logits)
+
+    return {"pos": 5, "tensors": entries}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--configs", default="sim7b,sim13b")
+    args = ap.parse_args()
+
+    manifest = {"configs": {}}
+    for cname in args.configs.split(","):
+        cfg = model.CONFIGS[cname]
+        cdir = os.path.join(args.out_dir, cname)
+        arts = export_config(cfg, cdir)
+        golden = write_golden(cfg, args.out_dir)
+        manifest["configs"][cname] = {
+            "n_layers": cfg.n_layers,
+            "d_model": cfg.d_model,
+            "n_heads": cfg.n_heads,
+            "head_dim": cfg.head_dim,
+            "d_ff": cfg.d_ff,
+            "vocab": cfg.vocab,
+            "max_seq": cfg.max_seq,
+            "prefill_len": cfg.prefill_len,
+            "artifacts": arts,
+            "golden": golden,
+        }
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {mpath}")
+
+
+if __name__ == "__main__":
+    main()

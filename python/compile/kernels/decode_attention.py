@@ -1,0 +1,104 @@
+"""L1 Pallas kernel: fused single-token decode attention over a static KV cache.
+
+This is the hot spot of autoregressive decoding on the edge device: one query
+token attends to the (masked) prefix of a fixed-size KV cache. The TPU-oriented
+restatement of flash-decoding:
+
+  * static shapes everywhere (AOT requirement): the cache is (W, H, D) with a
+    runtime `pos` scalar masking rows > pos;
+  * grid over heads; per head the cache panel is streamed into VMEM;
+  * `block_w`-chunked online softmax (running max / rescaled accumulator), the
+    VMEM-friendly equivalent of the GPU flash-decoding loop over KV tiles.
+
+`interpret=True` is mandatory here — real TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot execute. Correctness is pinned to
+`ref.decode_attention` by pytest; TPU performance is estimated from the
+BlockSpec VMEM footprint in DESIGN.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _single_pass_kernel(q_ref, k_ref, v_ref, pos_ref, o_ref, *, scale):
+    """One head, whole cache resident: masked softmax in one pass."""
+    q = q_ref[0, :]                       # (D,)
+    k = k_ref[:, 0, :]                    # (W, D)
+    v = v_ref[:, 0, :]                    # (W, D)
+    w = k.shape[0]
+    scores = jnp.dot(k, q) * scale        # (W,)
+    mask = jax.lax.iota(jnp.int32, w) <= pos_ref[0]
+    scores = jnp.where(mask, scores, -1e30)
+    m = jnp.max(scores)
+    p = jnp.exp(scores - m) * mask.astype(scores.dtype)
+    denom = jnp.sum(p)
+    o_ref[0, :] = jnp.dot(p, v) / denom
+
+
+def _blocked_kernel(q_ref, k_ref, v_ref, pos_ref, o_ref, *, scale, block_w):
+    """One head, online-softmax accumulation over `block_w`-sized cache chunks.
+
+    Maintains (running max m, running denom l, rescaled accumulator acc) —
+    identical structure to flash-decoding's KV-tile loop, which is what a
+    real-TPU BlockSpec over the sequence axis would execute per grid step.
+    """
+    q = q_ref[0, :]                       # (D,)
+    w = k_ref.shape[0]
+    d = q.shape[0]
+    pos = pos_ref[0]
+    n_blocks = w // block_w
+
+    def body(i, carry):
+        m_prev, l_prev, acc = carry
+        start = i * block_w
+        k_blk = jax.lax.dynamic_slice(k_ref[:, 0, :], (start, 0), (block_w, d))
+        v_blk = jax.lax.dynamic_slice(v_ref[:, 0, :], (start, 0), (block_w, d))
+        scores = jnp.dot(k_blk, q) * scale
+        mask = (start + jax.lax.iota(jnp.int32, block_w)) <= pos
+        scores = jnp.where(mask, scores, -1e30)
+        m_cur = jnp.maximum(m_prev, jnp.max(scores))
+        p = jnp.exp(scores - m_cur) * mask.astype(scores.dtype)
+        alpha = jnp.exp(m_prev - m_cur)
+        l_cur = l_prev * alpha + jnp.sum(p)
+        acc = acc * alpha + jnp.dot(p, v_blk)
+        return m_cur, l_cur, acc
+
+    m0 = jnp.float32(-1e30)
+    l0 = jnp.float32(0.0)
+    acc0 = jnp.zeros((d,), jnp.float32)
+    _, l_fin, acc_fin = jax.lax.fori_loop(0, n_blocks, body, (m0, l0, acc0))
+    o_ref[0, :] = acc_fin / l_fin
+
+
+def decode_attention(q, k_cache, v_cache, pos, *, block_w=None):
+    """Pallas fused decode attention.
+
+    q: (H, D); k_cache/v_cache: (W, H, D); pos: int32[1].
+    block_w: None for the whole-cache single pass, or a divisor of W for the
+    chunked online-softmax variant. Returns (H, D).
+    """
+    H, D = q.shape
+    W = k_cache.shape[0]
+    scale = 1.0 / (D ** 0.5)
+    if block_w is None:
+        kern = functools.partial(_single_pass_kernel, scale=scale)
+    else:
+        if W % block_w != 0:
+            raise ValueError(f"block_w={block_w} must divide W={W}")
+        kern = functools.partial(_blocked_kernel, scale=scale, block_w=block_w)
+    return pl.pallas_call(
+        kern,
+        grid=(H,),
+        in_specs=[
+            pl.BlockSpec((1, D), lambda h: (h, 0)),          # q, one head row
+            pl.BlockSpec((W, 1, D), lambda h: (0, h, 0)),    # k panel for head h
+            pl.BlockSpec((W, 1, D), lambda h: (0, h, 0)),    # v panel for head h
+            pl.BlockSpec((1,), lambda h: (0,)),              # pos scalar
+        ],
+        out_specs=pl.BlockSpec((1, D), lambda h: (h, 0)),
+        out_shape=jax.ShapeDtypeStruct((H, D), jnp.float32),
+        interpret=True,
+    )(q, k_cache, v_cache, pos)

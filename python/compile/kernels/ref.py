@@ -1,0 +1,122 @@
+"""Pure-jnp oracles for the Pallas kernels (L1 correctness ground truth).
+
+Every Pallas kernel in this package has a reference implementation here,
+written with plain jax.numpy only. pytest (python/tests/) asserts
+allclose between kernel and oracle across hypothesis-driven shape sweeps;
+this is the core correctness signal for the L1 layer.
+"""
+
+import jax.numpy as jnp
+
+
+def rms_norm(x, gamma, eps=1e-5):
+    """RMSNorm over the last axis."""
+    var = jnp.mean(x.astype(jnp.float32) ** 2, axis=-1, keepdims=True)
+    return (x * jnp.reciprocal(jnp.sqrt(var + eps)) * gamma).astype(x.dtype)
+
+
+def rope_angles(positions, head_dim, theta=10000.0):
+    """cos/sin tables for rotary embedding. positions: (w,) int32."""
+    inv_freq = 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+    ang = positions.astype(jnp.float32)[:, None] * inv_freq[None, :]  # (w, D/2)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """Rotate-half rotary embedding. x: (w, H, D); cos/sin: (w, D/2)."""
+    d2 = x.shape[-1] // 2
+    x1, x2 = x[..., :d2], x[..., d2:]
+    cos = cos[:, None, :]
+    sin = sin[:, None, :]
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+def decode_attention(q, k_cache, v_cache, pos):
+    """Single-token attention over a static KV cache.
+
+    q:        (H, D)   query for the current token (RoPE already applied)
+    k_cache:  (W, H, D) key cache; rows > pos are garbage and must be masked
+    v_cache:  (W, H, D) value cache
+    pos:      scalar int32, index of the current token (attends to 0..pos)
+    returns:  (H, D)
+    """
+    W = k_cache.shape[0]
+    D = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.float32(D))
+    # (W, H): score of each cache row per head
+    scores = jnp.einsum("whd,hd->wh", k_cache, q) * scale
+    mask = (jnp.arange(W) <= pos)[:, None]
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jnp.exp(scores - jnp.max(scores, axis=0, keepdims=True))
+    probs = probs * mask  # exact zero for masked rows
+    probs = probs / jnp.sum(probs, axis=0, keepdims=True)
+    return jnp.einsum("wh,whd->hd", probs, v_cache)
+
+
+def prefill_attention(q, k, v):
+    """Causal multi-head attention. q,k,v: (w, H, D) -> (w, H, D)."""
+    w = q.shape[0]
+    D = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.float32(D))
+    scores = jnp.einsum("ihd,jhd->hij", q, k) * scale
+    causal = jnp.tril(jnp.ones((w, w), dtype=bool))
+    scores = jnp.where(causal[None, :, :], scores, -1e30)
+    probs = jnp.exp(scores - jnp.max(scores, axis=-1, keepdims=True))
+    probs = probs * causal[None, :, :]
+    probs = probs / jnp.sum(probs, axis=-1, keepdims=True)
+    return jnp.einsum("hij,jhd->ihd", probs, v)
+
+
+def aiq_qmax(bits):
+    """Paper Eq. (6): Q_max = 2^(Q-1) - 1."""
+    return 2 ** (bits - 1) - 1
+
+
+def aiq_quant(t, bits):
+    """Asymmetric integer quantization, paper Eq. (5)-(6).
+
+    Returns (q, s, z) with q = round(t/s + z) clamped to [0, qmax] and
+    dequantization (q - z) * s exactly as Eq. (7).
+
+    Deviation from the paper as written: Eq. (6)'s integer zero-point
+    z = ceil(Tmin/s) shifts codes outside [0, qmax] whenever Tmin > 0, so a
+    clamped implementation distorts the top of the range by up to Tmin/s
+    quanta. We use the exact float zero-point z = -Tmin/s, which maps
+    [Tmin, Tmax] onto [0, qmax] and preserves the s/2 rounding bound.
+    Degenerate (constant) tensors quantize with s = 1 (exact roundtrip).
+    """
+    tmax = jnp.max(t)
+    tmin = jnp.min(t)
+    qmax = aiq_qmax(bits)
+    s = (tmax - tmin) / qmax
+    s = jnp.where(s <= 0, 1.0, s)
+    z = -tmin / s
+    q = jnp.clip(jnp.round(t / s + z), 0, qmax)
+    return q, s, z
+
+
+def aiq_dequant(q, s, z):
+    return (q - z) * s
+
+
+def tabq_tokenwise_quant(t, bits):
+    """Token-wise AIQ of |t| with the sign carried separately (Alg. 1 body).
+
+    t: (w, n) activations. Per token (row): decompose sign/magnitude, AIQ
+    the magnitude at `bits` levels. Returns (q, s, z, sign) with
+    q: (w, n) quantized magnitudes, s/z: (w, 1) per-token scale/zero.
+    """
+    sign = jnp.sign(t)
+    mag = jnp.abs(t)
+    tmax = jnp.max(mag, axis=1, keepdims=True)
+    tmin = jnp.min(mag, axis=1, keepdims=True)
+    qmax = aiq_qmax(bits)
+    s = (tmax - tmin) / qmax
+    s = jnp.where(s <= 0, 1.0, s)
+    z = -tmin / s
+    q = jnp.clip(jnp.round(mag / s + z), 0, qmax)
+    return q, s, z, sign
+
+
+def tabq_dequant(q, s, z, sign):
+    return (q - z) * s * sign

@@ -1,0 +1,77 @@
+"""L1 Pallas kernel: token-wise asymmetric integer quantization (TAB-Q body).
+
+The inner loop of the paper's Algorithm 1 is AIQ applied token-wise to the
+magnitude of the intermediate activations (the sign is carried separately).
+The adaptive bit search (lines 5-9) is control logic and stays outside the
+kernel — Algorithm 1 simply re-invokes this kernel at decreasing bit widths
+until the distortion tolerance is hit. This mirrors the Rust hot path
+(`rust/src/quant/tabq.rs`), which performs the same computation on the edge
+CPU; the kernel is the TPU-resident version used when the split point leaves
+the quantizer on an accelerator.
+
+Pattern: per-token (row) reduction for min/max of |t| in VMEM, then an
+elementwise quantize of the row — tiles are (block_w, n) row panels so the
+per-token scale/zero live in registers next to the data they normalize.
+
+interpret=True (CPU PJRT cannot run Mosaic custom-calls); correctness is
+pinned to ref.tabq_tokenwise_quant by pytest.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _tabq_kernel(t_ref, q_ref, s_ref, z_ref, sig_ref, *, qmax):
+    t = t_ref[...]                               # (BW, n)
+    sign = jnp.sign(t)
+    mag = jnp.abs(t)
+    tmax = jnp.max(mag, axis=1, keepdims=True)   # (BW, 1)
+    tmin = jnp.min(mag, axis=1, keepdims=True)
+    s = (tmax - tmin) / qmax
+    s = jnp.where(s <= 0, 1.0, s)
+    z = -tmin / s  # exact float zero-point; see ref.aiq_quant on the Eq.(6) fix
+    q = jnp.clip(jnp.round(mag / s + z), 0, qmax)
+    q_ref[...] = q
+    s_ref[...] = s
+    z_ref[...] = z
+    sig_ref[...] = sign
+
+
+def tabq_quant(t, bits, *, block_w=None):
+    """Token-wise AIQ of |t| at `bits` levels (sign separate).
+
+    t: (w, n) float32. Returns (q, s, z, sign): q (w, n) quantized magnitudes,
+    s/z (w, 1) per-token scale and zero point, sign (w, n) in {-1, 0, 1}.
+    `bits` is static (baked into the artifact); one artifact per bit width.
+    """
+    w, n = t.shape
+    if block_w is None:
+        block_w = min(w, 8)
+    if w % block_w != 0:
+        raise ValueError(f"block_w={block_w} must divide w={w}")
+    qmax = float(ref.aiq_qmax(bits))
+    kern = functools.partial(_tabq_kernel, qmax=qmax)
+    grid = (w // block_w,)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_w, n), lambda i: (i, 0))],
+        out_specs=(
+            pl.BlockSpec((block_w, n), lambda i: (i, 0)),
+            pl.BlockSpec((block_w, 1), lambda i: (i, 0)),
+            pl.BlockSpec((block_w, 1), lambda i: (i, 0)),
+            pl.BlockSpec((block_w, n), lambda i: (i, 0)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((w, n), jnp.float32),
+            jax.ShapeDtypeStruct((w, 1), jnp.float32),
+            jax.ShapeDtypeStruct((w, 1), jnp.float32),
+            jax.ShapeDtypeStruct((w, n), jnp.float32),
+        ),
+        interpret=True,
+    )(t)

@@ -1,0 +1,150 @@
+"""L2: Llama-style decoder model as per-layer jax functions (build-time only).
+
+Design (DESIGN.md §5.1): artifacts are *per-layer* entrypoints with weights as
+runtime arguments. The Rust coordinator owns the layer loop, so one artifact
+set serves every split point ℓ, every OPSC precision (weights are
+fake-quantized host-side before upload), and both the edge and cloud nodes.
+
+Entrypoints lowered by aot.py:
+  layer_prefill  — w=P tokens through one decoder layer (causal MHA + SwiGLU),
+                   emitting the K/V rows for the KV cache.
+  layer_decode   — one token at position `pos` through one decoder layer with a
+                   static (W, H*D) KV cache; attention is the L1 Pallas fused
+                   decode kernel, which lowers into this same HLO module.
+  lm_head_*      — final RMSNorm + vocab projection (prefill width and width-1).
+
+Token embedding is a row gather and lives in Rust (model/weights.rs); it never
+needs XLA.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels.decode_attention import decode_attention
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Shape class of a simulated model (layer count lives in Rust config)."""
+
+    name: str
+    n_layers: int      # reference layer count (sweeps in Rust may differ)
+    d_model: int
+    n_heads: int
+    head_dim: int
+    d_ff: int
+    vocab: int
+    max_seq: int       # W̄: static KV-cache length
+    prefill_len: int   # P: static prefill width (prompts are padded to P)
+
+    @property
+    def kv_width(self):
+        return self.n_heads * self.head_dim
+
+
+# sim-7b / sim-13b mirror Llama-2 7B (32 layers) and 13B (40 layers) in layer
+# count — so every paper split-point sweep is faithful — with small widths so
+# CPU-PJRT evaluation is fast. Table-6 architecture variants (qwen14b, nemo12b,
+# llama8b, phi4 analogs) share the sim7b shape class and differ only in layer
+# count, configured on the Rust side; they need no extra artifacts.
+CONFIGS = {
+    "sim7b": ModelConfig("sim7b", 32, 128, 4, 32, 352, 512, 128, 64),
+    "sim13b": ModelConfig("sim13b", 40, 160, 5, 32, 432, 512, 128, 64),
+}
+
+# Order of the per-layer weight arguments in every layer artifact. Rust's
+# runtime/artifacts.rs must feed buffers in exactly this order.
+LAYER_WEIGHT_NAMES = ("wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down", "g1", "g2")
+
+
+def layer_weight_shapes(cfg: ModelConfig):
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "wq": (d, d), "wk": (d, d), "wv": (d, d), "wo": (d, d),
+        "w_gate": (d, f), "w_up": (d, f), "w_down": (f, d),
+        "g1": (d,), "g2": (d,),
+    }
+
+
+def _qkv(h, wq, wk, wv, n_heads, head_dim):
+    w = h.shape[0]
+    q = (h @ wq).reshape(w, n_heads, head_dim)
+    k = (h @ wk).reshape(w, n_heads, head_dim)
+    v = (h @ wv).reshape(w, n_heads, head_dim)
+    return q, k, v
+
+
+def _ffn(x, g2, w_gate, w_up, w_down):
+    h = ref.rms_norm(x, g2)
+    return x + (jax.nn.silu(h @ w_gate) * (h @ w_up)) @ w_down
+
+
+def layer_prefill(x, cos, sin, wq, wk, wv, wo, wg, wu, wd, g1, g2, *, cfg: ModelConfig):
+    """One decoder layer over P prompt tokens (positions 0..P-1).
+
+    x: (P, d); cos/sin: (P, D/2) RoPE tables for positions 0..P-1, computed
+    HOST-side (xla_extension 0.5.1 miscompiles in-graph pow/cos — lowering
+    the trig produced sign-flipped tables, so tables are artifact inputs).
+    Returns (y, k_rows, v_rows) with k/v rows (P, H*D) — RoPE already
+    applied to k, ready to be written into the KV cache.
+    """
+    h = ref.rms_norm(x, g1)
+    q, k, v = _qkv(h, wq, wk, wv, cfg.n_heads, cfg.head_dim)
+    q = ref.apply_rope(q, cos, sin)
+    k = ref.apply_rope(k, cos, sin)
+    P = cfg.prefill_len
+    attn = ref.prefill_attention(q, k, v).reshape(P, cfg.kv_width)
+    x = x + attn @ wo
+    y = _ffn(x, g2, wg, wu, wd)
+    return y, k.reshape(P, cfg.kv_width), v.reshape(P, cfg.kv_width)
+
+
+def layer_decode(x, k_cache, v_cache, pos, cos, sin, wq, wk, wv, wo, wg, wu, wd,
+                 g1, g2, *, cfg: ModelConfig, block_w=None):
+    """One decoder layer for a single token at position pos[0].
+
+    x: (1, d); k_cache/v_cache: (W, H*D); pos: int32[1]; cos/sin: (1, D/2)
+    host-computed RoPE table row for this position (see layer_prefill).
+    Returns (y, k_cache', v_cache') with the new token's K/V written at row
+    pos[0]. Attention is the fused Pallas decode kernel.
+    """
+    W = cfg.max_seq
+    H, D = cfg.n_heads, cfg.head_dim
+    h = ref.rms_norm(x, g1)
+    q, k, v = _qkv(h, wq, wk, wv, H, D)
+    p = pos.reshape(1).astype(jnp.int32)
+    q = ref.apply_rope(q, cos, sin)
+    k = ref.apply_rope(k, cos, sin)
+    k_cache = jax.lax.dynamic_update_slice(k_cache, k.reshape(1, H * D), (p[0], 0))
+    v_cache = jax.lax.dynamic_update_slice(v_cache, v.reshape(1, H * D), (p[0], 0))
+    attn = decode_attention(
+        q[0], k_cache.reshape(W, H, D), v_cache.reshape(W, H, D), p,
+        block_w=block_w,
+    )
+    x = x + attn.reshape(1, H * D) @ wo
+    y = _ffn(x, g2, wg, wu, wd)
+    return y, k_cache, v_cache
+
+
+def lm_head(x, gf, w_out):
+    """Final RMSNorm + vocab projection. x: (w, d) -> logits (w, vocab)."""
+    return ref.rms_norm(x, gf) @ w_out
+
+
+def rope_tables(cfg: ModelConfig, length: int):
+    """Host-side RoPE tables for positions 0..length-1: (cos, sin), each
+    (length, D/2) float32. The Rust runtime computes the same tables."""
+    return ref.rope_angles(jnp.arange(length, dtype=jnp.int32), cfg.head_dim)
+
+
+def reference_forward_prefill(x, layers, gf, w_out, cfg: ModelConfig):
+    """Whole-stack prefill used by pytest golden tests (not lowered)."""
+    cos, sin = rope_tables(cfg, cfg.prefill_len)
+    caches = []
+    for lw in layers:
+        x, k, v = layer_prefill(x, cos, sin, *[lw[n] for n in LAYER_WEIGHT_NAMES], cfg=cfg)
+        caches.append((k, v))
+    return lm_head(x, gf, w_out), x, caches

@@ -1,0 +1,116 @@
+"""AOT export integrity: manifest consistency, golden vectors, HLO text.
+
+These run against the artifacts/ directory when present (after `make
+artifacts`); export-logic tests that don't need the directory run always.
+"""
+
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from compile import aot, model
+
+jax.config.update("jax_platform_name", "cpu")
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+HAVE_ARTIFACTS = os.path.exists(os.path.join(ARTIFACTS, "manifest.json"))
+
+needs_artifacts = pytest.mark.skipif(not HAVE_ARTIFACTS, reason="run `make artifacts`")
+
+
+def test_entrypoints_cover_all_required_artifacts():
+    cfg = model.CONFIGS["sim7b"]
+    names = {e[0] for e in aot.entrypoints(cfg)}
+    assert {"layer_prefill", "layer_decode", "lm_head_prefill", "lm_head_decode"} <= names
+
+
+def test_entrypoint_arg_names_match_spec_counts():
+    cfg = model.CONFIGS["sim7b"]
+    for name, _fn, specs, argnames in aot.entrypoints(cfg):
+        assert len(specs) == len(argnames), name
+
+
+def test_layer_decode_arg_order_contract():
+    """Rust NodeRuntime hardcodes this order — it must never drift."""
+    cfg = model.CONFIGS["sim7b"]
+    eps = {e[0]: e for e in aot.entrypoints(cfg)}
+    _, _, _, argnames = eps["layer_decode"]
+    assert argnames[:6] == ["x", "k_cache", "v_cache", "pos", "cos", "sin"]
+    assert tuple(argnames[6:]) == model.LAYER_WEIGHT_NAMES
+
+
+def test_to_hlo_text_produces_parsable_module():
+    import functools
+    import jax.numpy as jnp
+
+    lowered = jax.jit(lambda x: (x * 2.0,)).lower(
+        jax.ShapeDtypeStruct((2, 2), jnp.float32)
+    )
+    text = aot.to_hlo_text(lowered)
+    assert "ENTRY" in text and "f32[2,2]" in text
+
+
+@needs_artifacts
+def test_manifest_matches_configs():
+    with open(os.path.join(ARTIFACTS, "manifest.json")) as f:
+        m = json.load(f)
+    for name, cfg in model.CONFIGS.items():
+        mc = m["configs"][name]
+        assert mc["d_model"] == cfg.d_model
+        assert mc["n_heads"] == cfg.n_heads
+        assert mc["max_seq"] == cfg.max_seq
+        for art in ("layer_prefill", "layer_decode", "lm_head_prefill", "lm_head_decode"):
+            path = os.path.join(ARTIFACTS, name, mc["artifacts"][art]["file"])
+            assert os.path.exists(path), path
+            with open(path) as fh:
+                assert "ENTRY" in fh.read()
+
+
+@needs_artifacts
+def test_golden_files_roundtrip():
+    with open(os.path.join(ARTIFACTS, "manifest.json")) as f:
+        m = json.load(f)
+    for name in model.CONFIGS:
+        tensors = m["configs"][name]["golden"]["tensors"]
+        assert tensors, "golden must not be empty"
+        for t in tensors:
+            path = os.path.join(ARTIFACTS, "golden", t["file"])
+            vals = np.fromfile(path, dtype=np.float32)
+            expect = int(np.prod(t["shape"])) if t["shape"] else 1
+            assert vals.size == expect, f"{t['name']}: {vals.size} != {expect}"
+            assert np.isfinite(vals).all(), t["name"]
+
+
+@needs_artifacts
+def test_golden_decode_recomputes():
+    """The stored decode golden must be reproducible from stored inputs."""
+    with open(os.path.join(ARTIFACTS, "manifest.json")) as f:
+        m = json.load(f)
+    cfg = model.CONFIGS["sim7b"]
+    g = {t["name"]: t for t in m["configs"]["sim7b"]["golden"]["tensors"]}
+
+    def load(n):
+        t = g[n]
+        return np.fromfile(
+            os.path.join(ARTIFACTS, "golden", t["file"]), dtype=np.float32
+        ).reshape(t["shape"])
+
+    weights = [load(f"w_{n}") for n in model.LAYER_WEIGHT_NAMES]
+    cos = load("rope_cos")
+    sin = load("rope_sin")
+    y, kc, vc = model.layer_decode(
+        load("decode_x"),
+        load("decode_kc"),
+        load("decode_vc"),
+        np.array([5], dtype=np.int32),
+        cos[5:6],
+        sin[5:6],
+        *weights,
+        cfg=cfg,
+    )
+    np.testing.assert_allclose(np.asarray(y), load("decode_y"), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(kc), load("decode_kc_out"), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(vc), load("decode_vc_out"), rtol=1e-5, atol=1e-5)

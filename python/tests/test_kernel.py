@@ -1,0 +1,162 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles (the CORE signal).
+
+hypothesis sweeps shapes/positions; every case asserts allclose against
+ref.py. Kernels run interpret=True (CPU) — the same lowering that lands in
+the AOT artifacts, so agreement here pins the artifact numerics too.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.decode_attention import decode_attention
+from compile.kernels.tabq import tabq_quant
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(rng, *dims, scale=1.0):
+    return jnp.asarray(rng.standard_normal(dims) * scale, dtype=jnp.float32)
+
+
+# ---------------------------------------------------------------- decode attn
+@settings(max_examples=25, deadline=None)
+@given(
+    h=st.sampled_from([1, 2, 4, 5]),
+    d=st.sampled_from([8, 16, 32]),
+    w=st.sampled_from([16, 32, 64, 128]),
+    pos_frac=st.floats(0.0, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_decode_attention_single_pass_matches_ref(h, d, w, pos_frac, seed):
+    rng = np.random.default_rng(seed)
+    q = rand(rng, h, d)
+    k = rand(rng, w, h, d)
+    v = rand(rng, w, h, d)
+    pos = jnp.asarray([int(pos_frac * (w - 1))], dtype=jnp.int32)
+    got = decode_attention(q, k, v, pos)
+    want = ref.decode_attention(q, k, v, pos[0])
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    h=st.sampled_from([2, 4]),
+    d=st.sampled_from([16, 32]),
+    blocks=st.sampled_from([(64, 16), (64, 32), (128, 32), (128, 64)]),
+    pos_frac=st.floats(0.0, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_decode_attention_blocked_matches_ref(h, d, blocks, pos_frac, seed):
+    w, bw = blocks
+    rng = np.random.default_rng(seed)
+    q = rand(rng, h, d)
+    k = rand(rng, w, h, d)
+    v = rand(rng, w, h, d)
+    pos = jnp.asarray([int(pos_frac * (w - 1))], dtype=jnp.int32)
+    got = decode_attention(q, k, v, pos, block_w=bw)
+    want = ref.decode_attention(q, k, v, pos[0])
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_decode_attention_pos_zero_is_row_zero_value():
+    """With pos=0 the output must equal v[0] exactly (softmax over one row)."""
+    rng = np.random.default_rng(7)
+    q, k, v = rand(rng, 4, 16), rand(rng, 32, 4, 16), rand(rng, 32, 4, 16)
+    got = decode_attention(q, k, v, jnp.asarray([0], jnp.int32))
+    np.testing.assert_allclose(got, v[0], rtol=1e-6, atol=1e-6)
+
+
+def test_decode_attention_ignores_rows_beyond_pos():
+    """Garbage in cache rows > pos must not change the output."""
+    rng = np.random.default_rng(8)
+    q, k, v = rand(rng, 2, 16), rand(rng, 64, 2, 16), rand(rng, 64, 2, 16)
+    pos = jnp.asarray([10], jnp.int32)
+    base = decode_attention(q, k, v, pos)
+    k2 = k.at[11:].set(1e6)
+    v2 = v.at[11:].set(-1e6)
+    got = decode_attention(q, k2, v2, pos)
+    np.testing.assert_allclose(got, base, rtol=1e-6, atol=1e-6)
+
+
+def test_blocked_equals_single_pass():
+    rng = np.random.default_rng(9)
+    q, k, v = rand(rng, 4, 32), rand(rng, 128, 4, 32), rand(rng, 128, 4, 32)
+    pos = jnp.asarray([77], jnp.int32)
+    a = decode_attention(q, k, v, pos)
+    b = decode_attention(q, k, v, pos, block_w=32)
+    np.testing.assert_allclose(a, b, rtol=2e-5, atol=2e-5)
+
+
+def test_decode_attention_rejects_bad_block():
+    rng = np.random.default_rng(10)
+    q, k, v = rand(rng, 2, 16), rand(rng, 60, 2, 16), rand(rng, 60, 2, 16)
+    with pytest.raises(ValueError):
+        decode_attention(q, k, v, jnp.asarray([0], jnp.int32), block_w=32)
+
+
+# ----------------------------------------------------------------------- tabq
+@settings(max_examples=25, deadline=None)
+@given(
+    w=st.sampled_from([1, 4, 8, 16, 64]),
+    n=st.sampled_from([16, 64, 128]),
+    bits=st.integers(2, 8),
+    scale=st.sampled_from([0.01, 1.0, 100.0]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_tabq_kernel_matches_ref(w, n, bits, scale, seed):
+    rng = np.random.default_rng(seed)
+    t = rand(rng, w, n, scale=scale)
+    bw = 1 if w % 8 else 8
+    q, s, z, sig = tabq_quant(t, bits, block_w=bw)
+    qr, sr, zr, sigr = ref.tabq_tokenwise_quant(t, bits)
+    np.testing.assert_allclose(q, qr, rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(s, sr, rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(z, zr, rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(sig, sigr)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    bits=st.integers(3, 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_tabq_roundtrip_error_bounded_by_scale(bits, seed):
+    """|dequant(quant(t)) - t| <= s/2 + eps per token (rounding bound)."""
+    rng = np.random.default_rng(seed)
+    t = rand(rng, 8, 64, scale=3.0)
+    q, s, z, sig = tabq_quant(t, bits)
+    back = ref.tabq_dequant(q, s, z, sig)
+    err = np.abs(np.asarray(back) - np.asarray(t))
+    bound = np.asarray(s) * 0.5 + 1e-5
+    assert (err <= bound).all(), f"max err {err.max()} vs bound {bound.max()}"
+
+
+def test_tabq_constant_rows_degenerate():
+    t = jnp.ones((4, 32), jnp.float32) * 2.5
+    q, s, z, sig = tabq_quant(t, 4)
+    back = ref.tabq_dequant(q, s, z, sig)
+    np.testing.assert_allclose(back, t, rtol=1e-6)
+
+
+def test_tabq_sign_preserved():
+    rng = np.random.default_rng(3)
+    t = rand(rng, 8, 32, scale=5.0)
+    _, _, _, sig = tabq_quant(t, 4)
+    np.testing.assert_allclose(sig, jnp.sign(t))
+
+
+# ------------------------------------------------------------------------ aiq
+@settings(max_examples=30, deadline=None)
+@given(bits=st.integers(2, 8), seed=st.integers(0, 2**31 - 1))
+def test_aiq_levels_within_budget(bits, seed):
+    rng = np.random.default_rng(seed)
+    t = rand(rng, 16, 16, scale=10.0)
+    q, s, z = ref.aiq_quant(t, bits)
+    levels = np.unique(np.asarray(q))
+    assert len(levels) <= ref.aiq_qmax(bits) + 1
+    err = np.abs(np.asarray(ref.aiq_dequant(q, s, z)) - np.asarray(t))
+    assert err.max() <= float(s) * 0.5 + 1e-4

@@ -1,0 +1,148 @@
+"""L2 correctness: per-layer model functions, prefill/decode consistency.
+
+The key invariant pinning the whole serving design: a `layer_decode` step at
+position t, fed the KV rows that `layer_prefill` produced for positions
+0..t-1, must reproduce `layer_prefill`'s output row t. This is exactly how
+the Rust coordinator composes the artifacts at runtime.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = model.CONFIGS["sim7b"]
+
+
+def make_weights(seed=0):
+    rng = np.random.default_rng(seed)
+    shapes = model.layer_weight_shapes(CFG)
+    w = {
+        n: jnp.asarray(rng.standard_normal(shapes[n]) * 0.05, jnp.float32)
+        for n in model.LAYER_WEIGHT_NAMES
+    }
+    w["g1"] = jnp.ones(CFG.d_model, jnp.float32)
+    w["g2"] = jnp.ones(CFG.d_model, jnp.float32)
+    return w
+
+
+@pytest.fixture(scope="module")
+def weights():
+    return make_weights()
+
+
+def wargs(w):
+    return [w[n] for n in model.LAYER_WEIGHT_NAMES]
+
+
+def test_layer_prefill_shapes(weights):
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal((CFG.prefill_len, CFG.d_model)) * 0.5, jnp.float32)
+    cos, sin = model.rope_tables(CFG, CFG.prefill_len)
+    y, k, v = model.layer_prefill(x, cos, sin, *wargs(weights), cfg=CFG)
+    assert y.shape == (CFG.prefill_len, CFG.d_model)
+    assert k.shape == (CFG.prefill_len, CFG.kv_width)
+    assert v.shape == (CFG.prefill_len, CFG.kv_width)
+    assert jnp.isfinite(y).all()
+
+
+def test_layer_decode_shapes(weights):
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.standard_normal((1, CFG.d_model)) * 0.5, jnp.float32)
+    kc = jnp.zeros((CFG.max_seq, CFG.kv_width), jnp.float32)
+    vc = jnp.zeros((CFG.max_seq, CFG.kv_width), jnp.float32)
+    cosf, sinf = model.rope_tables(CFG, CFG.max_seq)
+    y, kc2, vc2 = model.layer_decode(x, kc, vc, jnp.asarray([0], jnp.int32),
+                                     cosf[0:1], sinf[0:1],
+                                     *wargs(weights), cfg=CFG)
+    assert y.shape == (1, CFG.d_model)
+    assert kc2.shape == kc.shape and vc2.shape == vc.shape
+    # rows != 0 untouched
+    np.testing.assert_allclose(kc2[1:], kc[1:])
+
+
+def test_decode_reproduces_prefill_row(weights):
+    """Decode step t with prefill-built caches == prefill output row t."""
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.standard_normal((CFG.prefill_len, CFG.d_model)) * 0.5, jnp.float32)
+    cos, sin = model.rope_tables(CFG, CFG.prefill_len)
+    y_pre, k_rows, v_rows = model.layer_prefill(x, cos, sin, *wargs(weights), cfg=CFG)
+
+    for t in [0, 1, 7, CFG.prefill_len - 1]:
+        kc = jnp.zeros((CFG.max_seq, CFG.kv_width), jnp.float32)
+        vc = jnp.zeros((CFG.max_seq, CFG.kv_width), jnp.float32)
+        kc = kc.at[:t].set(k_rows[:t])
+        vc = vc.at[:t].set(v_rows[:t])
+        y_dec, kc2, vc2 = model.layer_decode(
+            x[t : t + 1], kc, vc, jnp.asarray([t], jnp.int32),
+            cos[t : t + 1], sin[t : t + 1],
+            *wargs(weights), cfg=CFG,
+        )
+        np.testing.assert_allclose(y_dec[0], y_pre[t], rtol=5e-4, atol=5e-4)
+        # the decode step must also write the same KV row prefill produced
+        np.testing.assert_allclose(kc2[t], k_rows[t], rtol=5e-4, atol=5e-4)
+        np.testing.assert_allclose(vc2[t], v_rows[t], rtol=5e-4, atol=5e-4)
+
+
+def test_multi_layer_decode_consistency(weights):
+    """Same invariant through a 3-layer stack (hidden state threading)."""
+    rng = np.random.default_rng(4)
+    layers = [make_weights(s) for s in (10, 11, 12)]
+    x = jnp.asarray(rng.standard_normal((CFG.prefill_len, CFG.d_model)) * 0.5, jnp.float32)
+
+    cos, sin = model.rope_tables(CFG, CFG.prefill_len)
+    h = x
+    caches = []
+    for lw in layers:
+        h, k, v = model.layer_prefill(h, cos, sin, *wargs(lw), cfg=CFG)
+        caches.append((k, v))
+    y_pre = h
+
+    t = 9
+    h1 = x[t : t + 1]
+    for lw, (k_rows, v_rows) in zip(layers, caches):
+        kc = jnp.zeros((CFG.max_seq, CFG.kv_width), jnp.float32).at[:t].set(k_rows[:t])
+        vc = jnp.zeros((CFG.max_seq, CFG.kv_width), jnp.float32).at[:t].set(v_rows[:t])
+        h1, _, _ = model.layer_decode(h1, kc, vc, jnp.asarray([t], jnp.int32),
+                                      cos[t : t + 1], sin[t : t + 1],
+                                      *wargs(lw), cfg=CFG)
+    np.testing.assert_allclose(h1[0], y_pre[t], rtol=1e-3, atol=1e-3)
+
+
+def test_lm_head_shapes_and_norm(weights):
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.standard_normal((CFG.prefill_len, CFG.d_model)), jnp.float32)
+    gf = jnp.ones(CFG.d_model, jnp.float32)
+    w_out = jnp.asarray(rng.standard_normal((CFG.d_model, CFG.vocab)) * 0.05, jnp.float32)
+    logits = model.lm_head(x, gf, w_out)
+    assert logits.shape == (CFG.prefill_len, CFG.vocab)
+    want = ref.rms_norm(x, gf) @ w_out
+    np.testing.assert_allclose(logits, want, rtol=1e-6)
+
+
+def test_rope_position_sensitivity(weights):
+    """Same token at different positions must produce different K rows."""
+    rng = np.random.default_rng(6)
+    x = jnp.asarray(rng.standard_normal((1, CFG.d_model)) * 0.5, jnp.float32)
+    kc = jnp.zeros((CFG.max_seq, CFG.kv_width), jnp.float32)
+    vc = jnp.zeros((CFG.max_seq, CFG.kv_width), jnp.float32)
+    cosf, sinf = model.rope_tables(CFG, CFG.max_seq)
+    _, kc_a, _ = model.layer_decode(x, kc, vc, jnp.asarray([0], jnp.int32),
+                                    cosf[0:1], sinf[0:1],
+                                    *wargs(weights), cfg=CFG)
+    _, kc_b, _ = model.layer_decode(x, kc, vc, jnp.asarray([3], jnp.int32),
+                                    cosf[3:4], sinf[3:4],
+                                    *wargs(weights), cfg=CFG)
+    assert not np.allclose(kc_a[0], kc_b[3], atol=1e-5)
+
+
+def test_configs_sane():
+    for cfg in model.CONFIGS.values():
+        assert cfg.d_model == cfg.n_heads * cfg.head_dim
+        assert cfg.max_seq >= cfg.prefill_len
+        assert cfg.head_dim % 2 == 0  # RoPE pairs

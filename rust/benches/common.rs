@@ -1,0 +1,107 @@
+//! Shared setup for the paper-reproduction bench binaries.
+//!
+//! Eval-based benches run DEPTH-REDUCED stacks (12-layer analogs of the
+//! 32/40-layer models, with Table 6's architecture depth ratios preserved)
+//! so the full `cargo bench` sweep finishes in minutes on CPU PJRT; the
+//! relative orderings the paper reports are depth-stable (the integration
+//! tests pin the mechanisms at full fidelity). EXPERIMENTS.md documents
+//! this alongside each table.
+
+use std::rc::Rc;
+
+use splitserve::coordinator::CompressionConfig;
+use splitserve::eval::{ActTreatment, EvalRuntime};
+use splitserve::model::{ModelConfig, ModelWeights};
+use splitserve::quant::baselines::{Atom, CalibStats, OmniQuant, QuantMethod, SmoothQuant};
+use splitserve::quant::{apply_opsc, OpscConfig};
+use splitserve::runtime::Engine;
+
+/// Depth-reduced eval stacks (name, base config, bench depth).
+pub fn bench_cfg(name: &str) -> ModelConfig {
+    let (mut cfg, depth) = match name {
+        "7b" => (ModelConfig::sim7b(), 12),
+        "13b" => (ModelConfig::sim13b(), 15),
+        "qwen14b" => (ModelConfig::sim_qwen14b(), 18),
+        "nemo12b" => (ModelConfig::sim_nemo12b(), 15),
+        "llama8b" => (ModelConfig::sim_llama8b(), 12),
+        "phi4" => (ModelConfig::sim_phi4(), 15),
+        _ => panic!("unknown bench model {name}"),
+    };
+    cfg.n_layers = depth;
+    cfg
+}
+
+pub fn load_engine(cfg: &ModelConfig) -> Rc<Engine> {
+    Rc::new(Engine::load("artifacts", cfg).expect("run `make artifacts` first"))
+}
+
+pub fn reference(engine: Rc<Engine>, cfg: &ModelConfig, seed: u64) -> EvalRuntime {
+    EvalRuntime::new(engine, Rc::new(ModelWeights::synthetic(cfg, seed)), ActTreatment::None)
+        .expect("reference build")
+}
+
+/// The paper's method lineup for Tables 2/3: (label, runtime builder).
+pub enum Method {
+    SmoothQuant,
+    OmniQuant,
+    Atom,
+    /// OPSC + split-point TS/TAB-Q compression ("Ours").
+    Ours { split: usize, tau: f32, q_bar: u32 },
+}
+
+impl Method {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Method::SmoothQuant => "E1 SmoothQuant",
+            Method::OmniQuant => "E2 OmniQuant",
+            Method::Atom => "E3 Atom",
+            Method::Ours { .. } => "Ours",
+        }
+    }
+
+    /// Build the treated runtime at (weight_bits, act_bits).
+    pub fn build(
+        &self,
+        engine: Rc<Engine>,
+        cfg: &ModelConfig,
+        seed: u64,
+        stats: &CalibStats,
+        wbits: u32,
+        abits: u32,
+    ) -> EvalRuntime {
+        let mut w = ModelWeights::synthetic(cfg, seed);
+        let treatment = match self {
+            Method::SmoothQuant => {
+                let m = SmoothQuant::new(wbits, abits);
+                m.quantize_weights(&mut w, stats);
+                ActTreatment::EveryLayer(m.act_mode())
+            }
+            Method::OmniQuant => {
+                let m = OmniQuant::new(wbits, abits);
+                m.quantize_weights(&mut w, stats);
+                ActTreatment::EveryLayer(m.act_mode())
+            }
+            Method::Atom => {
+                let m = Atom::new(wbits, abits);
+                m.quantize_weights(&mut w, stats);
+                ActTreatment::EveryLayer(m.act_mode())
+            }
+            Method::Ours { split, tau, q_bar } => {
+                // OPSC: only the edge-resident front segment is quantized;
+                // activations are compressed at the split point only, at
+                // the sweep's activation bit budget (q_bar is a floor).
+                apply_opsc(&mut w, &OpscConfig::new(*split, wbits, 16));
+                ActTreatment::SplitCompression {
+                    split: *split,
+                    compression: CompressionConfig {
+                        tau: *tau,
+                        q_bar: abits.max(*q_bar).max(2),
+                        delta: 0.2,
+                        use_rans: true,
+                    },
+                }
+            }
+        };
+        EvalRuntime::new(engine, Rc::new(w), treatment).expect("method build")
+    }
+}

@@ -1,0 +1,84 @@
+//! Paper Fig. 6: intermediate-output data size vs token length W̄ for
+//! τ ∈ {1, 5, 10} × Q̄a ∈ {2, 4, 8}, against the uncompressed baseline.
+//!
+//! Real payloads: hidden states are captured from the model at the split
+//! layer, KV caches built to length W, and the full two-stage pipeline
+//! (TS + TAB-Q + rANS) produces the bytes counted here (Eq. 3 with
+//! I_kv = 1).
+//!
+//! Expected shape: all curves grow ~linearly in W; baseline on top;
+//! payload shrinks with smaller Q̄a and (above the outlier knee) larger τ.
+
+#[path = "common.rs"]
+mod common;
+
+use std::rc::Rc;
+
+use common::{bench_cfg, load_engine};
+use splitserve::coordinator::{CompressedKv, CompressedTensor, CompressionConfig};
+use splitserve::eval::{ActTreatment, EvalRuntime};
+use splitserve::model::ModelWeights;
+use splitserve::runtime::LayerKv;
+use splitserve::util::bench::Table;
+use splitserve::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = bench_cfg("7b");
+    let engine = load_engine(&cfg);
+    let model = EvalRuntime::new(
+        engine,
+        Rc::new(ModelWeights::synthetic(&cfg, 42)),
+        ActTreatment::None,
+    )?;
+    let split = cfg.n_layers * 2 / 3;
+    let n_cloud_layers = cfg.n_layers - split;
+    let kvw = cfg.kv_width();
+
+    // Capture a real hidden block once at the max width we sweep.
+    let w_max = 48usize;
+    let tokens: Vec<u32> = (0..w_max as u32).map(|i| (i * 13) % 511 + 1).collect();
+    let hidden = model.capture_hidden(&tokens, split - 1)?;
+
+    // Realistic KV caches for the cloud layers (activation-scaled noise +
+    // the same outlier profile the model produces).
+    let mut rng = Rng::new(99);
+    let mut kv = vec![LayerKv::zeros(cfg.max_seq, kvw); n_cloud_layers];
+    for c in &mut kv {
+        for i in 0..w_max * kvw {
+            c.k[i] = rng.heavy_tailed(0.8, 0.001, 60.0);
+            c.v[i] = rng.heavy_tailed(0.8, 0.001, 60.0);
+        }
+    }
+
+    let w_sweep = [8usize, 16, 24, 32, 40, 48];
+    let mut header: Vec<String> = vec!["config".into()];
+    header.extend(w_sweep.iter().map(|w| format!("W={w}")));
+    let hdr: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut table = Table::new("Fig. 6 analog — payload bytes vs token length (I_kv=1)", &hdr);
+
+    // Baseline: uncompressed f32 hidden row + f32 KV caches (Eq. 3 raw).
+    let mut base_row = vec!["baseline (f32)".to_string()];
+    for &w in &w_sweep {
+        let bytes = 4 * (cfg.d_model + 2 * n_cloud_layers * w * kvw) as u64;
+        base_row.push(format!("{bytes}"));
+    }
+    table.row(&base_row);
+
+    for tau in [1.0f32, 5.0, 10.0] {
+        for q_bar in [2u32, 4, 8] {
+            let c = CompressionConfig { tau, q_bar, delta: 0.2, use_rans: true };
+            let mut row = vec![format!("tau={tau} Qa={q_bar}")];
+            for &w in &w_sweep {
+                // hidden row of the newest token + cloud KV up to w
+                let h_last = &hidden[(w - 1) * cfg.d_model..w * cfg.d_model];
+                let hp = CompressedTensor::compress(h_last, 1, cfg.d_model, &c);
+                let kp = CompressedKv::compress(&kv, w, kvw, &c);
+                row.push(format!("{}", hp.wire_bytes() + kp.wire_bytes()));
+            }
+            table.row(&row);
+        }
+    }
+    table.print();
+    println!("\npaper shape check: linear growth in W, baseline largest, size falls with Qa.");
+    Ok(())
+}

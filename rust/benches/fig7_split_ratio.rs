@@ -1,0 +1,56 @@
+//! Paper Fig. 7: wire-size decomposition of the compressed intermediate
+//! output — T_below (TAB-Q coded bulk, gray) vs T_above (CSR outliers,
+//! red) — as a function of the threshold τ.
+//!
+//! Expected shape: at τ = 1 the CSR side dominates (everything is an
+//! "outlier", poor compression); past τ ≈ 5 the outliers become so sparse
+//! their cost is negligible and the bulk dominates.
+
+#[path = "common.rs"]
+mod common;
+
+use std::rc::Rc;
+
+use common::{bench_cfg, load_engine};
+use splitserve::coordinator::{CompressedTensor, CompressionConfig};
+use splitserve::eval::{ActTreatment, EvalRuntime};
+use splitserve::model::ModelWeights;
+use splitserve::util::bench::Table;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = bench_cfg("7b");
+    let engine = load_engine(&cfg);
+    let model = EvalRuntime::new(
+        engine,
+        Rc::new(ModelWeights::synthetic(&cfg, 42)),
+        ActTreatment::None,
+    )?;
+    let tokens: Vec<u32> = (0..48u32).map(|i| (i * 29) % 511 + 1).collect();
+    let h = model.capture_hidden(&tokens, cfg.n_layers / 2)?;
+    let rows = tokens.len();
+    let cols = cfg.d_model;
+    let dense = (rows * cols * 4) as u64;
+
+    let mut table = Table::new(
+        "Fig. 7 analog — payload decomposition vs threshold",
+        &["tau", "T_above (CSR) B", "T_below (coded) B", "above %", "total B", "vs dense"],
+    );
+    for tau in [0.5f32, 1.0, 2.0, 5.0, 10.0, 20.0] {
+        let c = CompressionConfig { tau, q_bar: 4, delta: 0.2, use_rans: true };
+        let p = CompressedTensor::compress(&h, rows, cols, &c);
+        let above = p.above.payload_bytes();
+        let total = p.wire_bytes();
+        let below = total - above;
+        table.row(&[
+            format!("{tau}"),
+            format!("{above}"),
+            format!("{below}"),
+            format!("{:.1}", 100.0 * above as f64 / total as f64),
+            format!("{total}"),
+            format!("{:.1}x", dense as f64 / total as f64),
+        ]);
+    }
+    table.print();
+    println!("\npaper shape check: T_above share collapses once tau exceeds the bulk scale.");
+    Ok(())
+}

@@ -1,0 +1,89 @@
+//! Hot-path microbenchmarks (in-tree harness; criterion unavailable
+//! offline). These are the §Perf numbers in EXPERIMENTS.md: the request-
+//! path costs the coordinator adds on top of PJRT compute.
+
+#[path = "common.rs"]
+mod common;
+
+use std::rc::Rc;
+use std::time::Duration;
+
+use common::{bench_cfg, load_engine};
+use splitserve::channel::{optimize_rate, ChannelParams, LinkSim};
+use splitserve::coordinator::{build_pipeline, CompressedTensor, CompressionConfig, DeploymentSpec, Request};
+use splitserve::eval::{ActTreatment, EvalRuntime};
+use splitserve::model::ModelWeights;
+use splitserve::quant::rans;
+use splitserve::quant::{tabq_adaptive, tabq_fixed, threshold_split};
+use splitserve::util::bench::bench_fn;
+use splitserve::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let target = Duration::from_millis(400);
+    let mut rng = Rng::new(5);
+
+    // A realistic hidden block (1 decode row) and a KV-sized block.
+    let d = 128usize;
+    let row: Vec<f32> = (0..d).map(|_| rng.heavy_tailed(1.0, 0.001, 120.0)).collect();
+    let kv_block: Vec<f32> = (0..50 * d).map(|_| rng.heavy_tailed(0.8, 0.001, 60.0)).collect();
+
+    bench_fn("ts/threshold_split 1x128", target, || {
+        std::hint::black_box(threshold_split(&row, 1, d, 5.0));
+    });
+    bench_fn("ts/threshold_split 50x128", target, || {
+        std::hint::black_box(threshold_split(&kv_block, 50, d, 5.0));
+    });
+    bench_fn("tabq/fixed 50x128 @3b", target, || {
+        std::hint::black_box(tabq_fixed(&kv_block, 50, d, 3));
+    });
+    bench_fn("tabq/adaptive 50x128 qbar=4", target, || {
+        std::hint::black_box(tabq_adaptive(&kv_block, 50, d, 4, 0.2));
+    });
+
+    let blk = tabq_fixed(&kv_block, 50, d, 3);
+    bench_fn("rans/encode 6400 codes", target, || {
+        std::hint::black_box(rans::encode_u16(&blk.codes));
+    });
+    let enc = rans::encode_u16(&blk.codes);
+    bench_fn("rans/decode 6400 codes", target, || {
+        std::hint::black_box(rans::decode_u16(&enc).unwrap());
+    });
+
+    let comp = CompressionConfig::default();
+    bench_fn("protocol/compress 50x128 (TS+TABQ+rANS)", target, || {
+        std::hint::black_box(CompressedTensor::compress(&kv_block, 50, d, &comp));
+    });
+    let packet = CompressedTensor::compress(&kv_block, 50, d, &comp);
+    bench_fn("protocol/decompress 50x128", target, || {
+        std::hint::black_box(packet.decompress().unwrap());
+    });
+
+    let p = ChannelParams::default();
+    bench_fn("channel/optimize_rate (Eq. 13)", target, || {
+        std::hint::black_box(optimize_rate(&p, 1e5, 1e8));
+    });
+    let mut link = LinkSim::new(p, 2e7, 1);
+    bench_fn("channel/transfer 4KB", target, || {
+        std::hint::black_box(link.transfer(4096));
+    });
+
+    // End-to-end decode step (real PJRT) for context.
+    let cfg = bench_cfg("7b");
+    let engine = load_engine(&cfg);
+    let split = cfg.n_layers * 2 / 3;
+    let mut pipe = build_pipeline(engine.clone(), &DeploymentSpec::defaults(cfg.clone(), split))?;
+    bench_fn("pipeline/generate 4 tokens (12-layer)", Duration::from_secs(3), || {
+        std::hint::black_box(pipe.generate(&Request::new(1, vec![5, 6, 7], 4)).unwrap());
+    });
+
+    // Raw PJRT prefill cost for the L2 accounting.
+    let model = EvalRuntime::new(
+        engine,
+        Rc::new(ModelWeights::synthetic(&cfg, 42)),
+        ActTreatment::None,
+    )?;
+    bench_fn("runtime/prefill 64x128 (12 layers)", Duration::from_secs(3), || {
+        std::hint::black_box(model.logits_all(&[1, 2, 3, 4, 5]).unwrap());
+    });
+    Ok(())
+}

@@ -1,0 +1,53 @@
+//! Paper Table 2: accuracy vs split layer ℓ ∈ {5,10,15,20,25,30}-analog
+//! positions, Atom (uniform full-model quant) vs Ours (OPSC front-only
+//! quant + split-point TS/TAB-Q), 7B analog, W̄ = 50, τ = 5, Q̄a = 4.
+//!
+//! Expected shape: Ours >= Atom at every split; Atom is split-independent
+//! (it quantizes everything), Ours varies mildly with ℓ.
+
+#[path = "common.rs"]
+mod common;
+
+use common::{bench_cfg, load_engine, reference, Method};
+use splitserve::eval::{build_suite, calibrate, evaluate, paper_suites};
+use splitserve::util::bench::Table;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = bench_cfg("7b");
+    let engine = load_engine(&cfg);
+    let fp = reference(engine.clone(), &cfg, 42);
+    let stats = calibrate(&fp, 4, 1)?;
+    // five suites as in the paper's Table 2 (no ARC-c there)
+    let suites: Vec<_> = paper_suites(10)
+        .iter()
+        .filter(|s| s.name != "ARC-c-sim")
+        .map(|s| build_suite(&fp, s, 11).unwrap())
+        .collect();
+
+    let header: Vec<&str> = ["l", "Method"]
+        .into_iter()
+        .chain(suites.iter().map(|s| s.name.as_str()))
+        .collect();
+    let mut table = Table::new("Table 2 analog — accuracy across split layers (7b)", &header);
+
+    // paper sweeps ℓ ∈ {5..30} of 32; scale to the 12-layer bench stack
+    let paper_splits = [5usize, 10, 15, 20, 25, 30];
+    let full_depth = 32.0;
+    for ps in paper_splits {
+        let split = ((ps as f64 / full_depth) * cfg.n_layers as f64).round().max(1.0) as usize;
+        let split = split.min(cfg.n_layers - 1);
+        let atom = Method::Atom.build(engine.clone(), &cfg, 42, &stats, 4, 4);
+        let ours = Method::Ours { split, tau: 5.0, q_bar: 4 }
+            .build(engine.clone(), &cfg, 42, &stats, 4, 4);
+        for (label, rt) in [("Atom", &atom), ("Ours", &ours)] {
+            let mut row = vec![format!("{ps}"), label.to_string()];
+            for s in &suites {
+                row.push(format!("{:.2}", evaluate(s, rt)?));
+            }
+            table.row(&row);
+        }
+    }
+    table.print();
+    println!("\npaper shape check: Ours >= Atom at every split layer.");
+    Ok(())
+}

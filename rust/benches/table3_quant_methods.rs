@@ -1,0 +1,58 @@
+//! Paper Table 3: Ours vs SmoothQuant (E1) / OmniQuant (E2) / Atom (E3)
+//! at Qw = 4/4 and activation budgets Q̄a ∈ {3, 4}, on the 7B and 13B
+//! analogs over six zero-shot suites.
+//!
+//! Expected shape (not absolute numbers): E1 < E2 < E3 < Ours at every
+//! budget, with the gap widening at Q̄a = 3.
+
+#[path = "common.rs"]
+mod common;
+
+use common::{bench_cfg, load_engine, reference, Method};
+use splitserve::eval::{build_suite, calibrate, evaluate, paper_suites};
+use splitserve::util::bench::Table;
+
+fn main() -> anyhow::Result<()> {
+    let n_items = 10;
+    for model in ["7b", "13b"] {
+        let cfg = bench_cfg(model);
+        let engine = load_engine(&cfg);
+        let fp = reference(engine.clone(), &cfg, 42);
+        let stats = calibrate(&fp, 4, 1)?;
+        let suites: Vec<_> = paper_suites(n_items)
+            .iter()
+            .map(|s| build_suite(&fp, s, 7).unwrap())
+            .collect();
+        let header: Vec<&str> = std::iter::once("Qa / Method")
+            .chain(suites.iter().map(|s| s.name.as_str()))
+            .collect();
+        let mut table = Table::new(&format!("Table 3 analog — {model} (Qw=4/4)"), &header);
+
+        // FP16 reference row for context (not in the paper's table)
+        let mut row = vec!["fp ref".to_string()];
+        for s in &suites {
+            row.push(format!("{:.2}", evaluate(s, &fp)?));
+        }
+        table.row(&row);
+
+        for qa in [3u32, 4] {
+            let methods = [
+                Method::SmoothQuant,
+                Method::OmniQuant,
+                Method::Atom,
+                Method::Ours { split: cfg.n_layers * 2 / 3, tau: 5.0, q_bar: qa },
+            ];
+            for m in &methods {
+                let rt = m.build(engine.clone(), &cfg, 42, &stats, 4, qa);
+                let mut row = vec![format!("Qa={qa} {}", m.label())];
+                for s in &suites {
+                    row.push(format!("{:.2}", evaluate(s, &rt)?));
+                }
+                table.row(&row);
+            }
+        }
+        table.print();
+    }
+    println!("\npaper shape check: Ours >= E3 Atom >= E2 >= E1 per row, gap widest at Qa=3.");
+    Ok(())
+}

@@ -1,0 +1,68 @@
+//! Paper Table 4: perplexity on WikiText2/C4 analogs under segment
+//! quantization — "front-end method" (quantize layers 1..ℓw at 4 bits)
+//! vs "back-end method" (quantize the LAST ℓw layers), sweeping ℓw.
+//!
+//! Expected shape: ppl grows with ℓw for both; the back-end method is
+//! consistently worse at equal ℓw (later layers are precision-critical);
+//! Wiki-sim < C4-sim throughout.
+
+#[path = "common.rs"]
+mod common;
+
+use std::rc::Rc;
+
+use common::{bench_cfg, load_engine, reference};
+use splitserve::eval::{model_corpus, perplexity_windows, ActTreatment, Corpus, EvalRuntime};
+use splitserve::model::ModelWeights;
+use splitserve::quant::opsc::apply_segment_quant_naive;
+use splitserve::util::bench::Table;
+
+fn main() -> anyhow::Result<()> {
+    for model in ["7b", "13b"] {
+        let cfg = bench_cfg(model);
+        let engine = load_engine(&cfg);
+        let fp = reference(engine.clone(), &cfg, 42);
+        let wiki = model_corpus(&fp, Corpus::Wiki, 4, 5)?;
+        let c4 = model_corpus(&fp, Corpus::C4, 4, 5)?;
+
+        let mut table = Table::new(
+            &format!("Table 4 analog — segment-quant perplexity ({model}, plain per-channel 4-bit)"),
+            &["lw", "front Wiki", "front C4", "back Wiki", "back C4"],
+        );
+        let ppl_fp_wiki = perplexity_windows(&fp, &wiki)?;
+        let ppl_fp_c4 = perplexity_windows(&fp, &c4)?;
+        table.row(&[
+            "0 (fp)".into(),
+            format!("{ppl_fp_wiki:.3}"),
+            format!("{ppl_fp_c4:.3}"),
+            format!("{ppl_fp_wiki:.3}"),
+            format!("{ppl_fp_c4:.3}"),
+        ]);
+
+        // paper sweeps ℓw in steps of 4 up to L; scale to bench depth
+        let steps = [4usize, 8, 12, 16, 20, 24, 28, 32, 36, 40];
+        let full = if model == "7b" { 32 } else { 40 };
+        for ps in steps.iter().filter(|&&s| s <= full) {
+            let lw = ((*ps as f64 / full as f64) * cfg.n_layers as f64).round() as usize;
+            let lw = lw.clamp(1, cfg.n_layers);
+            // front-end method: quantize layers [0, lw)
+            let mut wf = ModelWeights::synthetic(&cfg, 42);
+            apply_segment_quant_naive(&mut wf, 0, lw, 4);
+            let front = EvalRuntime::new(engine.clone(), Rc::new(wf), ActTreatment::None)?;
+            // back-end method: quantize layers [L-lw, L)
+            let mut wb = ModelWeights::synthetic(&cfg, 42);
+            apply_segment_quant_naive(&mut wb, cfg.n_layers - lw, cfg.n_layers, 4);
+            let back = EvalRuntime::new(engine.clone(), Rc::new(wb), ActTreatment::None)?;
+            table.row(&[
+                format!("{ps}"),
+                format!("{:.3}", perplexity_windows(&front, &wiki)?),
+                format!("{:.3}", perplexity_windows(&front, &c4)?),
+                format!("{:.3}", perplexity_windows(&back, &wiki)?),
+                format!("{:.3}", perplexity_windows(&back, &c4)?),
+            ]);
+        }
+        table.print();
+    }
+    println!("\npaper shape check: ppl rises with lw; back-end >= front-end; Wiki < C4.");
+    Ok(())
+}

@@ -1,0 +1,54 @@
+//! Paper Table 6: cross-architecture generalization — baseline vs +Ours
+//! on the Qwen2.5-14B / Mistral-NeMo / Llama-3.1-8B / Phi-4 analogs
+//! (shared shape class, architecture-specific depths).
+//!
+//! Expected shape: the +Ours rows stay within a small delta of each
+//! baseline (the paper reports mixed tiny gains/losses).
+
+#[path = "common.rs"]
+mod common;
+
+use common::{bench_cfg, load_engine, reference, Method};
+use splitserve::eval::{build_suite, calibrate, evaluate, paper_suites};
+use splitserve::util::bench::Table;
+
+fn main() -> anyhow::Result<()> {
+    let keep = ["ARC-e-sim", "ARC-c-sim", "BoolQ-sim", "HS-sim", "Wino-sim"];
+    let mut table_rows: Vec<Vec<String>> = Vec::new();
+    let mut header_done: Vec<String> = vec!["Model".into()];
+
+    for model in ["qwen14b", "nemo12b", "llama8b", "phi4"] {
+        let cfg = bench_cfg(model);
+        let engine = load_engine(&cfg);
+        let fp = reference(engine.clone(), &cfg, 42);
+        let stats = calibrate(&fp, 3, 1)?;
+        let suites: Vec<_> = paper_suites(10)
+            .iter()
+            .filter(|s| keep.contains(&s.name))
+            .map(|s| build_suite(&fp, s, 17).unwrap())
+            .collect();
+        if header_done.len() == 1 {
+            header_done.extend(suites.iter().map(|s| s.name.clone()));
+        }
+        let ours = Method::Ours { split: cfg.n_layers * 2 / 3, tau: 5.0, q_bar: 4 }
+            .build(engine, &cfg, 42, &stats, 4, 4);
+
+        let mut base_row = vec![cfg.name.clone()];
+        let mut ours_row = vec![format!("{} +Ours", cfg.name)];
+        for s in &suites {
+            base_row.push(format!("{:.2}", evaluate(s, &fp)?));
+            ours_row.push(format!("{:.2}", evaluate(s, &ours)?));
+        }
+        table_rows.push(base_row);
+        table_rows.push(ours_row);
+    }
+
+    let header: Vec<&str> = header_done.iter().map(|s| s.as_str()).collect();
+    let mut table = Table::new("Table 6 analog — cross-model generalization", &header);
+    for r in table_rows {
+        table.row(&r);
+    }
+    table.print();
+    println!("\npaper shape check: +Ours within a small delta of each baseline row.");
+    Ok(())
+}

@@ -1,0 +1,164 @@
+//! Seeded Rayleigh link simulator — the component that actually "delivers"
+//! payloads on the request path (DESIGN.md §5.3: latency numbers in the
+//! figures come from these events, not closed-form reporting).
+//!
+//! Each attempt draws an independent fading power |h|² ~ Exp(1); the
+//! attempt succeeds iff the instantaneous capacity W·log2(1 + γ|h|²)
+//! supports the chosen rate R. Attempts are capped at the ε-outage budget
+//! n_ε = ⌈ln ε / ln P_o(R)⌉; exceeding it is reported as an outage event
+//! (the coordinator's escalation path handles it).
+
+use crate::util::rng::Rng;
+
+use super::outage::{attempts_for_epsilon, ChannelParams};
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TransferOutcome {
+    /// Wall-clock seconds spent on the link (attempts x airtime).
+    pub latency_s: f64,
+    pub attempts: u32,
+    /// True if the ε budget was exhausted without success.
+    pub outage: bool,
+    pub payload_bytes: u64,
+}
+
+#[derive(Clone, Debug)]
+pub struct LinkSim {
+    pub params: ChannelParams,
+    /// Operating rate (bits/s), typically from `rate::optimize_rate`.
+    pub rate_bps: f64,
+    rng: Rng,
+    /// Cumulative stats.
+    pub total_bytes: u64,
+    pub total_latency_s: f64,
+    pub total_outages: u64,
+    pub total_transfers: u64,
+}
+
+impl LinkSim {
+    pub fn new(params: ChannelParams, rate_bps: f64, seed: u64) -> LinkSim {
+        assert!(rate_bps > 0.0);
+        LinkSim {
+            params,
+            rate_bps,
+            rng: Rng::new(seed ^ 0x11_4e_7_1),
+            total_bytes: 0,
+            total_latency_s: 0.0,
+            total_outages: 0,
+            total_transfers: 0,
+        }
+    }
+
+    /// Instantaneous capacity of one fading realization (bits/s).
+    fn draw_capacity(&mut self) -> f64 {
+        let h2 = self.rng.rayleigh_power();
+        self.params.bandwidth_hz * (1.0 + self.params.snr * h2).log2()
+    }
+
+    /// Transmit `payload_bytes`; returns the simulated outcome and updates
+    /// cumulative stats.
+    pub fn transfer(&mut self, payload_bytes: u64) -> TransferOutcome {
+        let bits = payload_bytes * 8;
+        let airtime = bits as f64 / self.rate_bps;
+        let max_attempts = attempts_for_epsilon(&self.params, self.rate_bps);
+        let mut attempts = 0;
+        let mut ok = false;
+        while attempts < max_attempts {
+            attempts += 1;
+            if self.draw_capacity() >= self.rate_bps {
+                ok = true;
+                break;
+            }
+        }
+        let out = TransferOutcome {
+            latency_s: airtime * attempts as f64,
+            attempts,
+            outage: !ok,
+            payload_bytes,
+        };
+        self.total_bytes += payload_bytes;
+        self.total_latency_s += out.latency_s;
+        self.total_outages += !ok as u64;
+        self.total_transfers += 1;
+        out
+    }
+
+    /// Mean goodput over the life of the link (bytes/s).
+    pub fn mean_goodput(&self) -> f64 {
+        if self.total_latency_s == 0.0 {
+            0.0
+        } else {
+            self.total_bytes as f64 / self.total_latency_s
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::outage::{outage_probability, worst_case_latency};
+    use super::*;
+
+    fn link(rate: f64, seed: u64) -> LinkSim {
+        LinkSim::new(ChannelParams::default(), rate, seed)
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mut a = link(8e6, 1);
+        let mut b = link(8e6, 1);
+        for _ in 0..50 {
+            assert_eq!(a.transfer(10_000), b.transfer(10_000));
+        }
+    }
+
+    #[test]
+    fn empirical_attempt_rate_matches_outage_probability() {
+        let p = ChannelParams::default();
+        let rate = 20e6;
+        let po = outage_probability(&p, rate);
+        let mut l = link(rate, 7);
+        let n = 20_000;
+        let mut first_try = 0;
+        for _ in 0..n {
+            if l.transfer(1000).attempts == 1 {
+                first_try += 1;
+            }
+        }
+        let emp = 1.0 - first_try as f64 / n as f64;
+        assert!(
+            (emp - po).abs() < 0.02,
+            "empirical outage {emp} vs model {po}"
+        );
+    }
+
+    #[test]
+    fn latency_never_exceeds_worst_case() {
+        let p = ChannelParams::default();
+        let rate = 15e6;
+        let mut l = link(rate, 9);
+        let bytes = 50_000u64;
+        let cap = worst_case_latency(&p, bytes * 8, rate);
+        for _ in 0..2000 {
+            let o = l.transfer(bytes);
+            assert!(o.latency_s <= cap + 1e-12, "{} > {cap}", o.latency_s);
+        }
+    }
+
+    #[test]
+    fn outages_rare_at_epsilon() {
+        let mut l = link(15e6, 11);
+        for _ in 0..20_000 {
+            l.transfer(1000);
+        }
+        // ε = 1e-3 → expect ~20 outages in 20k; allow generous slack
+        assert!(l.total_outages < 100, "outages={}", l.total_outages);
+    }
+
+    #[test]
+    fn zero_byte_transfer_is_free() {
+        let mut l = link(8e6, 13);
+        let o = l.transfer(0);
+        assert_eq!(o.latency_s, 0.0);
+        assert!(!o.outage);
+    }
+}

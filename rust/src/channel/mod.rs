@@ -1,0 +1,11 @@
+//! Wireless edge↔cloud channel: the paper's ε-outage model (Eq. 9-10),
+//! the rate optimizer (Eq. 13), and a seeded Rayleigh link simulator that
+//! actually delivers payloads on the request path.
+
+pub mod link;
+pub mod outage;
+pub mod rate;
+
+pub use link::{LinkSim, TransferOutcome};
+pub use outage::{outage_probability, worst_case_latency, ChannelParams};
+pub use rate::optimize_rate;

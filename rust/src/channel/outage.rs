@@ -1,0 +1,144 @@
+//! ε-outage reliability model, paper Eq. (9)-(10).
+//!
+//! A transmission at rate R (bits/s) over bandwidth W (Hz) with mean SNR γ
+//! under Rayleigh fading is in outage when the instantaneous capacity
+//! W·log2(1 + γ·|h|²) < R, which happens with probability
+//!
+//!   P_o(R) = 1 - exp(-(2^(R/W) - 1)/γ)            (Eq. 10)
+//!
+//! Retransmitting until success, the number of attempts needed to push the
+//! residual failure probability below ε is n = ⌈ln ε / ln P_o(R)⌉, giving
+//! the worst-case (ε-outage) latency for a payload of D_tx bits:
+//!
+//!   L_ε(D_tx; R) = (D_tx / R) · ⌈ln ε / ln P_o(R)⌉  (Eq. 9)
+
+/// Physical channel parameters (paper §3.1 defaults: W = 10 MHz, γ = 10,
+/// ε = 1e-3).
+#[derive(Clone, Copy, Debug)]
+pub struct ChannelParams {
+    /// Bandwidth in Hz.
+    pub bandwidth_hz: f64,
+    /// Mean received SNR (linear).
+    pub snr: f64,
+    /// Target outage probability ε.
+    pub epsilon: f64,
+}
+
+impl Default for ChannelParams {
+    fn default() -> Self {
+        ChannelParams { bandwidth_hz: 10e6, snr: 10.0, epsilon: 1e-3 }
+    }
+}
+
+impl ChannelParams {
+    /// Shannon-capacity-at-mean-SNR upper bound on useful rates (bits/s).
+    pub fn capacity_bps(&self) -> f64 {
+        self.bandwidth_hz * (1.0 + self.snr).log2()
+    }
+}
+
+/// Eq. (10): P_o(R) for rate R in bits/s, computed stably via expm1.
+pub fn outage_probability(p: &ChannelParams, rate_bps: f64) -> f64 {
+    assert!(rate_bps > 0.0);
+    let snr_needed = (2f64.powf(rate_bps / p.bandwidth_hz) - 1.0) / p.snr;
+    -(-snr_needed).exp_m1() // 1 - exp(-x) without cancellation
+}
+
+/// ln P_o(R), stable in both tails: for P_o → 1 uses ln1p(-exp(-x));
+/// for P_o → 0 uses ln(x) + higher-order correction via expm1.
+pub fn ln_outage(p: &ChannelParams, rate_bps: f64) -> f64 {
+    let x = (2f64.powf(rate_bps / p.bandwidth_hz) - 1.0) / p.snr;
+    if x > 1e-6 {
+        // ln(1 - exp(-x)) — exp(-x) may underflow to 0, giving ln(1) = 0⁻,
+        // which we floor at -f64::MIN_POSITIVE-ish to keep ratios finite.
+        let v = (-(-x).exp()).ln_1p();
+        v.min(-1e-300)
+    } else {
+        // P_o ≈ x(1 - x/2): ln P_o ≈ ln x + ln(1 - x/2)
+        x.ln() + (-x / 2.0).ln_1p()
+    }
+}
+
+/// Number of transmission attempts to reach residual failure ≤ ε.
+/// Saturates at u32::MAX when P_o → 1 (rate far beyond capacity).
+pub fn attempts_for_epsilon(p: &ChannelParams, rate_bps: f64) -> u32 {
+    let ln_po = ln_outage(p, rate_bps);
+    if ln_po <= p.epsilon.ln() {
+        return 1; // P_o already ≤ ε
+    }
+    let n = (p.epsilon.ln() / ln_po).ceil();
+    if n >= u32::MAX as f64 {
+        u32::MAX
+    } else {
+        n as u32
+    }
+}
+
+/// Eq. (9): worst-case latency (seconds) to deliver `bits` at `rate_bps`.
+pub fn worst_case_latency(p: &ChannelParams, bits: u64, rate_bps: f64) -> f64 {
+    let n = attempts_for_epsilon(p, rate_bps) as f64;
+    (bits as f64 / rate_bps) * n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn params() -> ChannelParams {
+        ChannelParams::default()
+    }
+
+    #[test]
+    fn outage_monotone_in_rate() {
+        let p = params();
+        let mut last = 0.0;
+        for r in [1e6, 5e6, 10e6, 20e6, 40e6] {
+            let po = outage_probability(&p, r);
+            assert!(po > last, "P_o must grow with rate");
+            assert!((0.0..1.0).contains(&po));
+            last = po;
+        }
+    }
+
+    #[test]
+    fn eq10_manual_value() {
+        // R = W → 2^1 - 1 = 1; P_o = 1 - exp(-1/γ) = 1 - exp(-0.1)
+        let p = params();
+        let po = outage_probability(&p, 10e6);
+        assert!((po - (1.0 - (-0.1f64).exp())).abs() < 1e-12);
+    }
+
+    #[test]
+    fn attempts_grow_with_rate() {
+        let p = params();
+        assert!(attempts_for_epsilon(&p, 35e6) > attempts_for_epsilon(&p, 5e6));
+    }
+
+    #[test]
+    fn low_rate_single_attempt_regime() {
+        // At very low rate, P_o < ε so one attempt suffices.
+        let p = ChannelParams { epsilon: 0.1, ..params() };
+        assert_eq!(attempts_for_epsilon(&p, 1e4), 1);
+    }
+
+    #[test]
+    fn latency_scales_linearly_with_payload() {
+        let p = params();
+        let l1 = worst_case_latency(&p, 1_000_000, 8e6);
+        let l2 = worst_case_latency(&p, 2_000_000, 8e6);
+        assert!((l2 / l1 - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn latency_non_monotone_in_rate() {
+        // The paper's key observation: pushing rate up first helps
+        // (fewer seconds per bit) then hurts (outage retransmissions).
+        let p = params();
+        let bits = 8_000_000;
+        let lo = worst_case_latency(&p, bits, 2e6);
+        let mid = worst_case_latency(&p, bits, 20e6);
+        let hi = worst_case_latency(&p, bits, 60e6);
+        assert!(mid < lo, "mid-rate beats low rate: {mid} vs {lo}");
+        assert!(mid < hi, "mid-rate beats high rate: {mid} vs {hi}");
+    }
+}

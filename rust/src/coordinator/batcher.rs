@@ -1,0 +1,160 @@
+//! Continuous (iteration-level) dynamic batcher — the server-side batching
+//! policy used by the multi-device simulation. Requests join a FIFO queue;
+//! the active set admits up to `max_batch` requests; every iteration serves
+//! one token to each active request (Orca-style continuous batching).
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct BatchItem {
+    pub request_id: u64,
+    pub tokens_remaining: usize,
+    /// True until the (one-time) prefill cost has been charged.
+    pub needs_prefill: bool,
+}
+
+#[derive(Clone, Debug)]
+pub struct BatcherParams {
+    pub max_batch: usize,
+    /// Per-token service time at batch size 1.
+    pub base_token_s: f64,
+    /// Marginal cost of each extra batch member (sub-linear batching:
+    /// iteration time = base * (1 + overhead * (b - 1))).
+    pub batch_overhead: f64,
+    /// One-time prefill service charge on admission.
+    pub prefill_s: f64,
+    /// Congestion term: extra seconds per iteration per waiting request
+    /// (queueing/memory-management pressure — the paper's "nonlinear
+    /// growth" under high concurrency).
+    pub congestion_s_per_waiter: f64,
+}
+
+impl Default for BatcherParams {
+    fn default() -> Self {
+        BatcherParams {
+            max_batch: 8,
+            base_token_s: 0.02,
+            batch_overhead: 0.12,
+            prefill_s: 0.08,
+            congestion_s_per_waiter: 0.002,
+        }
+    }
+}
+
+#[derive(Default, Debug)]
+pub struct DynamicBatcher {
+    pub queue: std::collections::VecDeque<BatchItem>,
+    pub active: Vec<BatchItem>,
+}
+
+impl DynamicBatcher {
+    pub fn submit(&mut self, item: BatchItem) {
+        self.queue.push_back(item);
+    }
+
+    pub fn is_idle(&self) -> bool {
+        self.queue.is_empty() && self.active.is_empty()
+    }
+
+    /// Admit queued requests into free active slots; returns the prefill
+    /// charge incurred this admission round.
+    pub fn admit(&mut self, p: &BatcherParams) -> f64 {
+        let mut prefill_cost = 0.0;
+        while self.active.len() < p.max_batch {
+            let Some(mut item) = self.queue.pop_front() else { break };
+            if item.needs_prefill {
+                prefill_cost += p.prefill_s;
+                item.needs_prefill = false;
+            }
+            self.active.push(item);
+        }
+        prefill_cost
+    }
+
+    /// Serve one token to every active request. Returns (iteration_seconds,
+    /// finished request ids). Iteration time reflects batch size and queue
+    /// congestion.
+    pub fn iterate(&mut self, p: &BatcherParams) -> (f64, Vec<u64>) {
+        if self.active.is_empty() {
+            return (0.0, vec![]);
+        }
+        let b = self.active.len();
+        let iter_s = p.base_token_s * (1.0 + p.batch_overhead * (b as f64 - 1.0))
+            + p.congestion_s_per_waiter * self.queue.len() as f64;
+        let mut finished = Vec::new();
+        self.active.retain_mut(|item| {
+            item.tokens_remaining -= 1;
+            if item.tokens_remaining == 0 {
+                finished.push(item.request_id);
+                false
+            } else {
+                true
+            }
+        });
+        (iter_s, finished)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn item(id: u64, tokens: usize) -> BatchItem {
+        BatchItem { request_id: id, tokens_remaining: tokens, needs_prefill: true }
+    }
+
+    #[test]
+    fn admits_up_to_max_batch() {
+        let p = BatcherParams { max_batch: 2, ..Default::default() };
+        let mut b = DynamicBatcher::default();
+        for i in 0..5 {
+            b.submit(item(i, 3));
+        }
+        let prefill = b.admit(&p);
+        assert_eq!(b.active.len(), 2);
+        assert_eq!(b.queue.len(), 3);
+        assert!((prefill - 2.0 * p.prefill_s).abs() < 1e-12);
+    }
+
+    #[test]
+    fn iteration_time_grows_with_batch_and_queue() {
+        let p = BatcherParams::default();
+        let mut one = DynamicBatcher::default();
+        one.submit(item(0, 10));
+        one.admit(&p);
+        let (t1, _) = one.iterate(&p);
+
+        let mut many = DynamicBatcher::default();
+        for i in 0..20 {
+            many.submit(item(i, 10));
+        }
+        many.admit(&p);
+        let (t8, _) = many.iterate(&p);
+        assert!(t8 > t1, "batched iteration costs more in total ({t8} vs {t1})");
+        // but less per token:
+        assert!(t8 / 8.0 < t1, "batching must be sub-linear");
+    }
+
+    #[test]
+    fn finishes_and_frees_slots() {
+        let p = BatcherParams { max_batch: 1, ..Default::default() };
+        let mut b = DynamicBatcher::default();
+        b.submit(item(7, 1));
+        b.submit(item(8, 1));
+        b.admit(&p);
+        let (_, fin) = b.iterate(&p);
+        assert_eq!(fin, vec![7]);
+        b.admit(&p);
+        let (_, fin) = b.iterate(&p);
+        assert_eq!(fin, vec![8]);
+        assert!(b.is_idle());
+    }
+
+    #[test]
+    fn prefill_charged_once() {
+        let p = BatcherParams { max_batch: 1, ..Default::default() };
+        let mut b = DynamicBatcher::default();
+        b.submit(item(1, 2));
+        assert!(b.admit(&p) > 0.0);
+        b.iterate(&p);
+        assert_eq!(b.admit(&p), 0.0, "no new admissions, no prefill charge");
+    }
+}

@@ -1,0 +1,99 @@
+//! Deployment builder: wires a complete split deployment (quantized edge
+//! front + full-precision cloud back + link + controller) from a handful
+//! of knobs. This is the function examples, benches and the CLI all use —
+//! one construction path, no copy-pasted setup.
+
+use std::rc::Rc;
+
+use anyhow::Result;
+
+use super::cloud::CloudServer;
+use super::edge::EdgeDevice;
+use super::pipeline::SplitPipeline;
+use super::profile::DeviceProfile;
+use super::protocol::CompressionConfig;
+use crate::channel::{optimize_rate, ChannelParams, LinkSim};
+use crate::model::{ModelConfig, ModelWeights};
+use crate::planner::{EarlyExitController, LatencyModel};
+use crate::quant::{apply_opsc, OpscConfig};
+use crate::runtime::{Engine, NodeRuntime};
+
+#[derive(Clone, Debug)]
+pub struct DeploymentSpec {
+    pub model: ModelConfig,
+    pub opsc: OpscConfig,
+    pub compression: CompressionConfig,
+    pub channel: ChannelParams,
+    /// None → optimize via Eq. (13).
+    pub rate_bps: Option<f64>,
+    pub weight_seed: u64,
+    pub link_seed: u64,
+    /// Per-token deadline (enables the Algorithm-2 controller).
+    pub deadline_s: Option<f64>,
+    pub edge_profile: DeviceProfile,
+    pub cloud_profile: DeviceProfile,
+}
+
+impl DeploymentSpec {
+    pub fn defaults(model: ModelConfig, split: usize) -> DeploymentSpec {
+        DeploymentSpec {
+            model,
+            opsc: OpscConfig::new(split, 4, 16),
+            compression: CompressionConfig::default(),
+            channel: ChannelParams::default(),
+            rate_bps: None,
+            weight_seed: 42,
+            link_seed: 7,
+            deadline_s: None,
+            edge_profile: DeviceProfile::edge_default(),
+            cloud_profile: DeviceProfile::cloud_default(),
+        }
+    }
+}
+
+/// Build the full pipeline. The engine can be shared across deployments
+/// (pass the same Rc) — executables are compiled once per shape class.
+pub fn build_pipeline(engine: Rc<Engine>, spec: &DeploymentSpec) -> Result<SplitPipeline> {
+    let cfg = &spec.model;
+    let split = spec.opsc.split_layer;
+    anyhow::ensure!(
+        split >= 1 && split <= cfg.n_layers,
+        "split must keep at least one layer on the edge"
+    );
+    // split == n_layers is legal: the cloud runs only the lm head
+    // (full-edge deployment, the Fig. 5 offload-maximizing regime).
+
+    // Edge: front segment, OPSC-quantized.
+    let mut edge_weights = ModelWeights::synthetic(cfg, spec.weight_seed);
+    apply_opsc(&mut edge_weights, &spec.opsc);
+    let edge_node = NodeRuntime::new(engine.clone(), Rc::new(edge_weights), 0..split, false)?;
+
+    // Cloud: back segment, untouched full precision (paper §2.1: the
+    // server maintains a single high-precision model).
+    let cloud_weights = Rc::new(ModelWeights::synthetic(cfg, spec.weight_seed));
+    let cloud_node = NodeRuntime::new(engine, cloud_weights, split..cfg.n_layers, true)?;
+
+    let rate = spec
+        .rate_bps
+        .unwrap_or_else(|| optimize_rate(&spec.channel, 1e5, 4.0 * spec.channel.capacity_bps()));
+    let link = LinkSim::new(spec.channel, rate, spec.link_seed);
+
+    let edge = EdgeDevice::new(
+        edge_node,
+        cfg.n_layers - split,
+        spec.edge_profile.clone(),
+        spec.compression,
+    );
+    let cloud = CloudServer::new(cloud_node, spec.cloud_profile.clone());
+    let mut pipeline = SplitPipeline::new(edge, cloud, link);
+    if let Some(d) = spec.deadline_s {
+        let hd = cfg.kv_width() as u64;
+        pipeline.controller = Some(EarlyExitController {
+            deadline_s: d,
+            model: LatencyModel { channel: spec.channel, rate_bps: rate },
+            min_qa_bits: 2,
+            per_token_payload_bytes: hd * spec.compression.q_bar as u64 / 8,
+        });
+    }
+    Ok(pipeline)
+}

@@ -1,0 +1,122 @@
+//! Cloud server: runs the full-precision back segment statelessly — every
+//! call carries all the state it needs (paper Fig. 1(c): one server, many
+//! heterogeneous edge devices, no per-client residue between calls).
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::protocol::{CloudReply, SplitPayload};
+use super::profile::DeviceProfile;
+use crate::runtime::NodeRuntime;
+
+pub struct CloudServer {
+    /// Back segment (layers split..L) + lm head, full precision.
+    pub node: NodeRuntime,
+    pub profile: DeviceProfile,
+    /// Tokens served (for Fig. 5(b) accounting).
+    pub tokens_generated: u64,
+}
+
+fn argmax(v: &[f32]) -> u32 {
+    let mut best = (f32::NEG_INFINITY, 0usize);
+    for (i, &x) in v.iter().enumerate() {
+        if x > best.0 {
+            best = (x, i);
+        }
+    }
+    best.1 as u32
+}
+
+fn entropy(logits: &[f32]) -> f32 {
+    let m = logits.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+    let exps: Vec<f32> = logits.iter().map(|&x| (x - m).exp()).collect();
+    let z: f32 = exps.iter().sum();
+    exps.iter().map(|&e| {
+        let p = e / z;
+        if p > 0.0 { -p * p.ln() } else { 0.0 }
+    }).sum()
+}
+
+impl CloudServer {
+    pub fn new(node: NodeRuntime, profile: DeviceProfile) -> CloudServer {
+        CloudServer { node, profile, tokens_generated: 0 }
+    }
+
+    fn cfg(&self) -> &crate::model::ModelConfig {
+        &self.node.weights.cfg
+    }
+
+    /// Serve one payload. Returns (reply, scaled_compute_seconds).
+    pub fn handle(&mut self, payload: &SplitPayload) -> Result<(CloudReply, f64)> {
+        let cfg = self.cfg().clone();
+        let d = cfg.d_model;
+        let kvw = cfg.kv_width();
+        let t0 = Instant::now();
+        let reply = if payload.is_prefill || payload.kv.is_none() {
+            // Prefill, or I_kv = 0 decode (full hidden history): run the
+            // back segment prefill-style over all rows.
+            let w = payload.hidden.rows;
+            anyhow::ensure!(w <= cfg.prefill_len, "hidden block exceeds prefill width");
+            let mut h = payload.hidden.decompress()?;
+            h.resize(cfg.prefill_len * d, 0.0); // zero-pad to static width
+            let (h_out, kv_rows) = self.node.prefill(&h)?;
+            let logits = self.node.logits_prefill(&h_out)?;
+            let row = &logits[payload.pos * cfg.vocab..(payload.pos + 1) * cfg.vocab];
+            let token = argmax(row);
+            // Reply with the back-layer KV rows for all processed tokens
+            // (prefill only — I_kv=0 decode keeps the cloud stateless and
+            // the edge will resend history anyway).
+            let new_kv_rows = if payload.is_prefill {
+                kv_rows
+                    .into_iter()
+                    .map(|(k, v)| (k[..w * kvw].to_vec(), v[..w * kvw].to_vec()))
+                    .collect()
+            } else {
+                Vec::new()
+            };
+            CloudReply {
+                request_id: payload.request_id,
+                token,
+                new_kv_rows,
+                logits_entropy: entropy(row),
+            }
+        } else {
+            // I_kv = 1 decode: reconstruct the shipped caches, run one
+            // decode step, return the new KV row per layer.
+            let kv_in = payload
+                .kv
+                .as_ref()
+                .ok_or_else(|| anyhow::anyhow!("decode payload without KV"))?;
+            let mut caches = kv_in.decompress(cfg.max_seq, kvw)?;
+            anyhow::ensure!(
+                caches.len() == self.node.layer_range.len(),
+                "KV layer count mismatch"
+            );
+            let h = payload.hidden.decompress()?;
+            anyhow::ensure!(h.len() == d, "decode hidden must be one row");
+            let h_out = self.node.decode(&h, &mut caches, payload.pos)?;
+            let logits = self.node.logits_decode(&h_out)?;
+            let token = argmax(&logits);
+            let pos = payload.pos;
+            let new_kv_rows = caches
+                .iter()
+                .map(|c| {
+                    (
+                        c.k[pos * kvw..(pos + 1) * kvw].to_vec(),
+                        c.v[pos * kvw..(pos + 1) * kvw].to_vec(),
+                    )
+                })
+                .collect();
+            CloudReply {
+                request_id: payload.request_id,
+                token,
+                new_kv_rows,
+                logits_entropy: entropy(&logits),
+            }
+        };
+        self.tokens_generated += 1;
+        let compute_s = self.profile.scale(t0.elapsed().as_secs_f64());
+        Ok((reply, compute_s))
+    }
+}

@@ -1,0 +1,164 @@
+//! Edge device: runs the OPSC front segment, owns all per-request state
+//! (the paper's stateless-cloud design), compresses intermediate outputs,
+//! and talks to the cloud over the simulated wireless link.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::protocol::{CompressedKv, CompressedTensor, CompressionConfig, SplitPayload};
+use super::profile::DeviceProfile;
+use crate::runtime::{LayerKv, NodeRuntime};
+
+/// Per-request state held on the edge. The cloud keeps nothing between
+/// calls (many-to-one deployment, paper Fig. 1(c)); Eq. (2)'s edge memory
+/// model is exactly the contents of this struct.
+#[derive(Debug)]
+pub struct EdgeRequestState {
+    pub request_id: u64,
+    /// KV caches of the FRONT layers (produced and consumed locally).
+    pub front_kv: Vec<LayerKv>,
+    /// KV caches of the CLOUD layers (canonical copy lives here; shipped
+    /// when I_kv = 1, refreshed from CloudReply rows).
+    pub cloud_kv: Vec<LayerKv>,
+    /// Split-layer hidden state of every token so far (w, d) — needed to
+    /// serve I_kv = 0 steps, where the cloud recomputes from scratch.
+    pub hidden_history: Vec<f32>,
+    /// Tokens so far (prompt + generated).
+    pub tokens: Vec<u32>,
+}
+
+impl EdgeRequestState {
+    pub fn seq_len(&self) -> usize {
+        self.tokens.len()
+    }
+}
+
+pub struct EdgeDevice {
+    /// Front segment (layers 0..split), OPSC-quantized weights.
+    pub node: NodeRuntime,
+    pub profile: DeviceProfile,
+    pub compression: CompressionConfig,
+    /// Number of cloud layers (for KV bookkeeping).
+    pub n_cloud_layers: usize,
+}
+
+impl EdgeDevice {
+    pub fn new(
+        node: NodeRuntime,
+        n_cloud_layers: usize,
+        profile: DeviceProfile,
+        compression: CompressionConfig,
+    ) -> EdgeDevice {
+        EdgeDevice { node, profile, compression, n_cloud_layers }
+    }
+
+    fn cfg(&self) -> &crate::model::ModelConfig {
+        &self.node.weights.cfg
+    }
+
+    /// Prefill the front segment and build the first payload.
+    /// Returns (payload, state, scaled_compute_seconds).
+    pub fn prefill(&self, request_id: u64, prompt: &[u32]) -> Result<(SplitPayload, EdgeRequestState, f64)> {
+        let cfg = self.cfg();
+        anyhow::ensure!(!prompt.is_empty(), "empty prompt");
+        anyhow::ensure!(
+            prompt.len() <= cfg.prefill_len,
+            "prompt ({}) exceeds prefill width ({})",
+            prompt.len(),
+            cfg.prefill_len
+        );
+        let t0 = Instant::now();
+        let x = self.node.weights.embed_padded(prompt, cfg.prefill_len);
+        let (h, kv_rows) = self.node.prefill(&x)?;
+        let front_kv = self.node.install_prefill_kv(&kv_rows, prompt.len());
+        let compute_s = self.profile.scale(t0.elapsed().as_secs_f64());
+
+        let d = cfg.d_model;
+        let w = prompt.len();
+        let hidden_history = h[..w * d].to_vec();
+        let hidden = CompressedTensor::compress(&hidden_history, w, d, &self.compression);
+        let state = EdgeRequestState {
+            request_id,
+            front_kv,
+            cloud_kv: vec![LayerKv::zeros(cfg.max_seq, cfg.kv_width()); self.n_cloud_layers],
+            hidden_history,
+            tokens: prompt.to_vec(),
+        };
+        let payload = SplitPayload {
+            request_id,
+            pos: w - 1,
+            hidden,
+            kv: None, // nothing to ship yet — the cloud builds its KV in prefill
+            is_prefill: true,
+        };
+        Ok((payload, state, compute_s))
+    }
+
+    /// One decode step: embed `token`, run the front segment at position
+    /// `pos = seq_len`, append to histories, and build the payload under
+    /// the given transmission settings.
+    pub fn decode_step(
+        &self,
+        state: &mut EdgeRequestState,
+        token: u32,
+        include_kv: bool,
+        q_bar_override: Option<u32>,
+    ) -> Result<(SplitPayload, f64)> {
+        let cfg = self.cfg();
+        let pos = state.seq_len();
+        anyhow::ensure!(pos < cfg.max_seq, "request exceeded max_seq");
+        let t0 = Instant::now();
+        let x = self.node.weights.embed(&[token]);
+        let h = self.node.decode(&x, &mut state.front_kv, pos)?;
+        let compute_s = self.profile.scale(t0.elapsed().as_secs_f64());
+
+        state.tokens.push(token);
+        state.hidden_history.extend_from_slice(&h);
+
+        let mut comp = self.compression;
+        if let Some(q) = q_bar_override {
+            comp.q_bar = q;
+        }
+        let d = cfg.d_model;
+        let w = state.seq_len();
+        let (hidden, kv) = if include_kv {
+            // ship this token's hidden row + the cloud layers' caches
+            let hidden = CompressedTensor::compress(&h, 1, d, &comp);
+            // previous tokens' KV only — the current token's cloud KV is
+            // computed by the cloud from the hidden row (Eq. 2 structure)
+            let kv = CompressedKv::compress(&state.cloud_kv, w - 1, cfg.kv_width(), &comp);
+            (hidden, Some(kv))
+        } else {
+            // I_kv = 0: ship the split-layer hidden of ALL tokens; the
+            // cloud recomputes its K/V from scratch (needs w <= P).
+            anyhow::ensure!(
+                w <= cfg.prefill_len,
+                "I_kv=0 requires seq_len ({w}) <= prefill width ({})",
+                cfg.prefill_len
+            );
+            let hidden = CompressedTensor::compress(&state.hidden_history, w, d, &comp);
+            (hidden, None)
+        };
+        let payload = SplitPayload { request_id: state.request_id, pos, hidden, kv, is_prefill: false };
+        Ok((payload, compute_s))
+    }
+
+    /// Apply the cloud's reply: install the new KV rows of the cloud
+    /// layers at `pos` into the edge-held canonical copy.
+    pub fn absorb_reply(
+        &self,
+        state: &mut EdgeRequestState,
+        pos: usize,
+        new_kv_rows: &[(Vec<f32>, Vec<f32>)],
+    ) {
+        let kvw = self.cfg().kv_width();
+        for (cache, (krow, vrow)) in state.cloud_kv.iter_mut().zip(new_kv_rows) {
+            // prefill replies carry several rows, decode replies one
+            let n_rows = krow.len() / kvw;
+            let start = pos + 1 - n_rows;
+            cache.k[start * kvw..(pos + 1) * kvw].copy_from_slice(krow);
+            cache.v[start * kvw..(pos + 1) * kvw].copy_from_slice(vrow);
+        }
+    }
+}

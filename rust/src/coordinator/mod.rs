@@ -1,0 +1,26 @@
+//! L3 coordinator — the paper's system contribution: edge/cloud split
+//! serving with OPSC front segments, two-stage intermediate compression on
+//! the wire, a stateless cloud, dynamic batching, routing, and the
+//! Algorithm-2 early-exit controller on the decode loop.
+
+pub mod batcher;
+pub mod builder;
+pub mod cloud;
+pub mod edge;
+pub mod pipeline;
+pub mod profile;
+pub mod protocol;
+pub mod request;
+pub mod router;
+pub mod sim;
+
+pub use batcher::{BatcherParams, DynamicBatcher};
+pub use builder::{build_pipeline, DeploymentSpec};
+pub use cloud::CloudServer;
+pub use edge::{EdgeDevice, EdgeRequestState};
+pub use pipeline::SplitPipeline;
+pub use profile::DeviceProfile;
+pub use protocol::{CompressedKv, CompressedTensor, CompressionConfig, SplitPayload};
+pub use request::{GenerationResult, Request, StepStats};
+pub use router::{RouteDecision, Router};
+pub use sim::{simulate, Deployment, SimOutcome, SimWorkload};

@@ -1,0 +1,41 @@
+//! Device compute profiles.
+//!
+//! The paper profiles local compute on the real target (Jetson Xavier NX
+//! edge, A6000 cloud — footnote 10). Our substrate measures wall-clock on
+//! the host CPU PJRT and scales it by a per-device factor, preserving the
+//! edge/cloud compute asymmetry the scheduling decisions depend on.
+
+#[derive(Clone, Debug)]
+pub struct DeviceProfile {
+    pub name: String,
+    /// Multiplier applied to measured host wall-clock.
+    pub compute_scale: f64,
+}
+
+impl DeviceProfile {
+    /// Jetson-Xavier-NX-like edge device (slower than the host).
+    pub fn edge_default() -> DeviceProfile {
+        DeviceProfile { name: "edge-jetson-nx".into(), compute_scale: 6.0 }
+    }
+
+    /// A6000-like cloud GPU (much faster than the host CPU).
+    pub fn cloud_default() -> DeviceProfile {
+        DeviceProfile { name: "cloud-a6000".into(), compute_scale: 0.15 }
+    }
+
+    pub fn scale(&self, measured_s: f64) -> f64 {
+        measured_s * self.compute_scale
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn edge_slower_than_cloud() {
+        let e = DeviceProfile::edge_default();
+        let c = DeviceProfile::cloud_default();
+        assert!(e.scale(1.0) > c.scale(1.0));
+    }
+}

@@ -1,0 +1,307 @@
+//! Edge→cloud wire protocol: the paper's two-stage intermediate-output
+//! compression (TS → TAB-Q → rANS) applied to real tensors, with bit-exact
+//! payload accounting and lossless-outlier reconstruction (Eq. 7).
+//!
+//! A `SplitPayload` is what one transmission carries:
+//!   * the compressed hidden-state block at the split layer, always;
+//!   * optionally (I_kv = 1) the compressed KV caches of the CLOUD layers —
+//!     the paper's stateless-cloud design keeps all per-request state on
+//!     the edge (Eq. 2's memory model), shipping the cloud share each step.
+
+use anyhow::Result;
+
+use crate::quant::rans::CodedStream;
+use crate::quant::tabq::{tabq_adaptive, TabqBlock};
+use crate::quant::ts::{threshold_split, SparseOutliers};
+
+/// Compression settings for one transmission.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CompressionConfig {
+    /// TS threshold τ (|t| >= τ goes to the lossless CSR side).
+    pub tau: f32,
+    /// TAB-Q bit budget Q̄a (sign included).
+    pub q_bar: u32,
+    /// TAB-Q distortion tolerance Δ.
+    pub delta: f64,
+    /// Entropy-code the TAB-Q stream with rANS (else raw bit-packing).
+    pub use_rans: bool,
+}
+
+impl Default for CompressionConfig {
+    fn default() -> Self {
+        // Paper defaults: τ = 5, Δ = 0.2, Q̄a = 4.
+        CompressionConfig { tau: 5.0, q_bar: 4, delta: 0.2, use_rans: true }
+    }
+}
+
+/// One compressed (rows x cols) tensor: lossless outliers + quantized bulk.
+#[derive(Clone, Debug)]
+pub struct CompressedTensor {
+    pub rows: usize,
+    pub cols: usize,
+    pub above: SparseOutliers,
+    pub below: TabqBlock,
+    pub coded: CodedStream,
+    /// Bits actually chosen by TAB-Q's adaptive search.
+    pub chosen_bits: u32,
+}
+
+impl CompressedTensor {
+    pub fn compress(t: &[f32], rows: usize, cols: usize, c: &CompressionConfig) -> CompressedTensor {
+        let (above, below_dense) = threshold_split(t, rows, cols, c.tau);
+        let ad = tabq_adaptive(&below_dense, rows, cols, c.q_bar, c.delta);
+        let coded = if c.use_rans {
+            CodedStream::best(&ad.block.codes, ad.block.bits)
+        } else {
+            CodedStream::Raw {
+                bits: ad.block.bits,
+                n: ad.block.codes.len(),
+                bytes: crate::quant::aiq::pack_codes(&ad.block.codes, ad.block.bits),
+            }
+        };
+        let chosen_bits = ad.block.bits;
+        CompressedTensor { rows, cols, above, below: ad.block, coded, chosen_bits }
+    }
+
+    /// Bit-exact wire size: coded TAB-Q stream + signs/scales/zeros + CSR.
+    pub fn wire_bytes(&self) -> u64 {
+        let n = (self.rows * self.cols) as u64;
+        self.coded.wire_bytes()
+            + crate::util::bits_to_bytes(n) // sign bits
+            + (self.rows as u64) * 8 // per-token scale+zero
+            + self.above.payload_bytes()
+            + 6 // header: rows u16, cols u16, bits u8, flags u8
+    }
+
+    /// Cloud-side reconstruction (Eq. 7): dequantized bulk + outliers.
+    pub fn decompress(&self) -> Result<Vec<f32>> {
+        let codes = self.coded.decode()?;
+        anyhow::ensure!(codes == self.below.codes, "code stream corrupted");
+        let mut out = self.below.dequantize();
+        self.above.add_into(&mut out);
+        Ok(out)
+    }
+
+    /// Max per-element reconstruction error of the bulk (half quantum per
+    /// token row); outliers are lossless.
+    pub fn worst_bulk_error(&self) -> f32 {
+        self.below.scales.iter().fold(0f32, |m, &s| m.max(s * 0.5))
+    }
+}
+
+/// Compressed KV caches for a contiguous layer range (cloud layers).
+#[derive(Clone, Debug)]
+pub struct CompressedKv {
+    /// One (k, v) pair per layer; each covers only the used rows [0, w).
+    pub layers: Vec<(CompressedTensor, CompressedTensor)>,
+    pub used_rows: usize,
+}
+
+impl CompressedKv {
+    pub fn compress(
+        kv: &[crate::runtime::LayerKv],
+        used_rows: usize,
+        kv_width: usize,
+        c: &CompressionConfig,
+    ) -> CompressedKv {
+        let layers = kv
+            .iter()
+            .map(|cache| {
+                let kslice = &cache.k[..used_rows * kv_width];
+                let vslice = &cache.v[..used_rows * kv_width];
+                (
+                    CompressedTensor::compress(kslice, used_rows, kv_width, c),
+                    CompressedTensor::compress(vslice, used_rows, kv_width, c),
+                )
+            })
+            .collect();
+        CompressedKv { layers, used_rows }
+    }
+
+    pub fn wire_bytes(&self) -> u64 {
+        self.layers.iter().map(|(k, v)| k.wire_bytes() + v.wire_bytes()).sum::<u64>() + 4
+    }
+
+    /// Reconstruct into full-width (max_seq) zero-padded caches.
+    pub fn decompress(&self, max_seq: usize, kv_width: usize) -> Result<Vec<crate::runtime::LayerKv>> {
+        self.layers
+            .iter()
+            .map(|(kc, vc)| {
+                let mut cache = crate::runtime::LayerKv::zeros(max_seq, kv_width);
+                let k = kc.decompress()?;
+                let v = vc.decompress()?;
+                cache.k[..self.used_rows * kv_width].copy_from_slice(&k);
+                cache.v[..self.used_rows * kv_width].copy_from_slice(&v);
+                Ok(cache)
+            })
+            .collect()
+    }
+}
+
+/// What one edge→cloud transmission carries (paper Eq. 3).
+#[derive(Clone, Debug)]
+pub struct SplitPayload {
+    pub request_id: u64,
+    /// Position of the last token in `hidden` (the token being decoded, or
+    /// prompt_len-1 for prefill).
+    pub pos: usize,
+    /// Compressed hidden-state rows at the split layer.
+    pub hidden: CompressedTensor,
+    /// I_kv = 1: the cloud layers' KV caches travel too (stateless cloud).
+    pub kv: Option<CompressedKv>,
+    /// Prefill (true) or single-token decode (false).
+    pub is_prefill: bool,
+}
+
+impl SplitPayload {
+    pub fn wire_bytes(&self) -> u64 {
+        17 + self.hidden.wire_bytes() + self.kv.as_ref().map_or(0, |k| k.wire_bytes())
+    }
+}
+
+/// Cloud→edge reply: the sampled token, and in stateless mode the new KV
+/// rows of the cloud layers so the edge can keep the canonical state.
+#[derive(Clone, Debug)]
+pub struct CloudReply {
+    pub request_id: u64,
+    pub token: u32,
+    /// (k_row, v_row) per cloud layer for the newly processed position(s);
+    /// raw f32 (small: one row per layer per step).
+    pub new_kv_rows: Vec<(Vec<f32>, Vec<f32>)>,
+    pub logits_entropy: f32,
+}
+
+impl CloudReply {
+    pub fn wire_bytes(&self) -> u64 {
+        let rows: u64 = self
+            .new_kv_rows
+            .iter()
+            .map(|(k, v)| 4 * (k.len() + v.len()) as u64)
+            .sum();
+        12 + rows
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::run_cases;
+    use crate::util::rng::Rng;
+
+    fn heavy_block(rng: &mut Rng, rows: usize, cols: usize) -> Vec<f32> {
+        (0..rows * cols).map(|_| rng.heavy_tailed(1.0, 0.001, 150.0)).collect()
+    }
+
+    #[test]
+    fn compress_roundtrip_outliers_lossless_bulk_bounded() {
+        run_cases(40, 0xE1, |_, rng| {
+            let rows = 1 + rng.below(16);
+            let cols = 16 + rng.below(128);
+            let t = heavy_block(rng, rows, cols);
+            let c = CompressionConfig::default();
+            let packet = CompressedTensor::compress(&t, rows, cols, &c);
+            let back = packet.decompress().unwrap();
+            for (i, (a, b)) in t.iter().zip(&back).enumerate() {
+                if a.abs() >= c.tau {
+                    assert_eq!(a, b, "outlier {i} must be lossless");
+                } else {
+                    let row = i / cols;
+                    let bound = packet.below.scales[row] * 0.5 + 1e-4;
+                    assert!((a - b).abs() <= bound, "bulk err {} > {bound}", (a - b).abs());
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn wire_bytes_beat_dense_f32() {
+        let mut rng = Rng::new(0xE2);
+        let rows = 16;
+        let cols = 128;
+        let t = heavy_block(&mut rng, rows, cols);
+        let packet = CompressedTensor::compress(&t, rows, cols, &CompressionConfig::default());
+        let dense = (rows * cols * 4) as u64;
+        assert!(
+            packet.wire_bytes() < dense / 3,
+            "compressed {} vs dense {dense}",
+            packet.wire_bytes()
+        );
+    }
+
+    #[test]
+    fn lower_qbar_smaller_payload() {
+        let mut rng = Rng::new(0xE3);
+        let t = heavy_block(&mut rng, 32, 128);
+        let mk = |q_bar: u32| {
+            CompressedTensor::compress(
+                &t,
+                32,
+                128,
+                &CompressionConfig { q_bar, delta: 0.0, ..Default::default() },
+            )
+            .wire_bytes()
+        };
+        assert!(mk(2) < mk(4));
+        assert!(mk(4) < mk(8));
+    }
+
+    #[test]
+    fn kv_roundtrip_padded() {
+        let mut rng = Rng::new(0xE4);
+        let kvw = 64;
+        let max_seq = 32;
+        let used = 10;
+        let mut caches = vec![crate::runtime::LayerKv::zeros(max_seq, kvw); 3];
+        for c in &mut caches {
+            for i in 0..used * kvw {
+                c.k[i] = rng.normal_f32(0.0, 1.0);
+                c.v[i] = rng.normal_f32(0.0, 1.0);
+            }
+        }
+        let cfg = CompressionConfig { q_bar: 8, ..Default::default() };
+        let ck = CompressedKv::compress(&caches, used, kvw, &cfg);
+        let back = ck.decompress(max_seq, kvw).unwrap();
+        assert_eq!(back.len(), 3);
+        for (orig, rec) in caches.iter().zip(&back) {
+            for i in 0..used * kvw {
+                assert!((orig.k[i] - rec.k[i]).abs() < 0.05, "k row err");
+            }
+            // padding stays zero
+            assert!(rec.k[used * kvw..].iter().all(|&x| x == 0.0));
+        }
+    }
+
+    #[test]
+    fn payload_with_kv_much_larger_than_hidden_only() {
+        // the Fig. 6 phenomenon: KV dominates the wire
+        let mut rng = Rng::new(0xE5);
+        let kvw = 128;
+        let used = 50;
+        let d = 128;
+        let hidden: Vec<f32> = (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let cfg = CompressionConfig::default();
+        let h = CompressedTensor::compress(&hidden, 1, d, &cfg);
+        let mut caches = vec![crate::runtime::LayerKv::zeros(128, kvw); 12];
+        for c in &mut caches {
+            for i in 0..used * kvw {
+                c.k[i] = rng.normal_f32(0.0, 1.0);
+                c.v[i] = rng.normal_f32(0.0, 1.0);
+            }
+        }
+        let kv = CompressedKv::compress(&caches, used, kvw, &cfg);
+        assert!(kv.wire_bytes() > 20 * h.wire_bytes());
+    }
+
+    #[test]
+    fn adaptive_bits_reported() {
+        let mut rng = Rng::new(0xE6);
+        let t = heavy_block(&mut rng, 8, 64);
+        let packet = CompressedTensor::compress(
+            &t,
+            8,
+            64,
+            &CompressionConfig { q_bar: 8, delta: 1e9, ..Default::default() },
+        );
+        assert_eq!(packet.chosen_bits, 1, "huge tolerance must reach min bits");
+    }
+}

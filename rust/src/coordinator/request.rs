@@ -1,0 +1,94 @@
+//! Request and generation-result types shared across the coordinator.
+
+use crate::planner::TxSettings;
+
+/// One inference request submitted by a client of an edge device.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u64,
+    pub prompt: Vec<u32>,
+    pub max_new_tokens: usize,
+    /// End-to-end deadline per generated token (None = best effort).
+    pub deadline_s: Option<f64>,
+    /// Arrival time in the workload clock (seconds).
+    pub arrival_s: f64,
+}
+
+impl Request {
+    pub fn new(id: u64, prompt: Vec<u32>, max_new_tokens: usize) -> Request {
+        Request { id, prompt, max_new_tokens, deadline_s: None, arrival_s: 0.0 }
+    }
+}
+
+/// Per-step accounting produced by the split pipeline.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StepStats {
+    pub edge_compute_s: f64,
+    pub cloud_compute_s: f64,
+    pub uplink_s: f64,
+    pub downlink_s: f64,
+    pub uplink_bytes: u64,
+    pub downlink_bytes: u64,
+    pub outage: bool,
+    /// TAB-Q bits actually used for the hidden-state block.
+    pub chosen_bits: u32,
+    pub kv_transmitted: bool,
+}
+
+impl StepStats {
+    pub fn total_latency_s(&self) -> f64 {
+        self.edge_compute_s + self.cloud_compute_s + self.uplink_s + self.downlink_s
+    }
+}
+
+/// Result of generating one request through the split pipeline.
+#[derive(Clone, Debug, Default)]
+pub struct GenerationResult {
+    pub request_id: u64,
+    pub tokens: Vec<u32>,
+    pub prefill: StepStats,
+    pub steps: Vec<StepStats>,
+    /// Tokens dropped by the Algorithm-2 early exit (0 = none).
+    pub tokens_dropped: usize,
+    /// Settings in force when generation finished.
+    pub final_settings: Option<TxSettings>,
+}
+
+impl GenerationResult {
+    pub fn total_latency_s(&self) -> f64 {
+        self.prefill.total_latency_s()
+            + self.steps.iter().map(|s| s.total_latency_s()).sum::<f64>()
+    }
+
+    pub fn total_uplink_bytes(&self) -> u64 {
+        self.prefill.uplink_bytes + self.steps.iter().map(|s| s.uplink_bytes).sum::<u64>()
+    }
+
+    pub fn total_downlink_bytes(&self) -> u64 {
+        self.prefill.downlink_bytes + self.steps.iter().map(|s| s.downlink_bytes).sum::<u64>()
+    }
+
+    pub fn mean_step_latency_s(&self) -> f64 {
+        if self.steps.is_empty() {
+            0.0
+        } else {
+            self.steps.iter().map(|s| s.total_latency_s()).sum::<f64>() / self.steps.len() as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accounting_sums() {
+        let mut r = GenerationResult { request_id: 1, ..Default::default() };
+        r.prefill = StepStats { uplink_bytes: 100, edge_compute_s: 0.5, ..Default::default() };
+        r.steps.push(StepStats { uplink_bytes: 10, cloud_compute_s: 0.25, ..Default::default() });
+        r.steps.push(StepStats { uplink_bytes: 20, uplink_s: 0.25, ..Default::default() });
+        assert_eq!(r.total_uplink_bytes(), 130);
+        assert!((r.total_latency_s() - 1.0).abs() < 1e-12);
+        assert!((r.mean_step_latency_s() - 0.25).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,161 @@
+//! Request router: assigns incoming requests to edge devices
+//! (least-outstanding-work first, with per-device memory admission via the
+//! Eq. 8c budget). The router is the front door of the deployment — the
+//! piece a vLLM-style router plays in a homogeneous cluster, adapted to
+//! heterogeneous memory-constrained edges.
+
+use crate::memory::ActBits;
+use crate::model::ModelConfig;
+
+#[derive(Clone, Debug)]
+pub struct DeviceSlot {
+    pub device_id: usize,
+    /// Eq. 8c memory budget of this device (bytes).
+    pub mem_budget_bytes: u64,
+    /// Static per-request KV+weights cost under the device's plan.
+    pub per_request_bytes: u64,
+    pub weight_bytes: u64,
+    pub active_requests: usize,
+    /// Outstanding decode steps across active requests (load proxy).
+    pub outstanding_tokens: u64,
+}
+
+impl DeviceSlot {
+    pub fn new(
+        device_id: usize,
+        cfg: &ModelConfig,
+        split: usize,
+        qw_front: u32,
+        qa: &ActBits,
+        w_bar: usize,
+        mem_budget_bytes: u64,
+    ) -> DeviceSlot {
+        let weight_bytes = crate::memory::edge_weight_bytes(cfg, split, qw_front);
+        let per_request_bytes = crate::memory::kv_bytes(cfg, w_bar, split, qa);
+        DeviceSlot {
+            device_id,
+            mem_budget_bytes,
+            per_request_bytes,
+            weight_bytes,
+            active_requests: 0,
+            outstanding_tokens: 0,
+        }
+    }
+
+    pub fn used_bytes(&self) -> u64 {
+        self.weight_bytes + self.active_requests as u64 * self.per_request_bytes
+    }
+
+    pub fn can_admit(&self) -> bool {
+        self.used_bytes() + self.per_request_bytes <= self.mem_budget_bytes
+    }
+}
+
+#[derive(Debug, Default)]
+pub struct Router {
+    pub devices: Vec<DeviceSlot>,
+    pub rejected: u64,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RouteDecision {
+    ToDevice(usize),
+    /// No device has memory headroom — serve cloud-only.
+    CloudFallback,
+}
+
+impl Router {
+    pub fn new(devices: Vec<DeviceSlot>) -> Router {
+        Router { devices, rejected: 0 }
+    }
+
+    /// Route one request: least outstanding work among devices that pass
+    /// memory admission; cloud fallback if none can take it.
+    pub fn route(&mut self, expected_tokens: u64) -> RouteDecision {
+        let best = self
+            .devices
+            .iter_mut()
+            .filter(|d| d.can_admit())
+            .min_by_key(|d| (d.outstanding_tokens, d.device_id));
+        match best {
+            Some(d) => {
+                d.active_requests += 1;
+                d.outstanding_tokens += expected_tokens;
+                RouteDecision::ToDevice(d.device_id)
+            }
+            None => {
+                self.rejected += 1;
+                RouteDecision::CloudFallback
+            }
+        }
+    }
+
+    /// Mark a request complete on its device.
+    pub fn complete(&mut self, device_id: usize, tokens: u64) {
+        let d = &mut self.devices[device_id];
+        d.active_requests = d.active_requests.saturating_sub(1);
+        d.outstanding_tokens = d.outstanding_tokens.saturating_sub(tokens);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn slot(id: usize, budget_mb: u64) -> DeviceSlot {
+        let cfg = ModelConfig::sim7b();
+        DeviceSlot::new(
+            id,
+            &cfg,
+            20,
+            4,
+            &ActBits::uniform(8),
+            128,
+            budget_mb * 1024 * 1024,
+        )
+    }
+
+    #[test]
+    fn routes_to_least_loaded() {
+        let mut r = Router::new(vec![slot(0, 64), slot(1, 64)]);
+        assert_eq!(r.route(100), RouteDecision::ToDevice(0));
+        assert_eq!(r.route(50), RouteDecision::ToDevice(1));
+        // device 1 now has less outstanding work
+        assert_eq!(r.route(10), RouteDecision::ToDevice(1));
+    }
+
+    #[test]
+    fn memory_admission_enforced() {
+        // tiny budget: weights fit but no request slot
+        let s = slot(0, 3);
+        assert!(!s.can_admit(), "3 MB cannot hold front weights + KV");
+        let mut r = Router::new(vec![s]);
+        assert_eq!(r.route(10), RouteDecision::CloudFallback);
+        assert_eq!(r.rejected, 1);
+    }
+
+    #[test]
+    fn complete_frees_capacity() {
+        let mut r = Router::new(vec![slot(0, 16)]);
+        // fill to capacity
+        let mut admitted = 0;
+        while let RouteDecision::ToDevice(_) = r.route(10) {
+            admitted += 1;
+            if admitted > 1000 {
+                panic!("no admission limit hit");
+            }
+        }
+        assert!(admitted >= 1);
+        assert_eq!(r.route(10), RouteDecision::CloudFallback);
+        r.complete(0, 10);
+        assert_eq!(r.route(10), RouteDecision::ToDevice(0));
+    }
+
+    #[test]
+    fn used_bytes_counts_active_requests() {
+        let mut s = slot(0, 64);
+        let w = s.used_bytes();
+        s.active_requests = 2;
+        assert_eq!(s.used_bytes(), w + 2 * s.per_request_bytes);
+    }
+}

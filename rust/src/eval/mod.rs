@@ -1,0 +1,54 @@
+//! Evaluation harness: synthetic zero-shot suites, corpus perplexity and
+//! the treatment-pluggable EvalRuntime (Tables 2-6, Fig. 4).
+
+pub mod perplexity;
+pub mod runtime;
+pub mod tasks;
+
+pub use perplexity::{generate_corpus, model_corpus, perplexity, perplexity_windows, Corpus};
+pub use runtime::{ActTreatment, EvalRuntime};
+pub use tasks::{build_suite, evaluate, paper_suites, McItem, McSuite, SuiteSpec};
+
+use anyhow::Result;
+
+use crate::quant::baselines::CalibStats;
+use crate::util::rng::{zipf_cdf, Rng};
+
+/// Run real calibration: feed a few synthetic prompts through the
+/// full-precision reference and record per-channel absolute maxima of
+/// every layer input (what SmoothQuant smooths against and Atom picks
+/// outlier channels from).
+pub fn calibrate(reference: &EvalRuntime, n_prompts: usize, seed: u64) -> Result<CalibStats> {
+    let cfg = reference.cfg().clone();
+    let d = cfg.d_model;
+    let n_layers = cfg.n_layers;
+    let mut absmax = vec![vec![1e-6f32; d]; n_layers];
+    let mut rng = Rng::new(seed ^ 0xCA11B);
+    let cdf = zipf_cdf(cfg.vocab - 1, 1.1);
+    for _ in 0..n_prompts {
+        let prompt: Vec<u32> = (0..cfg.prefill_len / 2)
+            .map(|_| rng.zipf(&cdf) as u32 + 1)
+            .collect();
+        let x = reference.node.weights.embed_padded(&prompt, cfg.prefill_len);
+        let used = prompt.len();
+        let mut hook = |li: usize, h: &mut Vec<f32>| {
+            // the output of layer li is the input of layer li+1
+            if li + 1 < n_layers {
+                let am = &mut absmax[li + 1];
+                for r in 0..used {
+                    for c in 0..d {
+                        am[c] = am[c].max(h[r * d + c].abs());
+                    }
+                }
+            }
+        };
+        let _ = reference.node.prefill_with(&x, &mut hook)?;
+        // layer 0's input is the embedding itself
+        for r in 0..used {
+            for c in 0..d {
+                absmax[0][c] = absmax[0][c].max(x[r * d + c].abs());
+            }
+        }
+    }
+    Ok(CalibStats { input_absmax: absmax })
+}

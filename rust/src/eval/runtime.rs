@@ -1,0 +1,182 @@
+//! EvalRuntime: a monolithic (full-stack) model instance with a pluggable
+//! activation treatment at the residual-stream boundaries — the measuring
+//! instrument behind Tables 2-6 and Fig. 4.
+//!
+//! Treatments:
+//!   * `EveryLayer(mode)` — baseline methods quantize activations at every
+//!     layer boundary (SmoothQuant/OmniQuant per-tensor, Atom per-token);
+//!   * `SplitCompression` — "Ours": the TS + TAB-Q round-trip applied at
+//!     the split layer ONLY (everything else full precision), exactly what
+//!     the wire does in the serving pipeline;
+//!   * `ClampAll{limit}` — the Fig. 4(a) probe: clamp |h| <= limit.
+
+use std::rc::Rc;
+
+use anyhow::Result;
+
+use crate::coordinator::protocol::{CompressedTensor, CompressionConfig};
+use crate::model::{ModelConfig, ModelWeights};
+use crate::quant::baselines::ActQuantMode;
+use crate::runtime::{Engine, NodeRuntime};
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug)]
+pub enum ActTreatment {
+    None,
+    EveryLayer(ActQuantMode),
+    SplitCompression { split: usize, compression: CompressionConfig },
+    ClampAll { limit: f32 },
+}
+
+pub struct EvalRuntime {
+    pub node: NodeRuntime,
+    pub treatment: ActTreatment,
+}
+
+fn log_softmax_at(logits: &[f32], vocab: usize, pos: usize, token: u32) -> f64 {
+    let row = &logits[pos * vocab..(pos + 1) * vocab];
+    let m = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b)) as f64;
+    let z: f64 = row.iter().map(|&x| ((x as f64) - m).exp()).sum();
+    (row[token as usize] as f64 - m) - z.ln()
+}
+
+impl EvalRuntime {
+    /// Build over (possibly pre-quantized) weights, full layer stack.
+    pub fn new(
+        engine: Rc<Engine>,
+        weights: Rc<ModelWeights>,
+        treatment: ActTreatment,
+    ) -> Result<EvalRuntime> {
+        let n = weights.cfg.n_layers;
+        let node = NodeRuntime::new(engine, weights, 0..n, true)?;
+        Ok(EvalRuntime { node, treatment })
+    }
+
+    pub fn cfg(&self) -> &ModelConfig {
+        &self.node.weights.cfg
+    }
+
+    fn hook(&self) -> impl FnMut(usize, &mut Vec<f32>) + '_ {
+        let cfg = self.cfg().clone();
+        let treatment = self.treatment;
+        move |li: usize, h: &mut Vec<f32>| match treatment {
+            ActTreatment::None => {}
+            ActTreatment::EveryLayer(mode) => {
+                let rows = h.len() / cfg.d_model;
+                mode.apply(h, rows, cfg.d_model);
+            }
+            ActTreatment::SplitCompression { split, compression } => {
+                // the hook runs AFTER layer li; the split-layer output is
+                // what crosses the wire
+                if li + 1 == split {
+                    let rows = h.len() / cfg.d_model;
+                    let packet = CompressedTensor::compress(h, rows, cfg.d_model, &compression);
+                    *h = packet.decompress().expect("self-roundtrip");
+                }
+            }
+            ActTreatment::ClampAll { limit } => {
+                for v in h.iter_mut() {
+                    *v = v.clamp(-limit, limit);
+                }
+            }
+        }
+    }
+
+    /// Logits at every prefill position for (padded) `tokens`.
+    pub fn logits_all(&self, tokens: &[u32]) -> Result<Vec<f32>> {
+        let cfg = self.cfg();
+        anyhow::ensure!(tokens.len() <= cfg.prefill_len, "sequence exceeds prefill width");
+        let x = self.node.weights.embed_padded(tokens, cfg.prefill_len);
+        let mut hook = self.hook();
+        let (h, _) = self.node.prefill_with(&x, &mut hook)?;
+        self.node.logits_prefill(&h)
+    }
+
+    /// Length-normalized log-likelihood of `cont` given `context`
+    /// (the standard zero-shot multiple-choice scoring rule).
+    pub fn choice_logprob(&self, context: &[u32], cont: &[u32]) -> Result<f64> {
+        let cfg = self.cfg();
+        let mut seq = context.to_vec();
+        seq.extend_from_slice(cont);
+        let logits = self.logits_all(&seq)?;
+        let mut lp = 0f64;
+        for (i, &tok) in cont.iter().enumerate() {
+            let pos = context.len() + i - 1; // logits[pos] predicts token pos+1
+            lp += log_softmax_at(&logits, cfg.vocab, pos, tok);
+        }
+        Ok(lp / cont.len() as f64)
+    }
+
+    /// Mean negative log-likelihood of a token window (for perplexity).
+    pub fn window_nll(&self, window: &[u32]) -> Result<f64> {
+        let cfg = self.cfg();
+        let logits = self.logits_all(window)?;
+        let mut nll = 0f64;
+        for pos in 0..window.len() - 1 {
+            nll -= log_softmax_at(&logits, cfg.vocab, pos, window[pos + 1]);
+        }
+        Ok(nll / (window.len() - 1) as f64)
+    }
+
+    /// Temperature rollout used to BUILD suites (always run on the FP
+    /// reference instance; treatment is applied like everywhere else,
+    /// which for the reference is `None`).
+    pub fn rollout(&self, context: &[u32], len: usize, temp: f64, rng: &mut Rng) -> Result<Vec<u32>> {
+        let cfg = self.cfg();
+        let mut seq = context.to_vec();
+        let mut out = Vec::with_capacity(len);
+        for _ in 0..len {
+            anyhow::ensure!(seq.len() < cfg.prefill_len, "rollout exceeds prefill width");
+            let logits = self.logits_all(&seq)?;
+            let pos = seq.len() - 1;
+            let row = &logits[pos * cfg.vocab..(pos + 1) * cfg.vocab];
+            let tok = if temp <= 0.0 {
+                row.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .unwrap()
+                    .0 as u32
+            } else {
+                // softmax sample at temperature
+                let m = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b)) as f64;
+                let ws: Vec<f64> =
+                    row.iter().map(|&x| (((x as f64) - m) / temp).exp()).collect();
+                let z: f64 = ws.iter().sum();
+                let mut u = rng.f64() * z;
+                let mut pick = 0usize;
+                for (i, w) in ws.iter().enumerate() {
+                    u -= w;
+                    if u <= 0.0 {
+                        pick = i;
+                        break;
+                    }
+                }
+                pick as u32
+            };
+            // avoid EOS=0 inside suite continuations
+            let tok = if tok == 0 { 1 } else { tok };
+            out.push(tok);
+            seq.push(tok);
+        }
+        Ok(out)
+    }
+
+    /// Capture the hidden state right after `layer` for `tokens`
+    /// (Fig. 4(b) magnitude-distribution probe).
+    pub fn capture_hidden(&self, tokens: &[u32], layer: usize) -> Result<Vec<f32>> {
+        let cfg = self.cfg();
+        let x = self.node.weights.embed_padded(tokens, cfg.prefill_len);
+        let mut captured: Vec<f32> = Vec::new();
+        let used = tokens.len() * cfg.d_model;
+        let mut base_hook = self.hook();
+        let mut hook = |li: usize, h: &mut Vec<f32>| {
+            base_hook(li, h);
+            if li == layer {
+                captured = h[..used].to_vec();
+            }
+        };
+        let _ = self.node.prefill_with(&x, &mut hook)?;
+        anyhow::ensure!(!captured.is_empty(), "layer {layer} not in range");
+        Ok(captured)
+    }
+}

@@ -1,0 +1,112 @@
+//! Synthetic zero-shot multiple-choice suites (HellaSwag / PIQA / ARC-e/c /
+//! BoolQ / Winogrande analogs — DESIGN.md §1 substitution).
+//!
+//! Construction: the *correct* continuation of each item is a temperature
+//! rollout from the full-precision reference model, so a faithful model
+//! ranks it high but not always first (temperature sets the noise floor);
+//! distractors are either random token strings ("easy") or rollouts from a
+//! perturbed context ("hard" — plausible under the model but conditioned
+//! wrong). Quantization that distorts the scoring pipeline degrades the
+//! ranking, which is precisely the relative signal Tables 2/3/5/6 compare.
+//! Absolute accuracies are NOT comparable to the real benchmarks.
+
+use anyhow::Result;
+
+use super::runtime::EvalRuntime;
+use crate::util::rng::{zipf_cdf, Rng};
+
+#[derive(Clone, Debug)]
+pub struct McItem {
+    pub context: Vec<u32>,
+    pub choices: Vec<Vec<u32>>,
+    pub correct: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct McSuite {
+    pub name: String,
+    pub items: Vec<McItem>,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct SuiteSpec {
+    pub name: &'static str,
+    pub n_items: usize,
+    pub ctx_len: usize,
+    pub cont_len: usize,
+    pub n_choices: usize,
+    /// Rollout temperature for the correct continuation (noise floor).
+    pub temp: f64,
+    /// Hard distractors = perturbed-context rollouts; easy = random.
+    pub hard_distractors: bool,
+}
+
+/// The six paper-benchmark analogs. Context/continuation lengths must fit
+/// the prefill width (ctx + cont <= P = 64).
+pub fn paper_suites(n_items: usize) -> Vec<SuiteSpec> {
+    // Temperatures/distractor hardness tuned so the FP reference lands in
+    // the paper's accuracy neighborhoods (easy suites high, ARC-c-analog
+    // hardest) with room to degrade under quantization.
+    vec![
+        SuiteSpec { name: "HS-sim", n_items, ctx_len: 24, cont_len: 8, n_choices: 4, temp: 0.7, hard_distractors: false },
+        SuiteSpec { name: "PIQA-sim", n_items, ctx_len: 16, cont_len: 10, n_choices: 2, temp: 0.7, hard_distractors: true },
+        SuiteSpec { name: "ARC-e-sim", n_items, ctx_len: 20, cont_len: 6, n_choices: 4, temp: 0.6, hard_distractors: false },
+        SuiteSpec { name: "ARC-c-sim", n_items, ctx_len: 20, cont_len: 6, n_choices: 4, temp: 0.9, hard_distractors: true },
+        SuiteSpec { name: "BoolQ-sim", n_items, ctx_len: 28, cont_len: 4, n_choices: 2, temp: 0.7, hard_distractors: false },
+        SuiteSpec { name: "Wino-sim", n_items, ctx_len: 18, cont_len: 5, n_choices: 2, temp: 0.65, hard_distractors: true },
+    ]
+}
+
+/// Build one suite against the full-precision reference model.
+pub fn build_suite(reference: &EvalRuntime, spec: &SuiteSpec, seed: u64) -> Result<McSuite> {
+    let cfg = reference.cfg();
+    assert!(spec.ctx_len + spec.cont_len <= cfg.prefill_len);
+    let mut rng = Rng::new(seed ^ 0x5017e5);
+    let cdf = zipf_cdf(cfg.vocab - 1, 1.1);
+    let mut items = Vec::with_capacity(spec.n_items);
+    for _ in 0..spec.n_items {
+        // contexts drawn zipf-distributed (skip token 0 = EOS)
+        let context: Vec<u32> = (0..spec.ctx_len).map(|_| rng.zipf(&cdf) as u32 + 1).collect();
+        let correct_cont = reference.rollout(&context, spec.cont_len, spec.temp, &mut rng)?;
+        let mut choices = vec![correct_cont];
+        for _ in 1..spec.n_choices {
+            let d = if spec.hard_distractors {
+                // perturb most of the context, roll out — locally plausible
+                // model text conditioned on the wrong premise
+                let mut pctx = context.clone();
+                for _ in 0..(5 * spec.ctx_len / 6).max(1) {
+                    let i = rng.below(pctx.len());
+                    pctx[i] = rng.zipf(&cdf) as u32 + 1;
+                }
+                reference.rollout(&pctx, spec.cont_len, spec.temp, &mut rng)?
+            } else {
+                (0..spec.cont_len).map(|_| rng.zipf(&cdf) as u32 + 1).collect()
+            };
+            choices.push(d);
+        }
+        // shuffle so "correct" isn't always index 0
+        let correct_pos = rng.below(spec.n_choices);
+        choices.swap(0, correct_pos);
+        items.push(McItem { context, choices, correct: correct_pos });
+    }
+    Ok(McSuite { name: spec.name.to_string(), items })
+}
+
+/// Accuracy (%) of a scorer on a suite: argmax over length-normalized
+/// choice log-likelihoods.
+pub fn evaluate(suite: &McSuite, scorer: &EvalRuntime) -> Result<f64> {
+    let mut hits = 0usize;
+    for item in &suite.items {
+        let mut best = (f64::NEG_INFINITY, 0usize);
+        for (ci, cont) in item.choices.iter().enumerate() {
+            let lp = scorer.choice_logprob(&item.context, cont)?;
+            if lp > best.0 {
+                best = (lp, ci);
+            }
+        }
+        if best.1 == item.correct {
+            hits += 1;
+        }
+    }
+    Ok(100.0 * hits as f64 / suite.items.len() as f64)
+}

@@ -1,0 +1,11 @@
+//! splitserve — adaptive split computing for LLM inference.
+pub mod model;
+pub mod quant;
+pub mod memory;
+pub mod channel;
+pub mod planner;
+pub mod runtime;
+pub mod coordinator;
+pub mod eval;
+pub mod trace;
+pub mod util;

@@ -1,0 +1,161 @@
+//! splitserve — launcher CLI for the adaptive split-computing framework.
+//!
+//! Subcommands:
+//!   doctor    probe PJRT + artifacts
+//!   models    list model configurations
+//!   plan      solve Eq. (8) for a memory budget
+//!   generate  serve one prompt through the split pipeline
+//!   serve     run a workload trace over N edge devices (e2e driver)
+//!   sweep     τ x Q̄a payload sweep on a captured hidden block
+
+use std::rc::Rc;
+
+use anyhow::Result;
+use splitserve::coordinator::{build_pipeline, DeploymentSpec, Request};
+use splitserve::model::ModelConfig;
+use splitserve::planner::{plan, AnalyticAccuracyModel, PlanInputs};
+use splitserve::runtime::Engine;
+use splitserve::trace::{generate_trace, WorkloadSpec};
+use splitserve::util::cli::Args;
+
+const USAGE: &str = "\
+splitserve — adaptive split computing for LLM inference
+
+USAGE: splitserve <subcommand> [flags]
+
+  doctor                                probe PJRT + artifacts
+  models                                list model configurations
+  plan      --model sim7b --budget-mb 16 --w-bar 128
+  generate  --model sim7b --layers 8 --split 4 --prompt 5,6,7 --max-new 12
+  serve     --model sim7b --layers 8 --devices 2 --requests 6
+  sweep     (see examples/compression_sweep for the richer version)
+";
+
+fn model_from(args: &Args) -> Result<ModelConfig> {
+    let name = args.str_or("model", "sim7b");
+    let mut cfg = ModelConfig::by_name(name)
+        .ok_or_else(|| anyhow::anyhow!("unknown model '{name}' (try: {:?})", ModelConfig::all_names()))?;
+    if let Some(l) = args.flag("layers") {
+        cfg.n_layers = l.parse()?;
+    }
+    Ok(cfg)
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env(true);
+    match args.subcommand.as_deref() {
+        Some("doctor") => {
+            println!("PJRT: {}", splitserve::runtime::smoke()?);
+            for name in ["sim7b", "sim13b"] {
+                let cfg = ModelConfig::by_name(name).unwrap();
+                match Engine::load("artifacts", &cfg) {
+                    Ok(e) => println!(
+                        "artifacts[{name}]: OK ({} executables)",
+                        e.class.artifacts.len()
+                    ),
+                    Err(e) => println!("artifacts[{name}]: MISSING — run `make artifacts` ({e})"),
+                }
+            }
+        }
+        Some("models") => {
+            for name in ModelConfig::all_names() {
+                let c = ModelConfig::by_name(name).unwrap();
+                println!(
+                    "{:<22} layers={:<3} d={:<4} heads={} ff={} vocab={} W={} P={} params={:.2}M",
+                    c.name,
+                    c.n_layers,
+                    c.d_model,
+                    c.n_heads,
+                    c.d_ff,
+                    c.vocab,
+                    c.max_seq,
+                    c.prefill_len,
+                    c.total_params() as f64 / 1e6
+                );
+            }
+        }
+        Some("plan") => {
+            let cfg = model_from(&args)?;
+            let budget = args.usize_or("budget-mb", 16) as u64 * 1024 * 1024;
+            let w_bar = args.usize_or("w-bar", cfg.max_seq);
+            let mut inputs = PlanInputs::defaults(cfg.clone(), budget, w_bar);
+            inputs.acc_tolerance = args.f64_or("acc-tol", 1.0);
+            match plan(&inputs, &AnalyticAccuracyModel) {
+                Some(c) => println!(
+                    "split l={} Qw_front={}b Qa={{{}b,{}b}} psi={} edge={:.2} MB drop~{:.2}%",
+                    c.opsc.split_layer,
+                    c.opsc.qw_front,
+                    c.qa.front,
+                    c.qa.back,
+                    c.psi,
+                    c.edge_bytes as f64 / (1024.0 * 1024.0),
+                    c.predicted_drop
+                ),
+                None => println!("no feasible configuration under {budget} bytes at W={w_bar}"),
+            }
+        }
+        Some("generate") => {
+            let cfg = model_from(&args)?;
+            let split = args.usize_or("split", cfg.n_layers / 2);
+            let prompt: Vec<u32> = args
+                .str_or("prompt", "5,6,7")
+                .split(',')
+                .map(|t| t.trim().parse().unwrap_or(1))
+                .collect();
+            let max_new = args.usize_or("max-new", 12);
+            let engine = Rc::new(Engine::load("artifacts", &cfg)?);
+            let mut spec = DeploymentSpec::defaults(cfg, split);
+            if let Some(d) = args.flag("deadline-ms") {
+                spec.deadline_s = Some(d.parse::<f64>()? / 1e3);
+            }
+            let mut pipe = build_pipeline(engine, &spec)?;
+            let res = pipe.generate(&Request::new(1, prompt, max_new))?;
+            println!("tokens: {:?}", res.tokens);
+            println!(
+                "prefill {:.1} ms | step {:.2} ms | up {} B | down {} B | dropped {}",
+                res.prefill.total_latency_s() * 1e3,
+                res.mean_step_latency_s() * 1e3,
+                res.total_uplink_bytes(),
+                res.total_downlink_bytes(),
+                res.tokens_dropped
+            );
+        }
+        Some("serve") => {
+            let cfg = model_from(&args)?;
+            let split = args.usize_or("split", cfg.n_layers / 2);
+            let devices = args.usize_or("devices", 2);
+            let n_requests = args.usize_or("requests", 6);
+            let engine = Rc::new(Engine::load("artifacts", &cfg)?);
+            let mut pipes = Vec::new();
+            for d in 0..devices {
+                let mut spec = DeploymentSpec::defaults(cfg.clone(), split);
+                spec.link_seed = 100 + d as u64;
+                pipes.push(build_pipeline(engine.clone(), &spec)?);
+            }
+            let trace = generate_trace(&WorkloadSpec { n_requests, ..Default::default() });
+            let mut total_tokens = 0usize;
+            let mut total_latency = 0f64;
+            for (i, req) in trace.iter().enumerate() {
+                let res = pipes[i % devices].generate(req)?;
+                total_tokens += res.tokens.len();
+                total_latency += res.total_latency_s();
+                println!(
+                    "req {} -> dev {}: {} tokens, {:.1} ms",
+                    req.id,
+                    i % devices,
+                    res.tokens.len(),
+                    res.total_latency_s() * 1e3
+                );
+            }
+            println!(
+                "served {n_requests} requests, {total_tokens} tokens, {:.1} tok/s (simulated)",
+                total_tokens as f64 / total_latency
+            );
+        }
+        Some("sweep") => {
+            println!("see `cargo run --release --example compression_sweep` for the full sweep");
+        }
+        _ => print!("{USAGE}"),
+    }
+    Ok(())
+}

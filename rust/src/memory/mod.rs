@@ -1,0 +1,213 @@
+//! Memory accounting: paper Eq. (1)-(3).
+//!
+//! Byte-exact models of (1) the OPSC weight footprint, (2) the KV-cache
+//! growth under per-segment activation precision, and (3) the intermediate
+//! output transmitted at the split point. These drive the planner's
+//! memory constraint (Eq. 8c) and the Fig. 6 payload accounting.
+//!
+//! All quantities are computed in BITS internally and reported in bytes
+//! (ceil), so mixed bit-widths never lose fractional bytes.
+
+use crate::model::ModelConfig;
+use crate::util::bits_to_bytes;
+
+/// Per-segment activation precision Q^a = {Qa1 (front), Qa2 (back)}.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ActBits {
+    pub front: u32,
+    pub back: u32,
+}
+
+impl ActBits {
+    pub fn uniform(bits: u32) -> ActBits {
+        ActBits { front: bits, back: bits }
+    }
+
+    /// Q_{a,k} for 0-indexed layer k under split ℓ (paper's piecewise def).
+    pub fn for_layer(&self, k: usize, split: usize) -> u32 {
+        if k < split {
+            self.front
+        } else {
+            self.back
+        }
+    }
+
+    /// Ψ(Q^a) = Σ_k Q_{a,k} — the planner's objective (Eq. 8a).
+    pub fn psi(&self, n_layers: usize, split: usize) -> u64 {
+        (0..n_layers)
+            .map(|k| self.for_layer(k, split) as u64)
+            .sum()
+    }
+}
+
+/// B_w(i; Q): weight bits of one decoder layer at Q-bit precision.
+/// Norm vectors stay fp16 (they are never quantized), matching the
+/// implementation in quant::opsc.
+pub fn layer_weight_bits(cfg: &ModelConfig, bits: u32) -> u64 {
+    let d = cfg.d_model as u64;
+    let f = cfg.d_ff as u64;
+    let matmul_params = 4 * d * d + 2 * d * f + f * d;
+    let norm_params = 2 * d;
+    matmul_params * bits as u64 + norm_params * 16
+}
+
+/// Eq. (1): M(ℓ_w, Q^w) — total weight footprint of the edge-resident
+/// front segment at Qw1 plus the (optionally edge-cached) back segment at
+/// Qw2. For a pure split deployment the back segment lives on the cloud;
+/// pass `back_layers = 0` to account only the edge share.
+pub fn opsc_weight_bytes(cfg: &ModelConfig, split: usize, qw_front: u32, qw_back: u32) -> u64 {
+    assert!(split <= cfg.n_layers);
+    let front: u64 = (0..split).map(|_| layer_weight_bits(cfg, qw_front)).sum();
+    let back: u64 = (split..cfg.n_layers).map(|_| layer_weight_bits(cfg, qw_back)).sum();
+    bits_to_bytes(front + back)
+}
+
+/// Edge-only share of Eq. (1): front segment + embedding table (the edge
+/// must embed tokens locally).
+pub fn edge_weight_bytes(cfg: &ModelConfig, split: usize, qw_front: u32) -> u64 {
+    let front: u64 = (0..split).map(|_| layer_weight_bits(cfg, qw_front)).sum();
+    let emb = (cfg.vocab * cfg.d_model) as u64 * 16; // fp16 embedding
+    bits_to_bytes(front + emb)
+}
+
+/// Eq. (2): B_kv(w, ℓ; Q^a) — incremental KV memory when generating token
+/// w with split at ℓ: the new token's K/V for the ℓ edge layers, the
+/// buffered K/V of the previous w-1 tokens for the L-ℓ cloud layers, plus
+/// the transient hidden state of token w at layer ℓ.
+pub fn kv_bits(cfg: &ModelConfig, w_tokens: usize, split: usize, qa: &ActBits) -> u64 {
+    let hd = (cfg.n_heads * cfg.head_dim) as u64;
+    let t_w = w_tokens as u64 * hd;
+    let t_prev = w_tokens.saturating_sub(1) as u64 * hd;
+    let mut bits = 0u64;
+    for k in 0..split.min(cfg.n_layers) {
+        bits += 2 * t_w * qa.for_layer(k, split) as u64;
+    }
+    for k in split..cfg.n_layers {
+        bits += 2 * t_prev * qa.for_layer(k, split) as u64;
+    }
+    // transient hidden state of token w at the split layer
+    let split_bits = qa.for_layer(split.saturating_sub(1), split) as u64;
+    bits += hd * split_bits;
+    bits
+}
+
+pub fn kv_bytes(cfg: &ModelConfig, w_tokens: usize, split: usize, qa: &ActBits) -> u64 {
+    bits_to_bytes(kv_bits(cfg, w_tokens, split, qa))
+}
+
+/// Eq. (3): B_io — intermediate output size on the wire. With I_kv = 1 the
+/// KV cache travels; with I_kv = 0 only the hidden state rows do.
+pub fn io_bytes(
+    cfg: &ModelConfig,
+    w_tokens: usize,
+    split: usize,
+    include_kv: bool,
+    qa: &ActBits,
+) -> u64 {
+    if include_kv {
+        kv_bytes(cfg, w_tokens, split, qa)
+    } else {
+        let hd = (cfg.n_heads * cfg.head_dim) as u64;
+        let split_bits = qa.for_layer(split.saturating_sub(1), split) as u64;
+        bits_to_bytes(w_tokens as u64 * hd * split_bits)
+    }
+}
+
+/// Total edge memory under a full OPSC configuration (Eq. 8c left side):
+/// front weights + embedding + KV at the maximum token budget W̄.
+pub fn edge_total_bytes(
+    cfg: &ModelConfig,
+    split: usize,
+    qw_front: u32,
+    w_bar: usize,
+    qa: &ActBits,
+) -> u64 {
+    edge_weight_bytes(cfg, split, qw_front) + kv_bytes(cfg, w_bar, split, qa)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelConfig;
+
+    fn cfg() -> ModelConfig {
+        ModelConfig::sim7b()
+    }
+
+    #[test]
+    fn weight_bytes_monotone_in_bits_and_split() {
+        let c = cfg();
+        let b4 = opsc_weight_bytes(&c, 16, 4, 16);
+        let b8 = opsc_weight_bytes(&c, 16, 8, 16);
+        let b16 = opsc_weight_bytes(&c, 16, 16, 16);
+        assert!(b4 < b8 && b8 < b16);
+        // larger front segment at 4 bits = smaller total
+        assert!(opsc_weight_bytes(&c, 24, 4, 16) < opsc_weight_bytes(&c, 8, 4, 16));
+    }
+
+    #[test]
+    fn eq1_manual_check() {
+        let c = cfg();
+        // all layers at 16 bits: matmul params * 2 bytes + norms * 2 bytes
+        let total = opsc_weight_bytes(&c, 0, 4, 16);
+        let per_layer = (4 * 128 * 128 + 2 * 128 * 352 + 352 * 128 + 2 * 128) as u64 * 2;
+        assert_eq!(total, per_layer * 32);
+    }
+
+    #[test]
+    fn kv_grows_with_tokens() {
+        let c = cfg();
+        let qa = ActBits::uniform(8);
+        let k10 = kv_bytes(&c, 10, 20, &qa);
+        let k50 = kv_bytes(&c, 50, 20, &qa);
+        assert!(k50 > k10 * 4);
+    }
+
+    #[test]
+    fn eq2_manual_check() {
+        let c = cfg();
+        let qa = ActBits { front: 4, back: 8 };
+        let hd = 128u64;
+        let w = 10u64;
+        let split = 20usize;
+        let expect_bits = 2 * w * hd * 4 * 20      // front: T_w at Qa1
+            + 2 * (w - 1) * hd * 8 * 12            // back: T_{w-1} at Qa2
+            + hd * 4; // transient hidden at split layer (front bits)
+        assert_eq!(kv_bits(&c, 10, split, &qa), expect_bits);
+    }
+
+    #[test]
+    fn io_without_kv_much_smaller() {
+        let c = cfg();
+        let qa = ActBits::uniform(8);
+        let with = io_bytes(&c, 50, 20, true, &qa);
+        let without = io_bytes(&c, 50, 20, false, &qa);
+        assert!(without < with / 10, "{without} vs {with}");
+    }
+
+    #[test]
+    fn io_hidden_only_is_tokens_times_width() {
+        let c = cfg();
+        let qa = ActBits::uniform(8);
+        assert_eq!(io_bytes(&c, 3, 20, false, &qa), 3 * 128); // 3*128*8bits/8
+    }
+
+    #[test]
+    fn psi_counts_per_layer_bits() {
+        let qa = ActBits { front: 4, back: 8 };
+        assert_eq!(qa.psi(32, 20), 20 * 4 + 12 * 8);
+        assert_eq!(ActBits::uniform(4).psi(32, 7), 128);
+    }
+
+    #[test]
+    fn edge_total_includes_kv_and_embedding() {
+        let c = cfg();
+        let qa = ActBits::uniform(8);
+        let t = edge_total_bytes(&c, 20, 4, 128, &qa);
+        assert_eq!(
+            t,
+            edge_weight_bytes(&c, 20, 4) + kv_bytes(&c, 128, 20, &qa)
+        );
+        assert!(t > edge_weight_bytes(&c, 20, 4));
+    }
+}

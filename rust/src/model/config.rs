@@ -1,0 +1,179 @@
+//! Model configurations.
+//!
+//! A `ModelConfig` names a *shape class* (tensor dims, which select the AOT
+//! artifact set) plus a layer count. Several architectures share one shape
+//! class and differ only in depth — the Rust layer loop is the only place
+//! depth appears, so Table-6's cross-model sweep needs no extra artifacts.
+//!
+//! `sim7b`/`sim13b` mirror Llama-2 7B/13B in layer count (32/40) so the
+//! paper's split-point sweeps (ℓ ∈ 1..L) are faithful; widths are scaled
+//! down for CPU-PJRT speed (substitution documented in DESIGN.md §1).
+
+/// Shape class: selects which artifact directory the runtime loads.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ShapeClass {
+    Sim7b,
+    Sim13b,
+}
+
+impl ShapeClass {
+    pub fn dir_name(&self) -> &'static str {
+        match self {
+            ShapeClass::Sim7b => "sim7b",
+            ShapeClass::Sim13b => "sim13b",
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ModelConfig {
+    pub name: String,
+    pub shape_class: ShapeClass,
+    pub n_layers: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    pub d_ff: usize,
+    pub vocab: usize,
+    /// W̄: static KV-cache length (max tokens incl. prompt).
+    pub max_seq: usize,
+    /// P: static prefill width; prompts are padded to P.
+    pub prefill_len: usize,
+}
+
+impl ModelConfig {
+    pub fn kv_width(&self) -> usize {
+        self.n_heads * self.head_dim
+    }
+
+    /// Parameter count of one decoder layer (matches python model.py).
+    pub fn params_per_layer(&self) -> usize {
+        let d = self.d_model;
+        let f = self.d_ff;
+        4 * d * d       // wq wk wv wo
+            + 2 * d * f // w_gate w_up
+            + f * d     // w_down
+            + 2 * d // g1 g2
+    }
+
+    /// Parameters outside the decoder stack (embedding + final norm + head).
+    pub fn nonlayer_params(&self) -> usize {
+        self.vocab * self.d_model      // embedding
+            + self.d_model             // gf
+            + self.d_model * self.vocab // w_out
+    }
+
+    pub fn total_params(&self) -> usize {
+        self.n_layers * self.params_per_layer() + self.nonlayer_params()
+    }
+
+    fn sim7b_shapes(name: &str, n_layers: usize) -> ModelConfig {
+        ModelConfig {
+            name: name.to_string(),
+            shape_class: ShapeClass::Sim7b,
+            n_layers,
+            d_model: 128,
+            n_heads: 4,
+            head_dim: 32,
+            d_ff: 352,
+            vocab: 512,
+            max_seq: 128,
+            prefill_len: 64,
+        }
+    }
+
+    /// Llama-2-7B analog: 32 decoder layers (paper's primary model).
+    pub fn sim7b() -> ModelConfig {
+        Self::sim7b_shapes("sim7b", 32)
+    }
+
+    /// Llama-2-13B analog: 40 decoder layers.
+    pub fn sim13b() -> ModelConfig {
+        ModelConfig {
+            name: "sim13b".to_string(),
+            shape_class: ShapeClass::Sim13b,
+            n_layers: 40,
+            d_model: 160,
+            n_heads: 5,
+            head_dim: 32,
+            d_ff: 432,
+            vocab: 512,
+            max_seq: 128,
+            prefill_len: 64,
+        }
+    }
+
+    /// Table-6 cross-architecture analogs (share the sim7b shape class;
+    /// depth mirrors the real architecture's decoder-layer count).
+    pub fn sim_qwen14b() -> ModelConfig {
+        Self::sim7b_shapes("sim-qwen2.5-14b", 48)
+    }
+
+    pub fn sim_nemo12b() -> ModelConfig {
+        Self::sim7b_shapes("sim-mistral-nemo-12b", 40)
+    }
+
+    pub fn sim_llama8b() -> ModelConfig {
+        Self::sim7b_shapes("sim-llama-3.1-8b", 32)
+    }
+
+    pub fn sim_phi4() -> ModelConfig {
+        Self::sim7b_shapes("sim-phi-4", 40)
+    }
+
+    pub fn by_name(name: &str) -> Option<ModelConfig> {
+        match name {
+            "sim7b" => Some(Self::sim7b()),
+            "sim13b" => Some(Self::sim13b()),
+            "sim-qwen2.5-14b" | "qwen14b" => Some(Self::sim_qwen14b()),
+            "sim-mistral-nemo-12b" | "nemo12b" => Some(Self::sim_nemo12b()),
+            "sim-llama-3.1-8b" | "llama8b" => Some(Self::sim_llama8b()),
+            "sim-phi-4" | "phi4" => Some(Self::sim_phi4()),
+            _ => None,
+        }
+    }
+
+    pub fn all_names() -> &'static [&'static str] {
+        &["sim7b", "sim13b", "qwen14b", "nemo12b", "llama8b", "phi4"]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layer_counts_mirror_paper() {
+        assert_eq!(ModelConfig::sim7b().n_layers, 32);
+        assert_eq!(ModelConfig::sim13b().n_layers, 40);
+        assert_eq!(ModelConfig::sim_qwen14b().n_layers, 48);
+    }
+
+    #[test]
+    fn d_model_is_heads_times_dim() {
+        for name in ModelConfig::all_names() {
+            let c = ModelConfig::by_name(name).unwrap();
+            assert_eq!(c.d_model, c.n_heads * c.head_dim, "{name}");
+            assert!(c.max_seq >= c.prefill_len);
+        }
+    }
+
+    #[test]
+    fn param_count_matches_manual() {
+        let c = ModelConfig::sim7b();
+        let d = 128;
+        let f = 352;
+        let expect = 4 * d * d + 2 * d * f + f * d + 2 * d;
+        assert_eq!(c.params_per_layer(), expect);
+        assert_eq!(
+            c.total_params(),
+            32 * expect + 512 * d + d + d * 512
+        );
+    }
+
+    #[test]
+    fn by_name_round_trips() {
+        assert!(ModelConfig::by_name("sim7b").is_some());
+        assert!(ModelConfig::by_name("nope").is_none());
+    }
+}

@@ -1,0 +1,7 @@
+//! Model definitions: shape-class configs and synthetic weights.
+
+pub mod config;
+pub mod weights;
+
+pub use config::{ModelConfig, ShapeClass};
+pub use weights::{LayerWeights, ModelWeights};

@@ -1,0 +1,238 @@
+//! Unified configuration search, paper Eq. (8).
+//!
+//! Enumerate split point ℓ_w, weight precisions Q^w = {Qw1, Qw2} and
+//! activation precisions Q^a = {Qa1, Qa2} over their discrete sets; keep
+//! the candidates that satisfy the accuracy bound (8b) and the edge memory
+//! budget (8c) at the fixed maximum token count W̄; return the one
+//! maximizing total activation precision Ψ(Q^a) = Σ_k Q_{a,k}.
+//!
+//! The accuracy constraint is pluggable: the default `AnalyticAccuracyModel`
+//! predicts the drop from per-layer precision penalties (calibrated against
+//! this repo's own Table-2/3 runs); `eval`-driven models can be swapped in
+//! where a real measurement per candidate is affordable.
+
+use crate::memory::{self, ActBits};
+use crate::model::ModelConfig;
+use crate::quant::OpscConfig;
+
+/// Predicted accuracy drop (percentage points) for a candidate config.
+pub trait AccuracyModel {
+    fn predicted_drop(&self, cfg: &ModelConfig, opsc: &OpscConfig, qa: &ActBits) -> f64;
+}
+
+/// Analytic proxy: each quantized layer contributes a per-bit penalty,
+/// with back-segment layers weighted heavier (paper Table 4 observes the
+/// final layers are the most precision-sensitive), plus an activation
+/// penalty dominated by the narrower of the two segments.
+pub struct AnalyticAccuracyModel;
+
+fn weight_penalty(bits: u32) -> f64 {
+    match bits {
+        0..=2 => 2.5,
+        3 => 0.35,
+        4 => 0.045,
+        5..=8 => 0.008,
+        _ => 0.0,
+    }
+}
+
+fn act_penalty(bits: u32) -> f64 {
+    match bits {
+        0..=2 => 6.0,
+        3 => 1.1,
+        4 => 0.25,
+        5..=8 => 0.03,
+        _ => 0.0,
+    }
+}
+
+impl AccuracyModel for AnalyticAccuracyModel {
+    fn predicted_drop(&self, cfg: &ModelConfig, opsc: &OpscConfig, qa: &ActBits) -> f64 {
+        let l = cfg.n_layers as f64;
+        let front = opsc.split_layer as f64;
+        let back = l - front;
+        // back layers ~2x more sensitive (Table 4: back-end method worse)
+        let w_drop = front * weight_penalty(opsc.qw_front)
+            + 2.0 * back * weight_penalty(opsc.qw_back);
+        let a_drop = front / l * act_penalty(qa.front) * l / 8.0
+            + 2.0 * back / l * act_penalty(qa.back) * l / 8.0;
+        w_drop + a_drop
+    }
+}
+
+/// Planner inputs: model, budgets and candidate sets.
+#[derive(Clone, Debug)]
+pub struct PlanInputs {
+    pub cfg: ModelConfig,
+    /// Edge memory budget M in bytes (Eq. 8c right side).
+    pub mem_budget_bytes: u64,
+    /// W̄: maximum token count the edge must accommodate.
+    pub w_bar: usize,
+    /// A_Δ: acceptable accuracy drop in percentage points (Eq. 8b).
+    pub acc_tolerance: f64,
+    pub split_candidates: Vec<usize>,
+    pub qw_candidates: Vec<u32>,
+    pub qa_candidates: Vec<u32>,
+}
+
+impl PlanInputs {
+    pub fn defaults(cfg: ModelConfig, mem_budget_bytes: u64, w_bar: usize) -> PlanInputs {
+        let splits = (1..=cfg.n_layers).collect();
+        PlanInputs {
+            cfg,
+            mem_budget_bytes,
+            w_bar,
+            acc_tolerance: 1.0, // paper default A_Δ = 1%
+            split_candidates: splits,
+            qw_candidates: vec![4, 8, 16],
+            qa_candidates: vec![2, 3, 4, 8, 16],
+        }
+    }
+}
+
+/// A feasible configuration with its scores.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PlanChoice {
+    pub opsc: OpscConfig,
+    pub qa: ActBits,
+    /// Ψ(Q^a) — the maximized objective.
+    pub psi: u64,
+    /// Eq. 8c left side at W̄.
+    pub edge_bytes: u64,
+    pub predicted_drop: f64,
+}
+
+/// Solve Eq. (8) by exhaustive enumeration over the candidate sets
+/// (the sets are discrete and small — the paper's own solution approach).
+/// Ties on Ψ prefer larger split (maximize edge utilization), then lower
+/// memory.
+pub fn plan(inputs: &PlanInputs, acc: &dyn AccuracyModel) -> Option<PlanChoice> {
+    let mut best: Option<PlanChoice> = None;
+    for &split in &inputs.split_candidates {
+        if split == 0 || split > inputs.cfg.n_layers {
+            continue;
+        }
+        for &qw_front in &inputs.qw_candidates {
+            // The cloud keeps the back segment at full precision (paper
+            // §2.1: the server maintains a single high-precision model);
+            // Qw2 only matters if the edge caches back layers, which this
+            // deployment does not. Fixed to 16.
+            let opsc = OpscConfig::new(split, qw_front, 16);
+            for &qa_front in &inputs.qa_candidates {
+                for &qa_back in &inputs.qa_candidates {
+                    let qa = ActBits { front: qa_front, back: qa_back };
+                    let drop = acc.predicted_drop(&inputs.cfg, &opsc, &qa);
+                    if drop > inputs.acc_tolerance {
+                        continue; // violates (8b)
+                    }
+                    let edge_bytes = memory::edge_total_bytes(
+                        &inputs.cfg,
+                        split,
+                        qw_front,
+                        inputs.w_bar,
+                        &qa,
+                    );
+                    if edge_bytes > inputs.mem_budget_bytes {
+                        continue; // violates (8c)
+                    }
+                    let psi = qa.psi(inputs.cfg.n_layers, split);
+                    let cand = PlanChoice { opsc, qa, psi, edge_bytes, predicted_drop: drop };
+                    let better = match &best {
+                        None => true,
+                        Some(b) => {
+                            (cand.psi, cand.opsc.split_layer, std::cmp::Reverse(cand.edge_bytes))
+                                > (b.psi, b.opsc.split_layer, std::cmp::Reverse(b.edge_bytes))
+                        }
+                    };
+                    if better {
+                        best = Some(cand);
+                    }
+                }
+            }
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn inputs(budget_mb: u64) -> PlanInputs {
+        PlanInputs::defaults(ModelConfig::sim7b(), budget_mb * 1024 * 1024, 128)
+    }
+
+    #[test]
+    fn feasible_plan_respects_constraints() {
+        let inp = inputs(16);
+        let p = plan(&inp, &AnalyticAccuracyModel).expect("feasible");
+        assert!(p.edge_bytes <= inp.mem_budget_bytes);
+        assert!(p.predicted_drop <= inp.acc_tolerance);
+        assert!(p.opsc.split_layer >= 1);
+    }
+
+    #[test]
+    fn tighter_memory_lowers_psi_or_split() {
+        let rich = plan(&inputs(64), &AnalyticAccuracyModel).unwrap();
+        let poor = plan(&inputs(2), &AnalyticAccuracyModel).unwrap();
+        assert!(
+            poor.psi <= rich.psi,
+            "poor {:?} rich {:?}",
+            poor,
+            rich
+        );
+        assert!(poor.edge_bytes < rich.edge_bytes);
+    }
+
+    #[test]
+    fn infeasible_budget_returns_none() {
+        let p = plan(&inputs(0), &AnalyticAccuracyModel);
+        assert!(p.is_none());
+    }
+
+    #[test]
+    fn impossible_accuracy_returns_none() {
+        let mut inp = inputs(64);
+        inp.acc_tolerance = -1.0;
+        assert!(plan(&inp, &AnalyticAccuracyModel).is_none());
+    }
+
+    #[test]
+    fn psi_is_maximized_among_feasible() {
+        // brute-force check on a reduced candidate set
+        let mut inp = inputs(8);
+        inp.split_candidates = vec![5, 10, 20];
+        inp.qw_candidates = vec![4, 8];
+        inp.qa_candidates = vec![3, 4, 8];
+        let best = plan(&inp, &AnalyticAccuracyModel).unwrap();
+        for &s in &inp.split_candidates {
+            for &qw in &inp.qw_candidates {
+                for &qf in &inp.qa_candidates {
+                    for &qb in &inp.qa_candidates {
+                        let qa = ActBits { front: qf, back: qb };
+                        let opsc = OpscConfig::new(s, qw, 16);
+                        let drop =
+                            AnalyticAccuracyModel.predicted_drop(&inp.cfg, &opsc, &qa);
+                        let mem = crate::memory::edge_total_bytes(&inp.cfg, s, qw, 128, &qa);
+                        if drop <= inp.acc_tolerance && mem <= inp.mem_budget_bytes {
+                            assert!(
+                                qa.psi(inp.cfg.n_layers, s) <= best.psi,
+                                "missed better candidate"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn analytic_model_monotone_in_bits() {
+        let cfg = ModelConfig::sim7b();
+        let m = AnalyticAccuracyModel;
+        let d4 = m.predicted_drop(&cfg, &OpscConfig::new(20, 4, 16), &ActBits::uniform(4));
+        let d8 = m.predicted_drop(&cfg, &OpscConfig::new(20, 8, 16), &ActBits::uniform(8));
+        let d3 = m.predicted_drop(&cfg, &OpscConfig::new(20, 4, 16), &ActBits::uniform(3));
+        assert!(d8 < d4 && d4 < d3);
+    }
+}

@@ -1,0 +1,241 @@
+//! Early-exit strategy under delay constraints, paper Algorithm 2.
+//!
+//! At each decode step the controller estimates the total latency
+//! L_t = L_c(w) + L_ε(B_io; R*) (Eq. 11) and, when the deadline D would be
+//! violated, walks the paper's escalation ladder:
+//!
+//!   1. recompress the intermediate output harder (TAB-Q at fewer bits),
+//!   2. drop the KV-cache transmission (I_kv ← 0, hidden state only),
+//!   3. reduce the token budget w (generate less).
+//!
+//! The controller is pure decision logic over *measured* compute time and
+//! *actual* payload sizes — the coordinator feeds it real numbers from the
+//! compression pipeline and the link simulator.
+
+use crate::channel::outage::{worst_case_latency, ChannelParams};
+
+/// Latency estimator for Eq. (11): measured local compute + ε-outage
+/// worst-case communication at the operating rate.
+#[derive(Clone, Copy, Debug)]
+pub struct LatencyModel {
+    pub channel: ChannelParams,
+    pub rate_bps: f64,
+}
+
+impl LatencyModel {
+    pub fn total_latency_s(&self, compute_s: f64, payload_bytes: u64) -> f64 {
+        compute_s + worst_case_latency(&self.channel, payload_bytes * 8, self.rate_bps)
+    }
+}
+
+/// Current transmission settings of a request (mutated by escalations).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TxSettings {
+    /// Activation bit budget Q̄a handed to TAB-Q.
+    pub qa_bits: u32,
+    /// I_kv: whether the KV cache travels with the hidden state.
+    pub include_kv: bool,
+}
+
+/// Outcome of one early-exit evaluation.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ExitDecision {
+    /// Latency fits — transmit as configured.
+    Proceed { latency_s: f64 },
+    /// Escalated settings fit — transmit with these settings.
+    Escalate { settings: TxSettings, latency_s: f64 },
+    /// Even the cheapest payload misses the deadline — stop generating
+    /// (early exit) after `tokens_to_drop` fewer tokens.
+    ReduceTokens { tokens_to_drop: usize, latency_s: f64 },
+}
+
+/// Payload oracle: the coordinator supplies the *actual* wire size for a
+/// given (settings) pair — compression results, not estimates.
+pub trait PayloadOracle {
+    fn payload_bytes(&self, settings: TxSettings) -> u64;
+}
+
+impl<F: Fn(TxSettings) -> u64> PayloadOracle for F {
+    fn payload_bytes(&self, settings: TxSettings) -> u64 {
+        self(settings)
+    }
+}
+
+/// Algorithm 2 controller.
+#[derive(Clone, Copy, Debug)]
+pub struct EarlyExitController {
+    pub deadline_s: f64,
+    pub model: LatencyModel,
+    /// Minimum activation bits TAB-Q may be pushed to (paper floor: 2).
+    pub min_qa_bits: u32,
+    /// Seconds of communication latency freed per dropped token (measured
+    /// per-token payload share; used to size the token reduction).
+    pub per_token_payload_bytes: u64,
+}
+
+impl EarlyExitController {
+    /// Evaluate one transmission (Alg. 2 lines 8-27).
+    pub fn decide(
+        &self,
+        compute_s: f64,
+        start: TxSettings,
+        payload: &dyn PayloadOracle,
+    ) -> ExitDecision {
+        let lat = |s: TxSettings| self.model.total_latency_s(compute_s, payload.payload_bytes(s));
+        let l0 = lat(start);
+        if l0 <= self.deadline_s {
+            return ExitDecision::Proceed { latency_s: l0 };
+        }
+        // Ladder step 1: recompress harder (lines 10-14).
+        let mut s = start;
+        while s.qa_bits > self.min_qa_bits {
+            s.qa_bits -= 1;
+            let l = lat(s);
+            if l <= self.deadline_s {
+                return ExitDecision::Escalate { settings: s, latency_s: l };
+            }
+        }
+        // Ladder step 2: drop the KV transmission (lines 15-18).
+        if s.include_kv {
+            s.include_kv = false;
+            s.qa_bits = start.qa_bits; // re-try from the configured bits
+            let l = lat(s);
+            if l <= self.deadline_s {
+                return ExitDecision::Escalate { settings: s, latency_s: l };
+            }
+            while s.qa_bits > self.min_qa_bits {
+                s.qa_bits -= 1;
+                let l = lat(s);
+                if l <= self.deadline_s {
+                    return ExitDecision::Escalate { settings: s, latency_s: l };
+                }
+            }
+        }
+        // Ladder step 3: reduce tokens (lines 19-24) — size the cut from
+        // the per-token payload share.
+        let l_min = lat(s);
+        let over_s = l_min - self.deadline_s;
+        let per_token_s = self.model.total_latency_s(0.0, self.per_token_payload_bytes);
+        let drop = if per_token_s > 0.0 {
+            (over_s / per_token_s).ceil() as usize
+        } else {
+            1
+        };
+        ExitDecision::ReduceTokens { tokens_to_drop: drop.max(1), latency_s: l_min }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model() -> LatencyModel {
+        LatencyModel { channel: ChannelParams::default(), rate_bps: 8e6 }
+    }
+
+    /// Payload model: KV costs 20x the hidden state; size scales with bits.
+    fn oracle(base: u64) -> impl Fn(TxSettings) -> u64 {
+        move |s: TxSettings| {
+            let per_bits = base * s.qa_bits as u64 / 8;
+            if s.include_kv {
+                per_bits * 20
+            } else {
+                per_bits
+            }
+        }
+    }
+
+    fn controller(deadline_s: f64) -> EarlyExitController {
+        EarlyExitController {
+            deadline_s,
+            model: model(),
+            min_qa_bits: 2,
+            per_token_payload_bytes: 256,
+        }
+    }
+
+    #[test]
+    fn generous_deadline_proceeds() {
+        let c = controller(10.0);
+        let d = c.decide(0.001, TxSettings { qa_bits: 8, include_kv: true }, &oracle(1024));
+        assert!(matches!(d, ExitDecision::Proceed { .. }));
+    }
+
+    #[test]
+    fn moderate_deadline_recompresses_first() {
+        // deadline fails at 8 bits with KV but passes at ~3 bits with KV
+        let c = controller(0.100);
+        let start = TxSettings { qa_bits: 8, include_kv: true };
+        let d = c.decide(0.001, start, &oracle(4096));
+        match d {
+            ExitDecision::Escalate { settings, latency_s } => {
+                assert!(settings.qa_bits < 8, "must reduce bits, got {settings:?}");
+                assert!(settings.include_kv, "KV should survive mild pressure");
+                assert!(latency_s <= c.deadline_s);
+            }
+            other => panic!("expected Escalate, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn tight_deadline_drops_kv() {
+        let c = controller(0.012);
+        let start = TxSettings { qa_bits: 8, include_kv: true };
+        let d = c.decide(0.001, start, &oracle(4096));
+        match d {
+            ExitDecision::Escalate { settings, latency_s } => {
+                assert!(!settings.include_kv, "KV must be dropped: {settings:?}");
+                assert!(latency_s <= c.deadline_s);
+            }
+            other => panic!("expected Escalate(no-kv), got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn impossible_deadline_reduces_tokens() {
+        let c = controller(1e-7);
+        let start = TxSettings { qa_bits: 8, include_kv: true };
+        let d = c.decide(0.001, start, &oracle(4096));
+        match d {
+            ExitDecision::ReduceTokens { tokens_to_drop, .. } => assert!(tokens_to_drop >= 1),
+            other => panic!("expected ReduceTokens, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn decision_latency_is_consistent_with_model() {
+        let c = controller(0.100);
+        let start = TxSettings { qa_bits: 8, include_kv: true };
+        let orc = oracle(4096);
+        if let ExitDecision::Escalate { settings, latency_s } = c.decide(0.001, start, &orc) {
+            let recomputed = c.model.total_latency_s(0.001, orc(settings));
+            assert!((recomputed - latency_s).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn ladder_monotone_under_shrinking_deadline() {
+        // As the deadline shrinks the controller must never *increase*
+        // the payload: Proceed -> Escalate(bits) -> Escalate(no-kv) ->
+        // ReduceTokens, in that order.
+        let start = TxSettings { qa_bits: 8, include_kv: true };
+        let orc = oracle(4096);
+        let mut rank_prev = -1i32;
+        for deadline in [5.0, 0.2, 0.100, 0.012, 0.004, 1e-6] {
+            let c = controller(deadline);
+            let rank = match c.decide(0.001, start, &orc) {
+                ExitDecision::Proceed { .. } => 0,
+                ExitDecision::Escalate { settings, .. } => {
+                    if settings.include_kv {
+                        1
+                    } else {
+                        2
+                    }
+                }
+                ExitDecision::ReduceTokens { .. } => 3,
+            };
+            assert!(rank >= rank_prev, "ladder regressed at deadline {deadline}");
+            rank_prev = rank;
+        }
+    }
+}

@@ -1,0 +1,8 @@
+//! Unified optimization: Eq. (8) configuration search and the Algorithm-2
+//! early-exit controller.
+
+pub mod config_search;
+pub mod early_exit;
+
+pub use config_search::{plan, AccuracyModel, AnalyticAccuracyModel, PlanChoice, PlanInputs};
+pub use early_exit::{EarlyExitController, ExitDecision, LatencyModel, TxSettings};

@@ -1,0 +1,266 @@
+//! Asymmetric integer quantization (AIQ), paper Eq. (5)-(7).
+//!
+//! `q = round(t/s + z)` with `s = (Tmax-Tmin)/Qmax`, dequantized as
+//! `(q - z) * s` (Eq. 7). `Qmax = 2^(Q-1) - 1` per Eq. (6).
+//!
+//! Deviation from the paper as written (mirrored in python ref.py): Eq. (6)'s
+//! integer zero-point `z = ceil(Tmin/s)` pushes codes outside `[0, Qmax]`
+//! whenever `Tmin > 0`, so any clamped implementation distorts the top of
+//! the range by up to `Tmin/s` quanta. We use the exact float zero-point
+//! `z = -Tmin/s`, which maps `[Tmin, Tmax]` onto `[0, Qmax]` and preserves
+//! both Eq. (7) and the s/2 rounding bound.
+//!
+//! Also here: bit-packing of code streams (payload accounting is bit-exact)
+//! and per-channel fake-quant used by OPSC and the weight-quant baselines.
+
+/// Paper Eq. (6): Q_max = 2^(Q-1) - 1. Valid for 1 <= bits <= 16;
+/// bits = 1 is special-cased to 1 (two levels) — the paper's formula
+/// degenerates to 0 there, but Fig. 6's Q̄a = 2 sweep (1 sign + 1
+/// magnitude bit) needs a usable 1-bit quantizer.
+#[inline]
+pub fn qmax(bits: u32) -> u32 {
+    debug_assert!((1..=16).contains(&bits));
+    if bits == 1 {
+        1
+    } else {
+        (1u32 << (bits - 1)) - 1
+    }
+}
+
+/// Per-tensor AIQ parameters.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct QuantParams {
+    pub scale: f32,
+    pub zero: f32,
+    pub bits: u32,
+}
+
+/// Compute (scale, zero) for a min/max range at `bits`.
+#[inline]
+pub fn params_for_range(tmin: f32, tmax: f32, bits: u32) -> QuantParams {
+    let qm = qmax(bits) as f32;
+    let mut s = (tmax - tmin) / qm;
+    if !(s > 0.0) {
+        s = 1.0; // degenerate (constant) tensor: exact roundtrip via zero
+    }
+    QuantParams { scale: s, zero: -tmin / s, bits }
+}
+
+#[inline]
+pub fn quantize_one(t: f32, p: &QuantParams) -> u16 {
+    let qm = qmax(p.bits) as f32;
+    let q = (t / p.scale + p.zero).round();
+    q.clamp(0.0, qm) as u16
+}
+
+#[inline]
+pub fn dequantize_one(q: u16, p: &QuantParams) -> f32 {
+    (q as f32 - p.zero) * p.scale
+}
+
+/// Quantize a whole tensor with one (scale, zero) pair.
+pub fn quantize(t: &[f32], bits: u32) -> (Vec<u16>, QuantParams) {
+    let (mut tmin, mut tmax) = (f32::INFINITY, f32::NEG_INFINITY);
+    for &x in t {
+        tmin = tmin.min(x);
+        tmax = tmax.max(x);
+    }
+    if t.is_empty() {
+        return (vec![], QuantParams { scale: 1.0, zero: 0.0, bits });
+    }
+    let p = params_for_range(tmin, tmax, bits);
+    (t.iter().map(|&x| quantize_one(x, &p)).collect(), p)
+}
+
+pub fn dequantize(q: &[u16], p: &QuantParams) -> Vec<f32> {
+    q.iter().map(|&c| dequantize_one(c, p)).collect()
+}
+
+/// In-place fake-quant (quantize-dequantize) of a tensor at `bits`.
+/// `bits >= 16` is treated as full precision (no-op), matching how the
+/// paper treats FP16 segments.
+pub fn fake_quant(t: &mut [f32], bits: u32) {
+    if bits >= 16 || t.is_empty() {
+        return;
+    }
+    let (codes, p) = quantize(t, bits);
+    for (x, c) in t.iter_mut().zip(codes) {
+        *x = dequantize_one(c, &p);
+    }
+}
+
+/// Per-output-channel fake-quant of a (rows x cols) row-major matrix:
+/// every column gets its own (scale, zero). This is the weight-quant
+/// granularity OPSC uses (see quant::opsc).
+pub fn fake_quant_per_channel(w: &mut [f32], rows: usize, cols: usize, bits: u32) {
+    assert_eq!(w.len(), rows * cols);
+    if bits >= 16 {
+        return;
+    }
+    for c in 0..cols {
+        let (mut tmin, mut tmax) = (f32::INFINITY, f32::NEG_INFINITY);
+        for r in 0..rows {
+            let x = w[r * cols + c];
+            tmin = tmin.min(x);
+            tmax = tmax.max(x);
+        }
+        let p = params_for_range(tmin, tmax, bits);
+        for r in 0..rows {
+            let x = &mut w[r * cols + c];
+            *x = dequantize_one(quantize_one(*x, &p), &p);
+        }
+    }
+}
+
+/// Pack a code stream at `bits` per code into bytes, LSB-first.
+pub fn pack_codes(codes: &[u16], bits: u32) -> Vec<u8> {
+    assert!((1..=16).contains(&bits));
+    let total_bits = codes.len() as u64 * bits as u64;
+    let mut out = vec![0u8; total_bits.div_ceil(8) as usize];
+    let mut bitpos = 0u64;
+    for &c in codes {
+        debug_assert!(bits == 16 || (c as u32) < (1u32 << bits), "code {c} overflows {bits} bits");
+        let mut v = c as u32;
+        let mut left = bits;
+        while left > 0 {
+            let byte = (bitpos / 8) as usize;
+            let off = (bitpos % 8) as u32;
+            let take = (8 - off).min(left);
+            out[byte] |= ((v & ((1u32 << take) - 1)) as u8) << off;
+            v >>= take;
+            left -= take;
+            bitpos += take as u64;
+        }
+    }
+    out
+}
+
+/// Inverse of `pack_codes`.
+pub fn unpack_codes(bytes: &[u8], bits: u32, n: usize) -> Vec<u16> {
+    assert!((1..=16).contains(&bits));
+    let mut out = Vec::with_capacity(n);
+    let mut bitpos = 0u64;
+    for _ in 0..n {
+        let mut v = 0u32;
+        let mut got = 0u32;
+        while got < bits {
+            let byte = (bitpos / 8) as usize;
+            let off = (bitpos % 8) as u32;
+            let take = (8 - off).min(bits - got);
+            let chunk = ((bytes[byte] >> off) as u32) & ((1u32 << take) - 1);
+            v |= chunk << got;
+            got += take;
+            bitpos += take as u64;
+        }
+        out.push(v as u16);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::run_cases;
+
+    #[test]
+    fn qmax_matches_eq6() {
+        assert_eq!(qmax(2), 1);
+        assert_eq!(qmax(3), 3);
+        assert_eq!(qmax(4), 7);
+        assert_eq!(qmax(8), 127);
+    }
+
+    #[test]
+    fn roundtrip_error_bounded_by_half_scale() {
+        run_cases(200, 0xA1, |_, rng| {
+            let bits = 2 + (rng.below(7) as u32); // 2..8
+            let n = 1 + rng.below(256);
+            let scale = [0.01, 1.0, 50.0][rng.below(3)];
+            let t: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, scale)).collect();
+            let (q, p) = quantize(&t, bits);
+            let back = dequantize(&q, &p);
+            for (a, b) in t.iter().zip(&back) {
+                assert!(
+                    (a - b).abs() <= p.scale * 0.5 + 1e-4 * scale,
+                    "err {} scale {}",
+                    (a - b).abs(),
+                    p.scale
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn codes_within_budget() {
+        run_cases(100, 0xA2, |_, rng| {
+            let bits = 2 + (rng.below(7) as u32);
+            let t: Vec<f32> = (0..64).map(|_| rng.normal_f32(0.0, 3.0)).collect();
+            let (q, _) = quantize(&t, bits);
+            assert!(q.iter().all(|&c| (c as u32) <= qmax(bits)));
+        });
+    }
+
+    #[test]
+    fn constant_tensor_exact() {
+        let t = vec![2.5f32; 32];
+        let (q, p) = quantize(&t, 4);
+        let back = dequantize(&q, &p);
+        for b in back {
+            assert!((b - 2.5).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn fake_quant_16_bits_is_noop() {
+        let t0: Vec<f32> = (0..16).map(|i| i as f32 * 0.37).collect();
+        let mut t = t0.clone();
+        fake_quant(&mut t, 16);
+        assert_eq!(t, t0);
+    }
+
+    #[test]
+    fn per_channel_beats_per_tensor_on_skewed_columns() {
+        // col 0 in [0, 1e-2], col 1 in [0, 100]: per-channel must be
+        // dramatically more accurate on col 0.
+        let rows = 64;
+        let mut w = vec![0f32; rows * 2];
+        let mut w2 = w.clone();
+        for r in 0..rows {
+            let a = (r as f32 / rows as f32) * 1e-2;
+            let b = (r as f32 / rows as f32) * 100.0;
+            w[r * 2] = a;
+            w[r * 2 + 1] = b;
+            w2[r * 2] = a;
+            w2[r * 2 + 1] = b;
+        }
+        let orig = w.clone();
+        fake_quant_per_channel(&mut w, rows, 2, 4);
+        fake_quant(&mut w2, 4);
+        let err = |x: &[f32]| -> f32 {
+            (0..rows).map(|r| (x[r * 2] - orig[r * 2]).abs()).sum()
+        };
+        assert!(err(&w) < err(&w2) / 5.0, "{} vs {}", err(&w), err(&w2));
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        run_cases(200, 0xA3, |_, rng| {
+            let bits = 1 + (rng.below(16) as u32);
+            let n = rng.below(300);
+            let codes: Vec<u16> = (0..n)
+                .map(|_| (rng.next_u64() & ((1u64 << bits) - 1)) as u16)
+                .collect();
+            let bytes = pack_codes(&codes, bits);
+            assert_eq!(bytes.len() as u64, (n as u64 * bits as u64).div_ceil(8));
+            assert_eq!(unpack_codes(&bytes, bits, n), codes);
+        });
+    }
+
+    #[test]
+    fn empty_tensor_ok() {
+        let (q, p) = quantize(&[], 4);
+        assert!(q.is_empty());
+        assert!(dequantize(&q, &p).is_empty());
+        assert!(pack_codes(&[], 4).is_empty());
+    }
+}

@@ -1,0 +1,201 @@
+//! SmoothQuant (E1) — Xiao et al., ICML 2023 — mechanism re-implementation.
+//!
+//! Core idea preserved: activation outliers are migrated into the weights
+//! via per-channel smoothing factors s_j = max|X_j|^alpha / max|W_j|^(1-alpha),
+//! then both sides are uniformly quantized. Quantizing W·diag(s) instead of
+//! W (and X·diag(1/s) instead of X) is what buys accuracy at W8A8 and loses
+//! it at aggressive W4A4/A3 — exactly the regime Table 3 probes.
+//!
+//! Simplification (DESIGN.md §3.4): smoothing + fake-quant is applied in the
+//! smoothed basis and mapped back (W ← diag(1/s)·FQ(diag(s)·W)), and
+//! activation quantization is per-tensor at the residual stream, because the
+//! per-projection inputs live inside the AOT'd layer artifact.
+
+use crate::model::ModelWeights;
+
+use super::super::aiq;
+use super::{ActQuantMode, CalibStats, QuantMethod};
+
+pub struct SmoothQuant {
+    pub alpha: f32,
+    pub weight_bits: u32,
+    pub act_bits: u32,
+}
+
+impl SmoothQuant {
+    pub fn new(weight_bits: u32, act_bits: u32) -> Self {
+        SmoothQuant { alpha: 0.5, weight_bits, act_bits }
+    }
+}
+
+/// Smooth + fake-quant one (rows x cols) matrix whose *rows* are input
+/// channels: W'[j,:] = s_j * W[j,:], fake-quant per-tensor, then divide back.
+fn smooth_fq(w: &mut [f32], rows: usize, cols: usize, act_absmax: &[f32], alpha: f32, bits: u32) {
+    assert_eq!(w.len(), rows * cols);
+    assert_eq!(act_absmax.len(), rows);
+    // per-input-channel weight absmax
+    let mut w_absmax = vec![1e-8f32; rows];
+    for (r, wa) in w_absmax.iter_mut().enumerate() {
+        for c in 0..cols {
+            *wa = wa.max(w[r * cols + c].abs());
+        }
+    }
+    let s: Vec<f32> = (0..rows)
+        .map(|r| {
+            let a = act_absmax[r].max(1e-6).powf(alpha);
+            let b = w_absmax[r].powf(1.0 - alpha);
+            (a / b).clamp(1e-4, 1e4)
+        })
+        .collect();
+    for r in 0..rows {
+        for c in 0..cols {
+            w[r * cols + c] *= s[r];
+        }
+    }
+    aiq::fake_quant(w, bits);
+    for r in 0..rows {
+        for c in 0..cols {
+            w[r * cols + c] /= s[r];
+        }
+    }
+}
+
+impl QuantMethod for SmoothQuant {
+    fn name(&self) -> &'static str {
+        "SmoothQuant"
+    }
+
+    fn quantize_weights(&self, w: &mut ModelWeights, stats: &CalibStats) {
+        let d = w.cfg.d_model;
+        let f = w.cfg.d_ff;
+        for (li, lw) in w.layers.iter_mut().enumerate() {
+            let am = &stats.input_absmax[li.min(stats.input_absmax.len() - 1)];
+            // projections fed by the (normed) residual stream: rows = d
+            smooth_fq(&mut lw.wq, d, d, am, self.alpha, self.weight_bits);
+            smooth_fq(&mut lw.wk, d, d, am, self.alpha, self.weight_bits);
+            smooth_fq(&mut lw.wv, d, d, am, self.alpha, self.weight_bits);
+            smooth_fq(&mut lw.w_gate, d, f, am, self.alpha, self.weight_bits);
+            smooth_fq(&mut lw.w_up, d, f, am, self.alpha, self.weight_bits);
+            // wo and w_down see internal activations we have no calibration
+            // for; SmoothQuant leaves those per-tensor quantized.
+            aiq::fake_quant(&mut lw.wo, self.weight_bits);
+            aiq::fake_quant(&mut lw.w_down, self.weight_bits);
+        }
+    }
+
+    fn act_mode(&self) -> ActQuantMode {
+        ActQuantMode::PerTensor { bits: self.act_bits }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelConfig;
+
+    fn model() -> ModelWeights {
+        let mut cfg = ModelConfig::sim7b();
+        cfg.n_layers = 2;
+        ModelWeights::synthetic(&cfg, 5)
+    }
+
+    #[test]
+    fn smoothing_helps_under_skewed_activations() {
+        // SmoothQuant's claim is about the *joint* W+A quantization error
+        // of y = x @ W when x has outlier channels: migrate the outlier
+        // into W, quantize both, and the matmul output error drops.
+        let d = 64;
+        let cols = 32;
+        let n_rows = 16;
+        let mut rng = crate::util::rng::Rng::new(1);
+        let mut w = vec![0f32; d * cols];
+        rng.fill_normal(&mut w, 0.1);
+        let mut x = vec![0f32; n_rows * d];
+        rng.fill_normal(&mut x, 1.0);
+        for r in 0..n_rows {
+            x[r * d + 3] *= 500.0; // huge activation channel
+        }
+        let act_absmax: Vec<f32> = (0..d)
+            .map(|c| (0..n_rows).fold(0f32, |m, r| m.max(x[r * d + c].abs())))
+            .collect();
+        let matmul = |x: &[f32], w: &[f32]| -> Vec<f32> {
+            let mut y = vec![0f32; n_rows * cols];
+            for r in 0..n_rows {
+                for k in 0..d {
+                    let xv = x[r * d + k];
+                    for c in 0..cols {
+                        y[r * cols + c] += xv * w[k * cols + c];
+                    }
+                }
+            }
+            y
+        };
+        let y_ref = matmul(&x, &w);
+
+        // naive: quantize x per-tensor @ 8b, w per-tensor @ 8b
+        let mut xq = x.clone();
+        aiq::fake_quant(&mut xq, 8);
+        let mut wq = w.clone();
+        aiq::fake_quant(&mut wq, 8);
+        let y_naive = matmul(&xq, &wq);
+
+        // smoothed: x/s and s*w, both quantized @ 8b
+        let alpha = 0.5f32;
+        let mut w_absmax = vec![1e-8f32; d];
+        for (r, wa) in w_absmax.iter_mut().enumerate() {
+            for c in 0..cols {
+                *wa = wa.max(w[r * cols + c].abs());
+            }
+        }
+        let s: Vec<f32> = (0..d)
+            .map(|r| {
+                (act_absmax[r].max(1e-6).powf(alpha) / w_absmax[r].powf(1.0 - alpha))
+                    .clamp(1e-4, 1e4)
+            })
+            .collect();
+        let mut xs = x.clone();
+        for r in 0..n_rows {
+            for k in 0..d {
+                xs[r * d + k] /= s[k];
+            }
+        }
+        let mut ws = w.clone();
+        for r in 0..d {
+            for c in 0..cols {
+                ws[r * cols + c] *= s[r];
+            }
+        }
+        aiq::fake_quant(&mut xs, 8);
+        aiq::fake_quant(&mut ws, 8);
+        let y_smooth = matmul(&xs, &ws);
+
+        let mse = |y: &[f32]| -> f64 {
+            y.iter().zip(&y_ref).map(|(a, b)| ((a - b) as f64).powi(2)).sum()
+        };
+        assert!(
+            mse(&y_smooth) < mse(&y_naive) / 2.0,
+            "{} vs {}",
+            mse(&y_smooth),
+            mse(&y_naive)
+        );
+    }
+
+    #[test]
+    fn quantize_weights_changes_all_matmuls() {
+        let mut w = model();
+        let orig = w.clone();
+        let st = CalibStats::from_weights(&w);
+        SmoothQuant::new(4, 4).quantize_weights(&mut w, &st);
+        assert_ne!(w.layers[0].wq, orig.layers[0].wq);
+        assert_ne!(w.layers[0].w_down, orig.layers[0].w_down);
+        assert_eq!(w.layers[0].g1, orig.layers[0].g1); // norms untouched
+    }
+
+    #[test]
+    fn act_mode_is_per_tensor() {
+        assert_eq!(
+            SmoothQuant::new(4, 3).act_mode(),
+            ActQuantMode::PerTensor { bits: 3 }
+        );
+    }
+}

@@ -1,0 +1,172 @@
+//! OPSC: one-point split compression (paper §2.1, Eq. 1).
+//!
+//! The model is partitioned at a single split point ℓ_w into a front
+//! segment (layers 1..=ℓ_w, resident on the edge device) and a back
+//! segment (the rest, resident on the cloud). Each segment gets its own
+//! weight precision Q^w = {Qw1, Qw2}; per-output-channel AIQ fake-quant is
+//! applied host-side before the weights are uploaded to PJRT, so one
+//! artifact set serves every (ℓ_w, Q^w) without re-lowering.
+//!
+//! `bits = 16` means "keep full precision" (the cloud typically runs the
+//! back segment unquantized; fp32 here stands in for the paper's fp16).
+
+use crate::model::{ModelConfig, ModelWeights};
+
+use super::baselines::atom::{groupwise_fq, weight_outlier_mask};
+
+/// A complete OPSC configuration: split point + per-segment weight bits.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct OpscConfig {
+    /// ℓ_w: number of layers in the (edge-resident) front segment.
+    pub split_layer: usize,
+    /// Qw1: weight bits for layers 1..=split_layer.
+    pub qw_front: u32,
+    /// Qw2: weight bits for layers split_layer+1..=L.
+    pub qw_back: u32,
+}
+
+impl OpscConfig {
+    pub fn new(split_layer: usize, qw_front: u32, qw_back: u32) -> Self {
+        OpscConfig { split_layer, qw_front, qw_back }
+    }
+
+    /// Weight bits for 0-indexed layer `li` under this config.
+    pub fn bits_for_layer(&self, li: usize) -> u32 {
+        if li < self.split_layer {
+            self.qw_front
+        } else {
+            self.qw_back
+        }
+    }
+}
+
+/// OPSC builds on Atom's quantization scheme (paper footnote 7):
+/// group-wise low-bit quantization with weight-derived outlier rows kept
+/// at 8 bits — plain per-channel quant would destroy the outlier columns
+/// that carry the model's accuracy-critical activations.
+fn quant_layer_weights(lw: &mut crate::model::LayerWeights, cfg: &ModelConfig, bits: u32) {
+    if bits >= 16 {
+        return;
+    }
+    let d = cfg.d_model;
+    let f = cfg.d_ff;
+    let group = 32;
+    let dims: [(usize, usize); 7] =
+        [(d, d), (d, d), (d, d), (d, d), (d, f), (d, f), (f, d)];
+    for ((_, w), (rows, cols)) in lw.matmul_tensors_mut().into_iter().zip(dims) {
+        let mask = weight_outlier_mask(w, rows, cols, 40.0);
+        groupwise_fq(w, rows, cols, group, bits, &mask);
+    }
+}
+
+/// Apply OPSC fake-quant to a full model in place (norms untouched, as in
+/// every method of the paper's comparison).
+pub fn apply_opsc(weights: &mut ModelWeights, opsc: &OpscConfig) {
+    let cfg = weights.cfg.clone();
+    assert!(opsc.split_layer <= cfg.n_layers, "split beyond model depth");
+    for (li, lw) in weights.layers.iter_mut().enumerate() {
+        quant_layer_weights(lw, &cfg, opsc.bits_for_layer(li));
+    }
+}
+
+/// Quantize only a contiguous layer range [start, end) at `bits` — the
+/// "front-end method" / "back-end method" sweeps of paper Table 4.
+pub fn apply_segment_quant(weights: &mut ModelWeights, start: usize, end: usize, bits: u32) {
+    let cfg = weights.cfg.clone();
+    assert!(start <= end && end <= cfg.n_layers);
+    for lw in &mut weights.layers[start..end] {
+        quant_layer_weights(lw, &cfg, bits);
+    }
+}
+
+/// Same sweep with PLAIN per-channel quantization (no group-wise scales,
+/// no outlier protection) — the raw segment-sensitivity probe behind
+/// paper Table 4. The protected Atom-style scheme (above) masks most of
+/// the late-layer weight-outlier damage; the probe must not.
+pub fn apply_segment_quant_naive(weights: &mut ModelWeights, start: usize, end: usize, bits: u32) {
+    let cfg = weights.cfg.clone();
+    assert!(start <= end && end <= cfg.n_layers);
+    if bits >= 16 {
+        return;
+    }
+    let d = cfg.d_model;
+    let f = cfg.d_ff;
+    let dims: [(usize, usize); 7] = [(d, d), (d, d), (d, d), (d, d), (d, f), (d, f), (f, d)];
+    for lw in &mut weights.layers[start..end] {
+        for ((_, w), (rows, cols)) in lw.matmul_tensors_mut().into_iter().zip(dims) {
+            super::aiq::fake_quant_per_channel(w, rows, cols, bits);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelConfig;
+
+    fn small_model() -> ModelWeights {
+        let mut cfg = ModelConfig::sim7b();
+        cfg.n_layers = 4;
+        ModelWeights::synthetic(&cfg, 3)
+    }
+
+    #[test]
+    fn front_back_precisions_differ() {
+        let mut w = small_model();
+        let orig = w.clone();
+        apply_opsc(&mut w, &OpscConfig::new(2, 4, 16));
+        // front layers changed (4-bit fake-quant), back layers untouched
+        assert_ne!(w.layers[0].wq, orig.layers[0].wq);
+        assert_ne!(w.layers[1].wq, orig.layers[1].wq);
+        assert_eq!(w.layers[2].wq, orig.layers[2].wq);
+        assert_eq!(w.layers[3].wq, orig.layers[3].wq);
+        // norms never quantized
+        assert_eq!(w.layers[0].g1, orig.layers[0].g1);
+    }
+
+    #[test]
+    fn bits_for_layer_boundary() {
+        let c = OpscConfig::new(20, 4, 8);
+        assert_eq!(c.bits_for_layer(0), 4);
+        assert_eq!(c.bits_for_layer(19), 4);
+        assert_eq!(c.bits_for_layer(20), 8);
+    }
+
+    #[test]
+    fn quant_error_shrinks_with_bits() {
+        let w0 = small_model();
+        let err_at = |bits: u32| -> f64 {
+            let mut w = w0.clone();
+            apply_opsc(&mut w, &OpscConfig::new(4, bits, bits));
+            w.layers[0]
+                .wq
+                .iter()
+                .zip(&w0.layers[0].wq)
+                .map(|(a, b)| ((a - b) as f64).abs())
+                .sum()
+        };
+        let e3 = err_at(3);
+        let e4 = err_at(4);
+        let e8 = err_at(8);
+        assert!(e3 > e4 && e4 > e8, "e3={e3} e4={e4} e8={e8}");
+        assert!(err_at(16) == 0.0);
+    }
+
+    #[test]
+    fn segment_quant_targets_range() {
+        let mut w = small_model();
+        let orig = w.clone();
+        apply_segment_quant(&mut w, 1, 3, 4);
+        assert_eq!(w.layers[0].wq, orig.layers[0].wq);
+        assert_ne!(w.layers[1].wq, orig.layers[1].wq);
+        assert_ne!(w.layers[2].wq, orig.layers[2].wq);
+        assert_eq!(w.layers[3].wq, orig.layers[3].wq);
+    }
+
+    #[test]
+    #[should_panic]
+    fn split_beyond_depth_rejected() {
+        let mut w = small_model();
+        apply_opsc(&mut w, &OpscConfig::new(99, 4, 4));
+    }
+}

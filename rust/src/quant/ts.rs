@@ -1,0 +1,179 @@
+//! Threshold splitting (TS), paper Eq. (4) + CSR encoding.
+//!
+//! MHA accuracy hinges on a tiny fraction of huge activations (Fig. 4:
+//! ~0.0005% of values exceed 100 yet clamping them collapses accuracy).
+//! TS partitions the intermediate output `T` into `T_above` (|t| >= tau,
+//! kept lossless in CSR) and `T_below` (the rest, handed to TAB-Q).
+//!
+//! CSR layout follows the classic format: `row_ptr` (rows+1), `col_idx`
+//! (u16 — feature dims are < 65536), `values` (f32, lossless). The wire
+//! size therefore scales with sparsity, which is what makes transmitting
+//! the outliers nearly free at tau >= ~5 (paper Fig. 7).
+
+/// Sparse outlier tensor in CSR form.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SparseOutliers {
+    pub rows: usize,
+    pub cols: usize,
+    pub row_ptr: Vec<u32>,
+    pub col_idx: Vec<u16>,
+    pub values: Vec<f32>,
+}
+
+impl SparseOutliers {
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Bit-exact wire size: row_ptr + (col_idx, value) pairs + header.
+    pub fn payload_bytes(&self) -> u64 {
+        4 * (self.rows as u64 + 1)      // row_ptr u32
+            + 2 * self.nnz() as u64     // col_idx u16
+            + 4 * self.nnz() as u64     // values f32 (lossless)
+            + 4 // header: rows u16, cols u16
+    }
+
+    /// Scatter the outliers back into a dense row-major buffer (Eq. 7's
+    /// `+ T_above` term on the cloud side).
+    pub fn add_into(&self, dense: &mut [f32]) {
+        assert_eq!(dense.len(), self.rows * self.cols);
+        for r in 0..self.rows {
+            for i in self.row_ptr[r] as usize..self.row_ptr[r + 1] as usize {
+                dense[r * self.cols + self.col_idx[i] as usize] += self.values[i];
+            }
+        }
+    }
+
+    pub fn to_dense(&self) -> Vec<f32> {
+        let mut out = vec![0f32; self.rows * self.cols];
+        self.add_into(&mut out);
+        out
+    }
+}
+
+/// Paper Eq. (4): split `t` (rows x cols, row-major) at threshold `tau`.
+/// Returns (T_above as CSR, T_below dense with outlier slots zeroed).
+pub fn threshold_split(t: &[f32], rows: usize, cols: usize, tau: f32) -> (SparseOutliers, Vec<f32>) {
+    assert_eq!(t.len(), rows * cols);
+    assert!(cols < u16::MAX as usize, "col_idx is u16");
+    assert!(tau >= 0.0);
+    let mut row_ptr = Vec::with_capacity(rows + 1);
+    let mut col_idx = Vec::new();
+    let mut values = Vec::new();
+    let mut below = t.to_vec();
+    row_ptr.push(0u32);
+    for r in 0..rows {
+        for c in 0..cols {
+            let i = r * cols + c;
+            if t[i].abs() >= tau {
+                col_idx.push(c as u16);
+                values.push(t[i]);
+                below[i] = 0.0;
+            }
+        }
+        row_ptr.push(col_idx.len() as u32);
+    }
+    (SparseOutliers { rows, cols, row_ptr, col_idx, values }, below)
+}
+
+/// Reconstruction (paper Eq. 7): dense below-part + outliers.
+pub fn recombine(below: &[f32], above: &SparseOutliers) -> Vec<f32> {
+    let mut out = below.to_vec();
+    above.add_into(&mut out);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::run_cases;
+
+    #[test]
+    fn split_recombine_is_identity() {
+        run_cases(100, 0xC1, |_, rng| {
+            let rows = 1 + rng.below(16);
+            let cols = 1 + rng.below(200);
+            let tau = [0.5f32, 1.0, 5.0, 10.0][rng.below(4)];
+            let t: Vec<f32> = (0..rows * cols)
+                .map(|_| rng.heavy_tailed(1.0, 0.01, 30.0))
+                .collect();
+            let (above, below) = threshold_split(&t, rows, cols, tau);
+            let back = recombine(&below, &above);
+            assert_eq!(back, t, "lossless split+recombine");
+        });
+    }
+
+    #[test]
+    fn partition_is_exact() {
+        run_cases(100, 0xC2, |_, rng| {
+            let rows = 1 + rng.below(8);
+            let cols = 1 + rng.below(100);
+            let tau = 2.0f32;
+            let t: Vec<f32> = (0..rows * cols).map(|_| rng.normal_f32(0.0, 2.0)).collect();
+            let (above, below) = threshold_split(&t, rows, cols, tau);
+            // below strictly under tau in magnitude
+            assert!(below.iter().all(|x| x.abs() < tau));
+            // above holds exactly the elements >= tau
+            let dense_above = above.to_dense();
+            for i in 0..t.len() {
+                if t[i].abs() >= tau {
+                    assert_eq!(dense_above[i], t[i]);
+                    assert_eq!(below[i], 0.0);
+                } else {
+                    assert_eq!(dense_above[i], 0.0);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn higher_tau_fewer_outliers_smaller_payload() {
+        let mut rng = crate::util::rng::Rng::new(9);
+        let t: Vec<f32> = (0..32 * 128).map(|_| rng.heavy_tailed(1.0, 0.02, 50.0)).collect();
+        let (a1, _) = threshold_split(&t, 32, 128, 1.0);
+        let (a5, _) = threshold_split(&t, 32, 128, 5.0);
+        let (a10, _) = threshold_split(&t, 32, 128, 10.0);
+        assert!(a1.nnz() > a5.nnz());
+        assert!(a5.nnz() >= a10.nnz());
+        assert!(a1.payload_bytes() > a5.payload_bytes());
+    }
+
+    #[test]
+    fn csr_row_ptr_wellformed() {
+        run_cases(50, 0xC3, |_, rng| {
+            let rows = 1 + rng.below(10);
+            let cols = 1 + rng.below(50);
+            let t: Vec<f32> = (0..rows * cols).map(|_| rng.normal_f32(0.0, 3.0)).collect();
+            let (a, _) = threshold_split(&t, rows, cols, 1.5);
+            assert_eq!(a.row_ptr.len(), rows + 1);
+            assert_eq!(a.row_ptr[0], 0);
+            assert_eq!(*a.row_ptr.last().unwrap() as usize, a.nnz());
+            for w in a.row_ptr.windows(2) {
+                assert!(w[0] <= w[1]);
+            }
+            // col indices sorted within each row
+            for r in 0..rows {
+                let s = &a.col_idx[a.row_ptr[r] as usize..a.row_ptr[r + 1] as usize];
+                for p in s.windows(2) {
+                    assert!(p[0] < p[1]);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn tau_zero_moves_everything_above() {
+        let t = vec![1.0f32, -2.0, 0.5, 0.0];
+        let (above, below) = threshold_split(&t, 2, 2, 0.0);
+        assert_eq!(above.nnz(), 4);
+        assert!(below.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn empty_outliers_payload_is_header_only() {
+        let t = vec![0.1f32; 8];
+        let (above, _) = threshold_split(&t, 2, 4, 100.0);
+        assert_eq!(above.nnz(), 0);
+        assert_eq!(above.payload_bytes(), 4 * 3 + 4); // row_ptr + header
+    }
+}

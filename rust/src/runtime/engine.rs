@@ -1,0 +1,84 @@
+//! PJRT engine: loads the HLO-text artifacts and owns the compiled
+//! executables for one shape class.
+//!
+//! Pattern (see /opt/xla-example/load_hlo): `HloModuleProto::from_text_file`
+//! → `XlaComputation::from_proto` → `client.compile`. HLO *text* is the
+//! interchange format — jax ≥ 0.5 emits protos with 64-bit instruction ids
+//! that xla_extension 0.5.1 rejects; the text parser reassigns ids.
+//!
+//! PJRT handles are not `Send`; the whole serving stack runs on one thread
+//! (the coordinator is a discrete-event simulation — DESIGN.md §1).
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::manifest::{Manifest, ShapeClassManifest};
+use crate::model::ModelConfig;
+
+pub struct Engine {
+    pub client: xla::PjRtClient,
+    pub class: ShapeClassManifest,
+    exes: BTreeMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Engine {
+    /// Load + compile every artifact of `cfg`'s shape class.
+    pub fn load(artifacts_dir: &str, cfg: &ModelConfig) -> Result<Engine> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let class = manifest.class(cfg.shape_class.dir_name())?.clone();
+        class.check_compatible(cfg)?;
+        let client = xla::PjRtClient::cpu()?;
+        let mut exes = BTreeMap::new();
+        for (name, info) in &class.artifacts {
+            let proto = xla::HloModuleProto::from_text_file(
+                info.file
+                    .to_str()
+                    .ok_or_else(|| anyhow!("non-utf8 artifact path"))?,
+            )
+            .with_context(|| format!("parsing {}", info.file.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("compiling artifact '{name}'"))?;
+            exes.insert(name.clone(), exe);
+        }
+        Ok(Engine { client, class, exes })
+    }
+
+    pub fn exe(&self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        self.exes
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not loaded (have {:?})",
+                self.exes.keys().collect::<Vec<_>>()))
+    }
+
+    /// Upload a host tensor to a device-resident buffer.
+    pub fn upload(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer::<f32>(data, dims, None)?)
+    }
+
+    pub fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer::<i32>(data, dims, None)?)
+    }
+
+    /// Execute an artifact on device buffers; returns the untupled outputs
+    /// as host vectors (the artifacts are lowered with return_tuple=True).
+    pub fn run(
+        &self,
+        name: &str,
+        args: &[&xla::PjRtBuffer],
+    ) -> Result<Vec<Vec<f32>>> {
+        let exe = self.exe(name)?;
+        let out = exe.execute_b::<&xla::PjRtBuffer>(args)?;
+        let lit = out[0][0].to_literal_sync()?;
+        let parts = lit.to_tuple()?;
+        parts
+            .into_iter()
+            .map(|l| Ok(l.to_vec::<f32>()?))
+            .collect::<Result<Vec<_>>>()
+    }
+}
+
+// Tests requiring real artifacts live in rust/tests/runtime_integration.rs
+// (they need `make artifacts` to have run).

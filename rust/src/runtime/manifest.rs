@@ -1,0 +1,230 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! Rust runtime. Parsed with the in-tree JSON parser; shapes are
+//! cross-checked against the `ModelConfig` the caller intends to run so a
+//! stale artifact directory fails loudly at load time, not with NaNs.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::model::ModelConfig;
+use crate::util::json::Json;
+
+#[derive(Clone, Debug)]
+pub struct ArtifactInfo {
+    pub file: PathBuf,
+    pub args: Vec<String>,
+    pub arg_shapes: Vec<Vec<usize>>,
+}
+
+#[derive(Clone, Debug)]
+pub struct ShapeClassManifest {
+    pub name: String,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    pub d_ff: usize,
+    pub vocab: usize,
+    pub max_seq: usize,
+    pub prefill_len: usize,
+    pub artifacts: BTreeMap<String, ArtifactInfo>,
+    /// Golden tensor files (name -> (path, shape)) for integration tests.
+    pub golden: BTreeMap<String, (PathBuf, Vec<usize>)>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub root: PathBuf,
+    pub classes: BTreeMap<String, ShapeClassManifest>,
+}
+
+impl Manifest {
+    pub fn load(artifacts_dir: impl AsRef<Path>) -> Result<Manifest> {
+        let root = artifacts_dir.as_ref().to_path_buf();
+        let mpath = root.join("manifest.json");
+        let text = std::fs::read_to_string(&mpath)
+            .with_context(|| format!("reading {} (run `make artifacts` first)", mpath.display()))?;
+        let doc = Json::parse(&text).map_err(|e| anyhow!("parsing manifest: {e}"))?;
+        let mut classes = BTreeMap::new();
+        let cfgs = doc
+            .req("configs")?
+            .as_obj()
+            .ok_or_else(|| anyhow!("manifest 'configs' is not an object"))?;
+        for (name, c) in cfgs {
+            let num = |k: &str| -> Result<usize> {
+                c.req(k)?.as_usize().ok_or_else(|| anyhow!("config {name}.{k} not a number"))
+            };
+            let mut artifacts = BTreeMap::new();
+            let arts = c
+                .req("artifacts")?
+                .as_obj()
+                .ok_or_else(|| anyhow!("{name}.artifacts not an object"))?;
+            for (aname, a) in arts {
+                let file = root.join(name).join(
+                    a.req("file")?
+                        .as_str()
+                        .ok_or_else(|| anyhow!("artifact file not a string"))?,
+                );
+                let args = a
+                    .req("args")?
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("artifact args not an array"))?
+                    .iter()
+                    .map(|v| v.as_str().unwrap_or("?").to_string())
+                    .collect();
+                let arg_shapes = a
+                    .req("arg_shapes")?
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("artifact arg_shapes not an array"))?
+                    .iter()
+                    .map(|s| {
+                        s.as_arr()
+                            .map(|dims| dims.iter().filter_map(|d| d.as_usize()).collect())
+                            .unwrap_or_default()
+                    })
+                    .collect();
+                artifacts.insert(aname.clone(), ArtifactInfo { file, args, arg_shapes });
+            }
+            let mut golden = BTreeMap::new();
+            if let Some(g) = c.get("golden") {
+                if let Some(tensors) = g.get("tensors").and_then(|t| t.as_arr()) {
+                    for t in tensors {
+                        let tname = t.req("name")?.as_str().unwrap_or("?").to_string();
+                        let file = root
+                            .join("golden")
+                            .join(t.req("file")?.as_str().unwrap_or("?"));
+                        let shape = t
+                            .req("shape")?
+                            .as_arr()
+                            .map(|dims| dims.iter().filter_map(|d| d.as_usize()).collect())
+                            .unwrap_or_default();
+                        golden.insert(tname, (file, shape));
+                    }
+                }
+            }
+            classes.insert(
+                name.clone(),
+                ShapeClassManifest {
+                    name: name.clone(),
+                    d_model: num("d_model")?,
+                    n_heads: num("n_heads")?,
+                    head_dim: num("head_dim")?,
+                    d_ff: num("d_ff")?,
+                    vocab: num("vocab")?,
+                    max_seq: num("max_seq")?,
+                    prefill_len: num("prefill_len")?,
+                    artifacts,
+                    golden,
+                },
+            );
+        }
+        Ok(Manifest { root, classes })
+    }
+
+    pub fn class(&self, name: &str) -> Result<&ShapeClassManifest> {
+        self.classes
+            .get(name)
+            .ok_or_else(|| anyhow!("shape class '{name}' not in manifest (have: {:?})",
+                self.classes.keys().collect::<Vec<_>>()))
+    }
+}
+
+impl ShapeClassManifest {
+    /// Fail loudly if a `ModelConfig` disagrees with the artifact shapes.
+    pub fn check_compatible(&self, cfg: &ModelConfig) -> Result<()> {
+        let pairs = [
+            ("d_model", self.d_model, cfg.d_model),
+            ("n_heads", self.n_heads, cfg.n_heads),
+            ("head_dim", self.head_dim, cfg.head_dim),
+            ("d_ff", self.d_ff, cfg.d_ff),
+            ("vocab", self.vocab, cfg.vocab),
+            ("max_seq", self.max_seq, cfg.max_seq),
+            ("prefill_len", self.prefill_len, cfg.prefill_len),
+        ];
+        for (k, art, want) in pairs {
+            if art != want {
+                anyhow::bail!(
+                    "artifact shape class '{}' has {k}={art} but model '{}' wants {want} — \
+                     re-run `make artifacts`",
+                    self.name,
+                    cfg.name
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Read a golden tensor (raw little-endian f32 file written by aot.py).
+    pub fn read_golden(&self, name: &str) -> Result<(Vec<f32>, Vec<usize>)> {
+        let (path, shape) = self
+            .golden
+            .get(name)
+            .ok_or_else(|| anyhow!("golden tensor '{name}' missing"))?;
+        let bytes = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+        anyhow::ensure!(bytes.len() % 4 == 0, "golden file not f32-aligned");
+        let vals = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect::<Vec<_>>();
+        let expect: usize = shape.iter().product::<usize>().max(1);
+        anyhow::ensure!(
+            vals.len() == expect || (shape.is_empty() && vals.len() == 1),
+            "golden '{name}': {} values but shape {:?}",
+            vals.len(),
+            shape
+        );
+        Ok((vals, shape.clone()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Full parse of the real manifest is covered by the integration tests
+    // (rust/tests/) which require `make artifacts`; here we test the parse
+    // logic against an inline snippet.
+    #[test]
+    fn parses_minimal_manifest() {
+        let dir = std::env::temp_dir().join("splitserve_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"configs": {"sim7b": {
+                "n_layers": 32, "d_model": 128, "n_heads": 4, "head_dim": 32,
+                "d_ff": 352, "vocab": 512, "max_seq": 128, "prefill_len": 64,
+                "artifacts": {"lm_head_decode": {"file": "lm_head_decode.hlo.txt",
+                    "args": ["x", "gf", "w_out"],
+                    "arg_shapes": [[1, 128], [128], [128, 512]]}},
+                "golden": {"pos": 5, "tensors": []}
+            }}}"#,
+        )
+        .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        let c = m.class("sim7b").unwrap();
+        assert_eq!(c.d_model, 128);
+        let a = &c.artifacts["lm_head_decode"];
+        assert_eq!(a.args, vec!["x", "gf", "w_out"]);
+        assert_eq!(a.arg_shapes[2], vec![128, 512]);
+        c.check_compatible(&ModelConfig::sim7b()).unwrap();
+        assert!(m.class("nope").is_err());
+    }
+
+    #[test]
+    fn incompatible_config_rejected() {
+        let c = ShapeClassManifest {
+            name: "x".into(),
+            d_model: 64,
+            n_heads: 4,
+            head_dim: 16,
+            d_ff: 352,
+            vocab: 512,
+            max_seq: 128,
+            prefill_len: 64,
+            artifacts: BTreeMap::new(),
+            golden: BTreeMap::new(),
+        };
+        assert!(c.check_compatible(&ModelConfig::sim7b()).is_err());
+    }
+}

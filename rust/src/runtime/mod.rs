@@ -1,0 +1,17 @@
+//! PJRT runtime: artifact manifest, engine (compiled executables), and the
+//! per-node layer pipeline. Python never runs here — the artifacts under
+//! `artifacts/` are AOT products of `make artifacts`.
+
+pub mod engine;
+pub mod manifest;
+pub mod node;
+
+pub use engine::Engine;
+pub use manifest::Manifest;
+pub use node::{LayerKv, NodeRuntime, RopeTables};
+
+/// Quick PJRT availability probe (used by `splitserve doctor`).
+pub fn smoke() -> anyhow::Result<String> {
+    let client = xla::PjRtClient::cpu()?;
+    Ok(client.platform_name())
+}

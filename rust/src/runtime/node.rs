@@ -1,0 +1,250 @@
+//! NodeRuntime: one logical inference node (the edge's front segment or the
+//! cloud's back segment) executing its layer range through the shared PJRT
+//! engine.
+//!
+//! Weights are uploaded to device-resident buffers ONCE at construction
+//! (possibly after OPSC/baseline fake-quant); per-step uploads are only the
+//! small dynamic tensors (hidden state, KV caches, position). KV caches are
+//! owned by the coordinator's KV manager and passed in per call — that is
+//! what lets the cloud resume a request mid-stack (split computing) and
+//! what the I_kv switch transmits or re-computes.
+
+use std::ops::Range;
+use std::rc::Rc;
+
+use anyhow::Result;
+
+use super::engine::Engine;
+use crate::model::ModelWeights;
+
+/// Per-layer KV cache: static (W, H*D) buffers plus the current fill level.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LayerKv {
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+}
+
+impl LayerKv {
+    pub fn zeros(max_seq: usize, kv_width: usize) -> LayerKv {
+        LayerKv { k: vec![0.0; max_seq * kv_width], v: vec![0.0; max_seq * kv_width] }
+    }
+}
+
+/// Host-computed RoPE tables (cos, sin), each (max_seq, D/2) row-major.
+/// Computed on the host because xla_extension 0.5.1 miscompiles in-graph
+/// pow/cos (see python/compile/model.py) — the tables are artifact INPUTS.
+#[derive(Clone, Debug)]
+pub struct RopeTables {
+    pub cos: Vec<f32>,
+    pub sin: Vec<f32>,
+    pub half_dim: usize,
+}
+
+impl RopeTables {
+    pub fn new(max_seq: usize, head_dim: usize, theta: f64) -> RopeTables {
+        let half = head_dim / 2;
+        let mut cos = vec![0f32; max_seq * half];
+        let mut sin = vec![0f32; max_seq * half];
+        for p in 0..max_seq {
+            for i in 0..half {
+                let inv_freq = 1.0 / theta.powf((2 * i) as f64 / head_dim as f64);
+                let ang = p as f64 * inv_freq;
+                cos[p * half + i] = ang.cos() as f32;
+                sin[p * half + i] = ang.sin() as f32;
+            }
+        }
+        RopeTables { cos, sin, half_dim: half }
+    }
+
+    pub fn rows(&self, start: usize, n: usize) -> (&[f32], &[f32]) {
+        let h = self.half_dim;
+        (&self.cos[start * h..(start + n) * h], &self.sin[start * h..(start + n) * h])
+    }
+}
+
+pub struct NodeRuntime {
+    pub engine: Rc<Engine>,
+    /// 0-indexed layers this node executes.
+    pub layer_range: Range<usize>,
+    /// Device-resident weight buffers, artifact argument order, one vec per
+    /// layer in `layer_range`.
+    weight_bufs: Vec<Vec<xla::PjRtBuffer>>,
+    /// Final norm + head (only the node that finishes the stack needs it).
+    head_bufs: Option<(xla::PjRtBuffer, xla::PjRtBuffer)>,
+    /// Host-side weights (embedding lookups, re-quantization experiments).
+    pub weights: Rc<ModelWeights>,
+    rope: RopeTables,
+    /// Device-resident prefill-width RoPE tables (uploaded once).
+    rope_prefill_bufs: (xla::PjRtBuffer, xla::PjRtBuffer),
+}
+
+impl NodeRuntime {
+    pub fn new(
+        engine: Rc<Engine>,
+        weights: Rc<ModelWeights>,
+        layer_range: Range<usize>,
+        with_head: bool,
+    ) -> Result<NodeRuntime> {
+        let cfg = &weights.cfg;
+        assert!(layer_range.end <= cfg.n_layers);
+        let d = cfg.d_model;
+        let f = cfg.d_ff;
+        let dims: [(usize, &[usize]); 9] = [
+            (0, &[d, d]),
+            (1, &[d, d]),
+            (2, &[d, d]),
+            (3, &[d, d]),
+            (4, &[d, f]),
+            (5, &[d, f]),
+            (6, &[f, d]),
+            (7, &[d]),
+            (8, &[d]),
+        ];
+        let mut weight_bufs = Vec::with_capacity(layer_range.len());
+        for li in layer_range.clone() {
+            let lw = &weights.layers[li];
+            let ordered = lw.ordered();
+            let mut bufs = Vec::with_capacity(9);
+            for (i, shape) in dims.iter() {
+                bufs.push(engine.upload(ordered[*i].1, shape)?);
+            }
+            weight_bufs.push(bufs);
+        }
+        let head_bufs = if with_head {
+            Some((
+                engine.upload(&weights.gf, &[d])?,
+                engine.upload(&weights.w_out, &[d, cfg.vocab])?,
+            ))
+        } else {
+            None
+        };
+        let rope = RopeTables::new(cfg.max_seq, cfg.head_dim, 10000.0);
+        let p = cfg.prefill_len;
+        let (cp, sp) = rope.rows(0, p);
+        let rope_prefill_bufs = (
+            engine.upload(cp, &[p, rope.half_dim])?,
+            engine.upload(sp, &[p, rope.half_dim])?,
+        );
+        Ok(NodeRuntime {
+            engine,
+            layer_range,
+            weight_bufs,
+            head_bufs,
+            weights,
+            rope,
+            rope_prefill_bufs,
+        })
+    }
+
+    fn cfg(&self) -> &crate::model::ModelConfig {
+        &self.weights.cfg
+    }
+
+    /// Prefill: run `x` (P, d) through this node's layers. Returns the
+    /// output hidden state and the K/V rows (P, H*D) per layer, to be
+    /// installed into the request's KV caches.
+    pub fn prefill(&self, x: &[f32]) -> Result<(Vec<f32>, Vec<(Vec<f32>, Vec<f32>)>)> {
+        self.prefill_with(x, &mut |_, _| {})
+    }
+
+    /// Prefill with a per-layer hook: `hook(global_layer_index, h)` runs on
+    /// the hidden state AFTER each layer (the residual-stream boundary).
+    /// This is how the eval harness applies activation fake-quant, Fig. 4
+    /// clamping, and split-point compression round-trips.
+    pub fn prefill_with(
+        &self,
+        x: &[f32],
+        hook: &mut dyn FnMut(usize, &mut Vec<f32>),
+    ) -> Result<(Vec<f32>, Vec<(Vec<f32>, Vec<f32>)>)> {
+        let cfg = self.cfg();
+        let p = cfg.prefill_len;
+        let d = cfg.d_model;
+        assert_eq!(x.len(), p * d);
+        let mut h = x.to_vec();
+        let mut kvs = Vec::with_capacity(self.layer_range.len());
+        for (i, bufs) in self.weight_bufs.iter().enumerate() {
+            let hx = self.engine.upload(&h, &[p, d])?;
+            let mut args: Vec<&xla::PjRtBuffer> =
+                vec![&hx, &self.rope_prefill_bufs.0, &self.rope_prefill_bufs.1];
+            args.extend(bufs.iter());
+            let mut out = self.engine.run("layer_prefill", &args)?;
+            let v_rows = out.pop().expect("v");
+            let k_rows = out.pop().expect("k");
+            h = out.pop().expect("y");
+            hook(self.layer_range.start + i, &mut h);
+            kvs.push((k_rows, v_rows));
+        }
+        Ok((h, kvs))
+    }
+
+    /// One decode step at `pos` through this node's layers. `kv` must hold
+    /// one LayerKv per layer in `layer_range` and is updated in place with
+    /// the new token's K/V rows.
+    pub fn decode(&self, x: &[f32], kv: &mut [LayerKv], pos: usize) -> Result<Vec<f32>> {
+        let cfg = self.cfg();
+        let d = cfg.d_model;
+        let w = cfg.max_seq;
+        let kvw = cfg.kv_width();
+        assert_eq!(x.len(), d);
+        assert_eq!(kv.len(), self.layer_range.len(), "one KV cache per layer");
+        assert!(pos < w, "position {pos} beyond static cache {w}");
+        let pos_buf = self.engine.upload_i32(&[pos as i32], &[1])?;
+        let (cr, sr) = self.rope.rows(pos, 1);
+        let cos_buf = self.engine.upload(cr, &[1, self.rope.half_dim])?;
+        let sin_buf = self.engine.upload(sr, &[1, self.rope.half_dim])?;
+        let mut h = x.to_vec();
+        for (bufs, cache) in self.weight_bufs.iter().zip(kv.iter_mut()) {
+            let hx = self.engine.upload(&h, &[1, d])?;
+            let kc = self.engine.upload(&cache.k, &[w, kvw])?;
+            let vc = self.engine.upload(&cache.v, &[w, kvw])?;
+            let mut args: Vec<&xla::PjRtBuffer> =
+                vec![&hx, &kc, &vc, &pos_buf, &cos_buf, &sin_buf];
+            args.extend(bufs.iter());
+            let mut out = self.engine.run("layer_decode", &args)?;
+            cache.v = out.pop().expect("v_cache");
+            cache.k = out.pop().expect("k_cache");
+            h = out.pop().expect("y");
+        }
+        Ok(h)
+    }
+
+    /// Final norm + vocab projection for a full prefill block (P, d).
+    pub fn logits_prefill(&self, h: &[f32]) -> Result<Vec<f32>> {
+        let cfg = self.cfg();
+        let (gf, w_out) = self.head_bufs.as_ref().expect("node has no lm head");
+        let hx = self.engine.upload(h, &[cfg.prefill_len, cfg.d_model])?;
+        let mut out = self.engine.run("lm_head_prefill", &[&hx, gf, w_out])?;
+        Ok(out.pop().expect("logits"))
+    }
+
+    /// Final norm + vocab projection for one decode token (1, d).
+    pub fn logits_decode(&self, h: &[f32]) -> Result<Vec<f32>> {
+        let cfg = self.cfg();
+        let (gf, w_out) = self.head_bufs.as_ref().expect("node has no lm head");
+        let hx = self.engine.upload(h, &[1, cfg.d_model])?;
+        let mut out = self.engine.run("lm_head_decode", &[&hx, gf, w_out])?;
+        Ok(out.pop().expect("logits"))
+    }
+
+    /// Fresh zeroed KV caches for this node's layer range.
+    pub fn fresh_kv(&self) -> Vec<LayerKv> {
+        let cfg = self.cfg();
+        (0..self.layer_range.len())
+            .map(|_| LayerKv::zeros(cfg.max_seq, cfg.kv_width()))
+            .collect()
+    }
+
+    /// Install prefill K/V rows (P, H*D) into zeroed full caches.
+    pub fn install_prefill_kv(&self, rows: &[(Vec<f32>, Vec<f32>)], prompt_len: usize) -> Vec<LayerKv> {
+        let cfg = self.cfg();
+        let kvw = cfg.kv_width();
+        rows.iter()
+            .map(|(k_rows, v_rows)| {
+                let mut c = LayerKv::zeros(cfg.max_seq, kvw);
+                c.k[..prompt_len * kvw].copy_from_slice(&k_rows[..prompt_len * kvw]);
+                c.v[..prompt_len * kvw].copy_from_slice(&v_rows[..prompt_len * kvw]);
+                c
+            })
+            .collect()
+    }
+}

@@ -1,0 +1,91 @@
+//! Workload generation: synthetic request traces (prompt token streams,
+//! Poisson arrivals, output-length distributions) shared by the e2e
+//! examples and the Fig. 5 scalability bench.
+
+use crate::coordinator::Request;
+use crate::util::rng::{zipf_cdf, Rng};
+
+#[derive(Clone, Debug)]
+pub struct WorkloadSpec {
+    pub n_requests: usize,
+    /// Poisson arrival rate (requests/s) across the whole trace.
+    pub arrival_rate: f64,
+    pub prompt_len_min: usize,
+    pub prompt_len_max: usize,
+    pub output_len_min: usize,
+    pub output_len_max: usize,
+    pub vocab: usize,
+    pub seed: u64,
+}
+
+impl Default for WorkloadSpec {
+    fn default() -> Self {
+        WorkloadSpec {
+            n_requests: 16,
+            arrival_rate: 0.5,
+            prompt_len_min: 4,
+            prompt_len_max: 24,
+            output_len_min: 4,
+            output_len_max: 24,
+            vocab: 512,
+            seed: 11,
+        }
+    }
+}
+
+/// Generate a request trace (sorted by arrival time).
+pub fn generate_trace(spec: &WorkloadSpec) -> Vec<Request> {
+    let mut rng = Rng::new(spec.seed ^ 0x77ACE);
+    let cdf = zipf_cdf(spec.vocab - 1, 1.1);
+    let mut t = 0.0f64;
+    (0..spec.n_requests)
+        .map(|i| {
+            t += rng.exponential(spec.arrival_rate);
+            let plen = rng.range(spec.prompt_len_min as i64, spec.prompt_len_max as i64) as usize;
+            let olen = rng.range(spec.output_len_min as i64, spec.output_len_max as i64) as usize;
+            let prompt: Vec<u32> = (0..plen).map(|_| rng.zipf(&cdf) as u32 + 1).collect();
+            let mut r = Request::new(i as u64, prompt, olen);
+            r.arrival_s = t;
+            r
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_deterministic_and_bounded() {
+        let spec = WorkloadSpec::default();
+        let a = generate_trace(&spec);
+        let b = generate_trace(&spec);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.prompt, y.prompt);
+            assert_eq!(x.max_new_tokens, y.max_new_tokens);
+        }
+        for r in &a {
+            assert!((spec.prompt_len_min..=spec.prompt_len_max).contains(&r.prompt.len()));
+            assert!((spec.output_len_min..=spec.output_len_max).contains(&r.max_new_tokens));
+            assert!(r.prompt.iter().all(|&t| t != 0 && (t as usize) < spec.vocab));
+        }
+    }
+
+    #[test]
+    fn arrivals_increasing() {
+        let a = generate_trace(&WorkloadSpec::default());
+        for w in a.windows(2) {
+            assert!(w[0].arrival_s <= w[1].arrival_s);
+        }
+    }
+
+    #[test]
+    fn arrival_rate_roughly_respected() {
+        let spec = WorkloadSpec { n_requests: 2000, arrival_rate: 2.0, ..Default::default() };
+        let a = generate_trace(&spec);
+        let span = a.last().unwrap().arrival_s;
+        let rate = 2000.0 / span;
+        assert!((rate - 2.0).abs() < 0.25, "rate={rate}");
+    }
+}

@@ -1,0 +1,153 @@
+//! In-tree micro/meso benchmark harness (criterion is not available offline).
+//!
+//! `bench_fn` runs warmup + timed iterations and reports min/median/p95/mean;
+//! `Table` renders paper-style result tables for the per-figure/table bench
+//! binaries (rust/benches/*, harness = false).
+
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Debug)]
+pub struct BenchStats {
+    pub iters: usize,
+    pub min: Duration,
+    pub median: Duration,
+    pub p95: Duration,
+    pub mean: Duration,
+}
+
+impl BenchStats {
+    pub fn per_iter_ns(&self) -> f64 {
+        self.median.as_nanos() as f64
+    }
+}
+
+impl std::fmt::Display for BenchStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "median {:>10.3?}  mean {:>10.3?}  min {:>10.3?}  p95 {:>10.3?}  ({} iters)",
+            self.median, self.mean, self.min, self.p95, self.iters
+        )
+    }
+}
+
+/// Time `f` over adaptive iterations: warm up ~50 ms, then measure until
+/// `target` wall time or `max_iters`, whichever first.
+pub fn bench_fn<F: FnMut()>(name: &str, target: Duration, mut f: F) -> BenchStats {
+    // Warmup.
+    let warm_deadline = Instant::now() + Duration::from_millis(50);
+    let mut warm_iters = 0usize;
+    while Instant::now() < warm_deadline || warm_iters == 0 {
+        f();
+        warm_iters += 1;
+        if warm_iters > 1_000_000 {
+            break;
+        }
+    }
+    // Timed.
+    let mut samples: Vec<Duration> = Vec::new();
+    let deadline = Instant::now() + target;
+    while Instant::now() < deadline && samples.len() < 200_000 {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed());
+    }
+    samples.sort_unstable();
+    let n = samples.len();
+    let total: Duration = samples.iter().sum();
+    let stats = BenchStats {
+        iters: n,
+        min: samples[0],
+        median: samples[n / 2],
+        p95: samples[(n as f64 * 0.95) as usize % n],
+        mean: total / n as u32,
+    };
+    println!("bench {name:<44} {stats}");
+    stats
+}
+
+/// Plain-text table renderer for the paper-reproduction bench binaries.
+pub struct Table {
+    title: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line: usize = widths.iter().sum::<usize>() + 3 * widths.len() + 1;
+        println!("\n== {} ==", self.title);
+        println!("{}", "-".repeat(line));
+        let fmt_row = |cells: &[String]| {
+            let mut s = String::from("|");
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!(" {:<w$} |", c, w = widths[i]));
+            }
+            s
+        };
+        println!("{}", fmt_row(&self.header));
+        println!("{}", "-".repeat(line));
+        for r in &self.rows {
+            println!("{}", fmt_row(r));
+        }
+        println!("{}", "-".repeat(line));
+    }
+}
+
+/// f64 convenience: format with fixed decimals.
+pub fn f2(x: f64) -> String {
+    format!("{x:.2}")
+}
+
+pub fn f3(x: f64) -> String {
+    format!("{x:.3}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_ordered_stats() {
+        let s = bench_fn("noop", Duration::from_millis(20), || {
+            std::hint::black_box(1 + 1);
+        });
+        assert!(s.iters > 10);
+        assert!(s.min <= s.median && s.median <= s.p95);
+    }
+
+    #[test]
+    fn table_renders_all_rows() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row(&["1".into(), "2".into()]);
+        t.row(&["333".into(), "4".into()]);
+        assert_eq!(t.rows.len(), 2);
+        t.print();
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_rejects_arity_mismatch() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row(&["1".into()]);
+    }
+}

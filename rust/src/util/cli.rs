@@ -1,0 +1,121 @@
+//! Minimal CLI argument parser (clap is not available offline).
+//!
+//! Supports `subcommand --flag value --switch positional` grammars, typed
+//! getters with defaults, and auto-generated usage text — enough for the
+//! `splitserve` launcher and the example/bench binaries.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    switches: Vec<String>,
+}
+
+impl Args {
+    /// Parse from `std::env::args()` (skipping argv[0]).
+    pub fn from_env(expect_subcommand: bool) -> Args {
+        Self::parse(std::env::args().skip(1).collect(), expect_subcommand)
+    }
+
+    pub fn parse(argv: Vec<String>, expect_subcommand: bool) -> Args {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        if expect_subcommand {
+            if let Some(first) = it.peek() {
+                if !first.starts_with('-') {
+                    out.subcommand = it.next();
+                }
+            }
+        }
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                // `--key=value`, `--key value`, or bare switch
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    out.flags.insert(name.to_string(), v);
+                } else {
+                    out.switches.push(name.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name) || self.flags.contains_key(name)
+    }
+
+    pub fn str_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.flag(name).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> usize {
+        self.flag(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got '{v}'")))
+            .unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> f64 {
+        self.flag(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects a number, got '{v}'")))
+            .unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> u64 {
+        self.flag(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got '{v}'")))
+            .unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(v: &[&str]) -> Vec<String> {
+        v.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_flags_switches() {
+        // NOTE grammar: a bare `--flag value` always binds the value; a
+        // switch is a `--flag` followed by another flag or end-of-argv.
+        let a = Args::parse(sv(&["serve", "pos1", "--devices", "4", "--verbose"]), true);
+        assert_eq!(a.subcommand.as_deref(), Some("serve"));
+        assert_eq!(a.usize_or("devices", 1), 4);
+        assert!(a.has("verbose"));
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = Args::parse(sv(&["--tau=5.0", "--bits=4"]), false);
+        assert_eq!(a.f64_or("tau", 0.0), 5.0);
+        assert_eq!(a.usize_or("bits", 0), 4);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::parse(sv(&[]), true);
+        assert!(a.subcommand.is_none());
+        assert_eq!(a.str_or("model", "sim7b"), "sim7b");
+        assert_eq!(a.usize_or("n", 9), 9);
+    }
+
+    #[test]
+    fn trailing_switch() {
+        let a = Args::parse(sv(&["--fast"]), false);
+        assert!(a.has("fast"));
+    }
+}

@@ -1,0 +1,64 @@
+//! Offline substrates: RNG, JSON, CLI parsing, bench harness, property tests.
+//!
+//! The build environment vendors only `xla` and `anyhow`; everything that
+//! would normally come from serde/clap/criterion/proptest/rand is
+//! implemented here and unit-tested in place.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+
+/// Bits→bytes with ceiling division (payload accounting is bit-exact).
+#[inline]
+pub fn bits_to_bytes(bits: u64) -> u64 {
+    bits.div_ceil(8)
+}
+
+/// Mean of an f64 slice (0.0 for empty).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Percentile (nearest-rank) of an UNSORTED slice; p in [0,100].
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let idx = ((p / 100.0) * (v.len() - 1) as f64).round() as usize;
+    v[idx]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bits_to_bytes_rounds_up() {
+        assert_eq!(bits_to_bytes(0), 0);
+        assert_eq!(bits_to_bytes(1), 1);
+        assert_eq!(bits_to_bytes(8), 1);
+        assert_eq!(bits_to_bytes(9), 2);
+    }
+
+    #[test]
+    fn percentile_basics() {
+        let xs = [5.0, 1.0, 3.0, 2.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 50.0), 3.0);
+        assert_eq!(percentile(&xs, 100.0), 5.0);
+    }
+
+    #[test]
+    fn mean_basics() {
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(mean(&[2.0, 4.0]), 3.0);
+    }
+}

@@ -1,0 +1,62 @@
+//! Tiny property-testing driver (proptest is not available offline).
+//!
+//! `run_cases(n, seed, f)` feeds `f` independent seeded RNGs; on failure it
+//! reports the failing case seed so the case replays deterministically with
+//! `replay(seed, f)`. Shrinking is out of scope — cases are seeds, so the
+//! failing input is already minimal to reproduce.
+
+use super::rng::Rng;
+
+/// Run `n` property cases. `f` gets (case_index, rng) and should panic/assert
+/// on violation. The panic message is augmented with the replay seed.
+pub fn run_cases<F: Fn(usize, &mut Rng)>(n: usize, seed: u64, f: F) {
+    for case in 0..n {
+        let case_seed = seed ^ ((case as u64).wrapping_mul(0x9E3779B97F4A7C15));
+        let mut rng = Rng::new(case_seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            f(case, &mut rng);
+        }));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".to_string());
+            panic!("property failed at case {case} (replay seed {case_seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Replay a single failing case by its reported seed.
+pub fn replay<F: Fn(usize, &mut Rng)>(case_seed: u64, f: F) {
+    let mut rng = Rng::new(case_seed);
+    f(0, &mut rng);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivially_true_property() {
+        run_cases(50, 1, |_, rng| {
+            let x = rng.f64();
+            assert!((0.0..1.0).contains(&x));
+        });
+    }
+
+    #[test]
+    fn reports_failing_seed() {
+        let r = std::panic::catch_unwind(|| {
+            run_cases(50, 2, |case, _| {
+                assert!(case < 10, "boom");
+            });
+        });
+        let err = r.unwrap_err();
+        let msg = err
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_else(|| err.downcast_ref::<&str>().unwrap().to_string());
+        assert!(msg.contains("replay seed"), "{msg}");
+    }
+}

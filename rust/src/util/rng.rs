@@ -1,0 +1,273 @@
+//! Deterministic pseudo-random number generation (splitmix64 / xoshiro256**).
+//!
+//! The whole framework is seeded end-to-end: synthetic weights, workload
+//! traces, channel fading and eval suites are all reproducible from a u64
+//! seed. No external RNG crates are available offline, so this implements
+//! the standard xoshiro256** generator with Box-Muller normals and the
+//! heavy-tailed samplers the activation-outlier model needs.
+
+/// splitmix64 — used to seed the main generator and to derive child seeds.
+#[inline]
+pub fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// xoshiro256** — fast, high-quality, deterministic PRNG.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+    /// Cached second normal from Box-Muller.
+    spare_normal: Option<f64>,
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        Rng {
+            s: [
+                splitmix64(&mut sm),
+                splitmix64(&mut sm),
+                splitmix64(&mut sm),
+                splitmix64(&mut sm),
+            ],
+            spare_normal: None,
+        }
+    }
+
+    /// Derive an independent child generator (for per-layer / per-request
+    /// streams that must not depend on draw order elsewhere).
+    pub fn child(&self, stream: u64) -> Rng {
+        let mut sm = self.s[0] ^ stream.wrapping_mul(0xA24BAED4963EE407);
+        Rng::new(splitmix64(&mut sm))
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    #[inline]
+    pub fn f32(&mut self) -> f32 {
+        self.f64() as f32
+    }
+
+    /// Uniform integer in [0, n).
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        (self.f64() * n as f64) as usize % n
+    }
+
+    /// Uniform integer in [lo, hi].
+    pub fn range(&mut self, lo: i64, hi: i64) -> i64 {
+        debug_assert!(hi >= lo);
+        lo + self.below((hi - lo + 1) as usize) as i64
+    }
+
+    /// Standard normal via Box-Muller (cached pair).
+    pub fn normal(&mut self) -> f64 {
+        if let Some(z) = self.spare_normal.take() {
+            return z;
+        }
+        loop {
+            let u1 = self.f64();
+            if u1 <= f64::MIN_POSITIVE {
+                continue;
+            }
+            let u2 = self.f64();
+            let r = (-2.0 * u1.ln()).sqrt();
+            let theta = 2.0 * std::f64::consts::PI * u2;
+            self.spare_normal = Some(r * theta.sin());
+            return r * theta.cos();
+        }
+    }
+
+    pub fn normal_f32(&mut self, mean: f32, std: f32) -> f32 {
+        (self.normal() as f32) * std + mean
+    }
+
+    /// Exponential with the given rate (mean = 1/rate).
+    pub fn exponential(&mut self, rate: f64) -> f64 {
+        debug_assert!(rate > 0.0);
+        let u = 1.0 - self.f64();
+        -u.ln() / rate
+    }
+
+    /// |Rayleigh|^2 channel power gain with unit mean (exponential(1)).
+    /// This is the per-transfer fading realization of the paper's model.
+    pub fn rayleigh_power(&mut self) -> f64 {
+        self.exponential(1.0)
+    }
+
+    /// Student-t-ish heavy-tailed sample used by the activation-outlier
+    /// model: normal most of the time, scaled by an inverse-uniform factor
+    /// with probability `p_outlier`, reproducing the "0.0005% of values
+    /// exceed 100" profile of paper Fig. 4(b).
+    pub fn heavy_tailed(&mut self, std: f32, p_outlier: f64, outlier_scale: f32) -> f32 {
+        let z = self.normal() as f32 * std;
+        if self.f64() < p_outlier {
+            z * outlier_scale
+        } else {
+            z
+        }
+    }
+
+    /// Zipf-distributed rank in [0, n) with exponent `s` (rejection-free
+    /// inverse-CDF over precomputed weights is overkill at our n; linear
+    /// scan over cumulative weights is fine for n <= a few thousand).
+    pub fn zipf(&mut self, cdf: &[f64]) -> usize {
+        let u = self.f64() * cdf[cdf.len() - 1];
+        match cdf.binary_search_by(|c| c.partial_cmp(&u).unwrap()) {
+            Ok(i) => i,
+            Err(i) => i.min(cdf.len() - 1),
+        }
+    }
+
+    /// Fill a slice with scaled normals (synthetic weight init).
+    pub fn fill_normal(&mut self, out: &mut [f32], std: f32) {
+        for v in out.iter_mut() {
+            *v = self.normal() as f32 * std;
+        }
+    }
+
+    /// Random permutation index sample (Fisher-Yates partial shuffle).
+    pub fn choose_k(&mut self, n: usize, k: usize) -> Vec<usize> {
+        let mut idx: Vec<usize> = (0..n).collect();
+        let k = k.min(n);
+        for i in 0..k {
+            let j = i + self.below(n - i);
+            idx.swap(i, j);
+        }
+        idx.truncate(k);
+        idx
+    }
+}
+
+/// Precomputed Zipf CDF helper (pair with `Rng::zipf`).
+pub fn zipf_cdf(n: usize, s: f64) -> Vec<f64> {
+    let mut acc = 0.0;
+    (1..=n)
+        .map(|r| {
+            acc += 1.0 / (r as f64).powf(s);
+            acc
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_seed() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        assert_ne!(
+            (0..8).map(|_| a.next_u64()).collect::<Vec<_>>(),
+            (0..8).map(|_| b.next_u64()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn uniform_mean_near_half() {
+        let mut r = Rng::new(7);
+        let mean: f64 = (0..20_000).map(|_| r.f64()).sum::<f64>() / 20_000.0;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(9);
+        let xs: Vec<f64> = (0..40_000).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / xs.len() as f64;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn exponential_mean() {
+        let mut r = Rng::new(11);
+        let mean: f64 = (0..40_000).map(|_| r.exponential(2.0)).sum::<f64>() / 40_000.0;
+        assert!((mean - 0.5).abs() < 0.02, "mean={mean}");
+    }
+
+    #[test]
+    fn below_in_bounds() {
+        let mut r = Rng::new(13);
+        for _ in 0..1000 {
+            assert!(r.below(17) < 17);
+        }
+    }
+
+    #[test]
+    fn heavy_tail_produces_outliers() {
+        let mut r = Rng::new(17);
+        let n = 200_000;
+        let big = (0..n)
+            .filter(|_| r.heavy_tailed(1.0, 1e-3, 100.0).abs() > 50.0)
+            .count();
+        assert!(big > 20 && big < n / 100, "big={big}");
+    }
+
+    #[test]
+    fn zipf_rank0_most_common() {
+        let cdf = zipf_cdf(50, 1.1);
+        let mut r = Rng::new(19);
+        let mut counts = [0usize; 50];
+        for _ in 0..20_000 {
+            counts[r.zipf(&cdf)] += 1;
+        }
+        assert!(counts[0] > counts[10] && counts[10] > counts[45]);
+    }
+
+    #[test]
+    fn choose_k_unique() {
+        let mut r = Rng::new(23);
+        let ks = r.choose_k(100, 10);
+        let mut sorted = ks.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 10);
+        assert!(ks.iter().all(|&i| i < 100));
+    }
+
+    #[test]
+    fn child_streams_independent() {
+        let base = Rng::new(5);
+        let mut c1 = base.child(1);
+        let mut c2 = base.child(2);
+        assert_ne!(c1.next_u64(), c2.next_u64());
+        // same stream id reproduces
+        let mut c1b = base.child(1);
+        let mut c1a = base.child(1);
+        assert_eq!(c1a.next_u64(), c1b.next_u64());
+    }
+}

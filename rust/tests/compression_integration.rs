@@ -1,0 +1,117 @@
+//! Property tests over the full wire protocol (no PJRT required):
+//! TS + TAB-Q + rANS round-trips, payload accounting consistency, and the
+//! planner/memory-model agreement the early-exit controller relies on.
+
+use splitserve::coordinator::{CompressedKv, CompressedTensor, CompressionConfig};
+use splitserve::memory::{self, ActBits};
+use splitserve::model::ModelConfig;
+use splitserve::planner::{plan, AnalyticAccuracyModel, PlanInputs};
+use splitserve::runtime::LayerKv;
+use splitserve::util::prop::run_cases;
+use splitserve::util::rng::Rng;
+
+fn acts(rng: &mut Rng, rows: usize, cols: usize) -> Vec<f32> {
+    (0..rows * cols).map(|_| rng.heavy_tailed(1.2, 0.005, 80.0)).collect()
+}
+
+#[test]
+fn compressed_tensor_roundtrip_properties() {
+    run_cases(60, 0x91, |_, rng| {
+        let rows = 1 + rng.below(24);
+        let cols = 32 + rng.below(160);
+        let t = acts(rng, rows, cols);
+        let c = CompressionConfig {
+            tau: [1.0f32, 5.0, 10.0][rng.below(3)],
+            q_bar: 2 + rng.below(7) as u32,
+            delta: [0.0, 0.2, 1.0][rng.below(3)],
+            use_rans: rng.below(2) == 0,
+        };
+        let p = CompressedTensor::compress(&t, rows, cols, &c);
+        let back = p.decompress().unwrap();
+        assert_eq!(back.len(), t.len());
+        // outliers exact, bulk bounded by the per-row half-quantum
+        for (i, (a, b)) in t.iter().zip(&back).enumerate() {
+            if a.abs() >= c.tau {
+                assert_eq!(a, b, "outlier must be lossless");
+            } else {
+                let bound = p.below.scales[i / cols] * 0.5 + 1e-4;
+                assert!((a - b).abs() <= bound);
+            }
+        }
+        // wire size monotone-ish sanity: never larger than dense + headers
+        let dense = (rows * cols * 4) as u64;
+        assert!(p.wire_bytes() <= dense + p.above.payload_bytes() + 64);
+    });
+}
+
+#[test]
+fn kv_payload_accounting_vs_memory_model() {
+    // The Eq. (3) memory model is the controller's payload oracle; the
+    // REAL compressed payload must stay within ~2x of it at matched bits
+    // (the model is pre-entropy-coding, the real payload is post).
+    let cfg = ModelConfig::sim7b();
+    let kvw = cfg.kv_width();
+    let mut rng = Rng::new(0x92);
+    let split = 8usize;
+    let n_cloud = 4usize;
+    for &w in &[10usize, 30, 60] {
+        let mut kv = vec![LayerKv::zeros(cfg.max_seq, kvw); n_cloud];
+        for c in &mut kv {
+            for i in 0..w * kvw {
+                c.k[i] = rng.heavy_tailed(1.0, 0.005, 60.0);
+                c.v[i] = rng.heavy_tailed(1.0, 0.005, 60.0);
+            }
+        }
+        let comp = CompressionConfig { q_bar: 8, delta: 0.0, ..Default::default() };
+        let real = CompressedKv::compress(&kv, w, kvw, &comp).wire_bytes();
+        // model: only the cloud segment's share of Eq. (2), at 8 bits
+        let qa = ActBits::uniform(8);
+        let mut cfg_cloud = cfg.clone();
+        cfg_cloud.n_layers = n_cloud;
+        let model = memory::kv_bytes(&cfg_cloud, w, 0, &qa);
+        assert!(
+            real as f64 <= model as f64 * 2.0 && real as f64 >= model as f64 * 0.2,
+            "w={w}: real {real} vs model {model}"
+        );
+    }
+    let _ = split;
+}
+
+#[test]
+fn planner_choice_is_stable_and_deterministic() {
+    let cfg = ModelConfig::sim7b();
+    let inputs = PlanInputs::defaults(cfg, 16 * 1024 * 1024, 128);
+    let a = plan(&inputs, &AnalyticAccuracyModel).unwrap();
+    let b = plan(&inputs, &AnalyticAccuracyModel).unwrap();
+    assert_eq!(a, b, "planning must be deterministic");
+}
+
+#[test]
+fn planner_monotone_in_budget() {
+    // growing the memory budget never reduces the achievable Ψ
+    let cfg = ModelConfig::sim7b();
+    let mut last_psi = 0u64;
+    for mb in [4u64, 8, 16, 32, 64, 128] {
+        if let Some(c) = plan(
+            &PlanInputs::defaults(cfg.clone(), mb * 1024 * 1024, 128),
+            &AnalyticAccuracyModel,
+        ) {
+            assert!(c.psi >= last_psi, "psi regressed at {mb} MB");
+            last_psi = c.psi;
+        }
+    }
+    assert!(last_psi > 0);
+}
+
+#[test]
+fn compression_config_bits_respected_end_to_end() {
+    run_cases(30, 0x93, |_, rng| {
+        let t = acts(rng, 8, 128);
+        for q_bar in [2u32, 4, 8] {
+            let c = CompressionConfig { q_bar, delta: 0.0, use_rans: true, tau: 5.0 };
+            let p = CompressedTensor::compress(&t, 8, 128, &c);
+            assert!(p.chosen_bits <= q_bar - 1, "bits {} > budget {}", p.chosen_bits, q_bar);
+            assert_eq!(p.coded.decode().unwrap(), p.below.codes);
+        }
+    });
+}

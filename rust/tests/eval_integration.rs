@@ -1,0 +1,188 @@
+//! Eval-harness integration over real artifacts: the synthetic suites must
+//! give the full-precision reference a real signal (well above chance),
+//! aggressive quantization must degrade it, and the paper's core ablation
+//! (Table 5: TAB-Q alone collapses, TS+TAB-Q recovers) must reproduce.
+//!
+//! Requires `make artifacts`. Uses a shortened layer stack for speed; the
+//! bench binaries run the full-depth versions.
+
+use std::rc::Rc;
+
+use splitserve::coordinator::CompressionConfig;
+use splitserve::eval::{
+    build_suite, calibrate, evaluate, generate_corpus, perplexity, ActTreatment, Corpus,
+    EvalRuntime, SuiteSpec,
+};
+use splitserve::model::{ModelConfig, ModelWeights};
+use splitserve::quant::baselines::ActQuantMode;
+use splitserve::quant::{apply_opsc, OpscConfig};
+use splitserve::runtime::Engine;
+
+fn cfg(n_layers: usize) -> ModelConfig {
+    let mut c = ModelConfig::sim7b();
+    c.n_layers = n_layers;
+    c
+}
+
+fn engine() -> Rc<Engine> {
+    Rc::new(Engine::load("artifacts", &ModelConfig::sim7b()).expect("run `make artifacts`"))
+}
+
+fn reference(eng: Rc<Engine>, c: &ModelConfig, seed: u64) -> EvalRuntime {
+    let w = Rc::new(ModelWeights::synthetic(c, seed));
+    EvalRuntime::new(eng, w, ActTreatment::None).unwrap()
+}
+
+const SPEC: SuiteSpec = SuiteSpec {
+    name: "HS-sim",
+    n_items: 16,
+    ctx_len: 16,
+    cont_len: 6,
+    n_choices: 4,
+    temp: 0.8,
+    hard_distractors: false,
+};
+
+#[test]
+fn reference_beats_chance_and_quant_degrades() {
+    let c = cfg(6);
+    let eng = engine();
+    let fp = reference(eng.clone(), &c, 9);
+    let suite = build_suite(&fp, &SPEC, 1).unwrap();
+
+    let acc_fp = evaluate(&suite, &fp).unwrap();
+    assert!(acc_fp > 50.0, "reference must beat 25% chance clearly: {acc_fp}");
+
+    // brutal 2-bit per-tensor activation quant must hurt
+    let crushed = EvalRuntime::new(
+        eng,
+        Rc::new(ModelWeights::synthetic(&c, 9)),
+        ActTreatment::EveryLayer(ActQuantMode::PerTensor { bits: 2 }),
+    )
+    .unwrap();
+    let acc_crushed = evaluate(&suite, &crushed).unwrap();
+    assert!(
+        acc_crushed < acc_fp,
+        "2-bit activations must degrade accuracy: {acc_crushed} vs {acc_fp}"
+    );
+}
+
+#[test]
+fn table5_ablation_shape_ts_rescues_tabq() {
+    // Table 5: TAB-Q alone (no TS, tau = inf) collapses; TS + TAB-Q stays
+    // near baseline. Run at an aggressive bit budget to expose the effect.
+    let c = cfg(6);
+    let eng = engine();
+    let fp = reference(eng.clone(), &c, 11);
+    let suite = build_suite(&fp, &SPEC, 2).unwrap();
+    let acc_fp = evaluate(&suite, &fp).unwrap();
+
+    let w = || Rc::new(ModelWeights::synthetic(&c, 11));
+    let split = 3;
+    let tabq_only = EvalRuntime::new(
+        eng.clone(),
+        w(),
+        ActTreatment::SplitCompression {
+            split,
+            compression: CompressionConfig { tau: f32::INFINITY, q_bar: 4, delta: 0.0, use_rans: false },
+        },
+    )
+    .unwrap();
+    let ts_tabq = EvalRuntime::new(
+        eng,
+        w(),
+        ActTreatment::SplitCompression {
+            split,
+            compression: CompressionConfig { tau: 5.0, q_bar: 4, delta: 0.0, use_rans: false },
+        },
+    )
+    .unwrap();
+    let acc_tabq = evaluate(&suite, &tabq_only).unwrap();
+    let acc_ts = evaluate(&suite, &ts_tabq).unwrap();
+    assert!(
+        acc_ts >= acc_tabq,
+        "TS must not hurt: ts+tabq {acc_ts} vs tabq {acc_tabq} (fp {acc_fp})"
+    );
+    assert!(
+        acc_ts >= acc_fp - 15.0,
+        "TS+TAB-Q should stay in the baseline's neighborhood: {acc_ts} vs {acc_fp}"
+    );
+}
+
+#[test]
+fn perplexity_increases_with_weight_quant() {
+    let c = cfg(6);
+    let eng = engine();
+    let fp = reference(eng.clone(), &c, 13);
+    // model-coupled corpus: the reference speaks it, so it scores well
+    let windows = splitserve::eval::model_corpus(&fp, Corpus::Wiki, 4, 3).unwrap();
+    let ppl_fp = splitserve::eval::perplexity_windows(&fp, &windows).unwrap();
+
+    let mut wq = ModelWeights::synthetic(&c, 13);
+    apply_opsc(&mut wq, &OpscConfig::new(6, 3, 3)); // 3-bit everything
+    let q = EvalRuntime::new(eng, Rc::new(wq), ActTreatment::None).unwrap();
+    let ppl_q = splitserve::eval::perplexity_windows(&q, &windows).unwrap();
+
+    assert!(
+        ppl_fp > 1.0 && ppl_fp < c.vocab as f64 * 0.5,
+        "reference must beat chance on its own text: {ppl_fp}"
+    );
+    assert!(ppl_q > ppl_fp, "3-bit weights must raise ppl: {ppl_q} vs {ppl_fp}");
+
+    // independent Markov corpus sanity: still computable, near-chance
+    let stream = generate_corpus(Corpus::Wiki, c.vocab, 64 * 2, 3);
+    let ppl_stream = perplexity(&fp, &stream).unwrap();
+    assert!(ppl_stream.is_finite() && ppl_stream > 1.0);
+}
+
+#[test]
+fn calibration_stats_sane() {
+    let c = cfg(4);
+    let eng = engine();
+    let fp = reference(eng, &c, 15);
+    let stats = calibrate(&fp, 3, 1).unwrap();
+    assert_eq!(stats.input_absmax.len(), 4);
+    for layer in &stats.input_absmax {
+        assert_eq!(layer.len(), c.d_model);
+        assert!(layer.iter().all(|&x| x > 0.0 && x.is_finite()));
+    }
+    // deeper layers see activations at least comparable to the embedding
+    let m0: f32 = stats.input_absmax[0].iter().fold(0f32, |a, &b| a.max(b));
+    let m3: f32 = stats.input_absmax[3].iter().fold(0f32, |a, &b| a.max(b));
+    assert!(m3 > m0 * 0.5, "m0={m0} m3={m3}");
+}
+
+#[test]
+fn clamping_probe_changes_scores() {
+    // Fig. 4(a) instrument: clamping at a tiny limit must change choice
+    // scores; clamping at a huge limit must not.
+    let c = cfg(6);
+    let eng = engine();
+    let fp = reference(eng.clone(), &c, 17);
+    let suite = build_suite(&fp, &SPEC, 4).unwrap();
+    let item = &suite.items[0];
+    let base = fp.choice_logprob(&item.context, &item.choices[0]).unwrap();
+
+    let w = || Rc::new(ModelWeights::synthetic(&c, 17));
+    let huge = EvalRuntime::new(eng.clone(), w(), ActTreatment::ClampAll { limit: 1e9 }).unwrap();
+    let tiny = EvalRuntime::new(eng, w(), ActTreatment::ClampAll { limit: 0.5 }).unwrap();
+    let lp_huge = huge.choice_logprob(&item.context, &item.choices[0]).unwrap();
+    let lp_tiny = tiny.choice_logprob(&item.context, &item.choices[0]).unwrap();
+    assert!((lp_huge - base).abs() < 1e-6, "no-op clamp must not change scores");
+    assert!((lp_tiny - base).abs() > 1e-3, "aggressive clamp must change scores");
+}
+
+#[test]
+fn hidden_capture_shows_outliers() {
+    // Fig. 4(b): the synthetic models must exhibit rare large activations
+    // in mid-stack hidden states.
+    let c = cfg(6);
+    let eng = engine();
+    let fp = reference(eng, &c, 19);
+    let tokens: Vec<u32> = (1..40u32).collect();
+    let h = fp.capture_hidden(&tokens, 4).unwrap();
+    let max = h.iter().fold(0f32, |a, &b| a.max(b.abs()));
+    let frac_small = h.iter().filter(|x| x.abs() < 10.0).count() as f64 / h.len() as f64;
+    assert!(max > 10.0, "expected outliers, max={max}");
+    assert!(frac_small > 0.9, "outliers must be rare: {frac_small}");
+}

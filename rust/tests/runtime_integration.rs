@@ -1,0 +1,194 @@
+//! Integration: python-AOT artifacts executed from Rust must reproduce the
+//! golden vectors jax computed at export time (pinning the entire
+//! python → HLO-text → PJRT → Rust numerics chain), and the NodeRuntime
+//! layer pipeline must be self-consistent (decode step == prefill row).
+//!
+//! Requires `make artifacts`.
+
+use std::rc::Rc;
+
+use splitserve::model::{ModelConfig, ModelWeights};
+use splitserve::runtime::{Engine, LayerKv, NodeRuntime};
+
+const ARTIFACTS: &str = "artifacts";
+
+fn engine7b() -> Rc<Engine> {
+    Rc::new(Engine::load(ARTIFACTS, &ModelConfig::sim7b()).expect("run `make artifacts`"))
+}
+
+fn assert_close(got: &[f32], want: &[f32], tol: f32, what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length");
+    let mut worst = 0f32;
+    for (g, w) in got.iter().zip(want) {
+        worst = worst.max((g - w).abs());
+    }
+    assert!(worst <= tol, "{what}: max abs err {worst} > {tol}");
+}
+
+#[test]
+fn golden_layer_prefill_matches_jax() {
+    let engine = engine7b();
+    let c = &engine.class;
+    let (x, _) = c.read_golden("prefill_x").unwrap();
+    let names = ["wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down", "g1", "g2"];
+    let weights: Vec<(Vec<f32>, Vec<usize>)> = names
+        .iter()
+        .map(|n| c.read_golden(&format!("w_{n}")).unwrap())
+        .collect();
+    let (cos, _) = c.read_golden("rope_cos").unwrap();
+    let (sin, _) = c.read_golden("rope_sin").unwrap();
+    let half = c.head_dim / 2;
+    let p = c.prefill_len;
+    let hx = engine.upload(&x, &[p, c.d_model]).unwrap();
+    let cb = engine.upload(&cos[..p * half], &[p, half]).unwrap();
+    let sb = engine.upload(&sin[..p * half], &[p, half]).unwrap();
+    let wbufs: Vec<xla::PjRtBuffer> = weights
+        .iter()
+        .map(|(w, s)| engine.upload(w, s).unwrap())
+        .collect();
+    let mut args: Vec<&xla::PjRtBuffer> = vec![&hx, &cb, &sb];
+    args.extend(wbufs.iter());
+    let out = engine.run("layer_prefill", &args).unwrap();
+    let (want_y, _) = c.read_golden("prefill_y").unwrap();
+    let (want_k, _) = c.read_golden("prefill_k").unwrap();
+    let (want_v, _) = c.read_golden("prefill_v").unwrap();
+    assert_close(&out[0], &want_y, 1e-4, "prefill y");
+    assert_close(&out[1], &want_k, 1e-4, "prefill k");
+    assert_close(&out[2], &want_v, 1e-4, "prefill v");
+}
+
+#[test]
+fn golden_layer_decode_matches_jax() {
+    let engine = engine7b();
+    let c = &engine.class;
+    let (x, _) = c.read_golden("decode_x").unwrap();
+    let (kc, _) = c.read_golden("decode_kc").unwrap();
+    let (vc, _) = c.read_golden("decode_vc").unwrap();
+    let names = ["wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down", "g1", "g2"];
+    let weights: Vec<(Vec<f32>, Vec<usize>)> = names
+        .iter()
+        .map(|n| c.read_golden(&format!("w_{n}")).unwrap())
+        .collect();
+    let (cos, _) = c.read_golden("rope_cos").unwrap();
+    let (sin, _) = c.read_golden("rope_sin").unwrap();
+    let half = c.head_dim / 2;
+    let kvw = c.n_heads * c.head_dim;
+    let hx = engine.upload(&x, &[1, c.d_model]).unwrap();
+    let kb = engine.upload(&kc, &[c.max_seq, kvw]).unwrap();
+    let vb = engine.upload(&vc, &[c.max_seq, kvw]).unwrap();
+    let pb = engine.upload_i32(&[5], &[1]).unwrap();
+    let cb = engine.upload(&cos[5 * half..6 * half], &[1, half]).unwrap();
+    let sb = engine.upload(&sin[5 * half..6 * half], &[1, half]).unwrap();
+    let wbufs: Vec<xla::PjRtBuffer> = weights
+        .iter()
+        .map(|(w, s)| engine.upload(w, s).unwrap())
+        .collect();
+    let mut args: Vec<&xla::PjRtBuffer> = vec![&hx, &kb, &vb, &pb, &cb, &sb];
+    args.extend(wbufs.iter());
+    let out = engine.run("layer_decode", &args).unwrap();
+    let (want_y, _) = c.read_golden("decode_y").unwrap();
+    let (want_kc, _) = c.read_golden("decode_kc_out").unwrap();
+    let (want_vc, _) = c.read_golden("decode_vc_out").unwrap();
+    assert_close(&out[0], &want_y, 1e-4, "decode y");
+    assert_close(&out[1], &want_kc, 1e-4, "decode k_cache");
+    assert_close(&out[2], &want_vc, 1e-4, "decode v_cache");
+}
+
+#[test]
+fn golden_lm_head_matches_jax() {
+    let engine = engine7b();
+    let c = &engine.class;
+    let (x, _) = c.read_golden("prefill_x").unwrap();
+    let (gf, _) = c.read_golden("lmh_gf").unwrap();
+    let (w_out, _) = c.read_golden("lmh_w_out").unwrap();
+    let hx = engine.upload(&x, &[c.prefill_len, c.d_model]).unwrap();
+    let gb = engine.upload(&gf, &[c.d_model]).unwrap();
+    let wb = engine.upload(&w_out, &[c.d_model, c.vocab]).unwrap();
+    let out = engine.run("lm_head_prefill", &[&hx, &gb, &wb]).unwrap();
+    let (want, _) = c.read_golden("lmh_logits").unwrap();
+    assert_close(&out[0], &want, 1e-3, "lm head logits");
+}
+
+#[test]
+fn node_decode_reproduces_prefill_rows() {
+    // The serving-critical invariant across the artifact boundary:
+    // decode(t) with caches from prefill rows 0..t must equal prefill row t.
+    let mut cfg = ModelConfig::sim7b();
+    cfg.n_layers = 2; // keep the test fast
+    let engine = engine7b();
+    let weights = Rc::new(ModelWeights::synthetic(&cfg, 42));
+    let node = NodeRuntime::new(engine, weights.clone(), 0..2, true).unwrap();
+
+    let tokens: Vec<u32> = (0..10u32).map(|i| (i * 37) % 512).collect();
+    let x = weights.embed_padded(&tokens, cfg.prefill_len);
+    let (h_pre, kv_rows) = node.prefill(&x).unwrap();
+
+    let t = 6usize;
+    let kvw = cfg.kv_width();
+    let mut kv: Vec<LayerKv> = kv_rows
+        .iter()
+        .map(|(k_rows, v_rows)| {
+            let mut c = LayerKv::zeros(cfg.max_seq, kvw);
+            c.k[..t * kvw].copy_from_slice(&k_rows[..t * kvw]);
+            c.v[..t * kvw].copy_from_slice(&v_rows[..t * kvw]);
+            c
+        })
+        .collect();
+    let xt = weights.embed(&tokens[t..t + 1]);
+    let h_dec = node.decode(&xt, &mut kv, t).unwrap();
+
+    let d = cfg.d_model;
+    assert_close(&h_dec, &h_pre[t * d..(t + 1) * d], 5e-3, "decode vs prefill row");
+    // and the logits agree too
+    let lg_dec = node.logits_decode(&h_dec).unwrap();
+    let lg_pre = node.logits_prefill(&h_pre).unwrap();
+    assert_close(&lg_dec, &lg_pre[t * cfg.vocab..(t + 1) * cfg.vocab], 5e-2, "logits");
+}
+
+#[test]
+fn split_across_two_nodes_matches_single_node() {
+    // Split computing correctness: front(0..1) + back(1..2) must equal a
+    // single node running 0..2.
+    let mut cfg = ModelConfig::sim7b();
+    cfg.n_layers = 2;
+    let engine = engine7b();
+    let weights = Rc::new(ModelWeights::synthetic(&cfg, 43));
+    let full = NodeRuntime::new(engine.clone(), weights.clone(), 0..2, true).unwrap();
+    let front = NodeRuntime::new(engine.clone(), weights.clone(), 0..1, false).unwrap();
+    let back = NodeRuntime::new(engine.clone(), weights.clone(), 1..2, true).unwrap();
+
+    let tokens: Vec<u32> = vec![5, 99, 210, 340];
+    let x = weights.embed_padded(&tokens, cfg.prefill_len);
+    let (h_full, _) = full.prefill(&x).unwrap();
+    let (h_mid, _) = front.prefill(&x).unwrap();
+    let (h_split, _) = back.prefill(&h_mid).unwrap();
+    assert_close(&h_split, &h_full, 1e-4, "split prefill == full prefill");
+}
+
+#[test]
+fn rust_rope_tables_match_jax() {
+    // NodeRuntime computes RoPE tables host-side (f64 trig, f32 cast);
+    // they must agree with jax's f32 tables to well below model tolerance.
+    let engine = engine7b();
+    let c = &engine.class;
+    let (cos, _) = c.read_golden("rope_cos").unwrap();
+    let (sin, _) = c.read_golden("rope_sin").unwrap();
+    let t = splitserve::runtime::node::RopeTables::new(c.max_seq, c.head_dim, 10000.0);
+    assert_close(&t.cos, &cos, 1e-5, "rope cos");
+    assert_close(&t.sin, &sin, 1e-5, "rope sin");
+}
+
+#[test]
+fn decode_position_must_be_in_bounds() {
+    let mut cfg = ModelConfig::sim7b();
+    cfg.n_layers = 1;
+    let engine = engine7b();
+    let weights = Rc::new(ModelWeights::synthetic(&cfg, 44));
+    let node = NodeRuntime::new(engine, weights.clone(), 0..1, false).unwrap();
+    let x = weights.embed(&[3]);
+    let mut kv = node.fresh_kv();
+    let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        let _ = node.decode(&x, &mut kv, cfg.max_seq); // out of bounds
+    }));
+    assert!(res.is_err(), "out-of-bounds position must be rejected");
+}

@@ -1,0 +1,195 @@
+//! End-to-end serving integration over real PJRT artifacts:
+//! the split pipeline (edge front + compressed wire + stateless cloud)
+//! must reproduce monolithic single-node generation exactly when the
+//! compression is configured lossless, must keep working (approximately)
+//! under the paper's default lossy settings, and must honor the
+//! Algorithm-2 controller under tight deadlines.
+//!
+//! Requires `make artifacts`.
+
+use std::rc::Rc;
+
+use splitserve::coordinator::{build_pipeline, CompressionConfig, DeploymentSpec, Request};
+use splitserve::model::{ModelConfig, ModelWeights};
+use splitserve::quant::OpscConfig;
+use splitserve::runtime::{Engine, NodeRuntime};
+
+fn small_cfg(n_layers: usize) -> ModelConfig {
+    let mut cfg = ModelConfig::sim7b();
+    cfg.n_layers = n_layers;
+    cfg
+}
+
+fn engine() -> Rc<Engine> {
+    Rc::new(Engine::load("artifacts", &ModelConfig::sim7b()).expect("run `make artifacts`"))
+}
+
+/// Greedy generation on a single monolithic node (the no-split oracle).
+fn monolithic_generate(
+    engine: Rc<Engine>,
+    cfg: &ModelConfig,
+    seed: u64,
+    prompt: &[u32],
+    max_new: usize,
+) -> Vec<u32> {
+    let weights = Rc::new(ModelWeights::synthetic(cfg, seed));
+    let node = NodeRuntime::new(engine, weights.clone(), 0..cfg.n_layers, true).unwrap();
+    let x = weights.embed_padded(prompt, cfg.prefill_len);
+    let (h, kv_rows) = node.prefill(&x).unwrap();
+    let mut kv = node.install_prefill_kv(&kv_rows, prompt.len());
+    let logits = node.logits_prefill(&h).unwrap();
+    let row = &logits[(prompt.len() - 1) * cfg.vocab..prompt.len() * cfg.vocab];
+    let mut next = argmax(row);
+    let mut out = vec![];
+    for _ in 0..max_new {
+        out.push(next);
+        if next == 0 || out.len() == max_new {
+            break;
+        }
+        let pos = prompt.len() + out.len() - 1;
+        let xt = weights.embed(&[next]);
+        let h = node.decode(&xt, &mut kv, pos).unwrap();
+        let lg = node.logits_decode(&h).unwrap();
+        next = argmax(&lg);
+    }
+    out
+}
+
+fn argmax(v: &[f32]) -> u32 {
+    let mut best = (f32::NEG_INFINITY, 0usize);
+    for (i, &x) in v.iter().enumerate() {
+        if x > best.0 {
+            best = (x, i);
+        }
+    }
+    best.1 as u32
+}
+
+#[test]
+fn lossless_split_matches_monolithic_exactly() {
+    let cfg = small_cfg(4);
+    let eng = engine();
+    let want = monolithic_generate(eng.clone(), &cfg, 42, &[3, 141, 59, 26], 8);
+
+    let mut spec = DeploymentSpec::defaults(cfg, 2);
+    spec.opsc = OpscConfig::new(2, 16, 16); // no weight quant
+    // τ = 0 sends every element through the lossless CSR side
+    spec.compression = CompressionConfig { tau: 0.0, q_bar: 8, delta: 0.2, use_rans: true };
+    let mut pipe = build_pipeline(eng, &spec).unwrap();
+    let res = pipe.generate(&Request::new(1, vec![3, 141, 59, 26], 8)).unwrap();
+    assert_eq!(res.tokens, want, "lossless split must equal monolithic");
+}
+
+#[test]
+fn default_compression_generates_and_accounts() {
+    let cfg = small_cfg(4);
+    let eng = engine();
+    let spec = DeploymentSpec::defaults(cfg, 2);
+    let mut pipe = build_pipeline(eng, &spec).unwrap();
+    let res = pipe.generate(&Request::new(2, vec![10, 20, 30], 6)).unwrap();
+    assert!(!res.tokens.is_empty());
+    assert!(res.total_uplink_bytes() > 0);
+    assert!(res.total_downlink_bytes() > 0);
+    assert!(res.total_latency_s() > 0.0);
+    // paper default q_bar = 4: hidden block bits must be <= 3
+    for s in &res.steps {
+        assert!(s.chosen_bits <= 3, "TAB-Q must respect the bit budget");
+        assert!(s.kv_transmitted);
+    }
+    // compressed decode payloads must be far below dense f32:
+    // dense = hidden row + 2 KV caches of cloud layers
+    let kvw = pipe.edge.node.weights.cfg.kv_width();
+    let w = 3 + res.tokens.len();
+    let dense = 4 * (kvw + 2 * 2 * w * kvw) as u64;
+    let mean_up = res.steps.iter().map(|s| s.uplink_bytes).sum::<u64>() / res.steps.len() as u64;
+    assert!(mean_up < dense / 3, "mean uplink {mean_up} vs dense {dense}");
+}
+
+#[test]
+fn lossy_compression_stays_close_to_monolithic() {
+    let cfg = small_cfg(4);
+    let eng = engine();
+    let want = monolithic_generate(eng.clone(), &cfg, 42, &[7, 90, 200], 6);
+    let mut spec = DeploymentSpec::defaults(cfg, 2);
+    spec.opsc = OpscConfig::new(2, 16, 16);
+    spec.compression = CompressionConfig { tau: 1.0, q_bar: 8, delta: 0.0, use_rans: true };
+    let mut pipe = build_pipeline(eng, &spec).unwrap();
+    let res = pipe.generate(&Request::new(3, vec![7, 90, 200], 6)).unwrap();
+    // token-level agreement on the first tokens (small drift later is fine)
+    assert_eq!(res.tokens[0], want[0], "first token must survive 8-bit compression");
+}
+
+#[test]
+fn ikv0_mode_matches_kv_mode() {
+    // The same request served with and without KV transmission must agree
+    // when compression is lossless: the cloud recomputes what it would
+    // otherwise receive.
+    let cfg = small_cfg(3);
+    let eng = engine();
+    let mut spec = DeploymentSpec::defaults(cfg.clone(), 1);
+    spec.opsc = OpscConfig::new(1, 16, 16);
+    spec.compression = CompressionConfig { tau: 0.0, q_bar: 8, delta: 0.2, use_rans: false };
+    let mut pipe = build_pipeline(eng.clone(), &spec).unwrap();
+    let kv_tokens = pipe.generate(&Request::new(4, vec![11, 22], 5)).unwrap().tokens;
+
+    // force I_kv = 0 by generating through the edge API manually
+    let mut pipe2 = build_pipeline(eng, &spec).unwrap();
+    let (payload, mut state, _) = pipe2.edge.prefill(5, &[11, 22]).unwrap();
+    let (reply, _) = pipe2.cloud.handle(&payload).unwrap();
+    pipe2.edge.absorb_reply(&mut state, payload.pos, &reply.new_kv_rows);
+    let mut tokens = vec![reply.token];
+    for _ in 0..4 {
+        let t = *tokens.last().unwrap();
+        if t == 0 {
+            break;
+        }
+        let (payload, _) = pipe2.edge.decode_step(&mut state, t, false, None).unwrap();
+        assert!(payload.kv.is_none());
+        let (reply, _) = pipe2.cloud.handle(&payload).unwrap();
+        tokens.push(reply.token);
+    }
+    assert_eq!(tokens, kv_tokens, "I_kv=0 must reproduce I_kv=1 losslessly");
+}
+
+#[test]
+fn tight_deadline_triggers_early_exit() {
+    let cfg = small_cfg(4);
+    let eng = engine();
+    let mut spec = DeploymentSpec::defaults(cfg, 2);
+    spec.deadline_s = Some(1e-6); // impossible deadline
+    let mut pipe = build_pipeline(eng, &spec).unwrap();
+    let res = pipe.generate(&Request::new(6, vec![10, 20, 30], 20)).unwrap();
+    assert!(
+        res.tokens_dropped > 0 || res.tokens.len() < 20,
+        "impossible deadline must cut generation: {res:?}"
+    );
+}
+
+#[test]
+fn relaxed_deadline_degrades_gracefully() {
+    // A deadline that only KV-dropping can meet: the controller must
+    // escalate rather than abort.
+    let cfg = small_cfg(4);
+    let eng = engine();
+    let mut spec = DeploymentSpec::defaults(cfg, 2);
+    spec.deadline_s = Some(0.25);
+    let mut pipe = build_pipeline(eng, &spec).unwrap();
+    let res = pipe.generate(&Request::new(7, vec![10, 20, 30], 8)).unwrap();
+    assert!(!res.tokens.is_empty());
+    let fs = res.final_settings.unwrap();
+    // settings may have escalated; whatever happened, every transmitted
+    // step respected the ladder (bits within budget)
+    assert!(fs.qa_bits <= 4);
+}
+
+#[test]
+fn opsc_quantized_edge_still_generates() {
+    let cfg = small_cfg(4);
+    let eng = engine();
+    let mut spec = DeploymentSpec::defaults(cfg, 2);
+    spec.opsc = OpscConfig::new(2, 4, 16); // paper's 4-bit edge
+    let mut pipe = build_pipeline(eng, &spec).unwrap();
+    let res = pipe.generate(&Request::new(8, vec![100, 200, 300], 6)).unwrap();
+    assert!(!res.tokens.is_empty());
+    assert!(res.tokens.iter().all(|&t| (t as usize) < 512));
+}
