@@ -1,6 +1,11 @@
 //! Hot-path microbenchmarks (in-tree harness; criterion unavailable
 //! offline). These are the §Perf numbers in EXPERIMENTS.md: the request-
-//! path costs the coordinator adds on top of PJRT compute.
+//! path costs the coordinator adds on top of engine compute, with
+//! before/after pairs for every stage the fused compression engine
+//! replaced (reference = the unfused seed path, kept as the oracle).
+//!
+//! Emits a machine-readable report to `BENCH_hot_paths.json` (override
+//! with the `BENCH_JSON` env var); `scripts/bench.sh` is the runner.
 
 #[path = "common.rs"]
 mod common;
@@ -10,80 +15,162 @@ use std::time::Duration;
 
 use common::{bench_cfg, load_engine};
 use splitserve::channel::{optimize_rate, ChannelParams, LinkSim};
-use splitserve::coordinator::{build_pipeline, CompressedTensor, CompressionConfig, DeploymentSpec, Request};
+use splitserve::coordinator::{
+    build_pipeline, CompressedKv, CompressedTensor, CompressionConfig, DeploymentSpec, Request,
+};
 use splitserve::eval::{ActTreatment, EvalRuntime};
 use splitserve::model::ModelWeights;
-use splitserve::quant::rans;
+use splitserve::quant::{rans, CompressionScratch};
 use splitserve::quant::{tabq_adaptive, tabq_fixed, threshold_split};
-use splitserve::util::bench::bench_fn;
+use splitserve::runtime::LayerKv;
+use splitserve::util::bench::{bench_recorded, JsonReport};
 use splitserve::util::rng::Rng;
 
 fn main() -> anyhow::Result<()> {
     let target = Duration::from_millis(400);
     let mut rng = Rng::new(5);
+    let mut report = JsonReport::new();
 
     // A realistic hidden block (1 decode row) and a KV-sized block.
     let d = 128usize;
     let row: Vec<f32> = (0..d).map(|_| rng.heavy_tailed(1.0, 0.001, 120.0)).collect();
     let kv_block: Vec<f32> = (0..50 * d).map(|_| rng.heavy_tailed(0.8, 0.001, 60.0)).collect();
 
-    bench_fn("ts/threshold_split 1x128", target, || {
+    // ---- stage benches: reference (seed) path ----
+    bench_recorded(&mut report, "ts/threshold_split 1x128", target, || {
         std::hint::black_box(threshold_split(&row, 1, d, 5.0));
     });
-    bench_fn("ts/threshold_split 50x128", target, || {
+    bench_recorded(&mut report, "ts/threshold_split 50x128", target, || {
         std::hint::black_box(threshold_split(&kv_block, 50, d, 5.0));
     });
-    bench_fn("tabq/fixed 50x128 @3b", target, || {
+    bench_recorded(&mut report, "tabq/fixed 50x128 @3b", target, || {
         std::hint::black_box(tabq_fixed(&kv_block, 50, d, 3));
     });
-    bench_fn("tabq/adaptive 50x128 qbar=4", target, || {
+    bench_recorded(&mut report, "tabq/adaptive 50x128 qbar=4", target, || {
         std::hint::black_box(tabq_adaptive(&kv_block, 50, d, 4, 0.2));
     });
 
     let blk = tabq_fixed(&kv_block, 50, d, 3);
-    bench_fn("rans/encode 6400 codes", target, || {
-        std::hint::black_box(rans::encode_u16(&blk.codes));
+    bench_recorded(&mut report, "rans/encode 6400 codes", target, || {
+        std::hint::black_box(rans::encode_u16(&blk.codes).unwrap());
     });
-    let enc = rans::encode_u16(&blk.codes);
-    bench_fn("rans/decode 6400 codes", target, || {
+    let enc = rans::encode_u16(&blk.codes)?;
+    bench_recorded(&mut report, "rans/decode 6400 codes", target, || {
         std::hint::black_box(rans::decode_u16(&enc).unwrap());
     });
+    let mut enc_scratch = rans::RansEncScratch::default();
+    bench_recorded(&mut report, "rans/encode 6400 codes (scratch)", target, || {
+        std::hint::black_box(rans::encode_u16_with(&mut enc_scratch, &blk.codes).unwrap());
+    });
+    let mut dec_scratch = rans::RansDecScratch::default();
+    let mut dec_out: Vec<u16> = Vec::new();
+    bench_recorded(&mut report, "rans/decode 6400 codes (scratch)", target, || {
+        rans::decode_u16_with(&mut dec_scratch, &enc, &mut dec_out).unwrap();
+        std::hint::black_box(dec_out.len());
+    });
 
+    // ---- protocol-level before/after: reference vs fused engine ----
     let comp = CompressionConfig::default();
-    bench_fn("protocol/compress 50x128 (TS+TABQ+rANS)", target, || {
+    bench_recorded(&mut report, "protocol/compress 50x128 (reference path)", target, || {
+        std::hint::black_box(CompressedTensor::compress_reference(&kv_block, 50, d, &comp));
+    });
+    bench_recorded(&mut report, "protocol/compress 50x128 (TS+TABQ+rANS)", target, || {
         std::hint::black_box(CompressedTensor::compress(&kv_block, 50, d, &comp));
     });
+    let mut scratch = CompressionScratch::default();
+    bench_recorded(&mut report, "protocol/compress 50x128 (fused, owned scratch)", target, || {
+        std::hint::black_box(CompressedTensor::compress_with(&mut scratch, &kv_block, 50, d, &comp));
+    });
+    bench_recorded(&mut report, "protocol/compress 1x128 (TS+TABQ+rANS)", target, || {
+        std::hint::black_box(CompressedTensor::compress(&row, 1, d, &comp));
+    });
     let packet = CompressedTensor::compress(&kv_block, 50, d, &comp);
-    bench_fn("protocol/decompress 50x128", target, || {
+    bench_recorded(&mut report, "protocol/decompress 50x128", target, || {
         std::hint::black_box(packet.decompress().unwrap());
     });
+    bench_recorded(&mut report, "protocol/decompress 50x128 (scratch)", target, || {
+        std::hint::black_box(packet.decompress_with(&mut scratch).unwrap());
+    });
 
+    // ---- KV fan-out: serial reference vs scoped-thread fused ----
+    let n_layers = 4usize;
+    let used = 50usize;
+    let mut kv = vec![LayerKv::zeros(64, d); n_layers];
+    for c in &mut kv {
+        for i in 0..used * d {
+            c.k[i] = rng.heavy_tailed(0.8, 0.001, 60.0);
+            c.v[i] = rng.heavy_tailed(0.8, 0.001, 60.0);
+        }
+    }
+    bench_recorded(&mut report, "protocol/kv 4 layers 50x128 (reference serial)", target, || {
+        let layers: Vec<_> = kv
+            .iter()
+            .map(|c| {
+                (
+                    CompressedTensor::compress_reference(&c.k[..used * d], used, d, &comp),
+                    CompressedTensor::compress_reference(&c.v[..used * d], used, d, &comp),
+                )
+            })
+            .collect();
+        std::hint::black_box(layers);
+    });
+    bench_recorded(&mut report, "protocol/kv 4 layers 50x128 (fused parallel)", target, || {
+        std::hint::black_box(CompressedKv::compress(&kv, used, d, &comp));
+    });
+
+    let speedup = |before: &str, after: &str, report: &JsonReport| {
+        let (b, a) = (report.median_ns(before), report.median_ns(after));
+        if a > 0.0 && b > 0.0 {
+            println!("speedup {after:<48} {:.2}x vs reference", b / a);
+        }
+    };
+    speedup(
+        "protocol/compress 50x128 (reference path)",
+        "protocol/compress 50x128 (TS+TABQ+rANS)",
+        &report,
+    );
+    speedup(
+        "protocol/compress 50x128 (reference path)",
+        "protocol/compress 50x128 (fused, owned scratch)",
+        &report,
+    );
+    speedup(
+        "protocol/kv 4 layers 50x128 (reference serial)",
+        "protocol/kv 4 layers 50x128 (fused parallel)",
+        &report,
+    );
+
+    // ---- channel + end-to-end context ----
     let p = ChannelParams::default();
-    bench_fn("channel/optimize_rate (Eq. 13)", target, || {
+    bench_recorded(&mut report, "channel/optimize_rate (Eq. 13)", target, || {
         std::hint::black_box(optimize_rate(&p, 1e5, 1e8));
     });
     let mut link = LinkSim::new(p, 2e7, 1);
-    bench_fn("channel/transfer 4KB", target, || {
+    bench_recorded(&mut report, "channel/transfer 4KB", target, || {
         std::hint::black_box(link.transfer(4096));
     });
 
-    // End-to-end decode step (real PJRT) for context.
+    // End-to-end decode step (engine compute) for context.
     let cfg = bench_cfg("7b");
     let engine = load_engine(&cfg);
     let split = cfg.n_layers * 2 / 3;
     let mut pipe = build_pipeline(engine.clone(), &DeploymentSpec::defaults(cfg.clone(), split))?;
-    bench_fn("pipeline/generate 4 tokens (12-layer)", Duration::from_secs(3), || {
+    bench_recorded(&mut report, "pipeline/generate 4 tokens (12-layer)", Duration::from_secs(3), || {
         std::hint::black_box(pipe.generate(&Request::new(1, vec![5, 6, 7], 4)).unwrap());
     });
 
-    // Raw PJRT prefill cost for the L2 accounting.
+    // Raw engine prefill cost for the L2 accounting.
     let model = EvalRuntime::new(
         engine,
         Rc::new(ModelWeights::synthetic(&cfg, 42)),
         ActTreatment::None,
     )?;
-    bench_fn("runtime/prefill 64x128 (12 layers)", Duration::from_secs(3), || {
+    bench_recorded(&mut report, "runtime/prefill 64x128 (12 layers)", Duration::from_secs(3), || {
         std::hint::black_box(model.logits_all(&[1, 2, 3, 4, 5]).unwrap());
     });
+
+    let path = std::env::var("BENCH_JSON").unwrap_or_else(|_| "BENCH_hot_paths.json".to_string());
+    report.write(&path)?;
+    println!("wrote {path}");
     Ok(())
 }

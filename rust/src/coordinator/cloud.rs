@@ -8,6 +8,7 @@ use anyhow::Result;
 
 use super::protocol::{CloudReply, SplitPayload};
 use super::profile::DeviceProfile;
+use crate::quant::ScratchPool;
 use crate::runtime::NodeRuntime;
 
 pub struct CloudServer {
@@ -16,6 +17,9 @@ pub struct CloudServer {
     pub profile: DeviceProfile,
     /// Tokens served (for Fig. 5(b) accounting).
     pub tokens_generated: u64,
+    /// Decompression scratch (rANS slot-lookup table, code buffers),
+    /// reused across requests and KV layers.
+    pub scratch: ScratchPool,
 }
 
 fn argmax(v: &[f32]) -> u32 {
@@ -40,7 +44,7 @@ fn entropy(logits: &[f32]) -> f32 {
 
 impl CloudServer {
     pub fn new(node: NodeRuntime, profile: DeviceProfile) -> CloudServer {
-        CloudServer { node, profile, tokens_generated: 0 }
+        CloudServer { node, profile, tokens_generated: 0, scratch: ScratchPool::new() }
     }
 
     fn cfg(&self) -> &crate::model::ModelConfig {
@@ -58,7 +62,7 @@ impl CloudServer {
             // back segment prefill-style over all rows.
             let w = payload.hidden.rows;
             anyhow::ensure!(w <= cfg.prefill_len, "hidden block exceeds prefill width");
-            let mut h = payload.hidden.decompress()?;
+            let mut h = self.scratch.with(|s| payload.hidden.decompress_with(s))?;
             h.resize(cfg.prefill_len * d, 0.0); // zero-pad to static width
             let (h_out, kv_rows) = self.node.prefill(&h)?;
             let logits = self.node.logits_prefill(&h_out)?;
@@ -88,12 +92,12 @@ impl CloudServer {
                 .kv
                 .as_ref()
                 .ok_or_else(|| anyhow::anyhow!("decode payload without KV"))?;
-            let mut caches = kv_in.decompress(cfg.max_seq, kvw)?;
+            let mut caches = kv_in.decompress_with_pool(cfg.max_seq, kvw, &self.scratch)?;
             anyhow::ensure!(
                 caches.len() == self.node.layer_range.len(),
                 "KV layer count mismatch"
             );
-            let h = payload.hidden.decompress()?;
+            let h = self.scratch.with(|s| payload.hidden.decompress_with(s))?;
             anyhow::ensure!(h.len() == d, "decode hidden must be one row");
             let h_out = self.node.decode(&h, &mut caches, payload.pos)?;
             let logits = self.node.logits_decode(&h_out)?;

@@ -8,6 +8,7 @@ use anyhow::Result;
 
 use super::protocol::{CompressedKv, CompressedTensor, CompressionConfig, SplitPayload};
 use super::profile::DeviceProfile;
+use crate::quant::ScratchPool;
 use crate::runtime::{LayerKv, NodeRuntime};
 
 /// Per-request state held on the edge. The cloud keeps nothing between
@@ -41,6 +42,10 @@ pub struct EdgeDevice {
     pub compression: CompressionConfig,
     /// Number of cloud layers (for KV bookkeeping).
     pub n_cloud_layers: usize,
+    /// Fused-compression scratch arenas, reused across decode steps and
+    /// shared with the parallel KV-layer workers (zero steady-state
+    /// allocation on the compression hot path).
+    pub scratch: ScratchPool,
 }
 
 impl EdgeDevice {
@@ -50,11 +55,23 @@ impl EdgeDevice {
         profile: DeviceProfile,
         compression: CompressionConfig,
     ) -> EdgeDevice {
-        EdgeDevice { node, profile, compression, n_cloud_layers }
+        EdgeDevice { node, profile, compression, n_cloud_layers, scratch: ScratchPool::new() }
     }
 
     fn cfg(&self) -> &crate::model::ModelConfig {
         &self.node.weights.cfg
+    }
+
+    /// Compress one tensor through the fused engine on this device's
+    /// pooled scratch.
+    pub(crate) fn compress_block(
+        &self,
+        t: &[f32],
+        rows: usize,
+        cols: usize,
+        comp: &CompressionConfig,
+    ) -> CompressedTensor {
+        self.scratch.with(|s| CompressedTensor::compress_with(s, t, rows, cols, comp))
     }
 
     /// Prefill the front segment and build the first payload.
@@ -77,7 +94,7 @@ impl EdgeDevice {
         let d = cfg.d_model;
         let w = prompt.len();
         let hidden_history = h[..w * d].to_vec();
-        let hidden = CompressedTensor::compress(&hidden_history, w, d, &self.compression);
+        let hidden = self.compress_block(&hidden_history, w, d, &self.compression);
         let state = EdgeRequestState {
             request_id,
             front_kv,
@@ -124,10 +141,16 @@ impl EdgeDevice {
         let w = state.seq_len();
         let (hidden, kv) = if include_kv {
             // ship this token's hidden row + the cloud layers' caches
-            let hidden = CompressedTensor::compress(&h, 1, d, &comp);
+            let hidden = self.compress_block(&h, 1, d, &comp);
             // previous tokens' KV only — the current token's cloud KV is
             // computed by the cloud from the hidden row (Eq. 2 structure)
-            let kv = CompressedKv::compress(&state.cloud_kv, w - 1, cfg.kv_width(), &comp);
+            let kv = CompressedKv::compress_with_pool(
+                &state.cloud_kv,
+                w - 1,
+                cfg.kv_width(),
+                &comp,
+                &self.scratch,
+            );
             (hidden, Some(kv))
         } else {
             // I_kv = 0: ship the split-layer hidden of ALL tokens; the
@@ -137,7 +160,7 @@ impl EdgeDevice {
                 "I_kv=0 requires seq_len ({w}) <= prefill width ({})",
                 cfg.prefill_len
             );
-            let hidden = CompressedTensor::compress(&state.hidden_history, w, d, &comp);
+            let hidden = self.compress_block(&state.hidden_history, w, d, &comp);
             (hidden, None)
         };
         let payload = SplitPayload { request_id: state.request_id, pos, hidden, kv, is_prefill: false };

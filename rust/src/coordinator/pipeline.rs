@@ -161,18 +161,18 @@ impl EdgeDevice {
         comp.q_bar = settings.qa_bits;
         let last_hidden = &state.hidden_history[pos * d..w * d];
         let (hidden, kv) = if settings.include_kv {
-            let hidden = super::protocol::CompressedTensor::compress(last_hidden, 1, d, &comp);
-            let kv = super::protocol::CompressedKv::compress(
+            let hidden = self.compress_block(last_hidden, 1, d, &comp);
+            let kv = super::protocol::CompressedKv::compress_with_pool(
                 &state.cloud_kv,
                 pos,
                 cfg.kv_width(),
                 &comp,
+                &self.scratch,
             );
             (hidden, Some(kv))
         } else {
             anyhow::ensure!(w <= cfg.prefill_len, "I_kv=0 beyond prefill width");
-            let hidden =
-                super::protocol::CompressedTensor::compress(&state.hidden_history, w, d, &comp);
+            let hidden = self.compress_block(&state.hidden_history, w, d, &comp);
             (hidden, None)
         };
         Ok(super::protocol::SplitPayload {

@@ -7,12 +7,43 @@
 //!   * optionally (I_kv = 1) the compressed KV caches of the CLOUD layers —
 //!     the paper's stateless-cloud design keeps all per-request state on
 //!     the edge (Eq. 2's memory model), shipping the cloud share each step.
+//!
+//! # Wire format v2
+//!
+//! One `CompressedTensor` serializes as:
+//!
+//! ```text
+//! [rows u16][cols u16][bits u8][flags u8]            -- 6-byte header
+//! [scale f32, zero f32] x rows                        -- per-token params
+//! [sign bitset: ceil(rows*cols/8) bytes]              -- 1 bit/element
+//! [coded stream: tag u8 + CodedStream bytes]          -- TAB-Q codes
+//! [CSR outliers: rows/cols u16 header, row_ptr u32 x (rows+1),
+//!  (col_idx u16, value f32) x nnz]                    -- lossless T_above
+//! ```
+//!
+//! The coded stream is either raw bit-packing (tag 0: `bits`/`n` header +
+//! packed codes) or the 2-way interleaved rANS stream (tag 1, see
+//! `quant::rans` for the self-describing layout). v2 differs from v1 in
+//! two ways: the rANS stream uses 64-bit states with 32-bit renorm and a
+//! strict (truncation-detecting) decoder, and the struct carries ONLY the
+//! entropy-coded codes — v1 additionally retained the uncompressed TAB-Q
+//! code vector in memory and re-verified it against the decoded stream on
+//! every `decompress()`, which doubled the resident size of every payload
+//! and re-decoded for nothing. `wire_bytes()` accounting is unchanged
+//! (bit-exact under the layout above).
+//!
+//! Compression runs on the fused engine (`quant::fused`): single-pass
+//! TS+stats, streaming adaptive bit search, scratch-reused rANS tables.
+//! The unfused composition survives as [`CompressedTensor::compress_reference`],
+//! the property-test oracle and A/B bench baseline.
 
 use anyhow::Result;
 
+use crate::quant::fused::{self, compress_fused, CompressionScratch, ScratchPool};
 use crate::quant::rans::CodedStream;
-use crate::quant::tabq::{tabq_adaptive, TabqBlock};
+use crate::quant::tabq::tabq_adaptive;
 use crate::quant::ts::{threshold_split, SparseOutliers};
+use crate::quant::{aiq, QuantParams};
 
 /// Compression settings for one transmission.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -35,19 +66,62 @@ impl Default for CompressionConfig {
 }
 
 /// One compressed (rows x cols) tensor: lossless outliers + quantized bulk.
-#[derive(Clone, Debug)]
+/// Carries exactly the wire contents — the TAB-Q code vector exists only
+/// transiently in [`CompressionScratch`] during compression.
+#[derive(Clone, Debug, PartialEq)]
 pub struct CompressedTensor {
     pub rows: usize,
     pub cols: usize,
     pub above: SparseOutliers,
-    pub below: TabqBlock,
+    /// Per-token (row) scale/zero of the quantized bulk.
+    pub scales: Vec<f32>,
+    pub zeros: Vec<f32>,
+    /// Sign bitset, row-major, 1 = negative (len = ceil(rows*cols/8)).
+    pub signs: Vec<u8>,
+    /// Entropy-coded TAB-Q magnitude codes.
     pub coded: CodedStream,
     /// Bits actually chosen by TAB-Q's adaptive search.
     pub chosen_bits: u32,
 }
 
 impl CompressedTensor {
+    /// Compress on the fused engine with a process-wide pooled scratch.
     pub fn compress(t: &[f32], rows: usize, cols: usize, c: &CompressionConfig) -> CompressedTensor {
+        fused::global_pool().with(|s| Self::compress_with(s, t, rows, cols, c))
+    }
+
+    /// Compress on the fused engine with caller-owned scratch (the
+    /// allocation-free hot path used by `EdgeDevice` / the KV workers).
+    pub fn compress_with(
+        scratch: &mut CompressionScratch,
+        t: &[f32],
+        rows: usize,
+        cols: usize,
+        c: &CompressionConfig,
+    ) -> CompressedTensor {
+        let out = compress_fused(scratch, t, rows, cols, c.tau, c.q_bar, c.delta, c.use_rans);
+        CompressedTensor {
+            rows,
+            cols,
+            above: out.above,
+            scales: out.scales,
+            zeros: out.zeros,
+            signs: out.signs,
+            coded: out.coded,
+            chosen_bits: out.bits,
+        }
+    }
+
+    /// The unfused reference composition (`threshold_split` →
+    /// `tabq_adaptive` → `CodedStream::best`). Kept as the equivalence
+    /// oracle for property tests and the "before" baseline in
+    /// `benches/hot_paths.rs`; the serving path never calls it.
+    pub fn compress_reference(
+        t: &[f32],
+        rows: usize,
+        cols: usize,
+        c: &CompressionConfig,
+    ) -> CompressedTensor {
         let (above, below_dense) = threshold_split(t, rows, cols, c.tau);
         let ad = tabq_adaptive(&below_dense, rows, cols, c.q_bar, c.delta);
         let coded = if c.use_rans {
@@ -59,8 +133,16 @@ impl CompressedTensor {
                 bytes: crate::quant::aiq::pack_codes(&ad.block.codes, ad.block.bits),
             }
         };
-        let chosen_bits = ad.block.bits;
-        CompressedTensor { rows, cols, above, below: ad.block, coded, chosen_bits }
+        CompressedTensor {
+            rows,
+            cols,
+            above,
+            scales: ad.block.scales,
+            zeros: ad.block.zeros,
+            signs: ad.block.signs,
+            coded,
+            chosen_bits: ad.block.bits,
+        }
     }
 
     /// Bit-exact wire size: coded TAB-Q stream + signs/scales/zeros + CSR.
@@ -73,19 +155,49 @@ impl CompressedTensor {
             + 6 // header: rows u16, cols u16, bits u8, flags u8
     }
 
+    /// Dequantize decoded codes + restore signs, then add the lossless
+    /// outliers (Eq. 7).
+    fn reconstruct(&self, codes: &[u16]) -> Result<Vec<f32>> {
+        anyhow::ensure!(
+            codes.len() == self.rows * self.cols,
+            "code stream length {} != {}x{}",
+            codes.len(),
+            self.rows,
+            self.cols
+        );
+        let mut out = vec![0f32; self.rows * self.cols];
+        for r in 0..self.rows {
+            let p = QuantParams { scale: self.scales[r], zero: self.zeros[r], bits: self.chosen_bits };
+            let base = r * self.cols;
+            for c in 0..self.cols {
+                let i = base + c;
+                let mag = aiq::dequantize_one(codes[i], &p);
+                let neg = self.signs[i / 8] >> (i % 8) & 1 == 1;
+                out[i] = if neg { -mag } else { mag };
+            }
+        }
+        self.above.add_into(&mut out);
+        Ok(out)
+    }
+
     /// Cloud-side reconstruction (Eq. 7): dequantized bulk + outliers.
     pub fn decompress(&self) -> Result<Vec<f32>> {
         let codes = self.coded.decode()?;
-        anyhow::ensure!(codes == self.below.codes, "code stream corrupted");
-        let mut out = self.below.dequantize();
-        self.above.add_into(&mut out);
-        Ok(out)
+        self.reconstruct(&codes)
+    }
+
+    /// Scratch-reusing reconstruction: the decoded code buffer and the
+    /// rANS slot-lookup table live in `scratch` across calls.
+    pub fn decompress_with(&self, scratch: &mut CompressionScratch) -> Result<Vec<f32>> {
+        let (dec, dec_codes) = scratch.decode_parts();
+        self.coded.decode_with(dec, dec_codes)?;
+        self.reconstruct(dec_codes)
     }
 
     /// Max per-element reconstruction error of the bulk (half quantum per
     /// token row); outliers are lossless.
     pub fn worst_bulk_error(&self) -> f32 {
-        self.below.scales.iter().fold(0f32, |m, &s| m.max(s * 0.5))
+        self.scales.iter().fold(0f32, |m, &s| m.max(s * 0.5))
     }
 }
 
@@ -98,23 +210,62 @@ pub struct CompressedKv {
 }
 
 impl CompressedKv {
+    /// Compress every cloud layer's (k, v) pair. Layers are independent, so
+    /// they are fanned out over scoped worker threads (each with a pooled
+    /// scratch arena); output is deterministic regardless of worker count.
     pub fn compress(
         kv: &[crate::runtime::LayerKv],
         used_rows: usize,
         kv_width: usize,
         c: &CompressionConfig,
     ) -> CompressedKv {
-        let layers = kv
-            .iter()
-            .map(|cache| {
-                let kslice = &cache.k[..used_rows * kv_width];
-                let vslice = &cache.v[..used_rows * kv_width];
-                (
-                    CompressedTensor::compress(kslice, used_rows, kv_width, c),
-                    CompressedTensor::compress(vslice, used_rows, kv_width, c),
-                )
-            })
-            .collect();
+        Self::compress_with_pool(kv, used_rows, kv_width, c, fused::global_pool())
+    }
+
+    /// Pool-explicit variant used by `EdgeDevice` (its pool persists across
+    /// decode steps, so the per-layer workers never cold-allocate).
+    pub fn compress_with_pool(
+        kv: &[crate::runtime::LayerKv],
+        used_rows: usize,
+        kv_width: usize,
+        c: &CompressionConfig,
+        pool: &ScratchPool,
+    ) -> CompressedKv {
+        let n = kv.len();
+        let workers = std::thread::available_parallelism()
+            .map(|p| p.get())
+            .unwrap_or(1)
+            .min(n);
+        let compress_layer = |s: &mut CompressionScratch, cache: &crate::runtime::LayerKv| {
+            let kslice = &cache.k[..used_rows * kv_width];
+            let vslice = &cache.v[..used_rows * kv_width];
+            (
+                CompressedTensor::compress_with(s, kslice, used_rows, kv_width, c),
+                CompressedTensor::compress_with(s, vslice, used_rows, kv_width, c),
+            )
+        };
+        // shared by reference so each spawned worker copies the &, not the
+        // closure itself
+        let compress_layer = &compress_layer;
+        let layers: Vec<(CompressedTensor, CompressedTensor)> = if workers <= 1 {
+            pool.with(|s| kv.iter().map(|cache| compress_layer(&mut *s, cache)).collect())
+        } else {
+            let mut slots: Vec<Option<(CompressedTensor, CompressedTensor)>> =
+                (0..n).map(|_| None).collect();
+            let chunk = n.div_ceil(workers);
+            std::thread::scope(|scope| {
+                for (slot_chunk, kv_chunk) in slots.chunks_mut(chunk).zip(kv.chunks(chunk)) {
+                    scope.spawn(move || {
+                        let mut s = pool.take();
+                        for (slot, cache) in slot_chunk.iter_mut().zip(kv_chunk) {
+                            *slot = Some(compress_layer(&mut s, cache));
+                        }
+                        pool.put(s);
+                    });
+                }
+            });
+            slots.into_iter().map(|s| s.expect("kv worker filled its slot")).collect()
+        };
         CompressedKv { layers, used_rows }
     }
 
@@ -124,17 +275,30 @@ impl CompressedKv {
 
     /// Reconstruct into full-width (max_seq) zero-padded caches.
     pub fn decompress(&self, max_seq: usize, kv_width: usize) -> Result<Vec<crate::runtime::LayerKv>> {
-        self.layers
-            .iter()
-            .map(|(kc, vc)| {
-                let mut cache = crate::runtime::LayerKv::zeros(max_seq, kv_width);
-                let k = kc.decompress()?;
-                let v = vc.decompress()?;
-                cache.k[..self.used_rows * kv_width].copy_from_slice(&k);
-                cache.v[..self.used_rows * kv_width].copy_from_slice(&v);
-                Ok(cache)
-            })
-            .collect()
+        self.decompress_with_pool(max_seq, kv_width, fused::global_pool())
+    }
+
+    /// Scratch-reusing reconstruction (cloud hot path: one arena serves
+    /// every layer of the request).
+    pub fn decompress_with_pool(
+        &self,
+        max_seq: usize,
+        kv_width: usize,
+        pool: &ScratchPool,
+    ) -> Result<Vec<crate::runtime::LayerKv>> {
+        pool.with(|s| {
+            self.layers
+                .iter()
+                .map(|(kc, vc)| {
+                    let mut cache = crate::runtime::LayerKv::zeros(max_seq, kv_width);
+                    let k = kc.decompress_with(s)?;
+                    let v = vc.decompress_with(s)?;
+                    cache.k[..self.used_rows * kv_width].copy_from_slice(&k);
+                    cache.v[..self.used_rows * kv_width].copy_from_slice(&v);
+                    Ok(cache)
+                })
+                .collect()
+        })
     }
 }
 
@@ -193,6 +357,33 @@ mod tests {
     }
 
     #[test]
+    fn fused_compress_matches_reference_oracle() {
+        // The acceptance gate: bit-identical wire contents AND identical
+        // reconstruction between the fused engine and the unfused oracle.
+        run_cases(60, 0xE0, |_, rng| {
+            let rows = 1 + rng.below(20);
+            let cols = 8 + rng.below(160);
+            let t = heavy_block(rng, rows, cols);
+            let c = CompressionConfig {
+                tau: [0.0f32, 1.0, 5.0, 10.0][rng.below(4)],
+                q_bar: 2 + rng.below(8) as u32,
+                delta: [0.0, 0.2, 1.0][rng.below(3)],
+                use_rans: rng.below(2) == 0,
+            };
+            let fused = CompressedTensor::compress(&t, rows, cols, &c);
+            let oracle = CompressedTensor::compress_reference(&t, rows, cols, &c);
+            assert_eq!(fused, oracle, "wire contents must be bit-identical");
+            assert_eq!(fused.wire_bytes(), oracle.wire_bytes());
+            let a = fused.decompress().unwrap();
+            let b = oracle.decompress().unwrap();
+            assert_eq!(a, b, "reconstructions must be identical");
+            // scratch-reusing decompress agrees too
+            let mut s = crate::quant::CompressionScratch::default();
+            assert_eq!(fused.decompress_with(&mut s).unwrap(), a);
+        });
+    }
+
+    #[test]
     fn compress_roundtrip_outliers_lossless_bulk_bounded() {
         run_cases(40, 0xE1, |_, rng| {
             let rows = 1 + rng.below(16);
@@ -206,7 +397,7 @@ mod tests {
                     assert_eq!(a, b, "outlier {i} must be lossless");
                 } else {
                     let row = i / cols;
-                    let bound = packet.below.scales[row] * 0.5 + 1e-4;
+                    let bound = packet.scales[row] * 0.5 + 1e-4;
                     assert!((a - b).abs() <= bound, "bulk err {} > {bound}", (a - b).abs());
                 }
             }
@@ -268,6 +459,41 @@ mod tests {
             }
             // padding stays zero
             assert!(rec.k[used * kvw..].iter().all(|&x| x == 0.0));
+        }
+    }
+
+    #[test]
+    fn parallel_kv_compress_is_deterministic() {
+        // worker-thread fan-out must produce exactly what the serial pooled
+        // path produces, layer for layer
+        let mut rng = Rng::new(0xE7);
+        let kvw = 96;
+        let used = 24;
+        let mut caches = vec![crate::runtime::LayerKv::zeros(64, kvw); 7];
+        for c in &mut caches {
+            for i in 0..used * kvw {
+                c.k[i] = rng.heavy_tailed(1.0, 0.01, 80.0);
+                c.v[i] = rng.heavy_tailed(1.0, 0.01, 80.0);
+            }
+        }
+        let cfg = CompressionConfig::default();
+        let par = CompressedKv::compress(&caches, used, kvw, &cfg);
+        // serial oracle: per-layer reference compress
+        for (i, (k, v)) in par.layers.iter().enumerate() {
+            let kq = CompressedTensor::compress_reference(
+                &caches[i].k[..used * kvw],
+                used,
+                kvw,
+                &cfg,
+            );
+            let vq = CompressedTensor::compress_reference(
+                &caches[i].v[..used * kvw],
+                used,
+                kvw,
+                &cfg,
+            );
+            assert_eq!(k, &kq, "layer {i} k");
+            assert_eq!(v, &vq, "layer {i} v");
         }
     }
 

@@ -137,8 +137,17 @@ pub fn pack_codes(codes: &[u16], bits: u32) -> Vec<u8> {
 
 /// Inverse of `pack_codes`.
 pub fn unpack_codes(bytes: &[u8], bits: u32, n: usize) -> Vec<u16> {
-    assert!((1..=16).contains(&bits));
     let mut out = Vec::with_capacity(n);
+    unpack_codes_into(bytes, bits, n, &mut out);
+    out
+}
+
+/// Scratch-reusing inverse of `pack_codes`: decode into `out` (cleared
+/// first), so repeated decodes share one buffer.
+pub fn unpack_codes_into(bytes: &[u8], bits: u32, n: usize, out: &mut Vec<u16>) {
+    assert!((1..=16).contains(&bits));
+    out.clear();
+    out.reserve(n);
     let mut bitpos = 0u64;
     for _ in 0..n {
         let mut v = 0u32;

@@ -1,0 +1,382 @@
+//! Fused, zero-allocation TS + TAB-Q + rANS compression engine.
+//!
+//! This is the per-token hot path of the split protocol: every decode step
+//! compresses the hidden row AND every cloud layer's (k, v) pair through
+//! TS → TAB-Q → rANS. The composable reference path
+//! (`ts::threshold_split` → `tabq::tabq_adaptive` → `rans::CodedStream`)
+//! re-allocates and re-scans at each stage boundary; this module collapses
+//! the stages:
+//!
+//!   1. **Single pass** over the input emits the CSR outliers, the
+//!      magnitude buffer, the sign bitset and the per-row |t| ranges at
+//!      once — no dense `below` copy is ever materialized (the reference
+//!      path cloned the whole tensor just to zero the outlier slots).
+//!   2. The **adaptive bit search** evaluates each candidate width
+//!      *streaming*: the candidate's codes are computed element-by-element
+//!      and compared against the start-width codes on the fly, so no
+//!      candidate `TabqBlock` (codes + scales + cloned signs) is ever
+//!      allocated. Only the chosen width is materialized, once.
+//!   3. The entropy stage reuses the scratch histogram / frequency /
+//!      renorm-word buffers (`rans::RansEncScratch`) and decides
+//!      raw-vs-rANS from the histogram instead of encoding both.
+//!
+//! All intermediate buffers live in a [`CompressionScratch`] that callers
+//! (EdgeDevice / CloudServer / the bench harness) reuse across decode steps
+//! and KV layers via a [`ScratchPool`].
+//!
+//! The output is **bit-identical** to the reference path — enforced by
+//! property tests here and in `coordinator::protocol` — because every
+//! floating-point expression mirrors the reference implementation
+//! operation-for-operation, in the same order.
+
+use std::sync::{Mutex, OnceLock};
+
+use super::aiq;
+use super::rans::{CodedStream, RansDecScratch, RansEncScratch};
+use super::ts::SparseOutliers;
+
+/// Reusable working memory for one compression (or decompression) stream.
+/// Holds every intermediate the fused engine needs: magnitude buffer,
+/// per-row ranges, start-width and chosen-width code buffers, the rANS
+/// encoder tables and the decoder's slot-lookup table.
+#[derive(Default, Debug)]
+pub struct CompressionScratch {
+    mags: Vec<f32>,
+    row_ranges: Vec<(f32, f32)>,
+    codes0: Vec<u16>,
+    codes: Vec<u16>,
+    /// rANS encoder scratch (histogram, freqs, cum, renorm words).
+    pub enc: RansEncScratch,
+    /// rANS decoder scratch (freqs, cum, slot lookup).
+    pub dec: RansDecScratch,
+    /// Decode-side code buffer (decompression path).
+    pub dec_codes: Vec<u16>,
+}
+
+impl CompressionScratch {
+    /// Simultaneous mutable views of the decoder-side buffers (rANS
+    /// tables + code buffer) for the decompression path.
+    pub fn decode_parts(&mut self) -> (&mut RansDecScratch, &mut Vec<u16>) {
+        (&mut self.dec, &mut self.dec_codes)
+    }
+}
+
+/// Everything the wire needs from one fused compression: the lossless CSR
+/// outliers, the chosen TAB-Q parameters, and the entropy-coded stream.
+/// Note there is NO retained uncompressed code vector — the codes live only
+/// in scratch and leave this module entropy-coded.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FusedOutput {
+    pub above: SparseOutliers,
+    pub bits: u32,
+    pub scales: Vec<f32>,
+    pub zeros: Vec<f32>,
+    pub signs: Vec<u8>,
+    pub coded: CodedStream,
+}
+
+/// One TAB-Q quantization pass at `bits` over the precomputed magnitudes,
+/// writing codes into a scratch buffer and per-row params into the output
+/// vectors. Mirrors `tabq::MagStats::quantize` expression-for-expression.
+fn quantize_rows(
+    mags: &[f32],
+    rows: usize,
+    cols: usize,
+    row_ranges: &[(f32, f32)],
+    bits: u32,
+    codes: &mut Vec<u16>,
+    scales: &mut Vec<f32>,
+    zeros: &mut Vec<f32>,
+) {
+    let qmax_f = aiq::qmax(bits) as f32;
+    codes.clear();
+    codes.resize(rows * cols, 0);
+    scales.clear();
+    scales.reserve(rows);
+    zeros.clear();
+    zeros.reserve(rows);
+    for r in 0..rows {
+        let (mmin, mmax) = row_ranges[r];
+        let p = aiq::params_for_range(mmin, mmax, bits);
+        scales.push(p.scale);
+        zeros.push(p.zero);
+        let inv_s = 1.0 / p.scale;
+        let z = p.zero;
+        let base = r * cols;
+        for c in 0..cols {
+            let q = (mags[base + c] * inv_s + z).round();
+            codes[base + c] = q.clamp(0.0, qmax_f) as u16;
+        }
+    }
+}
+
+/// Fused TS + adaptive TAB-Q + entropy coding of a (rows x cols) row-major
+/// tensor. Bit-identical to the reference composition
+/// `threshold_split` → `tabq_adaptive` → `CodedStream::best`, without any
+/// intermediate allocation beyond the wire-owned output buffers.
+pub fn compress_fused(
+    scratch: &mut CompressionScratch,
+    t: &[f32],
+    rows: usize,
+    cols: usize,
+    tau: f32,
+    q_bar: u32,
+    delta_tol: f64,
+    use_rans: bool,
+) -> FusedOutput {
+    assert_eq!(t.len(), rows * cols);
+    assert!(cols < u16::MAX as usize, "col_idx is u16");
+    assert!(tau >= 0.0);
+    assert!((2..=16).contains(&q_bar), "q_bar must be in 2..=16");
+    let n = rows * cols;
+    let CompressionScratch { mags, row_ranges, codes0, codes, enc, .. } = scratch;
+
+    // ---- pass 1: threshold split + magnitude stats, fused ----
+    // The reference path copies `t`, zeroes the outlier slots, then rescans
+    // the copy for |t|, signs and per-row ranges. Here one scan emits all
+    // of it; an outlier contributes a 0.0 magnitude to its row's range,
+    // exactly as the zeroed slot did in the dense copy.
+    mags.clear();
+    mags.resize(n, 0.0);
+    row_ranges.clear();
+    let mut signs = vec![0u8; n.div_ceil(8)];
+    let mut row_ptr = Vec::with_capacity(rows + 1);
+    let mut col_idx: Vec<u16> = Vec::new();
+    let mut values: Vec<f32> = Vec::new();
+    row_ptr.push(0u32);
+    for r in 0..rows {
+        let (mut mmin, mut mmax) = (f32::INFINITY, f32::NEG_INFINITY);
+        let base = r * cols;
+        for c in 0..cols {
+            let x = t[base + c];
+            let a = x.abs();
+            if a >= tau {
+                col_idx.push(c as u16);
+                values.push(x);
+                // mags[base + c] stays 0.0; sign bit stays 0
+                mmin = mmin.min(0.0);
+                mmax = mmax.max(0.0);
+            } else {
+                mags[base + c] = a;
+                mmin = mmin.min(a);
+                mmax = mmax.max(a);
+                if x < 0.0 {
+                    let i = base + c;
+                    signs[i / 8] |= 1 << (i % 8);
+                }
+            }
+        }
+        row_ptr.push(col_idx.len() as u32);
+        row_ranges.push((mmin, mmax));
+    }
+    let above = SparseOutliers { rows, cols, row_ptr, col_idx, values };
+
+    // ---- pass 2: quantize at the start width (Alg. 1 line 4) ----
+    let min_bits = 1u32;
+    let start_bits = (q_bar - 1).max(min_bits);
+    let mut scales = Vec::new();
+    let mut zeros = Vec::new();
+    quantize_rows(mags, rows, cols, row_ranges, start_bits, codes0, &mut scales, &mut zeros);
+
+    // ---- adaptive search: streaming candidate evaluation ----
+    // delta = mean | round(T0 / 2^shift) - T_cand | in code units (Alg. 1
+    // line 9); candidates are folded into the delta accumulation without
+    // being stored. Accumulation order matches the reference (flat index).
+    let nf = n as f64;
+    let mut chosen = start_bits;
+    let mut bits = start_bits;
+    while bits > min_bits {
+        bits -= 1;
+        let div = f64::from(1u32 << (start_bits - bits));
+        let qmax_f = aiq::qmax(bits) as f32;
+        let mut acc = 0f64;
+        for r in 0..rows {
+            let (mmin, mmax) = row_ranges[r];
+            let p = aiq::params_for_range(mmin, mmax, bits);
+            let inv_s = 1.0 / p.scale;
+            let z = p.zero;
+            let base = r * cols;
+            for c in 0..cols {
+                let q = (mags[base + c] * inv_s + z).round();
+                let cand = q.clamp(0.0, qmax_f) as u16;
+                let rescaled = ((codes0[base + c] as f64) / div).round();
+                acc += (rescaled - cand as f64).abs();
+            }
+        }
+        let delta = acc / nf;
+        if delta > delta_tol {
+            break; // keep the last acceptable width
+        }
+        chosen = bits;
+    }
+
+    // ---- materialize the chosen width once ----
+    let final_codes: &[u16] = if chosen == start_bits {
+        codes0
+    } else {
+        quantize_rows(mags, rows, cols, row_ranges, chosen, codes, &mut scales, &mut zeros);
+        codes
+    };
+
+    // ---- entropy stage: histogram-driven raw-vs-rANS, scratch tables ----
+    let coded = if use_rans {
+        CodedStream::best_with(enc, final_codes, chosen)
+    } else {
+        CodedStream::Raw {
+            bits: chosen,
+            n: final_codes.len(),
+            bytes: aiq::pack_codes(final_codes, chosen),
+        }
+    };
+
+    FusedOutput { above, bits: chosen, scales, zeros, signs, coded }
+}
+
+/// A small thread-safe pool of [`CompressionScratch`] arenas. Owned by
+/// `EdgeDevice` / `CloudServer` so scratch survives across decode steps,
+/// and shared by the scoped worker threads of the parallel KV encoder
+/// (each worker takes one arena, returns it when its layers are done).
+#[derive(Default, Debug)]
+pub struct ScratchPool {
+    pool: Mutex<Vec<Box<CompressionScratch>>>,
+}
+
+impl ScratchPool {
+    pub fn new() -> ScratchPool {
+        ScratchPool::default()
+    }
+
+    /// Pop a pooled arena, or allocate a fresh one if the pool is empty
+    /// (or its lock is poisoned — scratch is disposable by design).
+    pub fn take(&self) -> Box<CompressionScratch> {
+        self.pool
+            .lock()
+            .ok()
+            .and_then(|mut v| v.pop())
+            .unwrap_or_default()
+    }
+
+    /// Return an arena to the pool for the next step/layer.
+    pub fn put(&self, s: Box<CompressionScratch>) {
+        if let Ok(mut v) = self.pool.lock() {
+            // bound the pool so a one-off wide fan-out can't pin memory
+            if v.len() < 64 {
+                v.push(s);
+            }
+        }
+    }
+
+    /// Run `f` with a pooled arena.
+    pub fn with<R>(&self, f: impl FnOnce(&mut CompressionScratch) -> R) -> R {
+        let mut s = self.take();
+        let r = f(&mut s);
+        self.put(s);
+        r
+    }
+}
+
+/// Process-wide pool backing the allocation-free convenience APIs
+/// (`CompressedTensor::compress` and friends) so benches and one-off
+/// callers get scratch reuse without threading a pool through.
+pub fn global_pool() -> &'static ScratchPool {
+    static POOL: OnceLock<ScratchPool> = OnceLock::new();
+    POOL.get_or_init(ScratchPool::new)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::rans::CodedStream;
+    use crate::quant::{tabq_adaptive, threshold_split};
+    use crate::util::prop::run_cases;
+    use crate::util::rng::Rng;
+
+    /// The unfused reference composition the engine must match bit-for-bit.
+    fn reference(
+        t: &[f32],
+        rows: usize,
+        cols: usize,
+        tau: f32,
+        q_bar: u32,
+        delta: f64,
+        use_rans: bool,
+    ) -> FusedOutput {
+        let (above, below) = threshold_split(t, rows, cols, tau);
+        let ad = tabq_adaptive(&below, rows, cols, q_bar, delta);
+        let coded = if use_rans {
+            CodedStream::best(&ad.block.codes, ad.block.bits)
+        } else {
+            CodedStream::Raw {
+                bits: ad.block.bits,
+                n: ad.block.codes.len(),
+                bytes: crate::quant::aiq::pack_codes(&ad.block.codes, ad.block.bits),
+            }
+        };
+        FusedOutput {
+            above,
+            bits: ad.block.bits,
+            scales: ad.block.scales,
+            zeros: ad.block.zeros,
+            signs: ad.block.signs,
+            coded,
+        }
+    }
+
+    #[test]
+    fn fused_matches_reference_bitwise() {
+        run_cases(80, 0xF1, |_, rng| {
+            let rows = 1 + rng.below(20);
+            let cols = 8 + rng.below(150);
+            let tau = [0.0f32, 1.0, 5.0, 10.0][rng.below(4)];
+            let q_bar = 2 + rng.below(8) as u32;
+            let delta = [0.0, 0.2, 1.0, 1e9][rng.below(4)];
+            let use_rans = rng.below(2) == 0;
+            let t: Vec<f32> = (0..rows * cols)
+                .map(|_| rng.heavy_tailed(1.0, 0.005, 120.0))
+                .collect();
+            let mut scratch = CompressionScratch::default();
+            let fused = compress_fused(&mut scratch, &t, rows, cols, tau, q_bar, delta, use_rans);
+            let want = reference(&t, rows, cols, tau, q_bar, delta, use_rans);
+            assert_eq!(fused, want, "rows={rows} cols={cols} tau={tau} q_bar={q_bar}");
+        });
+    }
+
+    #[test]
+    fn scratch_reuse_is_stateless() {
+        // one arena across wildly different shapes must not leak state
+        let mut rng = Rng::new(0xF2);
+        let mut scratch = CompressionScratch::default();
+        for _ in 0..20 {
+            let rows = 1 + rng.below(12);
+            let cols = 4 + rng.below(200);
+            let t: Vec<f32> = (0..rows * cols).map(|_| rng.normal_f32(0.0, 3.0)).collect();
+            let a = compress_fused(&mut scratch, &t, rows, cols, 5.0, 4, 0.2, true);
+            let b = reference(&t, rows, cols, 5.0, 4, 0.2, true);
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn all_outliers_and_no_outliers_edge_cases() {
+        let t = vec![1.0f32, -2.0, 0.5, -0.25, 3.5, 0.0];
+        let mut scratch = CompressionScratch::default();
+        for tau in [0.0f32, 100.0] {
+            let fused = compress_fused(&mut scratch, &t, 2, 3, tau, 4, 0.2, true);
+            let want = reference(&t, 2, 3, tau, 4, 0.2, true);
+            assert_eq!(fused, want, "tau={tau}");
+        }
+    }
+
+    #[test]
+    fn pool_round_trips_arenas() {
+        let pool = ScratchPool::new();
+        let a = pool.take();
+        pool.put(a);
+        let n = pool.with(|s| {
+            let t = vec![0.5f32; 64];
+            compress_fused(s, &t, 4, 16, 5.0, 4, 0.2, true).above.nnz()
+        });
+        assert_eq!(n, 0);
+        assert!(global_pool().pool.lock().unwrap().len() <= 64);
+    }
+}

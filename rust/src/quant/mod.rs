@@ -3,12 +3,14 @@
 
 pub mod aiq;
 pub mod baselines;
+pub mod fused;
 pub mod opsc;
 pub mod rans;
 pub mod tabq;
 pub mod ts;
 
 pub use aiq::{fake_quant, fake_quant_per_channel, qmax, QuantParams};
+pub use fused::{compress_fused, CompressionScratch, FusedOutput, ScratchPool};
 pub use opsc::{apply_opsc, apply_segment_quant, apply_segment_quant_naive, OpscConfig};
 pub use tabq::{tabq_adaptive, tabq_fixed, TabqBlock};
 pub use ts::{recombine, threshold_split, SparseOutliers};

@@ -1,25 +1,87 @@
 //! rANS entropy coder (range asymmetric numeral systems, Duda 2013).
 //!
 //! The paper encodes TAB-Q's "multiple quantum variables" with rANS
-//! (DietGPU on their testbed); this is a from-scratch 32-bit single-stream
-//! rANS with 8-bit renormalization and a 12-bit quantized frequency table,
-//! used to entropy-code the TAB-Q code stream before transmission.
+//! (DietGPU on their testbed). This is a from-scratch **2-way interleaved**
+//! rANS with 64-bit states, 32-bit renormalization and a 12-bit quantized
+//! frequency table, used to entropy-code the TAB-Q code stream before
+//! transmission. Two alternating states keep the decoder's dependency
+//! chain short (the DietGPU/ryg-rans trick) and the 32-bit renorm amortizes
+//! the per-symbol branch 4x vs. the byte-renorm coder this replaced.
 //!
-//! Wire format (self-describing):
+//! Wire format v2 (self-describing):
 //!   [n_symbols: u32][alphabet: u16][freqs: alphabet x u16]
-//!   [state: u32][renorm bytes ...]
-//! Symbols are encoded in reverse so decoding streams forward.
+//!   [state0: u64][state1: u64][renorm words: u32 ...]
+//! Symbols are encoded in reverse with state `i & 1` serving symbol `i`, so
+//! decoding streams forward alternating states. Decode is strict: the word
+//! tail must be u32-aligned, fully consumed, and both states must return to
+//! `RANS64_L` — which makes trailing-byte truncation and most corruptions
+//! detectable (the old byte-renorm coder silently accepted a truncated
+//! tail whenever the last symbols needed no refill).
+//!
+//! Frequency tables that cannot be normalized (more than 4096 distinct
+//! symbols) are reported as `Err` instead of panicking; `CodedStream::best`
+//! falls back to raw bit-packing in that case.
 
 const SCALE_BITS: u32 = 12;
 const M: u32 = 1 << SCALE_BITS; // 4096
-const RANS_L: u32 = 1 << 23; // lower renormalization bound
+/// Lower renormalization bound of the 64-bit states.
+const RANS64_L: u64 = 1 << 31;
+/// Fixed header bytes: n_symbols u32 + alphabet u16.
+const HEADER: usize = 6;
+
+/// Reusable encoder-side buffers: histogram, normalized frequency table,
+/// cumulative table, and the renorm word stash. Owned by
+/// `quant::fused::CompressionScratch` so repeated encodes (decode steps, KV
+/// layers) never re-allocate.
+#[derive(Default, Debug)]
+pub struct RansEncScratch {
+    hist: Vec<u64>,
+    freqs: Vec<u16>,
+    cum: Vec<u32>,
+    words: Vec<u32>,
+}
+
+impl RansEncScratch {
+    fn histogram(&mut self, symbols: &[u16], alphabet: usize) {
+        self.hist.clear();
+        self.hist.resize(alphabet, 0);
+        for &s in symbols {
+            self.hist[s as usize] += 1;
+        }
+    }
+
+    fn build_cum(&mut self, alphabet: usize) {
+        self.cum.clear();
+        self.cum.resize(alphabet + 1, 0);
+        for i in 0..alphabet {
+            self.cum[i + 1] = self.cum[i] + self.freqs[i] as u32;
+        }
+    }
+}
+
+/// Reusable decoder-side buffers, including the M-entry slot→symbol lookup
+/// table (the single largest per-decode allocation before this existed).
+#[derive(Default, Debug)]
+pub struct RansDecScratch {
+    freqs: Vec<u16>,
+    cum: Vec<u32>,
+    lookup: Vec<u16>,
+}
 
 /// Quantize a histogram to sum exactly M with every present symbol >= 1.
-fn normalize_freqs(hist: &[u64]) -> Vec<u16> {
+/// Errors (instead of the former panic) when more than M distinct symbols
+/// are present — no table summing to M can represent them all.
+fn normalize_freqs(hist: &[u64], freqs: &mut Vec<u16>) -> anyhow::Result<()> {
     let total: u64 = hist.iter().sum();
-    assert!(total > 0);
+    anyhow::ensure!(total > 0, "rans: empty histogram");
     let n = hist.len();
-    let mut freqs = vec![0u16; n];
+    let present = hist.iter().filter(|&&h| h > 0).count();
+    anyhow::ensure!(
+        present as u64 <= M as u64,
+        "rans: {present} distinct symbols exceed the {M}-slot table"
+    );
+    freqs.clear();
+    freqs.resize(n, 0);
     let mut assigned: u32 = 0;
     for i in 0..n {
         if hist[i] == 0 {
@@ -38,114 +100,211 @@ fn normalize_freqs(hist: &[u64]) -> Vec<u16> {
             freqs[i] += 1;
             assigned += 1;
         } else {
-            // take from the largest freq that can spare it
+            // take from the largest freq that can spare it; with
+            // present <= M this always exists, but never panic on it
             let i = (0..n)
                 .filter(|&i| freqs[i] > 1)
                 .max_by_key(|&i| freqs[i])
-                .expect("cannot normalize: all freqs at 1");
+                .ok_or_else(|| anyhow::anyhow!("rans: cannot normalize frequency table"))?;
             freqs[i] -= 1;
             assigned -= 1;
         }
     }
-    freqs
+    Ok(())
 }
 
-/// Encode a u16 symbol stream. Empty input yields a minimal header.
-pub fn encode_u16(symbols: &[u16]) -> Vec<u8> {
-    let alphabet = symbols.iter().map(|&s| s as usize + 1).max().unwrap_or(1);
-    let mut out = Vec::with_capacity(symbols.len() / 2 + 16);
+/// Estimated wire size (bytes) of the rANS stream for a histogram already
+/// normalized into `freqs`: exact header cost plus the Shannon cross-entropy
+/// of the stream under the quantized table. Used by `CodedStream::best` to
+/// pick raw-vs-rANS WITHOUT encoding both — the estimate is deterministic,
+/// so the fused engine and the reference oracle always make the same choice.
+fn estimated_rans_bytes(hist: &[u64], freqs: &[u16]) -> u64 {
+    let mut bits = 0f64;
+    for (&h, &f) in hist.iter().zip(freqs) {
+        if h > 0 {
+            bits += h as f64 * (M as f64 / f as f64).log2();
+        }
+    }
+    let payload = (bits / 8.0).ceil() as u64;
+    // The two flushed u64 states carry ~8 bytes of payload between them.
+    (HEADER as u64) + 2 * hist.len() as u64 + 16 + payload.saturating_sub(8)
+}
+
+/// Interleaved encode of `symbols` given a valid freqs/cum table.
+/// Appends [state0][state1][reversed renorm words] to `out`.
+fn encode_body(out: &mut Vec<u8>, symbols: &[u16], freqs: &[u16], cum: &[u32], words: &mut Vec<u32>) {
+    words.clear();
+    let mut x0: u64 = RANS64_L;
+    let mut x1: u64 = RANS64_L;
+    for i in (0..symbols.len()).rev() {
+        let s = symbols[i] as usize;
+        let f = freqs[s] as u64;
+        debug_assert!(f > 0, "symbol {s} has zero frequency");
+        let x = if i & 1 == 0 { &mut x0 } else { &mut x1 };
+        // single 32-bit renorm suffices for u64 states with f <= M = 2^12
+        let x_max = ((RANS64_L >> SCALE_BITS) << 32) * f;
+        while *x >= x_max {
+            words.push(*x as u32);
+            *x >>= 32;
+        }
+        *x = ((*x / f) << SCALE_BITS) + (*x % f) + cum[s] as u64;
+    }
+    out.extend_from_slice(&x0.to_le_bytes());
+    out.extend_from_slice(&x1.to_le_bytes());
+    for w in words.iter().rev() {
+        out.extend_from_slice(&w.to_le_bytes());
+    }
+}
+
+/// Encode a u16 symbol stream (wire format v2). Empty input yields a
+/// minimal header. Errors when the alphabet cannot be normalized.
+pub fn encode_u16(symbols: &[u16]) -> anyhow::Result<Vec<u8>> {
+    let mut scratch = RansEncScratch::default();
+    encode_u16_with(&mut scratch, symbols)
+}
+
+/// Serialize the full stream (header + freq table + states + words) for a
+/// scratch whose freq table is already normalized. THE single writer of the
+/// v2 wire layout — both `encode_u16_with` and `CodedStream::best_with` go
+/// through here, so the fused-vs-reference bit-identity can't drift.
+fn write_stream(scratch: &mut RansEncScratch, symbols: &[u16], alphabet: usize) -> Vec<u8> {
+    let mut out = Vec::with_capacity(symbols.len() / 2 + HEADER + 2 * alphabet + 16);
     out.extend_from_slice(&(symbols.len() as u32).to_le_bytes());
     out.extend_from_slice(&(alphabet as u16).to_le_bytes());
-    if symbols.is_empty() {
-        return out;
-    }
-    let mut hist = vec![0u64; alphabet];
-    for &s in symbols {
-        hist[s as usize] += 1;
-    }
-    let freqs = normalize_freqs(&hist);
-    let mut cum = vec![0u32; alphabet + 1];
-    for i in 0..alphabet {
-        cum[i + 1] = cum[i] + freqs[i] as u32;
-    }
-    for &f in &freqs {
+    scratch.build_cum(alphabet);
+    for &f in &scratch.freqs[..alphabet] {
         out.extend_from_slice(&f.to_le_bytes());
     }
-
-    let mut rev_bytes: Vec<u8> = Vec::with_capacity(symbols.len());
-    let mut x: u32 = RANS_L;
-    for &s in symbols.iter().rev() {
-        let f = freqs[s as usize] as u32;
-        debug_assert!(f > 0, "symbol {s} has zero frequency");
-        let x_max = ((RANS_L >> SCALE_BITS) << 8) * f;
-        while x >= x_max {
-            rev_bytes.push((x & 0xFF) as u8);
-            x >>= 8;
-        }
-        x = ((x / f) << SCALE_BITS) + (x % f) + cum[s as usize];
-    }
-    out.extend_from_slice(&x.to_le_bytes());
-    out.extend(rev_bytes.iter().rev());
+    let (freqs, cum) = (&scratch.freqs[..alphabet], &scratch.cum[..alphabet + 1]);
+    encode_body(&mut out, symbols, freqs, cum, &mut scratch.words);
     out
+}
+
+/// Scratch-reusing variant of [`encode_u16`]: identical bytes, no
+/// per-call table/word allocations.
+pub fn encode_u16_with(scratch: &mut RansEncScratch, symbols: &[u16]) -> anyhow::Result<Vec<u8>> {
+    let alphabet = symbols.iter().map(|&s| s as usize + 1).max().unwrap_or(1);
+    anyhow::ensure!(alphabet <= u16::MAX as usize, "rans: symbol {} overflows the u16 alphabet header", alphabet - 1);
+    if symbols.is_empty() {
+        let mut out = Vec::with_capacity(HEADER);
+        out.extend_from_slice(&0u32.to_le_bytes());
+        out.extend_from_slice(&(alphabet as u16).to_le_bytes());
+        return Ok(out);
+    }
+    scratch.histogram(symbols, alphabet);
+    normalize_freqs(&scratch.hist, &mut scratch.freqs)?;
+    Ok(write_stream(scratch, symbols, alphabet))
+}
+
+fn take2(b: &[u8], at: usize) -> anyhow::Result<[u8; 2]> {
+    b.get(at..at + 2)
+        .map(|s| s.try_into().unwrap())
+        .ok_or_else(|| anyhow::anyhow!("rans: truncated stream at byte {at}"))
+}
+
+fn take4(b: &[u8], at: usize) -> anyhow::Result<[u8; 4]> {
+    b.get(at..at + 4)
+        .map(|s| s.try_into().unwrap())
+        .ok_or_else(|| anyhow::anyhow!("rans: truncated stream at byte {at}"))
+}
+
+fn take8(b: &[u8], at: usize) -> anyhow::Result<[u8; 8]> {
+    b.get(at..at + 8)
+        .map(|s| s.try_into().unwrap())
+        .ok_or_else(|| anyhow::anyhow!("rans: truncated stream at byte {at}"))
 }
 
 /// Decode a stream produced by `encode_u16`.
 pub fn decode_u16(bytes: &[u8]) -> anyhow::Result<Vec<u16>> {
-    use anyhow::{bail, Context};
-    let take = |b: &[u8], at: usize, n: usize| -> anyhow::Result<Vec<u8>> {
-        b.get(at..at + n)
-            .map(|s| s.to_vec())
-            .with_context(|| format!("rans: truncated stream at byte {at}"))
-    };
-    let n_symbols = u32::from_le_bytes(take(bytes, 0, 4)?.try_into().unwrap()) as usize;
-    let alphabet = u16::from_le_bytes(take(bytes, 4, 2)?.try_into().unwrap()) as usize;
+    let mut scratch = RansDecScratch::default();
+    let mut out = Vec::new();
+    decode_u16_with(&mut scratch, bytes, &mut out)?;
+    Ok(out)
+}
+
+/// Scratch-reusing decode into `out` (cleared first). The slot-lookup
+/// table, frequency table and cumulative table live in `scratch` and are
+/// reused across decode steps / KV layers.
+pub fn decode_u16_with(
+    scratch: &mut RansDecScratch,
+    bytes: &[u8],
+    out: &mut Vec<u16>,
+) -> anyhow::Result<()> {
+    use anyhow::{bail, ensure};
+    out.clear();
+    let n_symbols = u32::from_le_bytes(take4(bytes, 0)?) as usize;
+    let alphabet = u16::from_le_bytes(take2(bytes, 4)?) as usize;
     if n_symbols == 0 {
-        return Ok(vec![]);
+        ensure!(bytes.len() == HEADER, "rans: trailing bytes after empty stream");
+        return Ok(());
     }
     if alphabet == 0 {
         bail!("rans: zero alphabet with nonzero symbol count");
     }
-    let mut freqs = vec![0u16; alphabet];
-    let mut at = 6;
-    for f in freqs.iter_mut() {
-        *f = u16::from_le_bytes(take(bytes, at, 2)?.try_into().unwrap());
+    scratch.freqs.clear();
+    scratch.freqs.resize(alphabet, 0);
+    let mut at = HEADER;
+    for i in 0..alphabet {
+        scratch.freqs[i] = u16::from_le_bytes(take2(bytes, at)?);
         at += 2;
     }
-    let mut cum = vec![0u32; alphabet + 1];
+    scratch.cum.clear();
+    scratch.cum.resize(alphabet + 1, 0);
+    let mut acc: u64 = 0; // u64: a corrupt table must not overflow-panic
     for i in 0..alphabet {
-        cum[i + 1] = cum[i] + freqs[i] as u32;
+        scratch.cum[i] = acc as u32;
+        acc += scratch.freqs[i] as u64;
+        ensure!(acc <= M as u64, "rans: corrupt frequency table (sum exceeds {M})");
     }
-    if cum[alphabet] != M {
-        bail!("rans: corrupt frequency table (sum {} != {M})", cum[alphabet]);
-    }
+    ensure!(acc == M as u64, "rans: corrupt frequency table (sum {acc} != {M})");
+    scratch.cum[alphabet] = M;
     // slot -> symbol lookup
-    let mut lookup = vec![0u16; M as usize];
+    scratch.lookup.clear();
+    scratch.lookup.resize(M as usize, 0);
     for s in 0..alphabet {
-        for slot in cum[s]..cum[s + 1] {
-            lookup[slot as usize] = s as u16;
+        for slot in scratch.cum[s]..scratch.cum[s + 1] {
+            scratch.lookup[slot as usize] = s as u16;
         }
     }
-    let mut x = u32::from_le_bytes(take(bytes, at, 4)?.try_into().unwrap());
-    at += 4;
-    let mut out = Vec::with_capacity(n_symbols);
-    for _ in 0..n_symbols {
-        let slot = x & (M - 1);
-        let s = lookup[slot as usize];
-        let f = freqs[s as usize] as u32;
-        x = f * (x >> SCALE_BITS) + slot - cum[s as usize];
-        while x < RANS_L {
-            let Some(&b) = bytes.get(at) else {
+    let mut x0 = u64::from_le_bytes(take8(bytes, at)?);
+    at += 8;
+    let mut x1 = u64::from_le_bytes(take8(bytes, at)?);
+    at += 8;
+    // The renorm tail is a whole number of u32 words; a truncated stream
+    // breaks the alignment and is rejected up front.
+    ensure!(
+        (bytes.len() - at) % 4 == 0,
+        "rans: truncated stream (renorm tail not word-aligned)"
+    );
+    out.reserve(n_symbols);
+    for i in 0..n_symbols {
+        let x = if i & 1 == 0 { &mut x0 } else { &mut x1 };
+        let slot = (*x as u32) & (M - 1);
+        let s = scratch.lookup[slot as usize];
+        let f = scratch.freqs[s as usize] as u64;
+        // lookup guarantees cum[s] <= slot, so the subtraction is safe
+        *x = f * (*x >> SCALE_BITS) + slot as u64 - scratch.cum[s as usize] as u64;
+        if *x < RANS64_L {
+            let Ok(w) = take4(bytes, at) else {
                 bail!("rans: stream exhausted mid-decode");
             };
-            x = (x << 8) | b as u32;
-            at += 1;
+            at += 4;
+            *x = (*x << 32) | u32::from_le_bytes(w) as u64;
+            ensure!(*x >= RANS64_L, "rans: corrupt stream (state underflow)");
         }
         out.push(s);
     }
-    Ok(out)
+    ensure!(at == bytes.len(), "rans: {} unread trailing bytes", bytes.len() - at);
+    ensure!(
+        x0 == RANS64_L && x1 == RANS64_L,
+        "rans: final state mismatch (corrupt or truncated stream)"
+    );
+    Ok(())
 }
 
-/// Entropy-coded-or-raw wrapper: pick whichever representation is smaller.
+/// Entropy-coded-or-raw wrapper: `best` picks the representation the
+/// histogram entropy estimate says is smaller (deterministic, but may
+/// mispick by a few bytes near a tie — the price of not encoding both).
 /// This is what the edge protocol actually puts on the wire for TAB-Q codes.
 #[derive(Clone, Debug, PartialEq)]
 pub enum CodedStream {
@@ -156,14 +315,38 @@ pub enum CodedStream {
 }
 
 impl CodedStream {
+    /// Choose raw-vs-rANS from the histogram (entropy estimate) and encode
+    /// only the winner — the old implementation fully encoded BOTH and
+    /// compared lengths. Alphabets the table cannot represent fall back to
+    /// raw packing instead of panicking.
     pub fn best(codes: &[u16], bits: u32) -> CodedStream {
-        let raw = super::aiq::pack_codes(codes, bits);
-        let rans = encode_u16(codes);
-        if rans.len() < raw.len() {
-            CodedStream::Rans(rans)
-        } else {
-            CodedStream::Raw { bits, n: codes.len(), bytes: raw }
+        let mut scratch = RansEncScratch::default();
+        Self::best_with(&mut scratch, codes, bits)
+    }
+
+    /// Scratch-reusing variant of [`best`](CodedStream::best); produces
+    /// byte-identical output (the decision rule and encoder are shared).
+    pub fn best_with(scratch: &mut RansEncScratch, codes: &[u16], bits: u32) -> CodedStream {
+        let n = codes.len();
+        let raw = || CodedStream::Raw { bits, n, bytes: super::aiq::pack_codes(codes, bits) };
+        if n == 0 {
+            return raw();
         }
+        let alphabet = codes.iter().map(|&s| s as usize + 1).max().unwrap();
+        if alphabet > u16::MAX as usize {
+            return raw();
+        }
+        scratch.histogram(codes, alphabet);
+        if normalize_freqs(&scratch.hist, &mut scratch.freqs).is_err() {
+            return raw(); // > M distinct symbols: un-normalizable
+        }
+        // wire cost: Raw = tag + (bits,n) header + packed; Rans = tag + stream
+        let raw_wire = 1 + 8 + crate::util::bits_to_bytes(n as u64 * bits as u64);
+        let rans_wire = 1 + estimated_rans_bytes(&scratch.hist, &scratch.freqs);
+        if rans_wire >= raw_wire {
+            return raw();
+        }
+        CodedStream::Rans(write_stream(scratch, codes, alphabet))
     }
 
     pub fn wire_bytes(&self) -> u64 {
@@ -177,6 +360,17 @@ impl CodedStream {
         match self {
             CodedStream::Raw { bits, n, bytes } => Ok(super::aiq::unpack_codes(bytes, *bits, *n)),
             CodedStream::Rans(b) => decode_u16(b),
+        }
+    }
+
+    /// Scratch-reusing decode into `out` (cleared first).
+    pub fn decode_with(&self, scratch: &mut RansDecScratch, out: &mut Vec<u16>) -> anyhow::Result<()> {
+        match self {
+            CodedStream::Raw { bits, n, bytes } => {
+                super::aiq::unpack_codes_into(bytes, *bits, *n, out);
+                Ok(())
+            }
+            CodedStream::Rans(b) => decode_u16_with(scratch, b, out),
         }
     }
 }
@@ -193,7 +387,7 @@ mod tests {
             let alphabet = 1 + rng.below(255);
             let n = rng.below(2000);
             let syms: Vec<u16> = (0..n).map(|_| rng.below(alphabet) as u16).collect();
-            let enc = encode_u16(&syms);
+            let enc = encode_u16(&syms).unwrap();
             let dec = decode_u16(&enc).unwrap();
             assert_eq!(dec, syms);
         });
@@ -213,9 +407,20 @@ mod tests {
                     v
                 })
                 .collect();
-            let enc = encode_u16(&syms);
+            let enc = encode_u16(&syms).unwrap();
             assert_eq!(decode_u16(&enc).unwrap(), syms);
         });
+    }
+
+    #[test]
+    fn roundtrip_tiny_and_odd_lengths() {
+        // exercise the 2-way interleave edge cases: 1-3 symbols, only one
+        // state carrying payload
+        for n in 1..=5usize {
+            let syms: Vec<u16> = (0..n).map(|i| (i % 3) as u16).collect();
+            let enc = encode_u16(&syms).unwrap();
+            assert_eq!(decode_u16(&enc).unwrap(), syms, "n={n}");
+        }
     }
 
     #[test]
@@ -226,7 +431,7 @@ mod tests {
         let syms: Vec<u16> = (0..n)
             .map(|_| if rng.f64() < 0.9 { 0 } else { rng.below(15) as u16 + 1 })
             .collect();
-        let enc = encode_u16(&syms);
+        let enc = encode_u16(&syms).unwrap();
         let raw_bytes = (n * 4usize).div_ceil(8); // 4-bit packing
         assert!(
             enc.len() < raw_bytes,
@@ -238,7 +443,7 @@ mod tests {
     #[test]
     fn single_symbol_stream() {
         let syms = vec![7u16; 1000];
-        let enc = encode_u16(&syms);
+        let enc = encode_u16(&syms).unwrap();
         assert_eq!(decode_u16(&enc).unwrap(), syms);
         // near-zero entropy: tiny payload (header dominates)
         assert!(enc.len() < 64, "len={}", enc.len());
@@ -246,26 +451,58 @@ mod tests {
 
     #[test]
     fn empty_stream() {
-        let enc = encode_u16(&[]);
+        let enc = encode_u16(&[]).unwrap();
         assert_eq!(decode_u16(&enc).unwrap(), Vec::<u16>::new());
     }
 
     #[test]
-    fn corrupt_stream_errors_not_panics() {
-        let enc = encode_u16(&[1, 2, 3, 4, 5]);
-        assert!(decode_u16(&enc[..enc.len() - 1]).is_err() || true); // truncation may or may not hit renorm
+    fn truncation_detected_reliably() {
+        // dropping the trailing byte breaks either the fixed-size header /
+        // state fields or the u32 word alignment — always an error now
+        let enc = encode_u16(&[1, 2, 3, 4, 5]).unwrap();
+        assert!(decode_u16(&enc[..enc.len() - 1]).is_err(), "1-byte truncation must fail");
         assert!(decode_u16(&enc[..4]).is_err());
+        run_cases(30, 0xD4, |_, rng| {
+            let n = 1 + rng.below(500);
+            let syms: Vec<u16> = (0..n).map(|_| rng.below(12) as u16).collect();
+            let enc = encode_u16(&syms).unwrap();
+            for cut in 1..=4usize.min(enc.len() - 1) {
+                assert!(
+                    decode_u16(&enc[..enc.len() - cut]).is_err(),
+                    "{cut}-byte truncation must fail (n={n})"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn corrupt_stream_errors_not_panics() {
+        let enc = encode_u16(&[1, 2, 3, 4, 5]).unwrap();
         let mut bad = enc.clone();
         if bad.len() > 8 {
             bad[6] ^= 0xFF; // corrupt freq table
-            let _ = decode_u16(&bad); // must not panic
+            assert!(decode_u16(&bad).is_err(), "corrupt freq table must error");
         }
+        // appended garbage is also rejected (strict consumption)
+        let mut padded = enc.clone();
+        padded.extend_from_slice(&[0, 0, 0, 0]);
+        assert!(decode_u16(&padded).is_err(), "trailing words must be rejected");
+    }
+
+    #[test]
+    fn oversized_alphabet_errors_and_best_falls_back_to_raw() {
+        // > 4096 distinct symbols cannot be normalized into the 12-bit table
+        let syms: Vec<u16> = (0..5000u16).collect();
+        assert!(encode_u16(&syms).is_err(), "un-normalizable alphabet must error");
+        let c = CodedStream::best(&syms, 13);
+        assert!(matches!(c, CodedStream::Raw { .. }), "best must fall back to raw");
+        assert_eq!(c.decode().unwrap(), syms);
     }
 
     #[test]
     fn coded_stream_picks_smaller() {
         let mut rng = Rng::new(4);
-        // uniform 8-bit codes: raw should win (rans header overhead)
+        // uniform 8-bit codes, short stream: raw should win (header overhead)
         let uniform: Vec<u16> = (0..64).map(|_| rng.below(250) as u16).collect();
         let c = CodedStream::best(&uniform, 8);
         assert!(matches!(c, CodedStream::Raw { .. }));
@@ -280,9 +517,28 @@ mod tests {
     }
 
     #[test]
+    fn best_with_scratch_is_byte_identical() {
+        run_cases(40, 0xD5, |_, rng| {
+            let n = rng.below(3000);
+            let syms: Vec<u16> = (0..n).map(|_| rng.below(16) as u16).collect();
+            let a = CodedStream::best(&syms, 4);
+            let mut scratch = RansEncScratch::default();
+            let b = CodedStream::best_with(&mut scratch, &syms, 4);
+            let c = CodedStream::best_with(&mut scratch, &syms, 4); // reuse
+            assert_eq!(a, b);
+            assert_eq!(b, c);
+            let mut dec = RansDecScratch::default();
+            let mut out = Vec::new();
+            a.decode_with(&mut dec, &mut out).unwrap();
+            assert_eq!(out, syms);
+        });
+    }
+
+    #[test]
     fn normalize_freqs_sums_to_m() {
         let hist = vec![1u64, 100, 10_000, 0, 3];
-        let f = normalize_freqs(&hist);
+        let mut f = Vec::new();
+        normalize_freqs(&hist, &mut f).unwrap();
         assert_eq!(f.iter().map(|&x| x as u32).sum::<u32>(), M);
         assert!(f[0] >= 1 && f[4] >= 1 && f[3] == 0);
     }

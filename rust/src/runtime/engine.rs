@@ -16,6 +16,11 @@ use anyhow::{anyhow, Context, Result};
 use super::manifest::{Manifest, ShapeClassManifest};
 use crate::model::ModelConfig;
 
+/// Device-resident tensor handle (PJRT buffer). The reference engine
+/// (`reference.rs`, default build) provides a host-side equivalent under
+/// the same name so `NodeRuntime` is engine-agnostic.
+pub type Buffer = xla::PjRtBuffer;
+
 pub struct Engine {
     pub client: xla::PjRtClient,
     pub class: ShapeClassManifest,
@@ -54,11 +59,11 @@ impl Engine {
     }
 
     /// Upload a host tensor to a device-resident buffer.
-    pub fn upload(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+    pub fn upload(&self, data: &[f32], dims: &[usize]) -> Result<Buffer> {
         Ok(self.client.buffer_from_host_buffer::<f32>(data, dims, None)?)
     }
 
-    pub fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+    pub fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<Buffer> {
         Ok(self.client.buffer_from_host_buffer::<i32>(data, dims, None)?)
     }
 
@@ -67,10 +72,10 @@ impl Engine {
     pub fn run(
         &self,
         name: &str,
-        args: &[&xla::PjRtBuffer],
+        args: &[&Buffer],
     ) -> Result<Vec<Vec<f32>>> {
         let exe = self.exe(name)?;
-        let out = exe.execute_b::<&xla::PjRtBuffer>(args)?;
+        let out = exe.execute_b::<&Buffer>(args)?;
         let lit = out[0][0].to_literal_sync()?;
         let parts = lit.to_tuple()?;
         parts

@@ -1,17 +1,49 @@
-//! PJRT runtime: artifact manifest, engine (compiled executables), and the
-//! per-node layer pipeline. Python never runs here — the artifacts under
-//! `artifacts/` are AOT products of `make artifacts`.
+//! Runtime: artifact manifest, engine, and the per-node layer pipeline.
+//!
+//! Two interchangeable engines sit behind the same API:
+//!   * `pjrt` feature ON — the PJRT engine (`engine.rs`): loads the
+//!     HLO-text artifacts produced by `make artifacts` and executes them
+//!     through the vendored `xla` bindings.
+//!   * default — the pure-Rust reference engine (`reference.rs`): executes
+//!     the same per-layer math (mirroring `python/compile/kernels/ref.py`)
+//!     with no external dependency, so the default
+//!     `cargo build --release && cargo test -q` is green offline.
 
-pub mod engine;
 pub mod manifest;
 pub mod node;
 
-pub use engine::Engine;
+// Enabling `pjrt` without the vendored `xla` bindings would otherwise die
+// in a spray of E0433s; fail once, with instructions. The vendoring setup
+// (see rust/Cargo.toml) builds with RUSTFLAGS="--cfg xla_vendored".
+#[cfg(all(feature = "pjrt", not(xla_vendored)))]
+compile_error!(
+    "feature `pjrt` needs the vendored `xla` bindings: add the `xla` \
+     dependency in rust/Cargo.toml and build with \
+     RUSTFLAGS=\"--cfg xla_vendored\" --features pjrt"
+);
+
+#[cfg(all(feature = "pjrt", xla_vendored))]
+pub mod engine;
+#[cfg(all(feature = "pjrt", xla_vendored))]
+pub use engine::{Buffer, Engine};
+
+#[cfg(not(all(feature = "pjrt", xla_vendored)))]
+pub mod reference;
+#[cfg(not(all(feature = "pjrt", xla_vendored)))]
+pub use reference::{Buffer, Engine};
+
 pub use manifest::Manifest;
 pub use node::{LayerKv, NodeRuntime, RopeTables};
 
-/// Quick PJRT availability probe (used by `splitserve doctor`).
+/// Quick engine availability probe (used by `splitserve doctor`).
+#[cfg(all(feature = "pjrt", xla_vendored))]
 pub fn smoke() -> anyhow::Result<String> {
     let client = xla::PjRtClient::cpu()?;
     Ok(client.platform_name())
+}
+
+/// Quick engine availability probe (used by `splitserve doctor`).
+#[cfg(not(all(feature = "pjrt", xla_vendored)))]
+pub fn smoke() -> anyhow::Result<String> {
+    Ok("reference engine (pure Rust, no PJRT)".to_string())
 }

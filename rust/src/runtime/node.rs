@@ -14,7 +14,7 @@ use std::rc::Rc;
 
 use anyhow::Result;
 
-use super::engine::Engine;
+use super::{Buffer, Engine};
 use crate::model::ModelWeights;
 
 /// Per-layer KV cache: static (W, H*D) buffers plus the current fill level.
@@ -68,14 +68,14 @@ pub struct NodeRuntime {
     pub layer_range: Range<usize>,
     /// Device-resident weight buffers, artifact argument order, one vec per
     /// layer in `layer_range`.
-    weight_bufs: Vec<Vec<xla::PjRtBuffer>>,
+    weight_bufs: Vec<Vec<Buffer>>,
     /// Final norm + head (only the node that finishes the stack needs it).
-    head_bufs: Option<(xla::PjRtBuffer, xla::PjRtBuffer)>,
+    head_bufs: Option<(Buffer, Buffer)>,
     /// Host-side weights (embedding lookups, re-quantization experiments).
     pub weights: Rc<ModelWeights>,
     rope: RopeTables,
     /// Device-resident prefill-width RoPE tables (uploaded once).
-    rope_prefill_bufs: (xla::PjRtBuffer, xla::PjRtBuffer),
+    rope_prefill_bufs: (Buffer, Buffer),
 }
 
 impl NodeRuntime {
@@ -164,7 +164,7 @@ impl NodeRuntime {
         let mut kvs = Vec::with_capacity(self.layer_range.len());
         for (i, bufs) in self.weight_bufs.iter().enumerate() {
             let hx = self.engine.upload(&h, &[p, d])?;
-            let mut args: Vec<&xla::PjRtBuffer> =
+            let mut args: Vec<&Buffer> =
                 vec![&hx, &self.rope_prefill_bufs.0, &self.rope_prefill_bufs.1];
             args.extend(bufs.iter());
             let mut out = self.engine.run("layer_prefill", &args)?;
@@ -197,7 +197,7 @@ impl NodeRuntime {
             let hx = self.engine.upload(&h, &[1, d])?;
             let kc = self.engine.upload(&cache.k, &[w, kvw])?;
             let vc = self.engine.upload(&cache.v, &[w, kvw])?;
-            let mut args: Vec<&xla::PjRtBuffer> =
+            let mut args: Vec<&Buffer> =
                 vec![&hx, &kc, &vc, &pos_buf, &cos_buf, &sin_buf];
             args.extend(bufs.iter());
             let mut out = self.engine.run("layer_decode", &args)?;

@@ -1,0 +1,431 @@
+//! Pure-Rust reference engine: executes the per-layer decoder math on the
+//! host, mirroring the jnp oracles in `python/compile/kernels/ref.py`
+//! (RMSNorm → rotary QKV → causal / cached attention → SwiGLU FFN).
+//!
+//! This is the default engine (no `pjrt` feature): it needs no artifacts,
+//! no `xla` bindings and no `make artifacts` step, which keeps the whole
+//! test and bench suite runnable offline. The API is a drop-in for the
+//! PJRT engine — `NodeRuntime` cannot tell them apart. Shapes are derived
+//! from the buffers themselves, so both shape classes (and any depth
+//! sweep) run without configuration.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, ensure, Result};
+
+use super::manifest::ShapeClassManifest;
+use crate::model::ModelConfig;
+
+/// Host tensor standing in for a device-resident PJRT buffer.
+#[derive(Clone, Debug)]
+pub enum Buffer {
+    F32 { data: Vec<f32>, dims: Vec<usize> },
+    I32 { data: Vec<i32>, dims: Vec<usize> },
+}
+
+impl Buffer {
+    fn f32(&self) -> Result<(&[f32], &[usize])> {
+        match self {
+            Buffer::F32 { data, dims } => Ok((data, dims)),
+            Buffer::I32 { .. } => bail!("expected f32 buffer, got i32"),
+        }
+    }
+
+    fn i32(&self) -> Result<(&[i32], &[usize])> {
+        match self {
+            Buffer::I32 { data, dims } => Ok((data, dims)),
+            Buffer::F32 { .. } => bail!("expected i32 buffer, got f32"),
+        }
+    }
+}
+
+pub struct Engine {
+    /// Synthetic shape-class manifest (no artifacts on disk in reference
+    /// mode); `artifacts` is empty, which `splitserve doctor` reports.
+    pub class: ShapeClassManifest,
+}
+
+const EPS: f32 = 1e-5;
+
+impl Engine {
+    /// Construct the reference engine for `cfg`'s shape class. The
+    /// `artifacts_dir` argument is accepted for API parity with the PJRT
+    /// engine and ignored — the reference engine needs no artifacts.
+    pub fn load(_artifacts_dir: &str, cfg: &ModelConfig) -> Result<Engine> {
+        Ok(Engine {
+            class: ShapeClassManifest {
+                name: cfg.shape_class.dir_name().to_string(),
+                d_model: cfg.d_model,
+                n_heads: cfg.n_heads,
+                head_dim: cfg.head_dim,
+                d_ff: cfg.d_ff,
+                vocab: cfg.vocab,
+                max_seq: cfg.max_seq,
+                prefill_len: cfg.prefill_len,
+                artifacts: BTreeMap::new(),
+                golden: BTreeMap::new(),
+            },
+        })
+    }
+
+    /// Host tensor "upload" (clone; the PJRT engine copies to device).
+    pub fn upload(&self, data: &[f32], dims: &[usize]) -> Result<Buffer> {
+        ensure!(dims.iter().product::<usize>() == data.len(), "upload shape mismatch");
+        Ok(Buffer::F32 { data: data.to_vec(), dims: dims.to_vec() })
+    }
+
+    pub fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<Buffer> {
+        ensure!(dims.iter().product::<usize>() == data.len(), "upload shape mismatch");
+        Ok(Buffer::I32 { data: data.to_vec(), dims: dims.to_vec() })
+    }
+
+    /// Execute an "artifact" by name. Same entrypoints and argument order
+    /// as the AOT modules (python/compile/model.py).
+    pub fn run(&self, name: &str, args: &[&Buffer]) -> Result<Vec<Vec<f32>>> {
+        match name {
+            "layer_prefill" => self.layer_prefill(args),
+            "layer_decode" => self.layer_decode(args),
+            "lm_head_prefill" | "lm_head_decode" => self.lm_head(args),
+            other => bail!("reference engine: unknown artifact '{other}'"),
+        }
+    }
+
+    /// x(P,d), cos(P,D/2), sin(P,D/2), wq wk wv wo(d,d), w_gate w_up(d,f),
+    /// w_down(f,d), g1(d), g2(d) → [y(P,d), k_rows(P,d), v_rows(P,d)].
+    fn layer_prefill(&self, args: &[&Buffer]) -> Result<Vec<Vec<f32>>> {
+        ensure!(args.len() == 12, "layer_prefill wants 12 args, got {}", args.len());
+        let (x, xd) = args[0].f32()?;
+        let (cos, cd) = args[1].f32()?;
+        let (sin, _) = args[2].f32()?;
+        let (w, d) = (xd[0], xd[1]);
+        let half = cd[1];
+        let head_dim = 2 * half;
+        ensure!(d % head_dim == 0, "d_model {d} not divisible by head_dim {head_dim}");
+        let heads = d / head_dim;
+        let (wq, _) = args[3].f32()?;
+        let (wk, _) = args[4].f32()?;
+        let (wv, _) = args[5].f32()?;
+        let (wo, _) = args[6].f32()?;
+        let (wg, wgd) = args[7].f32()?;
+        let (wu, _) = args[8].f32()?;
+        let (wd_, _) = args[9].f32()?;
+        let (g1, _) = args[10].f32()?;
+        let (g2, _) = args[11].f32()?;
+        let f = wgd[1];
+
+        let h = rms_norm(x, w, d, g1);
+        let mut q = matmul(&h, wq, w, d, d);
+        let mut k = matmul(&h, wk, w, d, d);
+        let v = matmul(&h, wv, w, d, d);
+        apply_rope(&mut q, w, heads, head_dim, cos, sin);
+        apply_rope(&mut k, w, heads, head_dim, cos, sin);
+        let attn = causal_attention(&q, &k, &v, w, heads, head_dim);
+        let proj = matmul(&attn, wo, w, d, d);
+        let mut x2 = x.to_vec();
+        add_assign(&mut x2, &proj);
+        let y = ffn(&x2, w, d, f, g2, wg, wu, wd_);
+        Ok(vec![y, k, v])
+    }
+
+    /// x(1,d), k_cache(W,kvw), v_cache(W,kvw), pos i32[1], cos(1,D/2),
+    /// sin(1,D/2), 9 weights → [y(1,d), k_cache', v_cache'].
+    fn layer_decode(&self, args: &[&Buffer]) -> Result<Vec<Vec<f32>>> {
+        ensure!(args.len() == 15, "layer_decode wants 15 args, got {}", args.len());
+        let (x, xd) = args[0].f32()?;
+        let (kc, kcd) = args[1].f32()?;
+        let (vc, _) = args[2].f32()?;
+        let (pos, _) = args[3].i32()?;
+        let (cos, cd) = args[4].f32()?;
+        let (sin, _) = args[5].f32()?;
+        let d = xd[1];
+        let (cache_w, kvw) = (kcd[0], kcd[1]);
+        ensure!(kvw == d, "reference engine assumes kv_width == d_model");
+        let half = cd[1];
+        let head_dim = 2 * half;
+        let heads = d / head_dim;
+        let pos = pos[0] as usize;
+        ensure!(pos < cache_w, "decode position {pos} beyond cache {cache_w}");
+        let (wq, _) = args[6].f32()?;
+        let (wk, _) = args[7].f32()?;
+        let (wv, _) = args[8].f32()?;
+        let (wo, _) = args[9].f32()?;
+        let (wg, wgd) = args[10].f32()?;
+        let (wu, _) = args[11].f32()?;
+        let (wd_, _) = args[12].f32()?;
+        let (g1, _) = args[13].f32()?;
+        let (g2, _) = args[14].f32()?;
+        let f = wgd[1];
+
+        let h = rms_norm(x, 1, d, g1);
+        let mut q = matmul(&h, wq, 1, d, d);
+        let mut k = matmul(&h, wk, 1, d, d);
+        let v = matmul(&h, wv, 1, d, d);
+        apply_rope(&mut q, 1, heads, head_dim, cos, sin);
+        apply_rope(&mut k, 1, heads, head_dim, cos, sin);
+        let mut k_cache = kc.to_vec();
+        let mut v_cache = vc.to_vec();
+        k_cache[pos * kvw..(pos + 1) * kvw].copy_from_slice(&k);
+        v_cache[pos * kvw..(pos + 1) * kvw].copy_from_slice(&v);
+        let attn = decode_attention(&q, &k_cache, &v_cache, pos, heads, head_dim);
+        let proj = matmul(&attn, wo, 1, d, d);
+        let mut x2 = x.to_vec();
+        add_assign(&mut x2, &proj);
+        let y = ffn(&x2, 1, d, f, g2, wg, wu, wd_);
+        Ok(vec![y, k_cache, v_cache])
+    }
+
+    /// x(w,d), gf(d), w_out(d,vocab) → [logits(w,vocab)].
+    fn lm_head(&self, args: &[&Buffer]) -> Result<Vec<Vec<f32>>> {
+        ensure!(args.len() == 3, "lm_head wants 3 args, got {}", args.len());
+        let (x, xd) = args[0].f32()?;
+        let (gf, _) = args[1].f32()?;
+        let (w_out, wod) = args[2].f32()?;
+        let (w, d) = (xd[0], xd[1]);
+        let vocab = wod[1];
+        let h = rms_norm(x, w, d, gf);
+        Ok(vec![matmul(&h, w_out, w, d, vocab)])
+    }
+}
+
+/// RMSNorm over the last axis: x / sqrt(mean(x^2) + eps) * gamma.
+fn rms_norm(x: &[f32], rows: usize, d: usize, gamma: &[f32]) -> Vec<f32> {
+    let mut out = vec![0f32; rows * d];
+    for r in 0..rows {
+        let row = &x[r * d..(r + 1) * d];
+        let var: f32 = row.iter().map(|v| v * v).sum::<f32>() / d as f32;
+        let inv = 1.0 / (var + EPS).sqrt();
+        for c in 0..d {
+            out[r * d + c] = row[c] * inv * gamma[c];
+        }
+    }
+    out
+}
+
+/// Row-major (m,k) @ (k,n) → (m,n).
+fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut out = vec![0f32; m * n];
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        for (kk, &aik) in arow.iter().enumerate() {
+            if aik == 0.0 {
+                continue;
+            }
+            let brow = &b[kk * n..(kk + 1) * n];
+            for j in 0..n {
+                orow[j] += aik * brow[j];
+            }
+        }
+    }
+    out
+}
+
+fn add_assign(a: &mut [f32], b: &[f32]) {
+    for (x, y) in a.iter_mut().zip(b) {
+        *x += y;
+    }
+}
+
+/// Rotate-half rotary embedding in place. x: (w, H, D); cos/sin: (w, D/2).
+fn apply_rope(x: &mut [f32], w: usize, heads: usize, head_dim: usize, cos: &[f32], sin: &[f32]) {
+    let half = head_dim / 2;
+    for t in 0..w {
+        let (ct, st) = (&cos[t * half..(t + 1) * half], &sin[t * half..(t + 1) * half]);
+        for h in 0..heads {
+            let base = (t * heads + h) * head_dim;
+            for i in 0..half {
+                let x1 = x[base + i];
+                let x2 = x[base + half + i];
+                x[base + i] = x1 * ct[i] - x2 * st[i];
+                x[base + half + i] = x2 * ct[i] + x1 * st[i];
+            }
+        }
+    }
+}
+
+/// Causal multi-head attention. q,k,v: (w, H*D) → (w, H*D).
+fn causal_attention(q: &[f32], k: &[f32], v: &[f32], w: usize, heads: usize, head_dim: usize) -> Vec<f32> {
+    let kvw = heads * head_dim;
+    let scale = 1.0 / (head_dim as f32).sqrt();
+    let mut out = vec![0f32; w * kvw];
+    let mut scores = vec![0f32; w];
+    for h in 0..heads {
+        let off = h * head_dim;
+        for i in 0..w {
+            let qi = &q[i * kvw + off..i * kvw + off + head_dim];
+            let mut smax = f32::NEG_INFINITY;
+            for (j, sc) in scores.iter_mut().enumerate().take(i + 1) {
+                let kj = &k[j * kvw + off..j * kvw + off + head_dim];
+                let dot: f32 = qi.iter().zip(kj).map(|(a, b)| a * b).sum();
+                *sc = dot * scale;
+                smax = smax.max(*sc);
+            }
+            let mut z = 0f32;
+            for sc in scores.iter_mut().take(i + 1) {
+                *sc = (*sc - smax).exp();
+                z += *sc;
+            }
+            let orow = &mut out[i * kvw + off..i * kvw + off + head_dim];
+            for (j, &p) in scores.iter().enumerate().take(i + 1) {
+                let vj = &v[j * kvw + off..j * kvw + off + head_dim];
+                let pw = p / z;
+                for (o, &vv) in orow.iter_mut().zip(vj) {
+                    *o += pw * vv;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Single-token attention over a static KV cache; rows > pos are masked.
+/// q: (H*D), caches: (W, H*D) → (H*D).
+fn decode_attention(q: &[f32], kc: &[f32], vc: &[f32], pos: usize, heads: usize, head_dim: usize) -> Vec<f32> {
+    let kvw = heads * head_dim;
+    let scale = 1.0 / (head_dim as f32).sqrt();
+    let mut out = vec![0f32; kvw];
+    let mut scores = vec![0f32; pos + 1];
+    for h in 0..heads {
+        let off = h * head_dim;
+        let qh = &q[off..off + head_dim];
+        let mut smax = f32::NEG_INFINITY;
+        for (j, sc) in scores.iter_mut().enumerate() {
+            let kj = &kc[j * kvw + off..j * kvw + off + head_dim];
+            let dot: f32 = qh.iter().zip(kj).map(|(a, b)| a * b).sum();
+            *sc = dot * scale;
+            smax = smax.max(*sc);
+        }
+        let mut z = 0f32;
+        for sc in scores.iter_mut() {
+            *sc = (*sc - smax).exp();
+            z += *sc;
+        }
+        let orow = &mut out[off..off + head_dim];
+        for (j, &p) in scores.iter().enumerate() {
+            let vj = &vc[j * kvw + off..j * kvw + off + head_dim];
+            let pw = p / z;
+            for (o, &vv) in orow.iter_mut().zip(vj) {
+                *o += pw * vv;
+            }
+        }
+    }
+    out
+}
+
+#[inline]
+fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+/// SwiGLU FFN with pre-norm: x + (silu(h@wg) * (h@wu)) @ wd, h = rms(x,g2).
+fn ffn(x: &[f32], w: usize, d: usize, f: usize, g2: &[f32], wg: &[f32], wu: &[f32], wd: &[f32]) -> Vec<f32> {
+    let h = rms_norm(x, w, d, g2);
+    let mut gate = matmul(&h, wg, w, d, f);
+    let up = matmul(&h, wu, w, d, f);
+    for (g, u) in gate.iter_mut().zip(&up) {
+        *g = silu(*g) * u;
+    }
+    let down = matmul(&gate, wd, w, f, d);
+    let mut out = x.to_vec();
+    add_assign(&mut out, &down);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{ModelConfig, ModelWeights};
+    use crate::runtime::{LayerKv, NodeRuntime};
+    use std::rc::Rc;
+
+    fn assert_close(got: &[f32], want: &[f32], tol: f32, what: &str) {
+        assert_eq!(got.len(), want.len(), "{what}: length");
+        let mut worst = 0f32;
+        for (g, w) in got.iter().zip(want) {
+            worst = worst.max((g - w).abs());
+        }
+        assert!(worst <= tol, "{what}: max abs err {worst} > {tol}");
+    }
+
+    #[test]
+    fn decode_reproduces_prefill_rows() {
+        // The serving-critical invariant: decode(t) with caches from
+        // prefill rows 0..t must equal prefill row t.
+        let mut cfg = ModelConfig::sim7b();
+        cfg.n_layers = 2;
+        let engine = Rc::new(Engine::load("artifacts", &cfg).unwrap());
+        let weights = Rc::new(ModelWeights::synthetic(&cfg, 42));
+        let node = NodeRuntime::new(engine, weights.clone(), 0..2, true).unwrap();
+
+        let tokens: Vec<u32> = (0..10u32).map(|i| (i * 37) % 512).collect();
+        let x = weights.embed_padded(&tokens, cfg.prefill_len);
+        let (h_pre, kv_rows) = node.prefill(&x).unwrap();
+
+        let t = 6usize;
+        let kvw = cfg.kv_width();
+        let mut kv: Vec<LayerKv> = kv_rows
+            .iter()
+            .map(|(k_rows, v_rows)| {
+                let mut c = LayerKv::zeros(cfg.max_seq, kvw);
+                c.k[..t * kvw].copy_from_slice(&k_rows[..t * kvw]);
+                c.v[..t * kvw].copy_from_slice(&v_rows[..t * kvw]);
+                c
+            })
+            .collect();
+        let xt = weights.embed(&tokens[t..t + 1]);
+        let h_dec = node.decode(&xt, &mut kv, t).unwrap();
+        let d = cfg.d_model;
+        assert_close(&h_dec, &h_pre[t * d..(t + 1) * d], 5e-3, "decode vs prefill row");
+    }
+
+    #[test]
+    fn split_across_two_nodes_matches_single_node() {
+        let mut cfg = ModelConfig::sim7b();
+        cfg.n_layers = 2;
+        let engine = Rc::new(Engine::load("artifacts", &cfg).unwrap());
+        let weights = Rc::new(ModelWeights::synthetic(&cfg, 43));
+        let full = NodeRuntime::new(engine.clone(), weights.clone(), 0..2, true).unwrap();
+        let front = NodeRuntime::new(engine.clone(), weights.clone(), 0..1, false).unwrap();
+        let back = NodeRuntime::new(engine.clone(), weights.clone(), 1..2, true).unwrap();
+
+        let tokens: Vec<u32> = vec![5, 99, 210, 340];
+        let x = weights.embed_padded(&tokens, cfg.prefill_len);
+        let (h_full, _) = full.prefill(&x).unwrap();
+        let (h_mid, _) = front.prefill(&x).unwrap();
+        let (h_split, _) = back.prefill(&h_mid).unwrap();
+        assert_close(&h_split, &h_full, 1e-4, "split prefill == full prefill");
+    }
+
+    #[test]
+    fn attention_weights_sum_to_one_effectively() {
+        // constant V must pass through attention unchanged
+        let (heads, head_dim, w) = (2usize, 4usize, 5usize);
+        let kvw = heads * head_dim;
+        let q: Vec<f32> = (0..w * kvw).map(|i| (i % 7) as f32 * 0.1).collect();
+        let k: Vec<f32> = (0..w * kvw).map(|i| (i % 5) as f32 * 0.2).collect();
+        let v = vec![3.5f32; w * kvw];
+        let out = causal_attention(&q, &k, &v, w, heads, head_dim);
+        for o in out {
+            assert!((o - 3.5).abs() < 1e-5, "attention must be a convex combination");
+        }
+    }
+
+    #[test]
+    fn rope_preserves_pair_norm() {
+        let (heads, head_dim, w) = (1usize, 8usize, 3usize);
+        let half = head_dim / 2;
+        let mut x: Vec<f32> = (0..w * heads * head_dim).map(|i| (i as f32).sin()).collect();
+        let orig = x.clone();
+        let cos: Vec<f32> = (0..w * half).map(|i| ((i as f32) * 0.3).cos()).collect();
+        let sin: Vec<f32> = (0..w * half).map(|i| ((i as f32) * 0.3).sin()).collect();
+        apply_rope(&mut x, w, heads, head_dim, &cos, &sin);
+        for t in 0..w {
+            for i in 0..half {
+                let b = t * head_dim;
+                let n0 = orig[b + i].hypot(orig[b + half + i]);
+                let n1 = x[b + i].hypot(x[b + half + i]);
+                assert!((n0 - n1).abs() < 1e-5, "rotation must preserve norms");
+            }
+        }
+    }
+}

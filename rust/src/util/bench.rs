@@ -66,6 +66,73 @@ pub fn bench_fn<F: FnMut()>(name: &str, target: Duration, mut f: F) -> BenchStat
     stats
 }
 
+/// Machine-readable bench report: bench name → timing stats in
+/// nanoseconds. `benches/hot_paths.rs` writes one (`BENCH_hot_paths.json`
+/// by default, `BENCH_JSON` env to override) so `scripts/bench.sh` and CI
+/// can track the perf trajectory across PRs without scraping stdout.
+#[derive(Default, Debug)]
+pub struct JsonReport {
+    entries: Vec<(String, BenchStats)>,
+}
+
+impl JsonReport {
+    pub fn new() -> JsonReport {
+        JsonReport::default()
+    }
+
+    pub fn add(&mut self, name: &str, stats: &BenchStats) {
+        self.entries.push((name.to_string(), stats.clone()));
+    }
+
+    /// Median of a recorded bench in ns (0.0 if absent) — for in-binary
+    /// before/after speedup summaries.
+    pub fn median_ns(&self, name: &str) -> f64 {
+        self.entries
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, s)| s.per_iter_ns())
+            .unwrap_or(0.0)
+    }
+
+    fn escape(s: &str) -> String {
+        s.replace('\\', "\\\\").replace('"', "\\\"")
+    }
+
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("{\n  \"benches\": {\n");
+        for (i, (name, s)) in self.entries.iter().enumerate() {
+            out.push_str(&format!(
+                "    \"{}\": {{\"median_ns\": {}, \"mean_ns\": {}, \"min_ns\": {}, \"p95_ns\": {}, \"iters\": {}}}{}\n",
+                Self::escape(name),
+                s.median.as_nanos(),
+                s.mean.as_nanos(),
+                s.min.as_nanos(),
+                s.p95.as_nanos(),
+                s.iters,
+                if i + 1 < self.entries.len() { "," } else { "" },
+            ));
+        }
+        out.push_str("  }\n}\n");
+        out
+    }
+
+    pub fn write(&self, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json())
+    }
+}
+
+/// `bench_fn` + record into a [`JsonReport`].
+pub fn bench_recorded<F: FnMut()>(
+    report: &mut JsonReport,
+    name: &str,
+    target: Duration,
+    f: F,
+) -> BenchStats {
+    let stats = bench_fn(name, target, f);
+    report.add(name, &stats);
+    stats
+}
+
 /// Plain-text table renderer for the paper-reproduction bench binaries.
 pub struct Table {
     title: String,
@@ -149,5 +216,20 @@ mod tests {
     fn table_rejects_arity_mismatch() {
         let mut t = Table::new("t", &["a", "b"]);
         t.row(&["1".into()]);
+    }
+
+    #[test]
+    fn json_report_parses_with_in_tree_parser() {
+        let mut r = JsonReport::new();
+        let s = bench_fn("noop-json", Duration::from_millis(5), || {
+            std::hint::black_box(1 + 1);
+        });
+        r.add("protocol/compress 50x128 (TS+TABQ+rANS)", &s);
+        r.add("rans/encode 6400 codes", &s);
+        let doc = crate::util::json::Json::parse(&r.to_json()).unwrap();
+        let benches = doc.req("benches").unwrap();
+        let entry = benches.req("protocol/compress 50x128 (TS+TABQ+rANS)").unwrap();
+        assert!(entry.req("median_ns").unwrap().as_usize().is_some());
+        assert_eq!(r.median_ns("rans/encode 6400 codes"), s.per_iter_ns());
     }
 }

@@ -29,12 +29,16 @@ fn compressed_tensor_roundtrip_properties() {
         let p = CompressedTensor::compress(&t, rows, cols, &c);
         let back = p.decompress().unwrap();
         assert_eq!(back.len(), t.len());
+        // the fused engine must match the unfused oracle bit-for-bit
+        let oracle = CompressedTensor::compress_reference(&t, rows, cols, &c);
+        assert_eq!(p, oracle, "fused wire contents != reference oracle");
+        assert_eq!(back, oracle.decompress().unwrap());
         // outliers exact, bulk bounded by the per-row half-quantum
         for (i, (a, b)) in t.iter().zip(&back).enumerate() {
             if a.abs() >= c.tau {
                 assert_eq!(a, b, "outlier must be lossless");
             } else {
-                let bound = p.below.scales[i / cols] * 0.5 + 1e-4;
+                let bound = p.scales[i / cols] * 0.5 + 1e-4;
                 assert!((a - b).abs() <= bound);
             }
         }
@@ -111,7 +115,11 @@ fn compression_config_bits_respected_end_to_end() {
             let c = CompressionConfig { q_bar, delta: 0.0, use_rans: true, tau: 5.0 };
             let p = CompressedTensor::compress(&t, 8, 128, &c);
             assert!(p.chosen_bits <= q_bar - 1, "bits {} > budget {}", p.chosen_bits, q_bar);
-            assert_eq!(p.coded.decode().unwrap(), p.below.codes);
+            // coded stream is self-contained: right length, codes in range
+            let codes = p.coded.decode().unwrap();
+            assert_eq!(codes.len(), 8 * 128);
+            let qmax = splitserve::quant::qmax(p.chosen_bits) as u16;
+            assert!(codes.iter().all(|&q| q <= qmax), "code beyond qmax({})", p.chosen_bits);
         }
     });
 }

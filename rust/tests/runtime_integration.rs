@@ -3,7 +3,11 @@
 //! python → HLO-text → PJRT → Rust numerics chain), and the NodeRuntime
 //! layer pipeline must be self-consistent (decode step == prefill row).
 //!
-//! Requires `make artifacts`.
+//! Requires `make artifacts` and the `pjrt` feature — the golden vectors
+//! pin the python → HLO → PJRT chain, which the default build's pure-Rust
+//! reference engine does not exercise (it has its own tests in
+//! runtime/reference.rs).
+#![cfg(feature = "pjrt")]
 
 use std::rc::Rc;
 

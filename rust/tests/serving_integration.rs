@@ -1,16 +1,20 @@
-//! End-to-end serving integration over real PJRT artifacts:
-//! the split pipeline (edge front + compressed wire + stateless cloud)
-//! must reproduce monolithic single-node generation exactly when the
-//! compression is configured lossless, must keep working (approximately)
-//! under the paper's default lossy settings, and must honor the
-//! Algorithm-2 controller under tight deadlines.
+//! End-to-end serving integration: the split pipeline (edge front +
+//! compressed wire + stateless cloud) must reproduce monolithic
+//! single-node generation exactly when the compression is configured
+//! lossless, must keep working (approximately) under the paper's default
+//! lossy settings, and must honor the Algorithm-2 controller under tight
+//! deadlines.
 //!
-//! Requires `make artifacts`.
+//! Runs on the default pure-Rust reference engine; with `--features pjrt`
+//! the same tests exercise the real PJRT artifacts (`make artifacts`).
 
 use std::rc::Rc;
 
-use splitserve::coordinator::{build_pipeline, CompressionConfig, DeploymentSpec, Request};
+use splitserve::coordinator::{
+    build_pipeline, CompressedKv, CompressedTensor, CompressionConfig, DeploymentSpec, Request,
+};
 use splitserve::model::{ModelConfig, ModelWeights};
+use splitserve::planner::TxSettings;
 use splitserve::quant::OpscConfig;
 use splitserve::runtime::{Engine, NodeRuntime};
 
@@ -180,6 +184,92 @@ fn relaxed_deadline_degrades_gracefully() {
     // settings may have escalated; whatever happened, every transmitted
     // step respected the ladder (bits within budget)
     assert!(fs.qa_bits <= 4);
+}
+
+#[test]
+fn rebuild_payload_escalation_matches_from_scratch_compress() {
+    // Algorithm-2 escalation path: a payload re-built under escalated
+    // TxSettings must decompress to exactly the reconstruction the cloud
+    // would see from a from-scratch compress of the same request state,
+    // and the real wire sizes must respect the size oracle's ordering.
+    let cfg = small_cfg(4);
+    let eng = engine();
+    let mut spec = DeploymentSpec::defaults(cfg, 2);
+    // delta = 0 pins the adaptive search to the budget width, so the
+    // qa_bits ladder maps to strictly distinct code widths
+    spec.compression = CompressionConfig { tau: 5.0, q_bar: 4, delta: 0.0, use_rans: true };
+    let mut pipe = build_pipeline(eng, &spec).unwrap();
+
+    // drive prefill + a few real decode steps so the state holds history
+    // and cloud-layer KV
+    let (payload, mut state, _) = pipe.edge.prefill(42, &[10, 20, 30]).unwrap();
+    let (reply, _) = pipe.cloud.handle(&payload).unwrap();
+    pipe.edge.absorb_reply(&mut state, payload.pos, &reply.new_kv_rows);
+    let mut tok = reply.token;
+    for _ in 0..3 {
+        if tok == 0 {
+            tok = 1; // keep generating past EOS for test coverage
+        }
+        let (payload, _) = pipe.edge.decode_step(&mut state, tok, true, None).unwrap();
+        let (reply, _) = pipe.cloud.handle(&payload).unwrap();
+        pipe.edge.absorb_reply(&mut state, payload.pos, &reply.new_kv_rows);
+        tok = reply.token;
+    }
+
+    let mcfg = pipe.edge.node.weights.cfg.clone();
+    let (d, kvw) = (mcfg.d_model, mcfg.kv_width());
+    let w = state.seq_len();
+    let ladder = [
+        TxSettings { qa_bits: 4, include_kv: true },
+        TxSettings { qa_bits: 2, include_kv: true },
+        TxSettings { qa_bits: 2, include_kv: false },
+    ];
+    for s in ladder {
+        let p = pipe.edge.rebuild_payload(&state, s).unwrap();
+        let mut comp = pipe.edge.compression;
+        comp.q_bar = s.qa_bits;
+        let want_hidden = if s.include_kv {
+            CompressedTensor::compress_reference(&state.hidden_history[(w - 1) * d..w * d], 1, d, &comp)
+        } else {
+            CompressedTensor::compress_reference(&state.hidden_history, w, d, &comp)
+        };
+        assert_eq!(
+            p.hidden.decompress().unwrap(),
+            want_hidden.decompress().unwrap(),
+            "escalated hidden reconstruction must match from-scratch compress"
+        );
+        assert_eq!(p.hidden.wire_bytes(), want_hidden.wire_bytes());
+        assert_eq!(p.kv.is_some(), s.include_kv);
+        if let Some(kv) = &p.kv {
+            let scratch_kv = CompressedKv::compress(&state.cloud_kv, w - 1, kvw, &comp);
+            assert_eq!(
+                kv.decompress(mcfg.max_seq, kvw).unwrap(),
+                scratch_kv.decompress(mcfg.max_seq, kvw).unwrap(),
+                "escalated KV reconstruction must match from-scratch compress"
+            );
+            assert_eq!(kv.wire_bytes(), scratch_kv.wire_bytes());
+        }
+    }
+    // size-oracle agreement: whenever the oracle strictly orders two
+    // settings, the real payload must not be ordered the other way
+    for a in ladder {
+        for b in ladder {
+            let (pa, pb) = (
+                pipe.edge.payload_size_probe(&state, a).unwrap(),
+                pipe.edge.payload_size_probe(&state, b).unwrap(),
+            );
+            if pa < pb {
+                let (ra, rb) = (
+                    pipe.edge.rebuild_payload(&state, a).unwrap().wire_bytes(),
+                    pipe.edge.rebuild_payload(&state, b).unwrap().wire_bytes(),
+                );
+                assert!(
+                    ra <= rb,
+                    "oracle orders {a:?} ({pa}) < {b:?} ({pb}) but wire says {ra} > {rb}"
+                );
+            }
+        }
+    }
 }
 
 #[test]

@@ -1,0 +1,19 @@
+#!/usr/bin/env bash
+# Run the hot-path microbenchmarks and emit the machine-readable report.
+#
+#   scripts/bench.sh            # release build, writes BENCH_hot_paths.json
+#   BENCH_JSON=out.json scripts/bench.sh
+#
+# The JSON (name -> {median_ns, mean_ns, min_ns, p95_ns, iters}) is the
+# perf trajectory record referenced by EXPERIMENTS.md §Perf; commit the
+# numbers there (not the JSON) when they move.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export BENCH_JSON="${BENCH_JSON:-BENCH_hot_paths.json}"
+cargo bench --bench hot_paths "$@"
+
+if [ -f "$BENCH_JSON" ]; then
+    echo "--- $BENCH_JSON ---"
+    cat "$BENCH_JSON"
+fi
