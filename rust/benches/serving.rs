@@ -1,0 +1,105 @@
+//! Serving-throughput bench: the many-to-one serve loop (N edge devices,
+//! one shared stateless cloud, continuous batching over real payloads) vs
+//! the same trace forced serial (max_batch = 1), plus the single-session
+//! blocking driver for context. The EXPERIMENTS.md §Serving numbers.
+//!
+//! Emits a machine-readable report to `BENCH_serving.json` (override with
+//! the `BENCH_JSON` env var):
+//!
+//!   BENCH_JSON=BENCH_serving.json cargo bench --bench serving
+
+#[path = "common.rs"]
+mod common;
+
+use std::time::Duration;
+
+use common::load_engine;
+use splitserve::coordinator::{
+    build_pipeline, build_serve_loop, DeploymentSpec, Request, ServeSpec, TokenControl,
+};
+use splitserve::model::ModelConfig;
+use splitserve::trace::{generate_trace, WorkloadSpec};
+use splitserve::util::bench::{bench_recorded, JsonReport};
+
+fn small_cfg(n_layers: usize) -> ModelConfig {
+    let mut cfg = ModelConfig::sim7b();
+    cfg.n_layers = n_layers;
+    cfg
+}
+
+fn trace(n: usize) -> Vec<Request> {
+    generate_trace(&WorkloadSpec {
+        n_requests: n,
+        prompt_len_min: 3,
+        prompt_len_max: 8,
+        output_len_min: 4,
+        output_len_max: 8,
+        seed: 17,
+        ..Default::default()
+    })
+}
+
+fn main() -> anyhow::Result<()> {
+    let target = Duration::from_secs(2);
+    let mut report = JsonReport::new();
+    let cfg = small_cfg(4);
+    let engine = load_engine(&cfg);
+    let split = 2usize;
+    let n_requests = 6usize;
+
+    // Continuous batching: 2 devices, one shared cloud, default batcher.
+    let mut spec = ServeSpec::defaults(cfg.clone(), split, 2);
+    spec.deployment.link_seed = 900;
+    let mut serve = build_serve_loop(engine.clone(), &spec)?;
+    let mut last_batched = None;
+    bench_recorded(&mut report, "serve_loop/6 req x 2 dev (batched)", target, || {
+        let r = serve.run(trace(n_requests), |_, _| TokenControl::Continue).unwrap();
+        last_batched = Some(r);
+    });
+
+    // Same trace, same deployment, batch width forced to 1 (serial server).
+    let mut spec1 = spec.clone();
+    spec1.batcher.max_batch = 1;
+    let mut serial = build_serve_loop(engine.clone(), &spec1)?;
+    let mut last_serial = None;
+    bench_recorded(&mut report, "serve_loop/6 req x 2 dev (max_batch=1)", target, || {
+        let r = serial.run(trace(n_requests), |_, _| TokenControl::Continue).unwrap();
+        last_serial = Some(r);
+    });
+
+    // Single-session blocking driver for context (one request at a time,
+    // private cloud per pipeline).
+    let dspec = DeploymentSpec::defaults(cfg, split);
+    let mut pipe = build_pipeline(engine, &dspec)?;
+    bench_recorded(&mut report, "pipeline/generate 6 req sequential", target, || {
+        for req in &trace(n_requests) {
+            std::hint::black_box(pipe.generate(req).unwrap());
+        }
+    });
+
+    if let (Some(b), Some(s)) = (&last_batched, &last_serial) {
+        println!(
+            "\nbatched:  {:.1} tok/s simulated | p95 {:.1} ms | server busy {:.3} s | peak batch {}",
+            b.throughput_tok_s(),
+            b.p95_latency_s() * 1e3,
+            b.server_busy_s,
+            b.peak_batch
+        );
+        println!(
+            "serial:   {:.1} tok/s simulated | p95 {:.1} ms | server busy {:.3} s",
+            s.throughput_tok_s(),
+            s.p95_latency_s() * 1e3,
+            s.server_busy_s
+        );
+        println!(
+            "continuous batching gain: {:.2}x simulated throughput, {:.2}x server busy reduction",
+            b.throughput_tok_s() / s.throughput_tok_s().max(1e-9),
+            s.server_busy_s / b.server_busy_s.max(1e-9)
+        );
+    }
+
+    let path = std::env::var("BENCH_JSON").unwrap_or_else(|_| "BENCH_serving.json".to_string());
+    report.write(&path)?;
+    println!("wrote {path}");
+    Ok(())
+}

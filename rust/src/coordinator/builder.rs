@@ -2,17 +2,27 @@
 //! front + full-precision cloud back + link + controller) from a handful
 //! of knobs. This is the function examples, benches and the CLI all use —
 //! one construction path, no copy-pasted setup.
+//!
+//! Two entry points share every construction detail:
+//!   * [`build_pipeline`] — one edge + one cloud (the blocking
+//!     single-session driver),
+//!   * [`build_serve_loop`] — N edges + ONE shared cloud + router, the
+//!     many-to-one continuous-batching deployment of Fig. 1(c).
 
 use std::rc::Rc;
 
 use anyhow::Result;
 
+use super::batcher::BatcherParams;
 use super::cloud::CloudServer;
 use super::edge::EdgeDevice;
 use super::pipeline::SplitPipeline;
 use super::profile::DeviceProfile;
 use super::protocol::CompressionConfig;
+use super::router::{DeviceSlot, Router};
+use super::serve_loop::{EdgeEndpoint, ServeLoop};
 use crate::channel::{optimize_rate, ChannelParams, LinkSim};
+use crate::memory::ActBits;
 use crate::model::{ModelConfig, ModelWeights};
 use crate::planner::{EarlyExitController, LatencyModel};
 use crate::quant::{apply_opsc, OpscConfig};
@@ -49,51 +59,125 @@ impl DeploymentSpec {
             cloud_profile: DeviceProfile::cloud_default(),
         }
     }
+
+    fn check_split(&self) -> Result<usize> {
+        let split = self.opsc.split_layer;
+        anyhow::ensure!(
+            split >= 1 && split <= self.model.n_layers,
+            "split must keep at least one layer on the edge"
+        );
+        // split == n_layers is legal: the cloud runs only the lm head
+        // (full-edge deployment, the Fig. 5 offload-maximizing regime).
+        Ok(split)
+    }
+
+    fn operating_rate(&self) -> f64 {
+        self.rate_bps
+            .unwrap_or_else(|| optimize_rate(&self.channel, 1e5, 4.0 * self.channel.capacity_bps()))
+    }
+
+    fn controller(&self, rate: f64) -> Option<EarlyExitController> {
+        self.deadline_s.map(|d| {
+            let hd = self.model.kv_width() as u64;
+            EarlyExitController {
+                deadline_s: d,
+                model: LatencyModel { channel: self.channel, rate_bps: rate },
+                min_qa_bits: 2,
+                per_token_payload_bytes: hd * self.compression.q_bar as u64 / 8,
+            }
+        })
+    }
+
+    /// Build one OPSC-quantized edge front segment (its own weight copy).
+    fn build_edge(&self, engine: Rc<Engine>, split: usize) -> Result<EdgeDevice> {
+        let mut edge_weights = ModelWeights::synthetic(&self.model, self.weight_seed);
+        apply_opsc(&mut edge_weights, &self.opsc);
+        let edge_node = NodeRuntime::new(engine, Rc::new(edge_weights), 0..split, false)?;
+        Ok(EdgeDevice::new(
+            edge_node,
+            self.model.n_layers - split,
+            self.edge_profile.clone(),
+            self.compression,
+        ))
+    }
+
+    /// Build the full-precision cloud back segment (paper §2.1: the
+    /// server maintains a single high-precision model).
+    fn build_cloud(&self, engine: Rc<Engine>, split: usize) -> Result<CloudServer> {
+        let cloud_weights = Rc::new(ModelWeights::synthetic(&self.model, self.weight_seed));
+        let cloud_node = NodeRuntime::new(engine, cloud_weights, split..self.model.n_layers, true)?;
+        Ok(CloudServer::new(cloud_node, self.cloud_profile.clone()))
+    }
 }
 
-/// Build the full pipeline. The engine can be shared across deployments
-/// (pass the same Rc) — executables are compiled once per shape class.
+/// Build the single-session pipeline. The engine can be shared across
+/// deployments (pass the same Rc) — executables are compiled once per
+/// shape class.
 pub fn build_pipeline(engine: Rc<Engine>, spec: &DeploymentSpec) -> Result<SplitPipeline> {
-    let cfg = &spec.model;
-    let split = spec.opsc.split_layer;
-    anyhow::ensure!(
-        split >= 1 && split <= cfg.n_layers,
-        "split must keep at least one layer on the edge"
-    );
-    // split == n_layers is legal: the cloud runs only the lm head
-    // (full-edge deployment, the Fig. 5 offload-maximizing regime).
-
-    // Edge: front segment, OPSC-quantized.
-    let mut edge_weights = ModelWeights::synthetic(cfg, spec.weight_seed);
-    apply_opsc(&mut edge_weights, &spec.opsc);
-    let edge_node = NodeRuntime::new(engine.clone(), Rc::new(edge_weights), 0..split, false)?;
-
-    // Cloud: back segment, untouched full precision (paper §2.1: the
-    // server maintains a single high-precision model).
-    let cloud_weights = Rc::new(ModelWeights::synthetic(cfg, spec.weight_seed));
-    let cloud_node = NodeRuntime::new(engine, cloud_weights, split..cfg.n_layers, true)?;
-
-    let rate = spec
-        .rate_bps
-        .unwrap_or_else(|| optimize_rate(&spec.channel, 1e5, 4.0 * spec.channel.capacity_bps()));
+    let split = spec.check_split()?;
+    let edge = spec.build_edge(engine.clone(), split)?;
+    let cloud = spec.build_cloud(engine, split)?;
+    let rate = spec.operating_rate();
     let link = LinkSim::new(spec.channel, rate, spec.link_seed);
-
-    let edge = EdgeDevice::new(
-        edge_node,
-        cfg.n_layers - split,
-        spec.edge_profile.clone(),
-        spec.compression,
-    );
-    let cloud = CloudServer::new(cloud_node, spec.cloud_profile.clone());
     let mut pipeline = SplitPipeline::new(edge, cloud, link);
-    if let Some(d) = spec.deadline_s {
-        let hd = cfg.kv_width() as u64;
-        pipeline.controller = Some(EarlyExitController {
-            deadline_s: d,
-            model: LatencyModel { channel: spec.channel, rate_bps: rate },
-            min_qa_bits: 2,
-            per_token_payload_bytes: hd * spec.compression.q_bar as u64 / 8,
-        });
-    }
+    pipeline.controller = spec.controller(rate);
     Ok(pipeline)
+}
+
+/// Knobs for the many-to-one deployment on top of a `DeploymentSpec`.
+#[derive(Clone, Debug)]
+pub struct ServeSpec {
+    pub deployment: DeploymentSpec,
+    pub n_devices: usize,
+    /// Eq. 8c memory budget per edge device (router admission).
+    pub mem_budget_bytes: u64,
+    /// Iteration accounting: max batch width + sub-linear batching model.
+    pub batcher: BatcherParams,
+}
+
+impl ServeSpec {
+    pub fn defaults(model: ModelConfig, split: usize, n_devices: usize) -> ServeSpec {
+        ServeSpec {
+            deployment: DeploymentSpec::defaults(model, split),
+            n_devices,
+            mem_budget_bytes: 64 * 1024 * 1024,
+            batcher: BatcherParams::default(),
+        }
+    }
+}
+
+/// Build the many-to-one serve loop: `n_devices` edge endpoints (each with
+/// its own OPSC front, scratch pools and link fading stream, seeded
+/// `link_seed + device`) sharing ONE stateless `CloudServer`, fronted by a
+/// `Router` with per-device memory admission.
+pub fn build_serve_loop(engine: Rc<Engine>, spec: &ServeSpec) -> Result<ServeLoop> {
+    let dep = &spec.deployment;
+    anyhow::ensure!(spec.n_devices >= 1, "serve loop needs at least one edge device");
+    let split = dep.check_split()?;
+    let rate = dep.operating_rate();
+    let cloud = dep.build_cloud(engine.clone(), split)?;
+    let mut edges = Vec::with_capacity(spec.n_devices);
+    for d in 0..spec.n_devices {
+        let edge = dep.build_edge(engine.clone(), split)?;
+        let link = LinkSim::new(dep.channel, rate, dep.link_seed.wrapping_add(d as u64));
+        edges.push(EdgeEndpoint { edge, link });
+    }
+    let qa = ActBits::uniform(dep.compression.q_bar);
+    let slots: Vec<DeviceSlot> = (0..spec.n_devices)
+        .map(|d| {
+            DeviceSlot::new(
+                d,
+                &dep.model,
+                split,
+                dep.opsc.qw_front,
+                &qa,
+                dep.model.max_seq,
+                spec.mem_budget_bytes,
+            )
+        })
+        .collect();
+    let router = Router::new(slots);
+    let mut serve = ServeLoop::new(cloud, edges, router, spec.batcher.clone());
+    serve.controller = dep.controller(rate);
+    Ok(serve)
 }

@@ -1,13 +1,20 @@
 //! Cloud server: runs the full-precision back segment statelessly — every
 //! call carries all the state it needs (paper Fig. 1(c): one server, many
 //! heterogeneous edge devices, no per-client residue between calls).
+//!
+//! Because no per-request state lives here, `handle` takes `&self`: ONE
+//! `CloudServer` instance is shared by every session of the serve loop.
+//! Mutable residue is limited to stats (atomic) and the decompression
+//! scratch pool (already interior-mutable).
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Instant;
 
 use anyhow::Result;
 
-use super::protocol::{CloudReply, SplitPayload};
 use super::profile::DeviceProfile;
+use super::protocol::{CloudReply, SplitPayload};
+use super::sampling::{self, sample};
 use crate::quant::ScratchPool;
 use crate::runtime::NodeRuntime;
 
@@ -15,48 +22,55 @@ pub struct CloudServer {
     /// Back segment (layers split..L) + lm head, full precision.
     pub node: NodeRuntime,
     pub profile: DeviceProfile,
-    /// Tokens served (for Fig. 5(b) accounting).
-    pub tokens_generated: u64,
+    /// Tokens served (for Fig. 5(b) accounting); atomic so `handle` stays
+    /// `&self` under many-to-one sharing.
+    tokens_generated: AtomicU64,
     /// Decompression scratch (rANS slot-lookup table, code buffers),
     /// reused across requests and KV layers.
     pub scratch: ScratchPool,
 }
 
-fn argmax(v: &[f32]) -> u32 {
-    let mut best = (f32::NEG_INFINITY, 0usize);
-    for (i, &x) in v.iter().enumerate() {
-        if x > best.0 {
-            best = (x, i);
-        }
-    }
-    best.1 as u32
-}
-
-fn entropy(logits: &[f32]) -> f32 {
-    let m = logits.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
-    let exps: Vec<f32> = logits.iter().map(|&x| (x - m).exp()).collect();
-    let z: f32 = exps.iter().sum();
-    exps.iter().map(|&e| {
-        let p = e / z;
-        if p > 0.0 { -p * p.ln() } else { 0.0 }
-    }).sum()
-}
-
 impl CloudServer {
     pub fn new(node: NodeRuntime, profile: DeviceProfile) -> CloudServer {
-        CloudServer { node, profile, tokens_generated: 0, scratch: ScratchPool::new() }
+        CloudServer {
+            node,
+            profile,
+            tokens_generated: AtomicU64::new(0),
+            scratch: ScratchPool::new(),
+        }
     }
 
     fn cfg(&self) -> &crate::model::ModelConfig {
         &self.node.weights.cfg
     }
 
+    /// Tokens served over the life of the server (all sessions).
+    pub fn tokens_generated(&self) -> u64 {
+        self.tokens_generated.load(Ordering::Relaxed)
+    }
+
     /// Serve one payload. Returns (reply, scaled_compute_seconds).
-    pub fn handle(&mut self, payload: &SplitPayload) -> Result<(CloudReply, f64)> {
+    pub fn handle(&self, payload: &SplitPayload) -> Result<(CloudReply, f64)> {
+        let t0 = Instant::now();
+        let reply = self.serve_payload(payload)?;
+        self.tokens_generated.fetch_add(1, Ordering::Relaxed);
+        let compute_s = self.profile.scale(t0.elapsed().as_secs_f64());
+        Ok((reply, compute_s))
+    }
+
+    /// Serve one continuous-batching iteration's worth of payloads
+    /// back-to-back on this server (one scratch pool, one pass over the
+    /// batch). Per-payload compute is measured individually so the serve
+    /// loop's iteration accounting can apply its sub-linear batching model
+    /// to real numbers; replies are position-matched to `payloads`.
+    pub fn handle_batch(&self, payloads: &[SplitPayload]) -> Result<Vec<(CloudReply, f64)>> {
+        payloads.iter().map(|p| self.handle(p)).collect()
+    }
+
+    fn serve_payload(&self, payload: &SplitPayload) -> Result<CloudReply> {
         let cfg = self.cfg().clone();
         let d = cfg.d_model;
         let kvw = cfg.kv_width();
-        let t0 = Instant::now();
         let reply = if payload.is_prefill || payload.kv.is_none() {
             // Prefill, or I_kv = 0 decode (full hidden history): run the
             // back segment prefill-style over all rows.
@@ -67,7 +81,7 @@ impl CloudServer {
             let (h_out, kv_rows) = self.node.prefill(&h)?;
             let logits = self.node.logits_prefill(&h_out)?;
             let row = &logits[payload.pos * cfg.vocab..(payload.pos + 1) * cfg.vocab];
-            let token = argmax(row);
+            let token = sample(row, payload.sampling, payload.request_id, payload.pos);
             // Reply with the back-layer KV rows for all processed tokens
             // (prefill only — I_kv=0 decode keeps the cloud stateless and
             // the edge will resend history anyway).
@@ -83,7 +97,7 @@ impl CloudServer {
                 request_id: payload.request_id,
                 token,
                 new_kv_rows,
-                logits_entropy: entropy(row),
+                logits_entropy: sampling::entropy(row),
             }
         } else {
             // I_kv = 1 decode: reconstruct the shipped caches, run one
@@ -101,7 +115,7 @@ impl CloudServer {
             anyhow::ensure!(h.len() == d, "decode hidden must be one row");
             let h_out = self.node.decode(&h, &mut caches, payload.pos)?;
             let logits = self.node.logits_decode(&h_out)?;
-            let token = argmax(&logits);
+            let token = sample(&logits, payload.sampling, payload.request_id, payload.pos);
             let pos = payload.pos;
             let new_kv_rows = caches
                 .iter()
@@ -116,11 +130,9 @@ impl CloudServer {
                 request_id: payload.request_id,
                 token,
                 new_kv_rows,
-                logits_entropy: entropy(&logits),
+                logits_entropy: sampling::entropy(&logits),
             }
         };
-        self.tokens_generated += 1;
-        let compute_s = self.profile.scale(t0.elapsed().as_secs_f64());
-        Ok((reply, compute_s))
+        Ok(reply)
     }
 }

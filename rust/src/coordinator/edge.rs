@@ -6,10 +6,36 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use super::protocol::{CompressedKv, CompressedTensor, CompressionConfig, SplitPayload};
 use super::profile::DeviceProfile;
+use super::protocol::{CompressedKv, CompressedTensor, CompressionConfig, SplitPayload};
+use super::sampling::SamplingSpec;
+use crate::planner::TxSettings;
 use crate::quant::ScratchPool;
 use crate::runtime::{LayerKv, NodeRuntime};
+
+/// Outcome of probing the wire size a payload WOULD have under some
+/// transmission settings. Typed so the early-exit controller can tell
+/// "these settings cannot serve this state" (e.g. I_kv = 0 past the
+/// prefill width) apart from "the payload is merely huge" — previously a
+/// `u64::MAX / 4` sentinel.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ProbeOutcome {
+    /// Estimated wire bytes under the probed settings.
+    Feasible(u64),
+    /// The settings cannot serve the current request state at all.
+    Infeasible,
+}
+
+impl ProbeOutcome {
+    /// Estimated bytes, or `None` when infeasible — the shape the
+    /// controller's `PayloadOracle` consumes.
+    pub fn bytes(self) -> Option<u64> {
+        match self {
+            ProbeOutcome::Feasible(b) => Some(b),
+            ProbeOutcome::Infeasible => None,
+        }
+    }
+}
 
 /// Per-request state held on the edge. The cloud keeps nothing between
 /// calls (many-to-one deployment, paper Fig. 1(c)); Eq. (2)'s edge memory
@@ -108,6 +134,7 @@ impl EdgeDevice {
             hidden,
             kv: None, // nothing to ship yet — the cloud builds its KV in prefill
             is_prefill: true,
+            sampling: SamplingSpec::default(),
         };
         Ok((payload, state, compute_s))
     }
@@ -163,7 +190,14 @@ impl EdgeDevice {
             let hidden = self.compress_block(&state.hidden_history, w, d, &comp);
             (hidden, None)
         };
-        let payload = SplitPayload { request_id: state.request_id, pos, hidden, kv, is_prefill: false };
+        let payload = SplitPayload {
+            request_id: state.request_id,
+            pos,
+            hidden,
+            kv,
+            is_prefill: false,
+            sampling: SamplingSpec::default(),
+        };
         Ok((payload, compute_s))
     }
 
@@ -183,5 +217,68 @@ impl EdgeDevice {
             cache.k[start * kvw..(pos + 1) * kvw].copy_from_slice(krow);
             cache.v[start * kvw..(pos + 1) * kvw].copy_from_slice(vrow);
         }
+    }
+
+    /// Payload-size oracle for the early-exit controller: what WOULD the
+    /// wire size be under `settings`, given the current request state?
+    /// Uses the memory model for speed (the controller probes several
+    /// settings per step); the actual transmitted payload is re-built and
+    /// measured exactly.
+    pub fn payload_size_probe(
+        &self,
+        state: &EdgeRequestState,
+        settings: TxSettings,
+    ) -> ProbeOutcome {
+        let cfg = &self.node.weights.cfg;
+        let w = state.seq_len();
+        let qa = crate::memory::ActBits::uniform(settings.qa_bits);
+        let split = self.node.layer_range.end;
+        if settings.include_kv {
+            ProbeOutcome::Feasible(crate::memory::io_bytes(cfg, w, split, true, &qa))
+        } else if w > cfg.prefill_len {
+            // I_kv=0 impossible beyond the prefill width.
+            ProbeOutcome::Infeasible
+        } else {
+            ProbeOutcome::Feasible(crate::memory::io_bytes(cfg, w, split, false, &qa))
+        }
+    }
+
+    /// Rebuild the current step's payload under escalated settings (the
+    /// front-segment compute is NOT redone — only compression changes).
+    pub fn rebuild_payload(
+        &self,
+        state: &EdgeRequestState,
+        settings: TxSettings,
+    ) -> anyhow::Result<SplitPayload> {
+        let cfg = &self.node.weights.cfg;
+        let d = cfg.d_model;
+        let w = state.seq_len();
+        let pos = w - 1;
+        let mut comp = self.compression;
+        comp.q_bar = settings.qa_bits;
+        let last_hidden = &state.hidden_history[pos * d..w * d];
+        let (hidden, kv) = if settings.include_kv {
+            let hidden = self.compress_block(last_hidden, 1, d, &comp);
+            let kv = CompressedKv::compress_with_pool(
+                &state.cloud_kv,
+                pos,
+                cfg.kv_width(),
+                &comp,
+                &self.scratch,
+            );
+            (hidden, Some(kv))
+        } else {
+            anyhow::ensure!(w <= cfg.prefill_len, "I_kv=0 beyond prefill width");
+            let hidden = self.compress_block(&state.hidden_history, w, d, &comp);
+            (hidden, None)
+        };
+        Ok(SplitPayload {
+            request_id: state.request_id,
+            pos,
+            hidden,
+            kv,
+            is_prefill: false,
+            sampling: SamplingSpec::default(),
+        })
     }
 }

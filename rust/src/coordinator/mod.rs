@@ -2,6 +2,11 @@
 //! serving with OPSC front segments, two-stage intermediate compression on
 //! the wire, a stateless cloud, dynamic batching, routing, and the
 //! Algorithm-2 early-exit controller on the decode loop.
+//!
+//! The request path is a sans-IO state machine (`session`) with two
+//! drivers: `pipeline` (one blocking session) and `serve_loop` (N
+//! interleaved sessions sharing one `CloudServer` with continuous
+//! batching). `sim` stays the closed-form fast path for capacity planning.
 
 pub mod batcher;
 pub mod builder;
@@ -12,15 +17,21 @@ pub mod profile;
 pub mod protocol;
 pub mod request;
 pub mod router;
+pub mod sampling;
+pub mod serve_loop;
+pub mod session;
 pub mod sim;
 
 pub use batcher::{BatcherParams, DynamicBatcher};
-pub use builder::{build_pipeline, DeploymentSpec};
+pub use builder::{build_pipeline, build_serve_loop, DeploymentSpec, ServeSpec};
 pub use cloud::CloudServer;
-pub use edge::{EdgeDevice, EdgeRequestState};
+pub use edge::{EdgeDevice, EdgeRequestState, ProbeOutcome};
 pub use pipeline::SplitPipeline;
 pub use profile::DeviceProfile;
 pub use protocol::{CompressedKv, CompressedTensor, CompressionConfig, SplitPayload};
 pub use request::{GenerationResult, Request, StepStats};
 pub use router::{RouteDecision, Router};
+pub use sampling::SamplingSpec;
+pub use serve_loop::{EdgeEndpoint, ServeLoop, ServeReport, TokenControl};
+pub use session::{Session, SessionAction, SessionPhase};
 pub use sim::{simulate, Deployment, SimOutcome, SimWorkload};

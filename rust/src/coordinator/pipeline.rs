@@ -1,16 +1,23 @@
-//! SplitPipeline: one edge device + the cloud server + the wireless link +
-//! the Algorithm-2 early-exit controller, composed into a full
-//! autoregressive generation loop. This is the end-to-end request path —
-//! every byte on the wire is a real serialized payload, every latency is a
-//! measured compute time or a simulated link event.
+//! SplitPipeline: one edge device + one cloud server + the wireless link,
+//! composed into a blocking single-request driver over the sans-IO
+//! [`Session`](super::session::Session) state machine. Every byte on the
+//! wire is a real serialized payload, every latency is a measured compute
+//! time or a simulated link event.
+//!
+//! The generation logic itself (decode loop, Algorithm-2 escalation,
+//! `StepStats` accounting) lives in `Session`; this driver only performs
+//! the IO the session asks for. The many-to-one counterpart that shares
+//! one `CloudServer` across interleaved sessions is
+//! [`ServeLoop`](super::serve_loop::ServeLoop).
 
 use anyhow::Result;
 
 use super::cloud::CloudServer;
-use super::edge::{EdgeDevice, EdgeRequestState};
-use super::request::{GenerationResult, Request, StepStats};
+use super::edge::EdgeDevice;
+use super::request::{GenerationResult, Request};
+use super::session::{Session, SessionAction};
 use crate::channel::LinkSim;
-use crate::planner::{EarlyExitController, ExitDecision, TxSettings};
+use crate::planner::EarlyExitController;
 
 pub struct SplitPipeline {
     pub edge: EdgeDevice,
@@ -25,162 +32,24 @@ impl SplitPipeline {
         SplitPipeline { edge, cloud, link, controller: None }
     }
 
-    /// Run a full request. EOS is vocabulary token 0 (synthetic convention).
+    /// Run a full request to completion. EOS is vocabulary token 0
+    /// (synthetic convention). Behavior-identical to driving a fresh
+    /// `Session` by hand: poll → transmit → reply, until finished.
     pub fn generate(&mut self, req: &Request) -> Result<GenerationResult> {
-        let mut result = GenerationResult { request_id: req.id, ..Default::default() };
-        let mut settings = TxSettings {
-            qa_bits: self.edge.compression.q_bar,
-            include_kv: true,
-        };
-
-        // ---- prefill ----
-        let (payload, mut state, edge_s) = self.edge.prefill(req.id, &req.prompt)?;
-        let up = self.link.transfer(payload.wire_bytes());
-        let (reply, cloud_s) = self.cloud.handle(&payload)?;
-        let down = self.link.transfer(reply.wire_bytes());
-        self.edge.absorb_reply(&mut state, payload.pos, &reply.new_kv_rows);
-        result.prefill = StepStats {
-            edge_compute_s: edge_s,
-            cloud_compute_s: cloud_s,
-            uplink_s: up.latency_s,
-            downlink_s: down.latency_s,
-            uplink_bytes: up.payload_bytes,
-            downlink_bytes: down.payload_bytes,
-            outage: up.outage || down.outage,
-            chosen_bits: payload.hidden.chosen_bits,
-            kv_transmitted: false,
-        };
-        let mut next_token = reply.token;
-
-        // ---- decode loop ----
-        let mut budget = req.max_new_tokens;
-        while budget > 0 {
-            result.tokens.push(next_token);
-            budget -= 1;
-            if next_token == 0 || budget == 0 {
-                break; // EOS or budget exhausted
-            }
-            if state.seq_len() + 1 >= self.edge.node.weights.cfg.max_seq {
-                break; // static KV cache full
-            }
-
-            // Edge compute + provisional payload under current settings.
-            let (mut payload, edge_s) = self.edge.decode_step(
-                &mut state,
-                next_token,
-                settings.include_kv,
-                Some(settings.qa_bits),
-            )?;
-
-            // Algorithm 2: check the deadline, escalate if needed.
-            if let Some(ctrl) = &self.controller {
-                let state_ref = &state;
-                let edge_dev = &self.edge;
-                let oracle = |s: TxSettings| -> u64 {
-                    edge_dev
-                        .payload_size_probe(state_ref, s)
-                        .unwrap_or(u64::MAX / 4)
-                };
-                match ctrl.decide(edge_s, settings, &oracle) {
-                    ExitDecision::Proceed { .. } => {}
-                    ExitDecision::Escalate { settings: s, .. } => {
-                        settings = s;
-                        payload = self.edge.rebuild_payload(&state, settings)?;
-                    }
-                    ExitDecision::ReduceTokens { tokens_to_drop, .. } => {
-                        result.tokens_dropped = budget.min(tokens_to_drop);
-                        result.final_settings = Some(settings);
-                        break; // early exit: stop generating
-                    }
+        let mut session = Session::for_edge(req.clone(), &self.edge, self.controller);
+        loop {
+            match session.poll(&self.edge)? {
+                SessionAction::Transmit(payload) => {
+                    let up = self.link.transfer(payload.wire_bytes());
+                    let (reply, cloud_s) = self.cloud.handle(&payload)?;
+                    let down = self.link.transfer(reply.wire_bytes());
+                    session.on_reply(&self.edge, &reply, cloud_s, up, down);
                 }
+                // A single blocking driver never observes Yield: every
+                // transmit is answered before the next poll.
+                SessionAction::Yield => unreachable!("no in-flight IO in the blocking driver"),
+                SessionAction::Finished => return Ok(session.into_result()),
             }
-
-            let up = self.link.transfer(payload.wire_bytes());
-            let (reply, cloud_s) = self.cloud.handle(&payload)?;
-            let down = self.link.transfer(reply.wire_bytes());
-            if settings.include_kv {
-                self.edge.absorb_reply(&mut state, payload.pos, &reply.new_kv_rows);
-            }
-            result.steps.push(StepStats {
-                edge_compute_s: edge_s,
-                cloud_compute_s: cloud_s,
-                uplink_s: up.latency_s,
-                downlink_s: down.latency_s,
-                uplink_bytes: up.payload_bytes,
-                downlink_bytes: down.payload_bytes,
-                outage: up.outage || down.outage,
-                chosen_bits: payload.hidden.chosen_bits,
-                kv_transmitted: settings.include_kv,
-            });
-            next_token = reply.token;
         }
-        result.final_settings = Some(settings);
-        Ok(result)
-    }
-}
-
-impl EdgeDevice {
-    /// Payload-size oracle for the early-exit controller: what WOULD the
-    /// wire size be under `settings`, given the current request state?
-    /// Uses the memory model for speed (the controller probes several
-    /// settings per step); the actual transmitted payload is re-built and
-    /// measured exactly.
-    pub fn payload_size_probe(
-        &self,
-        state: &EdgeRequestState,
-        settings: TxSettings,
-    ) -> Result<u64> {
-        let cfg = &self.node.weights.cfg;
-        let w = state.seq_len();
-        let qa = crate::memory::ActBits::uniform(settings.qa_bits);
-        let split = self.node.layer_range.end;
-        if settings.include_kv {
-            Ok(crate::memory::io_bytes(cfg, w, split, true, &qa))
-        } else {
-            if w > cfg.prefill_len {
-                // I_kv=0 impossible beyond the prefill width — make it
-                // unattractive rather than erroring inside the controller.
-                return Ok(u64::MAX / 4);
-            }
-            Ok(crate::memory::io_bytes(cfg, w, split, false, &qa))
-        }
-    }
-
-    /// Rebuild the current step's payload under escalated settings (the
-    /// front-segment compute is NOT redone — only compression changes).
-    pub fn rebuild_payload(
-        &self,
-        state: &EdgeRequestState,
-        settings: TxSettings,
-    ) -> Result<super::protocol::SplitPayload> {
-        let cfg = &self.node.weights.cfg;
-        let d = cfg.d_model;
-        let w = state.seq_len();
-        let pos = w - 1;
-        let mut comp = self.compression;
-        comp.q_bar = settings.qa_bits;
-        let last_hidden = &state.hidden_history[pos * d..w * d];
-        let (hidden, kv) = if settings.include_kv {
-            let hidden = self.compress_block(last_hidden, 1, d, &comp);
-            let kv = super::protocol::CompressedKv::compress_with_pool(
-                &state.cloud_kv,
-                pos,
-                cfg.kv_width(),
-                &comp,
-                &self.scratch,
-            );
-            (hidden, Some(kv))
-        } else {
-            anyhow::ensure!(w <= cfg.prefill_len, "I_kv=0 beyond prefill width");
-            let hidden = self.compress_block(&state.hidden_history, w, d, &comp);
-            (hidden, None)
-        };
-        Ok(super::protocol::SplitPayload {
-            request_id: state.request_id,
-            pos,
-            hidden,
-            kv,
-            is_prefill: false,
-        })
     }
 }

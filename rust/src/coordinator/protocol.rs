@@ -315,11 +315,19 @@ pub struct SplitPayload {
     pub kv: Option<CompressedKv>,
     /// Prefill (true) or single-token decode (false).
     pub is_prefill: bool,
+    /// Decode policy for the stateless cloud (Session stamps it from the
+    /// Request; direct edge-API callers get greedy).
+    pub sampling: super::sampling::SamplingSpec,
 }
 
 impl SplitPayload {
     pub fn wire_bytes(&self) -> u64 {
-        17 + self.hidden.wire_bytes() + self.kv.as_ref().map_or(0, |k| k.wire_bytes())
+        // 17-byte fixed header (request id, pos, flags — greedy decode is
+        // a flag bit) + the sampling spec's own bytes when it carries
+        // top-k parameters.
+        17 + self.sampling.wire_bytes()
+            + self.hidden.wire_bytes()
+            + self.kv.as_ref().map_or(0, |k| k.wire_bytes())
     }
 }
 

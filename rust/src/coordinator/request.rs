@@ -1,5 +1,6 @@
 //! Request and generation-result types shared across the coordinator.
 
+use super::sampling::SamplingSpec;
 use crate::planner::TxSettings;
 
 /// One inference request submitted by a client of an edge device.
@@ -12,11 +13,27 @@ pub struct Request {
     pub deadline_s: Option<f64>,
     /// Arrival time in the workload clock (seconds).
     pub arrival_s: f64,
+    /// Decode policy executed by the (stateless) cloud; travels on every
+    /// payload of this request.
+    pub sampling: SamplingSpec,
 }
 
 impl Request {
     pub fn new(id: u64, prompt: Vec<u32>, max_new_tokens: usize) -> Request {
-        Request { id, prompt, max_new_tokens, deadline_s: None, arrival_s: 0.0 }
+        Request {
+            id,
+            prompt,
+            max_new_tokens,
+            deadline_s: None,
+            arrival_s: 0.0,
+            sampling: SamplingSpec::Greedy,
+        }
+    }
+
+    /// Builder-style sampling override.
+    pub fn with_sampling(mut self, sampling: SamplingSpec) -> Request {
+        self.sampling = sampling;
+        self
     }
 }
 

@@ -1,0 +1,169 @@
+//! Token selection for the cloud decode path.
+//!
+//! The cloud is stateless (paper Fig. 1(c)), so the sampling policy must
+//! travel with the payload: `SamplingSpec` is `Copy`, rides on every
+//! `SplitPayload`, and the seeded draw is keyed by (seed, request, pos) so
+//! the sampled token never depends on how requests are interleaved on the
+//! shared server — a hard requirement for the many-to-one serve loop,
+//! where decode iterations of different sessions are batched together.
+
+use crate::util::rng::Rng;
+
+/// How the cloud turns a logits row into the next token.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub enum SamplingSpec {
+    /// Deterministic argmax decode (the paper's evaluation setting).
+    #[default]
+    Greedy,
+    /// Seeded temperature/top-k sampling: softmax over the `k` largest
+    /// logits at `temperature`, drawn from a (seed, request, pos)-keyed
+    /// stream. `temperature <= 0` or `k <= 1` degrades to greedy.
+    TopK { k: usize, temperature: f32, seed: u64 },
+}
+
+impl SamplingSpec {
+    /// Extra wire bytes this spec adds to a payload: greedy is a flag bit
+    /// in the payload's fixed header; top-k appends k (u16), temperature
+    /// (f32) and seed (u64).
+    pub fn wire_bytes(&self) -> u64 {
+        match self {
+            SamplingSpec::Greedy => 0,
+            SamplingSpec::TopK { .. } => 14,
+        }
+    }
+}
+
+/// Index of the largest element (first on ties; 0 for an empty slice).
+pub fn argmax(v: &[f32]) -> u32 {
+    let mut best = (f32::NEG_INFINITY, 0usize);
+    for (i, &x) in v.iter().enumerate() {
+        if x > best.0 {
+            best = (x, i);
+        }
+    }
+    best.1 as u32
+}
+
+/// Shannon entropy (nats) of softmax(logits) — the early-exit confidence
+/// signal carried on every `CloudReply`.
+pub fn entropy(logits: &[f32]) -> f32 {
+    let m = logits.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+    let exps: Vec<f32> = logits.iter().map(|&x| (x - m).exp()).collect();
+    let z: f32 = exps.iter().sum();
+    exps.iter()
+        .map(|&e| {
+            let p = e / z;
+            if p > 0.0 {
+                -p * p.ln()
+            } else {
+                0.0
+            }
+        })
+        .sum()
+}
+
+/// Sample one token from a logits row under `spec`. Deterministic in
+/// (logits, spec, request_id, pos) — scheduling order cannot change it.
+pub fn sample(logits: &[f32], spec: SamplingSpec, request_id: u64, pos: usize) -> u32 {
+    match spec {
+        SamplingSpec::Greedy => argmax(logits),
+        SamplingSpec::TopK { k, temperature, seed } => {
+            if temperature <= 0.0 || k <= 1 || logits.len() <= 1 {
+                return argmax(logits);
+            }
+            let k = k.min(logits.len());
+            // Short-list the k largest logits in O(V) (ties broken by
+            // index so the candidate set is deterministic). One index
+            // buffer is the only allocation; the softmax weights are
+            // streamed, never materialized.
+            // total_cmp: a total order even if a quantization overflow
+            // ever produces NaN logits (an Equal-on-NaN comparator would
+            // panic std's sort/select as inconsistent).
+            let desc = |a: &usize, b: &usize| logits[*b].total_cmp(&logits[*a]).then(a.cmp(b));
+            let mut idx: Vec<usize> = (0..logits.len()).collect();
+            if k < idx.len() {
+                idx.select_nth_unstable_by(k - 1, desc);
+                idx.truncate(k);
+            }
+            idx.sort_unstable_by(desc);
+            let m = logits[idx[0]]; // sorted descending: the shortlist max
+            let w = |i: usize| (((logits[i] - m) / temperature) as f64).exp();
+            let z: f64 = idx.iter().map(|&i| w(i)).sum();
+            // Position-keyed stream: one fresh generator per (seed,
+            // request, pos) triple, independent of draw order elsewhere.
+            let mut rng = Rng::new(
+                seed ^ request_id.rotate_left(32)
+                    ^ (pos as u64).wrapping_mul(0x9E3779B97F4A7C15),
+            );
+            let u = rng.f64() * z;
+            let mut acc = 0.0f64;
+            for &i in &idx {
+                acc += w(i);
+                if u < acc {
+                    return i as u32;
+                }
+            }
+            idx[idx.len() - 1] as u32
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn logits() -> Vec<f32> {
+        vec![0.1, 2.5, -1.0, 2.4, 0.0, 1.9, -3.0, 0.7]
+    }
+
+    #[test]
+    fn greedy_is_argmax() {
+        let l = logits();
+        assert_eq!(sample(&l, SamplingSpec::Greedy, 1, 0), argmax(&l));
+        assert_eq!(argmax(&l), 1);
+    }
+
+    #[test]
+    fn zero_temperature_and_k1_degrade_to_greedy() {
+        let l = logits();
+        let t0 = SamplingSpec::TopK { k: 4, temperature: 0.0, seed: 9 };
+        let k1 = SamplingSpec::TopK { k: 1, temperature: 1.0, seed: 9 };
+        assert_eq!(sample(&l, t0, 1, 0), argmax(&l));
+        assert_eq!(sample(&l, k1, 1, 0), argmax(&l));
+    }
+
+    #[test]
+    fn topk_stays_within_shortlist() {
+        let l = logits();
+        let spec = SamplingSpec::TopK { k: 3, temperature: 1.5, seed: 42 };
+        // top-3 by logit: indices 1 (2.5), 3 (2.4), 5 (1.9)
+        for pos in 0..200 {
+            let t = sample(&l, spec, 7, pos);
+            assert!([1u32, 3, 5].contains(&t), "token {t} outside top-k");
+        }
+    }
+
+    #[test]
+    fn topk_deterministic_per_key_and_varies_with_pos() {
+        let l = logits();
+        let spec = SamplingSpec::TopK { k: 3, temperature: 1.5, seed: 42 };
+        let a: Vec<u32> = (0..64).map(|p| sample(&l, spec, 7, p)).collect();
+        let b: Vec<u32> = (0..64).map(|p| sample(&l, spec, 7, p)).collect();
+        assert_eq!(a, b, "same (seed, request, pos) must reproduce");
+        let other_req: Vec<u32> = (0..64).map(|p| sample(&l, spec, 8, p)).collect();
+        assert_ne!(a, other_req, "request id must decorrelate streams");
+        // at this temperature the draw must actually mix over positions
+        let mut seen = a.clone();
+        seen.sort_unstable();
+        seen.dedup();
+        assert!(seen.len() > 1, "temperature sampling never varied");
+    }
+
+    #[test]
+    fn entropy_peaks_on_uniform() {
+        let flat = vec![1.0f32; 8];
+        let peaked = vec![10.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0];
+        assert!(entropy(&flat) > entropy(&peaked));
+        assert!((entropy(&flat) - (8f32).ln()).abs() < 1e-4);
+    }
+}

@@ -1,0 +1,320 @@
+//! Many-to-one serve loop: N edge devices, ONE shared stateless
+//! `CloudServer`, continuous (iteration-level) batching over real
+//! payloads — the paper's Fig. 1(c) deployment as an executable scheduler
+//! rather than the `sim.rs` cost-scalar model.
+//!
+//! Each admitted request is a sans-IO [`Session`]. Every loop iteration:
+//!
+//!   1. admits arrived requests through the [`Router`] (Eq. 8c memory
+//!      admission, least-outstanding-work placement),
+//!   2. polls every active session — each runs its edge front segment and
+//!      hands back a compressed `SplitPayload`,
+//!   3. streams newly committed tokens to the caller's sink (which may
+//!      cancel a session mid-stream),
+//!   4. ships the iteration's payloads over each device's `LinkSim` and
+//!      serves them together on the shared cloud (`handle_batch`),
+//!   5. retires finished/cancelled sessions, returning their router slots
+//!      (`Router::complete` — capacity really is reclaimed under churn).
+//!
+//! Token streams are scheduling-independent: the cloud is stateless and
+//! sampling is (seed, request, pos)-keyed, so interleaving N sessions
+//! produces exactly the tokens each request would get alone through
+//! `SplitPipeline::generate`.
+//!
+//! Clock model: per-request `StepStats` are real (measured compute +
+//! simulated link events). The loop additionally keeps an aggregate
+//! simulated clock in which the batch's edge/link work overlaps across
+//! devices (max, not sum) and the shared server applies the
+//! `BatcherParams` sub-linear batching model to the *measured* per-payload
+//! compute — `sim.rs` remains the closed-form fast path for the same
+//! accounting and is cross-checked against this loop in the test suite.
+
+use std::collections::VecDeque;
+
+use anyhow::Result;
+
+use super::batcher::BatcherParams;
+use super::cloud::CloudServer;
+use super::edge::EdgeDevice;
+use super::protocol::SplitPayload;
+use super::request::{GenerationResult, Request};
+use super::router::{RouteDecision, Router};
+use super::session::{Session, SessionAction};
+use crate::channel::{LinkSim, TransferOutcome};
+use crate::planner::EarlyExitController;
+
+/// One edge device and its wireless link; every session runs on exactly
+/// one endpoint (selected by the router at admission).
+pub struct EdgeEndpoint {
+    pub edge: EdgeDevice,
+    pub link: LinkSim,
+}
+
+/// Verdict of the per-token streaming sink.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TokenControl {
+    Continue,
+    /// Tear the session down mid-stream (slot is reclaimed immediately).
+    Cancel,
+}
+
+/// Aggregate outcome of one `ServeLoop::run`.
+#[derive(Clone, Debug, Default)]
+pub struct ServeReport {
+    /// Per-request results, completion order (cancelled/failed included —
+    /// they carry the tokens committed before teardown).
+    pub results: Vec<GenerationResult>,
+    /// Simulated-clock arrival→completion latency of each request that
+    /// finished naturally (completion order).
+    pub latencies_s: Vec<f64>,
+    /// Simulated wall clock at the end of the run.
+    pub clock_s: f64,
+    /// Simulated seconds the shared server spent computing.
+    pub server_busy_s: f64,
+    pub iterations: u64,
+    pub total_tokens: u64,
+    pub cancelled: u64,
+    pub failed: u64,
+    /// Largest number of payloads served in one iteration.
+    pub peak_batch: usize,
+    /// (request_id, error) for sessions torn down by an edge-side error.
+    pub errors: Vec<(u64, String)>,
+}
+
+impl ServeReport {
+    pub fn throughput_tok_s(&self) -> f64 {
+        if self.clock_s > 0.0 {
+            self.total_tokens as f64 / self.clock_s
+        } else {
+            0.0
+        }
+    }
+
+    pub fn mean_latency_s(&self) -> f64 {
+        crate::util::mean(&self.latencies_s)
+    }
+
+    pub fn p95_latency_s(&self) -> f64 {
+        crate::util::percentile(&self.latencies_s, 95.0)
+    }
+}
+
+struct ActiveSession {
+    session: Session,
+    device: usize,
+    /// Whether the router charged a slot (false = cloud-fallback overflow).
+    routed: bool,
+    /// Tokens charged at admission; released verbatim at completion.
+    expected: u64,
+    arrival_s: f64,
+    /// Tokens already pushed to the streaming sink.
+    streamed: usize,
+    failed: bool,
+}
+
+/// The many-to-one scheduler: drives N concurrent sessions across
+/// multiple edge devices and one shared cloud server.
+pub struct ServeLoop {
+    pub cloud: CloudServer,
+    pub edges: Vec<EdgeEndpoint>,
+    pub router: Router,
+    /// Iteration accounting (max batch width, sub-linear batching model).
+    pub params: BatcherParams,
+    /// Early-exit controller applied to every session (None = best effort).
+    pub controller: Option<EarlyExitController>,
+}
+
+impl ServeLoop {
+    pub fn new(
+        cloud: CloudServer,
+        edges: Vec<EdgeEndpoint>,
+        router: Router,
+        params: BatcherParams,
+    ) -> ServeLoop {
+        ServeLoop { cloud, edges, router, params, controller: None }
+    }
+
+    fn least_loaded_device(&self) -> usize {
+        self.router
+            .devices
+            .iter()
+            .min_by_key(|d| (d.outstanding_tokens, d.device_id))
+            .map(|d| d.device_id)
+            .unwrap_or(0)
+    }
+
+    /// Serve a whole trace to completion, streaming every committed token
+    /// through `on_token` (return `TokenControl::Cancel` to tear that
+    /// session down mid-stream). Requests are admitted at their
+    /// `arrival_s` on the simulated clock.
+    pub fn run(
+        &mut self,
+        requests: Vec<Request>,
+        mut on_token: impl FnMut(u64, u32) -> TokenControl,
+    ) -> Result<ServeReport> {
+        anyhow::ensure!(!self.edges.is_empty(), "serve loop needs at least one edge device");
+        let max_batch = self.params.max_batch.max(1);
+        let mut pending = requests;
+        pending.sort_by(|a, b| a.arrival_s.partial_cmp(&b.arrival_s).unwrap());
+        let mut next = 0usize;
+        let mut waiting: VecDeque<Request> = VecDeque::new();
+        let mut active: Vec<ActiveSession> = Vec::new();
+        let mut report = ServeReport::default();
+        let mut clock = 0.0f64;
+
+        loop {
+            // 1. arrivals up to the current clock
+            while next < pending.len() && pending[next].arrival_s <= clock {
+                waiting.push_back(pending[next].clone());
+                next += 1;
+            }
+
+            // 2. admission: router memory check + iteration width cap.
+            let mut admitted_any = false;
+            while active.len() < max_batch && !waiting.is_empty() {
+                let can_admit = self.router.devices.iter().any(|d| d.can_admit());
+                if !can_admit && !active.is_empty() {
+                    break; // wait for a completion to free capacity
+                }
+                let req = waiting.pop_front().expect("non-empty checked");
+                let expected = req.max_new_tokens as u64;
+                let (device, routed) = match self.router.route(expected) {
+                    RouteDecision::ToDevice(d) => (d, true),
+                    // No memory headroom anywhere but nothing is running:
+                    // serve on the least-loaded device without charging a
+                    // slot (the deployment's overflow path) rather than
+                    // deadlocking.
+                    RouteDecision::CloudFallback => (self.least_loaded_device(), false),
+                };
+                let arrival_s = req.arrival_s;
+                let session = Session::for_edge(req, &self.edges[device].edge, self.controller);
+                active.push(ActiveSession {
+                    session,
+                    device,
+                    routed,
+                    expected,
+                    arrival_s,
+                    streamed: 0,
+                    failed: false,
+                });
+                admitted_any = true;
+            }
+
+            // 3. idle handling / termination
+            if active.is_empty() {
+                if next < pending.len() {
+                    clock = clock.max(pending[next].arrival_s); // jump to next arrival
+                    continue;
+                }
+                break; // drained
+            }
+
+            // 4. poll every session: edge compute + payload build
+            let mut outbox: Vec<(usize, SplitPayload)> = Vec::new();
+            for (i, a) in active.iter_mut().enumerate() {
+                let edge = &self.edges[a.device].edge;
+                match a.session.poll(edge) {
+                    Ok(SessionAction::Transmit(payload)) => outbox.push((i, payload)),
+                    Ok(SessionAction::Yield) | Ok(SessionAction::Finished) => {}
+                    Err(e) => {
+                        // poll already cancelled the session; record and
+                        // let the retire sweep reclaim the slot.
+                        a.failed = true;
+                        report.errors.push((a.session.request_id(), e.to_string()));
+                    }
+                }
+            }
+
+            // 5. stream tokens committed by this poll; sink may cancel.
+            for a in active.iter_mut() {
+                while a.streamed < a.session.tokens().len() {
+                    let t = a.session.tokens()[a.streamed];
+                    a.streamed += 1;
+                    if on_token(a.session.request_id(), t) == TokenControl::Cancel {
+                        a.session.cancel();
+                        break;
+                    }
+                }
+            }
+
+            // 6. deliver the iteration's batch: uplink per device, one
+            // shared-server batch call, downlink + reply per session.
+            let mut meta: Vec<(usize, TransferOutcome)> = Vec::new();
+            let mut payloads: Vec<SplitPayload> = Vec::new();
+            for (i, payload) in outbox {
+                if active[i].session.is_terminal() {
+                    continue; // cancelled between poll and delivery
+                }
+                let up = self.edges[active[i].device].link.transfer(payload.wire_bytes());
+                meta.push((i, up));
+                payloads.push(payload);
+            }
+            let served = self.cloud.handle_batch(&payloads)?;
+            let b = payloads.len();
+            let mut batch_cloud_s = 0.0f64;
+            // Edge/link time overlaps across devices but serializes on one
+            // device: sum per device, then max across devices.
+            let mut device_busy_s = vec![0.0f64; self.edges.len()];
+            for ((i, up), (reply, cloud_s)) in meta.into_iter().zip(served) {
+                let a = &mut active[i];
+                let edge_s = a.session.pending_edge_s().unwrap_or(0.0);
+                let EdgeEndpoint { edge, link } = &mut self.edges[a.device];
+                let down = link.transfer(reply.wire_bytes());
+                a.session.on_reply(edge, &reply, cloud_s, up, down);
+                batch_cloud_s += cloud_s;
+                device_busy_s[a.device] += edge_s + up.latency_s + down.latency_s;
+            }
+            let edge_wire_max_s = device_busy_s.iter().fold(0.0f64, |m, &x| m.max(x));
+
+            // 7. retire terminal sessions (free router slots, collect
+            // results) BEFORE advancing the clock: their last token was
+            // delivered at the end of the previous iteration.
+            let mut finished_any = false;
+            let mut i = 0;
+            while i < active.len() {
+                if !active[i].session.is_terminal() {
+                    i += 1;
+                    continue;
+                }
+                let a = active.swap_remove(i);
+                finished_any = true;
+                if a.routed {
+                    self.router.complete(a.device, a.expected);
+                }
+                let cancelled = a.session.is_cancelled();
+                let res = a.session.into_result();
+                report.total_tokens += res.tokens.len() as u64;
+                if a.failed {
+                    report.failed += 1;
+                } else if cancelled {
+                    report.cancelled += 1;
+                } else {
+                    report.latencies_s.push(clock - a.arrival_s);
+                }
+                report.results.push(res);
+            }
+
+            // 8. advance the simulated clock by one continuous-batching
+            // iteration: overlapped edge/link work + sub-linearly batched
+            // server compute (BatcherParams applied to measured seconds).
+            if b > 0 {
+                let bf = b as f64;
+                let batched_server_s = (batch_cloud_s / bf)
+                    * (1.0 + self.params.batch_overhead * (bf - 1.0))
+                    + self.params.congestion_s_per_waiter * waiting.len() as f64;
+                clock += edge_wire_max_s + batched_server_s;
+                report.server_busy_s += batched_server_s;
+                report.iterations += 1;
+                report.peak_batch = report.peak_batch.max(b);
+            } else if !finished_any && !admitted_any {
+                // No transmissions, no completions, no admissions — the
+                // loop would spin forever. Cannot happen with a correct
+                // session machine; fail loudly instead of hanging.
+                anyhow::bail!("serve loop stalled with {} active sessions", active.len());
+            }
+        }
+
+        report.clock_s = clock;
+        Ok(report)
+    }
+}

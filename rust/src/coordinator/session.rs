@@ -1,0 +1,313 @@
+//! Sans-IO session state machine — one generation request as a pure
+//! state-transition object with NO knowledge of links, servers or clocks.
+//!
+//! The session owns the per-request edge state (`EdgeRequestState`) and the
+//! Algorithm-2 escalation ladder, and exposes exactly two transitions:
+//!
+//!   * [`Session::poll`] — advance until the session either needs IO
+//!     (`SessionAction::Transmit`: the caller must deliver the payload to a
+//!     cloud server), is blocked on IO it already requested
+//!     (`SessionAction::Yield`), or is finished (`SessionAction::Finished`).
+//!   * [`Session::on_reply`] — feed back the cloud's reply plus the link
+//!     outcomes the driver measured; the session records `StepStats` and
+//!     becomes pollable again.
+//!
+//! Because all IO is pushed to the caller, the same state machine serves
+//! both drivers: `SplitPipeline::generate` (one session, blocking) and
+//! `ServeLoop` (N interleaved sessions, one shared `CloudServer`,
+//! continuous batching). Phases:
+//!
+//! ```text
+//! NeedPrefill ──poll──▶ AwaitingReply ──on_reply──▶ ReadyToDecode
+//!                  ▲                                     │ poll
+//!                  └─────────────────────────────────────┤
+//!                                                        ▼
+//!                                                 Done / Cancelled
+//! ```
+
+use anyhow::Result;
+
+use super::edge::{EdgeDevice, EdgeRequestState};
+use super::protocol::{CloudReply, SplitPayload};
+use super::request::{GenerationResult, Request, StepStats};
+use crate::channel::TransferOutcome;
+use crate::planner::{EarlyExitController, ExitDecision, TxSettings};
+
+/// Where the session is in its lifecycle.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SessionPhase {
+    /// Created; the next `poll` runs the edge prefill.
+    NeedPrefill,
+    /// A payload is in flight; waiting for `on_reply`.
+    AwaitingReply,
+    /// A reply has been absorbed; the next `poll` commits the token and
+    /// runs the next decode step (or finishes).
+    ReadyToDecode,
+    /// Generation completed (EOS, budget, cache limit, or early exit).
+    Done,
+    /// Torn down mid-stream by the driver (or failed).
+    Cancelled,
+}
+
+/// What the driver must do next for this session.
+#[derive(Debug)]
+pub enum SessionAction {
+    /// Deliver this payload to the cloud, then call `on_reply` with the
+    /// reply and the measured link outcomes.
+    Transmit(SplitPayload),
+    /// Nothing to do — a transmission is already in flight.
+    Yield,
+    /// Terminal; collect the result with `into_result`.
+    Finished,
+}
+
+/// Bookkeeping for the transmission currently in flight: everything
+/// `on_reply` needs to finish the step's `StepStats`.
+#[derive(Clone, Copy, Debug)]
+struct PendingTx {
+    edge_s: f64,
+    chosen_bits: u32,
+    kv_transmitted: bool,
+    is_prefill: bool,
+    pos: usize,
+}
+
+pub struct Session {
+    request: Request,
+    phase: SessionPhase,
+    /// Current transmission settings (mutated by Algorithm-2 escalations).
+    settings: TxSettings,
+    controller: Option<EarlyExitController>,
+    /// Edge-held request state; None until prefill runs.
+    state: Option<EdgeRequestState>,
+    /// Token produced by the last reply, committed on the next poll.
+    next_token: u32,
+    /// Decode budget remaining (max_new_tokens countdown).
+    budget: usize,
+    pending: Option<PendingTx>,
+    result: GenerationResult,
+}
+
+impl Session {
+    /// New session with explicit initial transmission settings.
+    pub fn new(
+        request: Request,
+        settings: TxSettings,
+        controller: Option<EarlyExitController>,
+    ) -> Session {
+        let result = GenerationResult { request_id: request.id, ..Default::default() };
+        let budget = request.max_new_tokens;
+        Session {
+            request,
+            phase: SessionPhase::NeedPrefill,
+            settings,
+            controller,
+            state: None,
+            next_token: 0,
+            budget,
+            pending: None,
+            result,
+        }
+    }
+
+    /// New session whose initial settings follow the edge device's
+    /// configured compression (the `SplitPipeline::generate` defaults).
+    pub fn for_edge(
+        request: Request,
+        edge: &EdgeDevice,
+        controller: Option<EarlyExitController>,
+    ) -> Session {
+        let settings = TxSettings { qa_bits: edge.compression.q_bar, include_kv: true };
+        Session::new(request, settings, controller)
+    }
+
+    pub fn request_id(&self) -> u64 {
+        self.request.id
+    }
+
+    pub fn phase(&self) -> SessionPhase {
+        self.phase
+    }
+
+    pub fn is_terminal(&self) -> bool {
+        matches!(self.phase, SessionPhase::Done | SessionPhase::Cancelled)
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.phase == SessionPhase::Cancelled
+    }
+
+    /// Tokens committed so far (for streaming drivers).
+    pub fn tokens(&self) -> &[u32] {
+        &self.result.tokens
+    }
+
+    /// Result accumulated so far (complete once the session is terminal).
+    pub fn result(&self) -> &GenerationResult {
+        &self.result
+    }
+
+    pub fn into_result(self) -> GenerationResult {
+        self.result
+    }
+
+    /// Edge compute seconds of the transmission currently in flight (for
+    /// the serve loop's iteration clock).
+    pub fn pending_edge_s(&self) -> Option<f64> {
+        self.pending.as_ref().map(|p| p.edge_s)
+    }
+
+    /// Tear the session down mid-stream. Idempotent; a no-op once Done.
+    pub fn cancel(&mut self) {
+        if self.phase != SessionPhase::Done {
+            self.result.final_settings = Some(self.settings);
+            self.pending = None;
+            self.phase = SessionPhase::Cancelled;
+        }
+    }
+
+    fn finish(&mut self) -> SessionAction {
+        self.result.final_settings = Some(self.settings);
+        self.phase = SessionPhase::Done;
+        SessionAction::Finished
+    }
+
+    /// Advance the state machine. Errors (e.g. empty prompt) leave the
+    /// session Cancelled so loop drivers can drop it cleanly; single-
+    /// session drivers may just propagate.
+    pub fn poll(&mut self, edge: &EdgeDevice) -> Result<SessionAction> {
+        let r = match self.phase {
+            SessionPhase::Done | SessionPhase::Cancelled => return Ok(SessionAction::Finished),
+            SessionPhase::AwaitingReply => return Ok(SessionAction::Yield),
+            SessionPhase::NeedPrefill => self.poll_prefill(edge),
+            SessionPhase::ReadyToDecode => self.poll_decode(edge),
+        };
+        if r.is_err() {
+            self.cancel();
+        }
+        r
+    }
+
+    fn poll_prefill(&mut self, edge: &EdgeDevice) -> Result<SessionAction> {
+        let (mut payload, state, edge_s) = edge.prefill(self.request.id, &self.request.prompt)?;
+        payload.sampling = self.request.sampling;
+        self.pending = Some(PendingTx {
+            edge_s,
+            chosen_bits: payload.hidden.chosen_bits,
+            kv_transmitted: false,
+            is_prefill: true,
+            pos: payload.pos,
+        });
+        self.state = Some(state);
+        self.phase = SessionPhase::AwaitingReply;
+        Ok(SessionAction::Transmit(payload))
+    }
+
+    fn poll_decode(&mut self, edge: &EdgeDevice) -> Result<SessionAction> {
+        if self.budget == 0 {
+            return Ok(self.finish());
+        }
+        // Commit the token the last reply produced.
+        let token = self.next_token;
+        self.result.tokens.push(token);
+        self.budget -= 1;
+        if token == 0 || self.budget == 0 {
+            return Ok(self.finish()); // EOS or budget exhausted
+        }
+        let max_seq = edge.node.weights.cfg.max_seq;
+        {
+            let state = self.state.as_ref().expect("decode before prefill");
+            if state.seq_len() + 1 >= max_seq {
+                return Ok(self.finish()); // static KV cache full
+            }
+        }
+        // An earlier escalation to I_kv = 0 stops being feasible once the
+        // sequence outgrows the prefill width (the cloud can no longer
+        // recompute from scratch) — revert to shipping KV rather than
+        // letting decode_step reject the request; the controller may
+        // still re-escalate the bit budget below.
+        let prefill_len = edge.node.weights.cfg.prefill_len;
+        let state = self.state.as_mut().expect("decode before prefill");
+        if !self.settings.include_kv && state.seq_len() + 1 > prefill_len {
+            self.settings.include_kv = true;
+        }
+        // Edge compute + provisional payload under current settings.
+        let (mut payload, edge_s) = edge.decode_step(
+            state,
+            token,
+            self.settings.include_kv,
+            Some(self.settings.qa_bits),
+        )?;
+
+        // Algorithm 2, folded into the transition: check the deadline,
+        // escalate (possibly rebuilding the payload) or exit early.
+        if let Some(ctrl) = self.controller {
+            let decision = {
+                let state_ref: &EdgeRequestState = state;
+                let oracle =
+                    |s: TxSettings| edge.payload_size_probe(state_ref, s).bytes();
+                ctrl.decide(edge_s, self.settings, &oracle)
+            };
+            match decision {
+                ExitDecision::Proceed { .. } => {}
+                ExitDecision::Escalate { settings, .. } => {
+                    self.settings = settings;
+                    payload = edge.rebuild_payload(state, settings)?;
+                }
+                ExitDecision::ReduceTokens { tokens_to_drop, .. } => {
+                    self.result.tokens_dropped = self.budget.min(tokens_to_drop);
+                    return Ok(self.finish()); // early exit: stop generating
+                }
+            }
+        }
+        payload.sampling = self.request.sampling;
+        self.pending = Some(PendingTx {
+            edge_s,
+            chosen_bits: payload.hidden.chosen_bits,
+            kv_transmitted: self.settings.include_kv,
+            is_prefill: false,
+            pos: payload.pos,
+        });
+        self.phase = SessionPhase::AwaitingReply;
+        Ok(SessionAction::Transmit(payload))
+    }
+
+    /// Feed back the cloud's reply for the in-flight transmission, plus
+    /// the uplink/downlink outcomes the driver measured. Ignored (stray
+    /// reply) if the session is terminal or nothing is in flight.
+    pub fn on_reply(
+        &mut self,
+        edge: &EdgeDevice,
+        reply: &CloudReply,
+        cloud_s: f64,
+        up: TransferOutcome,
+        down: TransferOutcome,
+    ) {
+        if self.is_terminal() {
+            return;
+        }
+        let Some(pending) = self.pending.take() else { return };
+        let stats = StepStats {
+            edge_compute_s: pending.edge_s,
+            cloud_compute_s: cloud_s,
+            uplink_s: up.latency_s,
+            downlink_s: down.latency_s,
+            uplink_bytes: up.payload_bytes,
+            downlink_bytes: down.payload_bytes,
+            outage: up.outage || down.outage,
+            chosen_bits: pending.chosen_bits,
+            kv_transmitted: pending.kv_transmitted,
+        };
+        if pending.is_prefill {
+            self.result.prefill = stats;
+        } else {
+            self.result.steps.push(stats);
+        }
+        if pending.is_prefill || pending.kv_transmitted {
+            let state = self.state.as_mut().expect("reply before prefill");
+            edge.absorb_reply(state, pending.pos, &reply.new_kv_rows);
+        }
+        self.next_token = reply.token;
+        self.phase = SessionPhase::ReadyToDecode;
+    }
+}

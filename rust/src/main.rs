@@ -11,7 +11,9 @@
 use std::rc::Rc;
 
 use anyhow::Result;
-use splitserve::coordinator::{build_pipeline, DeploymentSpec, Request};
+use splitserve::coordinator::{
+    build_pipeline, build_serve_loop, DeploymentSpec, Request, ServeSpec, TokenControl,
+};
 use splitserve::model::ModelConfig;
 use splitserve::planner::{plan, AnalyticAccuracyModel, PlanInputs};
 use splitserve::runtime::Engine;
@@ -27,7 +29,7 @@ USAGE: splitserve <subcommand> [flags]
   models                                list model configurations
   plan      --model sim7b --budget-mb 16 --w-bar 128
   generate  --model sim7b --layers 8 --split 4 --prompt 5,6,7 --max-new 12
-  serve     --model sim7b --layers 8 --devices 2 --requests 6
+  serve     --model sim7b --layers 8 --devices 2 --requests 6 --max-batch 8
   sweep     (see examples/compression_sweep for the richer version)
 ";
 
@@ -126,30 +128,43 @@ fn main() -> Result<()> {
             let devices = args.usize_or("devices", 2);
             let n_requests = args.usize_or("requests", 6);
             let engine = Rc::new(Engine::load("artifacts", &cfg)?);
-            let mut pipes = Vec::new();
-            for d in 0..devices {
-                let mut spec = DeploymentSpec::defaults(cfg.clone(), split);
-                spec.link_seed = 100 + d as u64;
-                pipes.push(build_pipeline(engine.clone(), &spec)?);
+            let mut spec = ServeSpec::defaults(cfg.clone(), split, devices);
+            spec.deployment.link_seed = 100;
+            spec.batcher.max_batch = args.usize_or("max-batch", spec.batcher.max_batch);
+            if let Some(d) = args.flag("deadline-ms") {
+                spec.deployment.deadline_s = Some(d.parse::<f64>()? / 1e3);
             }
+            let mut serve = build_serve_loop(engine, &spec)?;
             let trace = generate_trace(&WorkloadSpec { n_requests, ..Default::default() });
-            let mut total_tokens = 0usize;
-            let mut total_latency = 0f64;
-            for (i, req) in trace.iter().enumerate() {
-                let res = pipes[i % devices].generate(req)?;
-                total_tokens += res.tokens.len();
-                total_latency += res.total_latency_s();
+            // Real end-to-end serving: every token below crossed the
+            // simulated link as compressed bytes and was decoded by the
+            // shared stateless cloud in a continuous-batching iteration.
+            let report = serve.run(trace, |_, _| TokenControl::Continue)?;
+            for r in &report.results {
                 println!(
-                    "req {} -> dev {}: {} tokens, {:.1} ms",
-                    req.id,
-                    i % devices,
-                    res.tokens.len(),
-                    res.total_latency_s() * 1e3
+                    "req {}: {} tokens, {:.1} ms e2e, {} B up / {} B down",
+                    r.request_id,
+                    r.tokens.len(),
+                    r.total_latency_s() * 1e3,
+                    r.total_uplink_bytes(),
+                    r.total_downlink_bytes()
                 );
             }
             println!(
-                "served {n_requests} requests, {total_tokens} tokens, {:.1} tok/s (simulated)",
-                total_tokens as f64 / total_latency
+                "served {} requests, {} tokens in {:.2} s simulated ({} iterations, peak batch {})",
+                report.results.len(),
+                report.total_tokens,
+                report.clock_s,
+                report.iterations,
+                report.peak_batch
+            );
+            println!(
+                "throughput {:.1} tok/s | mean latency {:.1} ms | p95 {:.1} ms | server busy {:.2} s | cloud calls {}",
+                report.throughput_tok_s(),
+                report.mean_latency_s() * 1e3,
+                report.p95_latency_s() * 1e3,
+                report.server_busy_s,
+                serve.cloud.tokens_generated()
             );
         }
         Some("sweep") => {

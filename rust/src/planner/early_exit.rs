@@ -50,13 +50,16 @@ pub enum ExitDecision {
 }
 
 /// Payload oracle: the coordinator supplies the *actual* wire size for a
-/// given (settings) pair — compression results, not estimates.
+/// given (settings) pair — compression results, not estimates. `None`
+/// means the settings cannot serve the current request state at all
+/// (e.g. I_kv = 0 past the prefill width, `ProbeOutcome::Infeasible`);
+/// the controller skips such rungs instead of comparing magic sentinels.
 pub trait PayloadOracle {
-    fn payload_bytes(&self, settings: TxSettings) -> u64;
+    fn payload_bytes(&self, settings: TxSettings) -> Option<u64>;
 }
 
-impl<F: Fn(TxSettings) -> u64> PayloadOracle for F {
-    fn payload_bytes(&self, settings: TxSettings) -> u64 {
+impl<F: Fn(TxSettings) -> Option<u64>> PayloadOracle for F {
+    fn payload_bytes(&self, settings: TxSettings) -> Option<u64> {
         self(settings)
     }
 }
@@ -74,49 +77,57 @@ pub struct EarlyExitController {
 }
 
 impl EarlyExitController {
-    /// Evaluate one transmission (Alg. 2 lines 8-27).
+    /// Evaluate one transmission (Alg. 2 lines 8-27). Infeasible rungs
+    /// (oracle returns `None`) are skipped; the ladder only ever lands on
+    /// settings that can actually serve the request state.
     pub fn decide(
         &self,
         compute_s: f64,
         start: TxSettings,
         payload: &dyn PayloadOracle,
     ) -> ExitDecision {
-        let lat = |s: TxSettings| self.model.total_latency_s(compute_s, payload.payload_bytes(s));
-        let l0 = lat(start);
-        if l0 <= self.deadline_s {
-            return ExitDecision::Proceed { latency_s: l0 };
+        let lat = |s: TxSettings| {
+            payload.payload_bytes(s).map(|b| self.model.total_latency_s(compute_s, b))
+        };
+        // Cheapest feasible latency seen on the ladder (sizes the token
+        // cut if every rung misses the deadline).
+        let mut l_min = f64::INFINITY;
+        if let Some(l) = lat(start) {
+            if l <= self.deadline_s {
+                return ExitDecision::Proceed { latency_s: l };
+            }
+            l_min = l;
         }
         // Ladder step 1: recompress harder (lines 10-14).
         let mut s = start;
         while s.qa_bits > self.min_qa_bits {
             s.qa_bits -= 1;
-            let l = lat(s);
-            if l <= self.deadline_s {
-                return ExitDecision::Escalate { settings: s, latency_s: l };
+            if let Some(l) = lat(s) {
+                if l <= self.deadline_s {
+                    return ExitDecision::Escalate { settings: s, latency_s: l };
+                }
+                l_min = l_min.min(l);
             }
         }
         // Ladder step 2: drop the KV transmission (lines 15-18).
         if s.include_kv {
             s.include_kv = false;
-            s.qa_bits = start.qa_bits; // re-try from the configured bits
-            let l = lat(s);
-            if l <= self.deadline_s {
-                return ExitDecision::Escalate { settings: s, latency_s: l };
-            }
+            s.qa_bits = start.qa_bits + 1; // re-try from the configured bits
             while s.qa_bits > self.min_qa_bits {
                 s.qa_bits -= 1;
-                let l = lat(s);
-                if l <= self.deadline_s {
-                    return ExitDecision::Escalate { settings: s, latency_s: l };
+                if let Some(l) = lat(s) {
+                    if l <= self.deadline_s {
+                        return ExitDecision::Escalate { settings: s, latency_s: l };
+                    }
+                    l_min = l_min.min(l);
                 }
             }
         }
         // Ladder step 3: reduce tokens (lines 19-24) — size the cut from
         // the per-token payload share.
-        let l_min = lat(s);
-        let over_s = l_min - self.deadline_s;
+        let over_s = (l_min - self.deadline_s).max(0.0);
         let per_token_s = self.model.total_latency_s(0.0, self.per_token_payload_bytes);
-        let drop = if per_token_s > 0.0 {
+        let drop = if per_token_s > 0.0 && over_s.is_finite() {
             (over_s / per_token_s).ceil() as usize
         } else {
             1
@@ -134,13 +145,13 @@ mod tests {
     }
 
     /// Payload model: KV costs 20x the hidden state; size scales with bits.
-    fn oracle(base: u64) -> impl Fn(TxSettings) -> u64 {
+    fn oracle(base: u64) -> impl Fn(TxSettings) -> Option<u64> {
         move |s: TxSettings| {
             let per_bits = base * s.qa_bits as u64 / 8;
             if s.include_kv {
-                per_bits * 20
+                Some(per_bits * 20)
             } else {
-                per_bits
+                Some(per_bits)
             }
         }
     }
@@ -208,8 +219,36 @@ mod tests {
         let start = TxSettings { qa_bits: 8, include_kv: true };
         let orc = oracle(4096);
         if let ExitDecision::Escalate { settings, latency_s } = c.decide(0.001, start, &orc) {
-            let recomputed = c.model.total_latency_s(0.001, orc(settings));
+            let recomputed = c.model.total_latency_s(0.001, orc(settings).unwrap());
             assert!((recomputed - latency_s).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn infeasible_rungs_are_skipped() {
+        // A deadline only the I_kv=0 rung could meet, but that rung is
+        // infeasible: the controller must fall through to ReduceTokens
+        // without ever selecting the infeasible settings.
+        let c = controller(0.012);
+        let start = TxSettings { qa_bits: 8, include_kv: true };
+        let gated = |s: TxSettings| {
+            if s.include_kv {
+                Some(4096 * s.qa_bits as u64 / 8 * 20)
+            } else {
+                None // e.g. seq_len > prefill width: cannot drop KV
+            }
+        };
+        match c.decide(0.001, start, &gated) {
+            ExitDecision::ReduceTokens { tokens_to_drop, latency_s } => {
+                assert!(tokens_to_drop >= 1);
+                assert!(latency_s.is_finite(), "cut must be sized from a feasible rung");
+            }
+            other => panic!("expected ReduceTokens, got {other:?}"),
+        }
+        // sanity: with the rung feasible the same deadline escalates to no-KV
+        match c.decide(0.001, start, &oracle(4096)) {
+            ExitDecision::Escalate { settings, .. } => assert!(!settings.include_kv),
+            other => panic!("expected Escalate, got {other:?}"),
         }
     }
 

@@ -255,8 +255,8 @@ fn rebuild_payload_escalation_matches_from_scratch_compress() {
     for a in ladder {
         for b in ladder {
             let (pa, pb) = (
-                pipe.edge.payload_size_probe(&state, a).unwrap(),
-                pipe.edge.payload_size_probe(&state, b).unwrap(),
+                pipe.edge.payload_size_probe(&state, a).bytes().expect("ladder settings feasible"),
+                pipe.edge.payload_size_probe(&state, b).bytes().expect("ladder settings feasible"),
             );
             if pa < pb {
                 let (ra, rb) = (
