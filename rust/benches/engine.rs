@@ -1,0 +1,220 @@
+//! Engine bench: the in-place batched execution engine vs the retained
+//! copy-semantics baseline, plus the stacked-decode serve loop vs the
+//! same loop forced onto the per-payload copyful cloud behavior. The
+//! EXPERIMENTS.md §Engine numbers.
+//!
+//! Baseline caveat: `decode_copyful` reproduces the pre-PR CACHE
+//! handling (clone → upload → return per layer) but runs on this PR's
+//! tiled matmul kernels, so it is strictly >= the seed engine's speed
+//! (the seed also used a naive un-tiled scalar matmul; its `aik == 0`
+//! skip won nothing on the full-precision cloud weights measured here).
+//! The reported `*_vs_pre_pr` speedups are therefore conservative LOWER
+//! BOUNDS on the true gap to the seed.
+//!
+//! Emits `BENCH_engine.json` (`BENCH_JSON` env to override) with both the
+//! timing stats and a "metrics" object (tokens/s, speedup ratios). The
+//! binary ASSERTS the tentpole invariant — a decode step performs zero
+//! KV-cache copies through the engine's upload surface — so a panic here
+//! fails CI's bench smoke step.
+//!
+//!   BENCH_JSON=BENCH_engine.json cargo bench --bench engine
+//!   BENCH_SMOKE=1 cargo bench --bench engine     # reduced CI config
+
+#[path = "common.rs"]
+mod common;
+
+use std::rc::Rc;
+use std::time::Duration;
+
+use common::{bench_cfg, load_engine};
+use splitserve::coordinator::{build_serve_loop, ServeSpec, TokenControl};
+use splitserve::model::{ModelConfig, ModelWeights};
+use splitserve::runtime::{LayerKv, NodeRuntime};
+use splitserve::trace::{generate_trace, WorkloadSpec};
+use splitserve::util::bench::{bench_recorded, JsonReport};
+
+fn small_cfg(n_layers: usize) -> ModelConfig {
+    let mut cfg = ModelConfig::sim7b();
+    cfg.n_layers = n_layers;
+    cfg
+}
+
+fn trace(n: usize) -> Vec<splitserve::coordinator::Request> {
+    generate_trace(&WorkloadSpec {
+        n_requests: n,
+        // effectively simultaneous arrivals: the bench measures stacked
+        // decode width, not arrival-process behavior
+        arrival_rate: 1e9,
+        prompt_len_min: 3,
+        prompt_len_max: 8,
+        output_len_min: 6,
+        output_len_max: 10,
+        seed: 17,
+        ..Default::default()
+    })
+}
+
+fn main() -> anyhow::Result<()> {
+    let smoke = std::env::var("BENCH_SMOKE").is_ok();
+    let target = if smoke { Duration::from_millis(80) } else { Duration::from_millis(800) };
+    let serve_target = if smoke { Duration::from_millis(300) } else { Duration::from_secs(2) };
+    let mut report = JsonReport::new();
+
+    // ---- single-stream decode: in-place vs copyful (pre-PR) ----
+    let cfg = bench_cfg("7b"); // depth-reduced 12-layer stack
+    let engine = load_engine(&cfg);
+    let weights = Rc::new(ModelWeights::synthetic(&cfg, 42));
+    let layers = 0..cfg.n_layers;
+    let node = NodeRuntime::new(engine.clone(), weights.clone(), layers.clone(), true)?;
+    let mut node_copyful = NodeRuntime::new(engine.clone(), weights.clone(), layers, true)?;
+    node_copyful.copyful_decode = true;
+
+    let prompt: Vec<u32> = (0..8u32).map(|i| (i * 37) % 512).collect();
+    let x = weights.embed_padded(&prompt, cfg.prefill_len);
+    let (_, kv_rows) = node.prefill(&x)?;
+    let mut kv = node.install_prefill_kv(&kv_rows, prompt.len());
+    let xt = weights.embed(&[7]);
+
+    // ACCEPTANCE assertion: zero full-KV-cache copies on the decode hot
+    // path. The engine counts every element cloned through its upload
+    // surface; the in-place path must leave the counter FLAT.
+    let before = engine.uploaded_elems();
+    let h = node.decode(&xt, &mut kv, prompt.len())?;
+    let _ = node.logits_decode(&h)?;
+    assert_eq!(
+        engine.uploaded_elems(),
+        before,
+        "in-place decode step must perform zero cache copies/uploads"
+    );
+    let _ = node_copyful.decode(&xt, &mut kv, prompt.len() + 1)?;
+    let copied = engine.uploaded_elems() - before;
+    assert!(copied > 0, "copyful baseline must demonstrate the eliminated copies");
+    report.add_metric("kv_upload_elems_per_step_inplace", 0.0);
+    report.add_metric("kv_upload_elems_per_step_copyful", copied as f64);
+
+    let mut kv = node.install_prefill_kv(&kv_rows, prompt.len());
+    let mut pos = prompt.len();
+    bench_recorded(&mut report, "engine/decode+head 12-layer (in-place)", target, || {
+        if pos >= cfg.max_seq {
+            kv = node.install_prefill_kv(&kv_rows, prompt.len());
+            pos = prompt.len();
+        }
+        let h = node.decode(&xt, &mut kv, pos).unwrap();
+        std::hint::black_box(node.logits_decode(&h).unwrap());
+        pos += 1;
+    });
+    let mut kv = node.install_prefill_kv(&kv_rows, prompt.len());
+    let mut pos = prompt.len();
+    bench_recorded(&mut report, "engine/decode+head 12-layer (copyful pre-PR)", target, || {
+        if pos >= cfg.max_seq {
+            kv = node.install_prefill_kv(&kv_rows, prompt.len());
+            pos = prompt.len();
+        }
+        let h = node_copyful.decode(&xt, &mut kv, pos).unwrap();
+        std::hint::black_box(node_copyful.logits_decode(&h).unwrap());
+        pos += 1;
+    });
+    let inplace_ns = report.median_ns("engine/decode+head 12-layer (in-place)");
+    let copyful_ns = report.median_ns("engine/decode+head 12-layer (copyful pre-PR)");
+    report.add_metric("decode_tok_s_inplace", 1e9 / inplace_ns);
+    report.add_metric("decode_tok_s_copyful", 1e9 / copyful_ns);
+    report.add_metric("decode_speedup_vs_pre_pr", copyful_ns / inplace_ns);
+    println!(
+        "\nsingle-stream decode: {:.0} tok/s in-place vs {:.0} tok/s copyful ({:.2}x)",
+        1e9 / inplace_ns,
+        1e9 / copyful_ns,
+        copyful_ns / inplace_ns
+    );
+
+    // ---- stacked decode: B sessions, one weight traversal ----
+    let b = 4usize;
+    let d = cfg.d_model;
+    let mut kvs: Vec<Vec<LayerKv>> =
+        (0..b).map(|_| node.install_prefill_kv(&kv_rows, prompt.len())).collect();
+    let mut hs = vec![0f32; b * d];
+    let mut pos = prompt.len();
+    bench_recorded(&mut report, "engine/decode+head 12-layer (stacked B=4)", target, || {
+        if pos >= cfg.max_seq {
+            for kv in &mut kvs {
+                *kv = node.install_prefill_kv(&kv_rows, prompt.len());
+            }
+            pos = prompt.len();
+        }
+        for row in hs.chunks_mut(d) {
+            row.copy_from_slice(&xt);
+        }
+        let positions = [pos; 4];
+        let mut refs: Vec<&mut [LayerKv]> = kvs.iter_mut().map(|c| c.as_mut_slice()).collect();
+        node.decode_batch(&mut hs, &mut refs, &positions).unwrap();
+        std::hint::black_box(node.logits_decode_batch(&hs, 4).unwrap());
+        pos += 1;
+    });
+    let stacked_ns = report.median_ns("engine/decode+head 12-layer (stacked B=4)");
+    let stacked_per_tok = stacked_ns / b as f64;
+    report.add_metric("decode_tok_s_stacked_b4", 1e9 / stacked_per_tok);
+    report.add_metric("stacked_b4_speedup_vs_sequential", inplace_ns / stacked_per_tok);
+    println!(
+        "stacked B=4 decode: {:.0} tok/s aggregate ({:.2}x vs 4 sequential in-place steps)",
+        1e9 / stacked_per_tok,
+        inplace_ns / stacked_per_tok
+    );
+
+    // ---- serve loop at B >= 4: stacked vs pre-PR cloud behavior ----
+    let scfg = small_cfg(4);
+    let sengine = load_engine(&scfg);
+    let n_requests = if smoke { 6 } else { 8 };
+    let mut spec = ServeSpec::defaults(scfg.clone(), 2, 4);
+    spec.deployment.link_seed = 901;
+    // Fast link: this bench isolates ENGINE-limited serving throughput;
+    // at the default radio rate the simulated clock is link-dominated and
+    // no engine change would move it.
+    spec.deployment.rate_bps = Some(1e9);
+
+    let mut serve = build_serve_loop(sengine.clone(), &spec)?;
+    let mut last_stacked = None;
+    bench_recorded(&mut report, "serve_loop/8 req x 4 dev (stacked)", serve_target, || {
+        let r = serve.run(trace(n_requests), |_, _| TokenControl::Continue).unwrap();
+        last_stacked = Some(r);
+    });
+    let stacked_report = last_stacked.expect("bench ran");
+    assert!(
+        stacked_report.peak_batch >= 4,
+        "serve bench must reach B >= 4 iterations: {stacked_report:?}"
+    );
+    assert!(serve.cloud.tokens_stacked() > 0, "stacked decode path never engaged");
+
+    // Pre-PR baseline: same deployment, cloud serves payload-at-a-time
+    // through the copyful decode path (the retained oracle) on cloud AND
+    // edge nodes.
+    let mut legacy = build_serve_loop(sengine.clone(), &spec)?;
+    legacy.cloud.stacked = false;
+    legacy.cloud.node.copyful_decode = true;
+    for e in &mut legacy.edges {
+        e.edge.node.copyful_decode = true;
+    }
+    let mut last_legacy = None;
+    bench_recorded(&mut report, "serve_loop/8 req x 4 dev (copyful pre-PR)", serve_target, || {
+        let r = legacy.run(trace(n_requests), |_, _| TokenControl::Continue).unwrap();
+        last_legacy = Some(r);
+    });
+    let legacy_report = last_legacy.expect("bench ran");
+
+    let tok_s_stacked = stacked_report.throughput_tok_s();
+    let tok_s_legacy = legacy_report.throughput_tok_s();
+    report.add_metric("serve_tok_s_stacked", tok_s_stacked);
+    report.add_metric("serve_tok_s_pre_pr", tok_s_legacy);
+    report.add_metric("serve_speedup_vs_pre_pr", tok_s_stacked / tok_s_legacy.max(1e-9));
+    report.add_metric("serve_peak_batch", stacked_report.peak_batch as f64);
+    println!(
+        "serve loop (4 dev, peak batch {}): {:.1} tok/s stacked vs {:.1} tok/s pre-PR ({:.2}x)",
+        stacked_report.peak_batch,
+        tok_s_stacked,
+        tok_s_legacy,
+        tok_s_stacked / tok_s_legacy.max(1e-9)
+    );
+
+    let path = std::env::var("BENCH_JSON").unwrap_or_else(|_| "BENCH_engine.json".to_string());
+    report.write(&path)?;
+    println!("wrote {path}");
+    Ok(())
+}

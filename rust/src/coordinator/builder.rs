@@ -88,11 +88,25 @@ impl DeploymentSpec {
         })
     }
 
-    /// Build one OPSC-quantized edge front segment (its own weight copy).
-    fn build_edge(&self, engine: Rc<Engine>, split: usize) -> Result<EdgeDevice> {
+    /// Synthesize + OPSC-quantize the edge weight set ONCE; every edge
+    /// device of a deployment shares the same Rc (devices are identical
+    /// by construction — same seed, same quantizer), so an N-device serve
+    /// loop pays one weight build instead of N.
+    fn edge_weights(&self) -> Rc<ModelWeights> {
         let mut edge_weights = ModelWeights::synthetic(&self.model, self.weight_seed);
         apply_opsc(&mut edge_weights, &self.opsc);
-        let edge_node = NodeRuntime::new(engine, Rc::new(edge_weights), 0..split, false)?;
+        Rc::new(edge_weights)
+    }
+
+    /// Build one OPSC-quantized edge front segment (its own device
+    /// buffers over the shared weight set).
+    fn build_edge(
+        &self,
+        engine: Rc<Engine>,
+        split: usize,
+        weights: Rc<ModelWeights>,
+    ) -> Result<EdgeDevice> {
+        let edge_node = NodeRuntime::new(engine, weights, 0..split, false)?;
         Ok(EdgeDevice::new(
             edge_node,
             self.model.n_layers - split,
@@ -115,7 +129,7 @@ impl DeploymentSpec {
 /// shape class.
 pub fn build_pipeline(engine: Rc<Engine>, spec: &DeploymentSpec) -> Result<SplitPipeline> {
     let split = spec.check_split()?;
-    let edge = spec.build_edge(engine.clone(), split)?;
+    let edge = spec.build_edge(engine.clone(), split, spec.edge_weights())?;
     let cloud = spec.build_cloud(engine, split)?;
     let rate = spec.operating_rate();
     let link = LinkSim::new(spec.channel, rate, spec.link_seed);
@@ -147,18 +161,20 @@ impl ServeSpec {
 }
 
 /// Build the many-to-one serve loop: `n_devices` edge endpoints (each with
-/// its own OPSC front, scratch pools and link fading stream, seeded
-/// `link_seed + device`) sharing ONE stateless `CloudServer`, fronted by a
-/// `Router` with per-device memory admission.
+/// its own device buffers, scratch pools and link fading stream, seeded
+/// `link_seed + device`, over ONE shared OPSC weight set) sharing ONE
+/// stateless `CloudServer`, fronted by a `Router` with per-device memory
+/// admission.
 pub fn build_serve_loop(engine: Rc<Engine>, spec: &ServeSpec) -> Result<ServeLoop> {
     let dep = &spec.deployment;
     anyhow::ensure!(spec.n_devices >= 1, "serve loop needs at least one edge device");
     let split = dep.check_split()?;
     let rate = dep.operating_rate();
     let cloud = dep.build_cloud(engine.clone(), split)?;
+    let edge_weights = dep.edge_weights();
     let mut edges = Vec::with_capacity(spec.n_devices);
     for d in 0..spec.n_devices {
-        let edge = dep.build_edge(engine.clone(), split)?;
+        let edge = dep.build_edge(engine.clone(), split, edge_weights.clone())?;
         let link = LinkSim::new(dep.channel, rate, dep.link_seed.wrapping_add(d as u64));
         edges.push(EdgeEndpoint { edge, link });
     }

@@ -119,7 +119,11 @@ impl EdgeDevice {
 
         let d = cfg.d_model;
         let w = prompt.len();
-        let hidden_history = h[..w * d].to_vec();
+        // Sized for the whole request up front: decode appends one row per
+        // step, so reserving max_seq rows avoids re-allocating (and
+        // re-copying) the history on the decode hot path.
+        let mut hidden_history = Vec::with_capacity(cfg.max_seq * d);
+        hidden_history.extend_from_slice(&h[..w * d]);
         let hidden = self.compress_block(&hidden_history, w, d, &self.compression);
         let state = EdgeRequestState {
             request_id,

@@ -24,7 +24,7 @@ pub mod sim;
 
 pub use batcher::{BatcherParams, DynamicBatcher};
 pub use builder::{build_pipeline, build_serve_loop, DeploymentSpec, ServeSpec};
-pub use cloud::CloudServer;
+pub use cloud::{BatchCompute, CloudServer};
 pub use edge::{EdgeDevice, EdgeRequestState, ProbeOutcome};
 pub use pipeline::SplitPipeline;
 pub use profile::DeviceProfile;

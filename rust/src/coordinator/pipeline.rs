@@ -7,8 +7,11 @@
 //! The generation logic itself (decode loop, Algorithm-2 escalation,
 //! `StepStats` accounting) lives in `Session`; this driver only performs
 //! the IO the session asks for. The many-to-one counterpart that shares
-//! one `CloudServer` across interleaved sessions is
-//! [`ServeLoop`](super::serve_loop::ServeLoop).
+//! one `CloudServer` across interleaved sessions — and stacks their
+//! decode steps into batched engine calls — is
+//! [`ServeLoop`](super::serve_loop::ServeLoop). Both run on the in-place
+//! engine contract: decode mutates the request's KV caches through
+//! `&mut LayerKv` and never copies a full cache.
 
 use anyhow::Result;
 

@@ -279,23 +279,29 @@ impl CompressedKv {
     }
 
     /// Scratch-reusing reconstruction (cloud hot path: one arena serves
-    /// every layer of the request).
+    /// every layer of the request). Each cache buffer is the decompressed
+    /// tensor itself, zero-extended to full width — no zeroed max_seq
+    /// cache is allocated just to be overwritten.
     pub fn decompress_with_pool(
         &self,
         max_seq: usize,
         kv_width: usize,
         pool: &ScratchPool,
     ) -> Result<Vec<crate::runtime::LayerKv>> {
+        let used = self.used_rows * kv_width;
+        let total = max_seq * kv_width;
+        anyhow::ensure!(used <= total, "used rows {} exceed cache width {max_seq}", self.used_rows);
         pool.with(|s| {
             self.layers
                 .iter()
                 .map(|(kc, vc)| {
-                    let mut cache = crate::runtime::LayerKv::zeros(max_seq, kv_width);
-                    let k = kc.decompress_with(s)?;
-                    let v = vc.decompress_with(s)?;
-                    cache.k[..self.used_rows * kv_width].copy_from_slice(&k);
-                    cache.v[..self.used_rows * kv_width].copy_from_slice(&v);
-                    Ok(cache)
+                    let mut k = kc.decompress_with(s)?;
+                    anyhow::ensure!(k.len() == used, "kv tensor covers {} != {used}", k.len());
+                    k.resize(total, 0.0);
+                    let mut v = vc.decompress_with(s)?;
+                    anyhow::ensure!(v.len() == used, "kv tensor covers {} != {used}", v.len());
+                    v.resize(total, 0.0);
+                    Ok(crate::runtime::LayerKv { k, v })
                 })
                 .collect()
         })

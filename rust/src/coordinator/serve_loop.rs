@@ -12,7 +12,9 @@
 //!   3. streams newly committed tokens to the caller's sink (which may
 //!      cancel a session mid-stream),
 //!   4. ships the iteration's payloads over each device's `LinkSim` and
-//!      serves them together on the shared cloud (`handle_batch`),
+//!      serves them together on the shared cloud (`handle_batch`, which
+//!      STACKS the iteration's I_kv = 1 decode payloads into one batched
+//!      engine call — B sessions, one weight-matrix traversal),
 //!   5. retires finished/cancelled sessions, returning their router slots
 //!      (`Router::complete` — capacity really is reclaimed under churn).
 //!
@@ -22,12 +24,16 @@
 //! `SplitPipeline::generate`.
 //!
 //! Clock model: per-request `StepStats` are real (measured compute +
-//! simulated link events). The loop additionally keeps an aggregate
+//! simulated link events; a stacked payload is charged its even share of
+//! the batch's wall time). The loop additionally keeps an aggregate
 //! simulated clock in which the batch's edge/link work overlaps across
-//! devices (max, not sum) and the shared server applies the
-//! `BatcherParams` sub-linear batching model to the *measured* per-payload
-//! compute — `sim.rs` remains the closed-form fast path for the same
-//! accounting and is cross-checked against this loop in the test suite.
+//! devices (max, not sum) and the shared server charges serially-measured
+//! payloads through the `BatcherParams` sub-linear batching model while
+//! the stacked engine call — already batched for real — is charged its
+//! measured wall time directly (`BatchCompute` keeps the two apart, so
+//! the real stacking gain is never modeled twice). `sim.rs` remains the
+//! closed-form fast path for the same accounting and is cross-checked
+//! against this loop in the test suite.
 
 use std::collections::VecDeque;
 
@@ -238,7 +244,8 @@ impl ServeLoop {
             }
 
             // 6. deliver the iteration's batch: uplink per device, one
-            // shared-server batch call, downlink + reply per session.
+            // shared-server batch call (decode payloads stacked into a
+            // single batched engine step), downlink + reply per session.
             let mut meta: Vec<(usize, TransferOutcome)> = Vec::new();
             let mut payloads: Vec<SplitPayload> = Vec::new();
             for (i, payload) in outbox {
@@ -249,9 +256,8 @@ impl ServeLoop {
                 meta.push((i, up));
                 payloads.push(payload);
             }
-            let served = self.cloud.handle_batch(&payloads)?;
+            let (served, compute) = self.cloud.handle_batch(&payloads)?;
             let b = payloads.len();
-            let mut batch_cloud_s = 0.0f64;
             // Edge/link time overlaps across devices but serializes on one
             // device: sum per device, then max across devices.
             let mut device_busy_s = vec![0.0f64; self.edges.len()];
@@ -261,7 +267,6 @@ impl ServeLoop {
                 let EdgeEndpoint { edge, link } = &mut self.edges[a.device];
                 let down = link.transfer(reply.wire_bytes());
                 a.session.on_reply(edge, &reply, cloud_s, up, down);
-                batch_cloud_s += cloud_s;
                 device_busy_s[a.device] += edge_s + up.latency_s + down.latency_s;
             }
             let edge_wire_max_s = device_busy_s.iter().fold(0.0f64, |m, &x| m.max(x));
@@ -295,12 +300,21 @@ impl ServeLoop {
             }
 
             // 8. advance the simulated clock by one continuous-batching
-            // iteration: overlapped edge/link work + sub-linearly batched
-            // server compute (BatcherParams applied to measured seconds).
+            // iteration: overlapped edge/link work + server compute. Only
+            // the serially-measured payloads (prefill / I_kv = 0 /
+            // stacking disabled) go through the BatcherParams sub-linear
+            // model; the stacked engine call was measured already-batched
+            // and is charged its real wall time — re-modeling it would
+            // double-count the stacking gain.
             if b > 0 {
-                let bf = b as f64;
-                let batched_server_s = (batch_cloud_s / bf)
-                    * (1.0 + self.params.batch_overhead * (bf - 1.0))
+                let solo_batched_s = if compute.solo_n > 0 {
+                    (compute.solo_s / compute.solo_n as f64)
+                        * (1.0 + self.params.batch_overhead * (compute.solo_n as f64 - 1.0))
+                } else {
+                    0.0
+                };
+                let batched_server_s = solo_batched_s
+                    + compute.stacked_s
                     + self.params.congestion_s_per_waiter * waiting.len() as f64;
                 clock += edge_wire_max_s + batched_server_s;
                 report.server_busy_s += batched_server_s;

@@ -14,8 +14,11 @@
 //!
 //! Because all IO is pushed to the caller, the same state machine serves
 //! both drivers: `SplitPipeline::generate` (one session, blocking) and
-//! `ServeLoop` (N interleaved sessions, one shared `CloudServer`,
-//! continuous batching). Phases:
+//! `ServeLoop` (N interleaved sessions, one shared `CloudServer` that
+//! stacks same-iteration decode payloads into one batched engine call).
+//! Stacking is invisible here — the cloud is stateless and sampling is
+//! (seed, request, pos)-keyed, so a session's token stream is identical
+//! however its payloads are grouped. Phases:
 //!
 //! ```text
 //! NeedPrefill ──poll──▶ AwaitingReply ──on_reply──▶ ReadyToDecode

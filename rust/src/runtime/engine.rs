@@ -8,12 +8,22 @@
 //!
 //! PJRT handles are not `Send`; the whole serving stack runs on one thread
 //! (the coordinator is a discrete-event simulation — DESIGN.md §1).
+//!
+//! The in-place entry points (`layer_prefill_inplace`,
+//! `layer_decode_batch`, `lm_head_into`) mirror the reference engine's
+//! API so `NodeRuntime` stays engine-agnostic. A device engine cannot
+//! mutate host caches in place, so they are implemented as upload/run
+//! round-trips over the AOT artifacts (the cost model the artifacts were
+//! compiled for); the zero-copy guarantee is a reference-engine property.
 
+use std::cell::RefCell;
 use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 
-use anyhow::{anyhow, Context, Result};
+use anyhow::{anyhow, ensure, Context, Result};
 
 use super::manifest::{Manifest, ShapeClassManifest};
+use super::node::{DecodeStep, EngineScratch, LayerKv};
 use crate::model::ModelConfig;
 
 /// Device-resident tensor handle (PJRT buffer). The reference engine
@@ -25,6 +35,16 @@ pub struct Engine {
     pub client: xla::PjRtClient,
     pub class: ShapeClassManifest,
     exes: BTreeMap<String, xla::PjRtLoadedExecutable>,
+    /// Elements copied through the upload surface (parity with the
+    /// reference engine's copy-counting probe).
+    uploaded_elems: AtomicU64,
+    /// Device-resident prefill RoPE tables, uploaded once per width. The
+    /// tables are a pure function of the shape class (one Engine = one
+    /// class), so every node sharing this engine reuses the same buffers
+    /// instead of re-uploading (P, D/2) cos/sin per layer per prefill.
+    /// RefCell is fine: PJRT handles are not Send, the stack is
+    /// single-threaded by construction.
+    rope_cache: RefCell<Option<(usize, Buffer, Buffer)>>,
 }
 
 impl Engine {
@@ -48,7 +68,13 @@ impl Engine {
                 .with_context(|| format!("compiling artifact '{name}'"))?;
             exes.insert(name.clone(), exe);
         }
-        Ok(Engine { client, class, exes })
+        Ok(Engine {
+            client,
+            class,
+            exes,
+            uploaded_elems: AtomicU64::new(0),
+            rope_cache: RefCell::new(None),
+        })
     }
 
     pub fn exe(&self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
@@ -60,11 +86,122 @@ impl Engine {
 
     /// Upload a host tensor to a device-resident buffer.
     pub fn upload(&self, data: &[f32], dims: &[usize]) -> Result<Buffer> {
+        self.uploaded_elems.fetch_add(data.len() as u64, Ordering::Relaxed);
         Ok(self.client.buffer_from_host_buffer::<f32>(data, dims, None)?)
     }
 
     pub fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<Buffer> {
+        self.uploaded_elems.fetch_add(data.len() as u64, Ordering::Relaxed);
         Ok(self.client.buffer_from_host_buffer::<i32>(data, dims, None)?)
+    }
+
+    /// Elements copied through the upload surface so far.
+    pub fn uploaded_elems(&self) -> u64 {
+        self.uploaded_elems.load(Ordering::Relaxed)
+    }
+
+    /// One layer of prefill over `h` (rows, d), transformed in place on
+    /// the host after the device round-trip; returns the layer's K/V rows.
+    pub fn layer_prefill_inplace(
+        &self,
+        _s: &mut EngineScratch,
+        h: &mut [f32],
+        rows: usize,
+        cos: &[f32],
+        sin: &[f32],
+        w: &[Buffer],
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        ensure!(rows > 0 && h.len() % rows == 0, "prefill hidden shape mismatch");
+        let d = h.len() / rows;
+        let half = cos.len() / rows;
+        let hx = self.upload(h, &[rows, d])?;
+        {
+            let mut cache = self.rope_cache.borrow_mut();
+            if !matches!(cache.as_ref(), Some((r, _, _)) if *r == rows) {
+                *cache = Some((
+                    rows,
+                    self.upload(cos, &[rows, half])?,
+                    self.upload(sin, &[rows, half])?,
+                ));
+            }
+        }
+        let rope = self.rope_cache.borrow();
+        let (_, cb, sb) = rope.as_ref().expect("rope cache filled above");
+        let mut args: Vec<&Buffer> = vec![&hx, cb, sb];
+        args.extend(w.iter());
+        let mut out = self.run("layer_prefill", &args)?;
+        let v_rows = out.pop().expect("v");
+        let k_rows = out.pop().expect("k");
+        let y = out.pop().expect("y");
+        h.copy_from_slice(&y);
+        Ok((k_rows, v_rows))
+    }
+
+    /// Stacked decode of one layer: the AOT artifact is batch-1, so the
+    /// stack is served session by session (device semantics; the host
+    /// reference engine runs the true stacked kernel).
+    pub fn layer_decode_batch(
+        &self,
+        _s: &mut EngineScratch,
+        hs: &mut [f32],
+        kvs: &mut [&mut [LayerKv]],
+        layer: usize,
+        step: &DecodeStep<'_>,
+        w: &[Buffer],
+    ) -> Result<()> {
+        let b = step.positions.len();
+        ensure!(b > 0 && hs.len() % b == 0, "stacked hidden shape mismatch");
+        ensure!(kvs.len() == b, "one KV-cache set per stacked session");
+        let d = hs.len() / b;
+        let half = step.cos.len() / b;
+        for (bi, (sess, &pos)) in kvs.iter_mut().zip(step.positions.iter()).enumerate() {
+            let cache = &mut sess[layer];
+            let cache_w = cache.k.len() / d;
+            ensure!(pos < cache_w, "decode position {pos} beyond cache {cache_w}");
+            let pos_buf = self.upload_i32(&[pos as i32], &[1])?;
+            let cos_buf = self.upload(&step.cos[bi * half..(bi + 1) * half], &[1, half])?;
+            let sin_buf = self.upload(&step.sin[bi * half..(bi + 1) * half], &[1, half])?;
+            let h = &mut hs[bi * d..(bi + 1) * d];
+            let hx = self.upload(h, &[1, d])?;
+            let kc = self.upload(&cache.k, &[cache_w, d])?;
+            let vc = self.upload(&cache.v, &[cache_w, d])?;
+            let mut args: Vec<&Buffer> = vec![&hx, &kc, &vc, &pos_buf, &cos_buf, &sin_buf];
+            args.extend(w.iter());
+            let mut out = self.run("layer_decode", &args)?;
+            cache.v = out.pop().expect("v_cache");
+            cache.k = out.pop().expect("k_cache");
+            h.copy_from_slice(&out.pop().expect("y"));
+        }
+        Ok(())
+    }
+
+    /// Final norm + vocab projection of a (rows, d) block into `out`.
+    /// rows == prefill width uses the prefill artifact; any other width
+    /// is served row by row through the decode artifact.
+    pub fn lm_head_into(
+        &self,
+        _s: &mut EngineScratch,
+        h: &[f32],
+        rows: usize,
+        gf: &Buffer,
+        w_out: &Buffer,
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
+        ensure!(rows > 0 && h.len() % rows == 0, "lm head input shape mismatch");
+        let d = h.len() / rows;
+        out.clear();
+        if rows == self.class.prefill_len {
+            let hx = self.upload(h, &[rows, d])?;
+            let mut res = self.run("lm_head_prefill", &[&hx, gf, w_out])?;
+            out.extend_from_slice(&res.pop().expect("logits"));
+        } else {
+            for r in 0..rows {
+                let hx = self.upload(&h[r * d..(r + 1) * d], &[1, d])?;
+                let mut res = self.run("lm_head_decode", &[&hx, gf, w_out])?;
+                out.extend_from_slice(&res.pop().expect("logits"));
+            }
+        }
+        Ok(())
     }
 
     /// Execute an artifact on device buffers; returns the untupled outputs

@@ -1,5 +1,11 @@
 //! Runtime: artifact manifest, engine, and the per-node layer pipeline.
 //!
+//! The per-step contract is in-place and borrowed: KV caches are mutated
+//! through `&mut LayerKv` (no clone/upload/return round-trips), per-step
+//! activations live in a reusable `EngineScratch` arena, and
+//! `NodeRuntime::decode_batch` stacks B concurrent sessions into one
+//! weight-matrix traversal per layer.
+//!
 //! Two interchangeable engines sit behind the same API:
 //!   * `pjrt` feature ON — the PJRT engine (`engine.rs`): loads the
 //!     HLO-text artifacts produced by `make artifacts` and executes them
@@ -33,7 +39,7 @@ pub mod reference;
 pub use reference::{Buffer, Engine};
 
 pub use manifest::Manifest;
-pub use node::{LayerKv, NodeRuntime, RopeTables};
+pub use node::{DecodeStep, EngineScratch, LayerKv, NodeRuntime, RopeTables};
 
 /// Quick engine availability probe (used by `splitserve doctor`).
 #[cfg(all(feature = "pjrt", xla_vendored))]

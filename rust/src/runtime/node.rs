@@ -3,12 +3,22 @@
 //! engine.
 //!
 //! Weights are uploaded to device-resident buffers ONCE at construction
-//! (possibly after OPSC/baseline fake-quant); per-step uploads are only the
-//! small dynamic tensors (hidden state, KV caches, position). KV caches are
-//! owned by the coordinator's KV manager and passed in per call — that is
-//! what lets the cloud resume a request mid-stack (split computing) and
-//! what the I_kv switch transmits or re-computes.
+//! (possibly after OPSC/baseline fake-quant). The per-step contract is
+//! **in-place and borrowed**: KV caches are owned by the coordinator's KV
+//! manager and passed in as `&mut LayerKv` — decode writes exactly one
+//! (k, v) row at `pos` and never clones, uploads, or returns a cache.
+//! Per-step activations live in a reusable [`EngineScratch`] arena (the
+//! `quant::fused::CompressionScratch` pattern), so the decode hot path
+//! performs zero full-cache copies and zero steady-state allocation.
+//!
+//! [`NodeRuntime::decode_batch`] is the stacked many-session entry point:
+//! B concurrent sessions' hidden rows are stacked into one (B, d) block so
+//! every weight matrix is traversed once per step instead of B times; the
+//! per-session attention still runs against each session's own cache. The
+//! pre-PR copy-semantics path survives as [`NodeRuntime::decode_copyful`]
+//! (the perf baseline and equivalence oracle of `benches/engine.rs`).
 
+use std::cell::RefCell;
 use std::ops::Range;
 use std::rc::Rc;
 
@@ -28,6 +38,54 @@ impl LayerKv {
     pub fn zeros(max_seq: usize, kv_width: usize) -> LayerKv {
         LayerKv { k: vec![0.0; max_seq * kv_width], v: vec![0.0; max_seq * kv_width] }
     }
+
+    /// Build a full-width cache whose prefix holds the given prefill rows:
+    /// one allocation per buffer, prefix copied once, tail zero-filled —
+    /// no zero-the-world-then-overwrite pass.
+    pub fn from_prefill_rows(
+        k_rows: &[f32],
+        v_rows: &[f32],
+        max_seq: usize,
+        kv_width: usize,
+    ) -> LayerKv {
+        let total = max_seq * kv_width;
+        debug_assert!(k_rows.len() <= total && v_rows.len() <= total);
+        let mut k = Vec::with_capacity(total);
+        k.extend_from_slice(k_rows);
+        k.resize(total, 0.0);
+        let mut v = Vec::with_capacity(total);
+        v.extend_from_slice(v_rows);
+        v.resize(total, 0.0);
+        LayerKv { k, v }
+    }
+}
+
+/// Per-step coordinates of a stacked decode call, one entry per session:
+/// `positions[b]` is session b's write/attend position, and `cos`/`sin`
+/// hold the (B, D/2) RoPE rows gathered for those positions (row b
+/// belongs to `positions[b]`).
+pub struct DecodeStep<'a> {
+    pub positions: &'a [usize],
+    pub cos: &'a [f32],
+    pub sin: &'a [f32],
+}
+
+/// Reusable working memory for the in-place execution engine: every
+/// per-step activation (normed hidden, Q/K/V, attention output, FFN
+/// gate/up, projection, attention scores) lives here and is recycled
+/// across layers, steps and stacked sessions. After the first step at a
+/// given batch width, the engine allocates nothing.
+#[derive(Default, Debug)]
+pub struct EngineScratch {
+    pub h_norm: Vec<f32>,
+    pub q: Vec<f32>,
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+    pub attn: Vec<f32>,
+    pub proj: Vec<f32>,
+    pub gate: Vec<f32>,
+    pub up: Vec<f32>,
+    pub scores: Vec<f32>,
 }
 
 /// Host-computed RoPE tables (cos, sin), each (max_seq, D/2) row-major.
@@ -43,12 +101,17 @@ pub struct RopeTables {
 impl RopeTables {
     pub fn new(max_seq: usize, head_dim: usize, theta: f64) -> RopeTables {
         let half = head_dim / 2;
+        // The inverse frequencies depend only on the dimension index;
+        // hoisting them out of the position loop drops the transcendental
+        // count from max_seq * half pow() calls to half.
+        let inv_freq: Vec<f64> = (0..half)
+            .map(|i| 1.0 / theta.powf((2 * i) as f64 / head_dim as f64))
+            .collect();
         let mut cos = vec![0f32; max_seq * half];
         let mut sin = vec![0f32; max_seq * half];
         for p in 0..max_seq {
-            for i in 0..half {
-                let inv_freq = 1.0 / theta.powf((2 * i) as f64 / head_dim as f64);
-                let ang = p as f64 * inv_freq;
+            for (i, &f) in inv_freq.iter().enumerate() {
+                let ang = p as f64 * f;
                 cos[p * half + i] = ang.cos() as f32;
                 sin[p * half + i] = ang.sin() as f32;
             }
@@ -74,8 +137,15 @@ pub struct NodeRuntime {
     /// Host-side weights (embedding lookups, re-quantization experiments).
     pub weights: Rc<ModelWeights>,
     rope: RopeTables,
-    /// Device-resident prefill-width RoPE tables (uploaded once).
-    rope_prefill_bufs: (Buffer, Buffer),
+    /// Per-node activation arena, shared by prefill/decode/lm-head calls.
+    scratch: RefCell<EngineScratch>,
+    /// Gathered (B, D/2) RoPE rows for the current stacked step (its own
+    /// cell so it can be borrowed alongside `scratch`).
+    rope_gather: RefCell<(Vec<f32>, Vec<f32>)>,
+    /// Route `decode` through the retained pre-PR copy-semantics path
+    /// (clone caches → upload → artifact call → copy back). Kept as the
+    /// perf baseline and equivalence oracle for `benches/engine.rs`.
+    pub copyful_decode: bool,
 }
 
 impl NodeRuntime {
@@ -119,12 +189,6 @@ impl NodeRuntime {
             None
         };
         let rope = RopeTables::new(cfg.max_seq, cfg.head_dim, 10000.0);
-        let p = cfg.prefill_len;
-        let (cp, sp) = rope.rows(0, p);
-        let rope_prefill_bufs = (
-            engine.upload(cp, &[p, rope.half_dim])?,
-            engine.upload(sp, &[p, rope.half_dim])?,
-        );
         Ok(NodeRuntime {
             engine,
             layer_range,
@@ -132,7 +196,9 @@ impl NodeRuntime {
             head_bufs,
             weights,
             rope,
-            rope_prefill_bufs,
+            scratch: RefCell::new(EngineScratch::default()),
+            rope_gather: RefCell::new((Vec::new(), Vec::new())),
+            copyful_decode: false,
         })
     }
 
@@ -161,16 +227,12 @@ impl NodeRuntime {
         let d = cfg.d_model;
         assert_eq!(x.len(), p * d);
         let mut h = x.to_vec();
+        let (cos, sin) = self.rope.rows(0, p);
         let mut kvs = Vec::with_capacity(self.layer_range.len());
+        let mut scratch = self.scratch.borrow_mut();
         for (i, bufs) in self.weight_bufs.iter().enumerate() {
-            let hx = self.engine.upload(&h, &[p, d])?;
-            let mut args: Vec<&Buffer> =
-                vec![&hx, &self.rope_prefill_bufs.0, &self.rope_prefill_bufs.1];
-            args.extend(bufs.iter());
-            let mut out = self.engine.run("layer_prefill", &args)?;
-            let v_rows = out.pop().expect("v");
-            let k_rows = out.pop().expect("k");
-            h = out.pop().expect("y");
+            let (k_rows, v_rows) =
+                self.engine.layer_prefill_inplace(&mut scratch, &mut h, p, cos, sin, bufs)?;
             hook(self.layer_range.start + i, &mut h);
             kvs.push((k_rows, v_rows));
         }
@@ -178,9 +240,72 @@ impl NodeRuntime {
     }
 
     /// One decode step at `pos` through this node's layers. `kv` must hold
-    /// one LayerKv per layer in `layer_range` and is updated in place with
-    /// the new token's K/V rows.
+    /// one LayerKv per layer in `layer_range`; each cache is mutated in
+    /// place — exactly one new (k, v) row is written at `pos`, nothing is
+    /// cloned or round-tripped.
     pub fn decode(&self, x: &[f32], kv: &mut [LayerKv], pos: usize) -> Result<Vec<f32>> {
+        if self.copyful_decode {
+            return self.decode_copyful(x, kv, pos);
+        }
+        let cfg = self.cfg();
+        let d = cfg.d_model;
+        assert_eq!(x.len(), d);
+        assert!(pos < cfg.max_seq, "position {pos} beyond static cache {}", cfg.max_seq);
+        let mut h = x.to_vec();
+        let mut sessions: [&mut [LayerKv]; 1] = [kv];
+        self.decode_batch(&mut h, &mut sessions, &[pos])?;
+        Ok(h)
+    }
+
+    /// Stacked decode: one step for B independent sessions at once.
+    /// `hs` holds the B hidden rows stacked into (B, d) and is transformed
+    /// in place; `kvs[b]` is session b's per-layer cache slice (mutated in
+    /// place at `positions[b]`). Each weight matrix is traversed once for
+    /// the whole stack; attention runs per session against its own cache,
+    /// so row b is bit-identical to a solo `decode` of session b.
+    pub fn decode_batch(
+        &self,
+        hs: &mut [f32],
+        kvs: &mut [&mut [LayerKv]],
+        positions: &[usize],
+    ) -> Result<()> {
+        let cfg = self.cfg();
+        let d = cfg.d_model;
+        let b = positions.len();
+        anyhow::ensure!(hs.len() == b * d, "stacked hidden must be ({b}, {d})");
+        anyhow::ensure!(kvs.len() == b, "one KV-cache set per stacked session");
+        for (sess, &pos) in kvs.iter().zip(positions.iter()) {
+            anyhow::ensure!(
+                sess.len() == self.layer_range.len(),
+                "one KV cache per layer per session"
+            );
+            let w = cfg.max_seq;
+            anyhow::ensure!(pos < w, "position {pos} beyond static cache {w}");
+        }
+        // Gather the per-session RoPE rows once for the whole step (row b
+        // of the gathered block belongs to positions[b]).
+        let mut rg = self.rope_gather.borrow_mut();
+        let (cos_g, sin_g) = &mut *rg;
+        cos_g.clear();
+        sin_g.clear();
+        for &pos in positions {
+            let (c, s) = self.rope.rows(pos, 1);
+            cos_g.extend_from_slice(c);
+            sin_g.extend_from_slice(s);
+        }
+        let step = DecodeStep { positions, cos: cos_g.as_slice(), sin: sin_g.as_slice() };
+        let mut scratch = self.scratch.borrow_mut();
+        for (li, bufs) in self.weight_bufs.iter().enumerate() {
+            self.engine.layer_decode_batch(&mut scratch, hs, kvs, li, &step, bufs)?;
+        }
+        Ok(())
+    }
+
+    /// The pre-PR decode path, copy semantics preserved: caches are cloned
+    /// and round-tripped through the buffer API on every layer. This is
+    /// the before/after baseline of `benches/engine.rs` and the oracle of
+    /// the in-place equivalence tests — the serving path never calls it.
+    pub fn decode_copyful(&self, x: &[f32], kv: &mut [LayerKv], pos: usize) -> Result<Vec<f32>> {
         let cfg = self.cfg();
         let d = cfg.d_model;
         let w = cfg.max_seq;
@@ -197,8 +322,7 @@ impl NodeRuntime {
             let hx = self.engine.upload(&h, &[1, d])?;
             let kc = self.engine.upload(&cache.k, &[w, kvw])?;
             let vc = self.engine.upload(&cache.v, &[w, kvw])?;
-            let mut args: Vec<&Buffer> =
-                vec![&hx, &kc, &vc, &pos_buf, &cos_buf, &sin_buf];
+            let mut args: Vec<&Buffer> = vec![&hx, &kc, &vc, &pos_buf, &cos_buf, &sin_buf];
             args.extend(bufs.iter());
             let mut out = self.engine.run("layer_decode", &args)?;
             cache.v = out.pop().expect("v_cache");
@@ -210,20 +334,28 @@ impl NodeRuntime {
 
     /// Final norm + vocab projection for a full prefill block (P, d).
     pub fn logits_prefill(&self, h: &[f32]) -> Result<Vec<f32>> {
-        let cfg = self.cfg();
-        let (gf, w_out) = self.head_bufs.as_ref().expect("node has no lm head");
-        let hx = self.engine.upload(h, &[cfg.prefill_len, cfg.d_model])?;
-        let mut out = self.engine.run("lm_head_prefill", &[&hx, gf, w_out])?;
-        Ok(out.pop().expect("logits"))
+        let p = self.cfg().prefill_len;
+        self.logits_rows(h, p)
     }
 
     /// Final norm + vocab projection for one decode token (1, d).
     pub fn logits_decode(&self, h: &[f32]) -> Result<Vec<f32>> {
-        let cfg = self.cfg();
+        self.logits_rows(h, 1)
+    }
+
+    /// Final norm + vocab projection for a stacked decode block (B, d) —
+    /// one weight traversal for the whole batch. Row b of the returned
+    /// (B, vocab) block is bit-identical to `logits_decode` of row b.
+    pub fn logits_decode_batch(&self, hs: &[f32], rows: usize) -> Result<Vec<f32>> {
+        self.logits_rows(hs, rows)
+    }
+
+    fn logits_rows(&self, h: &[f32], rows: usize) -> Result<Vec<f32>> {
         let (gf, w_out) = self.head_bufs.as_ref().expect("node has no lm head");
-        let hx = self.engine.upload(h, &[1, cfg.d_model])?;
-        let mut out = self.engine.run("lm_head_decode", &[&hx, gf, w_out])?;
-        Ok(out.pop().expect("logits"))
+        let mut scratch = self.scratch.borrow_mut();
+        let mut out = Vec::new();
+        self.engine.lm_head_into(&mut scratch, h, rows, gf, w_out, &mut out)?;
+        Ok(out)
     }
 
     /// Fresh zeroed KV caches for this node's layer range.
@@ -234,16 +366,20 @@ impl NodeRuntime {
             .collect()
     }
 
-    /// Install prefill K/V rows (P, H*D) into zeroed full caches.
+    /// Install prefill K/V rows (P, H*D) into full-width caches — a single
+    /// allocation per buffer (prefix copy + zero tail), not a zeroed
+    /// max_seq-wide cache that is then overwritten.
     pub fn install_prefill_kv(&self, rows: &[(Vec<f32>, Vec<f32>)], prompt_len: usize) -> Vec<LayerKv> {
         let cfg = self.cfg();
         let kvw = cfg.kv_width();
         rows.iter()
             .map(|(k_rows, v_rows)| {
-                let mut c = LayerKv::zeros(cfg.max_seq, kvw);
-                c.k[..prompt_len * kvw].copy_from_slice(&k_rows[..prompt_len * kvw]);
-                c.v[..prompt_len * kvw].copy_from_slice(&v_rows[..prompt_len * kvw]);
-                c
+                LayerKv::from_prefill_rows(
+                    &k_rows[..prompt_len * kvw],
+                    &v_rows[..prompt_len * kvw],
+                    cfg.max_seq,
+                    kvw,
+                )
             })
             .collect()
     }

@@ -5,15 +5,37 @@
 //! This is the default engine (no `pjrt` feature): it needs no artifacts,
 //! no `xla` bindings and no `make artifacts` step, which keeps the whole
 //! test and bench suite runnable offline. The API is a drop-in for the
-//! PJRT engine — `NodeRuntime` cannot tell them apart. Shapes are derived
-//! from the buffers themselves, so both shape classes (and any depth
-//! sweep) run without configuration.
+//! PJRT engine — `NodeRuntime` cannot tell them apart.
+//!
+//! Two execution surfaces share one set of kernels:
+//!
+//!   * **In-place, borrowed-buffer entry points**
+//!     ([`Engine::layer_prefill_inplace`], [`Engine::layer_decode_batch`],
+//!     [`Engine::lm_head_into`]) — the serving hot path. KV caches are
+//!     mutated through `&mut LayerKv` (decode writes exactly one row at
+//!     `pos`), activations live in a caller-owned [`EngineScratch`], and
+//!     the stacked decode entry runs B sessions through each weight
+//!     matrix in a single traversal.
+//!   * **The artifact-style `upload`/[`Engine::run`] surface** — the
+//!     pre-PR copy semantics (full caches cloned in, fresh caches
+//!     returned), kept for PJRT API parity and as the perf baseline /
+//!     equivalence oracle driven by `benches/engine.rs`.
+//!
+//! The dense kernel is a cache-blocked, row-tiled `matmul_into`
+//! parallelized with `std::thread::scope` (the `CompressedKv::compress`
+//! fan-out pattern). Accumulation order over the inner dimension is
+//! identical in every path — serial, row-parallel, column-parallel, any
+//! batch width — so stacked decode is bit-identical to sequential decode
+//! and results do not depend on the worker count.
 
 use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::OnceLock;
 
 use anyhow::{bail, ensure, Result};
 
 use super::manifest::ShapeClassManifest;
+use super::node::{DecodeStep, EngineScratch, LayerKv};
 use crate::model::ModelConfig;
 
 /// Host tensor standing in for a device-resident PJRT buffer.
@@ -43,9 +65,57 @@ pub struct Engine {
     /// Synthetic shape-class manifest (no artifacts on disk in reference
     /// mode); `artifacts` is empty, which `splitserve doctor` reports.
     pub class: ShapeClassManifest,
+    /// Elements copied through `upload`/`upload_i32` over the engine's
+    /// lifetime. The in-place decode path never uploads, so
+    /// `benches/engine.rs` asserts this counter is FLAT across decode
+    /// steps — the "zero full-KV-cache copies" acceptance gate.
+    uploaded_elems: AtomicU64,
 }
 
 const EPS: f32 = 1e-5;
+
+/// One decoder layer's weight slices in artifact argument order.
+struct LayerW<'a> {
+    wq: &'a [f32],
+    wk: &'a [f32],
+    wv: &'a [f32],
+    wo: &'a [f32],
+    wg: &'a [f32],
+    wu: &'a [f32],
+    wd: &'a [f32],
+    g1: &'a [f32],
+    g2: &'a [f32],
+    d: usize,
+    f: usize,
+}
+
+impl<'a> LayerW<'a> {
+    /// Shared destructuring over any 9-buffer weight view (`get(i)` is
+    /// the i-th buffer) — the single place the artifact weight order is
+    /// spelled out.
+    fn build(get: impl Fn(usize) -> &'a Buffer) -> Result<LayerW<'a>> {
+        let (wq, wqd) = get(0).f32()?;
+        let (wk, _) = get(1).f32()?;
+        let (wv, _) = get(2).f32()?;
+        let (wo, _) = get(3).f32()?;
+        let (wg, wgd) = get(4).f32()?;
+        let (wu, _) = get(5).f32()?;
+        let (wd, _) = get(6).f32()?;
+        let (g1, _) = get(7).f32()?;
+        let (g2, _) = get(8).f32()?;
+        Ok(LayerW { wq, wk, wv, wo, wg, wu, wd, g1, g2, d: wqd[1], f: wgd[1] })
+    }
+
+    fn from_bufs(w: &'a [Buffer]) -> Result<LayerW<'a>> {
+        ensure!(w.len() == 9, "layer weights want 9 buffers, got {}", w.len());
+        Self::build(|i| &w[i])
+    }
+
+    fn from_args(args: &[&'a Buffer]) -> Result<LayerW<'a>> {
+        ensure!(args.len() == 9, "layer weights want 9 buffers, got {}", args.len());
+        Self::build(|i| args[i])
+    }
+}
 
 impl Engine {
     /// Construct the reference engine for `cfg`'s shape class. The
@@ -65,22 +135,102 @@ impl Engine {
                 artifacts: BTreeMap::new(),
                 golden: BTreeMap::new(),
             },
+            uploaded_elems: AtomicU64::new(0),
         })
     }
 
     /// Host tensor "upload" (clone; the PJRT engine copies to device).
     pub fn upload(&self, data: &[f32], dims: &[usize]) -> Result<Buffer> {
         ensure!(dims.iter().product::<usize>() == data.len(), "upload shape mismatch");
+        self.uploaded_elems.fetch_add(data.len() as u64, Ordering::Relaxed);
         Ok(Buffer::F32 { data: data.to_vec(), dims: dims.to_vec() })
     }
 
     pub fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<Buffer> {
         ensure!(dims.iter().product::<usize>() == data.len(), "upload shape mismatch");
+        self.uploaded_elems.fetch_add(data.len() as u64, Ordering::Relaxed);
         Ok(Buffer::I32 { data: data.to_vec(), dims: dims.to_vec() })
     }
 
+    /// Elements cloned through the upload surface so far (copy-counting
+    /// probe for the zero-copy decode assertion).
+    pub fn uploaded_elems(&self) -> u64 {
+        self.uploaded_elems.load(Ordering::Relaxed)
+    }
+
+    /// In-place single-layer prefill: transforms `h` (rows, d) in place
+    /// and returns this layer's rotary-embedded K and raw V rows. All
+    /// intermediates live in `s`; nothing but the returned rows is
+    /// allocated after warmup.
+    pub fn layer_prefill_inplace(
+        &self,
+        s: &mut EngineScratch,
+        h: &mut [f32],
+        rows: usize,
+        cos: &[f32],
+        sin: &[f32],
+        w: &[Buffer],
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        let lw = LayerW::from_bufs(w)?;
+        ensure!(rows > 0 && h.len() == rows * lw.d, "prefill hidden must be ({rows}, {})", lw.d);
+        let half = cos.len() / rows;
+        let head_dim = 2 * half;
+        ensure!(
+            head_dim > 0 && lw.d % head_dim == 0,
+            "d_model {} not divisible by head_dim {head_dim}",
+            lw.d
+        );
+        Ok(layer_forward_prefill(s, h, rows, cos, sin, &lw))
+    }
+
+    /// In-place, stacked single-layer decode over B independent sessions:
+    /// `hs` is the (B, d) residual block, `kvs[b][layer]` the cache this
+    /// call mutates (one new row at `step.positions[b]`; never cloned or
+    /// returned). Per-row math is identical to a B = 1 call, so stacking
+    /// is bit-transparent.
+    pub fn layer_decode_batch(
+        &self,
+        s: &mut EngineScratch,
+        hs: &mut [f32],
+        kvs: &mut [&mut [LayerKv]],
+        layer: usize,
+        step: &DecodeStep<'_>,
+        w: &[Buffer],
+    ) -> Result<()> {
+        let lw = LayerW::from_bufs(w)?;
+        let b = step.positions.len();
+        ensure!(b > 0 && hs.len() == b * lw.d, "stacked hidden must be ({b}, {})", lw.d);
+        ensure!(kvs.len() == b, "one KV-cache set per stacked session");
+        ensure!(step.cos.len() == step.sin.len(), "rope row mismatch");
+        layer_forward_decode(s, hs, kvs, layer, step, &lw)
+    }
+
+    /// Final norm + vocab projection of a (rows, d) block into `out`
+    /// (cleared and refilled; reusable across calls).
+    pub fn lm_head_into(
+        &self,
+        s: &mut EngineScratch,
+        h: &[f32],
+        rows: usize,
+        gf: &Buffer,
+        w_out: &Buffer,
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
+        let (gf, _) = gf.f32()?;
+        let (wo, wod) = w_out.f32()?;
+        let d = gf.len();
+        let vocab = wod[1];
+        ensure!(h.len() == rows * d, "lm head input must be ({rows}, {d})");
+        lm_head_forward(s, h, rows, gf, wo, vocab, out);
+        Ok(())
+    }
+
     /// Execute an "artifact" by name. Same entrypoints and argument order
-    /// as the AOT modules (python/compile/model.py).
+    /// as the AOT modules (python/compile/model.py) — and the same COPY
+    /// semantics: `layer_decode` clones the caches it is given and
+    /// returns fresh ones. The serving path uses the in-place entry
+    /// points above; this surface remains for PJRT parity and as the
+    /// pre-PR baseline in `benches/engine.rs`.
     pub fn run(&self, name: &str, args: &[&Buffer]) -> Result<Vec<Vec<f32>>> {
         match name {
             "layer_prefill" => self.layer_prefill(args),
@@ -97,33 +247,15 @@ impl Engine {
         let (x, xd) = args[0].f32()?;
         let (cos, cd) = args[1].f32()?;
         let (sin, _) = args[2].f32()?;
-        let (w, d) = (xd[0], xd[1]);
+        let rows = xd[0];
         let half = cd[1];
         let head_dim = 2 * half;
-        ensure!(d % head_dim == 0, "d_model {d} not divisible by head_dim {head_dim}");
-        let heads = d / head_dim;
-        let (wq, _) = args[3].f32()?;
-        let (wk, _) = args[4].f32()?;
-        let (wv, _) = args[5].f32()?;
-        let (wo, _) = args[6].f32()?;
-        let (wg, wgd) = args[7].f32()?;
-        let (wu, _) = args[8].f32()?;
-        let (wd_, _) = args[9].f32()?;
-        let (g1, _) = args[10].f32()?;
-        let (g2, _) = args[11].f32()?;
-        let f = wgd[1];
-
-        let h = rms_norm(x, w, d, g1);
-        let mut q = matmul(&h, wq, w, d, d);
-        let mut k = matmul(&h, wk, w, d, d);
-        let v = matmul(&h, wv, w, d, d);
-        apply_rope(&mut q, w, heads, head_dim, cos, sin);
-        apply_rope(&mut k, w, heads, head_dim, cos, sin);
-        let attn = causal_attention(&q, &k, &v, w, heads, head_dim);
-        let proj = matmul(&attn, wo, w, d, d);
-        let mut x2 = x.to_vec();
-        add_assign(&mut x2, &proj);
-        let y = ffn(&x2, w, d, f, g2, wg, wu, wd_);
+        let lw = LayerW::from_args(&args[3..])?;
+        ensure!(xd[1] == lw.d, "hidden width mismatch");
+        ensure!(lw.d % head_dim == 0, "d_model {} not divisible by head_dim {head_dim}", lw.d);
+        let mut y = x.to_vec();
+        let mut s = EngineScratch::default();
+        let (k, v) = layer_forward_prefill(&mut s, &mut y, rows, cos, sin, &lw);
         Ok(vec![y, k, v])
     }
 
@@ -135,43 +267,26 @@ impl Engine {
         let (kc, kcd) = args[1].f32()?;
         let (vc, _) = args[2].f32()?;
         let (pos, _) = args[3].i32()?;
-        let (cos, cd) = args[4].f32()?;
+        let (cos, _) = args[4].f32()?;
         let (sin, _) = args[5].f32()?;
         let d = xd[1];
         let (cache_w, kvw) = (kcd[0], kcd[1]);
         ensure!(kvw == d, "reference engine assumes kv_width == d_model");
-        let half = cd[1];
-        let head_dim = 2 * half;
-        let heads = d / head_dim;
         let pos = pos[0] as usize;
         ensure!(pos < cache_w, "decode position {pos} beyond cache {cache_w}");
-        let (wq, _) = args[6].f32()?;
-        let (wk, _) = args[7].f32()?;
-        let (wv, _) = args[8].f32()?;
-        let (wo, _) = args[9].f32()?;
-        let (wg, wgd) = args[10].f32()?;
-        let (wu, _) = args[11].f32()?;
-        let (wd_, _) = args[12].f32()?;
-        let (g1, _) = args[13].f32()?;
-        let (g2, _) = args[14].f32()?;
-        let f = wgd[1];
-
-        let h = rms_norm(x, 1, d, g1);
-        let mut q = matmul(&h, wq, 1, d, d);
-        let mut k = matmul(&h, wk, 1, d, d);
-        let v = matmul(&h, wv, 1, d, d);
-        apply_rope(&mut q, 1, heads, head_dim, cos, sin);
-        apply_rope(&mut k, 1, heads, head_dim, cos, sin);
-        let mut k_cache = kc.to_vec();
-        let mut v_cache = vc.to_vec();
-        k_cache[pos * kvw..(pos + 1) * kvw].copy_from_slice(&k);
-        v_cache[pos * kvw..(pos + 1) * kvw].copy_from_slice(&v);
-        let attn = decode_attention(&q, &k_cache, &v_cache, pos, heads, head_dim);
-        let proj = matmul(&attn, wo, 1, d, d);
-        let mut x2 = x.to_vec();
-        add_assign(&mut x2, &proj);
-        let y = ffn(&x2, 1, d, f, g2, wg, wu, wd_);
-        Ok(vec![y, k_cache, v_cache])
+        let lw = LayerW::from_args(&args[6..])?;
+        ensure!(lw.d == d, "hidden width mismatch");
+        // Copy semantics preserved: clone the caches in, return fresh ones.
+        let mut cache = LayerKv { k: kc.to_vec(), v: vc.to_vec() };
+        let mut h = x.to_vec();
+        let mut s = EngineScratch::default();
+        let positions = [pos];
+        let step = DecodeStep { positions: &positions, cos, sin };
+        {
+            let mut sess: [&mut [LayerKv]; 1] = [std::slice::from_mut(&mut cache)];
+            layer_forward_decode(&mut s, &mut h, &mut sess, 0, &step, &lw)?;
+        }
+        Ok(vec![h, cache.k, cache.v])
     }
 
     /// x(w,d), gf(d), w_out(d,vocab) → [logits(w,vocab)].
@@ -180,44 +295,249 @@ impl Engine {
         let (x, xd) = args[0].f32()?;
         let (gf, _) = args[1].f32()?;
         let (w_out, wod) = args[2].f32()?;
-        let (w, d) = (xd[0], xd[1]);
+        let (rows, d) = (xd[0], xd[1]);
+        ensure!(gf.len() == d, "final norm width mismatch");
         let vocab = wod[1];
-        let h = rms_norm(x, w, d, gf);
-        Ok(vec![matmul(&h, w_out, w, d, vocab)])
+        let mut s = EngineScratch::default();
+        let mut out = Vec::new();
+        lm_head_forward(&mut s, x, rows, gf, w_out, vocab, &mut out);
+        Ok(vec![out])
     }
 }
 
-/// RMSNorm over the last axis: x / sqrt(mean(x^2) + eps) * gamma.
-fn rms_norm(x: &[f32], rows: usize, d: usize, gamma: &[f32]) -> Vec<f32> {
-    let mut out = vec![0f32; rows * d];
+// ---------------------------------------------------------------------------
+// Layer cores (shared by the in-place and artifact-style surfaces)
+// ---------------------------------------------------------------------------
+
+/// One decoder layer over a (rows, d) block, residual stream transformed
+/// in place. Returns owned copies of the rotary-embedded K rows and raw V
+/// rows (the prefill outputs installed into a request's caches).
+fn layer_forward_prefill(
+    s: &mut EngineScratch,
+    h: &mut [f32],
+    rows: usize,
+    cos: &[f32],
+    sin: &[f32],
+    lw: &LayerW<'_>,
+) -> (Vec<f32>, Vec<f32>) {
+    let d = lw.d;
+    let half = cos.len() / rows;
+    let head_dim = 2 * half;
+    let heads = d / head_dim;
+    rms_norm_into(h, rows, d, lw.g1, &mut s.h_norm);
+    resize_buf(&mut s.q, rows * d);
+    matmul_into(&mut s.q, &s.h_norm, lw.wq, rows, d, d);
+    resize_buf(&mut s.k, rows * d);
+    matmul_into(&mut s.k, &s.h_norm, lw.wk, rows, d, d);
+    resize_buf(&mut s.v, rows * d);
+    matmul_into(&mut s.v, &s.h_norm, lw.wv, rows, d, d);
+    apply_rope(&mut s.q, rows, heads, head_dim, cos, sin);
+    apply_rope(&mut s.k, rows, heads, head_dim, cos, sin);
+    attention_prefill(s, rows, heads, head_dim);
+    resize_buf(&mut s.proj, rows * d);
+    matmul_into(&mut s.proj, &s.attn, lw.wo, rows, d, d);
+    add_assign(h, &s.proj);
+    let k_rows = s.k.clone();
+    let v_rows = s.v.clone();
+    ffn_inplace(s, h, rows, lw);
+    (k_rows, v_rows)
+}
+
+/// One decoder layer, one decode step, B stacked sessions; `hs` (B, d)
+/// transformed in place, each session's cache gaining exactly one (k, v)
+/// row at its position. Zero allocation after scratch warmup.
+fn layer_forward_decode(
+    s: &mut EngineScratch,
+    hs: &mut [f32],
+    kvs: &mut [&mut [LayerKv]],
+    layer: usize,
+    step: &DecodeStep<'_>,
+    lw: &LayerW<'_>,
+) -> Result<()> {
+    let d = lw.d;
+    let b = step.positions.len();
+    let half = step.cos.len() / b;
+    let head_dim = 2 * half;
+    ensure!(head_dim > 0 && d % head_dim == 0, "d_model {d} not divisible by head_dim {head_dim}");
+    let heads = d / head_dim;
+    let kvw = d; // reference engine assumes kv_width == d_model
+    rms_norm_into(hs, b, d, lw.g1, &mut s.h_norm);
+    resize_buf(&mut s.q, b * d);
+    matmul_into(&mut s.q, &s.h_norm, lw.wq, b, d, d);
+    resize_buf(&mut s.k, b * d);
+    matmul_into(&mut s.k, &s.h_norm, lw.wk, b, d, d);
+    resize_buf(&mut s.v, b * d);
+    matmul_into(&mut s.v, &s.h_norm, lw.wv, b, d, d);
+    apply_rope(&mut s.q, b, heads, head_dim, step.cos, step.sin);
+    apply_rope(&mut s.k, b, heads, head_dim, step.cos, step.sin);
+    resize_buf(&mut s.attn, b * d);
+    for (bi, (sess, &pos)) in kvs.iter_mut().zip(step.positions.iter()).enumerate() {
+        let cache = &mut sess[layer];
+        let cache_w = cache.k.len() / kvw;
+        ensure!(pos < cache_w, "decode position {pos} beyond cache {cache_w}");
+        cache.k[pos * kvw..(pos + 1) * kvw].copy_from_slice(&s.k[bi * d..(bi + 1) * d]);
+        cache.v[pos * kvw..(pos + 1) * kvw].copy_from_slice(&s.v[bi * d..(bi + 1) * d]);
+        attention_decode_row(
+            &mut s.attn[bi * d..(bi + 1) * d],
+            &s.q[bi * d..(bi + 1) * d],
+            cache,
+            pos,
+            heads,
+            head_dim,
+            &mut s.scores,
+        );
+    }
+    resize_buf(&mut s.proj, b * d);
+    matmul_into(&mut s.proj, &s.attn, lw.wo, b, d, d);
+    add_assign(hs, &s.proj);
+    ffn_inplace(s, hs, b, lw);
+    Ok(())
+}
+
+/// Final RMSNorm + vocab projection into `out`.
+fn lm_head_forward(
+    s: &mut EngineScratch,
+    h: &[f32],
+    rows: usize,
+    gf: &[f32],
+    w_out: &[f32],
+    vocab: usize,
+    out: &mut Vec<f32>,
+) {
+    let d = gf.len();
+    rms_norm_into(h, rows, d, gf, &mut s.h_norm);
+    out.clear();
+    out.resize(rows * vocab, 0.0);
+    matmul_into(out, &s.h_norm, w_out, rows, d, vocab);
+}
+
+/// SwiGLU FFN with pre-norm, accumulated into the residual stream:
+/// h += (silu(rms(h, g2) @ wg) * (rms(h, g2) @ wu)) @ wd.
+fn ffn_inplace(s: &mut EngineScratch, h: &mut [f32], rows: usize, lw: &LayerW<'_>) {
+    let (d, f) = (lw.d, lw.f);
+    rms_norm_into(h, rows, d, lw.g2, &mut s.h_norm);
+    resize_buf(&mut s.gate, rows * f);
+    matmul_into(&mut s.gate, &s.h_norm, lw.wg, rows, d, f);
+    resize_buf(&mut s.up, rows * f);
+    matmul_into(&mut s.up, &s.h_norm, lw.wu, rows, d, f);
+    for (g, u) in s.gate.iter_mut().zip(&s.up) {
+        *g = silu(*g) * u;
+    }
+    resize_buf(&mut s.proj, rows * d);
+    matmul_into(&mut s.proj, &s.gate, lw.wd, rows, f, d);
+    add_assign(h, &s.proj);
+}
+
+// ---------------------------------------------------------------------------
+// Dense kernels
+// ---------------------------------------------------------------------------
+
+/// Size a scratch buffer without re-zeroing it at steady state: every
+/// consumer (matmul_into, attention_decode_row) initializes its output
+/// before accumulating, so the memset would be pure overhead on the hot
+/// path once the buffer has its final size.
+fn resize_buf(v: &mut Vec<f32>, n: usize) {
+    if v.len() != n {
+        v.clear();
+        v.resize(n, 0.0);
+    }
+}
+
+/// RMSNorm over the last axis into `out`: x / sqrt(mean(x^2) + eps) * gamma.
+fn rms_norm_into(x: &[f32], rows: usize, d: usize, gamma: &[f32], out: &mut Vec<f32>) {
+    out.clear();
+    out.reserve(rows * d);
     for r in 0..rows {
         let row = &x[r * d..(r + 1) * d];
         let var: f32 = row.iter().map(|v| v * v).sum::<f32>() / d as f32;
         let inv = 1.0 / (var + EPS).sqrt();
-        for c in 0..d {
-            out[r * d + c] = row[c] * inv * gamma[c];
-        }
+        out.extend(row.iter().zip(gamma).map(|(v, g)| v * inv * g));
     }
-    out
 }
 
-/// Row-major (m,k) @ (k,n) → (m,n).
-fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
-    let mut out = vec![0f32; m * n];
+/// Inner-dimension block size: keeps the streamed rows of `b` hot in L1
+/// across the unrolled accumulation.
+const K_BLOCK: usize = 64;
+/// Minimum m*k*n before scoped worker threads beat their spawn cost.
+const PAR_WORK_MIN: usize = 1 << 21;
+/// Worker cap (matmuls this size stop scaling past a few cores).
+const MAX_WORKERS: usize = 8;
+
+fn matmul_workers() -> usize {
+    static WORKERS: OnceLock<usize> = OnceLock::new();
+    *WORKERS.get_or_init(|| {
+        std::thread::available_parallelism()
+            .map(|p| p.get())
+            .unwrap_or(1)
+            .min(MAX_WORKERS)
+    })
+}
+
+/// Row-major (m,k) @ (k,n) → `out` (m,n), overwritten. Cache-blocked over
+/// k and tiled across scoped worker threads (rows for m > 1, column
+/// ranges for the single-row decode/lm-head shape) when the FLOP count
+/// justifies the spawn cost. Every path accumulates each output element
+/// over k in ascending order, so serial, parallel, and any batch width
+/// produce bit-identical results — the invariant the stacked-decode
+/// equivalence tests pin.
+fn matmul_into(out: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(out.len(), m * n);
+    let workers = if m * k * n >= PAR_WORK_MIN { matmul_workers() } else { 1 };
+    if workers <= 1 {
+        matmul_serial(out, a, b, k, n);
+    } else if m == 1 {
+        // One output row: split its columns into contiguous chunks.
+        let chunk = n.div_ceil(workers);
+        std::thread::scope(|scope| {
+            for (ti, ochunk) in out.chunks_mut(chunk).enumerate() {
+                scope.spawn(move || matmul_cols_serial(ochunk, a, b, k, n, ti * chunk));
+            }
+        });
+    } else {
+        // Row tiles: each worker owns a contiguous band of output rows.
+        let rows_per = m.div_ceil(workers);
+        std::thread::scope(|scope| {
+            for (ochunk, achunk) in out.chunks_mut(rows_per * n).zip(a.chunks(rows_per * k)) {
+                scope.spawn(move || matmul_serial(ochunk, achunk, b, k, n));
+            }
+        });
+    }
+}
+
+/// Serial (m,k) @ (k,n) over full-width rows, k-blocked.
+fn matmul_serial(out: &mut [f32], a: &[f32], b: &[f32], k: usize, n: usize) {
+    let m = out.len() / n;
     for i in 0..m {
         let arow = &a[i * k..(i + 1) * k];
         let orow = &mut out[i * n..(i + 1) * n];
-        for (kk, &aik) in arow.iter().enumerate() {
-            if aik == 0.0 {
-                continue;
-            }
-            let brow = &b[kk * n..(kk + 1) * n];
-            for j in 0..n {
-                orow[j] += aik * brow[j];
+        orow.fill(0.0);
+        for k0 in (0..k).step_by(K_BLOCK) {
+            let kend = (k0 + K_BLOCK).min(k);
+            for (kk, &aik) in arow[k0..kend].iter().enumerate() {
+                let brow = &b[(k0 + kk) * n..(k0 + kk + 1) * n];
+                for (o, &bv) in orow.iter_mut().zip(brow) {
+                    *o += aik * bv;
+                }
             }
         }
     }
-    out
+}
+
+/// Serial single-row matmul restricted to columns [j0, j0 + orow.len()).
+fn matmul_cols_serial(orow: &mut [f32], a: &[f32], b: &[f32], k: usize, n: usize, j0: usize) {
+    orow.fill(0.0);
+    let w = orow.len();
+    for k0 in (0..k).step_by(K_BLOCK) {
+        let kend = (k0 + K_BLOCK).min(k);
+        for (kk, &aik) in a[k0..kend].iter().enumerate() {
+            let bseg = &b[(k0 + kk) * n + j0..(k0 + kk) * n + j0 + w];
+            for (o, &bv) in orow.iter_mut().zip(bseg) {
+                *o += aik * bv;
+            }
+        }
+    }
 }
 
 fn add_assign(a: &mut [f32], b: &[f32]) {
@@ -243,12 +563,17 @@ fn apply_rope(x: &mut [f32], w: usize, heads: usize, head_dim: usize, cos: &[f32
     }
 }
 
-/// Causal multi-head attention. q,k,v: (w, H*D) → (w, H*D).
-fn causal_attention(q: &[f32], k: &[f32], v: &[f32], w: usize, heads: usize, head_dim: usize) -> Vec<f32> {
+/// Causal multi-head attention over the scratch arena: reads `s.q`,
+/// `s.k`, `s.v` (each (w, H*D)) and fills `s.attn`; `s.scores` is the
+/// per-query score buffer.
+fn attention_prefill(s: &mut EngineScratch, w: usize, heads: usize, head_dim: usize) {
+    let EngineScratch { q, k, v, attn, scores, .. } = s;
     let kvw = heads * head_dim;
     let scale = 1.0 / (head_dim as f32).sqrt();
-    let mut out = vec![0f32; w * kvw];
-    let mut scores = vec![0f32; w];
+    attn.clear();
+    attn.resize(w * kvw, 0.0);
+    scores.clear();
+    scores.resize(w, 0.0);
     for h in 0..heads {
         let off = h * head_dim;
         for i in 0..w {
@@ -265,7 +590,7 @@ fn causal_attention(q: &[f32], k: &[f32], v: &[f32], w: usize, heads: usize, hea
                 *sc = (*sc - smax).exp();
                 z += *sc;
             }
-            let orow = &mut out[i * kvw + off..i * kvw + off + head_dim];
+            let orow = &mut attn[i * kvw + off..i * kvw + off + head_dim];
             for (j, &p) in scores.iter().enumerate().take(i + 1) {
                 let vj = &v[j * kvw + off..j * kvw + off + head_dim];
                 let pw = p / z;
@@ -275,22 +600,30 @@ fn causal_attention(q: &[f32], k: &[f32], v: &[f32], w: usize, heads: usize, hea
             }
         }
     }
-    out
 }
 
-/// Single-token attention over a static KV cache; rows > pos are masked.
-/// q: (H*D), caches: (W, H*D) → (H*D).
-fn decode_attention(q: &[f32], kc: &[f32], vc: &[f32], pos: usize, heads: usize, head_dim: usize) -> Vec<f32> {
+/// Single-token attention for one session against its own cache; rows
+/// beyond `pos` are masked. `q_row`: (H*D); writes `out_row`: (H*D).
+fn attention_decode_row(
+    out_row: &mut [f32],
+    q_row: &[f32],
+    cache: &LayerKv,
+    pos: usize,
+    heads: usize,
+    head_dim: usize,
+    scores: &mut Vec<f32>,
+) {
     let kvw = heads * head_dim;
     let scale = 1.0 / (head_dim as f32).sqrt();
-    let mut out = vec![0f32; kvw];
-    let mut scores = vec![0f32; pos + 1];
+    out_row.fill(0.0);
+    scores.clear();
+    scores.resize(pos + 1, 0.0);
     for h in 0..heads {
         let off = h * head_dim;
-        let qh = &q[off..off + head_dim];
+        let qh = &q_row[off..off + head_dim];
         let mut smax = f32::NEG_INFINITY;
         for (j, sc) in scores.iter_mut().enumerate() {
-            let kj = &kc[j * kvw + off..j * kvw + off + head_dim];
+            let kj = &cache.k[j * kvw + off..j * kvw + off + head_dim];
             let dot: f32 = qh.iter().zip(kj).map(|(a, b)| a * b).sum();
             *sc = dot * scale;
             smax = smax.max(*sc);
@@ -300,16 +633,15 @@ fn decode_attention(q: &[f32], kc: &[f32], vc: &[f32], pos: usize, heads: usize,
             *sc = (*sc - smax).exp();
             z += *sc;
         }
-        let orow = &mut out[off..off + head_dim];
+        let orow = &mut out_row[off..off + head_dim];
         for (j, &p) in scores.iter().enumerate() {
-            let vj = &vc[j * kvw + off..j * kvw + off + head_dim];
+            let vj = &cache.v[j * kvw + off..j * kvw + off + head_dim];
             let pw = p / z;
             for (o, &vv) in orow.iter_mut().zip(vj) {
                 *o += pw * vv;
             }
         }
     }
-    out
 }
 
 #[inline]
@@ -317,25 +649,13 @@ fn silu(x: f32) -> f32 {
     x / (1.0 + (-x).exp())
 }
 
-/// SwiGLU FFN with pre-norm: x + (silu(h@wg) * (h@wu)) @ wd, h = rms(x,g2).
-fn ffn(x: &[f32], w: usize, d: usize, f: usize, g2: &[f32], wg: &[f32], wu: &[f32], wd: &[f32]) -> Vec<f32> {
-    let h = rms_norm(x, w, d, g2);
-    let mut gate = matmul(&h, wg, w, d, f);
-    let up = matmul(&h, wu, w, d, f);
-    for (g, u) in gate.iter_mut().zip(&up) {
-        *g = silu(*g) * u;
-    }
-    let down = matmul(&gate, wd, w, f, d);
-    let mut out = x.to_vec();
-    add_assign(&mut out, &down);
-    out
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::model::{ModelConfig, ModelWeights};
-    use crate::runtime::{LayerKv, NodeRuntime};
+    use crate::runtime::{LayerKv, NodeRuntime, RopeTables};
+    use crate::util::prop::run_cases;
+    use crate::util::rng::Rng;
     use std::rc::Rc;
 
     fn assert_close(got: &[f32], want: &[f32], tol: f32, what: &str) {
@@ -401,11 +721,14 @@ mod tests {
         // constant V must pass through attention unchanged
         let (heads, head_dim, w) = (2usize, 4usize, 5usize);
         let kvw = heads * head_dim;
-        let q: Vec<f32> = (0..w * kvw).map(|i| (i % 7) as f32 * 0.1).collect();
-        let k: Vec<f32> = (0..w * kvw).map(|i| (i % 5) as f32 * 0.2).collect();
-        let v = vec![3.5f32; w * kvw];
-        let out = causal_attention(&q, &k, &v, w, heads, head_dim);
-        for o in out {
+        let mut s = EngineScratch {
+            q: (0..w * kvw).map(|i| (i % 7) as f32 * 0.1).collect(),
+            k: (0..w * kvw).map(|i| (i % 5) as f32 * 0.2).collect(),
+            v: vec![3.5f32; w * kvw],
+            ..Default::default()
+        };
+        attention_prefill(&mut s, w, heads, head_dim);
+        for &o in &s.attn {
             assert!((o - 3.5).abs() < 1e-5, "attention must be a convex combination");
         }
     }
@@ -427,5 +750,154 @@ mod tests {
                 assert!((n0 - n1).abs() < 1e-5, "rotation must preserve norms");
             }
         }
+    }
+
+    #[test]
+    fn matmul_parallel_matches_serial_bitwise() {
+        let mut rng = Rng::new(0xA11);
+        // m == 1: the column-split decode/lm-head shape, above PAR_WORK_MIN.
+        let (k, n) = (256usize, 8192usize);
+        let a: Vec<f32> = (0..k).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let mut par = vec![0f32; n];
+        matmul_into(&mut par, &a, &b, 1, k, n);
+        let mut ser = vec![0f32; n];
+        matmul_serial(&mut ser, &a, &b, k, n);
+        assert_eq!(par, ser, "column-parallel must be bit-identical to serial");
+        // m > 1: the row-split prefill shape.
+        let (m, k2, n2) = (64usize, 256usize, 256usize);
+        let a2: Vec<f32> = (0..m * k2).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let b2: Vec<f32> = (0..k2 * n2).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let mut par2 = vec![0f32; m * n2];
+        matmul_into(&mut par2, &a2, &b2, m, k2, n2);
+        let mut ser2 = vec![0f32; m * n2];
+        matmul_serial(&mut ser2, &a2, &b2, k2, n2);
+        assert_eq!(par2, ser2, "row-parallel must be bit-identical to serial");
+    }
+
+    #[test]
+    fn copyful_decode_matches_inplace_bitwise() {
+        // The retained pre-PR path is the equivalence oracle: both paths
+        // must produce bit-identical hidden states AND caches.
+        let mut cfg = ModelConfig::sim7b();
+        cfg.n_layers = 2;
+        let engine = Rc::new(Engine::load("artifacts", &cfg).unwrap());
+        let weights = Rc::new(ModelWeights::synthetic(&cfg, 91));
+        let node = NodeRuntime::new(engine, weights.clone(), 0..2, true).unwrap();
+        let tokens: Vec<u32> = vec![9, 41, 300];
+        let x = weights.embed_padded(&tokens, cfg.prefill_len);
+        let (_, rows) = node.prefill(&x).unwrap();
+        let mut kv_a = node.install_prefill_kv(&rows, tokens.len());
+        let mut kv_b = kv_a.clone();
+        let xt = weights.embed(&[123]);
+        for step in 0..3 {
+            let pos = tokens.len() + step;
+            let h_a = node.decode(&xt, &mut kv_a, pos).unwrap();
+            let h_b = node.decode_copyful(&xt, &mut kv_b, pos).unwrap();
+            assert_eq!(h_a, h_b, "step {step}: hidden state diverged");
+            assert_eq!(kv_a, kv_b, "step {step}: caches diverged");
+        }
+    }
+
+    #[test]
+    fn stacked_decode_bit_identical_to_sequential() {
+        // ACCEPTANCE (batched decode): layer_decode_batch over B stacked
+        // sessions == B sequential layer_decode calls, bit for bit, on
+        // hidden rows, caches, and lm-head logits.
+        run_cases(6, 0xB7, |_, rng| {
+            let mut cfg = ModelConfig::sim7b();
+            cfg.n_layers = 1 + rng.below(2);
+            let engine = Rc::new(Engine::load("artifacts", &cfg).unwrap());
+            let weights = Rc::new(ModelWeights::synthetic(&cfg, 77 + rng.below(4) as u64));
+            let node = NodeRuntime::new(engine, weights.clone(), 0..cfg.n_layers, true).unwrap();
+            let d = cfg.d_model;
+            let b = 2 + rng.below(4); // 2..=5 stacked sessions
+            let mut solo_kv: Vec<Vec<LayerKv>> = Vec::new();
+            let mut positions = Vec::new();
+            let mut xs: Vec<Vec<f32>> = Vec::new();
+            for _ in 0..b {
+                let plen = 2 + rng.below(6);
+                let tokens: Vec<u32> = (0..plen).map(|_| rng.below(cfg.vocab) as u32).collect();
+                let x = weights.embed_padded(&tokens, cfg.prefill_len);
+                let (_, rows) = node.prefill(&x).unwrap();
+                solo_kv.push(node.install_prefill_kv(&rows, plen));
+                positions.push(plen);
+                xs.push(weights.embed(&[rng.below(cfg.vocab) as u32]));
+            }
+            let mut batch_kv = solo_kv.clone();
+            let mut solo_h: Vec<Vec<f32>> = Vec::new();
+            for (i, x) in xs.iter().enumerate() {
+                solo_h.push(node.decode(x, &mut solo_kv[i], positions[i]).unwrap());
+            }
+            let mut hs: Vec<f32> = xs.iter().flat_map(|x| x.iter().copied()).collect();
+            {
+                let mut refs: Vec<&mut [LayerKv]> =
+                    batch_kv.iter_mut().map(|c| c.as_mut_slice()).collect();
+                node.decode_batch(&mut hs, &mut refs, &positions).unwrap();
+            }
+            for i in 0..b {
+                assert_eq!(&hs[i * d..(i + 1) * d], solo_h[i].as_slice(), "hidden row {i}");
+                assert_eq!(batch_kv[i], solo_kv[i], "caches of session {i}");
+            }
+            let stacked = node.logits_decode_batch(&hs, b).unwrap();
+            for (i, h) in solo_h.iter().enumerate() {
+                let solo = node.logits_decode(h).unwrap();
+                assert_eq!(
+                    &stacked[i * cfg.vocab..(i + 1) * cfg.vocab],
+                    solo.as_slice(),
+                    "logits row {i}"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn inplace_decode_performs_zero_uploads() {
+        // The tentpole invariant: a decode step neither clones nor
+        // round-trips the KV caches through the upload surface.
+        let mut cfg = ModelConfig::sim7b();
+        cfg.n_layers = 2;
+        let engine = Rc::new(Engine::load("artifacts", &cfg).unwrap());
+        let weights = Rc::new(ModelWeights::synthetic(&cfg, 17));
+        let node = NodeRuntime::new(engine.clone(), weights.clone(), 0..2, true).unwrap();
+        let tokens: Vec<u32> = vec![4, 8, 15];
+        let x = weights.embed_padded(&tokens, cfg.prefill_len);
+        let (_, rows) = node.prefill(&x).unwrap();
+        let mut kv = node.install_prefill_kv(&rows, tokens.len());
+        let xt = weights.embed(&[16]);
+        let before = engine.uploaded_elems();
+        let h = node.decode(&xt, &mut kv, tokens.len()).unwrap();
+        let _ = node.logits_decode(&h).unwrap();
+        assert_eq!(engine.uploaded_elems(), before, "in-place decode must not upload");
+        // ... while the copyful baseline demonstrably round-trips caches.
+        let _ = node.decode_copyful(&xt, &mut kv, tokens.len() + 1).unwrap();
+        assert!(engine.uploaded_elems() > before, "copyful baseline uploads caches");
+    }
+
+    #[test]
+    fn rope_tables_match_direct_formula() {
+        // Guards the hoisted inverse-frequency computation.
+        let t = RopeTables::new(32, 16, 10000.0);
+        let half = 8;
+        for p in [0usize, 3, 31] {
+            for i in 0..half {
+                let inv = 1.0 / 10000f64.powf((2 * i) as f64 / 16.0);
+                let ang = p as f64 * inv;
+                assert_eq!(t.cos[p * half + i], ang.cos() as f32, "cos({p},{i})");
+                assert_eq!(t.sin[p * half + i], ang.sin() as f32, "sin({p},{i})");
+            }
+        }
+    }
+
+    #[test]
+    fn prefill_kv_install_prefix_and_zero_tail() {
+        let k_rows: Vec<f32> = (0..6).map(|i| i as f32).collect();
+        let v_rows: Vec<f32> = (0..6).map(|i| (10 + i) as f32).collect();
+        let c = LayerKv::from_prefill_rows(&k_rows, &v_rows, 4, 3);
+        assert_eq!(c.k.len(), 12);
+        assert_eq!(&c.k[..6], k_rows.as_slice());
+        assert!(c.k[6..].iter().all(|&x| x == 0.0), "k tail must be zero");
+        assert_eq!(&c.v[..6], v_rows.as_slice());
+        assert!(c.v[6..].iter().all(|&x| x == 0.0), "v tail must be zero");
     }
 }

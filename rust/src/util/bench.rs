@@ -73,6 +73,9 @@ pub fn bench_fn<F: FnMut()>(name: &str, target: Duration, mut f: F) -> BenchStat
 #[derive(Default, Debug)]
 pub struct JsonReport {
     entries: Vec<(String, BenchStats)>,
+    /// Named scalar results (tokens/s, speedup ratios, batch widths)
+    /// emitted alongside the timing stats under a "metrics" object.
+    metrics: Vec<(String, f64)>,
 }
 
 impl JsonReport {
@@ -82,6 +85,12 @@ impl JsonReport {
 
     pub fn add(&mut self, name: &str, stats: &BenchStats) {
         self.entries.push((name.to_string(), stats.clone()));
+    }
+
+    /// Record a named scalar (e.g. `decode_tok_s_inplace`) for the
+    /// report's "metrics" object.
+    pub fn add_metric(&mut self, name: &str, value: f64) {
+        self.metrics.push((name.to_string(), value));
     }
 
     /// Median of a recorded bench in ns (0.0 if absent) — for in-binary
@@ -112,7 +121,20 @@ impl JsonReport {
                 if i + 1 < self.entries.len() { "," } else { "" },
             ));
         }
-        out.push_str("  }\n}\n");
+        if self.metrics.is_empty() {
+            out.push_str("  }\n}\n");
+        } else {
+            out.push_str("  },\n  \"metrics\": {\n");
+            for (i, (name, v)) in self.metrics.iter().enumerate() {
+                out.push_str(&format!(
+                    "    \"{}\": {}{}\n",
+                    Self::escape(name),
+                    if v.is_finite() { format!("{v:.6}") } else { "null".to_string() },
+                    if i + 1 < self.metrics.len() { "," } else { "" },
+                ));
+            }
+            out.push_str("  }\n}\n");
+        }
         out
     }
 

@@ -107,6 +107,55 @@ fn many_to_one_interleaving_matches_single_session() {
     }
 }
 
+/// Stacked decode on the shared server: enough concurrent sessions that
+/// iterations stack B >= 4 decode payloads into ONE batched engine call,
+/// and every token stream still equals the solo blocking run — grouping
+/// payloads must never change a token.
+#[test]
+fn stacked_batched_streams_match_solo_runs() {
+    let eng = engine();
+    let mut spec = serve_spec(4);
+    spec.batcher.max_batch = 8;
+    let mut serve = build_serve_loop(eng.clone(), &spec).unwrap();
+
+    // The same prompts the interleaving test pins (known multi-step
+    // streams under these seeds), duplicated under fresh ids — greedy
+    // decode depends only on the token history, so the duplicates repeat
+    // the documented behavior and guarantee concurrent decode payloads.
+    let requests = vec![
+        Request::new(1, vec![3, 141, 59, 26], 8),
+        Request::new(2, vec![10, 20, 30], 8),
+        Request::new(3, vec![7, 90, 200, 11, 5], 6),
+        Request::new(4, vec![3, 141, 59, 26], 8),
+        Request::new(5, vec![10, 20, 30], 8),
+        Request::new(6, vec![7, 90, 200, 11, 5], 6),
+    ];
+    let report = serve
+        .run(requests.clone(), |_, _| TokenControl::Continue)
+        .unwrap();
+
+    assert!(report.peak_batch >= 4, "need B >= 4 iterations to exercise stacking: {report:?}");
+    assert!(
+        serve.cloud.tokens_stacked() >= 2,
+        "the stacked decode path must actually serve tokens (got {})",
+        serve.cloud.tokens_stacked()
+    );
+    assert_eq!(report.failed, 0);
+    assert_eq!(report.results.len(), requests.len());
+
+    for req in &requests {
+        let dspec = DeploymentSpec::defaults(small_cfg(4), 2);
+        let mut pipe = build_pipeline(eng.clone(), &dspec).unwrap();
+        let want = pipe.generate(req).unwrap();
+        let got = report
+            .results
+            .iter()
+            .find(|r| r.request_id == req.id)
+            .expect("request completed");
+        assert_eq!(got.tokens, want.tokens, "req {} diverged under stacked decode", req.id);
+    }
+}
+
 /// Mid-stream cancellation tears the session down and frees its router
 /// slot so a waiting request gets admitted (capacity churn).
 #[test]

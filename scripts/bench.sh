@@ -1,19 +1,30 @@
 #!/usr/bin/env bash
-# Run the hot-path microbenchmarks and emit the machine-readable report.
+# Run the hot-path + engine microbenchmarks and emit the machine-readable
+# reports.
 #
 #   scripts/bench.sh            # release build, writes BENCH_hot_paths.json
+#                               # and BENCH_engine.json
 #   BENCH_JSON=out.json scripts/bench.sh
+#   BENCH_SMOKE=1 scripts/bench.sh   # reduced CI configuration
 #
-# The JSON (name -> {median_ns, mean_ns, min_ns, p95_ns, iters}) is the
-# perf trajectory record referenced by EXPERIMENTS.md §Perf; commit the
-# numbers there (not the JSON) when they move.
+# The JSON (name -> {median_ns, mean_ns, min_ns, p95_ns, iters}, plus a
+# "metrics" object of tokens/s + speedup scalars for the engine bench) is
+# the perf trajectory record referenced by EXPERIMENTS.md §Perf/§Engine;
+# commit the numbers there (not the JSON) when they move. The engine
+# bench also ASSERTS the zero-copy decode invariant — a panic fails this
+# script.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export BENCH_JSON="${BENCH_JSON:-BENCH_hot_paths.json}"
 cargo bench --bench hot_paths "$@"
 
-if [ -f "$BENCH_JSON" ]; then
-    echo "--- $BENCH_JSON ---"
-    cat "$BENCH_JSON"
-fi
+ENGINE_JSON="${BENCH_ENGINE_JSON:-BENCH_engine.json}"
+BENCH_JSON="$ENGINE_JSON" cargo bench --bench engine "$@"
+
+for f in "$BENCH_JSON" "$ENGINE_JSON"; do
+    if [ -f "$f" ]; then
+        echo "--- $f ---"
+        cat "$f"
+    fi
+done
