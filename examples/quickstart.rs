@@ -42,7 +42,7 @@ fn main() -> anyhow::Result<()> {
     spec.opsc = OpscConfig::new(choice.opsc.split_layer, choice.opsc.qw_front, 16);
     spec.compression.q_bar = choice.qa.front.clamp(2, 8);
     let mut pipeline = build_pipeline(engine, &spec)?;
-    println!("link rate: {:.2} Mbps (Eq. 13 optimum)", pipeline.link.rate_bps / 1e6);
+    println!("link rate: {:.2} Mbps (Eq. 13 optimum)", pipeline.link().rate_bps / 1e6);
 
     // 3. Serve one request.
     let prompt: Vec<u32> = vec![12, 345, 67, 89, 101, 202];

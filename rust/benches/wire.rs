@@ -1,0 +1,133 @@
+//! Wire codec throughput bench: encode/decode MB/s for representative
+//! payloads and replies, plus the fixed frame overhead vs `wire_bytes()`
+//! (asserted, not just reported). The EXPERIMENTS.md §Wire numbers.
+//!
+//! Emits a machine-readable report to `BENCH_wire.json` (override with
+//! the `BENCH_JSON` env var):
+//!
+//!   BENCH_JSON=BENCH_wire.json cargo bench --bench wire
+//!
+//! `BENCH_SMOKE=1` runs the reduced CI configuration.
+
+use std::time::Duration;
+
+use splitserve::coordinator::{
+    CloudReply, CompressedKv, CompressedTensor, CompressionConfig, SamplingSpec, SplitPayload,
+};
+use splitserve::runtime::LayerKv;
+use splitserve::util::bench::{bench_recorded, JsonReport};
+use splitserve::util::rng::Rng;
+use splitserve::wire::{
+    decode_payload_frame, decode_reply_frame, encode_payload_frame, encode_reply_frame,
+    PAYLOAD_OVERHEAD, REPLY_OVERHEAD,
+};
+
+/// A paper-shaped I_kv = 1 decode payload: one hidden row at the split
+/// width plus the cloud layers' compressed KV caches.
+fn decode_payload(rng: &mut Rng, n_layers: usize, used: usize, width: usize) -> SplitPayload {
+    let c = CompressionConfig::default();
+    let row: Vec<f32> = (0..width).map(|_| rng.heavy_tailed(1.0, 0.001, 120.0)).collect();
+    let hidden = CompressedTensor::compress(&row, 1, width, &c);
+    let mut caches = vec![LayerKv::zeros(used + 8, width); n_layers];
+    for cache in &mut caches {
+        for i in 0..used * width {
+            cache.k[i] = rng.heavy_tailed(0.8, 0.001, 60.0);
+            cache.v[i] = rng.heavy_tailed(0.8, 0.001, 60.0);
+        }
+    }
+    let kv = CompressedKv::compress(&caches, used, width, &c);
+    SplitPayload {
+        request_id: 42,
+        pos: used,
+        hidden,
+        kv: Some(kv),
+        is_prefill: false,
+        sampling: SamplingSpec::Greedy,
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let smoke = std::env::var("BENCH_SMOKE").is_ok();
+    let target = Duration::from_millis(if smoke { 150 } else { 600 });
+    let mut rng = Rng::new(0xA17E);
+    let mut report = JsonReport::new();
+
+    let (n_layers, used, width) = if smoke { (4, 24, 64) } else { (12, 64, 128) };
+    let payload = decode_payload(&mut rng, n_layers, used, width);
+    let frame = encode_payload_frame(&payload);
+
+    // The invariant the whole accounting stands on — checked here in
+    // release mode too, not only under debug_assertions.
+    assert_eq!(
+        frame.len() as u64,
+        payload.wire_bytes() + PAYLOAD_OVERHEAD,
+        "payload frame must be wire_bytes + fixed overhead"
+    );
+    assert_eq!(decode_payload_frame(&frame).unwrap(), payload, "codec must roundtrip");
+
+    let mb = frame.len() as f64 / (1024.0 * 1024.0);
+    let name_enc = format!("wire/encode payload {n_layers}L x {used}w ({} B)", frame.len());
+    bench_recorded(&mut report, &name_enc, target, || {
+        std::hint::black_box(encode_payload_frame(&payload));
+    });
+    let name_dec = format!("wire/decode payload {n_layers}L x {used}w ({} B)", frame.len());
+    bench_recorded(&mut report, &name_dec, target, || {
+        std::hint::black_box(decode_payload_frame(&frame).unwrap());
+    });
+    let enc_mb_s = mb / (report.median_ns(&name_enc) * 1e-9);
+    let dec_mb_s = mb / (report.median_ns(&name_dec) * 1e-9);
+    report.add_metric("wire_payload_frame_bytes", frame.len() as f64);
+    report.add_metric("wire_payload_overhead_bytes", PAYLOAD_OVERHEAD as f64);
+    report.add_metric(
+        "wire_payload_overhead_frac",
+        PAYLOAD_OVERHEAD as f64 / frame.len() as f64,
+    );
+    report.add_metric("wire_encode_mb_s", enc_mb_s);
+    report.add_metric("wire_decode_mb_s", dec_mb_s);
+    println!(
+        "payload frame {} B (overhead {} B = {:.4}%): encode {:.0} MB/s, decode {:.0} MB/s",
+        frame.len(),
+        PAYLOAD_OVERHEAD,
+        100.0 * PAYLOAD_OVERHEAD as f64 / frame.len() as f64,
+        enc_mb_s,
+        dec_mb_s
+    );
+
+    // Reply: one (k, v) row per cloud layer, raw f32 — the downlink shape.
+    let reply = CloudReply {
+        request_id: 42,
+        token: 7,
+        new_kv_rows: (0..n_layers)
+            .map(|_| {
+                let k: Vec<f32> = (0..width).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+                let v: Vec<f32> = (0..width).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+                (k, v)
+            })
+            .collect(),
+        logits_entropy: 2.5,
+    };
+    let rframe = encode_reply_frame(&reply, 1.25e-3);
+    assert_eq!(
+        rframe.len() as u64,
+        reply.wire_bytes() + REPLY_OVERHEAD,
+        "reply frame must be wire_bytes + fixed overhead"
+    );
+    let rmb = rframe.len() as f64 / (1024.0 * 1024.0);
+    let rname_enc = format!("wire/encode reply {n_layers}L ({} B)", rframe.len());
+    bench_recorded(&mut report, &rname_enc, target, || {
+        std::hint::black_box(encode_reply_frame(&reply, 1.25e-3));
+    });
+    let rname_dec = format!("wire/decode reply {n_layers}L ({} B)", rframe.len());
+    bench_recorded(&mut report, &rname_dec, target, || {
+        std::hint::black_box(decode_reply_frame(&rframe).unwrap());
+    });
+    report.add_metric("wire_reply_frame_bytes", rframe.len() as f64);
+    report.add_metric("wire_reply_overhead_bytes", REPLY_OVERHEAD as f64);
+    report.add_metric("wire_reply_encode_mb_s", rmb / (report.median_ns(&rname_enc) * 1e-9));
+    report.add_metric("wire_reply_decode_mb_s", rmb / (report.median_ns(&rname_dec) * 1e-9));
+
+    let path = std::env::var("BENCH_JSON").unwrap_or_else(|_| "BENCH_wire.json".to_string());
+    report.write(&path)?;
+    println!("wrote {path}");
+    Ok(())
+}

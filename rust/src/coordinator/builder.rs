@@ -122,6 +122,28 @@ impl DeploymentSpec {
         let cloud_node = NodeRuntime::new(engine, cloud_weights, split..self.model.n_layers, true)?;
         Ok(CloudServer::new(cloud_node, self.cloud_profile.clone()))
     }
+
+    /// Build just the edge half of this deployment — the piece a
+    /// cross-process `splitserve edge` runs. Both processes construct
+    /// from the same spec (same seeds, same quantizer), so the split
+    /// model they jointly form is identical to the single-process one.
+    pub fn build_edge_device(&self, engine: Rc<Engine>) -> Result<EdgeDevice> {
+        let split = self.check_split()?;
+        self.build_edge(engine, split, self.edge_weights())
+    }
+
+    /// Build just the cloud half of this deployment — the piece a
+    /// cross-process `splitserve cloud` serves behind a socket.
+    pub fn build_cloud_server(&self, engine: Rc<Engine>) -> Result<CloudServer> {
+        let split = self.check_split()?;
+        self.build_cloud(engine, split)
+    }
+
+    /// The Algorithm-2 controller this spec implies (None without a
+    /// deadline), for drivers built from the halves above.
+    pub fn edge_controller(&self) -> Option<EarlyExitController> {
+        self.controller(self.operating_rate())
+    }
 }
 
 /// Build the single-session pipeline. The engine can be shared across
@@ -176,7 +198,7 @@ pub fn build_serve_loop(engine: Rc<Engine>, spec: &ServeSpec) -> Result<ServeLoo
     for d in 0..spec.n_devices {
         let edge = dep.build_edge(engine.clone(), split, edge_weights.clone())?;
         let link = LinkSim::new(dep.channel, rate, dep.link_seed.wrapping_add(d as u64));
-        edges.push(EdgeEndpoint { edge, link });
+        edges.push(EdgeEndpoint::over_link(edge, link));
     }
     let qa = ActBits::uniform(dep.compression.q_bar);
     let slots: Vec<DeviceSlot> = (0..spec.n_devices)

@@ -98,6 +98,30 @@ impl CloudServer {
         Ok((reply, compute_s))
     }
 
+    /// Serve one encoded payload frame: strict decode → `handle` → encoded
+    /// reply frame. The server's compute seconds ride in the reply frame's
+    /// timing prefix, so a remote edge keeps the same `StepStats` shape as
+    /// the in-process drivers. This is the unit of work of the
+    /// cross-process `splitserve cloud` loop.
+    pub fn serve_frame(&self, frame_bytes: &[u8]) -> Result<Vec<u8>> {
+        let payload = crate::wire::decode_payload_frame(frame_bytes)?;
+        let (reply, cloud_s) = self.handle(&payload)?;
+        Ok(crate::wire::encode_reply_frame(&reply, cloud_s))
+    }
+
+    /// Blocking frames-in/frames-out loop over one transport connection;
+    /// returns the number of payloads served once the peer hangs up
+    /// cleanly at a frame boundary.
+    pub fn serve_connection(&self, transport: &mut dyn crate::wire::Transport) -> Result<u64> {
+        let mut served = 0u64;
+        while let Some((frame_bytes, _)) = transport.recv_eof()? {
+            let reply_frame = self.serve_frame(&frame_bytes)?;
+            transport.send(&reply_frame)?;
+            served += 1;
+        }
+        Ok(served)
+    }
+
     /// Serve one continuous-batching iteration's payloads on this server.
     /// Single-token decode payloads that ship their KV (I_kv = 1) are
     /// stacked into one batched engine call; prefill and I_kv = 0

@@ -26,9 +26,9 @@ pub use batcher::{BatcherParams, DynamicBatcher};
 pub use builder::{build_pipeline, build_serve_loop, DeploymentSpec, ServeSpec};
 pub use cloud::{BatchCompute, CloudServer};
 pub use edge::{EdgeDevice, EdgeRequestState, ProbeOutcome};
-pub use pipeline::SplitPipeline;
+pub use pipeline::{EdgeClient, SplitPipeline};
 pub use profile::DeviceProfile;
-pub use protocol::{CompressedKv, CompressedTensor, CompressionConfig, SplitPayload};
+pub use protocol::{CloudReply, CompressedKv, CompressedTensor, CompressionConfig, SplitPayload};
 pub use request::{GenerationResult, Request, StepStats};
 pub use router::{RouteDecision, Router};
 pub use sampling::SamplingSpec;

@@ -1,58 +1,136 @@
-//! SplitPipeline: one edge device + one cloud server + the wireless link,
-//! composed into a blocking single-request driver over the sans-IO
-//! [`Session`](super::session::Session) state machine. Every byte on the
-//! wire is a real serialized payload, every latency is a measured compute
-//! time or a simulated link event.
+//! Blocking single-request drivers over the sans-IO
+//! [`Session`](super::session::Session) state machine, moving **encoded
+//! frames** instead of structs:
+//!
+//!   * [`SplitPipeline`] — one edge device + one in-process cloud server,
+//!     joined by a simulated wireless duplex. Every payload is really
+//!     encoded, charged on the [`LinkSim`] with its actual frame length,
+//!     and strictly decoded at the cloud boundary before serving; the
+//!     reply makes the same trip back.
+//!   * [`EdgeClient`] — the same edge half talking to a **remote**
+//!     `splitserve cloud` process over a socket transport (TCP or unix
+//!     domain socket); the server's compute seconds ride in the reply
+//!     frame's timing prefix.
 //!
 //! The generation logic itself (decode loop, Algorithm-2 escalation,
-//! `StepStats` accounting) lives in `Session`; this driver only performs
-//! the IO the session asks for. The many-to-one counterpart that shares
-//! one `CloudServer` across interleaved sessions — and stacks their
-//! decode steps into batched engine calls — is
-//! [`ServeLoop`](super::serve_loop::ServeLoop). Both run on the in-place
-//! engine contract: decode mutates the request's KV caches through
-//! `&mut LayerKv` and never copies a full cache.
+//! `StepStats` accounting) lives in `Session`; these drivers only perform
+//! the IO the session asks for, through one shared [`drive_session`]
+//! loop. The many-to-one counterpart is
+//! [`ServeLoop`](super::serve_loop::ServeLoop).
 
 use anyhow::Result;
 
 use super::cloud::CloudServer;
 use super::edge::EdgeDevice;
+use super::protocol::{CloudReply, SplitPayload};
 use super::request::{GenerationResult, Request};
 use super::session::{Session, SessionAction};
-use crate::channel::LinkSim;
+use crate::channel::{LinkSim, TransferOutcome};
 use crate::planner::EarlyExitController;
+use crate::wire::{CloudPort, EdgePort, LinkTransport, SocketTransport, WireTransport};
+
+/// Drive one session to completion through an exchange function that
+/// delivers a payload and produces (reply, server compute seconds,
+/// uplink outcome, downlink outcome). Both blocking drivers share this
+/// loop, so single-process and cross-process generation differ ONLY in
+/// how frames move.
+pub(crate) fn drive_session(
+    edge: &EdgeDevice,
+    controller: Option<EarlyExitController>,
+    req: &Request,
+    mut exchange: impl FnMut(&SplitPayload) -> Result<(CloudReply, f64, TransferOutcome, TransferOutcome)>,
+) -> Result<GenerationResult> {
+    let mut session = Session::for_edge(req.clone(), edge, controller);
+    loop {
+        match session.poll(edge)? {
+            SessionAction::Transmit(payload) => {
+                let (reply, server_s, up, down) = exchange(&payload)?;
+                session.on_reply(edge, &reply, server_s, up, down);
+            }
+            // A single blocking driver never observes Yield: every
+            // transmit is answered before the next poll.
+            SessionAction::Yield => unreachable!("no in-flight IO in the blocking driver"),
+            SessionAction::Finished => return Ok(session.into_result()),
+        }
+    }
+}
 
 pub struct SplitPipeline {
     pub edge: EdgeDevice,
     pub cloud: CloudServer,
-    pub link: LinkSim,
+    /// Edge side of the simulated wireless wire — charges the `LinkSim`
+    /// with actual encoded frame lengths in both directions.
+    pub port: EdgePort,
+    /// Cloud side of the same wire (lossless loopback; this driver pumps
+    /// it so the server computes on what the bytes carried).
+    pub cloud_port: CloudPort,
     /// Early-exit controller (None = best-effort, no deadline).
     pub controller: Option<EarlyExitController>,
 }
 
 impl SplitPipeline {
     pub fn new(edge: EdgeDevice, cloud: CloudServer, link: LinkSim) -> SplitPipeline {
-        SplitPipeline { edge, cloud, link, controller: None }
+        let (edge_half, cloud_half) = LinkTransport::duplex(link);
+        SplitPipeline {
+            edge,
+            cloud,
+            port: EdgePort::new(WireTransport::Sim(edge_half)),
+            cloud_port: CloudPort::new(WireTransport::Loopback(cloud_half)),
+            controller: None,
+        }
+    }
+
+    /// The wireless link simulator behind this pipeline's wire.
+    pub fn link(&self) -> &LinkSim {
+        self.port.link().expect("SplitPipeline is always sim-backed")
     }
 
     /// Run a full request to completion. EOS is vocabulary token 0
     /// (synthetic convention). Behavior-identical to driving a fresh
-    /// `Session` by hand: poll → transmit → reply, until finished.
+    /// `Session` by hand: poll → transmit → reply, until finished — with
+    /// every transmission crossing the codec as real frame bytes.
     pub fn generate(&mut self, req: &Request) -> Result<GenerationResult> {
-        let mut session = Session::for_edge(req.clone(), &self.edge, self.controller);
-        loop {
-            match session.poll(&self.edge)? {
-                SessionAction::Transmit(payload) => {
-                    let up = self.link.transfer(payload.wire_bytes());
-                    let (reply, cloud_s) = self.cloud.handle(&payload)?;
-                    let down = self.link.transfer(reply.wire_bytes());
-                    session.on_reply(&self.edge, &reply, cloud_s, up, down);
-                }
-                // A single blocking driver never observes Yield: every
-                // transmit is answered before the next poll.
-                SessionAction::Yield => unreachable!("no in-flight IO in the blocking driver"),
-                SessionAction::Finished => return Ok(session.into_result()),
-            }
-        }
+        let SplitPipeline { edge, cloud, port, cloud_port, controller } = self;
+        drive_session(edge, *controller, req, |payload| {
+            let up = port.send_payload(payload)?;
+            let (decoded, _) = cloud_port.recv_payload()?;
+            let (reply, cloud_s) = cloud.handle(&decoded)?;
+            cloud_port.send_reply(&reply, cloud_s)?;
+            let (reply, server_s, down) = port.recv_reply()?;
+            Ok((reply, server_s, up, down))
+        })
+    }
+}
+
+/// Cross-process driver: the edge half of a deployment generating against
+/// a remote `splitserve cloud` over a real socket. Link outcomes are
+/// measured wall time; the remote server's compute seconds come back in
+/// each reply frame, so `StepStats` keeps the same shape as the
+/// single-process drivers.
+pub struct EdgeClient {
+    pub edge: EdgeDevice,
+    pub port: EdgePort,
+    pub controller: Option<EarlyExitController>,
+}
+
+impl EdgeClient {
+    pub fn new(edge: EdgeDevice, transport: SocketTransport) -> EdgeClient {
+        EdgeClient { edge, port: EdgePort::new(WireTransport::Socket(transport)), controller: None }
+    }
+
+    /// Run a full request to completion against the remote cloud.
+    pub fn generate(&mut self, req: &Request) -> Result<GenerationResult> {
+        let EdgeClient { edge, port, controller } = self;
+        drive_session(edge, *controller, req, |payload| {
+            let up = port.send_payload(payload)?;
+            let (reply, server_s, mut down) = port.recv_reply()?;
+            // The blocking recv's wall time spans the server's whole
+            // turnaround; the server's own compute seconds arrive in the
+            // timing prefix and are recorded as cloud_compute_s, so they
+            // must come OUT of the measured downlink or StepStats would
+            // count them twice.
+            down.latency_s = (down.latency_s - server_s).max(0.0);
+            Ok((reply, server_s, up, down))
+        })
     }
 }

@@ -8,29 +8,36 @@
 //!     the paper's stateless-cloud design keeps all per-request state on
 //!     the edge (Eq. 2's memory model), shipping the cloud share each step.
 //!
-//! # Wire format v2
+//! # Wire format v3 — real frames, not arithmetic
 //!
-//! One `CompressedTensor` serializes as:
+//! Since wire format v3, this layout is no longer a size-accounting
+//! convention: `wire::codec` encodes and strictly decodes every struct
+//! below as actual bytes, every transmission crosses the edge↔cloud
+//! boundary inside a CRC-protected versioned frame (`wire::frame`), and
+//! `encoded.len() == wire_bytes()` is asserted at every encode in debug
+//! builds and in the test suite. One `CompressedTensor` serializes as:
 //!
 //! ```text
 //! [rows u16][cols u16][bits u8][flags u8]            -- 6-byte header
 //! [scale f32, zero f32] x rows                        -- per-token params
 //! [sign bitset: ceil(rows*cols/8) bytes]              -- 1 bit/element
-//! [coded stream: tag u8 + CodedStream bytes]          -- TAB-Q codes
+//! [coded stream: tag u8 + representation]             -- TAB-Q codes
+//!   tag 0 (raw packing):  [bits u32][n u32][packed]
+//!   tag 1 (rANS):         [len u32][rANS stream]
 //! [CSR outliers: rows/cols u16 header, row_ptr u32 x (rows+1),
 //!  (col_idx u16, value f32) x nnz]                    -- lossless T_above
 //! ```
 //!
-//! The coded stream is either raw bit-packing (tag 0: `bits`/`n` header +
-//! packed codes) or the 2-way interleaved rANS stream (tag 1, see
-//! `quant::rans` for the self-describing layout). v2 differs from v1 in
-//! two ways: the rANS stream uses 64-bit states with 32-bit renorm and a
-//! strict (truncation-detecting) decoder, and the struct carries ONLY the
-//! entropy-coded codes — v1 additionally retained the uncompressed TAB-Q
-//! code vector in memory and re-verified it against the decoded stream on
-//! every `decompress()`, which doubled the resident size of every payload
-//! and re-decoded for nothing. `wire_bytes()` accounting is unchanged
-//! (bit-exact under the layout above).
+//! A `CompressedKv` is a `[n_layers u16][used_rows u16]` header plus the
+//! per-layer (k, v) tensor pairs; `SplitPayload` and `CloudReply` add
+//! small fixed headers (see `wire::codec` for the byte-level layouts and
+//! `wire::frame` for the `[magic][version][kind][len][body][crc32]`
+//! envelope every message travels in). v3 differs from v2 in exactly one
+//! accounted byte sequence: the rANS branch carries an explicit u32
+//! length prefix, because a rANS stream cannot delimit itself inside a
+//! larger frame body. The tensor layout itself is unchanged from v2
+//! (64-bit-state interleaved rANS, strict truncation-detecting decode,
+//! no retained uncompressed codes).
 //!
 //! Compression runs on the fused engine (`quant::fused`): single-pass
 //! TS+stats, streaming adaptive bit search, scratch-reused rANS tables.
@@ -202,7 +209,7 @@ impl CompressedTensor {
 }
 
 /// Compressed KV caches for a contiguous layer range (cloud layers).
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct CompressedKv {
     /// One (k, v) pair per layer; each covers only the used rows [0, w).
     pub layers: Vec<(CompressedTensor, CompressedTensor)>,
@@ -309,7 +316,7 @@ impl CompressedKv {
 }
 
 /// What one edge→cloud transmission carries (paper Eq. 3).
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct SplitPayload {
     pub request_id: u64,
     /// Position of the last token in `hidden` (the token being decoded, or
@@ -339,7 +346,7 @@ impl SplitPayload {
 
 /// Cloud→edge reply: the sampled token, and in stateless mode the new KV
 /// rows of the cloud layers so the edge can keep the canonical state.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct CloudReply {
     pub request_id: u64,
     pub token: u32,
@@ -350,13 +357,18 @@ pub struct CloudReply {
 }
 
 impl CloudReply {
+    /// Bit-exact wire size of the reply body (`wire::codec` layout):
+    /// request id u64 + token u32 + entropy f32 + layer count u16 +
+    /// row length u32 = 22 fixed bytes, plus the raw f32 KV rows. The
+    /// frame's 8-byte server-compute timing prefix is transport metadata
+    /// and counted in `wire::REPLY_OVERHEAD`, not here.
     pub fn wire_bytes(&self) -> u64 {
         let rows: u64 = self
             .new_kv_rows
             .iter()
             .map(|(k, v)| 4 * (k.len() + v.len()) as u64)
             .sum();
-        12 + rows
+        22 + rows
     }
 }
 

@@ -11,10 +11,13 @@
 //!      hands back a compressed `SplitPayload`,
 //!   3. streams newly committed tokens to the caller's sink (which may
 //!      cancel a session mid-stream),
-//!   4. ships the iteration's payloads over each device's `LinkSim` and
-//!      serves them together on the shared cloud (`handle_batch`, which
-//!      STACKS the iteration's I_kv = 1 decode payloads into one batched
-//!      engine call — B sessions, one weight-matrix traversal),
+//!   4. ships the iteration's payloads over each device's wire as
+//!      **encoded frames** — the edge port charges the device's `LinkSim`
+//!      with the actual frame length, the cloud port strictly decodes the
+//!      bytes — and serves the decoded payloads together on the shared
+//!      cloud (`handle_batch`, which STACKS the iteration's I_kv = 1
+//!      decode payloads into one batched engine call — B sessions, one
+//!      weight-matrix traversal),
 //!   5. retires finished/cancelled sessions, returning their router slots
 //!      (`Router::complete` — capacity really is reclaimed under churn).
 //!
@@ -48,12 +51,36 @@ use super::router::{RouteDecision, Router};
 use super::session::{Session, SessionAction};
 use crate::channel::{LinkSim, TransferOutcome};
 use crate::planner::EarlyExitController;
+use crate::wire::{CloudPort, EdgePort, LinkTransport, WireTransport};
 
-/// One edge device and its wireless link; every session runs on exactly
-/// one endpoint (selected by the router at admission).
+/// One edge device and its wire; every session runs on exactly one
+/// endpoint (selected by the router at admission). The endpoint holds
+/// BOTH halves of its simulated wireless duplex — the serve loop is the
+/// single-process driver and pumps the cloud side into the shared server,
+/// so every payload still crosses the codec as real frame bytes.
 pub struct EdgeEndpoint {
     pub edge: EdgeDevice,
-    pub link: LinkSim,
+    /// Edge side (sim-charged with actual encoded frame lengths).
+    pub port: EdgePort,
+    /// Cloud side of the same wire (lossless loopback).
+    pub cloud_port: CloudPort,
+}
+
+impl EdgeEndpoint {
+    /// In-process endpoint over a simulated wireless duplex.
+    pub fn over_link(edge: EdgeDevice, link: LinkSim) -> EdgeEndpoint {
+        let (edge_half, cloud_half) = LinkTransport::duplex(link);
+        EdgeEndpoint {
+            edge,
+            port: EdgePort::new(WireTransport::Sim(edge_half)),
+            cloud_port: CloudPort::new(WireTransport::Loopback(cloud_half)),
+        }
+    }
+
+    /// The wireless link simulator behind this endpoint's wire.
+    pub fn link(&self) -> &LinkSim {
+        self.port.link().expect("serve-loop endpoints are sim-backed")
+    }
 }
 
 /// Verdict of the per-token streaming sink.
@@ -159,9 +186,14 @@ impl ServeLoop {
         mut on_token: impl FnMut(u64, u32) -> TokenControl,
     ) -> Result<ServeReport> {
         anyhow::ensure!(!self.edges.is_empty(), "serve loop needs at least one edge device");
+        // Reject non-finite arrivals up front: a NaN would poison the
+        // simulated clock, and before total_cmp the sort below panicked.
+        if let Some(bad) = requests.iter().find(|r| !r.arrival_s.is_finite()) {
+            anyhow::bail!("request {} has non-finite arrival time {}", bad.id, bad.arrival_s);
+        }
         let max_batch = self.params.max_batch.max(1);
         let mut pending = requests;
-        pending.sort_by(|a, b| a.arrival_s.partial_cmp(&b.arrival_s).unwrap());
+        pending.sort_by(|a, b| a.arrival_s.total_cmp(&b.arrival_s));
         let mut next = 0usize;
         let mut waiting: VecDeque<Request> = VecDeque::new();
         let mut active: Vec<ActiveSession> = Vec::new();
@@ -243,18 +275,24 @@ impl ServeLoop {
                 }
             }
 
-            // 6. deliver the iteration's batch: uplink per device, one
+            // 6. deliver the iteration's batch: per device, the payload
+            // is encoded + framed + charged on the uplink by the edge
+            // port and strictly decoded from bytes by the cloud port (the
+            // shared server computes on what the wire carried); then one
             // shared-server batch call (decode payloads stacked into a
-            // single batched engine step), downlink + reply per session.
+            // single batched engine step), framed reply + downlink charge
+            // per session.
             let mut meta: Vec<(usize, TransferOutcome)> = Vec::new();
             let mut payloads: Vec<SplitPayload> = Vec::new();
             for (i, payload) in outbox {
                 if active[i].session.is_terminal() {
                     continue; // cancelled between poll and delivery
                 }
-                let up = self.edges[active[i].device].link.transfer(payload.wire_bytes());
+                let ep = &mut self.edges[active[i].device];
+                let up = ep.port.send_payload(&payload)?;
+                let (decoded, _) = ep.cloud_port.recv_payload()?;
                 meta.push((i, up));
-                payloads.push(payload);
+                payloads.push(decoded);
             }
             let (served, compute) = self.cloud.handle_batch(&payloads)?;
             let b = payloads.len();
@@ -264,9 +302,10 @@ impl ServeLoop {
             for ((i, up), (reply, cloud_s)) in meta.into_iter().zip(served) {
                 let a = &mut active[i];
                 let edge_s = a.session.pending_edge_s().unwrap_or(0.0);
-                let EdgeEndpoint { edge, link } = &mut self.edges[a.device];
-                let down = link.transfer(reply.wire_bytes());
-                a.session.on_reply(edge, &reply, cloud_s, up, down);
+                let ep = &mut self.edges[a.device];
+                ep.cloud_port.send_reply(&reply, cloud_s)?;
+                let (reply, server_s, down) = ep.port.recv_reply()?;
+                a.session.on_reply(&ep.edge, &reply, server_s, up, down);
                 device_busy_s[a.device] += edge_s + up.latency_s + down.latency_s;
             }
             let edge_wire_max_s = device_busy_s.iter().fold(0.0f64, |m, &x| m.max(x));

@@ -6,19 +6,24 @@
 //!   plan      solve Eq. (8) for a memory budget
 //!   generate  serve one prompt through the split pipeline
 //!   serve     run a workload trace over N edge devices (e2e driver)
+//!   cloud     run the cloud half as a standalone frame server (socket)
+//!   edge      run the edge half against a remote cloud (socket)
 //!   sweep     τ x Q̄a payload sweep on a captured hidden block
 
 use std::rc::Rc;
+use std::time::Duration;
 
 use anyhow::Result;
 use splitserve::coordinator::{
-    build_pipeline, build_serve_loop, DeploymentSpec, Request, ServeSpec, TokenControl,
+    build_pipeline, build_serve_loop, DeploymentSpec, EdgeClient, Request, ServeSpec,
+    TokenControl,
 };
 use splitserve::model::ModelConfig;
 use splitserve::planner::{plan, AnalyticAccuracyModel, PlanInputs};
 use splitserve::runtime::Engine;
 use splitserve::trace::{generate_trace, WorkloadSpec};
 use splitserve::util::cli::Args;
+use splitserve::wire::{SocketTransport, WireListener};
 
 const USAGE: &str = "\
 splitserve — adaptive split computing for LLM inference
@@ -30,8 +35,34 @@ USAGE: splitserve <subcommand> [flags]
   plan      --model sim7b --budget-mb 16 --w-bar 128
   generate  --model sim7b --layers 8 --split 4 --prompt 5,6,7 --max-new 12
   serve     --model sim7b --layers 8 --devices 2 --requests 6 --max-batch 8
+  cloud     --listen 127.0.0.1:7433 --model sim7b --layers 8 --split 4 [--once]
+  edge      --connect 127.0.0.1:7433 --model sim7b --layers 8 --split 4 \\
+            --prompt 5,6,7 --max-new 12
+            (addresses may be unix:/path/to.sock for unix domain sockets;
+             both halves must be built with the same model/split flags)
   sweep     (see examples/compression_sweep for the richer version)
 ";
+
+fn prompt_from(args: &Args) -> Vec<u32> {
+    args.str_or("prompt", "5,6,7")
+        .split(',')
+        .map(|t| t.trim().parse().unwrap_or(1))
+        .collect()
+}
+
+/// Shared result printout of the one-request drivers (`generate`, `edge`).
+/// The `tokens:` line is the cross-process smoke test's comparison key.
+fn print_generation(res: &splitserve::coordinator::GenerationResult) {
+    println!("tokens: {:?}", res.tokens);
+    println!(
+        "prefill {:.1} ms | step {:.2} ms | up {} B | down {} B | dropped {}",
+        res.prefill.total_latency_s() * 1e3,
+        res.mean_step_latency_s() * 1e3,
+        res.total_uplink_bytes(),
+        res.total_downlink_bytes(),
+        res.tokens_dropped
+    );
+}
 
 fn model_from(args: &Args) -> Result<ModelConfig> {
     let name = args.str_or("model", "sim7b");
@@ -99,11 +130,7 @@ fn main() -> Result<()> {
         Some("generate") => {
             let cfg = model_from(&args)?;
             let split = args.usize_or("split", cfg.n_layers / 2);
-            let prompt: Vec<u32> = args
-                .str_or("prompt", "5,6,7")
-                .split(',')
-                .map(|t| t.trim().parse().unwrap_or(1))
-                .collect();
+            let prompt = prompt_from(&args);
             let max_new = args.usize_or("max-new", 12);
             let engine = Rc::new(Engine::load("artifacts", &cfg)?);
             let mut spec = DeploymentSpec::defaults(cfg, split);
@@ -112,15 +139,7 @@ fn main() -> Result<()> {
             }
             let mut pipe = build_pipeline(engine, &spec)?;
             let res = pipe.generate(&Request::new(1, prompt, max_new))?;
-            println!("tokens: {:?}", res.tokens);
-            println!(
-                "prefill {:.1} ms | step {:.2} ms | up {} B | down {} B | dropped {}",
-                res.prefill.total_latency_s() * 1e3,
-                res.mean_step_latency_s() * 1e3,
-                res.total_uplink_bytes(),
-                res.total_downlink_bytes(),
-                res.tokens_dropped
-            );
+            print_generation(&res);
         }
         Some("serve") => {
             let cfg = model_from(&args)?;
@@ -166,6 +185,53 @@ fn main() -> Result<()> {
                 report.server_busy_s,
                 serve.cloud.tokens_generated()
             );
+        }
+        Some("cloud") => {
+            let cfg = model_from(&args)?;
+            let split = args.usize_or("split", cfg.n_layers / 2);
+            let listen = args.str_or("listen", "127.0.0.1:7433");
+            let engine = Rc::new(Engine::load("artifacts", &cfg)?);
+            let spec = DeploymentSpec::defaults(cfg, split);
+            let cloud = spec.build_cloud_server(engine)?;
+            let listener = WireListener::bind(listen)?;
+            println!("cloud: serving split l={split} back segment on {listen}");
+            loop {
+                let mut conn = listener.accept()?;
+                let served = cloud.serve_connection(&mut conn);
+                if args.has("once") {
+                    // one connection, honest exit code (smoke tests check it)
+                    let n = served?;
+                    println!("cloud: served {n} payloads, exiting (--once)");
+                    break;
+                }
+                match served {
+                    Ok(n) => println!(
+                        "cloud: connection closed after {n} payloads ({} tokens served total)",
+                        cloud.tokens_generated()
+                    ),
+                    Err(e) => eprintln!("cloud: connection error: {e:#}"),
+                }
+            }
+        }
+        Some("edge") => {
+            let cfg = model_from(&args)?;
+            let split = args.usize_or("split", cfg.n_layers / 2);
+            let connect = args
+                .flag("connect")
+                .ok_or_else(|| anyhow::anyhow!("edge needs --connect <addr|unix:path>"))?;
+            let prompt = prompt_from(&args);
+            let max_new = args.usize_or("max-new", 12);
+            let engine = Rc::new(Engine::load("artifacts", &cfg)?);
+            let mut spec = DeploymentSpec::defaults(cfg, split);
+            if let Some(d) = args.flag("deadline-ms") {
+                spec.deadline_s = Some(d.parse::<f64>()? / 1e3);
+            }
+            let edge = spec.build_edge_device(engine)?;
+            let transport = SocketTransport::connect_retry(connect, Duration::from_secs(10))?;
+            let mut client = EdgeClient::new(edge, transport);
+            client.controller = spec.edge_controller();
+            let res = client.generate(&Request::new(1, prompt, max_new))?;
+            print_generation(&res);
         }
         Some("sweep") => {
             println!("see `cargo run --release --example compression_sweep` for the full sweep");

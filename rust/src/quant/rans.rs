@@ -340,19 +340,25 @@ impl CodedStream {
         if normalize_freqs(&scratch.hist, &mut scratch.freqs).is_err() {
             return raw(); // > M distinct symbols: un-normalizable
         }
-        // wire cost: Raw = tag + (bits,n) header + packed; Rans = tag + stream
+        // wire cost: Raw = tag + (bits,n) header + packed; Rans = tag +
+        // length prefix + stream (the byte codec writes an explicit u32
+        // length before the rANS stream — it is not self-delimiting
+        // inside a larger frame body; see `wire::codec`)
         let raw_wire = 1 + 8 + crate::util::bits_to_bytes(n as u64 * bits as u64);
-        let rans_wire = 1 + estimated_rans_bytes(&scratch.hist, &scratch.freqs);
+        let rans_wire = 1 + 4 + estimated_rans_bytes(&scratch.hist, &scratch.freqs);
         if rans_wire >= raw_wire {
             return raw();
         }
         CodedStream::Rans(write_stream(scratch, codes, alphabet))
     }
 
+    /// Bit-exact wire size: tag byte + representation header + stream.
+    /// The rANS branch counts the u32 length prefix the byte codec writes
+    /// (the stream cannot delimit itself inside a frame body).
     pub fn wire_bytes(&self) -> u64 {
         1 + match self {
             CodedStream::Raw { bytes, .. } => 8 + bytes.len() as u64,
-            CodedStream::Rans(b) => b.len() as u64,
+            CodedStream::Rans(b) => 4 + b.len() as u64,
         }
     }
 

@@ -33,8 +33,14 @@ impl Default for WorkloadSpec {
     }
 }
 
-/// Generate a request trace (sorted by arrival time).
+/// Generate a request trace (sorted by arrival time). Arrival times are
+/// guaranteed finite — the serve loop rejects anything else.
 pub fn generate_trace(spec: &WorkloadSpec) -> Vec<Request> {
+    assert!(
+        spec.arrival_rate.is_finite() && spec.arrival_rate > 0.0,
+        "arrival_rate must be a positive finite rate (got {})",
+        spec.arrival_rate
+    );
     let mut rng = Rng::new(spec.seed ^ 0x77ACE);
     let cdf = zipf_cdf(spec.vocab - 1, 1.1);
     let mut t = 0.0f64;
@@ -45,6 +51,7 @@ pub fn generate_trace(spec: &WorkloadSpec) -> Vec<Request> {
             let olen = rng.range(spec.output_len_min as i64, spec.output_len_max as i64) as usize;
             let prompt: Vec<u32> = (0..plen).map(|_| rng.zipf(&cdf) as u32 + 1).collect();
             let mut r = Request::new(i as u64, prompt, olen);
+            debug_assert!(t.is_finite(), "trace produced a non-finite arrival");
             r.arrival_s = t;
             r
         })

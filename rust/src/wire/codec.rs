@@ -1,0 +1,406 @@
+//! Byte codec for the edge↔cloud protocol structs — the single
+//! implementation of the layout documented in `coordinator::protocol`.
+//!
+//! Every encoder is paired with a strict decoder, and the load-bearing
+//! invariant is enforced at every encode (debug builds) and in the test
+//! suite: **the encoded body length equals the struct's `wire_bytes()`**,
+//! so the byte accounting the paper's figures rest on is an assertion,
+//! not an estimate. The full frame adds [`PAYLOAD_OVERHEAD`] /
+//! [`REPLY_OVERHEAD`] fixed bytes on top.
+//!
+//! # Body layouts (wire format v3, little-endian throughout)
+//!
+//! `CompressedTensor`:
+//! ```text
+//! [rows u16][cols u16][bits u8][flags u8]          6-byte header
+//! [scale f32, zero f32] x rows                     per-token params
+//! [sign bitset: ceil(rows*cols/8) bytes]           1 bit/element
+//! [tag u8]                                         0 = raw, 1 = rANS
+//!   tag 0: [bits u32][n u32][packed codes]         8-byte raw header
+//!   tag 1: [len u32][rANS stream]                  explicit length: the
+//!                                                  stream is not
+//!                                                  self-delimiting
+//! [CSR: rows u16, cols u16, row_ptr u32 x (rows+1),
+//!  (col_idx u16, value f32) x nnz]                 lossless T_above
+//! ```
+//!
+//! `CompressedKv`: `[n_layers u16][used_rows u16]` + (k, v) tensor pairs.
+//!
+//! `SplitPayload`: `[request_id u64][pos u64][flags u8]` (17 bytes; flags
+//! bit0 = prefill, bit1 = KV present, bit2 = top-k sampling), then for
+//! top-k `[k u16][temperature f32][seed u64]` (14 bytes), then the hidden
+//! tensor, then the KV block when present.
+//!
+//! `CloudReply` (the frame body is prefixed by `[server_s f64]`, the
+//! server's measured compute seconds — transport metadata outside
+//! `wire_bytes()`): `[request_id u64][token u32][entropy f32]
+//! [n_layers u16][row_len u32]` + per layer `row_len` f32 k-row then
+//! `row_len` f32 v-row.
+
+use crate::coordinator::protocol::{CloudReply, CompressedKv, CompressedTensor, SplitPayload};
+use crate::coordinator::sampling::SamplingSpec;
+use crate::quant::rans::CodedStream;
+use crate::quant::ts::SparseOutliers;
+use crate::util::bits_to_bytes;
+
+use super::frame::{self, FrameKind, WireError, FRAME_OVERHEAD};
+
+/// Fixed bytes a payload frame adds on top of `SplitPayload::wire_bytes()`.
+pub const PAYLOAD_OVERHEAD: u64 = FRAME_OVERHEAD;
+/// Fixed bytes a reply frame adds on top of `CloudReply::wire_bytes()`
+/// (frame + the 8-byte server-compute-seconds timing prefix).
+pub const REPLY_OVERHEAD: u64 = FRAME_OVERHEAD + 8;
+
+const FLAG_PREFILL: u8 = 1;
+const FLAG_KV: u8 = 1 << 1;
+const FLAG_TOPK: u8 = 1 << 2;
+
+fn malformed(m: impl Into<String>) -> WireError {
+    WireError::Malformed(m.into())
+}
+
+/// Bounds-checked little-endian cursor over a frame body.
+struct Reader<'a> {
+    buf: &'a [u8],
+    at: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn new(buf: &'a [u8]) -> Reader<'a> {
+        Reader { buf, at: 0 }
+    }
+
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.at
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
+        if n > self.remaining() {
+            return Err(WireError::Truncated { need: self.at + n, have: self.buf.len() });
+        }
+        let s = &self.buf[self.at..self.at + n];
+        self.at += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, WireError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16, WireError> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> Result<u32, WireError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, WireError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f32(&mut self) -> Result<f32, WireError> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64, WireError> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    /// Strict-consumption check: a well-formed body leaves nothing behind.
+    fn done(&self) -> Result<(), WireError> {
+        if self.remaining() != 0 {
+            return Err(malformed(format!("{} unread trailing bytes", self.remaining())));
+        }
+        Ok(())
+    }
+}
+
+fn write_tensor(out: &mut Vec<u8>, t: &CompressedTensor) {
+    // Release-mode asserts: a value the header cannot represent must fail
+    // loudly HERE, not wrap into a CRC-valid frame that misdecodes at the
+    // peer. All are impossible by construction (rows <= max_seq, cols =
+    // model widths < 65536 — ts.rs asserts the latter at compression).
+    assert!(t.rows <= u16::MAX as usize && t.cols <= u16::MAX as usize);
+    assert!(t.chosen_bits <= u8::MAX as u32);
+    debug_assert_eq!(t.signs.len() as u64, bits_to_bytes((t.rows * t.cols) as u64));
+    out.extend_from_slice(&(t.rows as u16).to_le_bytes());
+    out.extend_from_slice(&(t.cols as u16).to_le_bytes());
+    out.push(t.chosen_bits as u8);
+    out.push(0u8); // flags: reserved
+    for (s, z) in t.scales.iter().zip(&t.zeros) {
+        out.extend_from_slice(&s.to_le_bytes());
+        out.extend_from_slice(&z.to_le_bytes());
+    }
+    out.extend_from_slice(&t.signs);
+    match &t.coded {
+        CodedStream::Raw { bits, n, bytes } => {
+            out.push(0u8);
+            out.extend_from_slice(&bits.to_le_bytes());
+            out.extend_from_slice(&(*n as u32).to_le_bytes());
+            out.extend_from_slice(bytes);
+        }
+        CodedStream::Rans(b) => {
+            out.push(1u8);
+            out.extend_from_slice(&(b.len() as u32).to_le_bytes());
+            out.extend_from_slice(b);
+        }
+    }
+    let a = &t.above;
+    debug_assert_eq!((a.rows, a.cols), (t.rows, t.cols));
+    out.extend_from_slice(&(a.rows as u16).to_le_bytes());
+    out.extend_from_slice(&(a.cols as u16).to_le_bytes());
+    for &p in &a.row_ptr {
+        out.extend_from_slice(&p.to_le_bytes());
+    }
+    for (c, v) in a.col_idx.iter().zip(&a.values) {
+        out.extend_from_slice(&c.to_le_bytes());
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+fn read_tensor(r: &mut Reader) -> Result<CompressedTensor, WireError> {
+    let rows = r.u16()? as usize;
+    let cols = r.u16()? as usize;
+    let chosen_bits = r.u8()? as u32;
+    let _flags = r.u8()?;
+    let mut scales = Vec::with_capacity(rows);
+    let mut zeros = Vec::with_capacity(rows);
+    for _ in 0..rows {
+        scales.push(r.f32()?);
+        zeros.push(r.f32()?);
+    }
+    let n = rows * cols;
+    let signs = r.take(bits_to_bytes(n as u64) as usize)?.to_vec();
+    let coded = match r.u8()? {
+        0 => {
+            let bits = r.u32()?;
+            if bits > 16 {
+                return Err(malformed(format!("raw code width {bits} exceeds u16 codes")));
+            }
+            let cn = r.u32()? as usize;
+            let packed = r.take(bits_to_bytes(cn as u64 * bits as u64) as usize)?;
+            CodedStream::Raw { bits, n: cn, bytes: packed.to_vec() }
+        }
+        1 => {
+            let len = r.u32()? as usize;
+            CodedStream::Rans(r.take(len)?.to_vec())
+        }
+        tag => return Err(malformed(format!("unknown coded-stream tag {tag}"))),
+    };
+    // CSR outliers
+    let a_rows = r.u16()? as usize;
+    let a_cols = r.u16()? as usize;
+    if (a_rows, a_cols) != (rows, cols) {
+        return Err(malformed(format!(
+            "outlier block is {a_rows}x{a_cols}, tensor is {rows}x{cols}"
+        )));
+    }
+    let mut row_ptr = Vec::with_capacity(rows + 1);
+    for _ in 0..=rows {
+        row_ptr.push(r.u32()?);
+    }
+    if row_ptr[0] != 0 || row_ptr.windows(2).any(|w| w[0] > w[1]) {
+        return Err(malformed("CSR row_ptr not monotone from 0"));
+    }
+    let nnz = *row_ptr.last().unwrap() as usize;
+    if r.remaining() < nnz * 6 {
+        return Err(WireError::Truncated { need: r.at + nnz * 6, have: r.buf.len() });
+    }
+    let mut col_idx = Vec::with_capacity(nnz);
+    let mut values = Vec::with_capacity(nnz);
+    for _ in 0..nnz {
+        let c = r.u16()?;
+        if c as usize >= cols {
+            return Err(malformed(format!("outlier column {c} out of range (cols {cols})")));
+        }
+        col_idx.push(c);
+        values.push(r.f32()?);
+    }
+    Ok(CompressedTensor {
+        rows,
+        cols,
+        above: SparseOutliers { rows, cols, row_ptr, col_idx, values },
+        scales,
+        zeros,
+        signs,
+        coded,
+        chosen_bits,
+    })
+}
+
+fn write_kv(out: &mut Vec<u8>, kv: &CompressedKv) {
+    assert!(kv.layers.len() <= u16::MAX as usize, "layer count overflows the wire header");
+    assert!(kv.used_rows <= u16::MAX as usize, "used_rows overflows the wire header");
+    out.extend_from_slice(&(kv.layers.len() as u16).to_le_bytes());
+    out.extend_from_slice(&(kv.used_rows as u16).to_le_bytes());
+    for (k, v) in &kv.layers {
+        write_tensor(out, k);
+        write_tensor(out, v);
+    }
+}
+
+fn read_kv(r: &mut Reader) -> Result<CompressedKv, WireError> {
+    let n_layers = r.u16()? as usize;
+    let used_rows = r.u16()? as usize;
+    let mut layers = Vec::with_capacity(n_layers);
+    for _ in 0..n_layers {
+        let k = read_tensor(r)?;
+        let v = read_tensor(r)?;
+        layers.push((k, v));
+    }
+    Ok(CompressedKv { layers, used_rows })
+}
+
+fn write_payload(out: &mut Vec<u8>, p: &SplitPayload) {
+    out.extend_from_slice(&p.request_id.to_le_bytes());
+    out.extend_from_slice(&(p.pos as u64).to_le_bytes());
+    let mut flags = 0u8;
+    if p.is_prefill {
+        flags |= FLAG_PREFILL;
+    }
+    if p.kv.is_some() {
+        flags |= FLAG_KV;
+    }
+    if matches!(p.sampling, SamplingSpec::TopK { .. }) {
+        flags |= FLAG_TOPK;
+    }
+    out.push(flags);
+    if let SamplingSpec::TopK { k, temperature, seed } = p.sampling {
+        assert!(k <= u16::MAX as usize, "top-k shortlist exceeds the wire's u16");
+        out.extend_from_slice(&(k as u16).to_le_bytes());
+        out.extend_from_slice(&temperature.to_le_bytes());
+        out.extend_from_slice(&seed.to_le_bytes());
+    }
+    write_tensor(out, &p.hidden);
+    if let Some(kv) = &p.kv {
+        write_kv(out, kv);
+    }
+}
+
+fn read_payload(r: &mut Reader) -> Result<SplitPayload, WireError> {
+    let request_id = r.u64()?;
+    let pos = r.u64()? as usize;
+    let flags = r.u8()?;
+    if flags & !(FLAG_PREFILL | FLAG_KV | FLAG_TOPK) != 0 {
+        return Err(malformed(format!("unknown payload flags {flags:#04x}")));
+    }
+    let sampling = if flags & FLAG_TOPK != 0 {
+        let k = r.u16()? as usize;
+        let temperature = r.f32()?;
+        let seed = r.u64()?;
+        SamplingSpec::TopK { k, temperature, seed }
+    } else {
+        SamplingSpec::Greedy
+    };
+    let hidden = read_tensor(r)?;
+    let kv = if flags & FLAG_KV != 0 { Some(read_kv(r)?) } else { None };
+    Ok(SplitPayload {
+        request_id,
+        pos,
+        hidden,
+        kv,
+        is_prefill: flags & FLAG_PREFILL != 0,
+        sampling,
+    })
+}
+
+fn write_reply(out: &mut Vec<u8>, reply: &CloudReply, server_s: f64) {
+    out.extend_from_slice(&server_s.to_le_bytes());
+    out.extend_from_slice(&reply.request_id.to_le_bytes());
+    out.extend_from_slice(&reply.token.to_le_bytes());
+    out.extend_from_slice(&reply.logits_entropy.to_le_bytes());
+    assert!(reply.new_kv_rows.len() <= u16::MAX as usize, "reply layer count overflows u16");
+    out.extend_from_slice(&(reply.new_kv_rows.len() as u16).to_le_bytes());
+    let row_len = reply.new_kv_rows.first().map_or(0, |(k, _)| k.len());
+    out.extend_from_slice(&(row_len as u32).to_le_bytes());
+    for (k, v) in &reply.new_kv_rows {
+        debug_assert!(k.len() == row_len && v.len() == row_len, "ragged KV reply rows");
+        for &x in k {
+            out.extend_from_slice(&x.to_le_bytes());
+        }
+        for &x in v {
+            out.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+}
+
+fn read_reply(r: &mut Reader) -> Result<(CloudReply, f64), WireError> {
+    let server_s = r.f64()?;
+    let request_id = r.u64()?;
+    let token = r.u32()?;
+    let logits_entropy = r.f32()?;
+    let n_layers = r.u16()? as usize;
+    let row_len = r.u32()? as usize;
+    let rows_bytes = n_layers.saturating_mul(row_len).saturating_mul(8);
+    if r.remaining() < rows_bytes {
+        return Err(WireError::Truncated {
+            need: r.at.saturating_add(rows_bytes),
+            have: r.buf.len(),
+        });
+    }
+    let mut new_kv_rows = Vec::with_capacity(n_layers);
+    for _ in 0..n_layers {
+        let mut k = Vec::with_capacity(row_len);
+        for _ in 0..row_len {
+            k.push(r.f32()?);
+        }
+        let mut v = Vec::with_capacity(row_len);
+        for _ in 0..row_len {
+            v.push(r.f32()?);
+        }
+        new_kv_rows.push((k, v));
+    }
+    Ok((CloudReply { request_id, token, new_kv_rows, logits_entropy }, server_s))
+}
+
+/// Encode one payload as a complete frame. The body length is asserted
+/// equal to `wire_bytes()` — the accounting IS the encoding.
+pub fn encode_payload_frame(p: &SplitPayload) -> Vec<u8> {
+    let mut body = Vec::with_capacity(p.wire_bytes() as usize);
+    write_payload(&mut body, p);
+    debug_assert_eq!(
+        body.len() as u64,
+        p.wire_bytes(),
+        "payload body must encode to exactly wire_bytes()"
+    );
+    frame::encode_frame(FrameKind::Payload, &body)
+}
+
+/// Strict decode of a payload frame (kind, CRC, structure, consumption).
+pub fn decode_payload_frame(bytes: &[u8]) -> Result<SplitPayload, WireError> {
+    let (kind, body) = frame::decode_frame(bytes)?;
+    if kind != FrameKind::Payload {
+        return Err(WireError::WrongKind { want: FrameKind::Payload, got: kind });
+    }
+    let mut r = Reader::new(body);
+    let p = read_payload(&mut r)?;
+    r.done()?;
+    Ok(p)
+}
+
+/// Encode one reply (plus the server's measured compute seconds) as a
+/// complete frame. Body length = `wire_bytes()` + 8 (the timing prefix).
+pub fn encode_reply_frame(reply: &CloudReply, server_s: f64) -> Vec<u8> {
+    let mut body = Vec::with_capacity(reply.wire_bytes() as usize + 8);
+    write_reply(&mut body, reply, server_s);
+    debug_assert_eq!(
+        body.len() as u64,
+        reply.wire_bytes() + 8,
+        "reply body must encode to exactly wire_bytes() + timing prefix"
+    );
+    frame::encode_frame(FrameKind::Reply, &body)
+}
+
+/// Strict decode of a reply frame; returns the reply and the server's
+/// compute seconds from the timing prefix.
+pub fn decode_reply_frame(bytes: &[u8]) -> Result<(CloudReply, f64), WireError> {
+    let (kind, body) = frame::decode_frame(bytes)?;
+    if kind != FrameKind::Reply {
+        return Err(WireError::WrongKind { want: FrameKind::Reply, got: kind });
+    }
+    let mut r = Reader::new(body);
+    let out = read_reply(&mut r)?;
+    r.done()?;
+    Ok(out)
+}

@@ -1,0 +1,27 @@
+//! The real wire: versioned byte frames, a strict codec for the
+//! edge↔cloud protocol structs, and pluggable frame transports.
+//!
+//! Before this module existed, `SplitPayload`/`CloudReply` crossed the
+//! edge↔cloud boundary as in-memory structs and the link simulator was
+//! charged with a *computed* `wire_bytes()` size. Now every transmission
+//! is encoded to bytes ([`codec`]), wrapped in a CRC-protected versioned
+//! frame ([`frame`]), moved by a [`Transport`] (simulated link, in-memory
+//! loopback, or a real TCP/unix socket), and strictly decoded on the
+//! other side — the bit-exact accounting is an **assertion**
+//! (`encoded == wire_bytes()` at every encode in debug builds and in the
+//! test suite), and the same deployment runs single-process or as real
+//! `splitserve cloud` / `splitserve edge` processes over a socket.
+
+pub mod codec;
+pub mod frame;
+pub mod transport;
+
+pub use codec::{
+    decode_payload_frame, decode_reply_frame, encode_payload_frame, encode_reply_frame,
+    PAYLOAD_OVERHEAD, REPLY_OVERHEAD,
+};
+pub use frame::{crc32, decode_frame, encode_frame, FrameKind, WireError, FRAME_OVERHEAD};
+pub use transport::{
+    CloudPort, EdgePort, LinkTransport, Loopback, SocketTransport, Transport, WireListener,
+    WireTransport,
+};

@@ -1,0 +1,485 @@
+//! Frame movers: the [`Transport`] trait and its three implementations —
+//! the seeded wireless link simulator (charged with **actual encoded
+//! frame lengths**), a lossless in-memory loopback, and a real TCP / unix
+//! domain socket transport — plus the typed [`EdgePort`] / [`CloudPort`]
+//! endpoints every driver (blocking pipeline, serve loop, cross-process
+//! edge client) goes through. This is the single home of the
+//! uplink/downlink transfer-charging logic that used to be duplicated
+//! between `coordinator::pipeline` and `coordinator::serve_loop`.
+
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::channel::{LinkSim, TransferOutcome};
+use crate::coordinator::protocol::{CloudReply, SplitPayload};
+
+use super::codec;
+use super::frame::{self, WireError, HEADER_BYTES};
+
+/// Moves whole frames between the edge and cloud halves of a deployment.
+/// Sans-IO-friendly: implementations either simulate the link (charging
+/// latency per byte actually framed), shuttle buffers in memory, or do
+/// real socket IO — the drivers cannot tell the difference.
+pub trait Transport {
+    /// Deliver one encoded frame to the peer; returns the transfer
+    /// accounting (simulated link events, or measured wall time).
+    fn send(&mut self, frame: &[u8]) -> Result<TransferOutcome>;
+
+    /// Next frame from the peer, with its transfer accounting. Errors on
+    /// timeout, truncation mid-frame, or a closed peer.
+    fn recv(&mut self) -> Result<(Vec<u8>, TransferOutcome)>;
+
+    /// Like [`recv`](Transport::recv), but a clean peer shutdown at a
+    /// frame boundary yields `Ok(None)` (the cloud serve loop's exit).
+    fn recv_eof(&mut self) -> Result<Option<(Vec<u8>, TransferOutcome)>> {
+        self.recv().map(Some)
+    }
+}
+
+fn lossless(bytes: u64) -> TransferOutcome {
+    TransferOutcome { latency_s: 0.0, attempts: 1, outage: false, payload_bytes: bytes }
+}
+
+/// Lossless, zero-latency in-memory transport half. [`Loopback::pair`]
+/// yields two connected halves; frames sent on one side arrive on the
+/// other in order. Channel-backed, so the two halves may live on
+/// different threads.
+pub struct Loopback {
+    tx: Sender<Vec<u8>>,
+    rx: Receiver<Vec<u8>>,
+    /// recv deadline — a protocol bug fails loudly instead of hanging.
+    pub timeout: Duration,
+}
+
+impl Loopback {
+    pub fn pair() -> (Loopback, Loopback) {
+        let (atx, brx) = channel();
+        let (btx, arx) = channel();
+        let timeout = Duration::from_secs(30);
+        (Loopback { tx: atx, rx: arx, timeout }, Loopback { tx: btx, rx: brx, timeout })
+    }
+}
+
+impl Transport for Loopback {
+    fn send(&mut self, frame: &[u8]) -> Result<TransferOutcome> {
+        self.tx
+            .send(frame.to_vec())
+            .map_err(|_| anyhow::anyhow!("loopback: peer closed"))?;
+        Ok(lossless(frame.len() as u64))
+    }
+
+    fn recv(&mut self) -> Result<(Vec<u8>, TransferOutcome)> {
+        self.recv_eof()?.ok_or_else(|| anyhow::anyhow!("loopback: peer closed"))
+    }
+
+    fn recv_eof(&mut self) -> Result<Option<(Vec<u8>, TransferOutcome)>> {
+        match self.rx.recv_timeout(self.timeout) {
+            Ok(f) => {
+                let o = lossless(f.len() as u64);
+                Ok(Some((f, o)))
+            }
+            Err(RecvTimeoutError::Disconnected) => Ok(None),
+            Err(RecvTimeoutError::Timeout) => {
+                anyhow::bail!("loopback: no frame within {:?} (protocol stall)", self.timeout)
+            }
+        }
+    }
+}
+
+/// The edge half of a simulated wireless duplex: a lossless loopback
+/// whose transfers are charged through a seeded [`LinkSim`] with the
+/// **actual encoded frame length** in each direction. One `LinkSim`
+/// serves both directions (exactly as the drivers always charged it);
+/// the cloud half is a plain free loopback so nothing is double-charged.
+pub struct LinkTransport {
+    pub link: LinkSim,
+    io: Loopback,
+}
+
+impl LinkTransport {
+    /// Build the duplex: (edge half, cloud half).
+    pub fn duplex(link: LinkSim) -> (LinkTransport, Loopback) {
+        let (edge_io, cloud_io) = Loopback::pair();
+        (LinkTransport { link, io: edge_io }, cloud_io)
+    }
+}
+
+impl Transport for LinkTransport {
+    fn send(&mut self, frame: &[u8]) -> Result<TransferOutcome> {
+        let out = self.link.transfer(frame.len() as u64);
+        self.io.send(frame)?;
+        Ok(out)
+    }
+
+    fn recv(&mut self) -> Result<(Vec<u8>, TransferOutcome)> {
+        let (f, _) = self.io.recv()?;
+        let out = self.link.transfer(f.len() as u64);
+        Ok((f, out))
+    }
+}
+
+enum SocketStream {
+    Tcp(TcpStream),
+    Unix(UnixStream),
+}
+
+impl Read for SocketStream {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        match self {
+            SocketStream::Tcp(s) => s.read(buf),
+            SocketStream::Unix(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for SocketStream {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        match self {
+            SocketStream::Tcp(s) => s.write(buf),
+            SocketStream::Unix(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        match self {
+            SocketStream::Tcp(s) => s.flush(),
+            SocketStream::Unix(s) => s.flush(),
+        }
+    }
+}
+
+/// Real byte transport over TCP (`host:port`) or a unix domain socket
+/// (`unix:/path/to.sock`). Outcomes report measured wall time; frames are
+/// length-delimited by their own header, so one `recv` reads exactly one
+/// frame.
+///
+/// Attribution caveat: `send` measures only the local buffered write
+/// (near-zero once the kernel accepts the frame), so over a real socket
+/// most of a round trip's transit time is observed by the blocking
+/// `recv` — per-step uplink/downlink SPLITS are approximate
+/// cross-process (the totals are right; `EdgeClient` additionally
+/// subtracts the server's self-reported compute time from the recv
+/// wall time). A byte-accurate split would need application-level acks.
+pub struct SocketTransport {
+    stream: SocketStream,
+}
+
+impl SocketTransport {
+    /// Connect once. `unix:`-prefixed addresses use a unix domain socket,
+    /// anything else is `host:port` TCP.
+    pub fn connect(addr: &str) -> Result<SocketTransport> {
+        let stream = if let Some(path) = addr.strip_prefix("unix:") {
+            SocketStream::Unix(UnixStream::connect(path)?)
+        } else {
+            let s = TcpStream::connect(addr)?;
+            let _ = s.set_nodelay(true);
+            SocketStream::Tcp(s)
+        };
+        Ok(SocketTransport { stream })
+    }
+
+    /// Connect with retries. Only errors that mean "the peer is still
+    /// binding" are retried (connection refused; unix socket file not
+    /// created yet); a bad address or missing directory fails instantly
+    /// instead of burning the whole budget on a typo.
+    pub fn connect_retry(addr: &str, budget: Duration) -> Result<SocketTransport> {
+        use std::io::ErrorKind;
+        let t0 = Instant::now();
+        loop {
+            match Self::connect(addr) {
+                Ok(t) => return Ok(t),
+                Err(e) => {
+                    let transient = e
+                        .downcast_ref::<std::io::Error>()
+                        .is_some_and(|io| {
+                            matches!(io.kind(), ErrorKind::ConnectionRefused | ErrorKind::NotFound)
+                        });
+                    if !transient || t0.elapsed() >= budget {
+                        return Err(
+                            e.context(format!("connecting to {addr} (waited {:?})", t0.elapsed()))
+                        );
+                    }
+                    std::thread::sleep(Duration::from_millis(50));
+                }
+            }
+        }
+    }
+}
+
+impl Transport for SocketTransport {
+    fn send(&mut self, frame: &[u8]) -> Result<TransferOutcome> {
+        let t0 = Instant::now();
+        self.stream.write_all(frame)?;
+        self.stream.flush()?;
+        Ok(TransferOutcome {
+            latency_s: t0.elapsed().as_secs_f64(),
+            attempts: 1,
+            outage: false,
+            payload_bytes: frame.len() as u64,
+        })
+    }
+
+    fn recv(&mut self) -> Result<(Vec<u8>, TransferOutcome)> {
+        self.recv_eof()?
+            .ok_or_else(|| anyhow::anyhow!("socket: connection closed by peer"))
+    }
+
+    fn recv_eof(&mut self) -> Result<Option<(Vec<u8>, TransferOutcome)>> {
+        let t0 = Instant::now();
+        let mut header = [0u8; HEADER_BYTES];
+        let mut got = 0usize;
+        while got < header.len() {
+            let n = self.stream.read(&mut header[got..])?;
+            if n == 0 {
+                if got == 0 {
+                    return Ok(None); // clean close at a frame boundary
+                }
+                anyhow::bail!(WireError::Truncated { need: HEADER_BYTES, have: got });
+            }
+            got += n;
+        }
+        // Validate the preamble before trusting its length field.
+        let (_kind, body_len) = frame::peek_header(&header)?;
+        let mut frame_bytes = vec![0u8; HEADER_BYTES + body_len + 4];
+        frame_bytes[..HEADER_BYTES].copy_from_slice(&header);
+        self.stream.read_exact(&mut frame_bytes[HEADER_BYTES..])?;
+        let out = TransferOutcome {
+            latency_s: t0.elapsed().as_secs_f64(),
+            attempts: 1,
+            outage: false,
+            payload_bytes: frame_bytes.len() as u64,
+        };
+        Ok(Some((frame_bytes, out)))
+    }
+}
+
+/// Frame-listener counterpart of [`SocketTransport::connect`].
+pub enum WireListener {
+    Tcp(TcpListener),
+    Unix(UnixListener),
+}
+
+impl WireListener {
+    pub fn bind(addr: &str) -> Result<WireListener> {
+        if let Some(path) = addr.strip_prefix("unix:") {
+            Self::clear_stale_socket(path)?;
+            Ok(WireListener::Unix(UnixListener::bind(path)?))
+        } else {
+            Ok(WireListener::Tcp(TcpListener::bind(addr)?))
+        }
+    }
+
+    /// Remove a leftover socket file from a dead server — and ONLY that.
+    /// A non-socket file at the path is refused (never deleted), and a
+    /// socket another server is still accepting on is reported as
+    /// address-in-use instead of being yanked out from under it.
+    fn clear_stale_socket(path: &str) -> Result<()> {
+        use std::os::unix::fs::FileTypeExt;
+        match std::fs::metadata(path) {
+            Err(_) => Ok(()), // nothing there: bind will create it
+            Ok(meta) if !meta.file_type().is_socket() => {
+                anyhow::bail!("refusing to bind over non-socket file {path}")
+            }
+            Ok(_) => {
+                if UnixStream::connect(path).is_ok() {
+                    anyhow::bail!("socket {path} is in use by a live server");
+                }
+                std::fs::remove_file(path)?; // stale: no one is accepting
+                Ok(())
+            }
+        }
+    }
+
+    /// Block for one connection.
+    pub fn accept(&self) -> Result<SocketTransport> {
+        let stream = match self {
+            WireListener::Tcp(l) => {
+                let (s, _) = l.accept()?;
+                let _ = s.set_nodelay(true);
+                SocketStream::Tcp(s)
+            }
+            WireListener::Unix(l) => {
+                let (s, _) = l.accept()?;
+                SocketStream::Unix(s)
+            }
+        };
+        Ok(SocketTransport { stream })
+    }
+}
+
+/// Concrete transport storage for endpoints (enum dispatch keeps the
+/// `LinkSim` reachable for stats without downcasting).
+pub enum WireTransport {
+    /// Simulated wireless duplex (edge half).
+    Sim(LinkTransport),
+    /// Lossless in-memory loopback half.
+    Loopback(Loopback),
+    /// Real socket.
+    Socket(SocketTransport),
+}
+
+impl WireTransport {
+    /// The link simulator behind this transport, when it is sim-backed.
+    pub fn link(&self) -> Option<&LinkSim> {
+        match self {
+            WireTransport::Sim(t) => Some(&t.link),
+            _ => None,
+        }
+    }
+}
+
+impl Transport for WireTransport {
+    fn send(&mut self, frame: &[u8]) -> Result<TransferOutcome> {
+        match self {
+            WireTransport::Sim(t) => t.send(frame),
+            WireTransport::Loopback(t) => t.send(frame),
+            WireTransport::Socket(t) => t.send(frame),
+        }
+    }
+
+    fn recv(&mut self) -> Result<(Vec<u8>, TransferOutcome)> {
+        match self {
+            WireTransport::Sim(t) => t.recv(),
+            WireTransport::Loopback(t) => t.recv(),
+            WireTransport::Socket(t) => t.recv(),
+        }
+    }
+
+    fn recv_eof(&mut self) -> Result<Option<(Vec<u8>, TransferOutcome)>> {
+        match self {
+            WireTransport::Sim(t) => t.recv_eof(),
+            WireTransport::Loopback(t) => t.recv_eof(),
+            WireTransport::Socket(t) => t.recv_eof(),
+        }
+    }
+}
+
+/// Edge side of the wire: typed payload-out / reply-in over any
+/// transport. Every driver's uplink/downlink charging goes through here.
+pub struct EdgePort {
+    pub transport: WireTransport,
+}
+
+impl EdgePort {
+    pub fn new(transport: WireTransport) -> EdgePort {
+        EdgePort { transport }
+    }
+
+    pub fn link(&self) -> Option<&LinkSim> {
+        self.transport.link()
+    }
+
+    /// Encode, frame and transmit one payload; the returned outcome is
+    /// charged with the actual encoded frame length.
+    pub fn send_payload(&mut self, p: &SplitPayload) -> Result<TransferOutcome> {
+        let frame_bytes = codec::encode_payload_frame(p);
+        self.transport.send(&frame_bytes)
+    }
+
+    /// Receive and strictly decode the next reply frame. Returns the
+    /// reply, the server's compute seconds (from the frame's timing
+    /// prefix), and the downlink outcome.
+    pub fn recv_reply(&mut self) -> Result<(CloudReply, f64, TransferOutcome)> {
+        let (frame_bytes, down) = self.transport.recv()?;
+        let (reply, server_s) = codec::decode_reply_frame(&frame_bytes)?;
+        Ok((reply, server_s, down))
+    }
+}
+
+/// Cloud side of the wire: typed payload-in / reply-out.
+pub struct CloudPort {
+    pub transport: WireTransport,
+}
+
+impl CloudPort {
+    pub fn new(transport: WireTransport) -> CloudPort {
+        CloudPort { transport }
+    }
+
+    /// Receive and strictly decode the next payload frame.
+    pub fn recv_payload(&mut self) -> Result<(SplitPayload, TransferOutcome)> {
+        let (frame_bytes, out) = self.transport.recv()?;
+        let p = codec::decode_payload_frame(&frame_bytes)?;
+        Ok((p, out))
+    }
+
+    /// Encode, frame and transmit one reply (+ server compute seconds).
+    pub fn send_reply(&mut self, reply: &CloudReply, server_s: f64) -> Result<TransferOutcome> {
+        let frame_bytes = codec::encode_reply_frame(reply, server_s);
+        self.transport.send(&frame_bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::channel::ChannelParams;
+
+    #[test]
+    fn loopback_moves_frames_in_order() {
+        let (mut a, mut b) = Loopback::pair();
+        a.send(b"one").unwrap();
+        a.send(b"two").unwrap();
+        assert_eq!(b.recv().unwrap().0, b"one");
+        let (f, o) = b.recv().unwrap();
+        assert_eq!(f, b"two");
+        assert_eq!(o.payload_bytes, 3);
+        assert_eq!(o.latency_s, 0.0);
+        assert!(!o.outage);
+    }
+
+    #[test]
+    fn loopback_reports_clean_close() {
+        let (a, mut b) = Loopback::pair();
+        drop(a);
+        assert!(b.recv_eof().unwrap().is_none());
+        assert!(b.recv().is_err());
+    }
+
+    #[test]
+    fn link_transport_charges_actual_frame_lengths() {
+        let link = LinkSim::new(ChannelParams::default(), 8e6, 7);
+        let (mut edge, mut cloud) = LinkTransport::duplex(link);
+        let up = edge.send(&[1u8; 1000]).unwrap();
+        assert_eq!(up.payload_bytes, 1000);
+        assert!(up.latency_s > 0.0, "simulated airtime must be charged");
+        let (f, free) = cloud.recv().unwrap();
+        assert_eq!(f.len(), 1000);
+        assert_eq!(free.latency_s, 0.0, "cloud half must not double-charge");
+        cloud.send(&[2u8; 64]).unwrap();
+        let (f, down) = edge.recv().unwrap();
+        assert_eq!(f.len(), 64);
+        assert_eq!(down.payload_bytes, 64);
+        assert!(down.latency_s > 0.0);
+        assert_eq!(edge.link.total_bytes, 1064, "one LinkSim charges both directions");
+    }
+
+    #[test]
+    fn socket_transport_roundtrip_over_uds() {
+        let path = std::env::temp_dir().join(format!("splitserve-wire-test-{}.sock", std::process::id()));
+        let addr = format!("unix:{}", path.display());
+        let listener = WireListener::bind(&addr).unwrap();
+        let frame_bytes = frame::encode_frame(frame::FrameKind::Payload, &[9u8; 300]);
+        let sent = frame_bytes.clone();
+        let handle = std::thread::spawn(move || {
+            let mut server = listener.accept().unwrap();
+            let (got, _) = server.recv().unwrap();
+            server.send(&got).unwrap(); // echo
+            // clean shutdown: drop closes the socket
+            got
+        });
+        let mut client = SocketTransport::connect_retry(&addr, Duration::from_secs(5)).unwrap();
+        client.send(&sent).unwrap();
+        let (echoed, out) = client.recv().unwrap();
+        assert_eq!(echoed, sent);
+        assert_eq!(out.payload_bytes, sent.len() as u64);
+        assert!(client.recv_eof().unwrap().is_none(), "server hangup is a clean EOF");
+        assert_eq!(handle.join().unwrap(), sent);
+        let _ = std::fs::remove_file(&path);
+    }
+}

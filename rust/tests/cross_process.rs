@@ -1,0 +1,131 @@
+//! Cross-process edge/cloud serving: the two halves of a deployment
+//! joined only by a real socket must reproduce the single-process token
+//! stream exactly.
+//!
+//! Two layers of coverage:
+//!   * an in-process thread pair over a unix domain socket (EdgeClient
+//!     vs `SplitPipeline::generate`, compared as structured results),
+//!   * the actual `splitserve cloud` / `splitserve edge` binaries spawned
+//!     as separate OS processes, compared by their printed token streams
+//!     (the CI loopback smoke, also runnable via
+//!     `scripts/cross_process_smoke.sh`).
+
+use std::process::{Command, Stdio};
+use std::rc::Rc;
+use std::time::Duration;
+
+use splitserve::coordinator::{build_pipeline, DeploymentSpec, Request};
+use splitserve::model::ModelConfig;
+use splitserve::runtime::Engine;
+use splitserve::wire::{SocketTransport, WireListener};
+
+fn small_cfg(n_layers: usize) -> ModelConfig {
+    let mut cfg = ModelConfig::sim7b();
+    cfg.n_layers = n_layers;
+    cfg
+}
+
+fn sock_addr(tag: &str) -> (std::path::PathBuf, String) {
+    let path = std::env::temp_dir().join(format!("splitserve-{tag}-{}.sock", std::process::id()));
+    let addr = format!("unix:{}", path.display());
+    (path, addr)
+}
+
+/// ACCEPTANCE: edge and cloud halves in different threads, joined only by
+/// a unix socket, produce the token stream of the single-process driver.
+#[test]
+fn socket_edge_client_matches_single_process_pipeline() {
+    let req = Request::new(1, vec![3, 141, 59, 26], 8);
+
+    // Oracle: the blocking single-process pipeline.
+    let eng = Rc::new(Engine::load("artifacts", &ModelConfig::sim7b()).expect("engine"));
+    let spec = DeploymentSpec::defaults(small_cfg(4), 2);
+    let mut pipe = build_pipeline(eng, &spec).unwrap();
+    let want = pipe.generate(&req).unwrap();
+    assert!(!want.tokens.is_empty());
+
+    let (path, addr) = sock_addr("thread-smoke");
+    let listener = WireListener::bind(&addr).unwrap();
+    let server = std::thread::spawn(move || {
+        // Fresh engine inside the thread (the runtime is single-thread
+        // shared via Rc); same spec + seeds = the identical back segment.
+        let eng = Rc::new(Engine::load("artifacts", &ModelConfig::sim7b()).expect("engine"));
+        let spec = DeploymentSpec::defaults(small_cfg(4), 2);
+        let cloud = spec.build_cloud_server(eng).unwrap();
+        let mut conn = listener.accept().unwrap();
+        cloud.serve_connection(&mut conn).unwrap()
+    });
+
+    let eng = Rc::new(Engine::load("artifacts", &ModelConfig::sim7b()).expect("engine"));
+    let spec = DeploymentSpec::defaults(small_cfg(4), 2);
+    let edge = spec.build_edge_device(eng).unwrap();
+    let transport = SocketTransport::connect_retry(&addr, Duration::from_secs(10)).unwrap();
+    let mut client = splitserve::coordinator::EdgeClient::new(edge, transport);
+    let got = client.generate(&req).unwrap();
+    drop(client); // hang up so the server loop exits
+    let served = server.join().expect("cloud thread");
+    let _ = std::fs::remove_file(&path);
+
+    assert_eq!(got.tokens, want.tokens, "socket transport must not change a token");
+    // one payload frame per reply, and every reply committed one token
+    assert_eq!(served, got.tokens.len() as u64, "one served frame per committed token");
+    assert!(got.total_uplink_bytes() > 0 && got.total_downlink_bytes() > 0);
+}
+
+fn tokens_line(stdout: &[u8]) -> String {
+    String::from_utf8_lossy(stdout)
+        .lines()
+        .find(|l| l.starts_with("tokens:"))
+        .unwrap_or_default()
+        .to_string()
+}
+
+/// ACCEPTANCE: the real `splitserve cloud` and `splitserve edge` binaries
+/// as separate OS processes over a socket reproduce `splitserve generate`.
+#[test]
+fn cross_process_binaries_match_single_process_generate() {
+    let bin = env!("CARGO_BIN_EXE_splitserve");
+    let (path, addr) = sock_addr("proc-smoke");
+    let model_args = ["--layers", "4", "--split", "2"];
+    let gen_args = ["--prompt", "3,141,59,26", "--max-new", "8"];
+
+    let mut cloud = Command::new(bin)
+        .arg("cloud")
+        .args(model_args)
+        .args(["--listen", &addr, "--once"])
+        .stdout(Stdio::null())
+        .stderr(Stdio::null())
+        .spawn()
+        .expect("spawn cloud process");
+
+    let edge = Command::new(bin)
+        .arg("edge")
+        .args(model_args)
+        .args(["--connect", &addr])
+        .args(gen_args)
+        .output()
+        .expect("run edge process");
+    if !edge.status.success() {
+        let _ = cloud.kill();
+        let _ = cloud.wait();
+        panic!("edge process failed: {}", String::from_utf8_lossy(&edge.stderr));
+    }
+    let _ = cloud.wait();
+    let _ = std::fs::remove_file(&path);
+
+    let single = Command::new(bin)
+        .arg("generate")
+        .args(model_args)
+        .args(gen_args)
+        .output()
+        .expect("run generate");
+    assert!(single.status.success(), "{}", String::from_utf8_lossy(&single.stderr));
+
+    let edge_tokens = tokens_line(&edge.stdout);
+    let single_tokens = tokens_line(&single.stdout);
+    assert!(!edge_tokens.is_empty(), "edge printed no token stream");
+    assert_eq!(
+        edge_tokens, single_tokens,
+        "cross-process token stream must equal single-process generate"
+    );
+}

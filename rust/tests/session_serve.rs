@@ -256,6 +256,22 @@ fn degenerate_sessions_terminate_cleanly() {
     assert!(pipe.generate(&Request::new(11, vec![], 4)).is_err());
 }
 
+/// Non-finite arrival times are rejected up front instead of panicking
+/// inside the pending-request sort (the old `partial_cmp(..).unwrap()`).
+#[test]
+fn non_finite_arrivals_rejected_not_panicking() {
+    let eng = engine();
+    let spec = serve_spec(1);
+    let mut serve = build_serve_loop(eng, &spec).unwrap();
+    for bad_arrival in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+        let mut bad = Request::new(1, vec![5, 6], 4);
+        bad.arrival_s = bad_arrival;
+        let good = Request::new(2, vec![7, 8], 3);
+        let r = serve.run(vec![bad, good], |_, _| TokenControl::Continue);
+        assert!(r.is_err(), "arrival {bad_arrival} must be rejected");
+    }
+}
+
 /// Seeded temperature/top-k sampling is selectable per request,
 /// reproducible, and — because the draw is (seed, request, pos)-keyed —
 /// identical whether the request runs alone or interleaved on the shared

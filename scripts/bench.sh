@@ -22,7 +22,10 @@ cargo bench --bench hot_paths "$@"
 ENGINE_JSON="${BENCH_ENGINE_JSON:-BENCH_engine.json}"
 BENCH_JSON="$ENGINE_JSON" cargo bench --bench engine "$@"
 
-for f in "$BENCH_JSON" "$ENGINE_JSON"; do
+WIRE_JSON="${BENCH_WIRE_JSON:-BENCH_wire.json}"
+BENCH_JSON="$WIRE_JSON" cargo bench --bench wire "$@"
+
+for f in "$BENCH_JSON" "$ENGINE_JSON" "$WIRE_JSON"; do
     if [ -f "$f" ]; then
         echo "--- $f ---"
         cat "$f"

@@ -1,0 +1,36 @@
+#!/usr/bin/env bash
+# Cross-process loopback smoke: spawn `splitserve cloud`, run
+# `splitserve edge` against it over a unix socket, and require the token
+# stream to equal single-process `splitserve generate` on the same spec.
+#
+#   scripts/cross_process_smoke.sh            # builds release, runs smoke
+#
+# The same check runs inside `cargo test` (tests/cross_process.rs); this
+# script is the standalone/CI form against the release binary.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+cargo build --release
+BIN=target/release/splitserve
+
+SOCK="${TMPDIR:-/tmp}/splitserve-smoke-$$.sock"
+MODEL_ARGS=(--layers 4 --split 2)
+GEN_ARGS=(--prompt 3,141,59,26 --max-new 8)
+
+"$BIN" cloud --listen "unix:$SOCK" "${MODEL_ARGS[@]}" --once &
+CLOUD_PID=$!
+trap 'kill "$CLOUD_PID" 2>/dev/null || true; rm -f "$SOCK"' EXIT
+
+EDGE_OUT=$("$BIN" edge --connect "unix:$SOCK" "${MODEL_ARGS[@]}" "${GEN_ARGS[@]}")
+SINGLE_OUT=$("$BIN" generate "${MODEL_ARGS[@]}" "${GEN_ARGS[@]}")
+
+EDGE_TOKENS=$(grep '^tokens:' <<<"$EDGE_OUT" || true)
+SINGLE_TOKENS=$(grep '^tokens:' <<<"$SINGLE_OUT" || true)
+echo "edge (cross-process): $EDGE_TOKENS"
+echo "generate (in-process): $SINGLE_TOKENS"
+
+if [ -z "$EDGE_TOKENS" ] || [ "$EDGE_TOKENS" != "$SINGLE_TOKENS" ]; then
+    echo "FAIL: cross-process token stream diverged from single-process generate"
+    exit 1
+fi
+echo "cross-process smoke OK"
