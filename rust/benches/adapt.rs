@@ -1,0 +1,188 @@
+//! Static-vs-adaptive serving under time-varying channels — the
+//! EXPERIMENTS.md §Adaptation numbers.
+//!
+//! For each channel scenario (constant, step-down, drift, outage burst)
+//! the SAME request burst is served twice through the many-to-one serve
+//! loop: once executing the offline Eq. 8 plan forever (static), once
+//! with the `adapt` control plane closing the loop (telemetry → re-plan
+//! → per-session `Reconfig`). Requests all arrive at t = 0, so both
+//! runs are deterministic and comparable frame for frame.
+//!
+//! Emits `BENCH_adapt.json` (override with `BENCH_JSON`) with simulated
+//! tokens/s, p95 latency and total bytes on the wire per scenario/mode,
+//! plus the adaptation counters. Two invariants are ASSERTED here (a
+//! panic fails `scripts/bench.sh` and the CI bench-smoke step):
+//!
+//!   * constant channel → adaptive token streams and wire bytes are
+//!     bit-identical to static, with zero reconfigurations;
+//!   * the step-change scenario → the controller actually switches plans
+//!     (reconfigs ≥ 1) and no session fails.
+//!
+//!   BENCH_SMOKE=1 cargo bench --bench adapt   # reduced CI config
+
+use splitserve::adapt::AdaptPolicy;
+use splitserve::channel::ChannelTrace;
+use splitserve::coordinator::{build_serve_loop, Request, ServeReport, ServeSpec, TokenControl};
+use splitserve::model::ModelConfig;
+use splitserve::runtime::Engine;
+use splitserve::util::bench::{f2, JsonReport, Table};
+use std::rc::Rc;
+
+fn small_cfg(n_layers: usize) -> ModelConfig {
+    let mut cfg = ModelConfig::sim7b();
+    cfg.n_layers = n_layers;
+    cfg
+}
+
+fn requests(n: usize, max_new: usize) -> Vec<Request> {
+    let prompts: [&[u32]; 4] =
+        [&[3, 141, 59, 26], &[10, 20, 30], &[7, 90, 200, 11, 5], &[42, 17]];
+    (0..n)
+        .map(|i| Request::new(i as u64 + 1, prompts[i % prompts.len()].to_vec(), max_new))
+        .collect()
+}
+
+fn wire_bytes(r: &ServeReport) -> u64 {
+    r.results
+        .iter()
+        .map(|g| g.total_uplink_bytes() + g.total_downlink_bytes())
+        .sum::<u64>()
+        + r.control_bytes
+}
+
+fn run(
+    engine: &Rc<Engine>,
+    trace: ChannelTrace,
+    adaptive: bool,
+    n_requests: usize,
+    max_new: usize,
+) -> (ServeReport, u64) {
+    let mut spec = ServeSpec::defaults(small_cfg(4), 2, 2);
+    spec.deployment.channel_trace = Some(trace);
+    spec.batcher.max_batch = 8;
+    if adaptive {
+        spec.adapt = Some(match trace {
+            // The stationary scenario runs the production default policy
+            // (slow estimator, wide gates) — it is the one under a
+            // bit-identity assert, and the default is what `--adapt`
+            // deploys.
+            ChannelTrace::Constant => AdaptPolicy::default(),
+            // Event scenarios use a twitchier estimator so the trigger
+            // lands within a few iterations of the channel event on
+            // these short traces.
+            _ => AdaptPolicy {
+                ewma_alpha: 0.25,
+                warmup_samples: 4,
+                cooldown_steps: 1,
+                ..Default::default()
+            },
+        });
+    }
+    let mut serve = build_serve_loop(engine.clone(), &spec).unwrap();
+    let report = serve
+        .run(requests(n_requests, max_new), |_, _| TokenControl::Continue)
+        .unwrap();
+    assert_eq!(report.failed, 0, "no session may fail under adaptation");
+    let applied = serve.cloud.reconfigs_applied();
+    (report, applied)
+}
+
+fn tokens_of(r: &ServeReport) -> Vec<(u64, Vec<u32>)> {
+    let mut t: Vec<(u64, Vec<u32>)> =
+        r.results.iter().map(|g| (g.request_id, g.tokens.clone())).collect();
+    t.sort();
+    t
+}
+
+fn main() -> anyhow::Result<()> {
+    let smoke = std::env::var("BENCH_SMOKE").is_ok();
+    let (n_requests, max_new) = if smoke { (4, 12) } else { (6, 20) };
+    let engine = Rc::new(Engine::load("artifacts", &ModelConfig::sim7b())?);
+    let mut report = JsonReport::new();
+    let mut table = Table::new(
+        "static vs adaptive serving across channel scenarios (simulated clock)",
+        &[
+            "scenario",
+            "static tok/s",
+            "adaptive tok/s",
+            "static p95 ms",
+            "adaptive p95 ms",
+            "static KB",
+            "adaptive KB",
+            "replans",
+            "reconfigs",
+        ],
+    );
+
+    let mut scenarios: Vec<(&str, ChannelTrace)> = vec![
+        ("constant", ChannelTrace::Constant),
+        ("step_down", ChannelTrace::Step { at_s: 0.01, snr_scale: 0.1 }),
+    ];
+    if !smoke {
+        scenarios.push((
+            "drift",
+            ChannelTrace::Drift { start_s: 0.005, end_s: 0.06, snr_scale_end: 0.1 },
+        ));
+        scenarios.push((
+            "outage_burst",
+            ChannelTrace::OutageBurst { start_s: 0.01, duration_s: 1.0, snr_scale: 0.08 },
+        ));
+    }
+
+    for (name, trace) in scenarios {
+        let (stat, _) = run(&engine, trace, false, n_requests, max_new);
+        let (adap, applied) = run(&engine, trace, true, n_requests, max_new);
+
+        // Invariants (release-mode asserts: a panic fails bench.sh + CI).
+        if let ChannelTrace::Constant = trace {
+            assert_eq!(
+                tokens_of(&stat),
+                tokens_of(&adap),
+                "constant channel: adaptive must be bit-identical to static"
+            );
+            assert_eq!(adap.reconfigs, 0, "constant channel must never reconfigure");
+            assert_eq!(
+                wire_bytes(&stat),
+                wire_bytes(&adap),
+                "constant channel: byte-identical wire"
+            );
+        }
+        if name == "step_down" {
+            assert!(
+                adap.replans >= 1 && adap.reconfigs >= 1,
+                "step scenario must actuate the control plane: {adap:?}"
+            );
+            assert!(applied >= 1, "cloud must apply the announcements");
+        }
+
+        table.row(&[
+            name.to_string(),
+            f2(stat.throughput_tok_s()),
+            f2(adap.throughput_tok_s()),
+            f2(stat.p95_latency_s() * 1e3),
+            f2(adap.p95_latency_s() * 1e3),
+            f2(wire_bytes(&stat) as f64 / 1024.0),
+            f2(wire_bytes(&adap) as f64 / 1024.0),
+            format!("{}", adap.replans),
+            format!("{}", adap.reconfigs),
+        ]);
+        report.add_metric(&format!("{name}_static_tok_s"), stat.throughput_tok_s());
+        report.add_metric(&format!("{name}_adaptive_tok_s"), adap.throughput_tok_s());
+        report.add_metric(&format!("{name}_static_p95_ms"), stat.p95_latency_s() * 1e3);
+        report.add_metric(&format!("{name}_adaptive_p95_ms"), adap.p95_latency_s() * 1e3);
+        report.add_metric(&format!("{name}_static_wire_bytes"), wire_bytes(&stat) as f64);
+        report.add_metric(&format!("{name}_adaptive_wire_bytes"), wire_bytes(&adap) as f64);
+        report.add_metric(&format!("{name}_static_tokens"), stat.total_tokens as f64);
+        report.add_metric(&format!("{name}_adaptive_tokens"), adap.total_tokens as f64);
+        report.add_metric(&format!("{name}_adaptive_replans"), adap.replans as f64);
+        report.add_metric(&format!("{name}_adaptive_reconfigs"), adap.reconfigs as f64);
+        report
+            .add_metric(&format!("{name}_adaptive_control_bytes"), adap.control_bytes as f64);
+    }
+
+    table.print();
+    let path = std::env::var("BENCH_JSON").unwrap_or_else(|_| "BENCH_adapt.json".to_string());
+    report.write(&path)?;
+    println!("wrote {path}");
+    Ok(())
+}

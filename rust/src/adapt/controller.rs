@@ -1,0 +1,575 @@
+//! The decision half of the control plane: re-planning against the
+//! estimated link state, with hysteresis, cooldown and a minimum-
+//! improvement threshold so a noisy estimate can never make the plan
+//! flap.
+//!
+//! Decision structure (per serve-loop iteration):
+//!
+//!   1. **Device level** — each edge device's [`BandwidthEstimator`]
+//!      tracks the goodput its link actually delivers. When the estimate
+//!      deviates from the goodput the device's current plan was chosen
+//!      against by more than the deadband (and the estimator is warmed
+//!      up), the controller re-solves the configuration problem: it
+//!      filters the Q̄a candidate set down to the rungs whose predicted
+//!      per-step wire time fits the static plan's nominal step budget at
+//!      the *estimated* goodput, then re-invokes
+//!      [`planner::plan`](crate::planner::plan) (Eq. 8: accuracy bound +
+//!      memory budget, split and weight precision pinned to what is
+//!      physically deployed) over that set — first with the KV cache on
+//!      the wire, then without it (I_kv = 0), mirroring Algorithm 2's
+//!      escalation ladder at the plan level. If nothing is feasible the
+//!      device enters the degraded regime, where sessions shed remaining
+//!      token budget instead.
+//!   2. **Session level** — [`AdaptiveController::reconcile`] compares a
+//!      session's currently applied plan against its device's target and
+//!      emits a [`Reconfig`] only when something actually changes, the
+//!      per-session cooldown has elapsed, and the session can serve the
+//!      target (I_kv = 0 is only possible while the remaining horizon
+//!      fits the prefill width). The remaining-sequence budget L is
+//!      additionally capped to what the Eq. (8c) gauge says the edge can
+//!      hold at the new precision.
+//!
+//! Upgrades (wider bits than the current plan) must clear the budget
+//! with an extra `min_rel_gain` margin — the hysteresis that keeps a
+//! borderline channel from oscillating between adjacent rungs. Every
+//! re-plan re-anchors the device's reference goodput, so the deadband is
+//! always measured against the state the current plan was chosen for.
+
+use crate::memory::{self, ActBits};
+use crate::planner::{self, AnalyticAccuracyModel, PlanInputs};
+
+use super::reconfig::Reconfig;
+use super::telemetry::{BandwidthEstimator, MemoryGauge};
+use crate::channel::TransferOutcome;
+
+/// Tunables of the online control plane.
+#[derive(Clone, Debug)]
+pub struct AdaptPolicy {
+    /// EWMA smoothing factor of the per-frame goodput estimator.
+    pub ewma_alpha: f64,
+    /// Relative goodput deviation (vs the current plan's reference) that
+    /// triggers a re-plan. Must sit above the estimator's own noise band
+    /// under a stationary channel (the constant-channel invariant):
+    /// attempts at the ε-outage operating point bound the upward
+    /// excursion by E[attempts] − 1 ≈ 0.33, and simulated seeded runs
+    /// put the downward excursion under ~0.54 — 0.6 clears both, while
+    /// the bench scenarios (SNR ×0.1 ⇒ goodput ×0.075) overshoot it by
+    /// an order of magnitude.
+    pub deadband: f64,
+    /// Frames the estimator must absorb before any decision.
+    pub warmup_samples: u64,
+    /// Decode steps a session must wait between reconfigurations.
+    pub cooldown_steps: u64,
+    /// Hysteresis margin: an upgrade must fit the step budget with this
+    /// much headroom to spare (downgrades only need to fit).
+    pub min_rel_gain: f64,
+    /// Slack multiplier on the nominal per-step wire-time budget.
+    pub slack: f64,
+    /// Candidate Q̄a bit-widths the re-plan searches (Eq. 8 candidate
+    /// set; the smallest doubles as the degraded-regime floor).
+    pub qa_candidates: Vec<u32>,
+    /// Accuracy tolerance A_Δ (Eq. 8b) for re-planning.
+    pub acc_tolerance: f64,
+}
+
+impl Default for AdaptPolicy {
+    fn default() -> Self {
+        AdaptPolicy {
+            ewma_alpha: 0.1,
+            deadband: 0.6,
+            warmup_samples: 8,
+            cooldown_steps: 3,
+            min_rel_gain: 0.15,
+            slack: 1.25,
+            qa_candidates: vec![2, 3, 4, 6, 8],
+            acc_tolerance: 1.0,
+        }
+    }
+}
+
+/// A device's current transmission plan target.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DevicePlan {
+    /// Q̄a the device's sessions should transmit at.
+    pub bits: u32,
+    /// Preferred I_kv (sessions revert to KV shipping when I_kv = 0 is
+    /// infeasible for their horizon).
+    pub include_kv: bool,
+    /// No rung fits the estimated link at all: sessions shed remaining
+    /// token budget (Algorithm 2's last resort, at plan level).
+    pub degraded: bool,
+}
+
+/// What the controller needs to know about one session to reconcile it
+/// with its device's plan. All fields are copies — the view borrows
+/// nothing.
+#[derive(Clone, Copy, Debug)]
+pub struct SessionView {
+    pub request_id: u64,
+    /// Reconfigurations already applied to this session.
+    pub epoch: u32,
+    pub seq_len: usize,
+    pub remaining_budget: usize,
+    pub prefill_len: usize,
+    pub max_seq: usize,
+    /// Plan currently applied to the session (what the last Reconfig —
+    /// or the static deployment — set; Algorithm-2's per-step
+    /// escalations below this are the session's own business).
+    pub applied_bits: u32,
+    pub applied_kv: bool,
+    /// False once the session's edge-held cloud-KV copy went stale (a
+    /// step was served with I_kv = 0): KV shipping can never resume, so
+    /// the controller must not keep asking for it.
+    pub kv_shippable: bool,
+    /// Decode steps since this session's last reconfiguration.
+    pub steps_since_reconfig: u64,
+}
+
+#[derive(Clone, Debug)]
+struct DeviceState {
+    estimator: BandwidthEstimator,
+    /// Goodput the device's current plan was chosen against (deadband
+    /// anchor; re-anchored at every re-plan).
+    planned_goodput: f64,
+    plan: DevicePlan,
+}
+
+/// The online controller: one per serve loop, tracking every device.
+#[derive(Clone, Debug)]
+pub struct AdaptiveController {
+    pub policy: AdaptPolicy,
+    /// Eq. (1)-(3) memory accounting for the deployed configuration.
+    pub gauge: MemoryGauge,
+    /// Static plan's Q̄a (the deployment's compression.q_bar).
+    base_bits: u32,
+    /// Static plan's TS threshold τ.
+    base_tau: f32,
+    /// Expected goodput of the nominal channel at the operating rate —
+    /// the denominator of the per-step wire-time budget.
+    nominal_goodput: f64,
+    devices: Vec<DeviceState>,
+    replans: u64,
+    reconfigs: u64,
+}
+
+impl AdaptiveController {
+    pub fn new(
+        policy: AdaptPolicy,
+        gauge: MemoryGauge,
+        base_bits: u32,
+        base_tau: f32,
+        nominal_goodput_bps: f64,
+        n_devices: usize,
+    ) -> AdaptiveController {
+        assert!(n_devices >= 1);
+        assert!(nominal_goodput_bps > 0.0);
+        assert!(!policy.qa_candidates.is_empty(), "need at least one Q̄a candidate");
+        // The data plane's legal Q̄a range (quant::fused asserts 2..=16):
+        // an out-of-range rung would panic the edge compressor mid-stream
+        // instead of being a planning-time error here.
+        assert!(
+            (2..=16).contains(&base_bits)
+                && policy.qa_candidates.iter().all(|b| (2..=16).contains(b)),
+            "Q̄a candidates and the base plan must lie in 2..=16"
+        );
+        let base_plan = DevicePlan { bits: base_bits, include_kv: true, degraded: false };
+        let devices = (0..n_devices)
+            .map(|_| DeviceState {
+                estimator: BandwidthEstimator::new(policy.ewma_alpha, nominal_goodput_bps),
+                planned_goodput: nominal_goodput_bps,
+                plan: base_plan,
+            })
+            .collect();
+        AdaptiveController {
+            policy,
+            gauge,
+            base_bits,
+            base_tau,
+            nominal_goodput: nominal_goodput_bps,
+            devices,
+            replans: 0,
+            reconfigs: 0,
+        }
+    }
+
+    /// Fold one frame's transfer accounting into a device's estimator.
+    pub fn observe(&mut self, device: usize, outcome: &TransferOutcome) {
+        self.devices[device].estimator.observe(outcome);
+    }
+
+    /// Device plans re-solved over the run (Eq. 8 invocations).
+    pub fn replans(&self) -> u64 {
+        self.replans
+    }
+
+    /// Per-session reconfigurations emitted over the run.
+    pub fn reconfigs(&self) -> u64 {
+        self.reconfigs
+    }
+
+    /// A device's current plan target.
+    pub fn device_plan(&self, device: usize) -> DevicePlan {
+        self.devices[device].plan
+    }
+
+    /// A device's current goodput estimate (bytes/s).
+    pub fn estimated_goodput(&self, device: usize) -> f64 {
+        self.devices[device].estimator.goodput_bps()
+    }
+
+    /// Predicted per-step wire seconds of one decode transmission at the
+    /// widest I_kv-feasible probe width, under `goodput`.
+    fn step_wire_s(&self, bits: u32, include_kv: bool, goodput: f64) -> f64 {
+        let cfg = &self.gauge.cfg;
+        let w = cfg.prefill_len;
+        let qa = ActBits::uniform(bits);
+        let bytes = memory::io_bytes(cfg, w, self.gauge.split, include_kv, &qa);
+        bytes as f64 / goodput.max(1e-9)
+    }
+
+    /// Re-invoke the Eq. (8) search with the deployed split and weight
+    /// precision pinned and a single Q̄a candidate: feasible iff the
+    /// accuracy bound (8b) and the memory budget (8c) both hold at the
+    /// uniform precision.
+    fn plan_feasible(&self, bits: u32) -> bool {
+        let mut inputs = PlanInputs::defaults(
+            self.gauge.cfg.clone(),
+            self.gauge.mem_budget_bytes,
+            self.gauge.cfg.max_seq,
+        );
+        inputs.acc_tolerance = self.policy.acc_tolerance;
+        inputs.split_candidates = vec![self.gauge.split];
+        inputs.qw_candidates = vec![self.gauge.qw_front];
+        inputs.qa_candidates = vec![bits];
+        planner::plan(&inputs, &AnalyticAccuracyModel).is_some()
+    }
+
+    /// Solve for a new device plan at the estimated goodput.
+    fn replan(&self, g_est: f64, current: &DevicePlan) -> DevicePlan {
+        // The step budget the static plan implicitly promised: its own
+        // per-step wire time under the nominal channel, with slack.
+        let budget_s = self.step_wire_s(self.base_bits, true, self.nominal_goodput)
+            * self.policy.slack;
+        let fits_link = |bits: u32, include_kv: bool| {
+            let margin =
+                if bits > current.bits { 1.0 - self.policy.min_rel_gain } else { 1.0 };
+            self.step_wire_s(bits, include_kv, g_est) <= budget_s * margin
+        };
+        // The candidate ladder is capped AT the deployed static plan: the
+        // static Q̄a is the nominal-channel optimum, so anything wider
+        // busts the nominal step budget by construction, and a transient
+        // goodput over-estimate must never strand a device above it
+        // (upgrades stop at base_bits; downgrades go as deep as the
+        // candidate set allows). The baseline itself is always a
+        // candidate, and it is EXEMPT from Eq. 8 re-judgment: the
+        // offline planner (or the operator) already chose it, and the
+        // control plane must always be able to fall back to it — a
+        // deployment whose static Q̄a the analytic accuracy model happens
+        // to reject would otherwise never recover to its own plan.
+        let mut candidates: Vec<u32> = self
+            .policy
+            .qa_candidates
+            .iter()
+            .copied()
+            .filter(|&b| b <= self.base_bits)
+            .collect();
+        if !candidates.contains(&self.base_bits) {
+            candidates.push(self.base_bits);
+        }
+        candidates.sort_unstable();
+        let feasible = |b: u32| b == self.base_bits || self.plan_feasible(b);
+        // Ladder rung 1: keep the KV cache on the wire, recompress harder
+        // (or, when the link recovered, wider again — capped at the
+        // static plan).
+        for &b in candidates.iter().rev() {
+            if fits_link(b, true) && feasible(b) {
+                return DevicePlan { bits: b, include_kv: true, degraded: false };
+            }
+        }
+        // Ladder rung 2: drop the KV transmission (I_kv = 0).
+        for &b in candidates.iter().rev() {
+            if fits_link(b, false) && feasible(b) {
+                return DevicePlan { bits: b, include_kv: false, degraded: false };
+            }
+        }
+        // Ladder rung 3: nothing fits — cheapest settings, and sessions
+        // shed remaining budget (reconcile applies the cut).
+        DevicePlan { bits: candidates[0], include_kv: false, degraded: true }
+    }
+
+    /// Device-level trigger: re-plan when the goodput estimate has left
+    /// the deadband around the current plan's reference. Call once per
+    /// device per serve iteration.
+    pub fn device_update(&mut self, device: usize) {
+        let (g_est, samples, planned, current) = {
+            let d = &self.devices[device];
+            (d.estimator.goodput_bps(), d.estimator.samples(), d.planned_goodput, d.plan)
+        };
+        if samples < self.policy.warmup_samples || planned <= 0.0 {
+            return;
+        }
+        let deviation = g_est / planned - 1.0;
+        if deviation.abs() <= self.policy.deadband {
+            return;
+        }
+        let new_plan = self.replan(g_est, &current);
+        self.replans += 1;
+        let d = &mut self.devices[device];
+        d.planned_goodput = g_est;
+        d.plan = new_plan;
+    }
+
+    /// Session-level actuation: emit a [`Reconfig`] when the session's
+    /// applied plan differs from its device's target (respecting the
+    /// cooldown, per-session I_kv feasibility, and the Eq. 8c budget for
+    /// the remaining horizon). `None` = nothing to change.
+    pub fn reconcile(&mut self, device: usize, view: &SessionView) -> Option<Reconfig> {
+        let plan = self.devices[device].plan;
+        if view.remaining_budget == 0 || view.steps_since_reconfig < self.policy.cooldown_steps
+        {
+            return None;
+        }
+        let w_live = (view.seq_len + view.remaining_budget).min(view.max_seq);
+        // Per-session I_kv feasibility: going stateless needs the WHOLE
+        // remaining horizon to fit the prefill width; going back to KV
+        // shipping needs a non-stale edge-held cloud cache.
+        let mut include_kv = plan.include_kv;
+        if !include_kv && w_live > view.prefill_len {
+            include_kv = true;
+        }
+        if include_kv && !view.kv_shippable {
+            include_kv = false;
+        }
+        let mut budget_cap = Reconfig::NO_BUDGET_CAP;
+        if plan.degraded && view.remaining_budget >= 2 {
+            // Algorithm 2's last rung at plan level: halve what remains.
+            budget_cap = (view.remaining_budget as u32).div_ceil(2);
+        }
+        // Remaining-sequence budget L the edge memory can hold at the new
+        // precision (Eq. 8c via the gauge). No headroom AT ALL at the new
+        // precision (l_mem ≤ current length) means the session may not
+        // grow another token: cap L to zero, ending it cleanly.
+        let qa = ActBits::uniform(plan.bits);
+        let l_mem = self.gauge.max_tokens(&qa, view.max_seq);
+        if l_mem > view.seq_len {
+            let rem_mem = (l_mem - view.seq_len) as u32;
+            if (rem_mem as usize) < view.remaining_budget {
+                budget_cap = budget_cap.min(rem_mem);
+            }
+        } else {
+            budget_cap = 0;
+        }
+        // A stale-KV session is pinned to stateless serving; if its
+        // horizon outgrows the prefill width, cap L to the steps the
+        // cloud can still recompute (rather than letting the session be
+        // force-ended at the boundary).
+        if !include_kv && w_live > view.prefill_len {
+            budget_cap =
+                budget_cap.min(view.prefill_len.saturating_sub(view.seq_len) as u32);
+        }
+        if plan.bits == view.applied_bits
+            && include_kv == view.applied_kv
+            && budget_cap == Reconfig::NO_BUDGET_CAP
+        {
+            return None; // minimum improvement: no change worth a frame
+        }
+        self.reconfigs += 1;
+        Some(Reconfig {
+            request_id: view.request_id,
+            epoch: view.epoch + 1,
+            qa_bits: plan.bits,
+            // Under pressure, also harden the TS threshold: fewer lossless
+            // outliers on the wire while the bulk is coarse anyway.
+            tau: if plan.bits < self.base_bits { self.base_tau * 2.0 } else { self.base_tau },
+            include_kv,
+            budget_cap,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelConfig;
+
+    fn small_cfg() -> ModelConfig {
+        let mut cfg = ModelConfig::sim7b();
+        cfg.n_layers = 4;
+        cfg
+    }
+
+    fn controller(n_devices: usize) -> AdaptiveController {
+        let cfg = small_cfg();
+        let gauge = MemoryGauge::new(cfg, 2, 4, 64 * 1024 * 1024);
+        AdaptiveController::new(AdaptPolicy::default(), gauge, 4, 5.0, 2e6, n_devices)
+    }
+
+    fn feed(ctrl: &mut AdaptiveController, device: usize, goodput: f64, frames: usize) {
+        for _ in 0..frames {
+            ctrl.observe(
+                device,
+                &TransferOutcome {
+                    latency_s: 4000.0 / goodput,
+                    attempts: 1,
+                    outage: false,
+                    payload_bytes: 4000,
+                },
+            );
+        }
+    }
+
+    fn view(epoch: u32, steps: u64) -> SessionView {
+        SessionView {
+            request_id: 9,
+            epoch,
+            seq_len: 8,
+            remaining_budget: 10,
+            prefill_len: 64,
+            max_seq: 128,
+            applied_bits: 4,
+            applied_kv: true,
+            kv_shippable: true,
+            steps_since_reconfig: steps,
+        }
+    }
+
+    #[test]
+    fn on_plan_goodput_never_replans() {
+        let mut c = controller(1);
+        feed(&mut c, 0, 2e6, 100);
+        for _ in 0..50 {
+            c.device_update(0);
+        }
+        assert_eq!(c.replans(), 0);
+        assert_eq!(c.device_plan(0), DevicePlan { bits: 4, include_kv: true, degraded: false });
+        assert!(c.reconcile(0, &view(0, 100)).is_none(), "no drift, no reconfig");
+    }
+
+    #[test]
+    fn mild_fluctuation_stays_inside_deadband() {
+        let mut c = controller(1);
+        // ±30% swings: inside the 55% deadband, so the plan must hold.
+        for round in 0..20 {
+            let g = if round % 2 == 0 { 2.6e6 } else { 1.4e6 };
+            feed(&mut c, 0, g, 5);
+            c.device_update(0);
+        }
+        assert_eq!(c.replans(), 0, "deadband must absorb ±30% noise");
+    }
+
+    #[test]
+    fn collapse_triggers_downgrade_and_recovery_restores_base() {
+        let mut c = controller(1);
+        feed(&mut c, 0, 2e6 / 15.0, 60); // deep degradation
+        c.device_update(0);
+        assert_eq!(c.replans(), 1);
+        let down = c.device_plan(0);
+        assert!(
+            !down.include_kv || down.bits < 4,
+            "degraded link must shed bytes: {down:?}"
+        );
+        let rc = c.reconcile(0, &view(0, 10)).expect("plan changed, reconfig due");
+        assert_eq!(rc.epoch, 1);
+        assert_eq!(rc.qa_bits, down.bits);
+        assert!(rc.tau >= 5.0);
+        // cooldown: a just-reconfigured session is left alone
+        assert!(c.reconcile(0, &view(1, 0)).is_none());
+        // recovery: estimator climbs back to nominal → re-plan restores
+        // the static configuration, and never overshoots above it.
+        feed(&mut c, 0, 2e6, 120);
+        c.device_update(0);
+        assert_eq!(c.replans(), 2);
+        assert_eq!(
+            c.device_plan(0),
+            DevicePlan { bits: 4, include_kv: true, degraded: false },
+            "recovery must converge back to the static plan"
+        );
+        let mut v = view(1, 10);
+        v.applied_bits = down.bits;
+        v.applied_kv = down.include_kv;
+        let rc = c.reconcile(0, &v).expect("restore reconfig");
+        assert_eq!(rc.qa_bits, 4);
+        assert!(rc.include_kv);
+        assert_eq!(rc.epoch, 2);
+        assert_eq!(rc.budget_cap, Reconfig::NO_BUDGET_CAP);
+        // converged: the applied plan now matches — silence.
+        let mut v = view(2, 10);
+        v.applied_bits = 4;
+        v.applied_kv = true;
+        assert!(c.reconcile(0, &v).is_none(), "converged controller must not flap");
+    }
+
+    #[test]
+    fn accuracy_bound_blocks_two_bit_rung() {
+        // For the 4-layer config the Eq. 8b analytic model rejects
+        // uniform 2-bit activations (drop ≈ 4.6 > 1.0): even under heavy
+        // degradation the re-plan may not choose 2 bits as a non-degraded
+        // plan — it either finds an accuracy-feasible rung or degrades.
+        let c = controller(1);
+        assert!(!c.plan_feasible(2));
+        assert!(c.plan_feasible(3) && c.plan_feasible(4) && c.plan_feasible(8));
+        let plan = c.replan(2e6 / 15.0, &DevicePlan { bits: 4, include_kv: true, degraded: false });
+        assert!(plan.degraded || plan.bits >= 3, "2-bit rung violates Eq. 8b: {plan:?}");
+    }
+
+    #[test]
+    fn total_collapse_enters_degraded_regime_and_sheds_budget() {
+        let mut c = controller(1);
+        feed(&mut c, 0, 2e6 / 200.0, 80);
+        c.device_update(0);
+        let plan = c.device_plan(0);
+        assert!(plan.degraded, "nothing fits a 200x collapse: {plan:?}");
+        let rc = c.reconcile(0, &view(0, 10)).expect("degraded reconfig");
+        assert!(rc.budget_cap != Reconfig::NO_BUDGET_CAP, "degraded regime must cap L");
+        assert!(rc.budget_cap >= 1 && (rc.budget_cap as usize) < 10);
+    }
+
+    #[test]
+    fn session_without_prefill_headroom_keeps_kv() {
+        let mut c = controller(1);
+        feed(&mut c, 0, 2e6 / 15.0, 60);
+        c.device_update(0);
+        let plan = c.device_plan(0);
+        assert!(!plan.include_kv, "15x degradation should prefer I_kv = 0: {plan:?}");
+        // horizon beyond the prefill width: I_kv = 0 infeasible for this
+        // session, so the emitted reconfig must keep KV shipping. Pin a
+        // bits mismatch so a reconfig is due regardless.
+        let mut v = view(0, 10);
+        v.seq_len = 60;
+        v.remaining_budget = 20; // w_live = 80 > prefill 64
+        v.applied_bits = 8;
+        let rc = c.reconcile(0, &v).expect("bits differ, reconfig due");
+        assert!(rc.include_kv, "must keep KV when the horizon outgrows prefill");
+        assert_eq!(rc.qa_bits, plan.bits);
+    }
+
+    #[test]
+    fn stale_kv_session_is_never_asked_to_ship_again() {
+        // Device plan is back at the static {4 bits, KV on}, but the
+        // session served stateless steps: the controller may restore the
+        // bit width, must NOT restore KV shipping, and must then go
+        // silent instead of re-asking every cooldown.
+        let mut c = controller(1);
+        let mut v = view(3, 10);
+        v.applied_bits = 2;
+        v.applied_kv = false;
+        v.kv_shippable = false;
+        let rc = c.reconcile(0, &v).expect("bit restore due");
+        assert_eq!(rc.qa_bits, 4);
+        assert!(!rc.include_kv, "stale cloud-KV copy must never ship again");
+        let mut v2 = v;
+        v2.applied_bits = 4; // the restore applied
+        assert!(c.reconcile(0, &v2).is_none(), "reconciled stale session must be left alone");
+    }
+
+    #[test]
+    fn per_device_isolation() {
+        let mut c = controller(2);
+        feed(&mut c, 0, 2e6 / 15.0, 60);
+        feed(&mut c, 1, 2e6, 60);
+        c.device_update(0);
+        c.device_update(1);
+        assert_ne!(c.device_plan(0), c.device_plan(1), "only device 0 degraded");
+        assert_eq!(c.device_plan(1), DevicePlan { bits: 4, include_kv: true, degraded: false });
+    }
+}

@@ -1,0 +1,38 @@
+//! Online adaptive control plane — the loop the paper's title promises.
+//!
+//! The Eq. (8) configuration search in `planner::config_search` runs once,
+//! offline, against an *assumed* link; the serve loop then executes that
+//! static plan. This module closes the loop at runtime:
+//!
+//!   * **telemetry** — a [`BandwidthEstimator`] distills the per-frame
+//!     [`TransferOutcome`](crate::channel::TransferOutcome)s the wire
+//!     layer already measures into a smoothed goodput estimate, and a
+//!     [`MemoryGauge`] wraps the Eq. (1)-(3) byte models into live
+//!     headroom queries;
+//!   * **decision** — an [`AdaptiveController`] watches each device's
+//!     estimate, and when it deviates from the goodput the current plan
+//!     was chosen against (beyond a deadband, after a warmup, outside a
+//!     cooldown) it **re-invokes [`planner::plan`](crate::planner::plan)**
+//!     with the link-feasible candidate set, walking the same ladder the
+//!     paper's Algorithm 2 walks per-step — recompress harder, drop the
+//!     KV transmission, shrink the remaining token budget L — but at the
+//!     plan level, across whole sessions;
+//!   * **actuation** — decisions are emitted as per-session [`Reconfig`]
+//!     messages (wire frame kind 3, format v4), applied to the session's
+//!     transmission settings on the edge and announced to the cloud so
+//!     the stateless server can hold the data plane to the control
+//!     plane's word mid-stream (including in cross-process serving).
+//!
+//! Two invariants anchor the design (pinned in `tests/adapt_serve.rs`):
+//! under a constant channel the controller never fires and the adaptive
+//! run is bit-identical to the static one, and every drift scenario run
+//! is seed-reproducible end to end (the channel trace is keyed on the
+//! link's own simulated clock, never on wall time).
+
+pub mod controller;
+pub mod reconfig;
+pub mod telemetry;
+
+pub use controller::{AdaptPolicy, AdaptiveController, DevicePlan, SessionView};
+pub use reconfig::Reconfig;
+pub use telemetry::{expected_goodput_bps, BandwidthEstimator, MemoryGauge};

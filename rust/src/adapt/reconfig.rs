@@ -1,0 +1,60 @@
+//! The control plane's actuation message: a per-session mid-stream
+//! reconfiguration of the transmission plan.
+//!
+//! A `Reconfig` travels the same wire as the data plane (frame kind 3,
+//! wire format v4; see `wire::codec` for the byte layout) so control
+//! traffic is charged real bytes on the link, ordered with the payload
+//! stream, and visible to the cloud: the stateless server records the
+//! announced settings per request and holds subsequent payloads to them
+//! (a payload quantized wider than the announced Q̄a is a protocol
+//! error, not a silent fidelity mismatch).
+
+/// One session's new transmission plan, effective from the next decode
+/// step: (τ, Q̄a, I_kv, remaining-sequence budget L).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Reconfig {
+    pub request_id: u64,
+    /// Monotone per-session reconfiguration counter; the cloud ignores
+    /// stale (≤ last applied) epochs, so duplicated or reordered control
+    /// frames cannot roll settings back.
+    pub epoch: u32,
+    /// TAB-Q activation bit budget Q̄a (sign included).
+    pub qa_bits: u32,
+    /// TS outlier threshold τ.
+    pub tau: f32,
+    /// I_kv: whether the KV cache travels with each decode step.
+    pub include_kv: bool,
+    /// Cap on the session's REMAINING token budget L
+    /// ([`Reconfig::NO_BUDGET_CAP`] = leave the budget unchanged).
+    pub budget_cap: u32,
+}
+
+impl Reconfig {
+    /// Sentinel: the reconfiguration does not touch the token budget.
+    pub const NO_BUDGET_CAP: u32 = u32::MAX;
+
+    /// Bit-exact wire size of the frame body (`wire::codec` layout):
+    /// request id u64 + epoch u32 + budget cap u32 + τ f32 + Q̄a u8 +
+    /// flags u8.
+    pub fn wire_bytes(&self) -> u64 {
+        22
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wire_bytes_is_fixed() {
+        let rc = Reconfig {
+            request_id: 7,
+            epoch: 1,
+            qa_bits: 3,
+            tau: 5.0,
+            include_kv: false,
+            budget_cap: Reconfig::NO_BUDGET_CAP,
+        };
+        assert_eq!(rc.wire_bytes(), 22);
+    }
+}

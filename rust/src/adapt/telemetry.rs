@@ -1,0 +1,265 @@
+//! Control-plane telemetry: link goodput estimation from per-frame
+//! transfer outcomes, and live memory headroom over the Eq. (1)-(3)
+//! byte models.
+
+use crate::channel::outage::{attempts_for_epsilon, outage_probability};
+use crate::channel::{ChannelParams, TransferOutcome};
+use crate::memory::{self, ActBits};
+use crate::model::ModelConfig;
+
+/// Expected steady-state goodput (bytes/s) of the ε-outage link at
+/// `rate_bps`: the raw byte rate divided by the mean attempt count of the
+/// truncated-geometric retransmission process,
+/// E[attempts] = (1 − P_o^n) / (1 − P_o) with n = n_ε. This is the
+/// goodput the offline plan implicitly assumed — the reference the
+/// controller's deadband is centered on.
+pub fn expected_goodput_bps(p: &ChannelParams, rate_bps: f64) -> f64 {
+    let po = outage_probability(p, rate_bps);
+    let n = attempts_for_epsilon(p, rate_bps) as f64;
+    let mean_attempts = if po <= 0.0 {
+        1.0
+    } else if po >= 1.0 {
+        n
+    } else {
+        (1.0 - po.powf(n)) / (1.0 - po)
+    };
+    (rate_bps / 8.0) / mean_attempts.max(1.0)
+}
+
+/// EWMA goodput estimator over per-frame [`TransferOutcome`]s.
+///
+/// The estimate is a **ratio of exponentially decayed sums** (bytes over
+/// seconds), not an average of per-frame rates: averaging `bytes/latency`
+/// samples converges to `(R/8)·E[1/attempts]`, which overstates the
+/// goodput the link actually delivers (Jensen); the decayed-sum ratio
+/// converges to `(R/8)/E[attempts]` — exactly [`expected_goodput_bps`]
+/// under a stationary channel, so the deadband sits on an unbiased
+/// center. Seeded with a 0.25-second prior at the reference goodput so a
+/// cold estimator reads "nominal", not zero — small enough that ~25-35
+/// observed frames outweigh it entirely (collapse detection is bounded
+/// by the α decay, not by the prior), large enough that the first few
+/// frames cannot whipsaw the estimate.
+#[derive(Clone, Debug)]
+pub struct BandwidthEstimator {
+    alpha: f64,
+    ewma_bytes: f64,
+    ewma_secs: f64,
+    /// EWMA of the per-frame outage indicator.
+    outage_rate: f64,
+    samples: u64,
+}
+
+impl BandwidthEstimator {
+    /// `alpha` is the EWMA smoothing factor per observed frame;
+    /// `reference_goodput_bps` seeds the prior (bytes/s).
+    pub fn new(alpha: f64, reference_goodput_bps: f64) -> BandwidthEstimator {
+        assert!(alpha > 0.0 && alpha < 1.0, "alpha must be in (0, 1)");
+        assert!(reference_goodput_bps > 0.0);
+        BandwidthEstimator {
+            alpha,
+            ewma_bytes: reference_goodput_bps * 0.25,
+            ewma_secs: 0.25,
+            outage_rate: 0.0,
+            samples: 0,
+        }
+    }
+
+    /// Fold one frame's transfer accounting into the estimate. Frames
+    /// with zero airtime (loopback halves, zero-byte frames) carry no
+    /// bandwidth signal and are skipped.
+    pub fn observe(&mut self, o: &TransferOutcome) {
+        if o.payload_bytes == 0 || o.latency_s <= 0.0 {
+            return;
+        }
+        let a = self.alpha;
+        self.ewma_bytes = (1.0 - a) * self.ewma_bytes + a * o.payload_bytes as f64;
+        self.ewma_secs = (1.0 - a) * self.ewma_secs + a * o.latency_s;
+        self.outage_rate = (1.0 - a) * self.outage_rate + a * (o.outage as u8 as f64);
+        self.samples += 1;
+    }
+
+    /// Smoothed goodput estimate (bytes/s).
+    pub fn goodput_bps(&self) -> f64 {
+        if self.ewma_secs <= 0.0 {
+            0.0
+        } else {
+            self.ewma_bytes / self.ewma_secs
+        }
+    }
+
+    /// Smoothed per-frame outage rate in [0, 1].
+    pub fn outage_rate(&self) -> f64 {
+        self.outage_rate
+    }
+
+    /// Frames observed (warmup gating).
+    pub fn samples(&self) -> u64 {
+        self.samples
+    }
+
+    /// Relative deviation of the estimate from `reference` (bytes/s):
+    /// 0.0 means on-plan, -0.5 means half the planned goodput.
+    pub fn deviation_from(&self, reference: f64) -> f64 {
+        if reference <= 0.0 {
+            0.0
+        } else {
+            self.goodput_bps() / reference - 1.0
+        }
+    }
+}
+
+/// Live edge-memory accounting over the paper's Eq. (1)-(3) models: the
+/// planner's Eq. (8c) constraint as a queryable gauge, used by the
+/// controller to size the remaining-sequence budget L a reconfiguration
+/// can afford.
+#[derive(Clone, Debug)]
+pub struct MemoryGauge {
+    pub cfg: ModelConfig,
+    pub split: usize,
+    pub qw_front: u32,
+    pub mem_budget_bytes: u64,
+}
+
+impl MemoryGauge {
+    pub fn new(cfg: ModelConfig, split: usize, qw_front: u32, mem_budget_bytes: u64) -> MemoryGauge {
+        MemoryGauge { cfg, split, qw_front, mem_budget_bytes }
+    }
+
+    /// Eq. (8c) left side at `w` tokens under activation precision `qa`.
+    pub fn edge_bytes(&self, w: usize, qa: &ActBits) -> u64 {
+        memory::edge_total_bytes(&self.cfg, self.split, self.qw_front, w, qa)
+    }
+
+    /// Does a `w`-token sequence at `qa` fit the budget?
+    pub fn fits(&self, w: usize, qa: &ActBits) -> bool {
+        self.edge_bytes(w, qa) <= self.mem_budget_bytes
+    }
+
+    /// Bytes left under the budget at `w` tokens (0 when over).
+    pub fn headroom_bytes(&self, w: usize, qa: &ActBits) -> u64 {
+        self.mem_budget_bytes.saturating_sub(self.edge_bytes(w, qa))
+    }
+
+    /// Largest token count (≤ `hi`) the budget can hold at `qa` — the
+    /// memory-feasible sequence length L. 0 when even one token does not
+    /// fit (the weights alone bust the budget).
+    pub fn max_tokens(&self, qa: &ActBits, hi: usize) -> usize {
+        let hi = hi.max(1);
+        if !self.fits(1, qa) {
+            return 0;
+        }
+        if self.fits(hi, qa) {
+            return hi;
+        }
+        // KV growth is monotone in w (Eq. 2): bisect.
+        let (mut lo, mut hi) = (1usize, hi);
+        while lo + 1 < hi {
+            let mid = lo + (hi - lo) / 2;
+            if self.fits(mid, qa) {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        lo
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn outcome(bytes: u64, latency_s: f64, outage: bool) -> TransferOutcome {
+        TransferOutcome { latency_s, attempts: 1, outage, payload_bytes: bytes }
+    }
+
+    #[test]
+    fn estimator_converges_to_observed_rate() {
+        let mut e = BandwidthEstimator::new(0.1, 1e6);
+        for _ in 0..400 {
+            e.observe(&outcome(5000, 5000.0 / 2e6, false)); // 2 MB/s
+        }
+        let g = e.goodput_bps();
+        assert!((g / 2e6 - 1.0).abs() < 0.05, "estimate {g} should approach 2 MB/s");
+        assert!(e.deviation_from(1e6) > 0.9);
+    }
+
+    #[test]
+    fn estimator_reads_reference_when_cold() {
+        let e = BandwidthEstimator::new(0.1, 1.5e6);
+        assert!((e.goodput_bps() / 1.5e6 - 1.0).abs() < 1e-12);
+        assert_eq!(e.samples(), 0);
+        assert_eq!(e.deviation_from(1.5e6), 0.0);
+    }
+
+    #[test]
+    fn estimator_ignores_zero_airtime_frames() {
+        let mut e = BandwidthEstimator::new(0.2, 1e6);
+        e.observe(&outcome(0, 0.0, false));
+        e.observe(&outcome(1000, 0.0, false)); // lossless loopback
+        assert_eq!(e.samples(), 0);
+        assert!((e.goodput_bps() / 1e6 - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn estimator_is_harmonic_not_arithmetic() {
+        // Two frames, same size: one at 4 MB/s, one at 1 MB/s. The true
+        // delivered goodput is total bytes / total time = 1.6 MB/s, NOT
+        // the 2.5 MB/s a per-frame-rate average would report.
+        let mut e = BandwidthEstimator::new(0.05, 1.6e6);
+        for _ in 0..400 {
+            e.observe(&outcome(4000, 4000.0 / 4e6, false));
+            e.observe(&outcome(4000, 4000.0 / 1e6, false));
+        }
+        let g = e.goodput_bps();
+        assert!((g / 1.6e6 - 1.0).abs() < 0.1, "harmonic estimate, got {g}");
+    }
+
+    #[test]
+    fn expected_goodput_matches_link_sim_long_run() {
+        use crate::channel::LinkSim;
+        let p = ChannelParams::default();
+        let rate = 15e6;
+        let expect = expected_goodput_bps(&p, rate);
+        let mut link = LinkSim::new(p, rate, 99);
+        for _ in 0..30_000 {
+            link.transfer(1500);
+        }
+        let emp = link.mean_goodput();
+        assert!(
+            (emp / expect - 1.0).abs() < 0.05,
+            "empirical {emp} vs model {expect}"
+        );
+    }
+
+    #[test]
+    fn gauge_max_tokens_monotone_in_bits() {
+        let cfg = ModelConfig::sim7b();
+        let g = MemoryGauge::new(cfg.clone(), 16, 4, 8 * 1024 * 1024);
+        let l8 = g.max_tokens(&ActBits::uniform(8), cfg.max_seq);
+        let l4 = g.max_tokens(&ActBits::uniform(4), cfg.max_seq);
+        assert!(l4 >= l8, "narrower KV must afford at least as many tokens");
+        assert!(g.fits(l8.max(1), &ActBits::uniform(8)) || l8 == 0);
+    }
+
+    #[test]
+    fn gauge_max_tokens_zero_when_weights_do_not_fit() {
+        let cfg = ModelConfig::sim7b();
+        let g = MemoryGauge::new(cfg.clone(), 16, 4, 1024); // 1 KB budget
+        assert_eq!(g.max_tokens(&ActBits::uniform(4), cfg.max_seq), 0);
+        assert_eq!(g.headroom_bytes(1, &ActBits::uniform(4)), 0);
+    }
+
+    #[test]
+    fn gauge_max_tokens_is_the_boundary() {
+        let cfg = ModelConfig::sim7b();
+        let qa = ActBits::uniform(8);
+        // budget exactly between w=20 and w=21
+        let g0 = MemoryGauge::new(cfg.clone(), 16, 4, 0);
+        let at20 = g0.edge_bytes(20, &qa);
+        let at21 = g0.edge_bytes(21, &qa);
+        assert!(at21 > at20);
+        let g = MemoryGauge::new(cfg.clone(), 16, 4, at20);
+        assert_eq!(g.max_tokens(&qa, cfg.max_seq), 20);
+    }
+}

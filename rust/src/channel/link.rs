@@ -11,6 +11,7 @@
 use crate::util::rng::Rng;
 
 use super::outage::{attempts_for_epsilon, ChannelParams};
+use super::trace::ChannelTrace;
 
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct TransferOutcome {
@@ -28,6 +29,11 @@ pub struct LinkSim {
     /// Operating rate (bits/s), typically from `rate::optimize_rate`.
     pub rate_bps: f64,
     rng: Rng,
+    /// Time-varying channel scenario, keyed on the link's own simulated
+    /// clock (`total_latency_s`): the same sequence of payload sizes
+    /// replays the same fading environment deterministically, regardless
+    /// of how fast the surrounding driver computes.
+    trace: Option<ChannelTrace>,
     /// Cumulative stats.
     pub total_bytes: u64,
     pub total_latency_s: f64,
@@ -42,6 +48,7 @@ impl LinkSim {
             params,
             rate_bps,
             rng: Rng::new(seed ^ 0x11_4e_7_1),
+            trace: None,
             total_bytes: 0,
             total_latency_s: 0.0,
             total_outages: 0,
@@ -49,23 +56,52 @@ impl LinkSim {
         }
     }
 
+    /// Attach a time-varying channel scenario (replayed deterministically
+    /// against the link's simulated clock).
+    pub fn set_trace(&mut self, trace: ChannelTrace) {
+        self.trace = Some(trace);
+    }
+
+    pub fn trace(&self) -> Option<ChannelTrace> {
+        self.trace
+    }
+
+    /// Channel parameters in force right now: the configured params with
+    /// the trace's SNR scale applied at the current link time. A scale of
+    /// exactly 1.0 returns the nominal params untouched, so `Constant`
+    /// (and an inactive scenario) is bit-identical to having no trace.
+    pub fn effective_params(&self) -> ChannelParams {
+        match self.trace {
+            None => self.params,
+            Some(tr) => {
+                let scale = tr.snr_scale_at(self.total_latency_s);
+                if scale == 1.0 {
+                    self.params
+                } else {
+                    ChannelParams { snr: self.params.snr * scale, ..self.params }
+                }
+            }
+        }
+    }
+
     /// Instantaneous capacity of one fading realization (bits/s).
-    fn draw_capacity(&mut self) -> f64 {
+    fn draw_capacity(&mut self, p: &ChannelParams) -> f64 {
         let h2 = self.rng.rayleigh_power();
-        self.params.bandwidth_hz * (1.0 + self.params.snr * h2).log2()
+        p.bandwidth_hz * (1.0 + p.snr * h2).log2()
     }
 
     /// Transmit `payload_bytes`; returns the simulated outcome and updates
     /// cumulative stats.
     pub fn transfer(&mut self, payload_bytes: u64) -> TransferOutcome {
+        let p = self.effective_params();
         let bits = payload_bytes * 8;
         let airtime = bits as f64 / self.rate_bps;
-        let max_attempts = attempts_for_epsilon(&self.params, self.rate_bps);
+        let max_attempts = attempts_for_epsilon(&p, self.rate_bps);
         let mut attempts = 0;
         let mut ok = false;
         while attempts < max_attempts {
             attempts += 1;
-            if self.draw_capacity() >= self.rate_bps {
+            if self.draw_capacity(&p) >= self.rate_bps {
                 ok = true;
                 break;
             }
@@ -83,12 +119,23 @@ impl LinkSim {
         out
     }
 
-    /// Mean goodput over the life of the link (bytes/s).
+    /// Mean goodput over the life of the link (bytes/s); 0.0 before any
+    /// airtime has been charged (never NaN).
     pub fn mean_goodput(&self) -> f64 {
         if self.total_latency_s == 0.0 {
             0.0
         } else {
             self.total_bytes as f64 / self.total_latency_s
+        }
+    }
+
+    /// Fraction of transfers that exhausted the ε budget; 0.0 before any
+    /// transfer (never NaN).
+    pub fn outage_rate(&self) -> f64 {
+        if self.total_transfers == 0 {
+            0.0
+        } else {
+            self.total_outages as f64 / self.total_transfers as f64
         }
     }
 }
@@ -160,5 +207,81 @@ mod tests {
         let o = l.transfer(0);
         assert_eq!(o.latency_s, 0.0);
         assert!(!o.outage);
+    }
+
+    #[test]
+    fn ratios_are_zero_not_nan_before_any_transfer() {
+        // The zero-transfer guard: a fresh link (and one that has only
+        // moved zero-byte frames, i.e. zero airtime) must report 0.0 for
+        // every cumulative ratio — never NaN.
+        let l = link(8e6, 21);
+        assert_eq!(l.mean_goodput(), 0.0);
+        assert_eq!(l.outage_rate(), 0.0);
+        assert!(!l.mean_goodput().is_nan() && !l.outage_rate().is_nan());
+        let mut l = link(8e6, 21);
+        l.transfer(0); // bytes recorded, zero airtime
+        assert_eq!(l.mean_goodput(), 0.0, "zero-airtime goodput must stay 0.0");
+        assert!(!l.mean_goodput().is_nan());
+        // after a real transfer both ratios become meaningful
+        l.transfer(1000);
+        assert!(l.mean_goodput() > 0.0);
+        assert!(l.outage_rate() >= 0.0 && l.outage_rate() <= 1.0);
+    }
+
+    #[test]
+    fn constant_trace_is_bit_identical_to_no_trace() {
+        use super::super::trace::ChannelTrace;
+        let mut plain = link(8e6, 31);
+        let mut traced = link(8e6, 31);
+        traced.set_trace(ChannelTrace::Constant);
+        for i in 0..200 {
+            let bytes = 500 + (i % 7) * 1000;
+            assert_eq!(plain.transfer(bytes), traced.transfer(bytes));
+        }
+        assert_eq!(plain.total_latency_s, traced.total_latency_s);
+    }
+
+    #[test]
+    fn step_trace_degrades_goodput_after_the_step() {
+        use super::super::trace::ChannelTrace;
+        let rate = 15e6;
+        let mut l = link(rate, 33);
+        // Find the pre-step latency of a fixed-size transfer, then push
+        // past the step point and compare mean attempts.
+        l.set_trace(ChannelTrace::Step { at_s: 0.05, snr_scale: 0.1 });
+        let mut pre = Vec::new();
+        let mut post = Vec::new();
+        for _ in 0..4000 {
+            let before = l.total_latency_s < 0.05;
+            let o = l.transfer(2000);
+            if before {
+                pre.push(o.attempts as f64);
+            } else {
+                post.push(o.attempts as f64);
+            }
+        }
+        assert!(!pre.is_empty() && !post.is_empty(), "step must land mid-run");
+        let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+        assert!(
+            mean(&post) > 2.0 * mean(&pre),
+            "attempts must jump after the step: pre {} post {}",
+            mean(&pre),
+            mean(&post)
+        );
+    }
+
+    #[test]
+    fn traced_runs_are_seed_reproducible() {
+        use super::super::trace::ChannelTrace;
+        let mk = || {
+            let mut l = link(12e6, 35);
+            l.set_trace(ChannelTrace::Drift { start_s: 0.01, end_s: 0.2, snr_scale_end: 0.2 });
+            l
+        };
+        let (mut a, mut b) = (mk(), mk());
+        for i in 0..500 {
+            let bytes = 300 + (i % 11) * 700;
+            assert_eq!(a.transfer(bytes), b.transfer(bytes));
+        }
     }
 }

@@ -1,11 +1,15 @@
 //! Wireless edge↔cloud channel: the paper's ε-outage model (Eq. 9-10),
-//! the rate optimizer (Eq. 13), and a seeded Rayleigh link simulator that
-//! actually delivers payloads on the request path.
+//! the rate optimizer (Eq. 13), a seeded Rayleigh link simulator that
+//! actually delivers payloads on the request path, and deterministic
+//! time-varying channel scenarios (`trace`) for the adaptive control
+//! plane.
 
 pub mod link;
 pub mod outage;
 pub mod rate;
+pub mod trace;
 
 pub use link::{LinkSim, TransferOutcome};
 pub use outage::{outage_probability, worst_case_latency, ChannelParams};
-pub use rate::optimize_rate;
+pub use rate::{g_surrogate, optimize_rate};
+pub use trace::ChannelTrace;

@@ -24,6 +24,12 @@ pub fn g_surrogate(p: &ChannelParams, rate_bps: f64) -> f64 {
 }
 
 /// Eq. (13): find R* ∈ [r_lo, r_hi] minimizing the worst-case latency.
+///
+/// Contract (pinned by the property suite below): the returned rate lies
+/// inside `[r_lo, r_hi]` and its surrogate value never exceeds either
+/// endpoint's — the polish step is restricted to the g-dominated region,
+/// so the ceiled-objective refinement cannot hand back a rate the smooth
+/// model considers worse than just operating at a bracket edge.
 pub fn optimize_rate(p: &ChannelParams, r_lo: f64, r_hi: f64) -> f64 {
     assert!(r_lo > 0.0 && r_hi > r_lo);
     // Golden-section over u = ln R (the objective spans decades). Ties
@@ -41,23 +47,49 @@ pub fn optimize_rate(p: &ChannelParams, r_lo: f64, r_hi: f64) -> f64 {
         c = b - phi * (b - a);
         d = a + phi * (b - a);
     }
-    let smooth_opt = (0.5 * (a + b)).exp();
+    let smooth_opt = (0.5 * (a + b)).exp().clamp(r_lo, r_hi);
     // Polish on the exact (ceiled) objective over a local grid — the
     // ceiling creates plateaus the smooth optimum may sit on the wrong
-    // side of.
+    // side of. Only g-dominated candidates are eligible (g no worse than
+    // the better endpoint); in the single-attempt regime the exact
+    // objective alone would otherwise walk to a rate the surrogate — and
+    // hence the paper's Eq. 13 — rejects.
+    let g_cap = g_surrogate(p, r_lo).min(g_surrogate(p, r_hi));
     let probe_bits = 1_000_000u64;
-    let mut best = (worst_case_latency(p, probe_bits, smooth_opt), smooth_opt);
+    let mut best: Option<(f64, f64)> = None;
     let lo = (smooth_opt * 0.5).max(r_lo);
     let hi = (smooth_opt * 2.0).min(r_hi);
     let steps = 200;
+    let consider = |r: f64, best: &mut Option<(f64, f64)>| {
+        if g_surrogate(p, r) > g_cap {
+            return;
+        }
+        let l = worst_case_latency(p, probe_bits, r);
+        let improves = match *best {
+            None => true,
+            Some((bl, _)) => l < bl,
+        };
+        if improves {
+            *best = Some((l, r));
+        }
+    };
+    consider(smooth_opt, &mut best);
     for i in 0..=steps {
         let r = lo + (hi - lo) * i as f64 / steps as f64;
-        let l = worst_case_latency(p, probe_bits, r);
-        if l < best.0 {
-            best = (l, r);
+        consider(r, &mut best);
+    }
+    match best {
+        Some((_, r)) => r.clamp(r_lo, r_hi),
+        // The g minimum sits at (or beyond) a bracket edge: return the
+        // better endpoint instead of a dominated interior point.
+        None => {
+            if g_surrogate(p, r_lo) <= g_surrogate(p, r_hi) {
+                r_lo
+            } else {
+                r_hi
+            }
         }
     }
-    best.1
 }
 
 #[cfg(test)]
@@ -103,5 +135,35 @@ mod tests {
         let r10 = optimize_rate(&p10, 1e5, 1e9);
         let r100 = optimize_rate(&p100, 1e5, 1e9);
         assert!(r100 > r10, "{r100} vs {r10}");
+    }
+
+    #[test]
+    fn optimum_stays_in_bracket_and_dominates_endpoints_on_g() {
+        // PROPERTY (pinned): across seeded channel parameters and rate
+        // brackets, the returned rate lies inside [r_lo, r_hi] and its
+        // smooth-surrogate value is no worse than either endpoint's.
+        use crate::util::prop::run_cases;
+        run_cases(200, 0xA7E5, |case, rng| {
+            let p = ChannelParams {
+                bandwidth_hz: 10f64.powf(5.5 + 2.3 * rng.f64()), // 0.3–63 MHz
+                snr: 10f64.powf(2.0 * rng.f64()),                // 1–100
+                epsilon: 10f64.powf(-4.0 + 3.0 * rng.f64()),     // 1e-4–1e-1
+            };
+            let r_lo = 10f64.powf(4.0 + 2.5 * rng.f64());
+            let r_hi = r_lo * 10f64.powf(0.5 + 3.0 * rng.f64());
+            let r = optimize_rate(&p, r_lo, r_hi);
+            assert!(
+                (r_lo..=r_hi).contains(&r),
+                "case {case}: rate {r} escaped bracket [{r_lo}, {r_hi}]"
+            );
+            let g_r = g_surrogate(&p, r);
+            let g_lo = g_surrogate(&p, r_lo);
+            let g_hi = g_surrogate(&p, r_hi);
+            assert!(
+                g_r <= g_lo.min(g_hi) * (1.0 + 1e-9),
+                "case {case}: g({r}) = {g_r} beats neither endpoint \
+                 (g_lo {g_lo}, g_hi {g_hi}; params {p:?})"
+            );
+        });
     }
 }

@@ -1,0 +1,147 @@
+//! Seeded time-varying channel scenarios for the adaptive control plane.
+//!
+//! A [`ChannelTrace`] is a pure function of the link's own simulated
+//! clock (the cumulative airtime the [`LinkSim`](super::LinkSim) has
+//! charged so far) to an SNR scale factor. Keying the trace on the link
+//! clock — never on wall time or on driver-measured compute — is what
+//! makes adaptation runs seed-reproducible end to end: the same payload
+//! byte sequence replays the same fading environment, draw for draw.
+//!
+//! Three canonical scenarios model the ways a wireless link drifts:
+//!
+//!   * [`ChannelTrace::Step`] — an abrupt, persistent rate change
+//!     (hand-off to a congested cell);
+//!   * [`ChannelTrace::Drift`] — a linear SNR ramp between two points in
+//!     time (mobility away from / toward the access point);
+//!   * [`ChannelTrace::OutageBurst`] — a deep transient fade over a
+//!     bounded window, returning to nominal afterwards.
+//!
+//! `Constant` is the identity trace: scale exactly 1.0 at every instant,
+//! pinned by test to leave the link bit-identical to having no trace at
+//! all (the static-vs-adaptive equivalence invariant rests on it).
+
+/// A deterministic SNR-scale schedule over the link's simulated clock.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ChannelTrace {
+    /// Identity: scale 1.0 forever (the no-op trace).
+    Constant,
+    /// Scale jumps from 1.0 to `snr_scale` at `at_s` and stays there.
+    Step { at_s: f64, snr_scale: f64 },
+    /// Scale ramps linearly from 1.0 (at `start_s`) to `snr_scale_end`
+    /// (at `end_s`), clamped to the endpoints outside the window.
+    Drift { start_s: f64, end_s: f64, snr_scale_end: f64 },
+    /// Scale drops to `snr_scale` inside `[start_s, start_s + duration_s)`
+    /// and recovers to 1.0 afterwards.
+    OutageBurst { start_s: f64, duration_s: f64, snr_scale: f64 },
+}
+
+impl ChannelTrace {
+    /// SNR scale factor at link time `t_s`. Exactly 1.0 whenever the
+    /// scenario is inactive, so an untriggered trace cannot perturb the
+    /// fading stream.
+    pub fn snr_scale_at(&self, t_s: f64) -> f64 {
+        match *self {
+            ChannelTrace::Constant => 1.0,
+            ChannelTrace::Step { at_s, snr_scale } => {
+                if t_s >= at_s {
+                    snr_scale
+                } else {
+                    1.0
+                }
+            }
+            ChannelTrace::Drift { start_s, end_s, snr_scale_end } => {
+                if t_s <= start_s || end_s <= start_s {
+                    1.0
+                } else if t_s >= end_s {
+                    snr_scale_end
+                } else {
+                    let f = (t_s - start_s) / (end_s - start_s);
+                    1.0 + f * (snr_scale_end - 1.0)
+                }
+            }
+            ChannelTrace::OutageBurst { start_s, duration_s, snr_scale } => {
+                if t_s >= start_s && t_s < start_s + duration_s {
+                    snr_scale
+                } else {
+                    1.0
+                }
+            }
+        }
+    }
+
+    /// Named default scenarios for the CLI and the adaptation bench.
+    /// Times are in link-seconds (cumulative simulated airtime).
+    pub fn by_name(name: &str) -> Option<ChannelTrace> {
+        match name {
+            "constant" => Some(ChannelTrace::Constant),
+            "step" | "step_down" => Some(ChannelTrace::Step { at_s: 0.02, snr_scale: 0.1 }),
+            "drift" => {
+                Some(ChannelTrace::Drift { start_s: 0.01, end_s: 0.2, snr_scale_end: 0.1 })
+            }
+            "outage" | "outage_burst" => Some(ChannelTrace::OutageBurst {
+                start_s: 0.02,
+                // In link-seconds: the burst's own inflated airtime
+                // (~30-50 ms/frame) consumes the window, so a useful
+                // burst must span ~1 s of link time (~20 frames).
+                duration_s: 1.0,
+                snr_scale: 0.08,
+            }),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_is_identity() {
+        for t in [0.0, 0.5, 1e6] {
+            assert_eq!(ChannelTrace::Constant.snr_scale_at(t), 1.0);
+        }
+    }
+
+    #[test]
+    fn step_switches_at_boundary() {
+        let tr = ChannelTrace::Step { at_s: 2.0, snr_scale: 0.25 };
+        assert_eq!(tr.snr_scale_at(0.0), 1.0);
+        assert_eq!(tr.snr_scale_at(1.999), 1.0);
+        assert_eq!(tr.snr_scale_at(2.0), 0.25);
+        assert_eq!(tr.snr_scale_at(100.0), 0.25);
+    }
+
+    #[test]
+    fn drift_interpolates_and_clamps() {
+        let tr = ChannelTrace::Drift { start_s: 1.0, end_s: 3.0, snr_scale_end: 0.5 };
+        assert_eq!(tr.snr_scale_at(0.0), 1.0);
+        assert!((tr.snr_scale_at(2.0) - 0.75).abs() < 1e-12);
+        assert_eq!(tr.snr_scale_at(3.0), 0.5);
+        assert_eq!(tr.snr_scale_at(9.0), 0.5);
+    }
+
+    #[test]
+    fn burst_recovers() {
+        let tr = ChannelTrace::OutageBurst { start_s: 1.0, duration_s: 0.5, snr_scale: 0.1 };
+        assert_eq!(tr.snr_scale_at(0.9), 1.0);
+        assert_eq!(tr.snr_scale_at(1.0), 0.1);
+        assert_eq!(tr.snr_scale_at(1.49), 0.1);
+        assert_eq!(tr.snr_scale_at(1.5), 1.0);
+    }
+
+    #[test]
+    fn degenerate_drift_window_is_identity() {
+        let tr = ChannelTrace::Drift { start_s: 2.0, end_s: 2.0, snr_scale_end: 0.5 };
+        assert_eq!(tr.snr_scale_at(1.0), 1.0);
+        assert_eq!(tr.snr_scale_at(2.0), 1.0);
+        assert_eq!(tr.snr_scale_at(3.0), 1.0);
+    }
+
+    #[test]
+    fn named_scenarios_resolve() {
+        for name in ["constant", "step", "drift", "outage"] {
+            assert!(ChannelTrace::by_name(name).is_some(), "{name}");
+        }
+        assert!(ChannelTrace::by_name("nope").is_none());
+    }
+}

@@ -21,7 +21,8 @@ use super::profile::DeviceProfile;
 use super::protocol::CompressionConfig;
 use super::router::{DeviceSlot, Router};
 use super::serve_loop::{EdgeEndpoint, ServeLoop};
-use crate::channel::{optimize_rate, ChannelParams, LinkSim};
+use crate::adapt::{expected_goodput_bps, AdaptPolicy, AdaptiveController, MemoryGauge};
+use crate::channel::{optimize_rate, ChannelParams, ChannelTrace, LinkSim};
 use crate::memory::ActBits;
 use crate::model::{ModelConfig, ModelWeights};
 use crate::planner::{EarlyExitController, LatencyModel};
@@ -34,6 +35,9 @@ pub struct DeploymentSpec {
     pub opsc: OpscConfig,
     pub compression: CompressionConfig,
     pub channel: ChannelParams,
+    /// Time-varying channel scenario replayed by every link of the
+    /// deployment (None = stationary nominal channel).
+    pub channel_trace: Option<ChannelTrace>,
     /// None → optimize via Eq. (13).
     pub rate_bps: Option<f64>,
     pub weight_seed: u64,
@@ -51,6 +55,7 @@ impl DeploymentSpec {
             opsc: OpscConfig::new(split, 4, 16),
             compression: CompressionConfig::default(),
             channel: ChannelParams::default(),
+            channel_trace: None,
             rate_bps: None,
             weight_seed: 42,
             link_seed: 7,
@@ -144,6 +149,16 @@ impl DeploymentSpec {
     pub fn edge_controller(&self) -> Option<EarlyExitController> {
         self.controller(self.operating_rate())
     }
+
+    /// One seeded link of this deployment (per-device fading stream:
+    /// `link_seed + device`), with the spec's channel trace attached.
+    fn build_link(&self, rate: f64, device: u64) -> LinkSim {
+        let mut link = LinkSim::new(self.channel, rate, self.link_seed.wrapping_add(device));
+        if let Some(trace) = self.channel_trace {
+            link.set_trace(trace);
+        }
+        link
+    }
 }
 
 /// Build the single-session pipeline. The engine can be shared across
@@ -154,7 +169,7 @@ pub fn build_pipeline(engine: Rc<Engine>, spec: &DeploymentSpec) -> Result<Split
     let edge = spec.build_edge(engine.clone(), split, spec.edge_weights())?;
     let cloud = spec.build_cloud(engine, split)?;
     let rate = spec.operating_rate();
-    let link = LinkSim::new(spec.channel, rate, spec.link_seed);
+    let link = spec.build_link(rate, 0);
     let mut pipeline = SplitPipeline::new(edge, cloud, link);
     pipeline.controller = spec.controller(rate);
     Ok(pipeline)
@@ -169,6 +184,9 @@ pub struct ServeSpec {
     pub mem_budget_bytes: u64,
     /// Iteration accounting: max batch width + sub-linear batching model.
     pub batcher: BatcherParams,
+    /// Online adaptive control plane (None = the static plan runs
+    /// forever, the pre-adaptation behavior).
+    pub adapt: Option<AdaptPolicy>,
 }
 
 impl ServeSpec {
@@ -178,7 +196,14 @@ impl ServeSpec {
             n_devices,
             mem_budget_bytes: 64 * 1024 * 1024,
             batcher: BatcherParams::default(),
+            adapt: None,
         }
+    }
+
+    /// Builder-style: enable the adaptive control plane with a policy.
+    pub fn with_adapt(mut self, policy: AdaptPolicy) -> ServeSpec {
+        self.adapt = Some(policy);
+        self
     }
 }
 
@@ -197,7 +222,7 @@ pub fn build_serve_loop(engine: Rc<Engine>, spec: &ServeSpec) -> Result<ServeLoo
     let mut edges = Vec::with_capacity(spec.n_devices);
     for d in 0..spec.n_devices {
         let edge = dep.build_edge(engine.clone(), split, edge_weights.clone())?;
-        let link = LinkSim::new(dep.channel, rate, dep.link_seed.wrapping_add(d as u64));
+        let link = dep.build_link(rate, d as u64);
         edges.push(EdgeEndpoint::over_link(edge, link));
     }
     let qa = ActBits::uniform(dep.compression.q_bar);
@@ -217,5 +242,25 @@ pub fn build_serve_loop(engine: Rc<Engine>, spec: &ServeSpec) -> Result<ServeLoo
     let router = Router::new(slots);
     let mut serve = ServeLoop::new(cloud, edges, router, spec.batcher.clone());
     serve.controller = dep.controller(rate);
+    if let Some(policy) = spec.adapt.clone() {
+        // The controller plans against the NOMINAL channel's expected
+        // goodput at the operating rate; its estimators start there too,
+        // so a constant channel never leaves the deadband.
+        let nominal = expected_goodput_bps(&dep.channel, rate);
+        let gauge = MemoryGauge::new(
+            dep.model.clone(),
+            split,
+            dep.opsc.qw_front,
+            spec.mem_budget_bytes,
+        );
+        serve.adapt = Some(AdaptiveController::new(
+            policy,
+            gauge,
+            dep.compression.q_bar,
+            dep.compression.tau,
+            nominal,
+            spec.n_devices,
+        ));
+    }
     Ok(serve)
 }

@@ -16,7 +16,9 @@
 //! session's own reconstructed cache — so token streams are identical to
 //! serving each payload alone (pinned by `tests/session_serve.rs`).
 
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
 use std::time::Instant;
 
 use anyhow::Result;
@@ -24,8 +26,10 @@ use anyhow::Result;
 use super::profile::DeviceProfile;
 use super::protocol::{CloudReply, SplitPayload};
 use super::sampling::{self, sample};
+use crate::adapt::Reconfig;
 use crate::quant::ScratchPool;
 use crate::runtime::{LayerKv, NodeRuntime};
+use crate::wire::FrameKind;
 
 /// How one `handle_batch` call actually spent the server's wall time, so
 /// the serve loop can charge its simulated clock without re-modeling work
@@ -60,6 +64,15 @@ pub struct CloudServer {
     /// Disabled (payload-at-a-time serving) only by the A/B baselines in
     /// `benches/engine.rs`.
     pub stacked: bool,
+    /// Control-plane view: the last transmission settings each session
+    /// announced via a `Reconfig` frame. The server holds the data plane
+    /// to this word — a payload quantized wider than the announced Q̄a
+    /// is rejected as a protocol violation. Entries are dropped when a
+    /// session's EOS reply is served. Mutex-guarded so `handle` stays
+    /// `&self` under many-to-one sharing.
+    control: Mutex<HashMap<u64, Reconfig>>,
+    /// Reconfigurations applied over the life of the server.
+    reconfigs_applied: AtomicU64,
 }
 
 impl CloudServer {
@@ -71,6 +84,8 @@ impl CloudServer {
             tokens_stacked: AtomicU64::new(0),
             scratch: ScratchPool::new(),
             stacked: true,
+            control: Mutex::new(HashMap::new()),
+            reconfigs_applied: AtomicU64::new(0),
         }
     }
 
@@ -89,35 +104,146 @@ impl CloudServer {
         self.tokens_stacked.load(Ordering::Relaxed)
     }
 
+    /// Control-plane reconfigurations applied over the life of the
+    /// server (observability for tests and the adaptation bench).
+    pub fn reconfigs_applied(&self) -> u64 {
+        self.reconfigs_applied.load(Ordering::Relaxed)
+    }
+
+    /// Apply a session's announced transmission settings mid-stream.
+    /// Stale epochs (≤ the last applied) are ignored, so duplicated or
+    /// reordered control frames cannot roll a session's settings back.
+    pub fn apply_reconfig(&self, rc: &Reconfig) {
+        let mut control = self.control.lock().expect("control plane poisoned");
+        if let Some(prev) = control.get(&rc.request_id) {
+            if prev.epoch >= rc.epoch {
+                return;
+            }
+        }
+        control.insert(rc.request_id, *rc);
+        self.reconfigs_applied.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Hold an arriving payload to its session's announced settings: no
+    /// transmitted tensor — the hidden block OR the KV caches that
+    /// dominate the payload's bytes — may be quantized at or above the
+    /// announced Q̄a. TAB-Q spends one bit on the sign, so a compliant
+    /// edge's chosen magnitude bits are always ≤ Q̄a − 1 — the strict
+    /// `<` catches even a single-rung violation (an edge still
+    /// transmitting at Q̄a = 4 after a 4 → 3 downgrade was announced).
+    fn check_control(&self, payload: &SplitPayload) -> Result<()> {
+        let control = self.control.lock().expect("control plane poisoned");
+        let Some(rc) = control.get(&payload.request_id) else {
+            return Ok(());
+        };
+        anyhow::ensure!(
+            payload.hidden.chosen_bits < rc.qa_bits,
+            "request {}: payload quantized at {} bits exceeds the announced Q̄a = {}",
+            payload.request_id,
+            payload.hidden.chosen_bits,
+            rc.qa_bits
+        );
+        if let Some(kv) = &payload.kv {
+            for (k, v) in &kv.layers {
+                anyhow::ensure!(
+                    k.chosen_bits < rc.qa_bits && v.chosen_bits < rc.qa_bits,
+                    "request {}: KV block quantized at {} bits exceeds the announced Q̄a = {}",
+                    payload.request_id,
+                    k.chosen_bits.max(v.chosen_bits),
+                    rc.qa_bits
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Forget a finished session's control-plane entry (EOS served).
+    fn retire_control(&self, request_id: u64, reply: &CloudReply) {
+        if reply.token == 0 {
+            self.retire_request(request_id);
+        }
+    }
+
+    /// Drop a session's control-plane entry unconditionally. Drivers call
+    /// this when a session ends for any non-EOS reason (budget
+    /// exhaustion, cancellation, error) and `serve_connection` sweeps the
+    /// ids its connection announced — otherwise entries would accumulate
+    /// on a long-lived server and a later session reusing the request id
+    /// would be held to a dead session's announcement.
+    pub fn retire_request(&self, request_id: u64) {
+        self.control.lock().expect("control plane poisoned").remove(&request_id);
+    }
+
     /// Serve one payload. Returns (reply, scaled_compute_seconds).
     pub fn handle(&self, payload: &SplitPayload) -> Result<(CloudReply, f64)> {
         let t0 = Instant::now();
+        self.check_control(payload)?;
         let reply = self.serve_payload(payload)?;
+        self.retire_control(payload.request_id, &reply);
         self.tokens_generated.fetch_add(1, Ordering::Relaxed);
         let compute_s = self.profile.scale(t0.elapsed().as_secs_f64());
         Ok((reply, compute_s))
     }
 
-    /// Serve one encoded payload frame: strict decode → `handle` → encoded
-    /// reply frame. The server's compute seconds ride in the reply frame's
-    /// timing prefix, so a remote edge keeps the same `StepStats` shape as
-    /// the in-process drivers. This is the unit of work of the
+    /// Serve one encoded frame: strict decode → dispatch on kind.
+    /// Payload frames are served (`handle`) and produce an encoded reply
+    /// frame; Reconfig frames update the control plane and produce no
+    /// reply (`Ok(None)`). The server's compute seconds ride in the reply
+    /// frame's timing prefix, so a remote edge keeps the same `StepStats`
+    /// shape as the in-process drivers. This is the unit of work of the
     /// cross-process `splitserve cloud` loop.
-    pub fn serve_frame(&self, frame_bytes: &[u8]) -> Result<Vec<u8>> {
-        let payload = crate::wire::decode_payload_frame(frame_bytes)?;
-        let (reply, cloud_s) = self.handle(&payload)?;
-        Ok(crate::wire::encode_reply_frame(&reply, cloud_s))
+    pub fn serve_frame(&self, frame_bytes: &[u8]) -> Result<Option<Vec<u8>>> {
+        let (kind, _) = crate::wire::decode_frame(frame_bytes)?;
+        match kind {
+            FrameKind::Reconfig => {
+                let rc = crate::wire::decode_reconfig_frame(frame_bytes)?;
+                self.apply_reconfig(&rc);
+                Ok(None)
+            }
+            FrameKind::Payload => {
+                let payload = crate::wire::decode_payload_frame(frame_bytes)?;
+                let (reply, cloud_s) = self.handle(&payload)?;
+                Ok(Some(crate::wire::encode_reply_frame(&reply, cloud_s)))
+            }
+            FrameKind::Reply => anyhow::bail!("cloud server received a Reply frame"),
+        }
     }
 
     /// Blocking frames-in/frames-out loop over one transport connection;
     /// returns the number of payloads served once the peer hangs up
-    /// cleanly at a frame boundary.
+    /// cleanly at a frame boundary. Control (Reconfig) frames are applied
+    /// in stream order and answered with nothing; when the connection
+    /// ends (cleanly or not) every announcement it made is retired so a
+    /// later connection reusing a request id starts from a clean slate.
     pub fn serve_connection(&self, transport: &mut dyn crate::wire::Transport) -> Result<u64> {
+        let mut announced: Vec<u64> = Vec::new();
+        let result = self.serve_connection_inner(transport, &mut announced);
+        for id in announced {
+            self.retire_request(id);
+        }
+        result
+    }
+
+    fn serve_connection_inner(
+        &self,
+        transport: &mut dyn crate::wire::Transport,
+        announced: &mut Vec<u64>,
+    ) -> Result<u64> {
         let mut served = 0u64;
         while let Some((frame_bytes, _)) = transport.recv_eof()? {
-            let reply_frame = self.serve_frame(&frame_bytes)?;
-            transport.send(&reply_frame)?;
-            served += 1;
+            // Dispatch control frames here (decoded once, id recorded for
+            // the end-of-connection sweep); everything else goes through
+            // the standalone per-frame entry point.
+            if crate::wire::decode_frame(&frame_bytes)?.0 == FrameKind::Reconfig {
+                let rc = crate::wire::decode_reconfig_frame(&frame_bytes)?;
+                self.apply_reconfig(&rc);
+                announced.push(rc.request_id);
+                continue;
+            }
+            if let Some(reply_frame) = self.serve_frame(&frame_bytes)? {
+                transport.send(&reply_frame)?;
+                served += 1;
+            }
         }
         Ok(served)
     }
@@ -233,6 +359,7 @@ impl CloudServer {
         let mut hs: Vec<f32> = Vec::with_capacity(b * d);
         let mut positions: Vec<usize> = Vec::with_capacity(b);
         for &i in stacked {
+            self.check_control(&payloads[i])?;
             let (c, h) = self.decode_inputs(&payloads[i])?;
             hs.extend_from_slice(&h);
             positions.push(payloads[i].pos);
@@ -248,7 +375,7 @@ impl CloudServer {
         self.tokens_stacked.fetch_add(b as u64, Ordering::Relaxed);
         let wall_s = self.profile.scale(t0.elapsed().as_secs_f64());
         let per_payload_s = wall_s / b as f64;
-        let out = stacked
+        let out: Vec<(CloudReply, f64)> = stacked
             .iter()
             .enumerate()
             .map(|(bi, &i)| {
@@ -256,6 +383,9 @@ impl CloudServer {
                 (Self::decode_reply(&payloads[i], &caches[bi], row, kvw), per_payload_s)
             })
             .collect();
+        for (bi, &i) in stacked.iter().enumerate() {
+            self.retire_control(payloads[i].request_id, &out[bi].0);
+        }
         Ok((out, wall_s))
     }
 

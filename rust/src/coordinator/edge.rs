@@ -145,13 +145,16 @@ impl EdgeDevice {
 
     /// One decode step: embed `token`, run the front segment at position
     /// `pos = seq_len`, append to histories, and build the payload under
-    /// the given transmission settings.
+    /// the given transmission settings. `q_bar_override` / `tau_override`
+    /// replace the device's configured Q̄a / τ for this step (the
+    /// adaptive control plane reconfigures both mid-stream).
     pub fn decode_step(
         &self,
         state: &mut EdgeRequestState,
         token: u32,
         include_kv: bool,
         q_bar_override: Option<u32>,
+        tau_override: Option<f32>,
     ) -> Result<(SplitPayload, f64)> {
         let cfg = self.cfg();
         let pos = state.seq_len();
@@ -167,6 +170,9 @@ impl EdgeDevice {
         let mut comp = self.compression;
         if let Some(q) = q_bar_override {
             comp.q_bar = q;
+        }
+        if let Some(t) = tau_override {
+            comp.tau = t;
         }
         let d = cfg.d_model;
         let w = state.seq_len();
@@ -253,6 +259,7 @@ impl EdgeDevice {
         &self,
         state: &EdgeRequestState,
         settings: TxSettings,
+        tau_override: Option<f32>,
     ) -> anyhow::Result<SplitPayload> {
         let cfg = &self.node.weights.cfg;
         let d = cfg.d_model;
@@ -260,6 +267,9 @@ impl EdgeDevice {
         let pos = w - 1;
         let mut comp = self.compression;
         comp.q_bar = settings.qa_bits;
+        if let Some(t) = tau_override {
+            comp.tau = t;
+        }
         let last_hidden = &state.hidden_history[pos * d..w * d];
         let (hidden, kv) = if settings.include_kv {
             let hidden = self.compress_block(last_hidden, 1, d, &comp);

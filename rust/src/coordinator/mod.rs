@@ -7,6 +7,9 @@
 //! drivers: `pipeline` (one blocking session) and `serve_loop` (N
 //! interleaved sessions sharing one `CloudServer` with continuous
 //! batching). `sim` stays the closed-form fast path for capacity planning.
+//! The serve loop optionally carries the online adaptive control plane
+//! (`crate::adapt`): link telemetry → Eq. 8 re-planning → per-session
+//! `Reconfig` frames applied mid-stream by sessions and the cloud alike.
 
 pub mod batcher;
 pub mod builder;

@@ -118,6 +118,16 @@ impl EdgeClient {
         EdgeClient { edge, port: EdgePort::new(WireTransport::Socket(transport)), controller: None }
     }
 
+    /// Push a control-plane reconfiguration to the remote cloud (frame
+    /// kind 3): the server records the announced settings for the
+    /// session and holds its subsequent payloads to them. The frame is
+    /// one-way — the server sends no reply for control traffic — so the
+    /// payload/reply rhythm of `generate` is undisturbed.
+    pub fn reconfigure(&mut self, rc: &crate::adapt::Reconfig) -> Result<()> {
+        self.port.send_reconfig(rc)?;
+        Ok(())
+    }
+
     /// Run a full request to completion against the remote cloud.
     pub fn generate(&mut self, req: &Request) -> Result<GenerationResult> {
         let EdgeClient { edge, port, controller } = self;

@@ -37,7 +37,10 @@
 //! length prefix, because a rANS stream cannot delimit itself inside a
 //! larger frame body. The tensor layout itself is unchanged from v2
 //! (64-bit-state interleaved rANS, strict truncation-detecting decode,
-//! no retained uncompressed codes).
+//! no retained uncompressed codes). Wire format v4 leaves every layout
+//! below untouched and adds one frame kind: the control-plane
+//! `adapt::Reconfig` (kind 3), the adaptive control plane's mid-stream
+//! actuation message.
 //!
 //! Compression runs on the fused engine (`quant::fused`): single-pass
 //! TS+stats, streaming adaptive bit search, scratch-reused rANS tables.

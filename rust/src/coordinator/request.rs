@@ -67,6 +67,9 @@ pub struct GenerationResult {
     pub steps: Vec<StepStats>,
     /// Tokens dropped by the Algorithm-2 early exit (0 = none).
     pub tokens_dropped: usize,
+    /// Mid-stream control-plane reconfigurations applied (0 = the static
+    /// plan served the whole request).
+    pub reconfigs: usize,
     /// Settings in force when generation finished.
     pub final_settings: Option<TxSettings>,
 }

@@ -49,6 +49,7 @@ use super::protocol::SplitPayload;
 use super::request::{GenerationResult, Request};
 use super::router::{RouteDecision, Router};
 use super::session::{Session, SessionAction};
+use crate::adapt::{AdaptiveController, SessionView};
 use crate::channel::{LinkSim, TransferOutcome};
 use crate::planner::EarlyExitController;
 use crate::wire::{CloudPort, EdgePort, LinkTransport, WireTransport};
@@ -112,6 +113,14 @@ pub struct ServeReport {
     pub peak_batch: usize,
     /// (request_id, error) for sessions torn down by an edge-side error.
     pub errors: Vec<(u64, String)>,
+    /// Adaptation counters: per-session reconfigurations actually applied
+    /// mid-stream, device-level Eq. 8 re-plans, and the control-plane
+    /// bytes those reconfigurations cost on the wire. All zero when the
+    /// control plane is off OR the channel never left the deadband (the
+    /// static≡adaptive invariant).
+    pub reconfigs: u64,
+    pub replans: u64,
+    pub control_bytes: u64,
 }
 
 impl ServeReport {
@@ -143,6 +152,15 @@ struct ActiveSession {
     /// Tokens already pushed to the streaming sink.
     streamed: usize,
     failed: bool,
+    /// Control-plane bookkeeping: reconfigurations applied so far, the
+    /// plan the LAST reconfiguration (or the static deployment) set —
+    /// distinct from the session's live settings, which Algorithm-2
+    /// escalations may move below it — and cooldown counters.
+    epoch: u32,
+    applied_bits: u32,
+    applied_kv: bool,
+    decode_steps: u64,
+    last_reconfig_step: u64,
 }
 
 /// The many-to-one scheduler: drives N concurrent sessions across
@@ -155,6 +173,12 @@ pub struct ServeLoop {
     pub params: BatcherParams,
     /// Early-exit controller applied to every session (None = best effort).
     pub controller: Option<EarlyExitController>,
+    /// Online control plane (None = execute the static plan forever).
+    /// Fed by the per-frame transfer outcomes of step 6; consulted
+    /// between decode steps, where its per-session `Reconfig` decisions
+    /// are sent over the wire (charged as real control bytes), applied by
+    /// the shared cloud, and installed into the session.
+    pub adapt: Option<AdaptiveController>,
 }
 
 impl ServeLoop {
@@ -164,7 +188,7 @@ impl ServeLoop {
         router: Router,
         params: BatcherParams,
     ) -> ServeLoop {
-        ServeLoop { cloud, edges, router, params, controller: None }
+        ServeLoop { cloud, edges, router, params, controller: None, adapt: None }
     }
 
     fn least_loaded_device(&self) -> usize {
@@ -225,6 +249,7 @@ impl ServeLoop {
                     RouteDecision::CloudFallback => (self.least_loaded_device(), false),
                 };
                 let arrival_s = req.arrival_s;
+                let base_bits = self.edges[device].edge.compression.q_bar;
                 let session = Session::for_edge(req, &self.edges[device].edge, self.controller);
                 active.push(ActiveSession {
                     session,
@@ -234,6 +259,11 @@ impl ServeLoop {
                     arrival_s,
                     streamed: 0,
                     failed: false,
+                    epoch: 0,
+                    applied_bits: base_bits,
+                    applied_kv: true,
+                    decode_steps: 0,
+                    last_reconfig_step: 0,
                 });
                 admitted_any = true;
             }
@@ -305,6 +335,13 @@ impl ServeLoop {
                 let ep = &mut self.edges[a.device];
                 ep.cloud_port.send_reply(&reply, cloud_s)?;
                 let (reply, server_s, down) = ep.port.recv_reply()?;
+                // Telemetry: both directions of this exchange crossed the
+                // device's link — feed the control plane's estimator.
+                if let Some(ctrl) = self.adapt.as_mut() {
+                    ctrl.observe(a.device, &up);
+                    ctrl.observe(a.device, &down);
+                }
+                a.decode_steps += 1;
                 a.session.on_reply(&ep.edge, &reply, server_s, up, down);
                 device_busy_s[a.device] += edge_s + up.latency_s + down.latency_s;
             }
@@ -325,6 +362,10 @@ impl ServeLoop {
                 if a.routed {
                     self.router.complete(a.device, a.expected);
                 }
+                // Sessions can end without an EOS reply (budget, cancel,
+                // error): sweep the cloud's control-plane entry so it
+                // cannot outlive the session.
+                self.cloud.retire_request(a.session.request_id());
                 let cancelled = a.session.is_cancelled();
                 let res = a.session.into_result();
                 report.total_tokens += res.tokens.len() as u64;
@@ -336,6 +377,62 @@ impl ServeLoop {
                     report.latencies_s.push(clock - a.arrival_s);
                 }
                 report.results.push(res);
+            }
+
+            // 7.5 control plane: between decode steps, the adaptive
+            // controller (when installed) re-plans each device against
+            // its ESTIMATED link state, then reconciles every surviving
+            // session with its device's plan. Emitted reconfigurations
+            // are real frames: encoded, charged on the device's uplink
+            // (control bytes are accounted), applied by the shared cloud
+            // server, and only then installed into the session — the
+            // next payload the session builds already honors them, and
+            // the cloud will hold it to the announced precision.
+            if self.adapt.is_some() {
+                let mut control_s = 0.0f64;
+                for d in 0..self.edges.len() {
+                    self.adapt.as_mut().expect("checked").device_update(d);
+                }
+                for a in active.iter_mut() {
+                    if a.session.is_terminal() {
+                        continue;
+                    }
+                    let Some(seq_len) = a.session.seq_len() else {
+                        continue; // prefill still pending: nothing to adapt yet
+                    };
+                    let cfg = &self.edges[a.device].edge.node.weights.cfg;
+                    let view = SessionView {
+                        request_id: a.session.request_id(),
+                        epoch: a.epoch,
+                        seq_len,
+                        remaining_budget: a.session.remaining_budget(),
+                        prefill_len: cfg.prefill_len,
+                        max_seq: cfg.max_seq,
+                        applied_bits: a.applied_bits,
+                        applied_kv: a.applied_kv,
+                        kv_shippable: !a.session.cloud_kv_stale(),
+                        steps_since_reconfig: a.decode_steps - a.last_reconfig_step,
+                    };
+                    let ctrl = self.adapt.as_mut().expect("checked");
+                    if let Some(rc) = ctrl.reconcile(a.device, &view) {
+                        let ep = &mut self.edges[a.device];
+                        let up = ep.port.send_reconfig(&rc)?;
+                        let (applied, _) = ep.cloud_port.recv_reconfig()?;
+                        self.cloud.apply_reconfig(&applied);
+                        a.session.apply_reconfig(&rc);
+                        a.epoch = rc.epoch;
+                        a.applied_bits = rc.qa_bits;
+                        // Read the I_kv actually in force back from the
+                        // session — it refuses KV-shipping upgrades once
+                        // its cloud-KV copy is stale.
+                        a.applied_kv = a.session.settings().include_kv;
+                        a.last_reconfig_step = a.decode_steps;
+                        control_s += up.latency_s;
+                        report.reconfigs += 1;
+                        report.control_bytes += up.payload_bytes;
+                    }
+                }
+                clock += control_s;
             }
 
             // 8. advance the simulated clock by one continuous-batching
@@ -368,6 +465,9 @@ impl ServeLoop {
         }
 
         report.clock_s = clock;
+        if let Some(ctrl) = &self.adapt {
+            report.replans = ctrl.replans();
+        }
         Ok(report)
     }
 }

@@ -33,6 +33,7 @@ use anyhow::Result;
 use super::edge::{EdgeDevice, EdgeRequestState};
 use super::protocol::{CloudReply, SplitPayload};
 use super::request::{GenerationResult, Request, StepStats};
+use crate::adapt::Reconfig;
 use crate::channel::TransferOutcome;
 use crate::planner::{EarlyExitController, ExitDecision, TxSettings};
 
@@ -78,8 +79,12 @@ struct PendingTx {
 pub struct Session {
     request: Request,
     phase: SessionPhase,
-    /// Current transmission settings (mutated by Algorithm-2 escalations).
+    /// Current transmission settings (mutated by Algorithm-2 escalations
+    /// and by control-plane reconfigurations).
     settings: TxSettings,
+    /// TS threshold override installed by the last reconfiguration
+    /// (None = the edge device's configured τ).
+    tau_override: Option<f32>,
     controller: Option<EarlyExitController>,
     /// Edge-held request state; None until prefill runs.
     state: Option<EdgeRequestState>,
@@ -87,6 +92,10 @@ pub struct Session {
     next_token: u32,
     /// Decode budget remaining (max_new_tokens countdown).
     budget: usize,
+    /// True once a decode step has been served with I_kv = 0: the cloud
+    /// returned no KV rows for it, so the edge-held cloud-layer caches
+    /// are missing those positions and must never be shipped again.
+    cloud_kv_stale: bool,
     pending: Option<PendingTx>,
     result: GenerationResult,
 }
@@ -104,10 +113,12 @@ impl Session {
             request,
             phase: SessionPhase::NeedPrefill,
             settings,
+            tau_override: None,
             controller,
             state: None,
             next_token: 0,
             budget,
+            cloud_kv_stale: false,
             pending: None,
             result,
         }
@@ -158,6 +169,50 @@ impl Session {
     /// the serve loop's iteration clock).
     pub fn pending_edge_s(&self) -> Option<f64> {
         self.pending.as_ref().map(|p| p.edge_s)
+    }
+
+    /// Transmission settings currently in force.
+    pub fn settings(&self) -> TxSettings {
+        self.settings
+    }
+
+    /// Tokens of prompt + generation held so far (None before prefill).
+    pub fn seq_len(&self) -> Option<usize> {
+        self.state.as_ref().map(|s| s.seq_len())
+    }
+
+    /// Decode-token budget still unspent.
+    pub fn remaining_budget(&self) -> usize {
+        self.budget
+    }
+
+    /// True once the edge-held cloud-KV copy is stale (a step was served
+    /// statelessly) — the session can never ship KV again.
+    pub fn cloud_kv_stale(&self) -> bool {
+        self.cloud_kv_stale
+    }
+
+    /// Apply a control-plane reconfiguration: new (τ, Q̄a, I_kv) take
+    /// effect from the next decode step; a budget cap shrinks (never
+    /// grows) the remaining token budget L. No-op on a terminal session.
+    /// I_kv = 0 is taken as a preference — `poll` still reverts to KV
+    /// shipping whenever the sequence outgrows the prefill width — and
+    /// once a session has served a step statelessly its cloud-KV copy is
+    /// stale (the cloud returned no rows for it), so an I_kv = 1 upgrade
+    /// is refused: the session stays on full-history payloads, which the
+    /// controller only ever commits to for horizons the prefill width
+    /// can serve end to end.
+    pub fn apply_reconfig(&mut self, rc: &Reconfig) {
+        if self.is_terminal() {
+            return;
+        }
+        self.settings.qa_bits = rc.qa_bits;
+        self.settings.include_kv = rc.include_kv && !self.cloud_kv_stale;
+        self.tau_override = Some(rc.tau);
+        if rc.budget_cap != Reconfig::NO_BUDGET_CAP {
+            self.budget = self.budget.min(rc.budget_cap as usize);
+        }
+        self.result.reconfigs += 1;
     }
 
     /// Tear the session down mid-stream. Idempotent; a no-op once Done.
@@ -228,18 +283,27 @@ impl Session {
         // sequence outgrows the prefill width (the cloud can no longer
         // recompute from scratch) — revert to shipping KV rather than
         // letting decode_step reject the request; the controller may
-        // still re-escalate the bit budget below.
+        // still re-escalate the bit budget below. If the cloud-KV copy
+        // went stale while stateless, reverting would ship caches missing
+        // those positions and decode silently wrong tokens — end the
+        // request instead (the dropped remainder is reported).
         let prefill_len = edge.node.weights.cfg.prefill_len;
-        let state = self.state.as_mut().expect("decode before prefill");
-        if !self.settings.include_kv && state.seq_len() + 1 > prefill_len {
+        let next_len = self.state.as_ref().expect("decode before prefill").seq_len() + 1;
+        if !self.settings.include_kv && next_len > prefill_len {
+            if self.cloud_kv_stale {
+                self.result.tokens_dropped = self.budget;
+                return Ok(self.finish());
+            }
             self.settings.include_kv = true;
         }
+        let state = self.state.as_mut().expect("decode before prefill");
         // Edge compute + provisional payload under current settings.
         let (mut payload, edge_s) = edge.decode_step(
             state,
             token,
             self.settings.include_kv,
             Some(self.settings.qa_bits),
+            self.tau_override,
         )?;
 
         // Algorithm 2, folded into the transition: check the deadline,
@@ -255,7 +319,7 @@ impl Session {
                 ExitDecision::Proceed { .. } => {}
                 ExitDecision::Escalate { settings, .. } => {
                     self.settings = settings;
-                    payload = edge.rebuild_payload(state, settings)?;
+                    payload = edge.rebuild_payload(state, settings, self.tau_override)?;
                 }
                 ExitDecision::ReduceTokens { tokens_to_drop, .. } => {
                     self.result.tokens_dropped = self.budget.min(tokens_to_drop);
@@ -309,6 +373,11 @@ impl Session {
         if pending.is_prefill || pending.kv_transmitted {
             let state = self.state.as_mut().expect("reply before prefill");
             edge.absorb_reply(state, pending.pos, &reply.new_kv_rows);
+        } else {
+            // Stateless step: the cloud recomputed from the full hidden
+            // history and returned no KV rows — the edge-held cloud
+            // caches now miss this position for good.
+            self.cloud_kv_stale = true;
         }
         self.next_token = reply.token;
         self.phase = SessionPhase::ReadyToDecode;

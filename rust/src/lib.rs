@@ -3,6 +3,7 @@ pub mod model;
 pub mod quant;
 pub mod memory;
 pub mod channel;
+pub mod adapt;
 pub mod wire;
 pub mod planner;
 pub mod runtime;

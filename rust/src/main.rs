@@ -14,12 +14,14 @@ use std::rc::Rc;
 use std::time::Duration;
 
 use anyhow::Result;
+use splitserve::adapt::AdaptPolicy;
+use splitserve::channel::ChannelTrace;
 use splitserve::coordinator::{
     build_pipeline, build_serve_loop, DeploymentSpec, EdgeClient, Request, ServeSpec,
     TokenControl,
 };
 use splitserve::model::ModelConfig;
-use splitserve::planner::{plan, AnalyticAccuracyModel, PlanInputs};
+use splitserve::planner::{plan, AnalyticAccuracyModel, PlanChoice, PlanInputs};
 use splitserve::runtime::Engine;
 use splitserve::trace::{generate_trace, WorkloadSpec};
 use splitserve::util::cli::Args;
@@ -33,8 +35,12 @@ USAGE: splitserve <subcommand> [flags]
   doctor                                probe PJRT + artifacts
   models                                list model configurations
   plan      --model sim7b --budget-mb 16 --w-bar 128
+            (prints the Eq. 8 PlanChoice as JSON; exits 2 when infeasible)
   generate  --model sim7b --layers 8 --split 4 --prompt 5,6,7 --max-new 12
   serve     --model sim7b --layers 8 --devices 2 --requests 6 --max-batch 8
+            [--adapt] [--scenario constant|step|drift|outage]
+            (--adapt turns on the online control plane; --scenario replays
+             a time-varying channel trace on every device link)
   cloud     --listen 127.0.0.1:7433 --model sim7b --layers 8 --split 4 [--once]
   edge      --connect 127.0.0.1:7433 --model sim7b --layers 8 --split 4 \\
             --prompt 5,6,7 --max-new 12
@@ -62,6 +68,23 @@ fn print_generation(res: &splitserve::coordinator::GenerationResult) {
         res.total_downlink_bytes(),
         res.tokens_dropped
     );
+}
+
+/// The chosen Eq. 8 configuration as a line of JSON (the `plan`
+/// subcommand's machine-readable contract).
+fn plan_choice_json(c: &PlanChoice) -> String {
+    format!(
+        "{{\"split_layer\": {}, \"qw_front\": {}, \"qw_back\": {}, \"qa_front\": {}, \
+         \"qa_back\": {}, \"psi\": {}, \"edge_bytes\": {}, \"predicted_drop\": {:.6}}}",
+        c.opsc.split_layer,
+        c.opsc.qw_front,
+        c.opsc.qw_back,
+        c.qa.front,
+        c.qa.back,
+        c.psi,
+        c.edge_bytes,
+        c.predicted_drop
+    )
 }
 
 fn model_from(args: &Args) -> Result<ModelConfig> {
@@ -114,17 +137,17 @@ fn main() -> Result<()> {
             let mut inputs = PlanInputs::defaults(cfg.clone(), budget, w_bar);
             inputs.acc_tolerance = args.f64_or("acc-tol", 1.0);
             match plan(&inputs, &AnalyticAccuracyModel) {
-                Some(c) => println!(
-                    "split l={} Qw_front={}b Qa={{{}b,{}b}} psi={} edge={:.2} MB drop~{:.2}%",
-                    c.opsc.split_layer,
-                    c.opsc.qw_front,
-                    c.qa.front,
-                    c.qa.back,
-                    c.psi,
-                    c.edge_bytes as f64 / (1024.0 * 1024.0),
-                    c.predicted_drop
-                ),
-                None => println!("no feasible configuration under {budget} bytes at W={w_bar}"),
+                Some(c) => println!("{}", plan_choice_json(&c)),
+                None => {
+                    // Machine-readable failure: message on stderr, exit
+                    // code 2 (never a panic on the infeasible None).
+                    eprintln!(
+                        "plan: no feasible configuration under {budget} bytes at W={w_bar} \
+                         (accuracy tolerance {})",
+                        inputs.acc_tolerance
+                    );
+                    std::process::exit(2);
+                }
             }
         }
         Some("generate") => {
@@ -152,6 +175,18 @@ fn main() -> Result<()> {
             spec.batcher.max_batch = args.usize_or("max-batch", spec.batcher.max_batch);
             if let Some(d) = args.flag("deadline-ms") {
                 spec.deployment.deadline_s = Some(d.parse::<f64>()? / 1e3);
+            }
+            if let Some(name) = args.flag("scenario") {
+                spec.deployment.channel_trace = Some(
+                    ChannelTrace::by_name(name).ok_or_else(|| {
+                        anyhow::anyhow!(
+                            "unknown scenario '{name}' (try: constant, step, drift, outage)"
+                        )
+                    })?,
+                );
+            }
+            if args.has("adapt") {
+                spec.adapt = Some(AdaptPolicy::default());
             }
             let mut serve = build_serve_loop(engine, &spec)?;
             let trace = generate_trace(&WorkloadSpec { n_requests, ..Default::default() });
@@ -185,6 +220,15 @@ fn main() -> Result<()> {
                 report.server_busy_s,
                 serve.cloud.tokens_generated()
             );
+            if serve.adapt.is_some() {
+                println!(
+                    "adaptation: {} re-plans | {} reconfigs | {} control bytes | cloud applied {}",
+                    report.replans,
+                    report.reconfigs,
+                    report.control_bytes,
+                    serve.cloud.reconfigs_applied()
+                );
+            }
         }
         Some("cloud") => {
             let cfg = model_from(&args)?;

@@ -8,7 +8,7 @@
 //! not an estimate. The full frame adds [`PAYLOAD_OVERHEAD`] /
 //! [`REPLY_OVERHEAD`] fixed bytes on top.
 //!
-//! # Body layouts (wire format v3, little-endian throughout)
+//! # Body layouts (wire format v4, little-endian throughout)
 //!
 //! `CompressedTensor`:
 //! ```text
@@ -36,7 +36,12 @@
 //! `wire_bytes()`): `[request_id u64][token u32][entropy f32]
 //! [n_layers u16][row_len u32]` + per layer `row_len` f32 k-row then
 //! `row_len` f32 v-row.
+//!
+//! `Reconfig` (frame kind 3, new in v4 — the control plane's mid-stream
+//! actuation message): `[request_id u64][epoch u32][budget_cap u32]
+//! [tau f32][qa_bits u8][flags u8]` (22 bytes; flags bit0 = I_kv).
 
+use crate::adapt::Reconfig;
 use crate::coordinator::protocol::{CloudReply, CompressedKv, CompressedTensor, SplitPayload};
 use crate::coordinator::sampling::SamplingSpec;
 use crate::quant::rans::CodedStream;
@@ -50,10 +55,15 @@ pub const PAYLOAD_OVERHEAD: u64 = FRAME_OVERHEAD;
 /// Fixed bytes a reply frame adds on top of `CloudReply::wire_bytes()`
 /// (frame + the 8-byte server-compute-seconds timing prefix).
 pub const REPLY_OVERHEAD: u64 = FRAME_OVERHEAD + 8;
+/// Fixed bytes a reconfig frame adds on top of `Reconfig::wire_bytes()`.
+pub const RECONFIG_OVERHEAD: u64 = FRAME_OVERHEAD;
 
 const FLAG_PREFILL: u8 = 1;
 const FLAG_KV: u8 = 1 << 1;
 const FLAG_TOPK: u8 = 1 << 2;
+
+/// Reconfig body flag: I_kv (ship the KV cache with each decode step).
+const RC_FLAG_KV: u8 = 1;
 
 fn malformed(m: impl Into<String>) -> WireError {
     WireError::Malformed(m.into())
@@ -403,4 +413,73 @@ pub fn decode_reply_frame(bytes: &[u8]) -> Result<(CloudReply, f64), WireError> 
     let out = read_reply(&mut r)?;
     r.done()?;
     Ok(out)
+}
+
+fn write_reconfig(out: &mut Vec<u8>, rc: &Reconfig) {
+    // 2..=16 is the data plane's legal Q̄a range (quant::fused asserts
+    // it at compression) — an out-of-range announcement fails loudly at
+    // the sender instead of panicking a session's compressor later.
+    assert!(
+        (2..=16).contains(&rc.qa_bits),
+        "reconfig Q̄a of {} bits is outside the legal 2..=16 range",
+        rc.qa_bits
+    );
+    out.extend_from_slice(&rc.request_id.to_le_bytes());
+    out.extend_from_slice(&rc.epoch.to_le_bytes());
+    out.extend_from_slice(&rc.budget_cap.to_le_bytes());
+    out.extend_from_slice(&rc.tau.to_le_bytes());
+    out.push(rc.qa_bits as u8);
+    out.push(if rc.include_kv { RC_FLAG_KV } else { 0 });
+}
+
+fn read_reconfig(r: &mut Reader) -> Result<Reconfig, WireError> {
+    let request_id = r.u64()?;
+    let epoch = r.u32()?;
+    let budget_cap = r.u32()?;
+    let tau = r.f32()?;
+    let qa_bits = r.u8()? as u32;
+    if !(2..=16).contains(&qa_bits) {
+        return Err(malformed(format!("reconfig Q̄a of {qa_bits} bits out of range")));
+    }
+    if !tau.is_finite() || tau < 0.0 {
+        return Err(malformed(format!("reconfig τ = {tau} is not a valid threshold")));
+    }
+    let flags = r.u8()?;
+    if flags & !RC_FLAG_KV != 0 {
+        return Err(malformed(format!("unknown reconfig flags {flags:#04x}")));
+    }
+    Ok(Reconfig {
+        request_id,
+        epoch,
+        qa_bits,
+        tau,
+        include_kv: flags & RC_FLAG_KV != 0,
+        budget_cap,
+    })
+}
+
+/// Encode one control-plane reconfiguration as a complete frame. Body
+/// length is asserted equal to `wire_bytes()` — control traffic is
+/// byte-accounted exactly like the data plane.
+pub fn encode_reconfig_frame(rc: &Reconfig) -> Vec<u8> {
+    let mut body = Vec::with_capacity(rc.wire_bytes() as usize);
+    write_reconfig(&mut body, rc);
+    debug_assert_eq!(
+        body.len() as u64,
+        rc.wire_bytes(),
+        "reconfig body must encode to exactly wire_bytes()"
+    );
+    frame::encode_frame(FrameKind::Reconfig, &body)
+}
+
+/// Strict decode of a reconfig frame (kind, CRC, structure, consumption).
+pub fn decode_reconfig_frame(bytes: &[u8]) -> Result<Reconfig, WireError> {
+    let (kind, body) = frame::decode_frame(bytes)?;
+    if kind != FrameKind::Reconfig {
+        return Err(WireError::WrongKind { want: FrameKind::Reconfig, got: kind });
+    }
+    let mut r = Reader::new(body);
+    let rc = read_reconfig(&mut r)?;
+    r.done()?;
+    Ok(rc)
 }

@@ -2,8 +2,8 @@
 //!
 //! ```text
 //! [magic   u32]  0x53504C57 ("SPLW", little-endian "WLPS" on the wire)
-//! [version u8 ]  3 (wire format v3: v2 tensor layout inside real frames)
-//! [kind    u8 ]  1 = SplitPayload, 2 = CloudReply
+//! [version u8 ]  4 (wire format v4: v3 layouts + the Reconfig control frame)
+//! [kind    u8 ]  1 = SplitPayload, 2 = CloudReply, 3 = Reconfig
 //! [len     u32]  body length in bytes
 //! [body       ]  len bytes (see `wire::codec` for the per-kind layout)
 //! [crc32   u32]  IEEE CRC-32 over version, kind, len and body
@@ -32,9 +32,10 @@ pub const MAGIC: u32 = 0x53504C57;
 /// allocates or blocks reading gigabytes it will only throw away at the
 /// CRC check.
 pub const MAX_BODY_BYTES: usize = 256 << 20;
-/// Wire format v3: the v2 tensor layout carried inside versioned frames
-/// (the rANS branch gained an explicit length prefix; see `wire::codec`).
-pub const VERSION: u8 = 3;
+/// Wire format v4: the v3 data-plane layouts unchanged, plus the
+/// control-plane `Reconfig` frame kind (the adaptive control plane's
+/// mid-stream actuation message; see `wire::codec` and `adapt`).
+pub const VERSION: u8 = 4;
 
 /// What a frame's body contains.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -43,6 +44,9 @@ pub enum FrameKind {
     Payload = 1,
     /// A cloud→edge `CloudReply` (prefixed by the server compute seconds).
     Reply = 2,
+    /// A control-plane `adapt::Reconfig`: a session's new transmission
+    /// settings, announced mid-stream. Carries no reply of its own.
+    Reconfig = 3,
 }
 
 impl FrameKind {
@@ -50,6 +54,7 @@ impl FrameKind {
         match b {
             1 => Ok(FrameKind::Payload),
             2 => Ok(FrameKind::Reply),
+            3 => Ok(FrameKind::Reconfig),
             other => Err(WireError::BadKind(other)),
         }
     }
@@ -262,6 +267,24 @@ mod tests {
         assert!(matches!(peek_header(&header), Err(WireError::TooLarge { .. })));
         header[6..10].copy_from_slice(&(MAX_BODY_BYTES as u32).to_le_bytes());
         assert!(peek_header(&header).is_ok());
+    }
+
+    #[test]
+    fn unknown_kind_with_valid_crc_is_a_typed_error() {
+        // Forward compatibility: a WELL-FORMED frame of a future kind
+        // (valid magic, version, length and CRC) must decode to a typed
+        // `BadKind` — never a panic, never a misparse. (The bit-flip
+        // suite only covers kinds that also break the CRC.)
+        let body = b"frame from the future";
+        let mut f = Vec::new();
+        f.extend_from_slice(&MAGIC.to_le_bytes());
+        f.push(VERSION);
+        f.push(9); // unknown kind byte
+        f.extend_from_slice(&(body.len() as u32).to_le_bytes());
+        f.extend_from_slice(body);
+        let crc = crc32(&f[4..]);
+        f.extend_from_slice(&crc.to_le_bytes());
+        assert!(matches!(decode_frame(&f), Err(WireError::BadKind(9))));
     }
 
     #[test]

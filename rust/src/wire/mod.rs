@@ -17,8 +17,9 @@ pub mod frame;
 pub mod transport;
 
 pub use codec::{
-    decode_payload_frame, decode_reply_frame, encode_payload_frame, encode_reply_frame,
-    PAYLOAD_OVERHEAD, REPLY_OVERHEAD,
+    decode_payload_frame, decode_reconfig_frame, decode_reply_frame, encode_payload_frame,
+    encode_reconfig_frame, encode_reply_frame, PAYLOAD_OVERHEAD, RECONFIG_OVERHEAD,
+    REPLY_OVERHEAD,
 };
 pub use frame::{crc32, decode_frame, encode_frame, FrameKind, WireError, FRAME_OVERHEAD};
 pub use transport::{

@@ -381,6 +381,14 @@ impl EdgePort {
         self.transport.send(&frame_bytes)
     }
 
+    /// Encode, frame and transmit one control-plane reconfiguration.
+    /// Control traffic rides the same wire as the data plane, so it is
+    /// charged real bytes (and real link events) like any frame.
+    pub fn send_reconfig(&mut self, rc: &crate::adapt::Reconfig) -> Result<TransferOutcome> {
+        let frame_bytes = codec::encode_reconfig_frame(rc);
+        self.transport.send(&frame_bytes)
+    }
+
     /// Receive and strictly decode the next reply frame. Returns the
     /// reply, the server's compute seconds (from the frame's timing
     /// prefix), and the downlink outcome.
@@ -406,6 +414,13 @@ impl CloudPort {
         let (frame_bytes, out) = self.transport.recv()?;
         let p = codec::decode_payload_frame(&frame_bytes)?;
         Ok((p, out))
+    }
+
+    /// Receive and strictly decode the next reconfig (control) frame.
+    pub fn recv_reconfig(&mut self) -> Result<(crate::adapt::Reconfig, TransferOutcome)> {
+        let (frame_bytes, out) = self.transport.recv()?;
+        let rc = codec::decode_reconfig_frame(&frame_bytes)?;
+        Ok((rc, out))
     }
 
     /// Encode, frame and transmit one reply (+ server compute seconds).

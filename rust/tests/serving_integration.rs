@@ -147,7 +147,7 @@ fn ikv0_mode_matches_kv_mode() {
         if t == 0 {
             break;
         }
-        let (payload, _) = pipe2.edge.decode_step(&mut state, t, false, None).unwrap();
+        let (payload, _) = pipe2.edge.decode_step(&mut state, t, false, None, None).unwrap();
         assert!(payload.kv.is_none());
         let (reply, _) = pipe2.cloud.handle(&payload).unwrap();
         tokens.push(reply.token);
@@ -210,7 +210,7 @@ fn rebuild_payload_escalation_matches_from_scratch_compress() {
         if tok == 0 {
             tok = 1; // keep generating past EOS for test coverage
         }
-        let (payload, _) = pipe.edge.decode_step(&mut state, tok, true, None).unwrap();
+        let (payload, _) = pipe.edge.decode_step(&mut state, tok, true, None, None).unwrap();
         let (reply, _) = pipe.cloud.handle(&payload).unwrap();
         pipe.edge.absorb_reply(&mut state, payload.pos, &reply.new_kv_rows);
         tok = reply.token;
@@ -225,7 +225,7 @@ fn rebuild_payload_escalation_matches_from_scratch_compress() {
         TxSettings { qa_bits: 2, include_kv: false },
     ];
     for s in ladder {
-        let p = pipe.edge.rebuild_payload(&state, s).unwrap();
+        let p = pipe.edge.rebuild_payload(&state, s, None).unwrap();
         let mut comp = pipe.edge.compression;
         comp.q_bar = s.qa_bits;
         let want_hidden = if s.include_kv {
@@ -260,8 +260,8 @@ fn rebuild_payload_escalation_matches_from_scratch_compress() {
             );
             if pa < pb {
                 let (ra, rb) = (
-                    pipe.edge.rebuild_payload(&state, a).unwrap().wire_bytes(),
-                    pipe.edge.rebuild_payload(&state, b).unwrap().wire_bytes(),
+                    pipe.edge.rebuild_payload(&state, a, None).unwrap().wire_bytes(),
+                    pipe.edge.rebuild_payload(&state, b, None).unwrap().wire_bytes(),
                 );
                 assert!(
                     ra <= rb,

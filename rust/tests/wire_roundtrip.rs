@@ -4,6 +4,7 @@
 //! frames are rejected with typed errors — never a panic, never a silent
 //! misdecode.
 
+use splitserve::adapt::Reconfig;
 use splitserve::coordinator::{
     CloudReply, CompressedKv, CompressedTensor, CompressionConfig, SamplingSpec, SplitPayload,
 };
@@ -11,8 +12,9 @@ use splitserve::runtime::LayerKv;
 use splitserve::util::prop::run_cases;
 use splitserve::util::rng::Rng;
 use splitserve::wire::{
-    decode_payload_frame, decode_reply_frame, encode_payload_frame, encode_reply_frame,
-    WireError, PAYLOAD_OVERHEAD, REPLY_OVERHEAD,
+    decode_frame, decode_payload_frame, decode_reconfig_frame, decode_reply_frame,
+    encode_payload_frame, encode_reconfig_frame, encode_reply_frame, WireError,
+    PAYLOAD_OVERHEAD, RECONFIG_OVERHEAD, REPLY_OVERHEAD,
 };
 
 fn heavy_block(rng: &mut Rng, rows: usize, cols: usize) -> Vec<f32> {
@@ -151,6 +153,88 @@ fn corrupt_frames_rejected_never_panic() {
     assert!(decode_payload_frame(&padded).is_err());
 }
 
+fn random_reconfig(rng: &mut Rng) -> Reconfig {
+    Reconfig {
+        request_id: rng.below(1 << 20) as u64,
+        epoch: 1 + rng.below(1000) as u32,
+        qa_bits: 2 + rng.below(15) as u32,
+        tau: [0.0f32, 2.5, 5.0, 10.0][rng.below(4)],
+        include_kv: rng.below(2) == 0,
+        budget_cap: if rng.below(3) == 0 {
+            Reconfig::NO_BUDGET_CAP
+        } else {
+            rng.below(1 << 16) as u32
+        },
+    }
+}
+
+#[test]
+fn reconfig_roundtrip_identity_and_size() {
+    // The control-plane frame obeys the same contract as the data plane:
+    // encode∘decode == identity, encoded length == wire_bytes() + fixed
+    // frame overhead.
+    run_cases(60, 0xF5, |case, rng| {
+        let rc = random_reconfig(rng);
+        let frame = encode_reconfig_frame(&rc);
+        assert_eq!(
+            frame.len() as u64,
+            rc.wire_bytes() + RECONFIG_OVERHEAD,
+            "case {case}: reconfig frame length must be wire_bytes + overhead"
+        );
+        let back = decode_reconfig_frame(&frame).expect("well-formed reconfig decodes");
+        assert_eq!(back, rc, "case {case}: decode must invert encode exactly");
+    });
+}
+
+#[test]
+fn corrupt_reconfig_frames_rejected_never_panic() {
+    // The Reconfig frame joins the corruption/truncation property suite:
+    // its body is small enough for the FULL per-byte, per-bit sweep.
+    let mut rng = Rng::new(0xF6);
+    let rc = random_reconfig(&mut rng);
+    let frame = encode_reconfig_frame(&rc);
+    for byte in 0..frame.len() {
+        for bit in 0..8 {
+            let mut bad = frame.clone();
+            bad[byte] ^= 1 << bit;
+            match decode_reconfig_frame(&bad) {
+                Err(_) => {}
+                Ok(got) => panic!(
+                    "flip at byte {byte} bit {bit} silently decoded (changed: {})",
+                    got != rc
+                ),
+            }
+        }
+    }
+    for cut in 0..frame.len() {
+        assert!(decode_reconfig_frame(&frame[..cut]).is_err(), "truncation to {cut}");
+    }
+    let mut padded = frame.clone();
+    padded.push(0x5A);
+    assert!(decode_reconfig_frame(&padded).is_err(), "trailing garbage must be rejected");
+}
+
+#[test]
+fn unknown_frame_kind_is_a_typed_error_not_a_panic() {
+    // Forward compatibility: a frame carrying an unknown `kind` byte —
+    // with an otherwise VALID header and CRC — must decode to a typed
+    // WireError::BadKind through every decoder entry point.
+    use splitserve::wire::frame::{crc32, HEADER_BYTES, MAGIC, VERSION};
+    let body = b"kind from a future wire format";
+    let mut f = Vec::with_capacity(HEADER_BYTES + body.len() + 4);
+    f.extend_from_slice(&MAGIC.to_le_bytes());
+    f.push(VERSION);
+    f.push(7); // unknown kind
+    f.extend_from_slice(&(body.len() as u32).to_le_bytes());
+    f.extend_from_slice(body);
+    let crc = crc32(&f[4..]);
+    f.extend_from_slice(&crc.to_le_bytes());
+    assert!(matches!(decode_frame(&f), Err(WireError::BadKind(7))));
+    assert!(matches!(decode_payload_frame(&f), Err(WireError::BadKind(7))));
+    assert!(matches!(decode_reply_frame(&f), Err(WireError::BadKind(7))));
+    assert!(matches!(decode_reconfig_frame(&f), Err(WireError::BadKind(7))));
+}
+
 #[test]
 fn kind_confusion_is_a_typed_error() {
     let mut rng = Rng::new(0xF3);
@@ -171,6 +255,12 @@ fn kind_confusion_is_a_typed_error() {
         decode_payload_frame(&rf),
         Err(WireError::WrongKind { .. })
     ));
+    // the control frame participates in kind confusion both ways
+    let rc = random_reconfig(&mut rng);
+    let cf = encode_reconfig_frame(&rc);
+    assert!(matches!(decode_payload_frame(&cf), Err(WireError::WrongKind { .. })));
+    assert!(matches!(decode_reply_frame(&cf), Err(WireError::WrongKind { .. })));
+    assert!(matches!(decode_reconfig_frame(&pf), Err(WireError::WrongKind { .. })));
 }
 
 #[test]

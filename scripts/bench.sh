@@ -25,7 +25,14 @@ BENCH_JSON="$ENGINE_JSON" cargo bench --bench engine "$@"
 WIRE_JSON="${BENCH_WIRE_JSON:-BENCH_wire.json}"
 BENCH_JSON="$WIRE_JSON" cargo bench --bench wire "$@"
 
-for f in "$BENCH_JSON" "$ENGINE_JSON" "$WIRE_JSON"; do
+# Static vs adaptive serving across channel scenarios. The binary ASSERTS
+# the adaptation invariants (constant channel ⇒ bit-identical to static;
+# step change ⇒ the controller actually switches plans) — a panic fails
+# this script.
+ADAPT_JSON="${BENCH_ADAPT_JSON:-BENCH_adapt.json}"
+BENCH_JSON="$ADAPT_JSON" cargo bench --bench adapt "$@"
+
+for f in "$BENCH_JSON" "$ENGINE_JSON" "$WIRE_JSON" "$ADAPT_JSON"; do
     if [ -f "$f" ]; then
         echo "--- $f ---"
         cat "$f"
