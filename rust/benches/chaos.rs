@@ -1,0 +1,242 @@
+//! Chaos benches: what fault recovery actually costs. Three scenario
+//! families, all seeded and deterministic:
+//!
+//!   * mid-stream edge disconnect → reconnect → `Resume` (vs the clean
+//!     run: the recovery-latency overhead),
+//!   * cloud restart mid-stream → `Resume` against a freshly built
+//!     server (the restart-recovery overhead),
+//!   * serve-loop fault storm under a flash-crowd trace (goodput
+//!     retention vs the clean loop) and a churn trace with the adaptive
+//!     control plane on.
+//!
+//! Emits `BENCH_chaos.json` (override with `BENCH_JSON`); `BENCH_SMOKE=1`
+//! runs the reduced CI configuration. Structural invariants are ASSERTED:
+//! a panic fails the bench script.
+
+use std::collections::HashSet;
+use std::rc::Rc;
+use std::sync::mpsc;
+use std::time::Duration;
+
+use splitserve::adapt::AdaptPolicy;
+use splitserve::coordinator::{
+    build_serve_loop, DeploymentSpec, EdgeClient, Request, RetryPolicy, ServeLoop, ServeReport,
+    ServeSpec, TokenControl,
+};
+use splitserve::model::ModelConfig;
+use splitserve::runtime::Engine;
+use splitserve::trace::{generate_trace, ArrivalPattern, WorkloadSpec};
+use splitserve::util::bench::{bench_recorded, JsonReport};
+use splitserve::wire::{FaultPlan, FaultyTransport, Loopback, WireTransport};
+
+fn small_cfg(n_layers: usize) -> ModelConfig {
+    let mut cfg = ModelConfig::sim7b();
+    cfg.n_layers = n_layers;
+    cfg
+}
+
+fn spec() -> DeploymentSpec {
+    DeploymentSpec::defaults(small_cfg(4), 2)
+}
+
+fn engine() -> Rc<Engine> {
+    Rc::new(Engine::load("artifacts", &ModelConfig::sim7b()).expect("run `make artifacts`"))
+}
+
+/// Background cloud serving every connection handed over the channel;
+/// `restart_per_conn` builds a fresh (state-less) server per connection.
+fn spawn_cloud(
+    spec: DeploymentSpec,
+    restart_per_conn: bool,
+) -> (mpsc::Sender<Loopback>, std::thread::JoinHandle<u64>) {
+    let (tx, rx) = mpsc::channel::<Loopback>();
+    let handle = std::thread::spawn(move || {
+        let mut served = 0u64;
+        let persistent = (!restart_per_conn).then(|| spec.build_cloud_server(engine()).unwrap());
+        while let Ok(mut half) = rx.recv() {
+            let fresh;
+            let cloud = match persistent.as_ref() {
+                Some(c) => c,
+                None => {
+                    fresh = spec.build_cloud_server(engine()).unwrap();
+                    &fresh
+                }
+            };
+            if let Ok(n) = cloud.serve_connection(&mut half) {
+                served += n;
+            }
+        }
+        served
+    });
+    (tx, handle)
+}
+
+fn dial(tx: &mpsc::Sender<Loopback>) -> Loopback {
+    let (mut edge_half, mut cloud_half) = Loopback::pair();
+    edge_half.timeout = Duration::from_millis(2000);
+    cloud_half.timeout = Duration::from_millis(5000);
+    tx.send(cloud_half).expect("cloud harness is gone");
+    edge_half
+}
+
+/// One resilient generation under `plan`, reconnecting cleanly on
+/// failure. Returns the stream length (asserted equal to the clean run's
+/// by the chaos test suite; the bench only times it).
+fn resilient_run(plan: FaultPlan, restart_per_conn: bool, req: &Request) -> usize {
+    let spec = spec();
+    let (tx, cloud) = spawn_cloud(spec.clone(), restart_per_conn);
+    let edge = spec.build_edge_device(engine()).unwrap();
+    let inner = WireTransport::Loopback(dial(&tx));
+    let mut client =
+        EdgeClient::over(edge, WireTransport::Faulty(FaultyTransport::new(inner, plan)));
+    client.retry = RetryPolicy { attempts: 2, base_ms: 1, max_ms: 2, seed: plan.seed };
+    let txc = tx.clone();
+    client.on_reconnect(Box::new(move || Ok(WireTransport::Loopback(dial(&txc)))));
+    let res = client.generate_resilient(req).expect("chaos bench run must recover");
+    drop(client);
+    drop(tx);
+    cloud.join().unwrap();
+    res.tokens.len()
+}
+
+fn serve_spec(adapt: bool) -> ServeSpec {
+    let spec = ServeSpec::defaults(small_cfg(4), 2, 1);
+    if adapt {
+        spec.with_adapt(AdaptPolicy {
+            ewma_alpha: 0.25,
+            warmup_samples: 4,
+            cooldown_steps: 1,
+            ..Default::default()
+        })
+    } else {
+        spec
+    }
+}
+
+fn storm_plan() -> FaultPlan {
+    FaultPlan {
+        seed: 0x5EED,
+        corrupt_rate: 0.03,
+        truncate_rate: 0.03,
+        duplicate_rate: 0.03,
+        reorder_rate: 0.0,
+        stall_rate: 0.03,
+        disconnect_after: None,
+    }
+}
+
+fn inject_chaos(serve: &mut ServeLoop, plan: FaultPlan) {
+    for ep in &mut serve.edges {
+        let placeholder = WireTransport::Loopback(Loopback::pair().0);
+        let inner = std::mem::replace(&mut ep.port.transport, placeholder);
+        ep.port.transport = WireTransport::Faulty(FaultyTransport::new(inner, plan));
+        if let WireTransport::Loopback(l) = &mut ep.cloud_port.transport {
+            l.timeout = Duration::from_millis(250);
+        }
+    }
+}
+
+fn run_serve(reqs: &[Request], adapt: bool, plan: Option<FaultPlan>) -> ServeReport {
+    let sspec = serve_spec(adapt);
+    let mut serve = build_serve_loop(engine(), &sspec).unwrap();
+    if let Some(plan) = plan {
+        inject_chaos(&mut serve, plan);
+    }
+    serve.run(reqs.to_vec(), |_, _| TokenControl::Continue).unwrap()
+}
+
+/// Tokens delivered to sessions that finished WITHOUT a typed failure.
+fn goodput_tokens(report: &ServeReport) -> u64 {
+    let failed: HashSet<u64> = report.errors.iter().map(|(id, _)| *id).collect();
+    report
+        .results
+        .iter()
+        .filter(|r| !failed.contains(&r.request_id))
+        .map(|r| r.tokens.len() as u64)
+        .sum()
+}
+
+fn main() -> anyhow::Result<()> {
+    let smoke = std::env::var("BENCH_SMOKE").is_ok();
+    let target = Duration::from_millis(if smoke { 150 } else { 600 });
+    let mut report = JsonReport::new();
+    let req = Request::new(42, vec![3, 141, 59, 26], if smoke { 6 } else { 8 });
+
+    // --- Scenario 1 + 2: recovery latency, edge disconnect vs cloud
+    // restart, against the clean run as the zero-fault floor. ---
+    bench_recorded(&mut report, "chaos/clean generate", target, || {
+        std::hint::black_box(resilient_run(FaultPlan::clean(1), false, &req));
+    });
+    bench_recorded(&mut report, "chaos/edge disconnect + reconnect + resume", target, || {
+        std::hint::black_box(resilient_run(FaultPlan::disconnect(2, 5), false, &req));
+    });
+    bench_recorded(&mut report, "chaos/cloud restart + resume", target, || {
+        std::hint::black_box(resilient_run(FaultPlan::disconnect(3, 5), true, &req));
+    });
+    let clean_ns = report.median_ns("chaos/clean generate");
+    let disc_ns = report.median_ns("chaos/edge disconnect + reconnect + resume");
+    let restart_ns = report.median_ns("chaos/cloud restart + resume");
+    report.add_metric("chaos_recovery_overhead_ms", (disc_ns - clean_ns) * 1e-6);
+    report.add_metric("chaos_restart_overhead_ms", (restart_ns - clean_ns) * 1e-6);
+    println!(
+        "recovery: clean {:.1} ms, disconnect+resume {:.1} ms, cloud-restart+resume {:.1} ms",
+        clean_ns * 1e-6,
+        disc_ns * 1e-6,
+        restart_ns * 1e-6
+    );
+
+    // --- Scenario 3: serve-loop fault storm under a flash crowd —
+    // goodput retention vs the clean loop. ---
+    let n_req = if smoke { 6 } else { 12 };
+    let workload = |arrival| WorkloadSpec {
+        n_requests: n_req,
+        arrival_rate: 4.0,
+        arrival,
+        prompt_len_min: 3,
+        prompt_len_max: 8,
+        output_len_min: 3,
+        output_len_max: 6,
+        vocab: 256,
+        seed: 0xBEEF,
+    };
+    let flash =
+        generate_trace(&workload(ArrivalPattern::FlashCrowd { lead_s: 0.2, window_s: 0.5 }));
+    let clean = run_serve(&flash, false, None);
+    assert_eq!(clean.failed, 0, "clean serve loop must not fail: {:?}", clean.errors);
+    let storm = run_serve(&flash, false, Some(storm_plan()));
+    assert_eq!(storm.results.len(), flash.len(), "every request must be accounted for");
+    assert_eq!(storm.failed as usize, storm.errors.len());
+    let good = goodput_tokens(&storm);
+    report.add_metric("chaos_flash_clean_tokens", clean.total_tokens as f64);
+    report.add_metric("chaos_flash_storm_goodput_tokens", good as f64);
+    report.add_metric(
+        "chaos_flash_goodput_retention",
+        good as f64 / clean.total_tokens.max(1) as f64,
+    );
+    report.add_metric("chaos_flash_failed_sessions", storm.failed as f64);
+    println!(
+        "flash-crowd storm: {} clean tokens, {} goodput tokens ({} sessions failed typed)",
+        clean.total_tokens, good, storm.failed
+    );
+
+    // --- Scenario 4: churn trace with the adaptive control plane ON
+    // under the same storm — liveness + accounting with re-planning. ---
+    let churn = generate_trace(&workload(ArrivalPattern::Churn { burst: 3, gap_s: 1.0 }));
+    let adaptive = run_serve(&churn, true, Some(storm_plan()));
+    assert_eq!(adaptive.results.len(), churn.len(), "every request must be accounted for");
+    assert_eq!(adaptive.failed as usize, adaptive.errors.len());
+    report.add_metric("chaos_churn_adaptive_tokens", adaptive.total_tokens as f64);
+    report.add_metric("chaos_churn_adaptive_goodput_tokens", goodput_tokens(&adaptive) as f64);
+    report.add_metric("chaos_churn_adaptive_failed", adaptive.failed as f64);
+    report.add_metric("chaos_churn_adaptive_replans", adaptive.replans as f64);
+    report.add_metric("chaos_churn_adaptive_reconfigs", adaptive.reconfigs as f64);
+    println!(
+        "churn + adaptation storm: {} tokens, {} failed typed, {} replans, {} reconfigs",
+        adaptive.total_tokens, adaptive.failed, adaptive.replans, adaptive.reconfigs
+    );
+
+    let path = std::env::var("BENCH_JSON").unwrap_or_else(|_| "BENCH_chaos.json".to_string());
+    report.write(&path)?;
+    println!("wrote {path}");
+    Ok(())
+}

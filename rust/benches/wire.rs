@@ -96,6 +96,7 @@ fn main() -> anyhow::Result<()> {
     // Reply: one (k, v) row per cloud layer, raw f32 — the downlink shape.
     let reply = CloudReply {
         request_id: 42,
+        pos: used as u64,
         token: 7,
         new_kv_rows: (0..n_layers)
             .map(|_| {

@@ -197,6 +197,16 @@ impl AdaptiveController {
         self.devices[device].estimator.observe(outcome);
     }
 
+    /// Reset a device's estimator to the cold prior at its CURRENT
+    /// plan's goodput anchor. Called by the serve loop after a wire fault
+    /// on that device: the fault window's samples measure the fault, not
+    /// the channel, and feeding them forward would trigger a spurious
+    /// Eq. 8 downgrade for every healthy session sharing the device.
+    pub fn reanchor(&mut self, device: usize) {
+        let d = &mut self.devices[device];
+        d.estimator.re_anchor(d.planned_goodput);
+    }
+
     /// Device plans re-solved over the run (Eq. 8 invocations).
     pub fn replans(&self) -> u64 {
         self.replans

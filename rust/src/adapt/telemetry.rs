@@ -97,6 +97,18 @@ impl BandwidthEstimator {
         self.samples
     }
 
+    /// Reset the estimator to its cold-start prior at
+    /// `reference_goodput_bps` — the same state `new` seeds. Called after
+    /// a detected wire fault: the fault window's latency samples measure
+    /// the fault, not the channel, and must not steer Eq. 8 re-planning.
+    pub fn re_anchor(&mut self, reference_goodput_bps: f64) {
+        assert!(reference_goodput_bps > 0.0);
+        self.ewma_bytes = reference_goodput_bps * 0.25;
+        self.ewma_secs = 0.25;
+        self.outage_rate = 0.0;
+        self.samples = 0;
+    }
+
     /// Relative deviation of the estimate from `reference` (bytes/s):
     /// 0.0 means on-plan, -0.5 means half the planned goodput.
     pub fn deviation_from(&self, reference: f64) -> f64 {

@@ -24,7 +24,7 @@ use std::time::Instant;
 use anyhow::Result;
 
 use super::profile::DeviceProfile;
-use super::protocol::{CloudReply, SplitPayload};
+use super::protocol::{reject, CloudReply, RejectFrame, Resume, ResumeAck, SplitPayload};
 use super::sampling::{self, sample};
 use crate::adapt::Reconfig;
 use crate::quant::ScratchPool;
@@ -73,6 +73,11 @@ pub struct CloudServer {
     control: Mutex<HashMap<u64, Reconfig>>,
     /// Reconfigurations applied over the life of the server.
     reconfigs_applied: AtomicU64,
+    /// Resumption fence: the highest resume epoch accepted per request.
+    /// OUTLIVES connections (unlike `control`) — a delayed duplicate
+    /// `Resume` from a dead connection must be rejectable after the live
+    /// one reconnected. Entries are dropped when the EOS reply is served.
+    resume_epochs: Mutex<HashMap<u64, u32>>,
 }
 
 impl CloudServer {
@@ -86,6 +91,7 @@ impl CloudServer {
             stacked: true,
             control: Mutex::new(HashMap::new()),
             reconfigs_applied: AtomicU64::new(0),
+            resume_epochs: Mutex::new(HashMap::new()),
         }
     }
 
@@ -161,7 +167,56 @@ impl CloudServer {
     fn retire_control(&self, request_id: u64, reply: &CloudReply) {
         if reply.token == 0 {
             self.retire_request(request_id);
+            self.resume_epochs
+                .lock()
+                .expect("resume fence poisoned")
+                .remove(&request_id);
         }
+    }
+
+    /// Admit (or reject) a session's reconnection. The resume epoch must
+    /// strictly exceed the highest one accepted for this request — a
+    /// delayed duplicate from a dead connection can never re-fence a live
+    /// session. On admit, the resume's transmission settings are
+    /// re-announced to the control plane (epoch 0, so the session's next
+    /// genuine `Reconfig` supersedes it), and the ack echoes the accepted
+    /// epoch plus the connection's last answered position when known.
+    pub fn admit_resume(
+        &self,
+        rs: &Resume,
+        last_pos: Option<u64>,
+    ) -> std::result::Result<ResumeAck, RejectFrame> {
+        {
+            let mut epochs = self.resume_epochs.lock().expect("resume fence poisoned");
+            if let Some(&prev) = epochs.get(&rs.request_id) {
+                if rs.epoch <= prev {
+                    return Err(RejectFrame {
+                        code: reject::STALE_EPOCH,
+                        request_id: rs.request_id,
+                        message: format!(
+                            "resume epoch {} is not above the accepted {prev}",
+                            rs.epoch
+                        ),
+                    });
+                }
+            }
+            epochs.insert(rs.request_id, rs.epoch);
+        }
+        // Force-insert (not `apply_reconfig`): the reconnecting session's
+        // settings must land even if an older connection once announced a
+        // higher reconfig epoch for this id.
+        self.control.lock().expect("control plane poisoned").insert(
+            rs.request_id,
+            Reconfig {
+                request_id: rs.request_id,
+                epoch: 0,
+                qa_bits: rs.qa_bits,
+                tau: rs.tau,
+                include_kv: rs.include_kv,
+                budget_cap: Reconfig::NO_BUDGET_CAP,
+            },
+        );
+        Ok(ResumeAck { request_id: rs.request_id, epoch: rs.epoch, last_pos })
     }
 
     /// Drop a session's control-plane entry unconditionally. Drivers call
@@ -205,7 +260,16 @@ impl CloudServer {
                 let (reply, cloud_s) = self.handle(&payload)?;
                 Ok(Some(crate::wire::encode_reply_frame(&reply, cloud_s)))
             }
-            FrameKind::Reply => anyhow::bail!("cloud server received a Reply frame"),
+            FrameKind::Resume => {
+                let rs = crate::wire::decode_resume_frame(frame_bytes)?;
+                Ok(Some(match self.admit_resume(&rs, None) {
+                    Ok(ack) => crate::wire::encode_resume_ack_frame(&ack),
+                    Err(rj) => crate::wire::encode_error_frame(&rj),
+                }))
+            }
+            FrameKind::Reply | FrameKind::ResumeAck | FrameKind::Error => {
+                anyhow::bail!("cloud server received a {kind:?} frame")
+            }
         }
     }
 
@@ -230,19 +294,80 @@ impl CloudServer {
         announced: &mut Vec<u64>,
     ) -> Result<u64> {
         let mut served = 0u64;
+        // Per-connection replay fence: last answered position and its
+        // encoded reply frame, per request. A duplicated payload (same
+        // pos) is answered by replaying the cached frame — idempotent,
+        // zero recompute; an EARLIER pos is rejected in-band as stale.
+        // Positions only move forward within a connection, so the fence
+        // is one entry per request, not a history.
+        let mut fence: HashMap<u64, (u64, Vec<u8>)> = HashMap::new();
         while let Some((frame_bytes, _)) = transport.recv_eof()? {
-            // Dispatch control frames here (decoded once, id recorded for
-            // the end-of-connection sweep); everything else goes through
-            // the standalone per-frame entry point.
-            if crate::wire::decode_frame(&frame_bytes)?.0 == FrameKind::Reconfig {
-                let rc = crate::wire::decode_reconfig_frame(&frame_bytes)?;
-                self.apply_reconfig(&rc);
-                announced.push(rc.request_id);
-                continue;
-            }
-            if let Some(reply_frame) = self.serve_frame(&frame_bytes)? {
-                transport.send(&reply_frame)?;
-                served += 1;
+            let (kind, _) = crate::wire::decode_frame(&frame_bytes)?;
+            match kind {
+                FrameKind::Reconfig => {
+                    let rc = crate::wire::decode_reconfig_frame(&frame_bytes)?;
+                    self.apply_reconfig(&rc);
+                    announced.push(rc.request_id);
+                }
+                FrameKind::Resume => {
+                    let rs = crate::wire::decode_resume_frame(&frame_bytes)?;
+                    let last_pos = fence.get(&rs.request_id).map(|(p, _)| *p);
+                    match self.admit_resume(&rs, last_pos) {
+                        Ok(ack) => {
+                            announced.push(rs.request_id);
+                            transport.send(&crate::wire::encode_resume_ack_frame(&ack))?;
+                        }
+                        Err(rj) => transport.send(&crate::wire::encode_error_frame(&rj))?,
+                    }
+                }
+                FrameKind::Payload => {
+                    let payload = crate::wire::decode_payload_frame(&frame_bytes)?;
+                    let id = payload.request_id;
+                    let pos = payload.pos as u64;
+                    if let Some((last, cached)) = fence.get(&id) {
+                        if pos == *last {
+                            transport.send(cached)?;
+                            continue;
+                        }
+                        if pos < *last {
+                            transport.send(&crate::wire::encode_error_frame(&RejectFrame {
+                                code: reject::STALE_POS,
+                                request_id: id,
+                                message: format!(
+                                    "position {pos} is behind the last answered {last}"
+                                ),
+                            }))?;
+                            continue;
+                        }
+                    }
+                    // A payload that fails to serve (control violation,
+                    // inconsistent tensors behind a valid CRC) condemns
+                    // only its own request: reject in-band and keep the
+                    // connection — other sessions multiplexed on it are
+                    // healthy.
+                    match self.handle(&payload) {
+                        Ok((reply, cloud_s)) => {
+                            let reply_frame = crate::wire::encode_reply_frame(&reply, cloud_s);
+                            transport.send(&reply_frame)?;
+                            served += 1;
+                            if reply.token == 0 {
+                                fence.remove(&id);
+                            } else {
+                                fence.insert(id, (pos, reply_frame));
+                            }
+                        }
+                        Err(e) => {
+                            transport.send(&crate::wire::encode_error_frame(&RejectFrame {
+                                code: reject::FAILED,
+                                request_id: id,
+                                message: format!("{e:#}"),
+                            }))?;
+                        }
+                    }
+                }
+                FrameKind::Reply | FrameKind::ResumeAck | FrameKind::Error => {
+                    anyhow::bail!("cloud server received a {kind:?} frame")
+                }
             }
         }
         Ok(served)
@@ -304,6 +429,12 @@ impl CloudServer {
             .kv
             .as_ref()
             .ok_or_else(|| anyhow::anyhow!("decode payload without KV"))?;
+        anyhow::ensure!(
+            payload.pos < cfg.max_seq,
+            "decode position {} exceeds max_seq {}",
+            payload.pos,
+            cfg.max_seq
+        );
         let caches = kv_in.decompress_with_pool(cfg.max_seq, cfg.kv_width(), &self.scratch)?;
         anyhow::ensure!(
             caches.len() == self.node.layer_range.len(),
@@ -335,6 +466,7 @@ impl CloudServer {
             .collect();
         CloudReply {
             request_id: payload.request_id,
+            pos: payload.pos as u64,
             token,
             new_kv_rows,
             logits_entropy: sampling::entropy(logits_row),
@@ -398,6 +530,11 @@ impl CloudServer {
             // back segment prefill-style over all rows.
             let w = payload.hidden.rows;
             anyhow::ensure!(w <= cfg.prefill_len, "hidden block exceeds prefill width");
+            anyhow::ensure!(
+                payload.pos < w,
+                "position {} exceeds the {w} transmitted rows",
+                payload.pos
+            );
             let mut h = self.scratch.with(|s| payload.hidden.decompress_with(s))?;
             h.resize(cfg.prefill_len * d, 0.0); // zero-pad to static width
             let (h_out, kv_rows) = self.node.prefill(&h)?;
@@ -417,6 +554,7 @@ impl CloudServer {
             };
             CloudReply {
                 request_id: payload.request_id,
+                pos: payload.pos as u64,
                 token,
                 new_kv_rows,
                 logits_entropy: sampling::entropy(row),

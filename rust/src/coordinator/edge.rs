@@ -212,21 +212,46 @@ impl EdgeDevice {
     }
 
     /// Apply the cloud's reply: install the new KV rows of the cloud
-    /// layers at `pos` into the edge-held canonical copy.
+    /// layers at `pos` into the edge-held canonical copy. The row shapes
+    /// come off the wire, so they are validated — a hostile or corrupt
+    /// reply is a typed error, never a slice panic or silent cache
+    /// corruption.
     pub fn absorb_reply(
         &self,
         state: &mut EdgeRequestState,
         pos: usize,
         new_kv_rows: &[(Vec<f32>, Vec<f32>)],
-    ) {
+    ) -> Result<()> {
         let kvw = self.cfg().kv_width();
-        for (cache, (krow, vrow)) in state.cloud_kv.iter_mut().zip(new_kv_rows) {
+        let max_seq = self.cfg().max_seq;
+        anyhow::ensure!(pos < max_seq, "reply position {pos} exceeds max_seq {max_seq}");
+        anyhow::ensure!(
+            new_kv_rows.len() <= state.cloud_kv.len(),
+            "reply carries {} KV layers, edge holds {}",
+            new_kv_rows.len(),
+            state.cloud_kv.len()
+        );
+        for (krow, vrow) in new_kv_rows {
             // prefill replies carry several rows, decode replies one
+            anyhow::ensure!(
+                krow.len() == vrow.len() && !krow.is_empty() && krow.len() % kvw == 0,
+                "reply KV rows are ragged ({} k floats, {} v floats, width {kvw})",
+                krow.len(),
+                vrow.len()
+            );
+            let n_rows = krow.len() / kvw;
+            anyhow::ensure!(
+                n_rows <= pos + 1,
+                "reply carries {n_rows} KV rows for position {pos}"
+            );
+        }
+        for (cache, (krow, vrow)) in state.cloud_kv.iter_mut().zip(new_kv_rows) {
             let n_rows = krow.len() / kvw;
             let start = pos + 1 - n_rows;
             cache.k[start * kvw..(pos + 1) * kvw].copy_from_slice(krow);
             cache.v[start * kvw..(pos + 1) * kvw].copy_from_slice(vrow);
         }
+        Ok(())
     }
 
     /// Payload-size oracle for the early-exit controller: what WOULD the

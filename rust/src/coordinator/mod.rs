@@ -24,17 +24,22 @@ pub mod sampling;
 pub mod serve_loop;
 pub mod session;
 pub mod sim;
+pub mod snapshot;
 
 pub use batcher::{BatcherParams, DynamicBatcher};
 pub use builder::{build_pipeline, build_serve_loop, DeploymentSpec, ServeSpec};
 pub use cloud::{BatchCompute, CloudServer};
 pub use edge::{EdgeDevice, EdgeRequestState, ProbeOutcome};
-pub use pipeline::{EdgeClient, SplitPipeline};
+pub use pipeline::{EdgeClient, RetryPolicy, SplitPipeline};
 pub use profile::DeviceProfile;
-pub use protocol::{CloudReply, CompressedKv, CompressedTensor, CompressionConfig, SplitPayload};
+pub use protocol::{
+    reject, CloudReply, CompressedKv, CompressedTensor, CompressionConfig, RejectFrame, Resume,
+    ResumeAck, SplitPayload,
+};
 pub use request::{GenerationResult, Request, StepStats};
 pub use router::{RouteDecision, Router};
 pub use sampling::SamplingSpec;
 pub use serve_loop::{EdgeEndpoint, ServeLoop, ServeReport, TokenControl};
 pub use session::{Session, SessionAction, SessionPhase};
 pub use sim::{simulate, Deployment, SimOutcome, SimWorkload};
+pub use snapshot::{SessionSnapshot, StateSnapshot};

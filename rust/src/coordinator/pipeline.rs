@@ -22,12 +22,16 @@ use anyhow::Result;
 
 use super::cloud::CloudServer;
 use super::edge::EdgeDevice;
-use super::protocol::{CloudReply, SplitPayload};
+use super::protocol::{reject, CloudReply, Resume, SplitPayload};
 use super::request::{GenerationResult, Request};
 use super::session::{Session, SessionAction};
+use super::snapshot::SessionSnapshot;
 use crate::channel::{LinkSim, TransferOutcome};
 use crate::planner::EarlyExitController;
-use crate::wire::{CloudPort, EdgePort, LinkTransport, SocketTransport, WireTransport};
+use crate::util::rng::Rng;
+use crate::wire::{
+    CloudPort, EdgePort, LinkTransport, SocketTransport, WireError, WireTransport,
+};
 
 /// Drive one session to completion through an exchange function that
 /// delivers a payload and produces (reply, server compute seconds,
@@ -45,7 +49,7 @@ pub(crate) fn drive_session(
         match session.poll(edge)? {
             SessionAction::Transmit(payload) => {
                 let (reply, server_s, up, down) = exchange(&payload)?;
-                session.on_reply(edge, &reply, server_s, up, down);
+                session.on_reply(edge, &reply, server_s, up, down)?;
             }
             // A single blocking driver never observes Yield: every
             // transmit is answered before the next poll.
@@ -102,20 +106,88 @@ impl SplitPipeline {
     }
 }
 
+/// Reconnect-and-retry schedule for [`EdgeClient`]: up to `attempts`
+/// recovery rounds per in-flight step, with seeded-jitter exponential
+/// backoff between them (`base_ms · 2^(k−1)`, capped at `max_ms`, scaled
+/// by a uniform [0.5, 1.0) draw so a fleet of edges does not thunder back
+/// in lockstep).
+#[derive(Clone, Copy, Debug)]
+pub struct RetryPolicy {
+    /// Recovery rounds per failed exchange (0 = fail on first error).
+    pub attempts: u32,
+    /// First backoff delay in milliseconds.
+    pub base_ms: u64,
+    /// Backoff ceiling in milliseconds.
+    pub max_ms: u64,
+    /// Jitter seed (mixed with the request id, so retries are
+    /// deterministic per session but decorrelated across sessions).
+    pub seed: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> RetryPolicy {
+        RetryPolicy { attempts: 0, base_ms: 50, max_ms: 2_000, seed: 0x8E77 }
+    }
+}
+
+impl RetryPolicy {
+    pub fn new(attempts: u32, base_ms: u64) -> RetryPolicy {
+        RetryPolicy { attempts, base_ms, ..RetryPolicy::default() }
+    }
+
+    /// Backoff before recovery round `attempt` (1-based), jittered.
+    pub fn delay(&self, attempt: u32, rng: &mut Rng) -> std::time::Duration {
+        let exp = self.base_ms.saturating_mul(1u64 << (attempt - 1).min(16));
+        let capped = exp.min(self.max_ms) as f64;
+        std::time::Duration::from_secs_f64(capped * (0.5 + 0.5 * rng.f64()) / 1_000.0)
+    }
+}
+
 /// Cross-process driver: the edge half of a deployment generating against
 /// a remote `splitserve cloud` over a real socket. Link outcomes are
 /// measured wall time; the remote server's compute seconds come back in
 /// each reply frame, so `StepStats` keeps the same shape as the
 /// single-process drivers.
+///
+/// With a [`RetryPolicy`] and a reconnect closure installed, the client
+/// is crash-recovering: a wire failure mid-step triggers reconnect →
+/// `Resume` handshake (epoch-fenced) → retransmission of the SAME
+/// payload. The in-flight step's edge compute already mutated the request
+/// state, so the session is never re-polled — and because sampling is
+/// (seed, request, pos)-keyed, the recovered stream is bit-identical to
+/// an undisturbed run.
 pub struct EdgeClient {
     pub edge: EdgeDevice,
     pub port: EdgePort,
     pub controller: Option<EarlyExitController>,
+    /// Reconnect-and-retry schedule for `generate_resilient` / `resume`.
+    pub retry: RetryPolicy,
+    /// How to re-establish the wire after a failure (e.g. re-dial the
+    /// cloud's listen address). None = recover on the existing transport.
+    reconnect: Option<Box<dyn FnMut() -> Result<WireTransport>>>,
 }
 
 impl EdgeClient {
     pub fn new(edge: EdgeDevice, transport: SocketTransport) -> EdgeClient {
-        EdgeClient { edge, port: EdgePort::new(WireTransport::Socket(transport)), controller: None }
+        EdgeClient::over(edge, WireTransport::Socket(transport))
+    }
+
+    /// Generic constructor over any wire (chaos tests wrap a faulty
+    /// transport; production wraps a socket).
+    pub fn over(edge: EdgeDevice, transport: WireTransport) -> EdgeClient {
+        EdgeClient {
+            edge,
+            port: EdgePort::new(transport),
+            controller: None,
+            retry: RetryPolicy::default(),
+            reconnect: None,
+        }
+    }
+
+    /// Install the reconnect closure used by recovery (returns a fresh
+    /// transport to the same cloud).
+    pub fn on_reconnect(&mut self, f: Box<dyn FnMut() -> Result<WireTransport>>) {
+        self.reconnect = Some(f);
     }
 
     /// Push a control-plane reconfiguration to the remote cloud (frame
@@ -130,7 +202,7 @@ impl EdgeClient {
 
     /// Run a full request to completion against the remote cloud.
     pub fn generate(&mut self, req: &Request) -> Result<GenerationResult> {
-        let EdgeClient { edge, port, controller } = self;
+        let EdgeClient { edge, port, controller, .. } = self;
         drive_session(edge, *controller, req, |payload| {
             let up = port.send_payload(payload)?;
             let (reply, server_s, mut down) = port.recv_reply()?;
@@ -142,5 +214,183 @@ impl EdgeClient {
             down.latency_s = (down.latency_s - server_s).max(0.0);
             Ok((reply, server_s, up, down))
         })
+    }
+
+    /// Like [`generate`](EdgeClient::generate), but every wire failure is
+    /// survived up to the [`RetryPolicy`]: backoff → reconnect → `Resume`
+    /// handshake → retransmit the in-flight payload. In-band typed
+    /// rejections from the cloud ([`WireError::Rejected`]) are NOT
+    /// retried — the cloud answered; the answer was no.
+    pub fn generate_resilient(&mut self, req: &Request) -> Result<GenerationResult> {
+        let mut session = Session::for_edge(req.clone(), &self.edge, self.controller);
+        self.drive_resilient(&mut session)?;
+        Ok(session.into_result())
+    }
+
+    /// Continue a snapshotted session against the (possibly restarted)
+    /// cloud: restore, fence the dead connection's stragglers with a
+    /// `Resume` handshake, then drive to completion under the same
+    /// recovery schedule as `generate_resilient`. Already-delivered
+    /// tokens are NOT recomputed — generation picks up at the snapshot's
+    /// next position.
+    pub fn resume(&mut self, snap: SessionSnapshot) -> Result<GenerationResult> {
+        let mut session = Session::restore(snap, &self.edge, self.controller)?;
+        self.reestablish(&mut session)?;
+        self.drive_resilient(&mut session)?;
+        Ok(session.into_result())
+    }
+
+    fn drive_resilient(&mut self, session: &mut Session) -> Result<()> {
+        let mut rng = Rng::new(self.retry.seed ^ session.request_id().rotate_left(17));
+        loop {
+            match session.poll(&self.edge)? {
+                SessionAction::Transmit(payload) => {
+                    let (reply, server_s, up, down) =
+                        self.exchange_with_recovery(session, &payload, &mut rng)?;
+                    session.on_reply(&self.edge, &reply, server_s, up, down)?;
+                }
+                SessionAction::Yield => unreachable!("no in-flight IO in the blocking driver"),
+                SessionAction::Finished => return Ok(()),
+            }
+        }
+    }
+
+    /// One payload/reply exchange, surviving wire failures up to the
+    /// retry budget. Recovery retransmits the SAME payload — never
+    /// re-runs the edge step — so a fault can duplicate work on the
+    /// stateless cloud but never fork the session's state.
+    fn exchange_with_recovery(
+        &mut self,
+        session: &mut Session,
+        payload: &SplitPayload,
+        rng: &mut Rng,
+    ) -> Result<(CloudReply, f64, TransferOutcome, TransferOutcome)> {
+        let mut attempt = 0u32;
+        loop {
+            let err = match self.try_exchange(payload) {
+                Ok(ok) => return Ok(ok),
+                Err(e) => e,
+            };
+            let rejected =
+                matches!(err.downcast_ref::<WireError>(), Some(WireError::Rejected { .. }));
+            if rejected || attempt >= self.retry.attempts {
+                return Err(err.context(format!(
+                    "request {} position {:?}: exchange failed after {attempt} recoveries",
+                    session.request_id(),
+                    session.pending_pos(),
+                )));
+            }
+            attempt += 1;
+            std::thread::sleep(self.retry.delay(attempt, rng));
+            if let Err(e) = self.reestablish(session) {
+                if attempt >= self.retry.attempts {
+                    return Err(e.context("re-establishing the cloud connection"));
+                }
+                // Burn the round and let the next one re-dial again.
+                continue;
+            }
+        }
+    }
+
+    fn try_exchange(
+        &mut self,
+        payload: &SplitPayload,
+    ) -> Result<(CloudReply, f64, TransferOutcome, TransferOutcome)> {
+        let up = self.port.send_payload(payload)?;
+        let mut skipped = 0u32;
+        loop {
+            // A duplicated or reordered frame can deliver a reply — or an
+            // in-band stale-position rejection — for an already-answered
+            // position (the cloud's replay fence echoes duplicates and
+            // refuses regressions). The fence trails the edge, so neither
+            // can refer to the in-flight payload: discard a bounded
+            // number of them rather than absorbing a stale answer.
+            let (reply, server_s, mut down) = match self.port.recv_reply() {
+                Ok(ok) => ok,
+                Err(e)
+                    if matches!(
+                        e.downcast_ref::<WireError>(),
+                        Some(WireError::Rejected { code: reject::STALE_POS, .. })
+                    ) =>
+                {
+                    skipped += 1;
+                    anyhow::ensure!(
+                        skipped <= 8,
+                        "request {}: discarded {skipped} stale replies awaiting position {}",
+                        payload.request_id,
+                        payload.pos
+                    );
+                    continue;
+                }
+                Err(e) => return Err(e),
+            };
+            if reply.request_id != payload.request_id || reply.pos != payload.pos as u64 {
+                skipped += 1;
+                anyhow::ensure!(
+                    skipped <= 8,
+                    "request {}: discarded {skipped} stale replies awaiting position {}",
+                    payload.request_id,
+                    payload.pos
+                );
+                continue;
+            }
+            down.latency_s = (down.latency_s - server_s).max(0.0);
+            return Ok((reply, server_s, up, down));
+        }
+    }
+
+    /// Reconnect (when a closure is installed), discard queued
+    /// stragglers, and run the `Resume` handshake: the cloud fences the
+    /// dead connection's epoch and re-learns the session's announced
+    /// transmission settings.
+    fn reestablish(&mut self, session: &mut Session) -> Result<()> {
+        if let Some(reconnect) = self.reconnect.as_mut() {
+            self.port = EdgePort::new(reconnect()?);
+        }
+        self.port.transport.drain();
+        let epoch = session.bump_resume_epoch();
+        let settings = session.settings();
+        let rs = Resume {
+            request_id: session.request_id(),
+            epoch,
+            next_pos: session.pending_pos().or(session.seq_len()).unwrap_or(0) as u64,
+            qa_bits: settings.qa_bits,
+            tau: session.current_tau(&self.edge),
+            include_kv: settings.include_kv,
+        };
+        self.port.send_resume(&rs)?;
+        let mut skipped = 0u32;
+        let ack = loop {
+            match self.port.recv_resume_ack() {
+                Ok((ack, _)) => break ack,
+                // Same-transport recovery can still have stragglers in
+                // the pipe ahead of the ack — replies (WrongKind) or
+                // stale-position echoes from the replay fence; skip a
+                // bounded few. A stale-EPOCH rejection stays fatal: that
+                // is the cloud refusing THIS resume.
+                Err(e)
+                    if skipped < 8
+                        && matches!(
+                            e.downcast_ref::<WireError>(),
+                            Some(WireError::WrongKind { .. })
+                                | Some(WireError::Rejected {
+                                    code: reject::STALE_POS,
+                                    ..
+                                })
+                        ) =>
+                {
+                    skipped += 1;
+                }
+                Err(e) => return Err(e),
+            }
+        };
+        anyhow::ensure!(
+            ack.request_id == rs.request_id && ack.epoch == epoch,
+            "resume ack mismatch: got request {} epoch {}, want request {} epoch {epoch}",
+            ack.request_id,
+            ack.epoch,
+            rs.request_id
+        );
+        Ok(())
     }
 }

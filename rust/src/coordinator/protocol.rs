@@ -40,7 +40,10 @@
 //! no retained uncompressed codes). Wire format v4 leaves every layout
 //! below untouched and adds one frame kind: the control-plane
 //! `adapt::Reconfig` (kind 3), the adaptive control plane's mid-stream
-//! actuation message.
+//! actuation message. Wire format v5 stamps every `CloudReply` with the
+//! position it answers (duplicate/stale replies become typed rejections)
+//! and adds the session-recovery frames: `Resume` (kind 4),
+//! `ResumeAck` (kind 5) and the in-band typed `Error` (kind 6).
 //!
 //! Compression runs on the fused engine (`quant::fused`): single-pass
 //! TS+stats, streaming adaptive bit search, scratch-reused rANS tables.
@@ -352,6 +355,11 @@ impl SplitPayload {
 #[derive(Clone, Debug, PartialEq)]
 pub struct CloudReply {
     pub request_id: u64,
+    /// Position this reply answers (the payload's `pos`, echoed back).
+    /// New in wire v5: the stamp is what lets a session reject a
+    /// duplicated or stale reply as a typed error instead of silently
+    /// absorbing the wrong token.
+    pub pos: u64,
     pub token: u32,
     /// (k_row, v_row) per cloud layer for the newly processed position(s);
     /// raw f32 (small: one row per layer per step).
@@ -361,17 +369,99 @@ pub struct CloudReply {
 
 impl CloudReply {
     /// Bit-exact wire size of the reply body (`wire::codec` layout):
-    /// request id u64 + token u32 + entropy f32 + layer count u16 +
-    /// row length u32 = 22 fixed bytes, plus the raw f32 KV rows. The
-    /// frame's 8-byte server-compute timing prefix is transport metadata
-    /// and counted in `wire::REPLY_OVERHEAD`, not here.
+    /// request id u64 + pos u64 + token u32 + entropy f32 + layer count
+    /// u16 + row length u32 = 30 fixed bytes, plus the raw f32 KV rows.
+    /// The frame's 8-byte server-compute timing prefix is transport
+    /// metadata and counted in `wire::REPLY_OVERHEAD`, not here.
     pub fn wire_bytes(&self) -> u64 {
         let rows: u64 = self
             .new_kv_rows
             .iter()
             .map(|(k, v)| 4 * (k.len() + v.len()) as u64)
             .sum();
-        22 + rows
+        30 + rows
+    }
+}
+
+/// Edge→cloud session resumption (frame kind 4, new in wire v5): after a
+/// reconnect — or against a restarted cloud — the edge re-announces the
+/// session so the stateless cloud can fence stale traffic and continue
+/// the stream bit-identically. The settings mirror what a `Reconfig`
+/// would have announced; `serve_connection` re-registers them because a
+/// connection teardown sweeps its announced control state.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Resume {
+    pub request_id: u64,
+    /// Resumption epoch: strictly increases across reconnects of the same
+    /// session. The cloud rejects `Resume`s at or below the highest epoch
+    /// it has seen, so a delayed duplicate from a dead connection can
+    /// never re-fence a live session.
+    pub epoch: u32,
+    /// Next position the edge will transmit; the cloud fences every
+    /// earlier position on this connection as a replay.
+    pub next_pos: u64,
+    /// Transmission settings to re-announce (Q̄a of the session's current
+    /// plan — validated 2..=16 like a `Reconfig`).
+    pub qa_bits: u32,
+    /// TS threshold τ to re-announce.
+    pub tau: f32,
+    /// I_kv of the session's current plan.
+    pub include_kv: bool,
+}
+
+impl Resume {
+    /// request id u64 + epoch u32 + next_pos u64 + tau f32 + qa_bits u8 +
+    /// flags u8.
+    pub fn wire_bytes(&self) -> u64 {
+        26
+    }
+}
+
+/// Cloud→edge acknowledgement of a [`Resume`] (frame kind 5, wire v5).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ResumeAck {
+    pub request_id: u64,
+    /// The epoch the cloud accepted (echo of the resume's).
+    pub epoch: u32,
+    /// Last position this connection already answered, when the cloud has
+    /// one cached — the edge can sanity-check it against its own stream.
+    /// `None` on a fresh connection (e.g. after a cloud restart).
+    pub last_pos: Option<u64>,
+}
+
+impl ResumeAck {
+    /// request id u64 + epoch u32 + last_pos u64 + flags u8.
+    pub fn wire_bytes(&self) -> u64 {
+        21
+    }
+}
+
+/// In-band typed rejection codes carried by an `Error` frame (kind 6).
+pub mod reject {
+    /// The frame's epoch is at or below one the cloud already accepted.
+    pub const STALE_EPOCH: u8 = 1;
+    /// The payload's position was already answered on this connection
+    /// (and its reply is no longer replayable).
+    pub const STALE_POS: u8 = 2;
+    /// The request failed on the cloud (the message carries the cause).
+    pub const FAILED: u8 = 3;
+}
+
+/// Cloud→edge in-band typed rejection (frame kind 6, wire v5): the
+/// connection stays up — the error frame IS the typed error.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RejectFrame {
+    /// One of the [`reject`] codes.
+    pub code: u8,
+    pub request_id: u64,
+    /// Human-readable cause (UTF-8, length-prefixed on the wire).
+    pub message: String,
+}
+
+impl RejectFrame {
+    /// code u8 + request id u64 + message length u16 + UTF-8 bytes.
+    pub fn wire_bytes(&self) -> u64 {
+        11 + self.message.len() as u64
     }
 }
 

@@ -141,6 +141,16 @@ impl ServeReport {
     }
 }
 
+/// Tear one session down after an unrecoverable per-session fault,
+/// recording the typed cause. The loop keeps serving everyone else — a
+/// chaos-injected wire fault or a hostile payload condemns exactly one
+/// request, never the batch.
+fn fail_session(a: &mut ActiveSession, report: &mut ServeReport, err: anyhow::Error) {
+    a.failed = true;
+    report.errors.push((a.session.request_id(), format!("{err:#}")));
+    a.session.cancel();
+}
+
 struct ActiveSession {
     session: Session,
     device: usize,
@@ -318,32 +328,137 @@ impl ServeLoop {
                 if active[i].session.is_terminal() {
                     continue; // cancelled between poll and delivery
                 }
-                let ep = &mut self.edges[active[i].device];
-                let up = ep.port.send_payload(&payload)?;
-                let (decoded, _) = ep.cloud_port.recv_payload()?;
+                let device = active[i].device;
+                let ep = &mut self.edges[device];
+                // Any wire fault on this exchange condemns only this
+                // session: typed error recorded, endpoint queues drained
+                // (a partial frame must not desync the NEXT session on
+                // this device), telemetry re-anchored (fault-window
+                // samples would poison the bandwidth estimate).
+                let up = match ep.port.send_payload(&payload) {
+                    Ok(up) => up,
+                    Err(e) => {
+                        ep.port.transport.drain();
+                        ep.cloud_port.transport.drain();
+                        fail_session(&mut active[i], &mut report, e.context("uplink"));
+                        if let Some(ctrl) = self.adapt.as_mut() {
+                            ctrl.reanchor(device);
+                        }
+                        continue;
+                    }
+                };
+                let decoded = match ep.cloud_port.recv_payload() {
+                    Ok((d, _)) => d,
+                    Err(e) => {
+                        ep.port.transport.drain();
+                        ep.cloud_port.transport.drain();
+                        fail_session(&mut active[i], &mut report, e.context("cloud decode"));
+                        if let Some(ctrl) = self.adapt.as_mut() {
+                            ctrl.reanchor(device);
+                        }
+                        continue;
+                    }
+                };
+                // The decoded payload must be the one this session just
+                // sent — a duplicated or reordered frame that still
+                // decodes is identity-checked here, never served as if it
+                // were the in-flight step.
+                if decoded.request_id != payload.request_id || decoded.pos != payload.pos {
+                    ep.port.transport.drain();
+                    ep.cloud_port.transport.drain();
+                    fail_session(
+                        &mut active[i],
+                        &mut report,
+                        anyhow::anyhow!(
+                            "wire delivered request {} pos {} while request {} pos {} was in flight",
+                            decoded.request_id,
+                            decoded.pos,
+                            payload.request_id,
+                            payload.pos
+                        ),
+                    );
+                    if let Some(ctrl) = self.adapt.as_mut() {
+                        ctrl.reanchor(device);
+                    }
+                    continue;
+                }
                 meta.push((i, up));
                 payloads.push(decoded);
             }
-            let (served, compute) = self.cloud.handle_batch(&payloads)?;
+            // A payload that decoded cleanly can still fail to serve
+            // (control-plane violation, inconsistent tensor dims). The
+            // batch call refuses as a whole; fall back to serving each
+            // payload alone so the fault is attributed to ITS session and
+            // everyone else's step still completes.
             let b = payloads.len();
+            let (served, compute): (Vec<std::result::Result<_, String>>, _) =
+                match self.cloud.handle_batch(&payloads) {
+                    Ok((served, compute)) => (served.into_iter().map(Ok).collect(), compute),
+                    Err(_) => {
+                        let mut served = Vec::with_capacity(payloads.len());
+                        let mut compute = super::cloud::BatchCompute::default();
+                        for p in &payloads {
+                            match self.cloud.handle(p) {
+                                Ok((r, s)) => {
+                                    compute.solo_s += s;
+                                    compute.solo_n += 1;
+                                    served.push(Ok((r, s)));
+                                }
+                                Err(e) => served.push(Err(format!("{e:#}"))),
+                            }
+                        }
+                        (served, compute)
+                    }
+                };
             // Edge/link time overlaps across devices but serializes on one
             // device: sum per device, then max across devices.
             let mut device_busy_s = vec![0.0f64; self.edges.len()];
-            for ((i, up), (reply, cloud_s)) in meta.into_iter().zip(served) {
+            for ((i, up), outcome) in meta.into_iter().zip(served) {
                 let a = &mut active[i];
+                let device = a.device;
                 let edge_s = a.session.pending_edge_s().unwrap_or(0.0);
-                let ep = &mut self.edges[a.device];
-                ep.cloud_port.send_reply(&reply, cloud_s)?;
-                let (reply, server_s, down) = ep.port.recv_reply()?;
+                let (reply, cloud_s) = match outcome {
+                    Ok(x) => x,
+                    Err(msg) => {
+                        fail_session(a, &mut report, anyhow::anyhow!(msg).context("cloud serve"));
+                        continue;
+                    }
+                };
+                let ep = &mut self.edges[device];
+                let sent = ep.cloud_port.send_reply(&reply, cloud_s);
+                let received = sent.and_then(|_| ep.port.recv_reply());
+                let (reply, server_s, down) = match received {
+                    Ok(x) => x,
+                    Err(e) => {
+                        ep.port.transport.drain();
+                        ep.cloud_port.transport.drain();
+                        fail_session(a, &mut report, e.context("downlink"));
+                        if let Some(ctrl) = self.adapt.as_mut() {
+                            ctrl.reanchor(device);
+                        }
+                        continue;
+                    }
+                };
                 // Telemetry: both directions of this exchange crossed the
                 // device's link — feed the control plane's estimator.
                 if let Some(ctrl) = self.adapt.as_mut() {
-                    ctrl.observe(a.device, &up);
-                    ctrl.observe(a.device, &down);
+                    ctrl.observe(device, &up);
+                    ctrl.observe(device, &down);
                 }
                 a.decode_steps += 1;
-                a.session.on_reply(&ep.edge, &reply, server_s, up, down);
-                device_busy_s[a.device] += edge_s + up.latency_s + down.latency_s;
+                // A reply that answers the wrong request/position, or one
+                // whose body cannot be absorbed, is a typed per-session
+                // failure — never a silently-wrong token.
+                if let Err(e) = a.session.on_reply(&ep.edge, &reply, server_s, up, down) {
+                    ep.port.transport.drain();
+                    ep.cloud_port.transport.drain();
+                    fail_session(a, &mut report, e.context("absorbing reply"));
+                    if let Some(ctrl) = self.adapt.as_mut() {
+                        ctrl.reanchor(device);
+                    }
+                    continue;
+                }
+                device_busy_s[device] += edge_s + up.latency_s + down.latency_s;
             }
             let edge_wire_max_s = device_busy_s.iter().fold(0.0f64, |m, &x| m.max(x));
 
@@ -415,9 +530,28 @@ impl ServeLoop {
                     };
                     let ctrl = self.adapt.as_mut().expect("checked");
                     if let Some(rc) = ctrl.reconcile(a.device, &view) {
-                        let ep = &mut self.edges[a.device];
-                        let up = ep.port.send_reconfig(&rc)?;
-                        let (applied, _) = ep.cloud_port.recv_reconfig()?;
+                        let device = a.device;
+                        let ep = &mut self.edges[device];
+                        // Control frames cross the same chaotic wire as
+                        // payloads: a mangled reconfig condemns only this
+                        // session (typed, queues drained, telemetry
+                        // re-anchored) — never the whole loop.
+                        let exchanged = ep.port.send_reconfig(&rc).and_then(|up| {
+                            let (applied, _) = ep.cloud_port.recv_reconfig()?;
+                            Ok((up, applied))
+                        });
+                        let (up, applied) = match exchanged {
+                            Ok(x) => x,
+                            Err(e) => {
+                                ep.port.transport.drain();
+                                ep.cloud_port.transport.drain();
+                                fail_session(a, &mut report, e.context("reconfig control frame"));
+                                if let Some(ctrl) = self.adapt.as_mut() {
+                                    ctrl.reanchor(device);
+                                }
+                                continue;
+                            }
+                        };
                         self.cloud.apply_reconfig(&applied);
                         a.session.apply_reconfig(&rc);
                         a.epoch = rc.epoch;

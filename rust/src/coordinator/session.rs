@@ -33,9 +33,11 @@ use anyhow::Result;
 use super::edge::{EdgeDevice, EdgeRequestState};
 use super::protocol::{CloudReply, SplitPayload};
 use super::request::{GenerationResult, Request, StepStats};
+use super::snapshot::{SessionSnapshot, StateSnapshot};
 use crate::adapt::Reconfig;
 use crate::channel::TransferOutcome;
 use crate::planner::{EarlyExitController, ExitDecision, TxSettings};
+use crate::runtime::LayerKv;
 
 /// Where the session is in its lifecycle.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -96,6 +98,10 @@ pub struct Session {
     /// returned no KV rows for it, so the edge-held cloud-layer caches
     /// are missing those positions and must never be shipped again.
     cloud_kv_stale: bool,
+    /// Resumption epoch: bumped on every reconnect-and-resume of this
+    /// session, so the cloud can fence traffic from dead connections.
+    /// Survives snapshot/restore.
+    resume_epoch: u32,
     pending: Option<PendingTx>,
     result: GenerationResult,
 }
@@ -119,6 +125,7 @@ impl Session {
             next_token: 0,
             budget,
             cloud_kv_stale: false,
+            resume_epoch: 0,
             pending: None,
             result,
         }
@@ -190,6 +197,35 @@ impl Session {
     /// statelessly) — the session can never ship KV again.
     pub fn cloud_kv_stale(&self) -> bool {
         self.cloud_kv_stale
+    }
+
+    /// Current resumption epoch (bumped per reconnect-and-resume).
+    pub fn resume_epoch(&self) -> u32 {
+        self.resume_epoch
+    }
+
+    /// Bump and return the resumption epoch — called once per
+    /// reconnect-and-resume so the cloud can fence the dead connection's
+    /// stragglers.
+    pub fn bump_resume_epoch(&mut self) -> u32 {
+        self.resume_epoch += 1;
+        self.resume_epoch
+    }
+
+    /// TS threshold currently in force: the device's configured τ unless
+    /// a reconfiguration overrode it (what a `Resume` re-announces).
+    pub fn current_tau(&self, edge: &EdgeDevice) -> f32 {
+        self.tau_override.unwrap_or(edge.compression.tau)
+    }
+
+    /// Position of the transmission currently in flight, if any. An
+    /// in-flight step's edge compute already ran and its effects (token
+    /// push, history append) already live in the request state, so
+    /// recovery after a wire failure retransmits the SAME payload (see
+    /// `EdgeClient`) — the session keeps waiting for that position's
+    /// reply rather than re-polling.
+    pub fn pending_pos(&self) -> Option<usize> {
+        self.pending.as_ref().map(|p| p.pos)
     }
 
     /// Apply a control-plane reconfiguration: new (τ, Q̄a, I_kv) take
@@ -342,6 +378,15 @@ impl Session {
     /// Feed back the cloud's reply for the in-flight transmission, plus
     /// the uplink/downlink outcomes the driver measured. Ignored (stray
     /// reply) if the session is terminal or nothing is in flight.
+    ///
+    /// The reply's identity is verified against the in-flight
+    /// transmission: a reply for another request, or for a position other
+    /// than the one awaiting an answer (a duplicated or stale frame), is
+    /// a typed error that leaves the session's state — including the
+    /// in-flight transmission — untouched, so the driver can keep waiting
+    /// for (or re-request) the right reply. A structurally invalid reply
+    /// body (ragged KV rows, out-of-range position) cancels the session:
+    /// its step accounting can no longer be trusted.
     pub fn on_reply(
         &mut self,
         edge: &EdgeDevice,
@@ -349,11 +394,37 @@ impl Session {
         cloud_s: f64,
         up: TransferOutcome,
         down: TransferOutcome,
-    ) {
+    ) -> Result<()> {
         if self.is_terminal() {
-            return;
+            return Ok(());
         }
-        let Some(pending) = self.pending.take() else { return };
+        let Some(pending) = self.pending else { return Ok(()) };
+        anyhow::ensure!(
+            reply.request_id == self.request.id,
+            "reply for request {} fed to session {}",
+            reply.request_id,
+            self.request.id
+        );
+        anyhow::ensure!(
+            reply.pos == pending.pos as u64,
+            "stale reply: answers position {}, position {} is in flight (request {})",
+            reply.pos,
+            pending.pos,
+            self.request.id
+        );
+        if pending.is_prefill || pending.kv_transmitted {
+            let state = self.state.as_mut().expect("reply before prefill");
+            if let Err(e) = edge.absorb_reply(state, pending.pos, &reply.new_kv_rows) {
+                self.cancel();
+                return Err(e.context("absorbing cloud reply"));
+            }
+        } else {
+            // Stateless step: the cloud recomputed from the full hidden
+            // history and returned no KV rows — the edge-held cloud
+            // caches now miss this position for good.
+            self.cloud_kv_stale = true;
+        }
+        self.pending = None;
         let stats = StepStats {
             edge_compute_s: pending.edge_s,
             cloud_compute_s: cloud_s,
@@ -370,16 +441,129 @@ impl Session {
         } else {
             self.result.steps.push(stats);
         }
-        if pending.is_prefill || pending.kv_transmitted {
-            let state = self.state.as_mut().expect("reply before prefill");
-            edge.absorb_reply(state, pending.pos, &reply.new_kv_rows);
-        } else {
-            // Stateless step: the cloud recomputed from the full hidden
-            // history and returned no KV rows — the edge-held cloud
-            // caches now miss this position for good.
-            self.cloud_kv_stale = true;
-        }
         self.next_token = reply.token;
         self.phase = SessionPhase::ReadyToDecode;
+        Ok(())
+    }
+
+    /// Serialize the session at a quiescent point (nothing in flight)
+    /// into a [`SessionSnapshot`]. The edge-held request state — KV
+    /// caches, hidden history, tokens — is captured as raw f32, so a
+    /// restored session continues the stream bit-identically (the
+    /// two-stage wire compression is lossy; the snapshot is not). The
+    /// edge device supplies the cache geometry (only the used rows are
+    /// captured; the zero padding is restored from the config).
+    pub fn snapshot(&self, edge: &EdgeDevice) -> Result<SessionSnapshot> {
+        anyhow::ensure!(
+            self.pending.is_none(),
+            "cannot snapshot with a transmission in flight (request {})",
+            self.request.id
+        );
+        let kvw = edge.node.weights.cfg.kv_width();
+        let state = self.state.as_ref().map(|s| {
+            let rows = s.seq_len();
+            let trim = |caches: &[LayerKv]| {
+                caches
+                    .iter()
+                    .map(|c| (c.k[..rows * kvw].to_vec(), c.v[..rows * kvw].to_vec()))
+                    .collect()
+            };
+            StateSnapshot {
+                front_kv: trim(&s.front_kv),
+                cloud_kv: trim(&s.cloud_kv),
+                hidden_history: s.hidden_history.clone(),
+                tokens: s.tokens.clone(),
+            }
+        });
+        Ok(SessionSnapshot {
+            request: self.request.clone(),
+            phase: self.phase,
+            settings: self.settings,
+            tau_override: self.tau_override,
+            next_token: self.next_token,
+            budget: self.budget,
+            cloud_kv_stale: self.cloud_kv_stale,
+            resume_epoch: self.resume_epoch,
+            result: self.result.clone(),
+            state,
+        })
+    }
+
+    /// Rebuild a session from a snapshot against the same deployment (the
+    /// edge device supplies the cache geometry; the controller is
+    /// configuration, not state, so the caller re-supplies it). The
+    /// restored session continues exactly where the snapshot left off.
+    pub fn restore(
+        snap: SessionSnapshot,
+        edge: &EdgeDevice,
+        controller: Option<EarlyExitController>,
+    ) -> Result<Session> {
+        anyhow::ensure!(
+            snap.phase != SessionPhase::AwaitingReply,
+            "snapshot captured mid-flight (request {})",
+            snap.request.id
+        );
+        let cfg = &edge.node.weights.cfg;
+        let kvw = cfg.kv_width();
+        let max_seq = cfg.max_seq;
+        let state = match snap.state {
+            None => None,
+            Some(st) => {
+                let rows = st.tokens.len();
+                anyhow::ensure!(rows <= max_seq, "snapshot holds {rows} rows, max_seq {max_seq}");
+                anyhow::ensure!(
+                    st.hidden_history.len() == rows * cfg.d_model,
+                    "snapshot hidden history covers {} floats, expected {}",
+                    st.hidden_history.len(),
+                    rows * cfg.d_model
+                );
+                let pad = |trimmed: Vec<(Vec<f32>, Vec<f32>)>| -> Result<Vec<LayerKv>> {
+                    trimmed
+                        .into_iter()
+                        .map(|(k, v)| {
+                            anyhow::ensure!(
+                                k.len() == rows * kvw && v.len() == rows * kvw,
+                                "snapshot KV layer covers {} floats, expected {}",
+                                k.len(),
+                                rows * kvw
+                            );
+                            let mut cache = LayerKv::zeros(max_seq, kvw);
+                            cache.k[..rows * kvw].copy_from_slice(&k);
+                            cache.v[..rows * kvw].copy_from_slice(&v);
+                            Ok(cache)
+                        })
+                        .collect()
+                };
+                anyhow::ensure!(
+                    st.cloud_kv.len() == edge.n_cloud_layers,
+                    "snapshot holds {} cloud KV layers, deployment has {}",
+                    st.cloud_kv.len(),
+                    edge.n_cloud_layers
+                );
+                let mut hidden_history = Vec::with_capacity(max_seq * cfg.d_model);
+                hidden_history.extend_from_slice(&st.hidden_history);
+                Some(EdgeRequestState {
+                    request_id: snap.request.id,
+                    front_kv: pad(st.front_kv)?,
+                    cloud_kv: pad(st.cloud_kv)?,
+                    hidden_history,
+                    tokens: st.tokens,
+                })
+            }
+        };
+        Ok(Session {
+            request: snap.request,
+            phase: snap.phase,
+            settings: snap.settings,
+            tau_override: snap.tau_override,
+            controller,
+            state,
+            next_token: snap.next_token,
+            budget: snap.budget,
+            cloud_kv_stale: snap.cloud_kv_stale,
+            resume_epoch: snap.resume_epoch,
+            pending: None,
+            result: snap.result,
+        })
     }
 }

@@ -1,0 +1,543 @@
+//! Versioned byte codec for session durability: everything needed to
+//! rehost one in-flight generation request — on the same edge after a
+//! crash, or on another process entirely.
+//!
+//! The snapshot captures the session at a quiescent point (no
+//! transmission in flight): the request, the accumulated result, the
+//! Algorithm-2 settings, the resumption epoch, and the edge-held request
+//! state with its KV caches and hidden history as **raw f32**. Raw
+//! matters: the wire's two-stage compression (TS → TAB-Q → rANS) is
+//! lossy, so a snapshot that round-tripped state through `CompressedKv`
+//! would resume a *different* stream. This codec is exact — a restored
+//! session produces bit-identical tokens.
+//!
+//! Layout (little-endian, strict decode in the `wire::codec` style):
+//!
+//! ```text
+//! [magic   u32]  0x53534E50 ("PNSS" on the wire — "SSNP" big-endian)
+//! [version u8 ]  1
+//! [body       ]  request | control | result | state (see below)
+//! [crc32   u32]  IEEE CRC-32 over version + body
+//! ```
+//!
+//! Like the wire frames, decoding is strict: truncation, corruption,
+//! unknown flags and inconsistent dimensions are typed [`WireError`]s,
+//! never panics.
+
+use super::request::{GenerationResult, Request, StepStats};
+use super::sampling::SamplingSpec;
+use super::session::SessionPhase;
+use crate::planner::TxSettings;
+use crate::wire::codec::Reader;
+use crate::wire::frame::{crc32, WireError};
+
+/// Snapshot format version.
+pub const SNAPSHOT_VERSION: u8 = 1;
+/// "SSNP" — splitserve snapshot.
+pub const SNAPSHOT_MAGIC: u32 = 0x5353_4E50;
+
+const FLAG_DEADLINE: u8 = 1;
+const FLAG_TOPK: u8 = 1 << 1;
+
+const FLAG_INCLUDE_KV: u8 = 1;
+const FLAG_TAU: u8 = 1 << 1;
+const FLAG_KV_STALE: u8 = 1 << 2;
+const FLAG_STATE: u8 = 1 << 3;
+const FLAG_FINAL_SETTINGS: u8 = 1 << 4;
+const FLAG_FINAL_KV: u8 = 1 << 5;
+
+const STAT_OUTAGE: u8 = 1;
+const STAT_KV: u8 = 1 << 1;
+
+/// Edge-held request state, trimmed to the rows actually used (the
+/// restore pads back to the deployment's `max_seq` with zeros).
+#[derive(Clone, Debug, PartialEq)]
+pub struct StateSnapshot {
+    /// Front-layer (k, v) caches, `seq_len * kv_width` floats each.
+    pub front_kv: Vec<(Vec<f32>, Vec<f32>)>,
+    /// Cloud-layer (k, v) caches, same trim.
+    pub cloud_kv: Vec<(Vec<f32>, Vec<f32>)>,
+    /// Split-layer hidden state of every token so far (`seq_len * d`).
+    pub hidden_history: Vec<f32>,
+    /// Tokens so far (prompt + generated).
+    pub tokens: Vec<u32>,
+}
+
+/// A session at a quiescent point, ready to serialize or restore. Built
+/// by [`Session::snapshot`](super::Session::snapshot), consumed by
+/// [`Session::restore`](super::Session::restore).
+#[derive(Clone, Debug, PartialEq)]
+pub struct SessionSnapshot {
+    pub request: Request,
+    pub phase: SessionPhase,
+    pub settings: TxSettings,
+    pub tau_override: Option<f32>,
+    pub next_token: u32,
+    pub budget: usize,
+    pub cloud_kv_stale: bool,
+    pub resume_epoch: u32,
+    pub result: GenerationResult,
+    pub state: Option<StateSnapshot>,
+}
+
+fn malformed(m: impl Into<String>) -> WireError {
+    WireError::Malformed(m.into())
+}
+
+fn write_f32s(out: &mut Vec<u8>, xs: &[f32]) {
+    for &x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+fn read_f32s(r: &mut Reader, n: usize) -> Result<Vec<f32>, WireError> {
+    let bytes = r.take(n.checked_mul(4).ok_or_else(|| malformed("f32 count overflow"))?)?;
+    Ok(bytes.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+}
+
+fn write_stats(out: &mut Vec<u8>, s: &StepStats) {
+    out.extend_from_slice(&s.edge_compute_s.to_le_bytes());
+    out.extend_from_slice(&s.cloud_compute_s.to_le_bytes());
+    out.extend_from_slice(&s.uplink_s.to_le_bytes());
+    out.extend_from_slice(&s.downlink_s.to_le_bytes());
+    out.extend_from_slice(&s.uplink_bytes.to_le_bytes());
+    out.extend_from_slice(&s.downlink_bytes.to_le_bytes());
+    out.extend_from_slice(&s.chosen_bits.to_le_bytes());
+    let mut flags = 0u8;
+    if s.outage {
+        flags |= STAT_OUTAGE;
+    }
+    if s.kv_transmitted {
+        flags |= STAT_KV;
+    }
+    out.push(flags);
+}
+
+fn read_stats(r: &mut Reader) -> Result<StepStats, WireError> {
+    let edge_compute_s = r.f64()?;
+    let cloud_compute_s = r.f64()?;
+    let uplink_s = r.f64()?;
+    let downlink_s = r.f64()?;
+    let uplink_bytes = r.u64()?;
+    let downlink_bytes = r.u64()?;
+    let chosen_bits = r.u32()?;
+    let flags = r.u8()?;
+    if flags & !(STAT_OUTAGE | STAT_KV) != 0 {
+        return Err(malformed(format!("unknown step-stat flags {flags:#04x}")));
+    }
+    Ok(StepStats {
+        edge_compute_s,
+        cloud_compute_s,
+        uplink_s,
+        downlink_s,
+        uplink_bytes,
+        downlink_bytes,
+        outage: flags & STAT_OUTAGE != 0,
+        chosen_bits,
+        kv_transmitted: flags & STAT_KV != 0,
+    })
+}
+
+fn phase_to_u8(p: SessionPhase) -> u8 {
+    match p {
+        SessionPhase::NeedPrefill => 0,
+        SessionPhase::AwaitingReply => 1,
+        SessionPhase::ReadyToDecode => 2,
+        SessionPhase::Done => 3,
+        SessionPhase::Cancelled => 4,
+    }
+}
+
+fn phase_from_u8(b: u8) -> Result<SessionPhase, WireError> {
+    match b {
+        0 => Ok(SessionPhase::NeedPrefill),
+        2 => Ok(SessionPhase::ReadyToDecode),
+        3 => Ok(SessionPhase::Done),
+        4 => Ok(SessionPhase::Cancelled),
+        1 => Err(malformed("snapshot captured mid-flight (AwaitingReply)")),
+        other => Err(malformed(format!("unknown session phase {other}"))),
+    }
+}
+
+/// Guard a length field before allocating for it: the bytes must
+/// actually be present in the buffer.
+fn guard(r: &Reader, items: usize, item_bytes: usize) -> Result<(), WireError> {
+    let need = items
+        .checked_mul(item_bytes)
+        .ok_or_else(|| malformed("snapshot length overflow"))?;
+    if r.remaining() < need {
+        return Err(WireError::Truncated { need, have: r.remaining() });
+    }
+    Ok(())
+}
+
+impl SessionSnapshot {
+    /// Serialize to the versioned, CRC-protected byte form.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(&SNAPSHOT_MAGIC.to_le_bytes());
+        out.push(SNAPSHOT_VERSION);
+        // --- request ---
+        let rq = &self.request;
+        out.extend_from_slice(&rq.id.to_le_bytes());
+        out.extend_from_slice(&(rq.prompt.len() as u32).to_le_bytes());
+        for &t in &rq.prompt {
+            out.extend_from_slice(&t.to_le_bytes());
+        }
+        out.extend_from_slice(&(rq.max_new_tokens as u32).to_le_bytes());
+        let mut rflags = 0u8;
+        if rq.deadline_s.is_some() {
+            rflags |= FLAG_DEADLINE;
+        }
+        if matches!(rq.sampling, SamplingSpec::TopK { .. }) {
+            rflags |= FLAG_TOPK;
+        }
+        out.push(rflags);
+        if let Some(d) = rq.deadline_s {
+            out.extend_from_slice(&d.to_le_bytes());
+        }
+        out.extend_from_slice(&rq.arrival_s.to_le_bytes());
+        if let SamplingSpec::TopK { k, temperature, seed } = rq.sampling {
+            out.extend_from_slice(&(k as u16).to_le_bytes());
+            out.extend_from_slice(&temperature.to_le_bytes());
+            out.extend_from_slice(&seed.to_le_bytes());
+        }
+        // --- control ---
+        out.push(phase_to_u8(self.phase));
+        out.extend_from_slice(&self.settings.qa_bits.to_le_bytes());
+        let mut cflags = 0u8;
+        if self.settings.include_kv {
+            cflags |= FLAG_INCLUDE_KV;
+        }
+        if self.tau_override.is_some() {
+            cflags |= FLAG_TAU;
+        }
+        if self.cloud_kv_stale {
+            cflags |= FLAG_KV_STALE;
+        }
+        if self.state.is_some() {
+            cflags |= FLAG_STATE;
+        }
+        if let Some(fs) = self.result.final_settings {
+            cflags |= FLAG_FINAL_SETTINGS;
+            if fs.include_kv {
+                cflags |= FLAG_FINAL_KV;
+            }
+        }
+        out.push(cflags);
+        if let Some(tau) = self.tau_override {
+            out.extend_from_slice(&tau.to_le_bytes());
+        }
+        out.extend_from_slice(&self.next_token.to_le_bytes());
+        out.extend_from_slice(&(self.budget as u32).to_le_bytes());
+        out.extend_from_slice(&self.resume_epoch.to_le_bytes());
+        // --- result ---
+        let rs = &self.result;
+        out.extend_from_slice(&(rs.tokens.len() as u32).to_le_bytes());
+        for &t in &rs.tokens {
+            out.extend_from_slice(&t.to_le_bytes());
+        }
+        write_stats(&mut out, &rs.prefill);
+        out.extend_from_slice(&(rs.steps.len() as u32).to_le_bytes());
+        for s in &rs.steps {
+            write_stats(&mut out, s);
+        }
+        out.extend_from_slice(&(rs.tokens_dropped as u32).to_le_bytes());
+        out.extend_from_slice(&(rs.reconfigs as u32).to_le_bytes());
+        if let Some(fs) = rs.final_settings {
+            out.extend_from_slice(&fs.qa_bits.to_le_bytes());
+        }
+        // --- state ---
+        if let Some(st) = &self.state {
+            let rows = st.tokens.len();
+            let kv_floats = st.front_kv.first().or(st.cloud_kv.first()).map_or(0, |l| l.0.len());
+            debug_assert!(rows == 0 || kv_floats % rows == 0, "ragged snapshot KV");
+            out.extend_from_slice(&(st.front_kv.len() as u16).to_le_bytes());
+            out.extend_from_slice(&(st.cloud_kv.len() as u16).to_le_bytes());
+            out.extend_from_slice(&(rows as u32).to_le_bytes());
+            out.extend_from_slice(&(kv_floats as u32).to_le_bytes());
+            out.extend_from_slice(&(st.hidden_history.len() as u32).to_le_bytes());
+            for &t in &st.tokens {
+                out.extend_from_slice(&t.to_le_bytes());
+            }
+            write_f32s(&mut out, &st.hidden_history);
+            for (k, v) in st.front_kv.iter().chain(&st.cloud_kv) {
+                debug_assert!(k.len() == kv_floats && v.len() == kv_floats);
+                write_f32s(&mut out, k);
+                write_f32s(&mut out, v);
+            }
+        }
+        let crc = crc32(&out[4..]);
+        out.extend_from_slice(&crc.to_le_bytes());
+        out
+    }
+
+    /// Strict decode: magic, version, CRC, structure, full consumption.
+    pub fn from_bytes(bytes: &[u8]) -> Result<SessionSnapshot, WireError> {
+        if bytes.len() < 9 {
+            return Err(WireError::Truncated { need: 9, have: bytes.len() });
+        }
+        let magic = u32::from_le_bytes(bytes[0..4].try_into().unwrap());
+        if magic != SNAPSHOT_MAGIC {
+            return Err(WireError::BadMagic(magic));
+        }
+        if bytes[4] != SNAPSHOT_VERSION {
+            return Err(WireError::BadVersion(bytes[4]));
+        }
+        let want = u32::from_le_bytes(bytes[bytes.len() - 4..].try_into().unwrap());
+        let got = crc32(&bytes[4..bytes.len() - 4]);
+        if want != got {
+            return Err(WireError::Crc { want, got });
+        }
+        let mut r = Reader::new(&bytes[5..bytes.len() - 4]);
+        // --- request ---
+        let id = r.u64()?;
+        let prompt_len = r.u32()? as usize;
+        guard(&r, prompt_len, 4)?;
+        let mut prompt = Vec::with_capacity(prompt_len);
+        for _ in 0..prompt_len {
+            prompt.push(r.u32()?);
+        }
+        let max_new_tokens = r.u32()? as usize;
+        let rflags = r.u8()?;
+        if rflags & !(FLAG_DEADLINE | FLAG_TOPK) != 0 {
+            return Err(malformed(format!("unknown request flags {rflags:#04x}")));
+        }
+        let deadline_s = if rflags & FLAG_DEADLINE != 0 { Some(r.f64()?) } else { None };
+        let arrival_s = r.f64()?;
+        let sampling = if rflags & FLAG_TOPK != 0 {
+            let k = r.u16()? as usize;
+            let temperature = r.f32()?;
+            let seed = r.u64()?;
+            SamplingSpec::TopK { k, temperature, seed }
+        } else {
+            SamplingSpec::Greedy
+        };
+        let request =
+            Request { id, prompt, max_new_tokens, deadline_s, arrival_s, sampling };
+        // --- control ---
+        let phase = phase_from_u8(r.u8()?)?;
+        let qa_bits = r.u32()?;
+        let cflags = r.u8()?;
+        let known = FLAG_INCLUDE_KV
+            | FLAG_TAU
+            | FLAG_KV_STALE
+            | FLAG_STATE
+            | FLAG_FINAL_SETTINGS
+            | FLAG_FINAL_KV;
+        if cflags & !known != 0 {
+            return Err(malformed(format!("unknown control flags {cflags:#04x}")));
+        }
+        let settings = TxSettings { qa_bits, include_kv: cflags & FLAG_INCLUDE_KV != 0 };
+        let tau_override = if cflags & FLAG_TAU != 0 { Some(r.f32()?) } else { None };
+        let next_token = r.u32()?;
+        let budget = r.u32()? as usize;
+        let resume_epoch = r.u32()?;
+        // --- result ---
+        let n_tokens = r.u32()? as usize;
+        guard(&r, n_tokens, 4)?;
+        let mut tokens = Vec::with_capacity(n_tokens);
+        for _ in 0..n_tokens {
+            tokens.push(r.u32()?);
+        }
+        let prefill = read_stats(&mut r)?;
+        let n_steps = r.u32()? as usize;
+        guard(&r, n_steps, 53)?;
+        let mut steps = Vec::with_capacity(n_steps);
+        for _ in 0..n_steps {
+            steps.push(read_stats(&mut r)?);
+        }
+        let tokens_dropped = r.u32()? as usize;
+        let reconfigs = r.u32()? as usize;
+        let final_settings = if cflags & FLAG_FINAL_SETTINGS != 0 {
+            Some(TxSettings { qa_bits: r.u32()?, include_kv: cflags & FLAG_FINAL_KV != 0 })
+        } else {
+            None
+        };
+        let result = GenerationResult {
+            request_id: id,
+            tokens,
+            prefill,
+            steps,
+            tokens_dropped,
+            reconfigs,
+            final_settings,
+        };
+        // --- state ---
+        let state = if cflags & FLAG_STATE != 0 {
+            let n_front = r.u16()? as usize;
+            let n_cloud = r.u16()? as usize;
+            let rows = r.u32()? as usize;
+            let kv_floats = r.u32()? as usize;
+            let hidden_len = r.u32()? as usize;
+            if rows > 0 && kv_floats % rows != 0 {
+                return Err(malformed(format!(
+                    "KV layer of {kv_floats} floats is not a multiple of {rows} rows"
+                )));
+            }
+            guard(&r, rows, 4)?;
+            let mut st_tokens = Vec::with_capacity(rows);
+            for _ in 0..rows {
+                st_tokens.push(r.u32()?);
+            }
+            guard(&r, hidden_len, 4)?;
+            let hidden_history = read_f32s(&mut r, hidden_len)?;
+            let n_layers = n_front
+                .checked_add(n_cloud)
+                .ok_or_else(|| malformed("layer count overflow"))?;
+            guard(&r, n_layers.max(1), kv_floats.saturating_mul(8))?;
+            let mut read_layers = |n: usize| -> Result<Vec<(Vec<f32>, Vec<f32>)>, WireError> {
+                let mut layers = Vec::with_capacity(n);
+                for _ in 0..n {
+                    let k = read_f32s(&mut r, kv_floats)?;
+                    let v = read_f32s(&mut r, kv_floats)?;
+                    layers.push((k, v));
+                }
+                Ok(layers)
+            };
+            let front_kv = read_layers(n_front)?;
+            let cloud_kv = read_layers(n_cloud)?;
+            Some(StateSnapshot { front_kv, cloud_kv, hidden_history, tokens: st_tokens })
+        } else {
+            None
+        };
+        r.done()?;
+        Ok(SessionSnapshot {
+            request,
+            phase,
+            settings,
+            tau_override,
+            next_token,
+            budget,
+            cloud_kv_stale: cflags & FLAG_KV_STALE != 0,
+            resume_epoch,
+            result,
+            state,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_snapshot() -> SessionSnapshot {
+        SessionSnapshot {
+            request: Request {
+                id: 42,
+                prompt: vec![3, 1, 4, 1, 5],
+                max_new_tokens: 9,
+                deadline_s: Some(0.75),
+                arrival_s: 1.5,
+                sampling: SamplingSpec::TopK { k: 8, temperature: 0.9, seed: 77 },
+            },
+            phase: SessionPhase::ReadyToDecode,
+            settings: TxSettings { qa_bits: 4, include_kv: true },
+            tau_override: Some(10.0),
+            next_token: 17,
+            budget: 6,
+            cloud_kv_stale: false,
+            resume_epoch: 2,
+            result: GenerationResult {
+                request_id: 42,
+                tokens: vec![17, 23],
+                prefill: StepStats {
+                    edge_compute_s: 0.01,
+                    uplink_bytes: 1200,
+                    chosen_bits: 4,
+                    ..Default::default()
+                },
+                steps: vec![StepStats {
+                    cloud_compute_s: 0.02,
+                    downlink_bytes: 300,
+                    outage: true,
+                    kv_transmitted: true,
+                    chosen_bits: 3,
+                    ..Default::default()
+                }],
+                tokens_dropped: 1,
+                reconfigs: 2,
+                final_settings: Some(TxSettings { qa_bits: 3, include_kv: false }),
+            },
+            state: Some(StateSnapshot {
+                front_kv: vec![(vec![0.5; 14], vec![-0.5; 14]); 2],
+                cloud_kv: vec![(vec![1.25; 14], vec![2.5; 14]); 3],
+                hidden_history: (0..28).map(|i| i as f32 * 0.125).collect(),
+                tokens: vec![3, 1, 4, 1, 5, 17, 23],
+            }),
+        }
+    }
+
+    #[test]
+    fn roundtrip_is_exact() {
+        let snap = sample_snapshot();
+        let bytes = snap.to_bytes();
+        let back = SessionSnapshot::from_bytes(&bytes).unwrap();
+        assert_eq!(format!("{snap:?}"), format!("{back:?}"));
+        assert_eq!(snap.state, back.state);
+    }
+
+    #[test]
+    fn minimal_snapshot_roundtrips() {
+        let mut snap = sample_snapshot();
+        snap.state = None;
+        snap.tau_override = None;
+        snap.request.deadline_s = None;
+        snap.request.sampling = SamplingSpec::Greedy;
+        snap.result.final_settings = None;
+        snap.phase = SessionPhase::NeedPrefill;
+        let back = SessionSnapshot::from_bytes(&snap.to_bytes()).unwrap();
+        assert_eq!(format!("{snap:?}"), format!("{back:?}"));
+    }
+
+    #[test]
+    fn every_truncation_is_rejected() {
+        let bytes = sample_snapshot().to_bytes();
+        for cut in 0..bytes.len() {
+            assert!(
+                SessionSnapshot::from_bytes(&bytes[..cut]).is_err(),
+                "truncation to {cut} must fail"
+            );
+        }
+    }
+
+    #[test]
+    fn corruption_is_rejected() {
+        let bytes = sample_snapshot().to_bytes();
+        // flip a bit in every 7th byte (full sweep is slow at f32 scale)
+        for byte in (4..bytes.len()).step_by(7) {
+            let mut bad = bytes.clone();
+            bad[byte] ^= 0x10;
+            assert!(
+                SessionSnapshot::from_bytes(&bad).is_err(),
+                "flip at byte {byte} must be detected"
+            );
+        }
+    }
+
+    #[test]
+    fn mid_flight_phase_is_rejected() {
+        // re-encode with a poisoned phase instead of hunting offsets
+        let mut snap = sample_snapshot();
+        snap.phase = SessionPhase::AwaitingReply;
+        let bytes = snap.to_bytes();
+        assert!(matches!(
+            SessionSnapshot::from_bytes(&bytes),
+            Err(WireError::Malformed(_))
+        ));
+    }
+
+    #[test]
+    fn wrong_magic_and_version_are_typed() {
+        let bytes = sample_snapshot().to_bytes();
+        let mut bad = bytes.clone();
+        bad[0] ^= 0xFF;
+        assert!(matches!(SessionSnapshot::from_bytes(&bad), Err(WireError::BadMagic(_))));
+        let mut bad = bytes.clone();
+        bad[4] = 99;
+        assert!(matches!(
+            SessionSnapshot::from_bytes(&bad),
+            Err(WireError::BadVersion(99))
+        ));
+    }
+}

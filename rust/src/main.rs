@@ -17,15 +17,15 @@ use anyhow::Result;
 use splitserve::adapt::AdaptPolicy;
 use splitserve::channel::ChannelTrace;
 use splitserve::coordinator::{
-    build_pipeline, build_serve_loop, DeploymentSpec, EdgeClient, Request, ServeSpec,
-    TokenControl,
+    build_pipeline, build_serve_loop, DeploymentSpec, EdgeClient, Request, RetryPolicy,
+    ServeSpec, TokenControl,
 };
 use splitserve::model::ModelConfig;
 use splitserve::planner::{plan, AnalyticAccuracyModel, PlanChoice, PlanInputs};
 use splitserve::runtime::Engine;
 use splitserve::trace::{generate_trace, WorkloadSpec};
 use splitserve::util::cli::Args;
-use splitserve::wire::{SocketTransport, WireListener};
+use splitserve::wire::{SocketTransport, WireListener, WireTransport};
 
 const USAGE: &str = "\
 splitserve — adaptive split computing for LLM inference
@@ -43,9 +43,11 @@ USAGE: splitserve <subcommand> [flags]
              a time-varying channel trace on every device link)
   cloud     --listen 127.0.0.1:7433 --model sim7b --layers 8 --split 4 [--once]
   edge      --connect 127.0.0.1:7433 --model sim7b --layers 8 --split 4 \\
-            --prompt 5,6,7 --max-new 12
+            --prompt 5,6,7 --max-new 12 [--retry N --backoff-ms B]
             (addresses may be unix:/path/to.sock for unix domain sockets;
-             both halves must be built with the same model/split flags)
+             both halves must be built with the same model/split flags;
+             --retry N survives N wire failures per step — reconnect with
+             jittered exponential backoff from B ms, resume, retransmit)
   sweep     (see examples/compression_sweep for the richer version)
 ";
 
@@ -240,7 +242,17 @@ fn main() -> Result<()> {
             let listener = WireListener::bind(listen)?;
             println!("cloud: serving split l={split} back segment on {listen}");
             loop {
-                let mut conn = listener.accept()?;
+                // A failed accept (transient resource exhaustion, a peer
+                // resetting mid-handshake) must not take the server down
+                // with every healthy session's future connections.
+                let mut conn = match listener.accept() {
+                    Ok(conn) => conn,
+                    Err(e) if args.has("once") => return Err(e),
+                    Err(e) => {
+                        eprintln!("cloud: accept failed (serving on): {e:#}");
+                        continue;
+                    }
+                };
                 let served = cloud.serve_connection(&mut conn);
                 if args.has("once") {
                     // one connection, honest exit code (smoke tests check it)
@@ -274,7 +286,19 @@ fn main() -> Result<()> {
             let transport = SocketTransport::connect_retry(connect, Duration::from_secs(10))?;
             let mut client = EdgeClient::new(edge, transport);
             client.controller = spec.edge_controller();
-            let res = client.generate(&Request::new(1, prompt, max_new))?;
+            let retries = args.usize_or("retry", 0) as u32;
+            let req = Request::new(1, prompt, max_new);
+            let res = if retries > 0 {
+                client.retry = RetryPolicy::new(retries, args.usize_or("backoff-ms", 50) as u64);
+                let addr = connect.to_string();
+                client.on_reconnect(Box::new(move || {
+                    let t = SocketTransport::connect_retry(&addr, Duration::from_secs(10))?;
+                    Ok(WireTransport::Socket(t))
+                }));
+                client.generate_resilient(&req)?
+            } else {
+                client.generate(&req)?
+            };
             print_generation(&res);
         }
         Some("sweep") => {

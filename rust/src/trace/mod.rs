@@ -5,11 +5,29 @@
 use crate::coordinator::Request;
 use crate::util::rng::{zipf_cdf, Rng};
 
+/// Shape of the arrival process. `Poisson` is the steady-state default;
+/// the other two are the chaos/stress shapes the robustness suite and
+/// `benches/chaos.rs` drive the serve loop with.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub enum ArrivalPattern {
+    /// Memoryless arrivals at `arrival_rate` (the paper's workload).
+    #[default]
+    Poisson,
+    /// A quiet lead-in, then everyone at once: all requests land
+    /// uniformly inside `window_s` seconds starting at `lead_s`.
+    FlashCrowd { lead_s: f64, window_s: f64 },
+    /// Sessions joining and leaving in waves: Poisson bursts of
+    /// `burst` requests separated by `gap_s` seconds of silence.
+    Churn { burst: usize, gap_s: f64 },
+}
+
 #[derive(Clone, Debug)]
 pub struct WorkloadSpec {
     pub n_requests: usize,
     /// Poisson arrival rate (requests/s) across the whole trace.
     pub arrival_rate: f64,
+    /// Arrival process shape (rate still governs intra-burst spacing).
+    pub arrival: ArrivalPattern,
     pub prompt_len_min: usize,
     pub prompt_len_max: usize,
     pub output_len_min: usize,
@@ -23,6 +41,7 @@ impl Default for WorkloadSpec {
         WorkloadSpec {
             n_requests: 16,
             arrival_rate: 0.5,
+            arrival: ArrivalPattern::Poisson,
             prompt_len_min: 4,
             prompt_len_max: 24,
             output_len_min: 4,
@@ -44,9 +63,21 @@ pub fn generate_trace(spec: &WorkloadSpec) -> Vec<Request> {
     let mut rng = Rng::new(spec.seed ^ 0x77ACE);
     let cdf = zipf_cdf(spec.vocab - 1, 1.1);
     let mut t = 0.0f64;
-    (0..spec.n_requests)
+    let mut out: Vec<Request> = (0..spec.n_requests)
         .map(|i| {
-            t += rng.exponential(spec.arrival_rate);
+            t = match spec.arrival {
+                ArrivalPattern::Poisson => t + rng.exponential(spec.arrival_rate),
+                ArrivalPattern::FlashCrowd { lead_s, window_s } => {
+                    // Uniform inside the crowd window; sorted afterwards
+                    // by the caller's contract (monotone t not needed —
+                    // the trace is re-sorted below).
+                    lead_s.max(0.0) + window_s.max(0.0) * rng.f64()
+                }
+                ArrivalPattern::Churn { burst, gap_s } => {
+                    let wave = i / burst.max(1);
+                    wave as f64 * gap_s.max(0.0) + rng.exponential(spec.arrival_rate)
+                }
+            };
             let plen = rng.range(spec.prompt_len_min as i64, spec.prompt_len_max as i64) as usize;
             let olen = rng.range(spec.output_len_min as i64, spec.output_len_max as i64) as usize;
             let prompt: Vec<u32> = (0..plen).map(|_| rng.zipf(&cdf) as u32 + 1).collect();
@@ -55,7 +86,11 @@ pub fn generate_trace(spec: &WorkloadSpec) -> Vec<Request> {
             r.arrival_s = t;
             r
         })
-        .collect()
+        .collect();
+    // FlashCrowd draws are independent (not accumulated), so restore the
+    // sorted-by-arrival contract explicitly.
+    out.sort_by(|a, b| a.arrival_s.total_cmp(&b.arrival_s));
+    out
 }
 
 #[cfg(test)]
@@ -84,6 +119,39 @@ mod tests {
         let a = generate_trace(&WorkloadSpec::default());
         for w in a.windows(2) {
             assert!(w[0].arrival_s <= w[1].arrival_s);
+        }
+    }
+
+    #[test]
+    fn flash_crowd_lands_inside_the_window() {
+        let spec = WorkloadSpec {
+            n_requests: 32,
+            arrival: ArrivalPattern::FlashCrowd { lead_s: 5.0, window_s: 1.0 },
+            ..Default::default()
+        };
+        let a = generate_trace(&spec);
+        for w in a.windows(2) {
+            assert!(w[0].arrival_s <= w[1].arrival_s, "sorted contract");
+        }
+        assert!(a.iter().all(|r| (5.0..=6.0).contains(&r.arrival_s)));
+        // determinism still holds under the re-sort
+        let b = generate_trace(&spec);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.arrival_s, y.arrival_s);
+        }
+    }
+
+    #[test]
+    fn churn_arrives_in_separated_waves() {
+        let a = generate_trace(&WorkloadSpec {
+            n_requests: 30,
+            arrival: ArrivalPattern::Churn { burst: 10, gap_s: 1000.0 },
+            ..Default::default()
+        });
+        let wave = |t: f64| (t / 1000.0) as usize;
+        for (i, r) in a.iter().enumerate() {
+            assert_eq!(wave(r.arrival_s), i / 10, "request {i} in the wrong wave");
         }
     }
 

@@ -33,16 +33,31 @@
 //!
 //! `CloudReply` (the frame body is prefixed by `[server_s f64]`, the
 //! server's measured compute seconds — transport metadata outside
-//! `wire_bytes()`): `[request_id u64][token u32][entropy f32]
+//! `wire_bytes()`): `[request_id u64][pos u64][token u32][entropy f32]
 //! [n_layers u16][row_len u32]` + per layer `row_len` f32 k-row then
-//! `row_len` f32 v-row.
+//! `row_len` f32 v-row. The `pos` stamp is new in v5: it echoes the
+//! payload position the reply answers, so duplicated or stale replies
+//! are typed rejections at the session instead of silent double-applies.
 //!
 //! `Reconfig` (frame kind 3, new in v4 — the control plane's mid-stream
 //! actuation message): `[request_id u64][epoch u32][budget_cap u32]
 //! [tau f32][qa_bits u8][flags u8]` (22 bytes; flags bit0 = I_kv).
+//!
+//! The v5 session-recovery frames:
+//!
+//! `Resume` (kind 4): `[request_id u64][epoch u32][next_pos u64][tau f32]
+//! [qa_bits u8][flags u8]` (26 bytes; flags bit0 = I_kv).
+//!
+//! `ResumeAck` (kind 5): `[request_id u64][epoch u32][last_pos u64]
+//! [flags u8]` (21 bytes; flags bit0 = last_pos present).
+//!
+//! `Error` (kind 6): `[code u8][request_id u64][len u16][UTF-8 message]`
+//! (11 + len bytes) — the cloud's in-band typed rejection.
 
 use crate::adapt::Reconfig;
-use crate::coordinator::protocol::{CloudReply, CompressedKv, CompressedTensor, SplitPayload};
+use crate::coordinator::protocol::{
+    CloudReply, CompressedKv, CompressedTensor, RejectFrame, Resume, ResumeAck, SplitPayload,
+};
 use crate::coordinator::sampling::SamplingSpec;
 use crate::quant::rans::CodedStream;
 use crate::quant::ts::SparseOutliers;
@@ -65,26 +80,33 @@ const FLAG_TOPK: u8 = 1 << 2;
 /// Reconfig body flag: I_kv (ship the KV cache with each decode step).
 const RC_FLAG_KV: u8 = 1;
 
+/// Resume body flag: I_kv of the re-announced settings.
+const RS_FLAG_KV: u8 = 1;
+/// ResumeAck body flag: the `last_pos` field is meaningful.
+const RA_FLAG_LAST_POS: u8 = 1;
+
 fn malformed(m: impl Into<String>) -> WireError {
     WireError::Malformed(m.into())
 }
 
-/// Bounds-checked little-endian cursor over a frame body.
-struct Reader<'a> {
+/// Bounds-checked little-endian cursor over a frame body. Crate-visible:
+/// the session-snapshot codec (`coordinator::snapshot`) reuses it for the
+/// same strict, typed decoding discipline.
+pub(crate) struct Reader<'a> {
     buf: &'a [u8],
     at: usize,
 }
 
 impl<'a> Reader<'a> {
-    fn new(buf: &'a [u8]) -> Reader<'a> {
+    pub(crate) fn new(buf: &'a [u8]) -> Reader<'a> {
         Reader { buf, at: 0 }
     }
 
-    fn remaining(&self) -> usize {
+    pub(crate) fn remaining(&self) -> usize {
         self.buf.len() - self.at
     }
 
-    fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
+    pub(crate) fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
         if n > self.remaining() {
             return Err(WireError::Truncated { need: self.at + n, have: self.buf.len() });
         }
@@ -93,32 +115,32 @@ impl<'a> Reader<'a> {
         Ok(s)
     }
 
-    fn u8(&mut self) -> Result<u8, WireError> {
+    pub(crate) fn u8(&mut self) -> Result<u8, WireError> {
         Ok(self.take(1)?[0])
     }
 
-    fn u16(&mut self) -> Result<u16, WireError> {
+    pub(crate) fn u16(&mut self) -> Result<u16, WireError> {
         Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
     }
 
-    fn u32(&mut self) -> Result<u32, WireError> {
+    pub(crate) fn u32(&mut self) -> Result<u32, WireError> {
         Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
     }
 
-    fn u64(&mut self) -> Result<u64, WireError> {
+    pub(crate) fn u64(&mut self) -> Result<u64, WireError> {
         Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
     }
 
-    fn f32(&mut self) -> Result<f32, WireError> {
+    pub(crate) fn f32(&mut self) -> Result<f32, WireError> {
         Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
     }
 
-    fn f64(&mut self) -> Result<f64, WireError> {
+    pub(crate) fn f64(&mut self) -> Result<f64, WireError> {
         Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
     }
 
     /// Strict-consumption check: a well-formed body leaves nothing behind.
-    fn done(&self) -> Result<(), WireError> {
+    pub(crate) fn done(&self) -> Result<(), WireError> {
         if self.remaining() != 0 {
             return Err(malformed(format!("{} unread trailing bytes", self.remaining())));
         }
@@ -173,6 +195,12 @@ fn read_tensor(r: &mut Reader) -> Result<CompressedTensor, WireError> {
     let rows = r.u16()? as usize;
     let cols = r.u16()? as usize;
     let chosen_bits = r.u8()? as u32;
+    if chosen_bits > 16 {
+        // Anything wider than the u16 code space is hostile or corrupt;
+        // reject it here instead of letting dequantization shift by an
+        // out-of-range width downstream.
+        return Err(malformed(format!("tensor bit width {chosen_bits} exceeds u16 codes")));
+    }
     let _flags = r.u8()?;
     let mut scales = Vec::with_capacity(rows);
     let mut zeros = Vec::with_capacity(rows);
@@ -318,6 +346,7 @@ fn read_payload(r: &mut Reader) -> Result<SplitPayload, WireError> {
 fn write_reply(out: &mut Vec<u8>, reply: &CloudReply, server_s: f64) {
     out.extend_from_slice(&server_s.to_le_bytes());
     out.extend_from_slice(&reply.request_id.to_le_bytes());
+    out.extend_from_slice(&reply.pos.to_le_bytes());
     out.extend_from_slice(&reply.token.to_le_bytes());
     out.extend_from_slice(&reply.logits_entropy.to_le_bytes());
     assert!(reply.new_kv_rows.len() <= u16::MAX as usize, "reply layer count overflows u16");
@@ -338,6 +367,7 @@ fn write_reply(out: &mut Vec<u8>, reply: &CloudReply, server_s: f64) {
 fn read_reply(r: &mut Reader) -> Result<(CloudReply, f64), WireError> {
     let server_s = r.f64()?;
     let request_id = r.u64()?;
+    let pos = r.u64()?;
     let token = r.u32()?;
     let logits_entropy = r.f32()?;
     let n_layers = r.u16()? as usize;
@@ -361,7 +391,7 @@ fn read_reply(r: &mut Reader) -> Result<(CloudReply, f64), WireError> {
         }
         new_kv_rows.push((k, v));
     }
-    Ok((CloudReply { request_id, token, new_kv_rows, logits_entropy }, server_s))
+    Ok((CloudReply { request_id, pos, token, new_kv_rows, logits_entropy }, server_s))
 }
 
 /// Encode one payload as a complete frame. The body length is asserted
@@ -482,4 +512,148 @@ pub fn decode_reconfig_frame(bytes: &[u8]) -> Result<Reconfig, WireError> {
     let rc = read_reconfig(&mut r)?;
     r.done()?;
     Ok(rc)
+}
+
+fn write_resume(out: &mut Vec<u8>, rs: &Resume) {
+    // Same legal range a Reconfig announcement enforces: fail loudly at
+    // the sender, not in the peer's compressor.
+    assert!(
+        (2..=16).contains(&rs.qa_bits),
+        "resume Q̄a of {} bits is outside the legal 2..=16 range",
+        rs.qa_bits
+    );
+    out.extend_from_slice(&rs.request_id.to_le_bytes());
+    out.extend_from_slice(&rs.epoch.to_le_bytes());
+    out.extend_from_slice(&rs.next_pos.to_le_bytes());
+    out.extend_from_slice(&rs.tau.to_le_bytes());
+    out.push(rs.qa_bits as u8);
+    out.push(if rs.include_kv { RS_FLAG_KV } else { 0 });
+}
+
+fn read_resume(r: &mut Reader) -> Result<Resume, WireError> {
+    let request_id = r.u64()?;
+    let epoch = r.u32()?;
+    let next_pos = r.u64()?;
+    let tau = r.f32()?;
+    let qa_bits = r.u8()? as u32;
+    if !(2..=16).contains(&qa_bits) {
+        return Err(malformed(format!("resume Q̄a of {qa_bits} bits out of range")));
+    }
+    if !tau.is_finite() || tau < 0.0 {
+        return Err(malformed(format!("resume τ = {tau} is not a valid threshold")));
+    }
+    let flags = r.u8()?;
+    if flags & !RS_FLAG_KV != 0 {
+        return Err(malformed(format!("unknown resume flags {flags:#04x}")));
+    }
+    Ok(Resume { request_id, epoch, next_pos, qa_bits, tau, include_kv: flags & RS_FLAG_KV != 0 })
+}
+
+/// Encode one session-resumption announcement as a complete frame.
+pub fn encode_resume_frame(rs: &Resume) -> Vec<u8> {
+    let mut body = Vec::with_capacity(rs.wire_bytes() as usize);
+    write_resume(&mut body, rs);
+    debug_assert_eq!(
+        body.len() as u64,
+        rs.wire_bytes(),
+        "resume body must encode to exactly wire_bytes()"
+    );
+    frame::encode_frame(FrameKind::Resume, &body)
+}
+
+/// Strict decode of a resume frame (kind, CRC, structure, consumption).
+pub fn decode_resume_frame(bytes: &[u8]) -> Result<Resume, WireError> {
+    let (kind, body) = frame::decode_frame(bytes)?;
+    if kind != FrameKind::Resume {
+        return Err(WireError::WrongKind { want: FrameKind::Resume, got: kind });
+    }
+    let mut r = Reader::new(body);
+    let rs = read_resume(&mut r)?;
+    r.done()?;
+    Ok(rs)
+}
+
+fn write_resume_ack(out: &mut Vec<u8>, ack: &ResumeAck) {
+    out.extend_from_slice(&ack.request_id.to_le_bytes());
+    out.extend_from_slice(&ack.epoch.to_le_bytes());
+    out.extend_from_slice(&ack.last_pos.unwrap_or(0).to_le_bytes());
+    out.push(if ack.last_pos.is_some() { RA_FLAG_LAST_POS } else { 0 });
+}
+
+fn read_resume_ack(r: &mut Reader) -> Result<ResumeAck, WireError> {
+    let request_id = r.u64()?;
+    let epoch = r.u32()?;
+    let last_pos = r.u64()?;
+    let flags = r.u8()?;
+    if flags & !RA_FLAG_LAST_POS != 0 {
+        return Err(malformed(format!("unknown resume-ack flags {flags:#04x}")));
+    }
+    let last_pos = (flags & RA_FLAG_LAST_POS != 0).then_some(last_pos);
+    Ok(ResumeAck { request_id, epoch, last_pos })
+}
+
+/// Encode one resume acknowledgement as a complete frame.
+pub fn encode_resume_ack_frame(ack: &ResumeAck) -> Vec<u8> {
+    let mut body = Vec::with_capacity(ack.wire_bytes() as usize);
+    write_resume_ack(&mut body, ack);
+    debug_assert_eq!(
+        body.len() as u64,
+        ack.wire_bytes(),
+        "resume-ack body must encode to exactly wire_bytes()"
+    );
+    frame::encode_frame(FrameKind::ResumeAck, &body)
+}
+
+/// Strict decode of a resume-ack frame (kind, CRC, structure, consumption).
+pub fn decode_resume_ack_frame(bytes: &[u8]) -> Result<ResumeAck, WireError> {
+    let (kind, body) = frame::decode_frame(bytes)?;
+    if kind != FrameKind::ResumeAck {
+        return Err(WireError::WrongKind { want: FrameKind::ResumeAck, got: kind });
+    }
+    let mut r = Reader::new(body);
+    let ack = read_resume_ack(&mut r)?;
+    r.done()?;
+    Ok(ack)
+}
+
+fn write_reject(out: &mut Vec<u8>, e: &RejectFrame) {
+    assert!(e.message.len() <= u16::MAX as usize, "error message overflows the wire's u16");
+    out.push(e.code);
+    out.extend_from_slice(&e.request_id.to_le_bytes());
+    out.extend_from_slice(&(e.message.len() as u16).to_le_bytes());
+    out.extend_from_slice(e.message.as_bytes());
+}
+
+fn read_reject(r: &mut Reader) -> Result<RejectFrame, WireError> {
+    let code = r.u8()?;
+    let request_id = r.u64()?;
+    let len = r.u16()? as usize;
+    let message = std::str::from_utf8(r.take(len)?)
+        .map_err(|_| malformed("error message is not UTF-8"))?
+        .to_string();
+    Ok(RejectFrame { code, request_id, message })
+}
+
+/// Encode one in-band typed rejection as a complete frame.
+pub fn encode_error_frame(e: &RejectFrame) -> Vec<u8> {
+    let mut body = Vec::with_capacity(e.wire_bytes() as usize);
+    write_reject(&mut body, e);
+    debug_assert_eq!(
+        body.len() as u64,
+        e.wire_bytes(),
+        "error body must encode to exactly wire_bytes()"
+    );
+    frame::encode_frame(FrameKind::Error, &body)
+}
+
+/// Strict decode of an error frame (kind, CRC, structure, consumption).
+pub fn decode_error_frame(bytes: &[u8]) -> Result<RejectFrame, WireError> {
+    let (kind, body) = frame::decode_frame(bytes)?;
+    if kind != FrameKind::Error {
+        return Err(WireError::WrongKind { want: FrameKind::Error, got: kind });
+    }
+    let mut r = Reader::new(body);
+    let e = read_reject(&mut r)?;
+    r.done()?;
+    Ok(e)
 }

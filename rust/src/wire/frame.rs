@@ -2,8 +2,10 @@
 //!
 //! ```text
 //! [magic   u32]  0x53504C57 ("SPLW", little-endian "WLPS" on the wire)
-//! [version u8 ]  4 (wire format v4: v3 layouts + the Reconfig control frame)
-//! [kind    u8 ]  1 = SplitPayload, 2 = CloudReply, 3 = Reconfig
+//! [version u8 ]  5 (wire format v5: v4 layouts + position-stamped
+//!                replies and the Resume/ResumeAck/Error recovery frames)
+//! [kind    u8 ]  1 = SplitPayload, 2 = CloudReply, 3 = Reconfig,
+//!                4 = Resume, 5 = ResumeAck, 6 = Error
 //! [len     u32]  body length in bytes
 //! [body       ]  len bytes (see `wire::codec` for the per-kind layout)
 //! [crc32   u32]  IEEE CRC-32 over version, kind, len and body
@@ -32,10 +34,13 @@ pub const MAGIC: u32 = 0x53504C57;
 /// allocates or blocks reading gigabytes it will only throw away at the
 /// CRC check.
 pub const MAX_BODY_BYTES: usize = 256 << 20;
-/// Wire format v4: the v3 data-plane layouts unchanged, plus the
-/// control-plane `Reconfig` frame kind (the adaptive control plane's
-/// mid-stream actuation message; see `wire::codec` and `adapt`).
-pub const VERSION: u8 = 4;
+/// Wire format v5: the v4 layouts with a position stamp on every
+/// `CloudReply` (so a duplicated or stale reply is a typed rejection,
+/// never a silent double-apply), plus the session-recovery frames —
+/// `Resume`/`ResumeAck` for reconnect-and-continue after a disconnect or
+/// cloud restart, and `Error` for in-band typed rejections that keep the
+/// connection serving (see `wire::codec` and the coordinator).
+pub const VERSION: u8 = 5;
 
 /// What a frame's body contains.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -47,6 +52,19 @@ pub enum FrameKind {
     /// A control-plane `adapt::Reconfig`: a session's new transmission
     /// settings, announced mid-stream. Carries no reply of its own.
     Reconfig = 3,
+    /// Edge→cloud session resumption after a reconnect (or cloud
+    /// restart): re-announces the session's id, epoch, next expected
+    /// position and transmission settings so the stateless cloud can
+    /// fence stale traffic and continue the stream bit-identically.
+    Resume = 4,
+    /// Cloud→edge acknowledgement of a `Resume`: echoes the session id
+    /// and epoch and reports the last position this connection will
+    /// fence against.
+    ResumeAck = 5,
+    /// Cloud→edge in-band typed rejection (stale epoch, replayed
+    /// position, unknown session). The connection keeps serving — the
+    /// error frame *is* the typed error, not a torn socket.
+    Error = 6,
 }
 
 impl FrameKind {
@@ -55,6 +73,9 @@ impl FrameKind {
             1 => Ok(FrameKind::Payload),
             2 => Ok(FrameKind::Reply),
             3 => Ok(FrameKind::Reconfig),
+            4 => Ok(FrameKind::Resume),
+            5 => Ok(FrameKind::ResumeAck),
+            6 => Ok(FrameKind::Error),
             other => Err(WireError::BadKind(other)),
         }
     }
@@ -83,6 +104,11 @@ pub enum WireError {
     Crc { want: u32, got: u32 },
     /// Structurally invalid body (bad tag, inconsistent dims, ...).
     Malformed(String),
+    /// The peer stalled past the transport's read/write deadline.
+    Timeout,
+    /// The peer rejected the frame in-band with a typed `Error` frame
+    /// (stale epoch, replayed position, unknown session, ...).
+    Rejected { code: u8, request_id: u64, message: String },
 }
 
 impl fmt::Display for WireError {
@@ -107,6 +133,10 @@ impl fmt::Display for WireError {
                 write!(f, "wire: crc mismatch (header {want:#010x}, computed {got:#010x})")
             }
             WireError::Malformed(m) => write!(f, "wire: malformed body: {m}"),
+            WireError::Timeout => write!(f, "wire: peer stalled past the transport deadline"),
+            WireError::Rejected { code, request_id, message } => {
+                write!(f, "wire: peer rejected request {request_id} (code {code}): {message}")
+            }
         }
     }
 }

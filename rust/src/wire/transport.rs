@@ -63,6 +63,24 @@ impl Loopback {
         let timeout = Duration::from_secs(30);
         (Loopback { tx: atx, rx: arx, timeout }, Loopback { tx: btx, rx: brx, timeout })
     }
+
+    /// Non-blocking receive: the next queued frame, if one is already
+    /// waiting. Used by queue draining and the fault-injection tests.
+    pub fn try_recv(&mut self) -> Option<Vec<u8>> {
+        self.rx.try_recv().ok()
+    }
+
+    /// Discard every frame already queued; returns how many were
+    /// dropped. Resynchronization point after a protocol desync (e.g. a
+    /// duplicated or reordered frame was detected): the stale backlog is
+    /// thrown away instead of being misapplied.
+    pub fn drain(&mut self) -> usize {
+        let mut n = 0;
+        while self.try_recv().is_some() {
+            n += 1;
+        }
+        n
+    }
 }
 
 impl Transport for Loopback {
@@ -106,6 +124,13 @@ impl LinkTransport {
     pub fn duplex(link: LinkSim) -> (LinkTransport, Loopback) {
         let (edge_io, cloud_io) = Loopback::pair();
         (LinkTransport { link, io: edge_io }, cloud_io)
+    }
+
+    /// Discard queued inbound frames (see [`Loopback::drain`]). The
+    /// dropped frames are not charged to the link — they were already
+    /// charged when sent.
+    pub fn drain(&mut self) -> usize {
+        self.io.drain()
     }
 }
 
@@ -169,9 +194,26 @@ pub struct SocketTransport {
     stream: SocketStream,
 }
 
+/// Default socket read/write deadline. A peer that stalls mid-frame past
+/// this surfaces as a typed [`WireError::Timeout`] instead of hanging
+/// `recv` forever (mirrors [`Loopback`]'s 30 s protocol-stall guard).
+pub const SOCKET_IO_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Map a socket IO failure to its typed form: a deadline expiry becomes
+/// [`WireError::Timeout`]; everything else stays an IO error.
+fn map_io(e: std::io::Error) -> anyhow::Error {
+    use std::io::ErrorKind;
+    if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) {
+        WireError::Timeout.into()
+    } else {
+        e.into()
+    }
+}
+
 impl SocketTransport {
     /// Connect once. `unix:`-prefixed addresses use a unix domain socket,
-    /// anything else is `host:port` TCP.
+    /// anything else is `host:port` TCP. Read/write deadlines default to
+    /// [`SOCKET_IO_TIMEOUT`].
     pub fn connect(addr: &str) -> Result<SocketTransport> {
         let stream = if let Some(path) = addr.strip_prefix("unix:") {
             SocketStream::Unix(UnixStream::connect(path)?)
@@ -180,7 +222,25 @@ impl SocketTransport {
             let _ = s.set_nodelay(true);
             SocketStream::Tcp(s)
         };
-        Ok(SocketTransport { stream })
+        let t = SocketTransport { stream };
+        t.set_io_timeout(Some(SOCKET_IO_TIMEOUT))?;
+        Ok(t)
+    }
+
+    /// Adjust both read and write deadlines (`None` = block forever).
+    /// Stalls past the deadline surface as [`WireError::Timeout`].
+    pub fn set_io_timeout(&self, timeout: Option<Duration>) -> Result<()> {
+        match &self.stream {
+            SocketStream::Tcp(s) => {
+                s.set_read_timeout(timeout)?;
+                s.set_write_timeout(timeout)?;
+            }
+            SocketStream::Unix(s) => {
+                s.set_read_timeout(timeout)?;
+                s.set_write_timeout(timeout)?;
+            }
+        }
+        Ok(())
     }
 
     /// Connect with retries. Only errors that mean "the peer is still
@@ -214,8 +274,8 @@ impl SocketTransport {
 impl Transport for SocketTransport {
     fn send(&mut self, frame: &[u8]) -> Result<TransferOutcome> {
         let t0 = Instant::now();
-        self.stream.write_all(frame)?;
-        self.stream.flush()?;
+        self.stream.write_all(frame).map_err(map_io)?;
+        self.stream.flush().map_err(map_io)?;
         Ok(TransferOutcome {
             latency_s: t0.elapsed().as_secs_f64(),
             attempts: 1,
@@ -234,7 +294,7 @@ impl Transport for SocketTransport {
         let mut header = [0u8; HEADER_BYTES];
         let mut got = 0usize;
         while got < header.len() {
-            let n = self.stream.read(&mut header[got..])?;
+            let n = self.stream.read(&mut header[got..]).map_err(map_io)?;
             if n == 0 {
                 if got == 0 {
                     return Ok(None); // clean close at a frame boundary
@@ -247,7 +307,7 @@ impl Transport for SocketTransport {
         let (_kind, body_len) = frame::peek_header(&header)?;
         let mut frame_bytes = vec![0u8; HEADER_BYTES + body_len + 4];
         frame_bytes[..HEADER_BYTES].copy_from_slice(&header);
-        self.stream.read_exact(&mut frame_bytes[HEADER_BYTES..])?;
+        self.stream.read_exact(&mut frame_bytes[HEADER_BYTES..]).map_err(map_io)?;
         let out = TransferOutcome {
             latency_s: t0.elapsed().as_secs_f64(),
             attempts: 1,
@@ -321,6 +381,8 @@ pub enum WireTransport {
     Loopback(Loopback),
     /// Real socket.
     Socket(SocketTransport),
+    /// Any of the above wrapped in seeded fault injection (chaos tests).
+    Faulty(super::fault::FaultyTransport),
 }
 
 impl WireTransport {
@@ -331,6 +393,18 @@ impl WireTransport {
             _ => None,
         }
     }
+
+    /// Discard inbound frames already queued (loopback-backed transports
+    /// only; a socket has no non-blocking queue to drain — returns 0).
+    /// Resynchronization point after a detected protocol desync.
+    pub fn drain(&mut self) -> usize {
+        match self {
+            WireTransport::Sim(t) => t.drain(),
+            WireTransport::Loopback(t) => t.drain(),
+            WireTransport::Socket(_) => 0,
+            WireTransport::Faulty(t) => t.drain(),
+        }
+    }
 }
 
 impl Transport for WireTransport {
@@ -339,6 +413,7 @@ impl Transport for WireTransport {
             WireTransport::Sim(t) => t.send(frame),
             WireTransport::Loopback(t) => t.send(frame),
             WireTransport::Socket(t) => t.send(frame),
+            WireTransport::Faulty(t) => t.send(frame),
         }
     }
 
@@ -347,6 +422,7 @@ impl Transport for WireTransport {
             WireTransport::Sim(t) => t.recv(),
             WireTransport::Loopback(t) => t.recv(),
             WireTransport::Socket(t) => t.recv(),
+            WireTransport::Faulty(t) => t.recv(),
         }
     }
 
@@ -355,6 +431,7 @@ impl Transport for WireTransport {
             WireTransport::Sim(t) => t.recv_eof(),
             WireTransport::Loopback(t) => t.recv_eof(),
             WireTransport::Socket(t) => t.recv_eof(),
+            WireTransport::Faulty(t) => t.recv_eof(),
         }
     }
 }
@@ -391,11 +468,54 @@ impl EdgePort {
 
     /// Receive and strictly decode the next reply frame. Returns the
     /// reply, the server's compute seconds (from the frame's timing
-    /// prefix), and the downlink outcome.
+    /// prefix), and the downlink outcome. An in-band `Error` frame from
+    /// the cloud surfaces as a typed [`WireError::Rejected`].
     pub fn recv_reply(&mut self) -> Result<(CloudReply, f64, TransferOutcome)> {
         let (frame_bytes, down) = self.transport.recv()?;
+        if let Some(rej) = in_band_rejection(&frame_bytes) {
+            return Err(rej.into());
+        }
         let (reply, server_s) = codec::decode_reply_frame(&frame_bytes)?;
         Ok((reply, server_s, down))
+    }
+
+    /// Encode, frame and transmit one session-resumption announcement.
+    pub fn send_resume(
+        &mut self,
+        rs: &crate::coordinator::protocol::Resume,
+    ) -> Result<TransferOutcome> {
+        let frame_bytes = codec::encode_resume_frame(rs);
+        self.transport.send(&frame_bytes)
+    }
+
+    /// Receive and strictly decode the cloud's resume acknowledgement.
+    /// An in-band `Error` frame surfaces as [`WireError::Rejected`].
+    pub fn recv_resume_ack(
+        &mut self,
+    ) -> Result<(crate::coordinator::protocol::ResumeAck, TransferOutcome)> {
+        let (frame_bytes, down) = self.transport.recv()?;
+        if let Some(rej) = in_band_rejection(&frame_bytes) {
+            return Err(rej.into());
+        }
+        let ack = codec::decode_resume_ack_frame(&frame_bytes)?;
+        Ok((ack, down))
+    }
+}
+
+/// Decode an in-band `Error` frame into its typed rejection, if the
+/// bytes are one. Any other frame (or garbage) returns `None` and is
+/// left for the caller's strict decoder to classify.
+fn in_band_rejection(frame_bytes: &[u8]) -> Option<WireError> {
+    match frame::decode_frame(frame_bytes) {
+        Ok((frame::FrameKind::Error, _)) => {
+            let e = codec::decode_error_frame(frame_bytes).ok()?;
+            Some(WireError::Rejected {
+                code: e.code,
+                request_id: e.request_id,
+                message: e.message,
+            })
+        }
+        _ => None,
     }
 }
 
@@ -426,6 +546,24 @@ impl CloudPort {
     /// Encode, frame and transmit one reply (+ server compute seconds).
     pub fn send_reply(&mut self, reply: &CloudReply, server_s: f64) -> Result<TransferOutcome> {
         let frame_bytes = codec::encode_reply_frame(reply, server_s);
+        self.transport.send(&frame_bytes)
+    }
+
+    /// Encode, frame and transmit one resume acknowledgement.
+    pub fn send_resume_ack(
+        &mut self,
+        ack: &crate::coordinator::protocol::ResumeAck,
+    ) -> Result<TransferOutcome> {
+        let frame_bytes = codec::encode_resume_ack_frame(ack);
+        self.transport.send(&frame_bytes)
+    }
+
+    /// Encode, frame and transmit one in-band typed rejection.
+    pub fn send_error(
+        &mut self,
+        e: &crate::coordinator::protocol::RejectFrame,
+    ) -> Result<TransferOutcome> {
+        let frame_bytes = codec::encode_error_frame(e);
         self.transport.send(&frame_bytes)
     }
 }

@@ -210,7 +210,7 @@ fn cloud_connection_applies_reconfig_and_enforces_announced_precision() {
     edge_half.send(&splitserve::wire::encode_payload_frame(&payload)).unwrap();
     let (frame, _) = edge_half.recv().unwrap();
     let (reply, _) = decode_reply_frame(&frame).unwrap();
-    edge.absorb_reply(&mut state, payload.pos, &reply.new_kv_rows);
+    edge.absorb_reply(&mut state, payload.pos, &reply.new_kv_rows).unwrap();
 
     // announce a narrower plan, then honor it
     let rc = Reconfig {
@@ -247,7 +247,7 @@ fn cloud_connection_applies_reconfig_and_enforces_announced_precision() {
     edge_half.send(&splitserve::wire::encode_payload_frame(&payload)).unwrap();
     let (frame, _) = edge_half.recv().unwrap();
     let (reply, _) = decode_reply_frame(&frame).unwrap();
-    edge.absorb_reply(&mut state, payload.pos, &reply.new_kv_rows);
+    edge.absorb_reply(&mut state, payload.pos, &reply.new_kv_rows).unwrap();
     let rc = Reconfig { request_id: 2, epoch: 1, qa_bits: 2, ..rc };
     edge_half.send(&encode_reconfig_frame(&rc)).unwrap();
     // ...but transmit at the device's configured width (Q̄a = 4)
@@ -255,9 +255,19 @@ fn cloud_connection_applies_reconfig_and_enforces_announced_precision() {
     let (payload, _) = edge.decode_step(&mut state, token, true, None, None).unwrap();
     assert!(payload.hidden.chosen_bits > rc.qa_bits, "test needs a genuine violation");
     edge_half.send(&splitserve::wire::encode_payload_frame(&payload)).unwrap();
-    let err = server.join().unwrap().unwrap_err();
+    // The violation condemns only its own payload: the cloud answers with
+    // an in-band Error frame and KEEPS the connection — other sessions
+    // multiplexed on it must not die for this one's protocol breach.
+    let (frame, _) = edge_half.recv().unwrap();
+    let rj = splitserve::wire::decode_error_frame(&frame).unwrap();
+    assert_eq!(rj.code, splitserve::coordinator::reject::FAILED);
+    assert_eq!(rj.request_id, 2);
     assert!(
-        err.contains("exceeds the announced"),
-        "violation must be a typed protocol error, got: {err}"
+        rj.message.contains("exceeds the announced"),
+        "violation must be a typed protocol error, got: {}",
+        rj.message
     );
+    drop(edge_half); // clean EOF
+    let served = server.join().unwrap().unwrap();
+    assert_eq!(served, 1, "only the compliant prefill counts as served");
 }

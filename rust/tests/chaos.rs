@@ -1,0 +1,536 @@
+//! Chaos harness: seeded fault injection against the full serving stack.
+//!
+//! The invariant under test, everywhere: a faulted run either completes
+//! with EXACTLY the fault-free token stream or fails with a typed error
+//! — never silent wrong tokens. On top of that, the recovery paths
+//! (retry + `Resume` handshake, snapshot/restore) must deliver
+//! bit-identical streams without recomputing already-delivered tokens.
+//!
+//! Layout:
+//!   * pinned single-class tests — one deterministic trace per fault
+//!     class (corrupt, truncate, duplicate, reorder, stall, edge
+//!     disconnect + reconnect, cloud restart mid-stream),
+//!   * a seeded property sweep over mixed [`FaultPlan::from_seed`] plans
+//!     (`CHAOS_SEEDS=quick|<n>` overrides the count; `scripts/chaos.sh`
+//!     runs the full sweep),
+//!   * snapshot → bytes → resume bit-identity, including a mid-stream
+//!     reconfiguration so transmission settings provably survive,
+//!   * serve-loop (stacked, multi-session) chaos with and without the
+//!     adaptive control plane.
+
+use std::collections::HashSet;
+use std::rc::Rc;
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use splitserve::adapt::{AdaptPolicy, Reconfig};
+use splitserve::channel::TransferOutcome;
+use splitserve::coordinator::{
+    build_serve_loop, CloudServer, DeploymentSpec, EdgeClient, EdgeDevice, GenerationResult,
+    Request, RetryPolicy, ServeLoop, ServeSpec, Session, SessionAction, SessionSnapshot,
+    TokenControl,
+};
+use splitserve::model::ModelConfig;
+use splitserve::runtime::Engine;
+use splitserve::wire::{FaultPlan, FaultyTransport, Loopback, WireError, WireTransport};
+
+fn small_cfg(n_layers: usize) -> ModelConfig {
+    let mut cfg = ModelConfig::sim7b();
+    cfg.n_layers = n_layers;
+    cfg
+}
+
+fn spec() -> DeploymentSpec {
+    DeploymentSpec::defaults(small_cfg(4), 2)
+}
+
+fn engine() -> Rc<Engine> {
+    Rc::new(Engine::load("artifacts", &ModelConfig::sim7b()).expect("run `make artifacts`"))
+}
+
+/// Background cloud: serves every connection handed over the channel.
+/// `restart_per_conn = false` keeps ONE `CloudServer` across connections
+/// (a cloud that stayed up while the edge reconnected);
+/// `restart_per_conn = true` builds a fresh server per connection — a
+/// cloud process that crashed and came back with nothing but its
+/// stateless weights. Returns total payloads served across connections.
+fn spawn_cloud(
+    spec: DeploymentSpec,
+    restart_per_conn: bool,
+) -> (mpsc::Sender<Loopback>, JoinHandle<u64>) {
+    let (tx, rx) = mpsc::channel::<Loopback>();
+    let handle = std::thread::spawn(move || {
+        let mut served = 0u64;
+        let persistent = (!restart_per_conn).then(|| spec.build_cloud_server(engine()).unwrap());
+        while let Ok(mut half) = rx.recv() {
+            let fresh;
+            let cloud = match persistent.as_ref() {
+                Some(c) => c,
+                None => {
+                    fresh = spec.build_cloud_server(engine()).unwrap();
+                    &fresh
+                }
+            };
+            // A chaotic connection dying on a mangled frame is expected:
+            // the server drops it and takes the next one; the edge
+            // recovers by reconnecting.
+            if let Ok(n) = cloud.serve_connection(&mut half) {
+                served += n;
+            }
+        }
+        served
+    });
+    (tx, handle)
+}
+
+/// Open a fresh loopback connection to the background cloud. The edge
+/// half gets a short recv deadline (a reorder-held frame must time out
+/// in test time, not the 30 s default); the cloud half gets a generous
+/// one so the server outlives edge-side backoff sleeps.
+fn dial(tx: &mpsc::Sender<Loopback>, edge_timeout_ms: u64) -> Loopback {
+    let (mut edge_half, mut cloud_half) = Loopback::pair();
+    edge_half.timeout = Duration::from_millis(edge_timeout_ms);
+    cloud_half.timeout = Duration::from_millis(5000);
+    tx.send(cloud_half).expect("cloud harness is gone");
+    edge_half
+}
+
+/// What the client does when an exchange cannot be recovered in place.
+#[derive(Clone, Copy)]
+enum Reconnect {
+    /// No closure installed: recovery re-runs the `Resume` handshake on
+    /// the SAME (still chaotic) transport.
+    SameTransport,
+    /// Re-dial a fault-free connection.
+    Clean,
+    /// Re-dial through a fresh fault injector with a derived seed — the
+    /// storm does not stop just because the edge reconnected.
+    Chaotic,
+}
+
+/// Run one request through an [`EdgeClient`] whose transport is wrapped
+/// in a seeded [`FaultyTransport`]. Returns the generation outcome and
+/// the number of payloads the cloud actually served (across every
+/// connection the run opened).
+fn chaos_generate(
+    plan: FaultPlan,
+    attempts: u32,
+    reconnect: Reconnect,
+    restart_per_conn: bool,
+    edge_timeout_ms: u64,
+    req: &Request,
+) -> (anyhow::Result<GenerationResult>, u64) {
+    let spec = spec();
+    let (tx, cloud) = spawn_cloud(spec.clone(), restart_per_conn);
+    let edge = spec.build_edge_device(engine()).unwrap();
+    let inner = WireTransport::Loopback(dial(&tx, edge_timeout_ms));
+    let mut client =
+        EdgeClient::over(edge, WireTransport::Faulty(FaultyTransport::new(inner, plan)));
+    client.retry = RetryPolicy { attempts, base_ms: 1, max_ms: 4, seed: plan.seed };
+    match reconnect {
+        Reconnect::SameTransport => {}
+        Reconnect::Clean => {
+            let tx = tx.clone();
+            client.on_reconnect(Box::new(move || {
+                Ok(WireTransport::Loopback(dial(&tx, edge_timeout_ms)))
+            }));
+        }
+        Reconnect::Chaotic => {
+            let tx = tx.clone();
+            let seed = plan.seed;
+            let mut redials = 0u64;
+            client.on_reconnect(Box::new(move || {
+                redials += 1;
+                let inner = WireTransport::Loopback(dial(&tx, edge_timeout_ms));
+                let derived = FaultPlan::from_seed(seed ^ (0xD15C0 + redials));
+                Ok(WireTransport::Faulty(FaultyTransport::new(inner, derived)))
+            }));
+        }
+    }
+    let result = client.generate_resilient(req);
+    drop(client);
+    drop(tx);
+    let served = cloud.join().unwrap();
+    (result, served)
+}
+
+/// Fault-free reference stream for `req`, with the invariant that a
+/// clean run serves every position exactly once (the `+ 1` tolerance is
+/// the early-EOS shape, where the final exchange carries no new token).
+fn baseline_tokens(req: &Request) -> Vec<u32> {
+    let (result, served) =
+        chaos_generate(FaultPlan::clean(1), 0, Reconnect::SameTransport, false, 2000, req);
+    let tokens = result.expect("fault-free run must succeed").tokens;
+    assert!(
+        served == tokens.len() as u64 || served == tokens.len() as u64 + 1,
+        "clean run served {served} payloads for {} tokens",
+        tokens.len()
+    );
+    tokens
+}
+
+// ---------------------------------------------------------------------------
+// Pinned per-class traces
+// ---------------------------------------------------------------------------
+
+#[test]
+fn pinned_corrupt_and_truncate_storms_fail_typed() {
+    // Every frame mangled, recovery confined to the same broken wire:
+    // the run must exhaust its retry budget and surface a typed error —
+    // the strict decoder turns every mangled frame into a rejection, so
+    // success here would mean a silently-misdecoded frame slipped by.
+    let req = Request::new(7101, vec![10, 20, 30], 4);
+    for plan in [FaultPlan::corrupt(3, 1.0), FaultPlan::truncate(4, 1.0)] {
+        let (result, served) =
+            chaos_generate(plan, 2, Reconnect::SameTransport, false, 2000, &req);
+        assert!(result.is_err(), "{plan:?}: every frame mangled, yet the run claimed success");
+        assert_eq!(served, 0, "{plan:?}: no payload can decode, none may be served");
+    }
+}
+
+#[test]
+fn pinned_corrupt_storm_with_clean_reconnect_resumes_exactly() {
+    let req = Request::new(7102, vec![10, 20, 30], 5);
+    let want = baseline_tokens(&req);
+    for plan in [FaultPlan::corrupt(5, 1.0), FaultPlan::truncate(6, 1.0)] {
+        let (result, served) = chaos_generate(plan, 1, Reconnect::Clean, false, 2000, &req);
+        let res = result.expect("one clean reconnect must rescue the stream");
+        assert_eq!(res.tokens, want, "{plan:?}: resumed stream diverged");
+        assert!(
+            served >= want.len() as u64 && served <= want.len() as u64 + 1,
+            "{plan:?}: served {served} for {} tokens",
+            want.len()
+        );
+    }
+}
+
+#[test]
+fn pinned_stall_surfaces_as_typed_timeout() {
+    let req = Request::new(7103, vec![10, 20, 30], 3);
+    let (result, _) =
+        chaos_generate(FaultPlan::stall(7, 1.0), 0, Reconnect::SameTransport, false, 2000, &req);
+    let err = result.expect_err("every recv stalls and the retry budget is zero");
+    assert!(
+        err.chain().any(|c| matches!(c.downcast_ref::<WireError>(), Some(WireError::Timeout))),
+        "expected WireError::Timeout in the chain: {err:#}"
+    );
+}
+
+#[test]
+fn pinned_duplicate_storm_is_bit_identical_without_recompute() {
+    // Every frame sent twice. The cloud's replay fence answers the echo
+    // from cache (not recompute) and the client skips the stale
+    // straggler replies — zero retries needed, exact stream out.
+    let req = Request::new(7104, vec![10, 20, 30], 5);
+    let want = baseline_tokens(&req);
+    let (result, served) = chaos_generate(
+        FaultPlan::duplicate(8, 1.0),
+        0,
+        Reconnect::SameTransport,
+        false,
+        2000,
+        &req,
+    );
+    let res = result.expect("duplicate echoes are skipped stragglers, not failures");
+    assert_eq!(res.tokens, want);
+    assert!(
+        served <= want.len() as u64 + 1,
+        "duplicates were recomputed instead of replayed: served {served} for {} tokens",
+        want.len()
+    );
+}
+
+#[test]
+fn pinned_reorder_storm_recovers_in_place_bit_identically() {
+    // Every send is held back behind the next one. The held frame only
+    // moves when something else is sent, so the client's recv times out,
+    // and the same-transport `Resume` handshake both flushes the held
+    // frame and fences the stale position it then answers to.
+    let req = Request::new(7105, vec![10, 20, 30], 5);
+    let want = baseline_tokens(&req);
+    let (result, _) =
+        chaos_generate(FaultPlan::reorder(9, 1.0), 4, Reconnect::SameTransport, false, 300, &req);
+    let res = result.expect("same-transport Resume must flush reorder-held frames");
+    assert_eq!(res.tokens, want, "reordered stream diverged");
+}
+
+#[test]
+fn pinned_edge_disconnect_reconnect_resumes_with_zero_redelivery() {
+    let req = Request::new(7106, vec![10, 20, 30], 6);
+    let want = baseline_tokens(&req);
+    // The transport dies mid-stream; the edge reconnects cleanly to the
+    // SAME (still running) cloud and resumes.
+    let (result, served) =
+        chaos_generate(FaultPlan::disconnect(10, 5), 1, Reconnect::Clean, false, 2000, &req);
+    let res = result.expect("reconnect + Resume must finish the stream");
+    assert_eq!(res.tokens, want, "resumed stream must be bit-identical");
+    // Zero re-delivery: at most the single in-flight position is served
+    // again (its reply died with the old connection) — never the
+    // already-delivered prefix.
+    assert!(
+        served >= want.len() as u64 && served <= want.len() as u64 + 1,
+        "resume recomputed delivered positions: served {served} for {} tokens",
+        want.len()
+    );
+}
+
+#[test]
+fn pinned_cloud_restart_mid_stream_resumes_bit_identically() {
+    let req = Request::new(7107, vec![10, 20, 30], 6);
+    let want = baseline_tokens(&req);
+    // Same trace, but every reconnect lands on a FRESHLY BUILT cloud —
+    // the server restarted and lost its fences and epochs. Statelessness
+    // plus the Resume handshake must make that invisible to the stream.
+    let (result, served) =
+        chaos_generate(FaultPlan::disconnect(11, 7), 1, Reconnect::Clean, true, 2000, &req);
+    let res = result.expect("a restarted cloud must re-admit the stream via Resume");
+    assert_eq!(res.tokens, want, "stream across a cloud restart must be bit-identical");
+    assert!(
+        served >= want.len() as u64 && served <= want.len() as u64 + 1,
+        "cloud restart triggered recompute: served {served} for {} tokens",
+        want.len()
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Seeded property sweep
+// ---------------------------------------------------------------------------
+
+fn sweep_seeds() -> u64 {
+    match std::env::var("CHAOS_SEEDS").ok().as_deref() {
+        Some("quick") => 24,
+        Some(n) => n.parse().unwrap_or(200),
+        None => 200,
+    }
+}
+
+#[test]
+fn chaos_sweep_typed_error_or_exact_stream() {
+    let req = Request::new(7500, vec![10, 20, 30], 4);
+    let want = baseline_tokens(&req);
+    let n = sweep_seeds();
+    let mut ok = 0u64;
+    for seed in 0..n {
+        let plan = FaultPlan::from_seed(seed);
+        let (result, _) = chaos_generate(plan, 4, Reconnect::Chaotic, false, 250, &req);
+        // A typed failure is an acceptable outcome under arbitrary fault
+        // storms; a wrong stream never is.
+        if let Ok(res) = result {
+            assert_eq!(
+                res.tokens, want,
+                "seed {seed}: chaotic run completed with a DIFFERENT stream ({plan:?})"
+            );
+            ok += 1;
+        }
+    }
+    assert!(ok * 4 >= n, "recovery too weak: only {ok}/{n} chaotic runs completed");
+}
+
+// ---------------------------------------------------------------------------
+// Snapshot → bytes → resume
+// ---------------------------------------------------------------------------
+
+/// Drive a session against an in-process cloud (no wire), applying a
+/// settings reconfiguration after `reconfig_at` delivered replies and
+/// optionally snapshotting after `snapshot_at` — the checkpoint lands
+/// between an absorbed reply and the next edge step, the only point a
+/// consistent snapshot exists.
+fn drive_local(
+    edge: &EdgeDevice,
+    cloud: &CloudServer,
+    req: &Request,
+    reconfig_at: u64,
+    snapshot_at: Option<u64>,
+) -> (Session, Option<SessionSnapshot>) {
+    let zero = TransferOutcome { latency_s: 0.0, attempts: 1, outage: false, payload_bytes: 0 };
+    let mut session = Session::for_edge(req.clone(), edge, None);
+    let mut steps = 0u64;
+    let mut snap = None;
+    while !session.is_terminal() {
+        match session.poll(edge).unwrap() {
+            SessionAction::Transmit(p) => {
+                let (reply, s) = cloud.handle(&p).unwrap();
+                session.on_reply(edge, &reply, s, zero, zero).unwrap();
+                steps += 1;
+                if steps == reconfig_at {
+                    session.apply_reconfig(&Reconfig {
+                        request_id: req.id,
+                        epoch: 1,
+                        qa_bits: 3,
+                        tau: 10.0,
+                        include_kv: true,
+                        budget_cap: Reconfig::NO_BUDGET_CAP,
+                    });
+                }
+                if snapshot_at == Some(steps) {
+                    snap = Some(session.snapshot(edge).unwrap());
+                    break;
+                }
+            }
+            SessionAction::Finished => break,
+            SessionAction::Yield => unreachable!("no in-flight IO in the blocking driver"),
+        }
+    }
+    (session, snap)
+}
+
+#[test]
+fn snapshot_bytes_resume_is_bit_identical_with_reconfig() {
+    let spec = spec();
+    let eng = engine();
+    let edge = spec.build_edge_device(eng.clone()).unwrap();
+    let local = spec.build_cloud_server(eng).unwrap();
+
+    // Pick a prompt whose reference stream (with the SAME mid-stream
+    // reconfiguration) runs to its full budget, so the snapshot point
+    // after the third delivered token exists.
+    let mut chosen = None;
+    for k in 0..8u64 {
+        let req = Request::new(7600 + k, vec![10 + k as u32, 20, 30 + (2 * k) as u32], 6);
+        let (sess, _) = drive_local(&edge, &local, &req, 2, None);
+        let want = sess.into_result().tokens;
+        if want.len() == 6 {
+            chosen = Some((req, want));
+            break;
+        }
+    }
+    let (req, want) = chosen.expect("some prompt must run to its full budget");
+
+    // Interrupted twin: reconfigure at the same point, checkpoint after
+    // three delivered tokens, cross the byte codec, resume against a
+    // freshly built cloud (the restart case — no fences, no epochs).
+    let (sess, snap) = drive_local(&edge, &local, &req, 2, Some(3));
+    assert_eq!(sess.tokens(), &want[..3], "interrupted prefix diverged before the snapshot");
+    let snap = snap.expect("snapshot point reached");
+    let snap = SessionSnapshot::from_bytes(&snap.to_bytes()).expect("snapshot byte roundtrip");
+
+    let (tx, cloud) = spawn_cloud(spec.clone(), true);
+    let edge2 = spec.build_edge_device(engine()).unwrap();
+    let mut client = EdgeClient::over(edge2, WireTransport::Loopback(dial(&tx, 2000)));
+    let res = client.resume(snap).expect("resume from snapshot");
+    assert_eq!(res.tokens, want, "resumed stream must equal the uninterrupted one");
+    drop(client);
+    drop(tx);
+    let served = cloud.join().unwrap();
+    assert_eq!(
+        served,
+        (want.len() - 3) as u64,
+        "resume must serve only the remaining positions, never the delivered prefix"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Serve-loop (stacked) chaos
+// ---------------------------------------------------------------------------
+
+fn serve_spec(adapt: bool) -> ServeSpec {
+    let spec = ServeSpec::defaults(small_cfg(4), 2, 1);
+    if adapt {
+        spec.with_adapt(AdaptPolicy {
+            ewma_alpha: 0.25,
+            warmup_samples: 4,
+            cooldown_steps: 1,
+            ..Default::default()
+        })
+    } else {
+        spec
+    }
+}
+
+fn burst_requests(n: u64, base_id: u64) -> Vec<Request> {
+    (0..n).map(|i| Request::new(base_id + i, vec![5 + i as u32, 17, 29], 5)).collect()
+}
+
+/// Wrap every endpoint's edge-side transport in a fault injector and
+/// shorten the cloud-side recv deadline so an eaten frame costs test
+/// time, not the 30 s default.
+fn inject_chaos(serve: &mut ServeLoop, plan: FaultPlan) {
+    for ep in &mut serve.edges {
+        let placeholder = WireTransport::Loopback(Loopback::pair().0);
+        let inner = std::mem::replace(&mut ep.port.transport, placeholder);
+        ep.port.transport = WireTransport::Faulty(FaultyTransport::new(inner, plan));
+        if let WireTransport::Loopback(l) = &mut ep.cloud_port.transport {
+            l.timeout = Duration::from_millis(250);
+        }
+    }
+}
+
+fn serve_plan() -> FaultPlan {
+    FaultPlan {
+        seed: 0x5EED,
+        corrupt_rate: 0.03,
+        truncate_rate: 0.03,
+        duplicate_rate: 0.03,
+        reorder_rate: 0.0,
+        stall_rate: 0.03,
+        disconnect_after: None,
+    }
+}
+
+#[test]
+fn serve_loop_chaos_fails_typed_and_survivors_match_clean_streams() {
+    let spec = serve_spec(false);
+    let reqs = burst_requests(6, 7700);
+
+    let mut clean = build_serve_loop(engine(), &spec).unwrap();
+    let clean_report = clean.run(reqs.clone(), |_, _| TokenControl::Continue).unwrap();
+    assert_eq!(clean_report.failed, 0, "clean serve loop must not fail: {:?}", clean_report.errors);
+    let want: std::collections::HashMap<u64, Vec<u32>> =
+        clean_report.results.iter().map(|r| (r.request_id, r.tokens.clone())).collect();
+
+    let run_chaos = || {
+        let mut serve = build_serve_loop(engine(), &spec).unwrap();
+        inject_chaos(&mut serve, serve_plan());
+        serve.run(reqs.clone(), |_, _| TokenControl::Continue).unwrap()
+    };
+    let a = run_chaos();
+    // Every request is accounted for: finished with the exact clean
+    // stream, or torn down with a typed per-session error.
+    assert_eq!(a.results.len(), reqs.len());
+    assert_eq!(a.failed as usize, a.errors.len());
+    let failed_ids: HashSet<u64> = a.errors.iter().map(|(id, _)| *id).collect();
+    for r in &a.results {
+        if !failed_ids.contains(&r.request_id) {
+            assert_eq!(
+                r.tokens, want[&r.request_id],
+                "request {} survived chaos with a different stream",
+                r.request_id
+            );
+        }
+    }
+    // Seeded chaos is replayable: the identical run tears down the same
+    // sessions and delivers the same tokens.
+    let b = run_chaos();
+    assert_eq!(a.failed, b.failed);
+    assert_eq!(a.total_tokens, b.total_tokens);
+    let a_err_ids: Vec<u64> = a.errors.iter().map(|(id, _)| *id).collect();
+    let b_err_ids: Vec<u64> = b.errors.iter().map(|(id, _)| *id).collect();
+    assert_eq!(a_err_ids, b_err_ids);
+    for (x, y) in a.results.iter().zip(b.results.iter()) {
+        assert_eq!(x.request_id, y.request_id);
+        assert_eq!(x.tokens, y.tokens);
+    }
+}
+
+#[test]
+fn serve_loop_chaos_with_adaptation_stays_live_and_typed() {
+    let spec = serve_spec(true);
+    let reqs = burst_requests(5, 7800);
+    let mut serve = build_serve_loop(engine(), &spec).unwrap();
+    inject_chaos(&mut serve, serve_plan());
+    let report = serve.run(reqs.clone(), |_, _| TokenControl::Continue).unwrap();
+    // Liveness + typed accounting under faults with the control plane
+    // on: every request ends (completed or failed-with-cause), token
+    // counters agree, and no session vanishes silently.
+    assert_eq!(report.results.len(), reqs.len());
+    assert_eq!(report.failed as usize, report.errors.len());
+    let delivered: u64 = report.results.iter().map(|r| r.tokens.len() as u64).sum();
+    assert_eq!(delivered, report.total_tokens);
+    let failed_ids: HashSet<u64> = report.errors.iter().map(|(id, _)| *id).collect();
+    for r in &report.results {
+        if !failed_ids.contains(&r.request_id) {
+            assert!(!r.tokens.is_empty(), "request {} completed with no tokens", r.request_id);
+        }
+    }
+}

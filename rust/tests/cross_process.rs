@@ -14,10 +14,10 @@ use std::process::{Command, Stdio};
 use std::rc::Rc;
 use std::time::Duration;
 
-use splitserve::coordinator::{build_pipeline, DeploymentSpec, Request};
+use splitserve::coordinator::{build_pipeline, DeploymentSpec, EdgeClient, Request, RetryPolicy};
 use splitserve::model::ModelConfig;
 use splitserve::runtime::Engine;
-use splitserve::wire::{SocketTransport, WireListener};
+use splitserve::wire::{FaultPlan, FaultyTransport, SocketTransport, WireListener, WireTransport};
 
 fn small_cfg(n_layers: usize) -> ModelConfig {
     let mut cfg = ModelConfig::sim7b();
@@ -70,6 +70,78 @@ fn socket_edge_client_matches_single_process_pipeline() {
     // one payload frame per reply, and every reply committed one token
     assert_eq!(served, got.tokens.len() as u64, "one served frame per committed token");
     assert!(got.total_uplink_bytes() > 0 && got.total_downlink_bytes() > 0);
+}
+
+/// ACCEPTANCE: a cloud RESTART mid-stream over a real socket. The edge's
+/// connection dies mid-frame, it re-dials, and a FRESHLY BUILT server
+/// (restarted process: no replay fences, no resume epochs) continues the
+/// stream bit-identically via the `Resume` handshake — without serving
+/// the already-delivered prefix again.
+#[test]
+fn socket_cloud_restart_mid_stream_resumes_exactly() {
+    let req = Request::new(2, vec![3, 141, 59, 26], 8);
+
+    // Oracle: the blocking single-process pipeline.
+    let eng = Rc::new(Engine::load("artifacts", &ModelConfig::sim7b()).expect("engine"));
+    let spec = DeploymentSpec::defaults(small_cfg(4), 2);
+    let mut pipe = build_pipeline(eng, &spec).unwrap();
+    let want = pipe.generate(&req).unwrap();
+    assert!(!want.tokens.is_empty());
+
+    let (path, addr) = sock_addr("restart-smoke");
+    let listener = WireListener::bind(&addr).unwrap();
+    let server = std::thread::spawn(move || {
+        let build = || {
+            let eng = Rc::new(Engine::load("artifacts", &ModelConfig::sim7b()).expect("engine"));
+            let spec = DeploymentSpec::defaults(small_cfg(4), 2);
+            spec.build_cloud_server(eng).unwrap()
+        };
+        // First incarnation: torn down by the edge's mid-frame
+        // disconnect (the partial frame is a typed decode error).
+        let mut conn = listener.accept().unwrap();
+        let _ = build().serve_connection(&mut conn);
+        drop(conn);
+        // Restarted incarnation: a brand-new server with no state.
+        let mut conn = listener.accept().unwrap();
+        build().serve_connection(&mut conn).unwrap_or(0)
+    });
+
+    let eng = Rc::new(Engine::load("artifacts", &ModelConfig::sim7b()).expect("engine"));
+    let spec = DeploymentSpec::defaults(small_cfg(4), 2);
+    let edge = spec.build_edge_device(eng).unwrap();
+    let sock = SocketTransport::connect_retry(&addr, Duration::from_secs(10)).unwrap();
+    let mut client = EdgeClient::over(
+        edge,
+        WireTransport::Faulty(FaultyTransport::new(
+            WireTransport::Socket(sock),
+            FaultPlan::disconnect(21, 5),
+        )),
+    );
+    client.retry = RetryPolicy { attempts: 2, base_ms: 1, max_ms: 4, seed: 21 };
+    let addr2 = addr.clone();
+    client.on_reconnect(Box::new(move || {
+        let sock = SocketTransport::connect_retry(&addr2, Duration::from_secs(10))?;
+        Ok(WireTransport::Socket(sock))
+    }));
+    let got = client.generate_resilient(&req).unwrap();
+    drop(client);
+    // Safety net: if the stream ended before the scheduled disconnect,
+    // hand the server its second connection so the join cannot hang.
+    let _ = SocketTransport::connect_retry(&addr, Duration::from_millis(200));
+    let second = server.join().expect("cloud thread");
+    let _ = std::fs::remove_file(&path);
+
+    assert_eq!(got.tokens, want.tokens, "stream across a cloud restart must be bit-identical");
+    if got.tokens.len() == req.max_new_tokens {
+        // The restarted server picked up mid-stream: it served strictly
+        // fewer positions than the full request (the delivered prefix
+        // was NOT recomputed) but at least the remainder.
+        assert!(
+            second > 0 && second < got.tokens.len() as u64,
+            "restarted cloud served {second} of {} positions",
+            got.tokens.len()
+        );
+    }
 }
 
 fn tokens_line(stdout: &[u8]) -> String {

@@ -140,7 +140,7 @@ fn ikv0_mode_matches_kv_mode() {
     let mut pipe2 = build_pipeline(eng, &spec).unwrap();
     let (payload, mut state, _) = pipe2.edge.prefill(5, &[11, 22]).unwrap();
     let (reply, _) = pipe2.cloud.handle(&payload).unwrap();
-    pipe2.edge.absorb_reply(&mut state, payload.pos, &reply.new_kv_rows);
+    pipe2.edge.absorb_reply(&mut state, payload.pos, &reply.new_kv_rows).unwrap();
     let mut tokens = vec![reply.token];
     for _ in 0..4 {
         let t = *tokens.last().unwrap();
@@ -204,7 +204,7 @@ fn rebuild_payload_escalation_matches_from_scratch_compress() {
     // and cloud-layer KV
     let (payload, mut state, _) = pipe.edge.prefill(42, &[10, 20, 30]).unwrap();
     let (reply, _) = pipe.cloud.handle(&payload).unwrap();
-    pipe.edge.absorb_reply(&mut state, payload.pos, &reply.new_kv_rows);
+    pipe.edge.absorb_reply(&mut state, payload.pos, &reply.new_kv_rows).unwrap();
     let mut tok = reply.token;
     for _ in 0..3 {
         if tok == 0 {
@@ -212,7 +212,7 @@ fn rebuild_payload_escalation_matches_from_scratch_compress() {
         }
         let (payload, _) = pipe.edge.decode_step(&mut state, tok, true, None, None).unwrap();
         let (reply, _) = pipe.cloud.handle(&payload).unwrap();
-        pipe.edge.absorb_reply(&mut state, payload.pos, &reply.new_kv_rows);
+        pipe.edge.absorb_reply(&mut state, payload.pos, &reply.new_kv_rows).unwrap();
         tok = reply.token;
     }
 

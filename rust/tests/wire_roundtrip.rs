@@ -6,15 +6,18 @@
 
 use splitserve::adapt::Reconfig;
 use splitserve::coordinator::{
-    CloudReply, CompressedKv, CompressedTensor, CompressionConfig, SamplingSpec, SplitPayload,
+    reject, CloudReply, CompressedKv, CompressedTensor, CompressionConfig, RejectFrame, Resume,
+    ResumeAck, SamplingSpec, SplitPayload,
 };
 use splitserve::runtime::LayerKv;
 use splitserve::util::prop::run_cases;
 use splitserve::util::rng::Rng;
 use splitserve::wire::{
-    decode_frame, decode_payload_frame, decode_reconfig_frame, decode_reply_frame,
-    encode_payload_frame, encode_reconfig_frame, encode_reply_frame, WireError,
-    PAYLOAD_OVERHEAD, RECONFIG_OVERHEAD, REPLY_OVERHEAD,
+    crc32, decode_error_frame, decode_frame, decode_payload_frame, decode_reconfig_frame,
+    decode_reply_frame, decode_resume_ack_frame, decode_resume_frame, encode_error_frame,
+    encode_payload_frame, encode_reconfig_frame, encode_reply_frame, encode_resume_ack_frame,
+    encode_resume_frame, Loopback, Transport, WireError, PAYLOAD_OVERHEAD, RECONFIG_OVERHEAD,
+    REPLY_OVERHEAD,
 };
 
 fn heavy_block(rng: &mut Rng, rows: usize, cols: usize) -> Vec<f32> {
@@ -102,6 +105,7 @@ fn reply_roundtrip_identity_and_size() {
             .collect();
         let reply = CloudReply {
             request_id: rng.below(1 << 20) as u64,
+            pos: rng.below(1 << 12) as u64,
             token: rng.below(512) as u32,
             new_kv_rows,
             logits_entropy: rng.normal_f32(2.0, 0.5),
@@ -246,6 +250,7 @@ fn kind_confusion_is_a_typed_error() {
     ));
     let reply = CloudReply {
         request_id: 7,
+        pos: 0,
         token: 3,
         new_kv_rows: vec![],
         logits_entropy: 0.5,
@@ -272,7 +277,8 @@ fn empty_kv_reply_and_greedy_decode_payload_roundtrip() {
     let p = random_payload(&mut rng, &c, false, false);
     let f = encode_payload_frame(&p);
     assert_eq!(decode_payload_frame(&f).unwrap(), p);
-    let reply = CloudReply { request_id: 1, token: 0, new_kv_rows: vec![], logits_entropy: 0.0 };
+    let reply =
+        CloudReply { request_id: 1, pos: 0, token: 0, new_kv_rows: vec![], logits_entropy: 0.0 };
     let f = encode_reply_frame(&reply, 0.0);
     assert_eq!(f.len() as u64, reply.wire_bytes() + REPLY_OVERHEAD);
     assert_eq!(decode_reply_frame(&f).unwrap().0, reply);
@@ -343,4 +349,214 @@ fn pipeline_link_is_charged_with_frame_lengths() {
         assert!(s.uplink_bytes > PAYLOAD_OVERHEAD, "frames carry real bodies");
         assert!(s.downlink_bytes > REPLY_OVERHEAD);
     }
+}
+
+// ---------------------------------------------------------------------------
+// Wire v5 resumption/rejection frames, and the serve_connection replay
+// fence: duplicated and reordered frame sequences with VALID CRCs must be
+// answered idempotently or rejected with a typed in-band error — never
+// served into a silently forked token stream.
+// ---------------------------------------------------------------------------
+
+fn fence_spec() -> splitserve::coordinator::DeploymentSpec {
+    let mut cfg = splitserve::model::ModelConfig::sim7b();
+    cfg.n_layers = 4;
+    splitserve::coordinator::DeploymentSpec::defaults(cfg, 2)
+}
+
+fn fence_engine() -> std::rc::Rc<splitserve::runtime::Engine> {
+    std::rc::Rc::new(
+        splitserve::runtime::Engine::load("artifacts", &splitserve::model::ModelConfig::sim7b())
+            .expect("run `make artifacts`"),
+    )
+}
+
+#[test]
+fn resume_and_ack_frames_roundtrip_and_reject_truncation() {
+    run_cases(40, 0xF7, |case, rng| {
+        let rs = Resume {
+            request_id: rng.below(1 << 20) as u64,
+            epoch: 1 + rng.below(1 << 10) as u32,
+            next_pos: rng.below(1 << 12) as u64,
+            qa_bits: 2 + rng.below(15) as u32,
+            tau: [0.0f32, 2.5, 10.0][rng.below(3)],
+            include_kv: rng.below(2) == 0,
+        };
+        let f = encode_resume_frame(&rs);
+        assert_eq!(decode_resume_frame(&f).expect("well-formed resume decodes"), rs, "case {case}");
+        for cut in 0..f.len() {
+            assert!(decode_resume_frame(&f[..cut]).is_err(), "case {case}: truncation to {cut}");
+        }
+        let ack = ResumeAck {
+            request_id: rs.request_id,
+            epoch: rs.epoch,
+            last_pos: (rng.below(2) == 0).then(|| rng.below(1 << 12) as u64),
+        };
+        let af = encode_resume_ack_frame(&ack);
+        assert_eq!(decode_resume_ack_frame(&af).unwrap(), ack, "case {case}");
+        for cut in 0..af.len() {
+            assert!(decode_resume_ack_frame(&af[..cut]).is_err(), "case {case}");
+        }
+        // kind confusion between the new frames is typed, both ways
+        assert!(matches!(decode_resume_ack_frame(&f), Err(WireError::WrongKind { .. })));
+        assert!(matches!(decode_resume_frame(&af), Err(WireError::WrongKind { .. })));
+    });
+}
+
+#[test]
+fn error_frame_roundtrips_and_hostile_length_is_typed() {
+    let e = RejectFrame {
+        code: reject::STALE_POS,
+        request_id: 77,
+        message: "position 3 is behind the last answered 5".to_string(),
+    };
+    let f = encode_error_frame(&e);
+    assert_eq!(decode_error_frame(&f).unwrap(), e);
+    for cut in 0..f.len() {
+        assert!(decode_error_frame(&f[..cut]).is_err(), "truncation to {cut}");
+    }
+    // Hostile regression: a frame whose CRC is VALID but whose
+    // message-length field claims more bytes than the body holds must be
+    // a typed error, never an out-of-bounds read or panic. Body layout:
+    // code u8, request_id u64, msg_len u16 at body[9..11]; the frame
+    // header is 10 bytes and the CRC covers everything after the magic.
+    let mut bad = f.clone();
+    let n = bad.len();
+    bad[10 + 9] = 0xFF;
+    bad[10 + 10] = 0xFF;
+    let crc = crc32(&bad[4..n - 4]);
+    let crc_at = n - 4;
+    bad[crc_at..].copy_from_slice(&crc.to_le_bytes());
+    match decode_error_frame(&bad) {
+        Err(WireError::Truncated { .. }) | Err(WireError::Malformed(_)) => {}
+        other => panic!("inflated length must be a typed error, got {other:?}"),
+    }
+    // Same treatment for non-UTF-8 message bytes behind a valid CRC.
+    let mut garbled = f.clone();
+    garbled[10 + 11] = 0xFF;
+    garbled[10 + 12] = 0xFE;
+    let crc = crc32(&garbled[4..n - 4]);
+    garbled[crc_at..].copy_from_slice(&crc.to_le_bytes());
+    match decode_error_frame(&garbled) {
+        Err(WireError::Malformed(_)) => {}
+        other => panic!("non-UTF-8 message must be Malformed, got {other:?}"),
+    }
+}
+
+#[test]
+fn duplicated_payload_frame_is_answered_idempotently() {
+    let spec = fence_spec();
+    let edge = spec.build_edge_device(fence_engine()).unwrap();
+    let (mut edge_half, mut cloud_half) = Loopback::pair();
+    let spec_srv = spec.clone();
+    let server = std::thread::spawn(move || {
+        let cloud = spec_srv.build_cloud_server(fence_engine()).unwrap();
+        cloud.serve_connection(&mut cloud_half).map_err(|e| e.to_string())
+    });
+
+    let (payload, _state, _) = edge.prefill(31, &[10, 20, 30]).unwrap();
+    let pf = encode_payload_frame(&payload);
+    edge_half.send(&pf).unwrap();
+    let (first, _) = edge_half.recv().unwrap();
+    let (reply, _) = decode_reply_frame(&first).unwrap();
+
+    // A duplicated frame (retransmission after a lost reply) must be
+    // answered with the SAME reply — no double-serve, no stream fork.
+    edge_half.send(&pf).unwrap();
+    let (again, _) = edge_half.recv().unwrap();
+    let (reply2, _) = decode_reply_frame(&again).unwrap();
+    assert_eq!(reply2, reply, "duplicate must be answered identically");
+    if reply.token != 0 {
+        // Fenced replay: the cached frame comes back byte-identically
+        // (timing prefix included) and the duplicate is not re-served.
+        assert_eq!(again, first, "fence must replay the cached frame byte-identically");
+    }
+    drop(edge_half);
+    let served = server.join().unwrap().unwrap();
+    let want = if reply.token == 0 { 2 } else { 1 };
+    assert_eq!(served, want, "a fenced duplicate must not count as a second serve");
+}
+
+#[test]
+fn reordered_stale_position_is_rejected_in_band() {
+    let spec = fence_spec();
+    let edge = spec.build_edge_device(fence_engine()).unwrap();
+    let (mut edge_half, mut cloud_half) = Loopback::pair();
+    let spec_srv = spec.clone();
+    let server = std::thread::spawn(move || {
+        let cloud = spec_srv.build_cloud_server(fence_engine()).unwrap();
+        cloud.serve_connection(&mut cloud_half).map_err(|e| e.to_string())
+    });
+
+    let (p0, mut state, _) = edge.prefill(32, &[10, 20, 30]).unwrap();
+    let f0 = encode_payload_frame(&p0);
+    edge_half.send(&f0).unwrap();
+    let (frame, _) = edge_half.recv().unwrap();
+    let (r0, _) = decode_reply_frame(&frame).unwrap();
+    edge.absorb_reply(&mut state, p0.pos, &r0.new_kv_rows).unwrap();
+    let token = if r0.token == 0 { 1 } else { r0.token };
+    let (p1, _) = edge.decode_step(&mut state, token, true, None, None).unwrap();
+    assert!(p1.pos > p0.pos);
+    edge_half.send(&encode_payload_frame(&p1)).unwrap();
+    let (frame, _) = edge_half.recv().unwrap();
+    let (r1, _) = decode_reply_frame(&frame).unwrap();
+    if r1.token != 0 {
+        // The fence now sits at p1.pos: a reordered copy of the OLD
+        // prefill frame (valid CRC, earlier position) must be rejected
+        // in-band as stale — re-serving it would silently fork the
+        // stream a real edge already advanced past.
+        edge_half.send(&f0).unwrap();
+        let (frame, _) = edge_half.recv().unwrap();
+        let rj = decode_error_frame(&frame).unwrap();
+        assert_eq!(rj.code, reject::STALE_POS);
+        assert_eq!(rj.request_id, 32);
+        // ...and the connection survives: the next in-order payload is
+        // still served.
+        edge.absorb_reply(&mut state, p1.pos, &r1.new_kv_rows).unwrap();
+        let (p2, _) = edge.decode_step(&mut state, r1.token, true, None, None).unwrap();
+        edge_half.send(&encode_payload_frame(&p2)).unwrap();
+        let (frame, _) = edge_half.recv().unwrap();
+        decode_reply_frame(&frame).expect("connection must keep serving after a stale reject");
+    }
+    drop(edge_half);
+    server.join().unwrap().unwrap();
+}
+
+#[test]
+fn stale_resume_epoch_is_rejected_in_band() {
+    let spec = fence_spec();
+    let (mut edge_half, mut cloud_half) = Loopback::pair();
+    let server = std::thread::spawn(move || {
+        let cloud = spec.build_cloud_server(fence_engine()).unwrap();
+        cloud.serve_connection(&mut cloud_half).map_err(|e| e.to_string())
+    });
+    let rs = |epoch: u32| Resume {
+        request_id: 9,
+        epoch,
+        next_pos: 3,
+        qa_bits: 4,
+        tau: 5.0,
+        include_kv: true,
+    };
+    edge_half.send(&encode_resume_frame(&rs(2))).unwrap();
+    let (frame, _) = edge_half.recv().unwrap();
+    let ack = decode_resume_ack_frame(&frame).unwrap();
+    assert_eq!(ack, ResumeAck { request_id: 9, epoch: 2, last_pos: None });
+
+    // A duplicated (or delayed, from a dead connection) Resume at the
+    // same or an earlier epoch must be fenced off with a typed error.
+    for stale in [2u32, 1] {
+        edge_half.send(&encode_resume_frame(&rs(stale))).unwrap();
+        let (frame, _) = edge_half.recv().unwrap();
+        let rj = decode_error_frame(&frame).unwrap();
+        assert_eq!(rj.code, reject::STALE_EPOCH, "epoch {stale} must be rejected");
+        assert_eq!(rj.request_id, 9);
+    }
+
+    // The genuinely newer epoch is admitted.
+    edge_half.send(&encode_resume_frame(&rs(3))).unwrap();
+    let (frame, _) = edge_half.recv().unwrap();
+    assert_eq!(decode_resume_ack_frame(&frame).unwrap().epoch, 3);
+    drop(edge_half);
+    assert_eq!(server.join().unwrap().unwrap(), 0, "resumes are control, not served payloads");
 }

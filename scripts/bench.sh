@@ -32,7 +32,14 @@ BENCH_JSON="$WIRE_JSON" cargo bench --bench wire "$@"
 ADAPT_JSON="${BENCH_ADAPT_JSON:-BENCH_adapt.json}"
 BENCH_JSON="$ADAPT_JSON" cargo bench --bench adapt "$@"
 
-for f in "$BENCH_JSON" "$ENGINE_JSON" "$WIRE_JSON" "$ADAPT_JSON"; do
+# Fault-recovery costs: disconnect/restart recovery latency and serve-loop
+# goodput retention under seeded fault storms. The binary ASSERTS the
+# accounting invariants (every request ends completed or typed-failed) —
+# a panic fails this script.
+CHAOS_JSON="${BENCH_CHAOS_JSON:-BENCH_chaos.json}"
+BENCH_JSON="$CHAOS_JSON" cargo bench --bench chaos "$@"
+
+for f in "$BENCH_JSON" "$ENGINE_JSON" "$WIRE_JSON" "$ADAPT_JSON" "$CHAOS_JSON"; do
     if [ -f "$f" ]; then
         echo "--- $f ---"
         cat "$f"

@@ -1,0 +1,26 @@
+#!/usr/bin/env bash
+# Full chaos sweep: the seeded fault-injection property suite in release
+# mode, at full seed count, plus the chaos bench.
+#
+#   scripts/chaos.sh              # 240-seed sweep + every pinned trace
+#   CHAOS_SEEDS=64 scripts/chaos.sh
+#   scripts/chaos.sh --nocapture  # extra args go to the test binary
+#
+# CI runs the reduced configuration (CHAOS_SEEDS=quick) as part of the
+# normal test job; this script is the long-form evidence run behind
+# EXPERIMENTS.md §Chaos. The invariant everywhere: a faulted run either
+# completes with EXACTLY the fault-free token stream or fails with a
+# typed error — never silent wrong tokens.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export CHAOS_SEEDS="${CHAOS_SEEDS:-240}"
+echo "chaos sweep: CHAOS_SEEDS=$CHAOS_SEEDS"
+cargo test --release --test chaos -- "$@"
+
+CHAOS_JSON="${BENCH_CHAOS_JSON:-BENCH_chaos.json}"
+BENCH_JSON="$CHAOS_JSON" cargo bench --bench chaos
+if [ -f "$CHAOS_JSON" ]; then
+    echo "--- $CHAOS_JSON ---"
+    cat "$CHAOS_JSON"
+fi
