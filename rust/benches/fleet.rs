@@ -1,0 +1,258 @@
+//! Fleet-scale serving bench: ONE cloud process against 1k+ simulated
+//! edge devices with heterogeneous wireless channels arriving on a
+//! diurnal load curve.
+//!
+//! Every device owns a seeded `LinkSim` (its own bandwidth/SNR draw), a
+//! framed duplex wire, and one fleet connection; the single scheduler
+//! thread routes from peeked prefixes, batches decode payloads across
+//! connections, and round-robins service by byte deficit. Reported:
+//! aggregate decoded tokens/s, p50/p95/p99 wall time-to-token (queueing
+//! included), and the fairness spread across sessions.
+//!
+//! Invariant, ASSERTED in-binary: every session's token stream under
+//! fleet scheduling is bit-identical to the same request served solo
+//! through `SplitPipeline::generate` — scheduling changes WHEN tokens
+//! appear, never WHICH.
+//!
+//! Emits `BENCH_fleet.json` (override with `BENCH_JSON`); `BENCH_SMOKE=1`
+//! runs the reduced 64-device CI configuration. `FLEET_DEVICES=N`
+//! overrides the device count (up to 10k).
+
+use std::rc::Rc;
+use std::time::Instant;
+
+use splitserve::channel::{optimize_rate, ChannelParams, LinkSim, TransferOutcome};
+use splitserve::coordinator::{build_pipeline, DeploymentSpec, Request, Session, SessionAction};
+use splitserve::fleet::{FleetConfig, FleetServer};
+use splitserve::model::ModelConfig;
+use splitserve::runtime::Engine;
+use splitserve::trace::{generate_trace, ArrivalPattern, WorkloadSpec};
+use splitserve::util::bench::JsonReport;
+use splitserve::util::rng::Rng;
+use splitserve::wire::{EdgePort, LinkTransport, WireTransport};
+
+fn small_cfg(n_layers: usize) -> ModelConfig {
+    let mut cfg = ModelConfig::sim7b();
+    cfg.n_layers = n_layers;
+    cfg
+}
+
+fn engine() -> Rc<Engine> {
+    Rc::new(Engine::load("artifacts", &ModelConfig::sim7b()).expect("run `make artifacts`"))
+}
+
+/// One simulated device: its session, its typed edge port over its own
+/// wireless link, and the wall-clock stamp of the in-flight payload.
+struct Device {
+    session: Session,
+    port: EdgePort,
+    up: Option<TransferOutcome>,
+    sent_at: Instant,
+    active: bool,
+    /// Wall time-to-token samples (send → absorbed reply), seconds.
+    latencies_s: Vec<f64>,
+}
+
+fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() - 1) as f64 * p).round() as usize;
+    sorted[idx]
+}
+
+fn main() -> anyhow::Result<()> {
+    let smoke = std::env::var("BENCH_SMOKE").is_ok();
+    let n_devices: usize = std::env::var("FLEET_DEVICES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(if smoke { 64 } else { 1000 })
+        .clamp(2, 10_000);
+    let max_new = 4usize;
+
+    let eng = engine();
+    let spec = DeploymentSpec::defaults(small_cfg(2), 1);
+    let cloud = spec.build_cloud_server(eng.clone())?;
+    let edge = spec.build_edge_device(eng.clone())?;
+    let fleet_cfg = FleetConfig { max_batch: 8, ..FleetConfig::default() };
+    let mut fleet = FleetServer::new(cloud, fleet_cfg);
+
+    // Diurnal day/night arrivals, compressed so the whole curve plays out
+    // in about a second of wall time.
+    let trace = generate_trace(&WorkloadSpec {
+        n_requests: n_devices,
+        arrival_rate: 1.0,
+        arrival: ArrivalPattern::Diurnal {
+            period_s: 60.0,
+            peak_rate: n_devices as f64 / 20.0,
+            trough_rate: n_devices as f64 / 400.0,
+        },
+        prompt_len_min: 3,
+        prompt_len_max: 8,
+        output_len_min: max_new,
+        output_len_max: max_new + 1,
+        vocab: 256,
+        seed: 0xF1EE7,
+    });
+    let span_s = trace.last().map(|r| r.arrival_s).unwrap_or(1.0).max(1e-6);
+    let ramp_wall_s = if smoke { 0.2 } else { 1.0 };
+    let time_scale = span_s / ramp_wall_s;
+
+    // Heterogeneous fleet: every device draws its own channel (bandwidth
+    // 2–20 MHz, mean SNR 2–40) and rate-optimizes its own link.
+    let mut chan_rng = Rng::new(0xC4A77E1);
+    let mut devices: Vec<Device> = trace
+        .iter()
+        .map(|req| {
+            let params = ChannelParams {
+                bandwidth_hz: 2e6 + 18e6 * chan_rng.f64(),
+                snr: 2.0 + 38.0 * chan_rng.f64(),
+                epsilon: 1e-3,
+            };
+            let rate = optimize_rate(&params, 1e5, 4.0 * params.capacity_bps());
+            let link = LinkSim::new(params, rate, 0x11AC ^ req.id);
+            let (edge_half, cloud_half) = LinkTransport::duplex(link);
+            fleet.add_polled(WireTransport::Loopback(cloud_half));
+            Device {
+                session: Session::for_edge(req.clone(), &edge, spec.edge_controller()),
+                port: EdgePort::new(WireTransport::Sim(edge_half)),
+                up: None,
+                sent_at: Instant::now(),
+                active: false,
+                latencies_s: Vec::with_capacity(max_new + 2),
+            }
+        })
+        .collect();
+
+    println!(
+        "fleet bench: {n_devices} devices, diurnal span {span_s:.1}s sim -> {ramp_wall_s}s wall"
+    );
+
+    // Single-threaded drive: activate devices as the compressed clock
+    // passes their arrival, pump sessions, step the fleet, absorb
+    // replies. Wall time-to-token includes every queueing effect the
+    // scheduler introduces — that is the point of the bench.
+    let t0 = Instant::now();
+    let mut guard = 0u64;
+    while devices.iter().any(|d| !d.session.is_terminal()) {
+        guard += 1;
+        assert!(
+            guard < 50_000_000,
+            "fleet bench did not converge: {:?}",
+            fleet.stats()
+        );
+        let now_sim = t0.elapsed().as_secs_f64() * time_scale;
+        for (d, req) in devices.iter_mut().zip(&trace) {
+            if !d.active {
+                if req.arrival_s <= now_sim {
+                    d.active = true;
+                } else {
+                    continue;
+                }
+            }
+            if d.session.is_terminal() || d.up.is_some() {
+                continue;
+            }
+            if let SessionAction::Transmit(p) = d.session.poll(&edge)? {
+                d.up = Some(d.port.send_payload(&p)?);
+                d.sent_at = Instant::now();
+            }
+        }
+        fleet.poll()?;
+        for d in devices.iter_mut() {
+            if !d.active || d.session.is_terminal() || d.up.is_none() {
+                continue;
+            }
+            if let Some((reply, cloud_s, down)) = d.port.try_recv_reply()? {
+                let up = d.up.take().expect("reply without in-flight payload");
+                d.latencies_s.push(d.sent_at.elapsed().as_secs_f64());
+                d.session.on_reply(&edge, &reply, cloud_s, up, down)?;
+            }
+        }
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+
+    let stats = fleet.stats();
+    let total_tokens: u64 = devices.iter().map(|d| d.session.tokens().len() as u64).sum();
+    assert!(total_tokens > 0, "fleet served no tokens");
+    assert!(
+        stats.peak_batch >= 2.min(n_devices),
+        "fleet never batched across connections: {stats:?}"
+    );
+    assert_eq!(
+        fleet.scheduler().live_sessions(),
+        0,
+        "admission charges must all be released at EOS"
+    );
+    assert_eq!(fleet.scheduler().fence_entries(), 0, "fences must clear at EOS");
+
+    // --- The invariant: every stream bit-identical to its solo run. ---
+    let mut pipe = build_pipeline(eng.clone(), &spec)?;
+    for (d, req) in devices.iter().zip(&trace) {
+        let want = pipe.generate(req)?;
+        assert_eq!(
+            d.session.tokens(),
+            &want.tokens[..],
+            "req {} diverged under fleet scheduling",
+            req.id
+        );
+    }
+    println!("bit-identity: {} sessions match their solo streams", devices.len());
+
+    // --- Metrics. ---
+    let mut all: Vec<f64> = devices.iter().flat_map(|d| d.latencies_s.iter().copied()).collect();
+    all.sort_by(|a, b| a.total_cmp(b));
+    let p50 = percentile(&all, 0.50);
+    let p95 = percentile(&all, 0.95);
+    let p99 = percentile(&all, 0.99);
+    let agg_tok_s = total_tokens as f64 / wall_s;
+
+    // Jain fairness over per-session mean time-to-token: 1.0 = perfectly
+    // even service, 1/n = one session hogged the scheduler.
+    let means: Vec<f64> = devices
+        .iter()
+        .filter(|d| !d.latencies_s.is_empty())
+        .map(|d| d.latencies_s.iter().sum::<f64>() / d.latencies_s.len() as f64)
+        .collect();
+    let sum: f64 = means.iter().sum();
+    let sum_sq: f64 = means.iter().map(|m| m * m).sum();
+    let jain = if sum_sq > 0.0 { sum * sum / (means.len() as f64 * sum_sq) } else { 1.0 };
+    let mut sorted_means = means.clone();
+    sorted_means.sort_by(|a, b| a.total_cmp(b));
+    let spread = percentile(&sorted_means, 0.95) / percentile(&sorted_means, 0.50).max(1e-9);
+
+    let mut report = JsonReport::new();
+    report.add_metric("fleet_devices", n_devices as f64);
+    report.add_metric("fleet_total_tokens", total_tokens as f64);
+    report.add_metric("fleet_wall_s", wall_s);
+    report.add_metric("fleet_aggregate_tok_s", agg_tok_s);
+    report.add_metric("fleet_p50_ttt_ms", p50 * 1e3);
+    report.add_metric("fleet_p95_ttt_ms", p95 * 1e3);
+    report.add_metric("fleet_p99_ttt_ms", p99 * 1e3);
+    report.add_metric("fleet_jain_fairness", jain);
+    report.add_metric("fleet_fairness_spread_p95_over_p50", spread);
+    report.add_metric("fleet_peak_batch", stats.peak_batch as f64);
+    report.add_metric("fleet_batches", stats.batches as f64);
+    report.add_metric("fleet_payloads_served", stats.payloads_served as f64);
+
+    println!(
+        "fleet: {n_devices} devices | {total_tokens} tokens in {wall_s:.2}s wall \
+         ({agg_tok_s:.0} tok/s aggregate)"
+    );
+    println!(
+        "time-to-token: p50 {:.2} ms | p95 {:.2} ms | p99 {:.2} ms",
+        p50 * 1e3,
+        p95 * 1e3,
+        p99 * 1e3
+    );
+    println!(
+        "fairness: Jain {jain:.3} | session-mean spread p95/p50 {spread:.2} | peak batch {}",
+        stats.peak_batch
+    );
+    assert!(jain > 0.5, "scheduler fairness collapsed: Jain {jain}");
+
+    let path = std::env::var("BENCH_JSON").unwrap_or_else(|_| "BENCH_fleet.json".to_string());
+    report.write(&path)?;
+    println!("wrote {path}");
+    Ok(())
+}

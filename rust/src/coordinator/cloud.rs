@@ -116,6 +116,20 @@ impl CloudServer {
         self.reconfigs_applied.load(Ordering::Relaxed)
     }
 
+    /// Live control-plane entries (announced sessions not yet retired).
+    /// Observability for the fleet connection-state hygiene test: after a
+    /// connection's sweep this must not grow across connect/crash cycles.
+    pub fn control_entries(&self) -> usize {
+        self.control.lock().expect("control plane poisoned").len()
+    }
+
+    /// Live resume-fence entries. These OUTLIVE connections by design
+    /// (a delayed duplicate `Resume` from a dead connection must stay
+    /// rejectable) and are dropped when the EOS reply is served.
+    pub fn resume_entries(&self) -> usize {
+        self.resume_epochs.lock().expect("resume fence poisoned").len()
+    }
+
     /// Apply a session's announced transmission settings mid-stream.
     /// Stale epochs (≤ the last applied) are ignored, so duplicated or
     /// reordered control frames cannot roll a session's settings back.

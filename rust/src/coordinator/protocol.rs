@@ -445,6 +445,10 @@ pub mod reject {
     pub const STALE_POS: u8 = 2;
     /// The request failed on the cloud (the message carries the cause).
     pub const FAILED: u8 = 3;
+    /// Fleet admission refused a new session: serving it would push the
+    /// cloud's aggregate KV working memory past the budget (the Eq. 8c
+    /// gate extended across all tenants of one server).
+    pub const ADMISSION: u8 = 4;
 }
 
 /// Cloud→edge in-band typed rejection (frame kind 6, wire v5): the

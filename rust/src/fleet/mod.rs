@@ -1,0 +1,30 @@
+//! Fleet-scale multi-tenant cloud serving: one server process, thousands
+//! of live edge connections.
+//!
+//! The serial `splitserve cloud` loop served one connection at a time —
+//! fine for validating the protocol, useless as a cloud. This module
+//! turns the same stateless [`CloudServer`](crate::coordinator::CloudServer)
+//! into a fleet endpoint without giving up any of its invariants:
+//!
+//! - [`server`] — the accept-and-read layer. Socket connections get
+//!   blocking reader threads feeding a shared inbox under credit-based
+//!   backpressure; in-process transports are polled. Frames cross threads
+//!   as opaque bytes — the single scheduler thread is the only place
+//!   tensors are ever decoded.
+//! - [`scheduler`] — routing from peeked prefixes (request id, position,
+//!   flags — never a tensor decode), per-connection replay fences,
+//!   deficit-round-robin fairness in bytes, cross-connection decode
+//!   batches through `CloudServer::handle_batch`, and an aggregate-KV
+//!   admission gate that extends the paper's Eq. 8c memory constraint
+//!   across tenants (typed `ADMISSION` rejection, connection stays up).
+//!
+//! Because cloud sampling is (seed, request, pos)-keyed and the cloud
+//! holds no cross-request state, a session's token stream under fleet
+//! scheduling is bit-identical to the same session served solo — the
+//! fleet tests and bench assert exactly that.
+
+pub mod scheduler;
+pub mod server;
+
+pub use scheduler::{FleetConfig, FleetScheduler, FleetStats};
+pub use server::{serve_listener, Credits, FleetServer};

@@ -1,0 +1,587 @@
+//! Cloud-side fleet scheduler: cross-connection batch formation, DRR
+//! fairness, replay fencing and aggregate-KV admission over the existing
+//! stateless [`CloudServer`].
+//!
+//! The scheduler owns the `CloudServer` (its runtime is `Rc`-based and
+//! deliberately single-threaded) and every connection's *write* half.
+//! Frames reach it as raw `Vec<u8>` — pushed by socket reader threads or
+//! pulled by the non-blocking poll sweep — and are classified from the
+//! frame header plus the payload body's 17-byte `[request_id][pos][flags]`
+//! prefix ([`crate::wire::peek_payload_prefix`]): routing, replay fencing
+//! and admission never decompress a tensor. Tensor decode happens once,
+//! at serve time, for exactly the frames picked into a batch.
+//!
+//! Fairness is deficit round-robin in *bytes*: each connection with
+//! pending decode payloads earns `drr_quantum` bytes of service per
+//! round and spends its deficit front-of-queue, so one chatty edge
+//! multiplexing many sessions cannot starve a slow single-session
+//! tenant. Picked payloads from ALL connections form one
+//! [`CloudServer::handle_batch`] call — cross-connection decode stacking,
+//! which the per-connection serial loop could never do.
+//!
+//! Admission extends the Eq. 8c memory gate across tenants: every live
+//! session costs the cloud one decompressed back-segment KV working set
+//! (2 · n_back_layers · W̄ · kv_width · 4 bytes) when it appears in a
+//! batch, so a new session (prefill, or a `Resume` arriving on a fresh
+//! connection) is admitted only while aggregate live-session KV fits
+//! `kv_budget_bytes`; otherwise it gets the typed in-band
+//! [`reject::ADMISSION`] rejection and the connection stays up.
+
+use std::collections::{HashMap, HashSet, VecDeque};
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::coordinator::protocol::{reject, CloudReply, RejectFrame, SplitPayload};
+use crate::coordinator::CloudServer;
+use crate::wire::{
+    self, peek_payload_prefix, FrameKind, PayloadPrefix, PollRecv, Transport, WireError,
+    WireTransport,
+};
+
+use super::server::Credits;
+
+/// Knobs of the fleet scheduler.
+#[derive(Clone, Copy, Debug)]
+pub struct FleetConfig {
+    /// Max payloads per cross-connection batch (continuous-batching
+    /// iteration width).
+    pub max_batch: usize,
+    /// Per-connection bound on buffered frames (backpressure: a polled
+    /// connection at the bound is not polled; a socket reader thread at
+    /// the bound blocks before reading more).
+    pub queue_depth: usize,
+    /// DRR service quantum in bytes per connection per round.
+    pub drr_quantum: u64,
+    /// Aggregate cloud KV working-memory budget across all live sessions
+    /// (None = admission gate off).
+    pub kv_budget_bytes: Option<u64>,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        FleetConfig {
+            max_batch: 8,
+            queue_depth: 4,
+            drr_quantum: 64 * 1024,
+            kv_budget_bytes: None,
+        }
+    }
+}
+
+/// Counters of everything the scheduler did (tests and the fleet bench
+/// assert on these).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FleetStats {
+    /// Payloads answered with a fresh reply.
+    pub payloads_served: u64,
+    /// `handle_batch` calls issued.
+    pub batches: u64,
+    /// Widest batch formed.
+    pub peak_batch: usize,
+    /// Duplicate payloads answered by replaying the fenced reply frame.
+    pub replayed: u64,
+    /// Payloads rejected as behind the replay fence (STALE_POS).
+    pub stale_rejected: u64,
+    /// Sessions refused by the aggregate-KV admission gate.
+    pub admission_rejected: u64,
+    /// Retransmits dropped because the same (request, pos) was already
+    /// queued and will be answered once.
+    pub deduped: u64,
+    /// Control-plane reconfigurations applied.
+    pub reconfigs: u64,
+    /// Resume handshakes answered (admitted or fenced).
+    pub resumes: u64,
+    /// Connections torn down (clean or crashed) and swept.
+    pub closed_conns: u64,
+    /// Payloads answered with a typed FAILED rejection.
+    pub failed: u64,
+}
+
+/// How a connection's frames reach the scheduler.
+enum ConnMode {
+    /// In-process transport swept by [`FleetScheduler::poll_connections`];
+    /// the transport also carries replies back.
+    Polled,
+    /// A blocking socket reader thread pushes frames into the server
+    /// inbox; the stored transport is the write half (an OS-level clone).
+    /// The credits gate bounds the reader (backpressure).
+    Threaded(Arc<Credits>),
+}
+
+struct ConnState {
+    transport: WireTransport,
+    mode: ConnMode,
+    /// Intake-validated payload frames awaiting batch formation.
+    pending: VecDeque<(PayloadPrefix, Vec<u8>)>,
+    /// (request → queued pos) for retransmit dedup while still pending.
+    pending_pos: HashMap<u64, u64>,
+    /// DRR byte deficit.
+    deficit: u64,
+    /// Replay fence: last answered position + its encoded reply frame,
+    /// per request (same contract as `CloudServer::serve_connection`,
+    /// hoisted here so a dead connection's fence is sweepable).
+    fence: HashMap<u64, (u64, Vec<u8>)>,
+    /// Request ids this connection announced to the cloud control plane
+    /// (Reconfig/Resume) — retired on close.
+    announced: HashSet<u64>,
+}
+
+impl ConnState {
+    fn release_credit(&self, n: usize) {
+        if let ConnMode::Threaded(credits) = &self.mode {
+            for _ in 0..n {
+                credits.release();
+            }
+        }
+    }
+}
+
+pub struct FleetScheduler {
+    cloud: CloudServer,
+    cfg: FleetConfig,
+    conns: HashMap<u64, ConnState>,
+    /// Round-robin order (rotated each serve round so no connection is
+    /// structurally first).
+    rr: VecDeque<u64>,
+    /// Live sessions (admitted, not yet EOS) → owning connection. The
+    /// admission gate charges each one `session_kv_bytes`.
+    live: HashMap<u64, u64>,
+    /// Cloud KV working set one live session costs (2 · n_back · W̄ ·
+    /// kv_width · 4 bytes).
+    session_kv_bytes: u64,
+    pub stats: FleetStats,
+}
+
+impl FleetScheduler {
+    pub fn new(cloud: CloudServer, cfg: FleetConfig) -> FleetScheduler {
+        let mcfg = &cloud.node.weights.cfg;
+        let session_kv_bytes =
+            2 * cloud.node.layer_range.len() as u64
+                * mcfg.max_seq as u64
+                * mcfg.kv_width() as u64
+                * 4;
+        FleetScheduler {
+            cloud,
+            cfg,
+            conns: HashMap::new(),
+            rr: VecDeque::new(),
+            live: HashMap::new(),
+            session_kv_bytes,
+            stats: FleetStats::default(),
+        }
+    }
+
+    pub fn cloud(&self) -> &CloudServer {
+        &self.cloud
+    }
+
+    pub fn config(&self) -> &FleetConfig {
+        &self.cfg
+    }
+
+    /// Cloud KV working-set bytes one live session is charged.
+    pub fn session_kv_bytes(&self) -> u64 {
+        self.session_kv_bytes
+    }
+
+    /// Live (admitted, pre-EOS) sessions across all connections.
+    pub fn live_sessions(&self) -> usize {
+        self.live.len()
+    }
+
+    /// Registered connections.
+    pub fn connections(&self) -> usize {
+        self.conns.len()
+    }
+
+    /// Replay-fence entries across all live connections (hygiene
+    /// observability: must be swept with their connection).
+    pub fn fence_entries(&self) -> usize {
+        self.conns.values().map(|c| c.fence.len()).sum()
+    }
+
+    /// Payload frames buffered across all connections.
+    pub fn pending_frames(&self) -> usize {
+        self.conns.values().map(|c| c.pending.len()).sum()
+    }
+
+    pub(crate) fn register_polled(&mut self, id: u64, transport: WireTransport) {
+        self.insert_conn(id, transport, ConnMode::Polled);
+    }
+
+    pub(crate) fn register_threaded(
+        &mut self,
+        id: u64,
+        write_half: WireTransport,
+        credits: Arc<Credits>,
+    ) {
+        self.insert_conn(id, write_half, ConnMode::Threaded(credits));
+    }
+
+    fn insert_conn(&mut self, id: u64, transport: WireTransport, mode: ConnMode) {
+        self.conns.insert(
+            id,
+            ConnState {
+                transport,
+                mode,
+                pending: VecDeque::new(),
+                pending_pos: HashMap::new(),
+                deficit: 0,
+                fence: HashMap::new(),
+                announced: HashSet::new(),
+            },
+        );
+        self.rr.push_back(id);
+    }
+
+    /// Tear a connection down and sweep every piece of per-connection
+    /// cloud state it accumulated: replay fences and pending frames go
+    /// with the `ConnState`, announced control-plane entries are retired
+    /// on the cloud, and the sessions it owned are released from the
+    /// admission gate (their per-request state lives on the edge — a
+    /// reconnecting session re-admits through `Resume`). Unknown ids are
+    /// a no-op, so duplicate close events are harmless.
+    pub fn close_connection(&mut self, id: u64) {
+        let Some(conn) = self.conns.remove(&id) else { return };
+        self.rr.retain(|&c| c != id);
+        conn.release_credit(conn.pending.len());
+        if let ConnMode::Threaded(credits) = &conn.mode {
+            credits.kill();
+        }
+        for rid in &conn.announced {
+            self.cloud.retire_request(*rid);
+        }
+        self.live.retain(|_, owner| *owner != id);
+        self.stats.closed_conns += 1;
+    }
+
+    /// Non-blocking sweep over the polled connections: move waiting
+    /// frames through intake, up to each connection's queue room (the
+    /// polled form of backpressure — a full connection is simply not
+    /// polled, frames stay buffered in its transport). Connections whose
+    /// peer hung up (or whose intake hit a wire error) are swept.
+    pub fn poll_connections(&mut self) {
+        let ids: Vec<u64> = self
+            .conns
+            .iter()
+            .filter(|(_, c)| matches!(c.mode, ConnMode::Polled))
+            .map(|(&id, _)| id)
+            .collect();
+        for id in ids {
+            let mut arrived: Vec<Vec<u8>> = Vec::new();
+            let mut closed = false;
+            {
+                let Some(conn) = self.conns.get_mut(&id) else { continue };
+                let mut room = self.cfg.queue_depth.saturating_sub(conn.pending.len());
+                while room > 0 {
+                    match conn.transport.poll_recv() {
+                        Ok(PollRecv::Frame(f, _)) => {
+                            arrived.push(f);
+                            room -= 1;
+                        }
+                        Ok(PollRecv::Empty) => break,
+                        Ok(PollRecv::Closed) | Err(_) => {
+                            closed = true;
+                            break;
+                        }
+                    }
+                }
+            }
+            for f in arrived {
+                if self.on_frame(id, f).is_err() {
+                    closed = true;
+                    break;
+                }
+            }
+            if closed {
+                self.close_connection(id);
+            }
+        }
+    }
+
+    /// Intake one frame from a connection. Control frames are handled
+    /// immediately; payload frames are fenced/admitted off the peeked
+    /// prefix and enqueued for batch formation. An `Err` is
+    /// connection-fatal (corrupted frame, dead peer on reply write) —
+    /// the caller must sweep the connection; per-request failures are
+    /// answered in-band and return `Ok`.
+    pub fn on_frame(&mut self, conn_id: u64, frame: Vec<u8>) -> Result<()> {
+        if !self.conns.contains_key(&conn_id) {
+            return Ok(()); // late frame from an already-swept connection
+        }
+        match peek_payload_prefix(&frame) {
+            Ok(pfx) => self.intake_payload(conn_id, pfx, frame),
+            Err(WireError::WrongKind { got, .. }) => self.intake_control(conn_id, got, frame),
+            Err(e) => {
+                // Envelope-level damage (CRC, truncation): connection-fatal,
+                // exactly like the serial `serve_connection` loop.
+                self.release_one(conn_id);
+                Err(e.into())
+            }
+        }
+    }
+
+    fn release_one(&mut self, conn_id: u64) {
+        if let Some(conn) = self.conns.get(&conn_id) {
+            conn.release_credit(1);
+        }
+    }
+
+    fn intake_control(&mut self, conn_id: u64, kind: FrameKind, frame: Vec<u8>) -> Result<()> {
+        self.release_one(conn_id);
+        match kind {
+            FrameKind::Reconfig => {
+                let rc = wire::decode_reconfig_frame(&frame)?;
+                self.cloud.apply_reconfig(&rc);
+                self.stats.reconfigs += 1;
+                let conn = self.conns.get_mut(&conn_id).expect("checked in on_frame");
+                conn.announced.insert(rc.request_id);
+                Ok(())
+            }
+            FrameKind::Resume => {
+                let rs = wire::decode_resume_frame(&frame)?;
+                self.stats.resumes += 1;
+                let conn = self.conns.get_mut(&conn_id).expect("checked in on_frame");
+                let last_pos = conn.fence.get(&rs.request_id).map(|(p, _)| *p);
+                // A session resuming here may have been released when its
+                // old connection died — it must fit the aggregate budget
+                // again before the cloud re-fences it.
+                if !self.has_room(rs.request_id) {
+                    self.stats.admission_rejected += 1;
+                    let out = wire::encode_error_frame(&self.admission_reject(rs.request_id));
+                    return self.send_to(conn_id, &out);
+                }
+                let out = match self.cloud.admit_resume(&rs, last_pos) {
+                    Ok(ack) => {
+                        self.live.insert(rs.request_id, conn_id);
+                        let conn = self.conns.get_mut(&conn_id).expect("checked in on_frame");
+                        conn.announced.insert(rs.request_id);
+                        wire::encode_resume_ack_frame(&ack)
+                    }
+                    Err(rj) => wire::encode_error_frame(&rj),
+                };
+                self.send_to(conn_id, &out)
+            }
+            other => anyhow::bail!("cloud fleet received a {other:?} frame"),
+        }
+    }
+
+    fn intake_payload(&mut self, conn_id: u64, pfx: PayloadPrefix, frame: Vec<u8>) -> Result<()> {
+        let conn = self.conns.get_mut(&conn_id).expect("checked in on_frame");
+        if let Some((last, cached)) = conn.fence.get(&pfx.request_id) {
+            if pfx.pos == *last {
+                let cached = cached.clone();
+                self.stats.replayed += 1;
+                self.release_one(conn_id);
+                return self.send_to(conn_id, &cached);
+            }
+            if pfx.pos < *last {
+                let rj = RejectFrame {
+                    code: reject::STALE_POS,
+                    request_id: pfx.request_id,
+                    message: format!(
+                        "position {} is behind the last answered {last}",
+                        pfx.pos
+                    ),
+                };
+                self.stats.stale_rejected += 1;
+                self.release_one(conn_id);
+                return self.send_to(conn_id, &wire::encode_error_frame(&rj));
+            }
+        }
+        if conn.pending_pos.get(&pfx.request_id) == Some(&pfx.pos) {
+            // A retransmit of a frame still queued: the queued copy will
+            // be answered once; dropping the duplicate keeps the fence's
+            // one-reply-per-position contract.
+            self.stats.deduped += 1;
+            self.release_one(conn_id);
+            return Ok(());
+        }
+        if pfx.is_prefill && !self.has_room(pfx.request_id) {
+            self.stats.admission_rejected += 1;
+            self.release_one(conn_id);
+            let out = wire::encode_error_frame(&self.admission_reject(pfx.request_id));
+            return self.send_to(conn_id, &out);
+        }
+        // Mid-stream decode traffic adopts its session onto this
+        // connection (a reconnect without Resume, or in-order migration):
+        // the owner binding keeps the close-time release exact.
+        self.live.insert(pfx.request_id, conn_id);
+        let conn = self.conns.get_mut(&conn_id).expect("checked in on_frame");
+        conn.pending_pos.insert(pfx.request_id, pfx.pos);
+        conn.pending.push_back((pfx, frame));
+        Ok(())
+    }
+
+    /// Would admitting `request_id` as a live session keep aggregate KV
+    /// inside the budget? Sessions already live (retransmitted prefill,
+    /// mid-stream adoption) always fit — they're never double-charged.
+    fn has_room(&self, request_id: u64) -> bool {
+        if self.live.contains_key(&request_id) {
+            return true;
+        }
+        match self.cfg.kv_budget_bytes {
+            Some(budget) => (self.live.len() as u64 + 1) * self.session_kv_bytes <= budget,
+            None => true,
+        }
+    }
+
+    fn admission_reject(&self, request_id: u64) -> RejectFrame {
+        RejectFrame {
+            code: reject::ADMISSION,
+            request_id,
+            message: format!(
+                "fleet at capacity: {} live sessions x {} KV bytes against budget {:?}",
+                self.live.len(),
+                self.session_kv_bytes,
+                self.cfg.kv_budget_bytes
+            ),
+        }
+    }
+
+    /// One DRR round: pick up to `max_batch` pending payloads across
+    /// connections by byte deficit, serve them as ONE cross-connection
+    /// `handle_batch` call, write the replies, and advance the fences.
+    /// Returns the number of payloads served (0 = nothing pending).
+    pub fn serve_round(&mut self) -> Result<usize> {
+        let picked = self.form_batch();
+        if picked.is_empty() {
+            return Ok(0);
+        }
+        self.stats.batches += 1;
+        self.stats.peak_batch = self.stats.peak_batch.max(picked.len());
+        self.serve_picked(picked)
+    }
+
+    /// Deficit round-robin selection. Each connection with pending work
+    /// earns one `drr_quantum` of byte credit per round and dequeues
+    /// front-of-queue while its deficit covers the frame; the scan order
+    /// rotates so ties don't always favor the same tenant.
+    fn form_batch(&mut self) -> Vec<(u64, PayloadPrefix, Vec<u8>)> {
+        let mut picked = Vec::new();
+        let n = self.rr.len();
+        for _ in 0..n {
+            let Some(id) = self.rr.pop_front() else { break };
+            self.rr.push_back(id);
+            let Some(conn) = self.conns.get_mut(&id) else { continue };
+            if conn.pending.is_empty() {
+                conn.deficit = 0;
+                continue;
+            }
+            conn.deficit = conn.deficit.saturating_add(self.cfg.drr_quantum);
+            let mut took = 0usize;
+            while picked.len() < self.cfg.max_batch {
+                let Some((_, frame)) = conn.pending.front() else { break };
+                let cost = frame.len() as u64;
+                if cost > conn.deficit {
+                    break;
+                }
+                conn.deficit -= cost;
+                let (pfx, frame) = conn.pending.pop_front().expect("front checked");
+                if conn.pending_pos.get(&pfx.request_id) == Some(&pfx.pos) {
+                    conn.pending_pos.remove(&pfx.request_id);
+                }
+                picked.push((id, pfx, frame));
+                took += 1;
+            }
+            conn.release_credit(took);
+            if conn.pending.is_empty() {
+                conn.deficit = 0; // idle connections don't bank credit
+            }
+            if picked.len() >= self.cfg.max_batch {
+                break;
+            }
+        }
+        picked
+    }
+
+    /// Strictly decode the picked frames, serve them (batched; falls back
+    /// to payload-at-a-time on a poisoned batch so one bad tenant cannot
+    /// void the others' work), send replies, advance fences.
+    fn serve_picked(&mut self, picked: Vec<(u64, PayloadPrefix, Vec<u8>)>) -> Result<usize> {
+        let mut owners: Vec<(u64, PayloadPrefix)> = Vec::with_capacity(picked.len());
+        let mut payloads: Vec<SplitPayload> = Vec::with_capacity(picked.len());
+        let mut dead: Vec<u64> = Vec::new();
+        for (conn_id, pfx, frame) in picked {
+            match wire::decode_payload_frame(&frame) {
+                Ok(p) => {
+                    owners.push((conn_id, pfx));
+                    payloads.push(p);
+                }
+                Err(e) => {
+                    // The envelope was valid at intake, so this is a body
+                    // that lies behind a good CRC: condemn the request,
+                    // keep the connection.
+                    self.stats.failed += 1;
+                    let rj = RejectFrame {
+                        code: reject::FAILED,
+                        request_id: pfx.request_id,
+                        message: format!("{e}"),
+                    };
+                    if self.send_to(conn_id, &wire::encode_error_frame(&rj)).is_err() {
+                        dead.push(conn_id);
+                    }
+                }
+            }
+        }
+        let mut served = 0usize;
+        if !payloads.is_empty() {
+            type Served = std::result::Result<(CloudReply, f64), String>;
+            let replies: Vec<Served> = match self.cloud.handle_batch(&payloads) {
+                Ok((replies, _)) => replies.into_iter().map(Ok).collect(),
+                Err(_) => {
+                    // One payload poisoned the batch. The cloud is
+                    // stateless and sampling is (seed, request, pos)-
+                    // keyed, so re-serving individually returns the
+                    // identical tokens; only server-side counters see
+                    // the retry.
+                    payloads
+                        .iter()
+                        .map(|p| self.cloud.handle(p).map_err(|e| format!("{e:#}")))
+                        .collect()
+                }
+            };
+            for ((conn_id, pfx), outcome) in owners.into_iter().zip(replies) {
+                let out = match outcome {
+                    Ok((reply, cloud_s)) => {
+                        let reply_frame = wire::encode_reply_frame(&reply, cloud_s);
+                        served += 1;
+                        self.stats.payloads_served += 1;
+                        if let Some(conn) = self.conns.get_mut(&conn_id) {
+                            if reply.token == 0 {
+                                conn.fence.remove(&pfx.request_id);
+                                self.live.remove(&pfx.request_id);
+                            } else {
+                                conn.fence.insert(pfx.request_id, (pfx.pos, reply_frame.clone()));
+                            }
+                        }
+                        reply_frame
+                    }
+                    Err(msg) => {
+                        self.stats.failed += 1;
+                        wire::encode_error_frame(&RejectFrame {
+                            code: reject::FAILED,
+                            request_id: pfx.request_id,
+                            message: msg,
+                        })
+                    }
+                };
+                if self.send_to(conn_id, &out).is_err() {
+                    dead.push(conn_id);
+                }
+            }
+        }
+        for id in dead {
+            self.close_connection(id);
+        }
+        Ok(served)
+    }
+
+    fn send_to(&mut self, conn_id: u64, frame: &[u8]) -> Result<()> {
+        let Some(conn) = self.conns.get_mut(&conn_id) else {
+            return Ok(()); // already swept
+        };
+        conn.transport.send(frame).map(|_| ())
+    }
+}

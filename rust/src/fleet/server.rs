@@ -1,0 +1,265 @@
+//! Fleet accept-and-read layer: one server process, thousands of live
+//! edge connections.
+//!
+//! The cloud runtime is single-threaded by design (`Rc`-based weights,
+//! deterministic sampling), so the fleet splits IO from compute:
+//!
+//! - **Socket connections** each get a blocking reader thread that moves
+//!   whole frames (opaque `Vec<u8>` — no decode on the IO thread) into
+//!   the server inbox, gated by a bounded [`Credits`] counter so a slow
+//!   scheduler exerts backpressure all the way to the socket instead of
+//!   buffering unboundedly. Replies go out on an OS-level clone of the
+//!   stream owned by the scheduler.
+//! - **Polled connections** (in-process transports: `LinkTransport`
+//!   halves, `Loopback`s, fault-wrapped sims) are swept non-blockingly by
+//!   the scheduler itself — this is how benches drive 10k simulated
+//!   devices from one thread.
+//!
+//! [`FleetServer::poll`] is the single-step event loop: drain the inbox,
+//! sweep polled connections, run one DRR batch round. `serve_listener`
+//! wraps it for the real `splitserve cloud` process with an accept
+//! thread feeding new sockets through a channel.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{Receiver, Sender, TryRecvError};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::CloudServer;
+use crate::wire::{FaultPlan, FaultyTransport, SocketTransport, Transport, WireTransport};
+
+use super::scheduler::{FleetConfig, FleetScheduler, FleetStats};
+
+/// Bounded permit counter gating a reader thread's inbox pushes
+/// (per-connection backpressure for threaded connections). `kill` wakes
+/// and permanently unblocks waiters so reader threads exit when their
+/// connection is swept.
+pub struct Credits {
+    cap: usize,
+    held: Mutex<usize>,
+    cv: Condvar,
+    dead: AtomicBool,
+}
+
+impl Credits {
+    pub fn new(cap: usize) -> Credits {
+        Credits {
+            cap: cap.max(1),
+            held: Mutex::new(0),
+            cv: Condvar::new(),
+            dead: AtomicBool::new(false),
+        }
+    }
+
+    /// Take one permit, blocking while the connection's queue is full.
+    /// Returns `false` once the connection is dead — the caller must
+    /// stop reading.
+    pub fn acquire(&self) -> bool {
+        let mut held = self.held.lock().expect("credits poisoned");
+        loop {
+            if self.dead.load(Ordering::Acquire) {
+                return false;
+            }
+            if *held < self.cap {
+                *held += 1;
+                return true;
+            }
+            let (guard, _) = self
+                .cv
+                .wait_timeout(held, Duration::from_millis(100))
+                .expect("credits poisoned");
+            held = guard;
+        }
+    }
+
+    /// Return one permit (frame dequeued, answered at intake, or dropped
+    /// with its connection).
+    pub fn release(&self) {
+        let mut held = self.held.lock().expect("credits poisoned");
+        *held = held.saturating_sub(1);
+        drop(held);
+        self.cv.notify_one();
+    }
+
+    /// Mark the connection dead and wake any blocked reader.
+    pub fn kill(&self) {
+        self.dead.store(true, Ordering::Release);
+        self.cv.notify_all();
+    }
+}
+
+enum InboxEvent {
+    /// A whole frame read from connection `id` (undecoded).
+    Frame(u64, Vec<u8>),
+    /// Connection `id` hit EOF or a read error — sweep it.
+    Closed(u64),
+}
+
+/// The fleet front-end: owns the inbox, hands connections to the
+/// scheduler, and steps the event loop.
+pub struct FleetServer {
+    scheduler: FleetScheduler,
+    inbox_rx: Receiver<InboxEvent>,
+    inbox_tx: Sender<InboxEvent>,
+    next_conn: u64,
+}
+
+impl FleetServer {
+    pub fn new(cloud: CloudServer, cfg: FleetConfig) -> FleetServer {
+        let (inbox_tx, inbox_rx) = std::sync::mpsc::channel();
+        FleetServer {
+            scheduler: FleetScheduler::new(cloud, cfg),
+            inbox_rx,
+            inbox_tx,
+            next_conn: 0,
+        }
+    }
+
+    pub fn scheduler(&self) -> &FleetScheduler {
+        &self.scheduler
+    }
+
+    pub fn stats(&self) -> FleetStats {
+        self.scheduler.stats
+    }
+
+    fn next_id(&mut self) -> u64 {
+        let id = self.next_conn;
+        self.next_conn += 1;
+        id
+    }
+
+    /// Register an in-process duplex transport (simulated link half,
+    /// loopback, or a fault-wrapped sim). The scheduler polls it — no
+    /// thread is spawned. Returns the connection id.
+    pub fn add_polled(&mut self, transport: WireTransport) -> u64 {
+        let id = self.next_id();
+        self.scheduler.register_polled(id, transport);
+        id
+    }
+
+    /// Register an accepted socket connection: spawn a blocking reader
+    /// thread over the read half, keep an OS-level clone as the
+    /// scheduler-owned write half. With `fault_seed`, the read half is
+    /// wrapped in a [`FaultyTransport`] whose plan derives from the seed
+    /// and connection id — cloud-side chaos without touching the edge.
+    /// (The write half stays clean: reply-side faults are indistinguishable
+    /// from downlink loss, which the edge's retry path already covers, and
+    /// the two halves live on different threads so they could not share
+    /// one plan's RNG anyway.)
+    pub fn add_socket(&mut self, socket: SocketTransport, fault_seed: Option<u64>) -> Result<u64> {
+        let id = self.next_id();
+        let write_half = WireTransport::Socket(
+            socket
+                .try_clone()
+                .context("cloning accepted socket for the write half")?,
+        );
+        let queue_depth = self.scheduler.config().queue_depth;
+        let credits = Arc::new(Credits::new(queue_depth));
+        self.scheduler
+            .register_threaded(id, write_half, Arc::clone(&credits));
+
+        let mut read_half: WireTransport = match fault_seed {
+            Some(seed) => WireTransport::Faulty(FaultyTransport::new(
+                WireTransport::Socket(socket),
+                FaultPlan::from_seed(seed ^ id.wrapping_mul(0x9E37_79B9_7F4A_7C15)),
+            )),
+            None => WireTransport::Socket(socket),
+        };
+        let tx = self.inbox_tx.clone();
+        std::thread::Builder::new()
+            .name(format!("fleet-read-{id}"))
+            .spawn(move || {
+                loop {
+                    match read_half.recv_eof() {
+                        Ok(Some((frame, _))) => {
+                            if !credits.acquire() {
+                                break; // connection swept while we waited
+                            }
+                            if tx.send(InboxEvent::Frame(id, frame)).is_err() {
+                                break; // server gone
+                            }
+                        }
+                        Ok(None) | Err(_) => {
+                            // EOF, timeout, or wire damage: the serial
+                            // serve_connection treats all of these as
+                            // end-of-connection; so does the fleet.
+                            let _ = tx.send(InboxEvent::Closed(id));
+                            break;
+                        }
+                    }
+                }
+            })
+            .context("spawning fleet reader thread")?;
+        Ok(id)
+    }
+
+    /// One event-loop step: drain the inbox (threaded connections), sweep
+    /// polled connections, then run one DRR batch round. Returns the
+    /// number of payloads served this step — callers use 0 to decide when
+    /// to idle-sleep.
+    pub fn poll(&mut self) -> Result<usize> {
+        loop {
+            match self.inbox_rx.try_recv() {
+                Ok(InboxEvent::Frame(id, frame)) => {
+                    if self.scheduler.on_frame(id, frame).is_err() {
+                        self.scheduler.close_connection(id);
+                    }
+                }
+                Ok(InboxEvent::Closed(id)) => self.scheduler.close_connection(id),
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => {
+                    unreachable!("server holds a sender clone")
+                }
+            }
+        }
+        self.scheduler.poll_connections();
+        self.scheduler.serve_round()
+    }
+
+    /// Explicitly tear down a connection (tests use this to simulate
+    /// crashes of polled connections).
+    pub fn close_connection(&mut self, id: u64) {
+        self.scheduler.close_connection(id);
+    }
+}
+
+/// Run the fleet against a bound listener until `stop` flips: an accept
+/// thread feeds new sockets through a channel while the calling thread —
+/// which owns the `Rc`-based cloud runtime — loops `poll`, sleeping
+/// briefly when there is nothing to serve.
+pub fn serve_listener(
+    listener: crate::wire::WireListener,
+    fleet: &mut FleetServer,
+    fault_seed: Option<u64>,
+    stop: &AtomicBool,
+) -> Result<()> {
+    let (conn_tx, conn_rx) = std::sync::mpsc::channel::<SocketTransport>();
+    std::thread::Builder::new()
+        .name("fleet-accept".into())
+        .spawn(move || loop {
+            match listener.accept() {
+                Ok(t) => {
+                    if conn_tx.send(t).is_err() {
+                        break;
+                    }
+                }
+                Err(_) => break,
+            }
+        })
+        .context("spawning fleet accept thread")?;
+
+    while !stop.load(Ordering::Relaxed) {
+        while let Ok(t) = conn_rx.try_recv() {
+            let id = fleet.add_socket(t, fault_seed)?;
+            eprintln!("[cloud] fleet connection {id} accepted");
+        }
+        let served = fleet.poll()?;
+        if served == 0 {
+            std::thread::sleep(Duration::from_micros(500));
+        }
+    }
+    Ok(())
+}

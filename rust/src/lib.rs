@@ -9,5 +9,6 @@ pub mod planner;
 pub mod runtime;
 pub mod coordinator;
 pub mod eval;
+pub mod fleet;
 pub mod trace;
 pub mod util;

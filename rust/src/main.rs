@@ -20,10 +20,11 @@ use splitserve::coordinator::{
     build_pipeline, build_serve_loop, DeploymentSpec, EdgeClient, Request, RetryPolicy,
     ServeSpec, TokenControl,
 };
+use splitserve::fleet::{serve_listener, FleetConfig, FleetServer};
 use splitserve::model::ModelConfig;
 use splitserve::planner::{plan, AnalyticAccuracyModel, PlanChoice, PlanInputs};
 use splitserve::runtime::Engine;
-use splitserve::trace::{generate_trace, WorkloadSpec};
+use splitserve::trace::{generate_trace, ArrivalPattern, WorkloadSpec};
 use splitserve::util::cli::Args;
 use splitserve::wire::{SocketTransport, WireListener, WireTransport};
 
@@ -39,9 +40,20 @@ USAGE: splitserve <subcommand> [flags]
   generate  --model sim7b --layers 8 --split 4 --prompt 5,6,7 --max-new 12
   serve     --model sim7b --layers 8 --devices 2 --requests 6 --max-batch 8
             [--adapt] [--scenario constant|step|drift|outage]
+            [--arrival poisson|flash-crowd|churn|diurnal [--period-s 60]]
             (--adapt turns on the online control plane; --scenario replays
-             a time-varying channel trace on every device link)
+             a time-varying channel trace on every device link; --arrival
+             picks the workload shape — diurnal is a sinusoidal day/night
+             load curve)
   cloud     --listen 127.0.0.1:7433 --model sim7b --layers 8 --split 4 [--once]
+            [--max-batch 8 --fleet-budget-mb 64 --fault-seed S]
+            (default is fleet mode: every connection served concurrently,
+             cross-connection decode batching, DRR fairness, aggregate-KV
+             admission (--fleet-budget-mb, typed ADMISSION rejects when
+             full); --once serves exactly one connection serially and
+             exits — the cross-process smoke path; --fault-seed wraps
+             every accepted connection's read side in seeded cloud-side
+             fault injection)
   edge      --connect 127.0.0.1:7433 --model sim7b --layers 8 --split 4 \\
             --prompt 5,6,7 --max-new 12 [--retry N --backoff-ms B]
             (addresses may be unix:/path/to.sock for unix domain sockets;
@@ -191,7 +203,20 @@ fn main() -> Result<()> {
                 spec.adapt = Some(AdaptPolicy::default());
             }
             let mut serve = build_serve_loop(engine, &spec)?;
-            let trace = generate_trace(&WorkloadSpec { n_requests, ..Default::default() });
+            let arrival = match args.flag("arrival") {
+                None | Some("poisson") => ArrivalPattern::Poisson,
+                Some("flash-crowd") => ArrivalPattern::FlashCrowd { lead_s: 2.0, window_s: 1.0 },
+                Some("churn") => ArrivalPattern::Churn { burst: 4, gap_s: 8.0 },
+                Some("diurnal") => ArrivalPattern::Diurnal {
+                    period_s: args.usize_or("period-s", 60) as f64,
+                    peak_rate: 2.0,
+                    trough_rate: 0.25,
+                },
+                Some(other) => anyhow::bail!(
+                    "unknown arrival '{other}' (try: poisson, flash-crowd, churn, diurnal)"
+                ),
+            };
+            let trace = generate_trace(&WorkloadSpec { n_requests, arrival, ..Default::default() });
             // Real end-to-end serving: every token below crossed the
             // simulated link as compressed bytes and was decoded by the
             // shared stateless cloud in a continuous-batching iteration.
@@ -240,33 +265,38 @@ fn main() -> Result<()> {
             let spec = DeploymentSpec::defaults(cfg, split);
             let cloud = spec.build_cloud_server(engine)?;
             let listener = WireListener::bind(listen)?;
-            println!("cloud: serving split l={split} back segment on {listen}");
-            loop {
-                // A failed accept (transient resource exhaustion, a peer
-                // resetting mid-handshake) must not take the server down
-                // with every healthy session's future connections.
-                let mut conn = match listener.accept() {
-                    Ok(conn) => conn,
-                    Err(e) if args.has("once") => return Err(e),
-                    Err(e) => {
-                        eprintln!("cloud: accept failed (serving on): {e:#}");
-                        continue;
-                    }
+            if args.has("once") {
+                // One connection, serial serve, honest exit code (the
+                // cross-process smoke tests check it).
+                println!("cloud: serving split l={split} back segment on {listen} (--once)");
+                let mut conn = listener.accept()?;
+                let n = cloud.serve_connection(&mut conn)?;
+                println!("cloud: served {n} payloads, exiting (--once)");
+            } else {
+                // Fleet mode: accept thread + one scheduler thread serving
+                // every connection concurrently with cross-connection
+                // batching, DRR fairness, and aggregate-KV admission.
+                let mut fleet_cfg = FleetConfig {
+                    max_batch: args.usize_or("max-batch", FleetConfig::default().max_batch),
+                    ..FleetConfig::default()
                 };
-                let served = cloud.serve_connection(&mut conn);
-                if args.has("once") {
-                    // one connection, honest exit code (smoke tests check it)
-                    let n = served?;
-                    println!("cloud: served {n} payloads, exiting (--once)");
-                    break;
+                if let Some(mb) = args.flag("fleet-budget-mb") {
+                    fleet_cfg.kv_budget_bytes = Some(mb.parse::<u64>()? * 1024 * 1024);
                 }
-                match served {
-                    Ok(n) => println!(
-                        "cloud: connection closed after {n} payloads ({} tokens served total)",
-                        cloud.tokens_generated()
-                    ),
-                    Err(e) => eprintln!("cloud: connection error: {e:#}"),
-                }
+                let fault_seed = match args.flag("fault-seed") {
+                    Some(s) => Some(s.parse::<u64>()?),
+                    None => None,
+                };
+                let mut fleet = FleetServer::new(cloud, fleet_cfg);
+                println!(
+                    "cloud: fleet-serving split l={split} back segment on {listen} \
+                     (max batch {}, budget {:?} B{})",
+                    fleet_cfg.max_batch,
+                    fleet_cfg.kv_budget_bytes,
+                    if fault_seed.is_some() { ", fault injection ON" } else { "" }
+                );
+                let stop = std::sync::atomic::AtomicBool::new(false); // runs until killed
+                serve_listener(listener, &mut fleet, fault_seed, &stop)?;
             }
         }
         Some("edge") => {

@@ -19,6 +19,14 @@ pub enum ArrivalPattern {
     /// Sessions joining and leaving in waves: Poisson bursts of
     /// `burst` requests separated by `gap_s` seconds of silence.
     Churn { burst: usize, gap_s: f64 },
+    /// Diurnal load curve: an inhomogeneous Poisson process whose rate
+    /// swings sinusoidally between `trough_rate` and `peak_rate` over
+    /// `period_s` (t=0 is the trough; the peak sits at `period_s / 2`).
+    /// Sampled by thinning, so it degrades exactly to `Poisson` when
+    /// trough == peak. This is the fleet's day/night shape: a server
+    /// provisioned for the trough must admit/reject its way through the
+    /// peak instead of falling over.
+    Diurnal { period_s: f64, peak_rate: f64, trough_rate: f64 },
 }
 
 #[derive(Clone, Debug)]
@@ -76,6 +84,25 @@ pub fn generate_trace(spec: &WorkloadSpec) -> Vec<Request> {
                 ArrivalPattern::Churn { burst, gap_s } => {
                     let wave = i / burst.max(1);
                     wave as f64 * gap_s.max(0.0) + rng.exponential(spec.arrival_rate)
+                }
+                ArrivalPattern::Diurnal { period_s, peak_rate, trough_rate } => {
+                    // Thinning (Lewis–Shedler): draw homogeneous
+                    // candidates at the envelope rate, accept each with
+                    // probability rate(t)/peak.
+                    assert!(
+                        period_s > 0.0
+                            && peak_rate > 0.0
+                            && (0.0..=peak_rate).contains(&trough_rate),
+                        "diurnal needs period_s > 0 and 0 <= trough_rate <= peak_rate"
+                    );
+                    loop {
+                        t += rng.exponential(peak_rate);
+                        let phase = (std::f64::consts::TAU * t / period_s).cos();
+                        let rate = trough_rate + (peak_rate - trough_rate) * 0.5 * (1.0 - phase);
+                        if rng.f64() < rate / peak_rate {
+                            break t;
+                        }
+                    }
                 }
             };
             let plen = rng.range(spec.prompt_len_min as i64, spec.prompt_len_max as i64) as usize;
@@ -153,6 +180,63 @@ mod tests {
         for (i, r) in a.iter().enumerate() {
             assert_eq!(wave(r.arrival_s), i / 10, "request {i} in the wrong wave");
         }
+    }
+
+    #[test]
+    fn diurnal_deterministic_and_denser_at_the_peak() {
+        let spec = WorkloadSpec {
+            n_requests: 600,
+            arrival: ArrivalPattern::Diurnal {
+                period_s: 100.0,
+                peak_rate: 8.0,
+                trough_rate: 0.5,
+            },
+            ..Default::default()
+        };
+        let a = generate_trace(&spec);
+        let b = generate_trace(&spec);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.arrival_s, y.arrival_s);
+            assert_eq!(x.prompt, y.prompt);
+        }
+        for w in a.windows(2) {
+            assert!(w[0].arrival_s <= w[1].arrival_s, "sorted contract");
+        }
+        // Fold arrivals onto one period: the peak half-cycle (quarter to
+        // three-quarters, centered on period/2) must be much denser than
+        // the trough half-cycle.
+        let (mut peak, mut trough) = (0usize, 0usize);
+        for r in &a {
+            let ph = (r.arrival_s / 100.0).fract();
+            if (0.25..0.75).contains(&ph) {
+                peak += 1;
+            } else {
+                trough += 1;
+            }
+        }
+        assert!(
+            peak > 2 * trough,
+            "diurnal density: peak half {peak} vs trough half {trough}"
+        );
+    }
+
+    #[test]
+    fn diurnal_with_flat_rates_degrades_to_poisson_density() {
+        // trough == peak: thinning accepts every candidate, so the trace
+        // is a homogeneous Poisson process at that rate.
+        let a = generate_trace(&WorkloadSpec {
+            n_requests: 2000,
+            arrival: ArrivalPattern::Diurnal {
+                period_s: 50.0,
+                peak_rate: 2.0,
+                trough_rate: 2.0,
+            },
+            ..Default::default()
+        });
+        let span = a.last().unwrap().arrival_s;
+        let rate = 2000.0 / span;
+        assert!((rate - 2.0).abs() < 0.25, "rate={rate}");
     }
 
     #[test]

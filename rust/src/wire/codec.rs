@@ -657,3 +657,41 @@ pub fn decode_error_frame(bytes: &[u8]) -> Result<RejectFrame, WireError> {
     r.done()?;
     Ok(e)
 }
+
+/// The peekable fixed prefix of an encoded payload frame's body —
+/// everything the fleet scheduler needs to route, replay-fence and admit
+/// a payload WITHOUT decompressing its tensors (the tensors are only
+/// decoded when the payload is actually served in a batch).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PayloadPrefix {
+    pub request_id: u64,
+    pub pos: u64,
+    pub is_prefill: bool,
+    pub has_kv: bool,
+}
+
+/// Peek the `[request_id u64][pos u64][flags u8]` prefix of an encoded
+/// *payload frame*. The frame envelope (magic, version, kind, length,
+/// CRC-32) is fully validated — a corrupted frame must never be routed by
+/// garbage — but the tensor payload behind the prefix is not decoded.
+pub fn peek_payload_prefix(frame_bytes: &[u8]) -> Result<PayloadPrefix, WireError> {
+    let (kind, body) = frame::decode_frame(frame_bytes)?;
+    if kind != FrameKind::Payload {
+        return Err(WireError::WrongKind { want: FrameKind::Payload, got: kind });
+    }
+    if body.len() < 17 {
+        return Err(WireError::Truncated { need: 17, have: body.len() });
+    }
+    let request_id = u64::from_le_bytes(body[0..8].try_into().unwrap());
+    let pos = u64::from_le_bytes(body[8..16].try_into().unwrap());
+    let flags = body[16];
+    if flags & !(FLAG_PREFILL | FLAG_KV | FLAG_TOPK) != 0 {
+        return Err(WireError::Malformed("unknown payload flags".into()));
+    }
+    Ok(PayloadPrefix {
+        request_id,
+        pos,
+        is_prefill: flags & FLAG_PREFILL != 0,
+        has_kv: flags & FLAG_KV != 0,
+    })
+}

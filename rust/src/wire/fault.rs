@@ -185,6 +185,31 @@ impl FaultyTransport {
         self.inner.drain()
     }
 
+    /// Non-blocking receive under fault injection. A stall roll delays
+    /// the observation (`Empty`) without losing the frame; the disconnect
+    /// budget is only charged when a frame is actually taken (idle polls
+    /// must not kill the transport), and a frame consumed on the dying op
+    /// is torn away — exactly a mid-delivery disconnect.
+    pub fn poll_recv(&mut self) -> Result<super::transport::PollRecv> {
+        use super::transport::PollRecv;
+        if self.dead {
+            return Ok(PollRecv::Closed);
+        }
+        if self.roll(self.plan.stall_rate) {
+            self.log.stalled += 1;
+            return Ok(PollRecv::Empty);
+        }
+        match self.inner.poll_recv()? {
+            PollRecv::Frame(f, o) => {
+                if self.count_op() {
+                    return Ok(PollRecv::Closed);
+                }
+                Ok(PollRecv::Frame(f, o))
+            }
+            other => Ok(other),
+        }
+    }
+
     fn roll(&mut self, rate: f64) -> bool {
         rate > 0.0 && self.rng.f64() < rate
     }

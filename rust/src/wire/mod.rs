@@ -21,11 +21,11 @@ pub use codec::{
     decode_error_frame, decode_payload_frame, decode_reconfig_frame, decode_reply_frame,
     decode_resume_ack_frame, decode_resume_frame, encode_error_frame, encode_payload_frame,
     encode_reconfig_frame, encode_reply_frame, encode_resume_ack_frame, encode_resume_frame,
-    PAYLOAD_OVERHEAD, RECONFIG_OVERHEAD, REPLY_OVERHEAD,
+    peek_payload_prefix, PayloadPrefix, PAYLOAD_OVERHEAD, RECONFIG_OVERHEAD, REPLY_OVERHEAD,
 };
 pub use fault::{FaultPlan, FaultyTransport};
 pub use frame::{crc32, decode_frame, encode_frame, FrameKind, WireError, FRAME_OVERHEAD};
 pub use transport::{
-    CloudPort, EdgePort, LinkTransport, Loopback, SocketTransport, Transport, WireListener,
-    WireTransport,
+    CloudPort, EdgePort, LinkTransport, Loopback, PollRecv, SocketTransport, Transport,
+    WireListener, WireTransport,
 };

@@ -45,6 +45,19 @@ fn lossless(bytes: u64) -> TransferOutcome {
     TransferOutcome { latency_s: 0.0, attempts: 1, outage: false, payload_bytes: bytes }
 }
 
+/// Result of a non-blocking receive sweep ([`WireTransport::poll_recv`]):
+/// the fleet scheduler polls thousands of in-process connections from one
+/// thread, so "no frame yet" must be distinguishable from "peer gone".
+#[derive(Debug)]
+pub enum PollRecv {
+    /// One whole frame was waiting, with its transfer accounting.
+    Frame(Vec<u8>, TransferOutcome),
+    /// Nothing queued right now; poll again later.
+    Empty,
+    /// The peer hung up (clean close or transport death).
+    Closed,
+}
+
 /// Lossless, zero-latency in-memory transport half. [`Loopback::pair`]
 /// yields two connected halves; frames sent on one side arrive on the
 /// other in order. Channel-backed, so the two halves may live on
@@ -68,6 +81,19 @@ impl Loopback {
     /// waiting. Used by queue draining and the fault-injection tests.
     pub fn try_recv(&mut self) -> Option<Vec<u8>> {
         self.rx.try_recv().ok()
+    }
+
+    /// Non-blocking receive that distinguishes an empty queue from a
+    /// closed peer (the fleet scheduler's connection sweep).
+    pub fn poll_recv(&mut self) -> PollRecv {
+        match self.rx.try_recv() {
+            Ok(f) => {
+                let o = lossless(f.len() as u64);
+                PollRecv::Frame(f, o)
+            }
+            Err(std::sync::mpsc::TryRecvError::Empty) => PollRecv::Empty,
+            Err(std::sync::mpsc::TryRecvError::Disconnected) => PollRecv::Closed,
+        }
     }
 
     /// Discard every frame already queued; returns how many were
@@ -131,6 +157,19 @@ impl LinkTransport {
     /// charged when sent.
     pub fn drain(&mut self) -> usize {
         self.io.drain()
+    }
+
+    /// Non-blocking receive; a frame that arrives is charged through the
+    /// link like any other transfer (the charge rides the frame, not the
+    /// empty polls).
+    pub fn poll_recv(&mut self) -> PollRecv {
+        match self.io.poll_recv() {
+            PollRecv::Frame(f, _) => {
+                let out = self.link.transfer(f.len() as u64);
+                PollRecv::Frame(f, out)
+            }
+            other => other,
+        }
     }
 }
 
@@ -241,6 +280,19 @@ impl SocketTransport {
             }
         }
         Ok(())
+    }
+
+    /// Clone the underlying OS socket so reads and writes can live on
+    /// different threads (the fleet server's reader-thread / scheduler
+    /// split: one half blocks in `recv_eof`, the other writes replies).
+    /// Both halves refer to the same connection; closing either end of
+    /// the peer tears down both.
+    pub fn try_clone(&self) -> Result<SocketTransport> {
+        let stream = match &self.stream {
+            SocketStream::Tcp(s) => SocketStream::Tcp(s.try_clone()?),
+            SocketStream::Unix(s) => SocketStream::Unix(s.try_clone()?),
+        };
+        Ok(SocketTransport { stream })
     }
 
     /// Connect with retries. Only errors that mean "the peer is still
@@ -405,6 +457,21 @@ impl WireTransport {
             WireTransport::Faulty(t) => t.drain(),
         }
     }
+
+    /// Non-blocking receive for the fleet scheduler's single-thread sweep
+    /// over in-process connections. Sockets have no queue to poll —
+    /// they are served by a blocking reader thread instead — so polling
+    /// one is a driver bug and errors loudly.
+    pub fn poll_recv(&mut self) -> Result<PollRecv> {
+        match self {
+            WireTransport::Sim(t) => Ok(t.poll_recv()),
+            WireTransport::Loopback(t) => Ok(t.poll_recv()),
+            WireTransport::Socket(_) => {
+                anyhow::bail!("socket transports are read by a blocking reader thread, not polled")
+            }
+            WireTransport::Faulty(t) => t.poll_recv(),
+        }
+    }
 }
 
 impl Transport for WireTransport {
@@ -477,6 +544,25 @@ impl EdgePort {
         }
         let (reply, server_s) = codec::decode_reply_frame(&frame_bytes)?;
         Ok((reply, server_s, down))
+    }
+
+    /// Non-blocking counterpart of [`recv_reply`](EdgePort::recv_reply)
+    /// for interleaved drivers (the fleet bench runs hundreds of sessions
+    /// on one thread): `Ok(None)` when no frame is queued yet, a typed
+    /// [`WireError::Rejected`] for an in-band `Error` frame, and a closed
+    /// peer surfaces as an error (the driver's reconnect path).
+    pub fn try_recv_reply(&mut self) -> Result<Option<(CloudReply, f64, TransferOutcome)>> {
+        match self.transport.poll_recv()? {
+            PollRecv::Empty => Ok(None),
+            PollRecv::Closed => anyhow::bail!("edge port: peer closed"),
+            PollRecv::Frame(frame_bytes, down) => {
+                if let Some(rej) = in_band_rejection(&frame_bytes) {
+                    return Err(rej.into());
+                }
+                let (reply, server_s) = codec::decode_reply_frame(&frame_bytes)?;
+                Ok(Some((reply, server_s, down)))
+            }
+        }
     }
 
     /// Encode, frame and transmit one session-resumption announcement.

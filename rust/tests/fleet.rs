@@ -1,0 +1,492 @@
+//! Integration tests for the fleet subsystem: one cloud process, many
+//! concurrent edge connections.
+//!
+//! The load-bearing guarantee is the same as the in-process serve loop's,
+//! now across connections: fleet scheduling (cross-connection batching,
+//! DRR interleaving, admission) changes WHEN tokens are produced, never
+//! WHICH tokens — every session's stream must be bit-identical to the
+//! same request served solo through `SplitPipeline::generate`.
+
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use splitserve::coordinator::{
+    build_pipeline, protocol::reject, DeploymentSpec, Request, Session, SessionAction,
+};
+use splitserve::fleet::{FleetConfig, FleetServer};
+use splitserve::model::ModelConfig;
+use splitserve::runtime::Engine;
+use splitserve::wire::{
+    self, EdgePort, FaultPlan, FaultyTransport, Loopback, Transport, WireError, WireTransport,
+};
+
+fn small_cfg(n_layers: usize) -> ModelConfig {
+    let mut cfg = ModelConfig::sim7b();
+    cfg.n_layers = n_layers;
+    cfg
+}
+
+fn engine() -> Rc<Engine> {
+    Rc::new(Engine::load("artifacts", &ModelConfig::sim7b()).expect("run `make artifacts`"))
+}
+
+/// One edge session riding its own fleet connection.
+struct Tenant {
+    session: Session,
+    port: EdgePort,
+    conn_id: u64,
+    /// Uplink outcome of the in-flight transmission (fed to `on_reply`).
+    up: Option<splitserve::channel::TransferOutcome>,
+}
+
+/// Open a loopback connection to the fleet and wrap the edge half in a
+/// typed port.
+fn dial(fleet: &mut FleetServer) -> (EdgePort, u64) {
+    let (edge_half, cloud_half) = Loopback::pair();
+    let conn_id = fleet.add_polled(WireTransport::Loopback(cloud_half));
+    (EdgePort::new(WireTransport::Loopback(edge_half)), conn_id)
+}
+
+/// Drive every tenant to completion against the fleet, interleaved:
+/// each round polls every session, ships what they produce, steps the
+/// fleet once, then absorbs whatever replies came back. Panics on any
+/// edge-side error (admission tests drive their tenants by hand).
+fn drive_all(
+    fleet: &mut FleetServer,
+    edge: &splitserve::coordinator::EdgeDevice,
+    tenants: &mut [Tenant],
+) {
+    let mut guard = 0usize;
+    while tenants.iter().any(|t| !t.session.is_terminal()) {
+        guard += 1;
+        assert!(guard < 100_000, "fleet drive did not converge");
+        for t in tenants.iter_mut() {
+            if t.session.is_terminal() || t.up.is_some() {
+                continue;
+            }
+            if let SessionAction::Transmit(p) = t.session.poll(edge).unwrap() {
+                t.up = Some(t.port.send_payload(&p).unwrap());
+            }
+        }
+        fleet.poll().unwrap();
+        for t in tenants.iter_mut() {
+            if t.session.is_terminal() {
+                continue;
+            }
+            if let Some((reply, cloud_s, down)) = t.port.try_recv_reply().unwrap() {
+                let up = t.up.take().expect("reply without an in-flight payload");
+                t.session.on_reply(edge, &reply, cloud_s, up, down).unwrap();
+            }
+        }
+    }
+}
+
+/// ACCEPTANCE: sessions multiplexed across fleet connections produce
+/// token streams bit-identical to the same requests served solo, while
+/// the scheduler actually forms cross-connection batches.
+#[test]
+fn fleet_streams_bit_identical_to_solo() {
+    let eng = engine();
+    let spec = DeploymentSpec::defaults(small_cfg(4), 2);
+    let cloud = spec.build_cloud_server(eng.clone()).unwrap();
+    let edge = spec.build_edge_device(eng.clone()).unwrap();
+    let mut fleet = FleetServer::new(cloud, FleetConfig::default());
+
+    let requests: Vec<Request> = vec![
+        Request::new(1, vec![3, 141, 59, 26], 8),
+        Request::new(2, vec![10, 20, 30], 8),
+        Request::new(3, vec![7, 90, 200, 11, 5], 6),
+        Request::new(4, vec![100, 101], 7),
+        Request::new(5, vec![250, 1, 33, 47], 5),
+        Request::new(6, vec![8, 8, 8], 6),
+        Request::new(7, vec![19, 77, 301, 2], 8),
+        Request::new(8, vec![64, 128], 6),
+    ];
+    let mut tenants: Vec<Tenant> = requests
+        .iter()
+        .map(|r| {
+            let (port, conn_id) = dial(&mut fleet);
+            Tenant {
+                session: Session::for_edge(r.clone(), &edge, spec.edge_controller()),
+                port,
+                conn_id,
+                up: None,
+            }
+        })
+        .collect();
+
+    drive_all(&mut fleet, &edge, &mut tenants);
+
+    // The fleet really batched across connections.
+    let stats = fleet.stats();
+    assert!(stats.peak_batch >= 2, "no cross-connection batch formed: {stats:?}");
+    assert!(stats.payloads_served > 0);
+
+    // Oracle: each request alone through the blocking single-session
+    // driver over a fresh deployment (same seeds; the cloud is stateless,
+    // so fleet scheduling must not change a single token).
+    let mut streams: HashMap<u64, Vec<u32>> = HashMap::new();
+    for t in &tenants {
+        streams.insert(t.session.request_id(), t.session.tokens().to_vec());
+    }
+    for req in &requests {
+        let dspec = DeploymentSpec::defaults(small_cfg(4), 2);
+        let mut pipe = build_pipeline(eng.clone(), &dspec).unwrap();
+        let want = pipe.generate(req).unwrap();
+        assert_eq!(
+            streams[&req.id], want.tokens,
+            "req {} tokens diverged under fleet scheduling",
+            req.id
+        );
+    }
+
+    // Every session reached EOS or budget: all admission charges released
+    // even though the connections are still up.
+    assert_eq!(fleet.scheduler().live_sessions(), 0, "admission charges leaked");
+    assert_eq!(fleet.scheduler().fence_entries(), 0, "EOS left fences behind");
+    assert_eq!(fleet.scheduler().connections(), requests.len());
+}
+
+/// The aggregate-KV admission gate (Eq. 8c across tenants): with budget
+/// for exactly two live sessions, the third prefill gets a typed
+/// ADMISSION rejection — and once a session finishes, its charge is
+/// released and a new tenant admits cleanly on the same connection.
+#[test]
+fn admission_rejects_over_budget_and_releases_on_eos() {
+    let eng = engine();
+    let spec = DeploymentSpec::defaults(small_cfg(4), 2);
+    let cloud = spec.build_cloud_server(eng.clone()).unwrap();
+    let edge = spec.build_edge_device(eng.clone()).unwrap();
+    // Probe the per-session cost, then rebuild with budget for two.
+    let probe = FleetServer::new(cloud, FleetConfig::default());
+    let per_session = probe.scheduler().session_kv_bytes();
+    drop(probe);
+    let cloud = spec.build_cloud_server(eng.clone()).unwrap();
+    let cfg = FleetConfig { kv_budget_bytes: Some(2 * per_session), ..FleetConfig::default() };
+    let mut fleet = FleetServer::new(cloud, cfg);
+
+    let reqs = [
+        Request::new(1, vec![3, 141, 59], 4),
+        Request::new(2, vec![10, 20, 30], 4),
+        Request::new(3, vec![7, 90, 200], 4),
+    ];
+    let mut tenants: Vec<Tenant> = reqs
+        .iter()
+        .map(|r| {
+            let (port, conn_id) = dial(&mut fleet);
+            Tenant {
+                session: Session::for_edge(r.clone(), &edge, spec.edge_controller()),
+                port,
+                conn_id,
+                up: None,
+            }
+        })
+        .collect();
+
+    // All three transmit their prefill; only two fit the budget.
+    for t in tenants.iter_mut() {
+        if let SessionAction::Transmit(p) = t.session.poll(&edge).unwrap() {
+            t.up = Some(t.port.send_payload(&p).unwrap());
+        }
+    }
+    fleet.poll().unwrap();
+    let err = tenants[2]
+        .port
+        .try_recv_reply()
+        .expect_err("third session must be refused admission");
+    match err.downcast_ref::<WireError>() {
+        Some(WireError::Rejected { code, request_id, .. }) => {
+            assert_eq!(*code, reject::ADMISSION, "wrong rejection code");
+            assert_eq!(*request_id, 3);
+        }
+        other => panic!("expected a typed ADMISSION rejection, got {other:?}"),
+    }
+    assert_eq!(fleet.stats().admission_rejected, 1);
+    assert_eq!(fleet.scheduler().live_sessions(), 2);
+    // The refused tenant's connection is still up (typed in-band error,
+    // not a teardown).
+    assert_eq!(fleet.scheduler().connections(), 3);
+
+    // Finish the two admitted sessions.
+    let mut admitted: Vec<&mut Tenant> = tenants.iter_mut().take(2).collect();
+    let mut guard = 0;
+    while admitted.iter().any(|t| !t.session.is_terminal()) {
+        guard += 1;
+        assert!(guard < 10_000, "admitted sessions did not converge");
+        for t in admitted.iter_mut() {
+            if t.session.is_terminal() {
+                continue;
+            }
+            if t.up.is_none() {
+                if let SessionAction::Transmit(p) = t.session.poll(&edge).unwrap() {
+                    t.up = Some(t.port.send_payload(&p).unwrap());
+                }
+            }
+        }
+        fleet.poll().unwrap();
+        for t in admitted.iter_mut() {
+            if let Some((reply, cloud_s, down)) = t.port.try_recv_reply().unwrap() {
+                let up = t.up.take().unwrap();
+                t.session.on_reply(&edge, &reply, cloud_s, up, down).unwrap();
+            }
+        }
+    }
+    assert_eq!(fleet.scheduler().live_sessions(), 0, "EOS must release the charge");
+
+    // A fresh session on the previously-refused connection now admits.
+    let req = Request::new(9, vec![5, 6, 7], 3);
+    let mut late = Tenant {
+        session: Session::for_edge(req, &edge, spec.edge_controller()),
+        port: std::mem::replace(
+            &mut tenants[2].port,
+            EdgePort::new(WireTransport::Loopback(Loopback::pair().0)),
+        ),
+        conn_id: tenants[2].conn_id,
+        up: None,
+    };
+    drive_all(&mut fleet, &edge, std::slice::from_mut(&mut late));
+    assert!(!late.session.tokens().is_empty(), "late session served no tokens");
+    assert_eq!(fleet.stats().admission_rejected, 1, "late session must not be refused");
+}
+
+/// Deficit round-robin keeps a light tenant's latency bounded while a
+/// heavy connection floods the scheduler: with batch width 2 and six
+/// competing sessions on the heavy side, the light session's reply still
+/// arrives within two fleet steps of its transmission.
+#[test]
+fn drr_bounds_light_tenant_wait_under_flood() {
+    let eng = engine();
+    let spec = DeploymentSpec::defaults(small_cfg(4), 2);
+    let cloud = spec.build_cloud_server(eng.clone()).unwrap();
+    let edge = spec.build_edge_device(eng.clone()).unwrap();
+    let cfg = FleetConfig { max_batch: 2, queue_depth: 8, ..FleetConfig::default() };
+    let mut fleet = FleetServer::new(cloud, cfg);
+
+    // Heavy: six sessions multiplexed on ONE connection.
+    let (mut heavy_port, _) = dial(&mut fleet);
+    let mut heavy: Vec<(Session, Option<splitserve::channel::TransferOutcome>)> = (0..6)
+        .map(|i| {
+            let req = Request::new(10 + i, vec![3 + i as u32, 50, 9], 6);
+            (Session::for_edge(req, &edge, spec.edge_controller()), None)
+        })
+        .collect();
+    // Light: one session on its own connection.
+    let (mut light_port, _) = dial(&mut fleet);
+    let mut light =
+        Session::for_edge(Request::new(99, vec![40, 41], 6), &edge, spec.edge_controller());
+    let mut light_up = None;
+    let mut worst_wait = 0usize;
+    let mut wait = 0usize;
+
+    let mut guard = 0;
+    while !light.is_terminal() {
+        guard += 1;
+        assert!(guard < 10_000, "light session did not converge");
+        for (s, up) in heavy.iter_mut() {
+            if s.is_terminal() || up.is_some() {
+                continue;
+            }
+            if let SessionAction::Transmit(p) = s.poll(&edge).unwrap() {
+                *up = Some(heavy_port.send_payload(&p).unwrap());
+            }
+        }
+        if light_up.is_none() {
+            if let SessionAction::Transmit(p) = light.poll(&edge).unwrap() {
+                light_up = Some(light_port.send_payload(&p).unwrap());
+                wait = 0;
+            }
+        }
+        fleet.poll().unwrap();
+        if light_up.is_some() {
+            match light_port.try_recv_reply().unwrap() {
+                Some((reply, cloud_s, down)) => {
+                    let up = light_up.take().unwrap();
+                    light.on_reply(&edge, &reply, cloud_s, up, down).unwrap();
+                    worst_wait = worst_wait.max(wait);
+                }
+                None => wait += 1,
+            }
+        }
+        // Absorb heavy replies (all multiplexed on one port, matched by
+        // request id).
+        while let Some((reply, cloud_s, down)) = heavy_port.try_recv_reply().unwrap() {
+            let (s, up) = heavy
+                .iter_mut()
+                .find(|(s, _)| s.request_id() == reply.request_id)
+                .expect("reply for a known heavy session");
+            let up = up.take().expect("heavy reply without in-flight payload");
+            s.on_reply(&edge, &reply, cloud_s, up, down).unwrap();
+        }
+    }
+    assert!(
+        worst_wait <= 2,
+        "DRR starved the light tenant: waited {worst_wait} fleet steps for a reply"
+    );
+}
+
+/// Connection-state hygiene: a thousand connect → announce → transmit →
+/// crash cycles leave ZERO per-connection state on the cloud — control
+/// entries, replay fences, admission charges, pending frames, and the
+/// connection table all return to baseline after every sweep.
+#[test]
+fn thousand_connect_crash_cycles_leave_no_state() {
+    let eng = engine();
+    let spec = DeploymentSpec::defaults(small_cfg(2), 1);
+    let cloud = spec.build_cloud_server(eng.clone()).unwrap();
+    let edge = spec.build_edge_device(eng).unwrap();
+    let mut fleet = FleetServer::new(cloud, FleetConfig::default());
+
+    // One real edge prefill, re-identified per cycle: the wire sees a
+    // distinct request id every time, the test avoids 1000 edge-side
+    // prefill computations.
+    let (proto_payload, _state, _s) = edge.prefill(0, &[5, 6, 7]).unwrap();
+
+    for cycle in 0..1000u64 {
+        let (mut port, conn_id) = dial(&mut fleet);
+        let rid = 1000 + cycle;
+        // Announce on the control plane...
+        // Q̄a = 16 keeps the announcement wider than whatever TAB-Q chose
+        // for the prototype payload — this test is about state hygiene,
+        // not control-plane enforcement.
+        let rc = splitserve::adapt::Reconfig {
+            request_id: rid,
+            epoch: 1,
+            qa_bits: 16,
+            tau: 4.0,
+            include_kv: true,
+            budget_cap: splitserve::adapt::Reconfig::NO_BUDGET_CAP,
+        };
+        port.transport.send(&wire::encode_reconfig_frame(&rc)).unwrap();
+        // ...and open a session with a prefill.
+        let mut p = proto_payload.clone();
+        p.request_id = rid;
+        port.transport.send(&wire::encode_payload_frame(&p)).unwrap();
+
+        if cycle % 2 == 0 {
+            // Serve the prefill (fence + live entry formed), then crash.
+            fleet.poll().unwrap();
+            assert_eq!(
+                fleet.stats().payloads_served,
+                cycle / 2 + 1,
+                "cycle {cycle}: prefill not served"
+            );
+            // Greedy decode of the fixed prompt is deterministic: unless
+            // its argmax happens to be the EOS id (which would release
+            // everything at serve time), the session is live and fenced
+            // with its reconfig announced.
+            if fleet.scheduler().live_sessions() == 1 {
+                assert_eq!(fleet.scheduler().fence_entries(), 1, "cycle {cycle}: no fence");
+                assert!(
+                    fleet.scheduler().cloud().control_entries() >= 1,
+                    "cycle {cycle}: reconfig not announced"
+                );
+            }
+        }
+        // Crash mid-stream (even cycles: after the first reply; odd
+        // cycles: with the payload still queued or in the transport).
+        fleet.close_connection(conn_id);
+        drop(port);
+
+        assert_eq!(fleet.scheduler().connections(), 0, "cycle {cycle}: conn leaked");
+        assert_eq!(fleet.scheduler().live_sessions(), 0, "cycle {cycle}: session leaked");
+        assert_eq!(fleet.scheduler().fence_entries(), 0, "cycle {cycle}: fence leaked");
+        assert_eq!(fleet.scheduler().pending_frames(), 0, "cycle {cycle}: frame leaked");
+        assert_eq!(
+            fleet.scheduler().cloud().control_entries(),
+            0,
+            "cycle {cycle}: control leaked"
+        );
+    }
+    assert_eq!(fleet.stats().closed_conns, 1000);
+}
+
+/// Satellite: cloud-side fault injection. A polled connection wrapped in
+/// a seeded disconnect plan dies mid-stream; the fleet sweeps it and
+/// every other tenant keeps streaming bit-identically.
+#[test]
+fn cloud_side_fault_injection_sweeps_the_victim_only() {
+    let eng = engine();
+    let spec = DeploymentSpec::defaults(small_cfg(4), 2);
+    let cloud = spec.build_cloud_server(eng.clone()).unwrap();
+    let edge = spec.build_edge_device(eng.clone()).unwrap();
+    let mut fleet = FleetServer::new(cloud, FleetConfig::default());
+
+    // Victim: cloud-side read path disconnects after 2 frames taken.
+    let (victim_edge_half, victim_cloud_half) = Loopback::pair();
+    let faulty = WireTransport::Faulty(FaultyTransport::new(
+        WireTransport::Loopback(victim_cloud_half),
+        FaultPlan::disconnect(41, 2),
+    ));
+    let victim_conn = fleet.add_polled(faulty);
+    let mut victim_port = EdgePort::new(WireTransport::Loopback(victim_edge_half));
+    let mut victim = Session::for_edge(
+        Request::new(66, vec![9, 9, 9], 8),
+        &edge,
+        spec.edge_controller(),
+    );
+    let mut victim_up = None;
+
+    // Healthy bystander on a clean connection.
+    let req = Request::new(2, vec![10, 20, 30], 8);
+    let (port, conn_id) = dial(&mut fleet);
+    let mut healthy = vec![Tenant {
+        session: Session::for_edge(req.clone(), &edge, spec.edge_controller()),
+        port,
+        conn_id,
+        up: None,
+    }];
+
+    let mut guard = 0;
+    while !healthy[0].session.is_terminal() {
+        guard += 1;
+        assert!(guard < 10_000, "bystander did not converge");
+        if !victim.is_terminal() && victim_up.is_none() {
+            if let Ok(SessionAction::Transmit(p)) = victim.poll(&edge) {
+                victim_up = Some(victim_port.send_payload(&p).unwrap());
+            }
+        }
+        for t in healthy.iter_mut() {
+            if t.session.is_terminal() || t.up.is_some() {
+                continue;
+            }
+            if let SessionAction::Transmit(p) = t.session.poll(&edge).unwrap() {
+                t.up = Some(t.port.send_payload(&p).unwrap());
+            }
+        }
+        fleet.poll().unwrap();
+        if victim_up.is_some() {
+            if let Ok(Some((reply, cloud_s, down))) = victim_port.try_recv_reply() {
+                let up = victim_up.take().unwrap();
+                let _ = victim.on_reply(&edge, &reply, cloud_s, up, down);
+            } else {
+                // Reply may never come — the cloud-side fault killed the
+                // connection. The session just stops making progress;
+                // this driver doesn't model edge-side resume.
+                victim_up = None;
+                victim.cancel();
+            }
+        }
+        for t in healthy.iter_mut() {
+            if t.session.is_terminal() {
+                continue;
+            }
+            if let Some((reply, cloud_s, down)) = t.port.try_recv_reply().unwrap() {
+                let up = t.up.take().unwrap();
+                t.session.on_reply(&edge, &reply, cloud_s, up, down).unwrap();
+            }
+        }
+    }
+
+    // The victim's connection was swept; the bystander's stream is
+    // bit-identical to its solo run.
+    assert!(fleet.stats().closed_conns >= 1, "fault never tore the victim down");
+    assert!(
+        fleet.scheduler().connections() >= 1,
+        "healthy connection must survive the victim's sweep"
+    );
+    let dspec = DeploymentSpec::defaults(small_cfg(4), 2);
+    let mut pipe = build_pipeline(eng, &dspec).unwrap();
+    let want = pipe.generate(&req).unwrap();
+    assert_eq!(healthy[0].session.tokens(), &want.tokens[..]);
+    let _ = victim_conn;
+}

@@ -39,7 +39,14 @@ BENCH_JSON="$ADAPT_JSON" cargo bench --bench adapt "$@"
 CHAOS_JSON="${BENCH_CHAOS_JSON:-BENCH_chaos.json}"
 BENCH_JSON="$CHAOS_JSON" cargo bench --bench chaos "$@"
 
-for f in "$BENCH_JSON" "$ENGINE_JSON" "$WIRE_JSON" "$ADAPT_JSON" "$CHAOS_JSON"; do
+# Fleet-scale serving: 1k heterogeneous simulated devices against ONE
+# cloud process (64 under BENCH_SMOKE; FLEET_DEVICES=N overrides, up to
+# 10k). The binary ASSERTS the bit-identity invariant — every session's
+# fleet-scheduled stream equals its solo run — a panic fails this script.
+FLEET_JSON="${BENCH_FLEET_JSON:-BENCH_fleet.json}"
+BENCH_JSON="$FLEET_JSON" cargo bench --bench fleet "$@"
+
+for f in "$BENCH_JSON" "$ENGINE_JSON" "$WIRE_JSON" "$ADAPT_JSON" "$CHAOS_JSON" "$FLEET_JSON"; do
     if [ -f "$f" ]; then
         echo "--- $f ---"
         cat "$f"
