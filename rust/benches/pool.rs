@@ -1,0 +1,315 @@
+//! Sharded cloud pool bench: migration pause, failover recovery, and
+//! throughput retention under a rolling worker-restart storm.
+//!
+//! Three phases over the same seeded workload:
+//!
+//! 1. **Baseline** — the pool serves every session undisturbed; its
+//!    aggregate tokens/s calibrates the other two phases.
+//! 2. **Migration** — a live session is migrated to the next worker
+//!    every few steps; each `migrate_session` call's wall-clock pause is
+//!    converted to "stall tokens" (pause × baseline tokens/s): how much
+//!    decode the pool could have produced while the handoff held the
+//!    source quiesced. Reported p50/p95.
+//! 3. **Restart storm** — workers are killed round-robin while the
+//!    workload streams; reported: time-to-first-recovered-token per
+//!    victim (kill → next absorbed token, p50/p95) and throughput
+//!    retention (storm tokens/s ÷ baseline tokens/s).
+//!
+//! Invariants ASSERTED in-binary, every phase: every session's stream is
+//! bit-identical to its solo `SplitPipeline::generate` run, no session
+//! is rejected, and after closing every edge the pool holds zero
+//! admission charges, replay fences, placements or replay buffers.
+//!
+//! Emits `BENCH_pool.json` (override with `BENCH_JSON`); `BENCH_SMOKE=1`
+//! runs the reduced CI configuration. `POOL_SESSIONS=N` overrides the
+//! session count.
+
+use std::rc::Rc;
+use std::time::Instant;
+
+use splitserve::channel::TransferOutcome;
+use splitserve::coordinator::{
+    build_pipeline, DeploymentSpec, EdgeDevice, Request, Session, SessionAction,
+};
+use splitserve::model::ModelConfig;
+use splitserve::pool::{CloudPool, PoolConfig, PoolStats};
+use splitserve::runtime::Engine;
+use splitserve::util::bench::JsonReport;
+use splitserve::wire::{EdgePort, Loopback, WireTransport};
+
+fn small_cfg(n_layers: usize) -> ModelConfig {
+    let mut cfg = ModelConfig::sim7b();
+    cfg.n_layers = n_layers;
+    cfg
+}
+
+fn engine() -> Rc<Engine> {
+    Rc::new(Engine::load("artifacts", &ModelConfig::sim7b()).expect("run `make artifacts`"))
+}
+
+fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() - 1) as f64 * p).round() as usize;
+    sorted[idx]
+}
+
+struct Tenant {
+    session: Session,
+    port: EdgePort,
+    edge_id: u64,
+    up: Option<TransferOutcome>,
+    /// Set at the instant this session's worker was killed; cleared (and
+    /// sampled) when the next token lands.
+    killed_at: Option<Instant>,
+}
+
+enum Disturbance {
+    None,
+    /// Every `every` steps, migrate one live session to the next worker.
+    Migrate { every: u64 },
+    /// Every `every` steps, kill the next worker round-robin, up to
+    /// `max_kills` total.
+    Storm { every: u64, max_kills: u64 },
+}
+
+struct Phase {
+    wall_s: f64,
+    tokens: u64,
+    /// Wall seconds each `migrate_session` call paused the pool.
+    migrate_pause_s: Vec<f64>,
+    /// Kill → next absorbed token, per victim session per kill, seconds.
+    ttfrt_s: Vec<f64>,
+    stats: PoolStats,
+}
+
+fn run_phase(
+    eng: &Rc<Engine>,
+    spec: &DeploymentSpec,
+    edge: &EdgeDevice,
+    reqs: &[Request],
+    workers: usize,
+    disturbance: Disturbance,
+) -> anyhow::Result<Phase> {
+    let fspec = spec.clone();
+    let feng = eng.clone();
+    let mut pool = CloudPool::new(
+        move || fspec.build_cloud_server(feng.clone()),
+        PoolConfig { workers, seed: 0xB14C, ..PoolConfig::default() },
+    )?;
+    let mut tenants: Vec<Tenant> = reqs
+        .iter()
+        .map(|r| {
+            let (edge_half, pool_half) = Loopback::pair();
+            let edge_id = pool.add_edge(WireTransport::Loopback(pool_half));
+            Tenant {
+                session: Session::for_edge(r.clone(), edge, spec.edge_controller()),
+                port: EdgePort::new(WireTransport::Loopback(edge_half)),
+                edge_id,
+                up: None,
+                killed_at: None,
+            }
+        })
+        .collect();
+
+    let mut migrate_pause_s = Vec::new();
+    let mut ttfrt_s = Vec::new();
+    let mut rr_victim = 0usize;
+    let mut kills = 0u64;
+    let t0 = Instant::now();
+    let mut step = 0u64;
+    while tenants.iter().any(|t| !t.session.is_terminal()) {
+        step += 1;
+        assert!(step < 10_000_000, "pool bench did not converge: {:?}", pool.stats);
+        match disturbance {
+            Disturbance::Migrate { every } if step % every == 0 => {
+                // Rotate which live session gets moved so the pauses
+                // sample different stream depths and KV footprints.
+                let n = tenants.len() as u64;
+                let mover = (0..n).map(|i| ((step / every + i) % n) as usize).find(|&i| {
+                    !tenants[i].session.is_terminal() && pool.placement_of(reqs[i].id).is_some()
+                });
+                if let Some(i) = mover {
+                    let rid = reqs[i].id;
+                    let src = pool.placement_of(rid).unwrap().worker;
+                    let m0 = Instant::now();
+                    pool.migrate_session(rid, (src + 1) % workers)?
+                        .expect("bench pool has headroom everywhere; a refusal is a bug");
+                    migrate_pause_s.push(m0.elapsed().as_secs_f64());
+                }
+            }
+            Disturbance::Storm { every, max_kills } if step % every == 0 && kills < max_kills => {
+                let victim = rr_victim % workers;
+                rr_victim += 1;
+                let now = Instant::now();
+                for (t, r) in tenants.iter_mut().zip(reqs) {
+                    if !t.session.is_terminal()
+                        && pool.placement_of(r.id).map(|p| p.worker) == Some(victim)
+                    {
+                        t.killed_at = Some(now);
+                    }
+                }
+                pool.kill_worker(victim)?;
+                kills += 1;
+            }
+            _ => {}
+        }
+        for t in tenants.iter_mut() {
+            if t.session.is_terminal() || t.up.is_some() {
+                continue;
+            }
+            if let SessionAction::Transmit(p) = t.session.poll(edge)? {
+                t.up = Some(t.port.send_payload(&p)?);
+            }
+        }
+        pool.poll()?;
+        for t in tenants.iter_mut() {
+            if t.session.is_terminal() {
+                continue;
+            }
+            if let Some((reply, cloud_s, down)) = t.port.try_recv_reply()? {
+                let up = t.up.take().expect("reply without an in-flight payload");
+                t.session.on_reply(edge, &reply, cloud_s, up, down)?;
+                if let Some(k0) = t.killed_at.take() {
+                    ttfrt_s.push(k0.elapsed().as_secs_f64());
+                }
+            }
+        }
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    let tokens: u64 = tenants.iter().map(|t| t.session.tokens().len() as u64).sum();
+
+    // Bit-identity: the pool may change WHEN tokens appear, never WHICH.
+    let mut pipe = build_pipeline(eng.clone(), spec)?;
+    for (t, req) in tenants.iter().zip(reqs) {
+        let want = pipe.generate(req)?;
+        assert_eq!(
+            t.session.tokens(),
+            &want.tokens[..],
+            "req {} diverged under the pool",
+            req.id
+        );
+    }
+    assert_eq!(pool.stats.placement_rejected, 0, "unbounded budget must place everyone");
+    assert_eq!(pool.stats.failover_rejected, 0, "every victim must be re-placed");
+    assert_eq!(pool.stats.migration_rejected, 0);
+
+    // Zero-leak hygiene once the edges are gone.
+    let ids: Vec<u64> = tenants.iter().map(|t| t.edge_id).collect();
+    for id in ids {
+        pool.close_edge(id);
+    }
+    assert_eq!(pool.live_sessions(), 0, "admission charges leaked");
+    assert_eq!(pool.fence_entries(), 0, "replay fences leaked");
+    assert_eq!(pool.placed_sessions(), 0, "placements leaked");
+    assert_eq!(pool.inflight_frames(), 0, "replay buffers leaked");
+
+    Ok(Phase { wall_s, tokens, migrate_pause_s, ttfrt_s, stats: pool.stats })
+}
+
+fn main() -> anyhow::Result<()> {
+    let smoke = std::env::var("BENCH_SMOKE").is_ok();
+    let n_sessions: usize = std::env::var("POOL_SESSIONS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(if smoke { 24 } else { 96 })
+        .clamp(4, 4096);
+    let workers = 4usize;
+    let max_new = 6usize;
+
+    let eng = engine();
+    let spec = DeploymentSpec::defaults(small_cfg(2), 1);
+    let edge = spec.build_edge_device(eng.clone())?;
+    let reqs: Vec<Request> = (0..n_sessions as u64)
+        .map(|i| {
+            Request::new(
+                1 + i,
+                vec![3 + (i % 251) as u32, 50, 9 + (i % 31) as u32, 1 + (i % 13) as u32],
+                max_new - (i % 3) as usize,
+            )
+        })
+        .collect();
+
+    println!("pool bench: {n_sessions} sessions over {workers} workers");
+
+    // --- Phase 1: undisturbed baseline. ---
+    let base = run_phase(&eng, &spec, &edge, &reqs, workers, Disturbance::None)?;
+    let base_tok_s = base.tokens as f64 / base.wall_s.max(1e-9);
+    println!(
+        "baseline: {} tokens in {:.3}s wall ({base_tok_s:.0} tok/s)",
+        base.tokens, base.wall_s
+    );
+
+    // --- Phase 2: live migration under load. ---
+    let mig = run_phase(&eng, &spec, &edge, &reqs, workers, Disturbance::Migrate { every: 2 })?;
+    assert!(mig.stats.migrations >= 1, "the migration phase never migrated: {:?}", mig.stats);
+    let mut pauses = mig.migrate_pause_s.clone();
+    pauses.sort_by(|a, b| a.total_cmp(b));
+    let pause_p50_s = percentile(&pauses, 0.50);
+    let pause_p95_s = percentile(&pauses, 0.95);
+    // Stall expressed in decode work: tokens the pool produces in the
+    // time one handoff holds its source quiesced.
+    let stall_p50_tokens = pause_p50_s * base_tok_s;
+    let stall_p95_tokens = pause_p95_s * base_tok_s;
+    println!(
+        "migration: {} handoffs | pause p50 {:.3} ms / p95 {:.3} ms | stall p50 {:.2} / p95 {:.2} tokens",
+        mig.stats.migrations,
+        pause_p50_s * 1e3,
+        pause_p95_s * 1e3,
+        stall_p50_tokens,
+        stall_p95_tokens
+    );
+
+    // --- Phase 3: rolling worker-restart storm. ---
+    let storm = run_phase(
+        &eng,
+        &spec,
+        &edge,
+        &reqs,
+        workers,
+        Disturbance::Storm { every: 2, max_kills: if smoke { 6 } else { 12 } },
+    )?;
+    assert!(storm.stats.kills >= 2, "the storm never formed: {:?}", storm.stats);
+    assert!(storm.stats.failovers >= 1, "no kill ever hit a live session: {:?}", storm.stats);
+    assert!(
+        storm.stats.failover_redelivered <= storm.stats.failovers,
+        "more than one re-served position per victim: {:?}",
+        storm.stats
+    );
+    let storm_tok_s = storm.tokens as f64 / storm.wall_s.max(1e-9);
+    let retention = storm_tok_s / base_tok_s.max(1e-9);
+    let mut ttfrt = storm.ttfrt_s.clone();
+    ttfrt.sort_by(|a, b| a.total_cmp(b));
+    let ttfrt_p50_ms = percentile(&ttfrt, 0.50) * 1e3;
+    let ttfrt_p95_ms = percentile(&ttfrt, 0.95) * 1e3;
+    println!(
+        "storm: {} kills, {} failovers | ttfrt p50 {ttfrt_p50_ms:.3} ms / p95 {ttfrt_p95_ms:.3} ms \
+         | retention {retention:.2}x",
+        storm.stats.kills, storm.stats.failovers
+    );
+    assert!(retention > 0.05, "throughput collapsed under the storm: {retention:.3}x");
+
+    let mut report = JsonReport::new();
+    report.add_metric("pool_workers", workers as f64);
+    report.add_metric("pool_sessions", n_sessions as f64);
+    report.add_metric("pool_baseline_tokens", base.tokens as f64);
+    report.add_metric("pool_baseline_tok_s", base_tok_s);
+    report.add_metric("pool_migrations", mig.stats.migrations as f64);
+    report.add_metric("pool_migration_pause_p50_ms", pause_p50_s * 1e3);
+    report.add_metric("pool_migration_pause_p95_ms", pause_p95_s * 1e3);
+    report.add_metric("pool_migration_stall_p50_tokens", stall_p50_tokens);
+    report.add_metric("pool_migration_stall_p95_tokens", stall_p95_tokens);
+    report.add_metric("pool_storm_kills", storm.stats.kills as f64);
+    report.add_metric("pool_storm_failovers", storm.stats.failovers as f64);
+    report.add_metric("pool_storm_redelivered", storm.stats.failover_redelivered as f64);
+    report.add_metric("pool_failover_ttfrt_p50_ms", ttfrt_p50_ms);
+    report.add_metric("pool_failover_ttfrt_p95_ms", ttfrt_p95_ms);
+    report.add_metric("pool_storm_tok_s", storm_tok_s);
+    report.add_metric("pool_throughput_retention", retention);
+
+    let path = std::env::var("BENCH_JSON").unwrap_or_else(|_| "BENCH_pool.json".to_string());
+    report.write(&path)?;
+    println!("wrote {path}");
+    Ok(())
+}

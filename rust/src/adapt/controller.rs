@@ -123,6 +123,28 @@ pub struct SessionView {
     pub kv_shippable: bool,
     /// Decode steps since this session's last reconfiguration.
     pub steps_since_reconfig: u64,
+    /// The session is inside a `Resume` handshake (crash recovery or a
+    /// live migration between workers) whose announced settings are not
+    /// settled yet. Reconfiguring now would race the handshake — the
+    /// cloud's force-installed resume announcement and the new Reconfig
+    /// could land in either order — so a due change is a typed
+    /// [`ReconcileDecision::Defer`], never an actuation and never an
+    /// abort of the session.
+    pub mid_resume: bool,
+}
+
+/// Outcome of a session-level reconcile pass
+/// ([`AdaptiveController::reconcile_checked`]).
+#[derive(Clone, Debug, PartialEq)]
+pub enum ReconcileDecision {
+    /// Apply this reconfiguration now.
+    Actuate(Reconfig),
+    /// A change is due, but the session is mid-`Resume`: actuating would
+    /// race the handshake. Typed hold-off — re-reconcile next iteration;
+    /// the session keeps serving under its applied plan meanwhile.
+    Defer,
+    /// Nothing to change.
+    Hold,
 }
 
 #[derive(Clone, Debug)]
@@ -150,6 +172,7 @@ pub struct AdaptiveController {
     devices: Vec<DeviceState>,
     replans: u64,
     reconfigs: u64,
+    defers: u64,
 }
 
 impl AdaptiveController {
@@ -189,6 +212,7 @@ impl AdaptiveController {
             devices,
             replans: 0,
             reconfigs: 0,
+            defers: 0,
         }
     }
 
@@ -215,6 +239,11 @@ impl AdaptiveController {
     /// Per-session reconfigurations emitted over the run.
     pub fn reconfigs(&self) -> u64 {
         self.reconfigs
+    }
+
+    /// Due changes deferred because the session was mid-`Resume`.
+    pub fn defers(&self) -> u64 {
+        self.defers
     }
 
     /// A device's current plan target.
@@ -319,7 +348,24 @@ impl AdaptiveController {
             return;
         }
         let deviation = g_est / planned - 1.0;
-        if deviation.abs() <= self.policy.deadband {
+        // Strand guard: the deadband is centered on the *current plan's*
+        // anchor, so a device whose anchor was dragged down by poisoned
+        // fault-storm telemetry (retry latencies measure the storm, not
+        // the channel) could sit parked below the static plan while the
+        // recovered link would carry it fine — the +33% recovery
+        // deviation never clears a 0.6 deadband. A device below the
+        // static fallback therefore also re-plans whenever the estimate
+        // supports the static plan with the full upgrade margin; the
+        // ladder then restores exactly the deployed baseline.
+        let below_base =
+            current.bits < self.base_bits || !current.include_kv || current.degraded;
+        let base_fits_now = below_base && {
+            let budget_s = self.step_wire_s(self.base_bits, true, self.nominal_goodput)
+                * self.policy.slack;
+            self.step_wire_s(self.base_bits, true, g_est)
+                <= budget_s * (1.0 - self.policy.min_rel_gain)
+        };
+        if deviation.abs() <= self.policy.deadband && !base_fits_now {
             return;
         }
         let new_plan = self.replan(g_est, &current);
@@ -332,8 +378,40 @@ impl AdaptiveController {
     /// Session-level actuation: emit a [`Reconfig`] when the session's
     /// applied plan differs from its device's target (respecting the
     /// cooldown, per-session I_kv feasibility, and the Eq. 8c budget for
-    /// the remaining horizon). `None` = nothing to change.
+    /// the remaining horizon). `None` = nothing to change — including a
+    /// change deferred because the session is mid-`Resume` (use
+    /// [`reconcile_checked`](Self::reconcile_checked) to distinguish the
+    /// typed defer from a genuine hold).
     pub fn reconcile(&mut self, device: usize, view: &SessionView) -> Option<Reconfig> {
+        match self.reconcile_checked(device, view) {
+            ReconcileDecision::Actuate(rc) => Some(rc),
+            ReconcileDecision::Defer | ReconcileDecision::Hold => None,
+        }
+    }
+
+    /// [`reconcile`](Self::reconcile) with the mid-`Resume` race made
+    /// typed: a due change for a session whose Resume handshake is still
+    /// settling is returned as [`ReconcileDecision::Defer`] — the session
+    /// is never reconfigured under the handshake and never aborted, it
+    /// simply keeps its applied plan until the next pass.
+    pub fn reconcile_checked(&mut self, device: usize, view: &SessionView) -> ReconcileDecision {
+        match self.compute_reconfig(device, view) {
+            None => ReconcileDecision::Hold,
+            Some(_) if view.mid_resume => {
+                self.defers += 1;
+                ReconcileDecision::Defer
+            }
+            Some(rc) => {
+                self.reconfigs += 1;
+                ReconcileDecision::Actuate(rc)
+            }
+        }
+    }
+
+    /// The pure decision: what `Reconfig`, if any, would reconcile this
+    /// session with its device's plan. No counters, no gating on the
+    /// session's handshake state.
+    fn compute_reconfig(&self, device: usize, view: &SessionView) -> Option<Reconfig> {
         let plan = self.devices[device].plan;
         if view.remaining_budget == 0 || view.steps_since_reconfig < self.policy.cooldown_steps
         {
@@ -383,7 +461,6 @@ impl AdaptiveController {
         {
             return None; // minimum improvement: no change worth a frame
         }
-        self.reconfigs += 1;
         Some(Reconfig {
             request_id: view.request_id,
             epoch: view.epoch + 1,
@@ -440,6 +517,7 @@ mod tests {
             applied_kv: true,
             kv_shippable: true,
             steps_since_reconfig: steps,
+            mid_resume: false,
         }
     }
 
@@ -581,5 +659,96 @@ mod tests {
         c.device_update(1);
         assert_ne!(c.device_plan(0), c.device_plan(1), "only device 0 degraded");
         assert_eq!(c.device_plan(1), DevicePlan { bits: 4, include_kv: true, degraded: false });
+    }
+
+    #[test]
+    fn mid_resume_change_is_a_typed_defer_not_an_abort() {
+        let mut c = controller(1);
+        feed(&mut c, 0, 2e6 / 15.0, 60);
+        c.device_update(0);
+        // a change IS due for this session...
+        let mut v = view(0, 10);
+        v.mid_resume = true;
+        assert_eq!(
+            c.reconcile_checked(0, &v),
+            ReconcileDecision::Defer,
+            "a due change mid-Resume must be a typed defer"
+        );
+        assert_eq!(c.reconfigs(), 0, "a deferred change must not count as emitted");
+        assert_eq!(c.defers(), 1);
+        // the legacy entry point stays quiet instead of racing the
+        // handshake — and nothing about the session was aborted
+        assert!(c.reconcile(0, &v).is_none());
+        // ...and the moment the handshake settles, the same view actuates
+        v.mid_resume = false;
+        match c.reconcile_checked(0, &v) {
+            ReconcileDecision::Actuate(rc) => assert_eq!(rc.request_id, v.request_id),
+            other => panic!("settled session must actuate, got {other:?}"),
+        }
+        assert_eq!(c.reconfigs(), 1);
+    }
+
+    #[test]
+    fn mid_resume_with_nothing_due_is_a_plain_hold() {
+        let mut c = controller(1);
+        let mut v = view(0, 100);
+        v.mid_resume = true;
+        assert_eq!(c.reconcile_checked(0, &v), ReconcileDecision::Hold);
+        assert_eq!(c.defers(), 0, "holds are not defers");
+    }
+
+    #[test]
+    fn poisoned_telemetry_never_strands_below_the_static_fallback() {
+        // Adversarial estimator: a fault storm's retry latencies look like
+        // a goodput collapse, then flap wildly. Pin two things: (1) the
+        // plan ladder never leaves the candidate range and never exceeds
+        // the static plan, whatever garbage arrives; (2) after the storm,
+        // reanchor + nominal traffic converge the device EXACTLY back to
+        // the static fallback plan — recovery can't strand a device on a
+        // storm-era downgrade.
+        let mut c = controller(1);
+        let static_plan = DevicePlan { bits: 4, include_kv: true, degraded: false };
+        let mut rng_state = 0x5EEDu64;
+        for round in 0..40 {
+            // xorshift garbage goodputs across 4 orders of magnitude
+            rng_state ^= rng_state << 13;
+            rng_state ^= rng_state >> 7;
+            rng_state ^= rng_state << 17;
+            let g = 2e2 + (rng_state % 10_000) as f64 * 2e3;
+            feed(&mut c, 0, g, 5);
+            // storm frames also carry outage markers and retry counts
+            c.observe(
+                0,
+                &TransferOutcome {
+                    latency_s: 0.5,
+                    attempts: 6,
+                    outage: true,
+                    payload_bytes: 100,
+                },
+            );
+            c.device_update(0);
+            let p = c.device_plan(0);
+            assert!(
+                p.bits <= 4 && (2..=16).contains(&p.bits),
+                "round {round}: poisoned plan {p:?} left the legal ladder"
+            );
+        }
+        // storm over: the serve loop reanchors the device, traffic is
+        // nominal again
+        c.reanchor(0);
+        feed(&mut c, 0, 2e6, 120);
+        c.device_update(0);
+        assert_eq!(
+            c.device_plan(0),
+            static_plan,
+            "recovery must converge to the static fallback, not strand below it"
+        );
+        // and a session still carrying a storm-era downgrade is restored
+        let mut v = view(0, 10);
+        v.applied_bits = 2;
+        v.applied_kv = false;
+        let rc = c.reconcile(0, &v).expect("restore due after recovery");
+        assert_eq!(rc.qa_bits, 4);
+        assert!(rc.include_kv);
     }
 }

@@ -33,6 +33,8 @@ pub mod controller;
 pub mod reconfig;
 pub mod telemetry;
 
-pub use controller::{AdaptPolicy, AdaptiveController, DevicePlan, SessionView};
+pub use controller::{
+    AdaptPolicy, AdaptiveController, DevicePlan, ReconcileDecision, SessionView,
+};
 pub use reconfig::Reconfig;
 pub use telemetry::{expected_goodput_bps, BandwidthEstimator, MemoryGauge};

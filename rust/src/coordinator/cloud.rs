@@ -233,6 +233,31 @@ impl CloudServer {
         Ok(ResumeAck { request_id: rs.request_id, epoch: rs.epoch, last_pos })
     }
 
+    /// Extract and REMOVE a session's cloud-side control state for a
+    /// worker-to-worker migration: the announced settings (if any) and
+    /// the accepted resume-epoch high-water mark (if any). Removal is the
+    /// point — after the handoff the source worker must hold nothing for
+    /// this session (zero-leak invariant), and an A→B→A round trip must
+    /// re-admit on A without tripping its own stale-epoch fence.
+    pub fn export_control(&self, request_id: u64) -> (Option<Reconfig>, Option<u32>) {
+        let rc = self.control.lock().expect("control plane poisoned").remove(&request_id);
+        let epoch = self
+            .resume_epochs
+            .lock()
+            .expect("resume fence poisoned")
+            .remove(&request_id);
+        (rc, epoch)
+    }
+
+    /// Force-install migrated control settings verbatim. No epoch
+    /// comparison: `admit_resume` already fenced the migration's epoch,
+    /// and the shipped announcement IS the session's current word — the
+    /// target has no older announcement to protect. Deliberately does not
+    /// bump `reconfigs_applied`: nothing changed from the session's view.
+    pub fn restore_control(&self, rc: &Reconfig) {
+        self.control.lock().expect("control plane poisoned").insert(rc.request_id, *rc);
+    }
+
     /// Drop a session's control-plane entry unconditionally. Drivers call
     /// this when a session ends for any non-EOS reason (budget
     /// exhaustion, cancellation, error) and `serve_connection` sweeps the
@@ -281,7 +306,7 @@ impl CloudServer {
                     Err(rj) => crate::wire::encode_error_frame(&rj),
                 }))
             }
-            FrameKind::Reply | FrameKind::ResumeAck | FrameKind::Error => {
+            FrameKind::Reply | FrameKind::ResumeAck | FrameKind::Error | FrameKind::Migrate => {
                 anyhow::bail!("cloud server received a {kind:?} frame")
             }
         }
@@ -379,7 +404,7 @@ impl CloudServer {
                         }
                     }
                 }
-                FrameKind::Reply | FrameKind::ResumeAck | FrameKind::Error => {
+                FrameKind::Reply | FrameKind::ResumeAck | FrameKind::Error | FrameKind::Migrate => {
                     anyhow::bail!("cloud server received a {kind:?} frame")
                 }
             }

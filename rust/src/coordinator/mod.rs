@@ -33,8 +33,8 @@ pub use edge::{EdgeDevice, EdgeRequestState, ProbeOutcome};
 pub use pipeline::{EdgeClient, RetryPolicy, SplitPipeline};
 pub use profile::DeviceProfile;
 pub use protocol::{
-    reject, CloudReply, CompressedKv, CompressedTensor, CompressionConfig, RejectFrame, Resume,
-    ResumeAck, SplitPayload,
+    reject, CloudReply, CompressedKv, CompressedTensor, CompressionConfig, MigrateState,
+    RejectFrame, Resume, ResumeAck, SplitPayload,
 };
 pub use request::{GenerationResult, Request, StepStats};
 pub use router::{RouteDecision, Router};

@@ -43,7 +43,10 @@
 //! actuation message. Wire format v5 stamps every `CloudReply` with the
 //! position it answers (duplicate/stale replies become typed rejections)
 //! and adds the session-recovery frames: `Resume` (kind 4),
-//! `ResumeAck` (kind 5) and the in-band typed `Error` (kind 6).
+//! `ResumeAck` (kind 5) and the in-band typed `Error` (kind 6). Wire
+//! format v6 adds `Migrate` (kind 7): a worker-to-worker frame carrying
+//! one session's cloud-side state ([`MigrateState`]) for live migration
+//! inside a cloud pool.
 //!
 //! Compression runs on the fused engine (`quant::fused`): single-pass
 //! TS+stats, streaming adaptive bit search, scratch-reused rANS tables.
@@ -466,6 +469,52 @@ impl RejectFrame {
     /// code u8 + request id u64 + message length u16 + UTF-8 bytes.
     pub fn wire_bytes(&self) -> u64 {
         11 + self.message.len() as u64
+    }
+}
+
+/// Worker→worker live-migration of one session's cloud-side state (frame
+/// kind 7, new in wire v6). The cloud is stateless about KV — every
+/// payload carries the back-segment caches (or the cloud rebuilt them
+/// from shipped `CompressedKv` rows) — so a session's *entire* residue on
+/// a worker is: the replay fence (last answered position + the cached
+/// encoded reply frame, byte-identical on replay), the announced
+/// control-plane settings, and its resume-epoch high-water mark. The
+/// heavy per-request state already lives on the edge (`SessionSnapshot`,
+/// PR 6); migration ships only what the TARGET worker needs to continue
+/// the stream bit-identically and fence retransmissions of the last
+/// position.
+///
+/// Import runs through the same epoch-fenced admission as a PR 6
+/// `Resume`: `epoch` must strictly exceed the target's high-water mark
+/// for the session, so a duplicated or stale `Migrate` delivery during
+/// the handoff is rejected typed (`STALE_EPOCH`), never double-applied.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MigrateState {
+    pub request_id: u64,
+    /// Migration epoch: the source's accepted resume-epoch high-water
+    /// mark + 1. Strictly increases across migrations/resumes of the same
+    /// session, exactly like a reconnecting edge's `Resume.epoch`.
+    pub epoch: u32,
+    /// Next position the session will transmit (the fence position + 1,
+    /// or 0 for a session migrated before its first reply).
+    pub next_pos: u64,
+    /// The replay fence being shipped: last answered position and the
+    /// cached *encoded reply frame* (a complete kind-2 frame, CRC and
+    /// all — replayed byte-identically if the edge retransmits).
+    pub fence: Option<(u64, Vec<u8>)>,
+    /// The session's announced control-plane settings, verbatim (so a
+    /// later `Reconfig` with a higher epoch still applies on the target).
+    pub control: Option<crate::adapt::Reconfig>,
+}
+
+impl MigrateState {
+    /// request id u64 + epoch u32 + next_pos u64 + flags u8, then
+    /// optionally [fence pos u64 + frame len u32 + frame bytes] and the
+    /// 22-byte `Reconfig` body.
+    pub fn wire_bytes(&self) -> u64 {
+        let fence = self.fence.as_ref().map_or(0, |(_, f)| 12 + f.len() as u64);
+        let control = if self.control.is_some() { 22 } else { 0 };
+        21 + fence + control
     }
 }
 

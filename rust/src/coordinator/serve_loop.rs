@@ -527,6 +527,9 @@ impl ServeLoop {
                         applied_kv: a.applied_kv,
                         kv_shippable: !a.session.cloud_kv_stale(),
                         steps_since_reconfig: a.decode_steps - a.last_reconfig_step,
+                        // The in-process loop drives sessions synchronously:
+                        // a Resume handshake can never be in flight here.
+                        mid_resume: false,
                     };
                     let ctrl = self.adapt.as_mut().expect("checked");
                     if let Some(rc) = ctrl.reconcile(a.device, &view) {

@@ -29,10 +29,13 @@
 
 use std::collections::{HashMap, HashSet, VecDeque};
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use crate::coordinator::protocol::{reject, CloudReply, RejectFrame, SplitPayload};
+use crate::coordinator::protocol::{
+    reject, CloudReply, MigrateState, RejectFrame, Resume, ResumeAck, SplitPayload,
+};
 use crate::coordinator::CloudServer;
 use crate::wire::{
     self, peek_payload_prefix, FrameKind, PayloadPrefix, PollRecv, Transport, WireError,
@@ -56,6 +59,11 @@ pub struct FleetConfig {
     /// Aggregate cloud KV working-memory budget across all live sessions
     /// (None = admission gate off).
     pub kv_budget_bytes: Option<u64>,
+    /// Per-connection idle deadline: a connection that delivers no frame
+    /// for this long is closed and fully swept (half-open sockets whose
+    /// peer silently vanished would otherwise pin Credits and cloud state
+    /// behind a blocking reader forever). None = sweep off.
+    pub idle_timeout: Option<Duration>,
 }
 
 impl Default for FleetConfig {
@@ -65,6 +73,7 @@ impl Default for FleetConfig {
             queue_depth: 4,
             drr_quantum: 64 * 1024,
             kv_budget_bytes: None,
+            idle_timeout: None,
         }
     }
 }
@@ -96,6 +105,13 @@ pub struct FleetStats {
     pub closed_conns: u64,
     /// Payloads answered with a typed FAILED rejection.
     pub failed: u64,
+    /// Connections closed by the idle-deadline sweep (a subset of
+    /// `closed_conns`).
+    pub idle_swept: u64,
+    /// Sessions exported for worker-to-worker migration.
+    pub exported: u64,
+    /// Migrated sessions imported (admitted) on this worker.
+    pub imported: u64,
 }
 
 /// How a connection's frames reach the scheduler.
@@ -125,6 +141,8 @@ struct ConnState {
     /// Request ids this connection announced to the cloud control plane
     /// (Reconfig/Resume) — retired on close.
     announced: HashSet<u64>,
+    /// Last frame arrival (or registration) — the idle-sweep clock.
+    last_seen: Instant,
 }
 
 impl ConnState {
@@ -230,6 +248,7 @@ impl FleetScheduler {
                 deficit: 0,
                 fence: HashMap::new(),
                 announced: HashSet::new(),
+                last_seen: Instant::now(),
             },
         );
         self.rr.push_back(id);
@@ -249,6 +268,11 @@ impl FleetScheduler {
         if let ConnMode::Threaded(credits) = &conn.mode {
             credits.kill();
         }
+        // For socket connections the stored transport is an OS-level clone
+        // of the reader thread's stream: shutting it down both ways makes
+        // the blocked read return EOF *now* instead of at its own I/O
+        // timeout, so the reader thread exits with the sweep.
+        conn.transport.shutdown();
         for rid in &conn.announced {
             self.cloud.retire_request(*rid);
         }
@@ -307,9 +331,10 @@ impl FleetScheduler {
     /// the caller must sweep the connection; per-request failures are
     /// answered in-band and return `Ok`.
     pub fn on_frame(&mut self, conn_id: u64, frame: Vec<u8>) -> Result<()> {
-        if !self.conns.contains_key(&conn_id) {
+        let Some(conn) = self.conns.get_mut(&conn_id) else {
             return Ok(()); // late frame from an already-swept connection
-        }
+        };
+        conn.last_seen = Instant::now();
         match peek_payload_prefix(&frame) {
             Ok(pfx) => self.intake_payload(conn_id, pfx, frame),
             Err(WireError::WrongKind { got, .. }) => self.intake_control(conn_id, got, frame),
@@ -578,10 +603,244 @@ impl FleetScheduler {
         Ok(served)
     }
 
+    /// Close every connection whose last frame is older than the
+    /// configured idle deadline (half-open sweep). Returns the swept ids.
+    /// A connection with work still queued is NOT idle — its frames
+    /// arrived recently by definition — so the sweep can only hit peers
+    /// that genuinely stopped talking.
+    pub fn sweep_idle(&mut self) -> Vec<u64> {
+        let Some(deadline) = self.cfg.idle_timeout else { return Vec::new() };
+        let stale: Vec<u64> = self
+            .conns
+            .iter()
+            .filter(|(_, c)| c.last_seen.elapsed() >= deadline)
+            .map(|(&id, _)| id)
+            .collect();
+        for &id in &stale {
+            self.close_connection(id);
+            self.stats.idle_swept += 1;
+        }
+        stale
+    }
+
+    /// Extract and REMOVE a session's entire cloud-side state for a
+    /// worker-to-worker migration: the replay fence (last answered
+    /// position + cached reply frame), the announced control settings,
+    /// and the resume-epoch high-water mark. The shipped migration epoch
+    /// is that high-water mark + 1, so the import re-enters the target
+    /// through the same strictly-increasing fence a reconnecting edge
+    /// uses — a duplicated or stale `Migrate` delivery is a typed
+    /// STALE_EPOCH rejection, never a second live copy.
+    ///
+    /// The session must be quiescent (no queued payloads): the pool
+    /// drains a worker's pending work before it moves sessions, and this
+    /// guard makes a violation loud instead of silently dropping frames.
+    pub fn export_session(&mut self, request_id: u64) -> Result<MigrateState> {
+        let Some(&owner) = self.live.get(&request_id) else {
+            anyhow::bail!("request {request_id} is not live on this worker");
+        };
+        let conn = self.conns.get_mut(&owner).expect("live owner is registered");
+        anyhow::ensure!(
+            !conn.pending_pos.contains_key(&request_id),
+            "request {request_id} has queued work; quiesce before migrating"
+        );
+        let fence = conn.fence.remove(&request_id);
+        conn.announced.remove(&request_id);
+        self.live.remove(&request_id);
+        let (control, epoch) = self.cloud.export_control(request_id);
+        self.stats.exported += 1;
+        Ok(MigrateState {
+            request_id,
+            epoch: epoch.unwrap_or(0) + 1,
+            next_pos: fence.as_ref().map_or(0, |(p, _)| p + 1),
+            fence,
+            control,
+        })
+    }
+
+    /// Admit a migrated session onto this worker, bound to `conn_id`.
+    /// Runs the same gauntlet a reconnecting edge faces: the per-worker
+    /// aggregate-KV admission gate (typed ADMISSION rejection when full),
+    /// then the epoch fence via `admit_resume` (typed STALE_EPOCH on a
+    /// duplicate or stale delivery). On admit, the shipped fence and
+    /// control settings are installed verbatim, so the very next payload
+    /// — even a re-served duplicate of the last answered position — gets
+    /// the bit-identical cached reply.
+    pub fn import_session(
+        &mut self,
+        conn_id: u64,
+        ms: &MigrateState,
+    ) -> Result<std::result::Result<ResumeAck, RejectFrame>> {
+        anyhow::ensure!(self.conns.contains_key(&conn_id), "unknown connection {conn_id}");
+        if !self.has_room(ms.request_id) {
+            self.stats.admission_rejected += 1;
+            return Ok(Err(self.admission_reject(ms.request_id)));
+        }
+        // No shipped control = the session never announced settings; the
+        // synthetic values only exist to ride the Resume fence and are
+        // retired right after admission.
+        let (qa_bits, tau, include_kv) = match &ms.control {
+            Some(rc) => (rc.qa_bits, rc.tau, rc.include_kv),
+            None => (16, 5.0, true),
+        };
+        let rs = Resume {
+            request_id: ms.request_id,
+            epoch: ms.epoch,
+            next_pos: ms.next_pos,
+            qa_bits,
+            tau,
+            include_kv,
+        };
+        let ack = match self.cloud.admit_resume(&rs, ms.fence.as_ref().map(|(p, _)| *p)) {
+            Ok(ack) => ack,
+            Err(rj) => return Ok(Err(rj)),
+        };
+        match &ms.control {
+            Some(rc) => self.cloud.restore_control(rc),
+            None => self.cloud.retire_request(ms.request_id),
+        }
+        self.live.insert(ms.request_id, conn_id);
+        let conn = self.conns.get_mut(&conn_id).expect("existence checked above");
+        conn.announced.insert(ms.request_id);
+        if let Some((pos, frame)) = &ms.fence {
+            conn.fence.insert(ms.request_id, (*pos, frame.clone()));
+        }
+        self.stats.imported += 1;
+        Ok(Ok(ack))
+    }
+
     fn send_to(&mut self, conn_id: u64, frame: &[u8]) -> Result<()> {
         let Some(conn) = self.conns.get_mut(&conn_id) else {
             return Ok(()); // already swept
         };
         conn.transport.send(frame).map(|_| ())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::rc::Rc;
+
+    use super::*;
+    use crate::adapt::Reconfig;
+    use crate::coordinator::DeploymentSpec;
+    use crate::model::ModelConfig;
+    use crate::runtime::Engine;
+    use crate::wire::Loopback;
+
+    fn sched(cfg: FleetConfig) -> FleetScheduler {
+        let mut mcfg = ModelConfig::sim7b();
+        mcfg.n_layers = 2;
+        let eng = Rc::new(Engine::load("artifacts", &mcfg).expect("run `make artifacts`"));
+        let spec = DeploymentSpec::defaults(mcfg, 1);
+        FleetScheduler::new(spec.build_cloud_server(eng).unwrap(), cfg)
+    }
+
+    /// Register a polled loopback connection, keeping our half alive so
+    /// the worker's side never reads Closed.
+    fn conn(s: &mut FleetScheduler, id: u64) -> WireTransport {
+        let (ours, theirs) = Loopback::pair();
+        s.register_polled(id, WireTransport::Loopback(theirs));
+        WireTransport::Loopback(ours)
+    }
+
+    fn migrated(rid: u64, epoch: u32) -> MigrateState {
+        MigrateState {
+            request_id: rid,
+            epoch,
+            next_pos: 4,
+            fence: Some((3, vec![0xAB; 24])),
+            control: Some(Reconfig {
+                request_id: rid,
+                epoch: 2,
+                qa_bits: 8,
+                tau: 4.0,
+                include_kv: true,
+                budget_cap: Reconfig::NO_BUDGET_CAP,
+            }),
+        }
+    }
+
+    /// The migration handoff contract: a duplicated delivery is a typed
+    /// STALE_EPOCH (never a second live copy), export removes EVERY trace
+    /// and bumps the epoch past the local high-water mark, and the state
+    /// round-trips A → B → A without tripping A's own fence.
+    #[test]
+    fn migrate_import_is_epoch_fenced_and_export_round_trips() {
+        let mut a = sched(FleetConfig::default());
+        let mut b = sched(FleetConfig::default());
+        let _ca = conn(&mut a, 1);
+        let _cb = conn(&mut b, 1);
+
+        let state = migrated(77, 5);
+        let ack = b.import_session(1, &state).unwrap().expect("first import admits");
+        assert_eq!(ack.last_pos, Some(3), "ack must echo the shipped fence position");
+        assert_eq!(b.live_sessions(), 1);
+        assert_eq!(b.fence_entries(), 1);
+        assert_eq!(b.cloud().control_entries(), 1);
+        assert_eq!(b.stats.imported, 1);
+
+        let rj = b
+            .import_session(1, &state)
+            .unwrap()
+            .expect_err("a duplicated Migrate delivery must be rejected");
+        assert_eq!(rj.code, reject::STALE_EPOCH);
+        assert_eq!(b.live_sessions(), 1, "duplicate must not double-admit");
+
+        let out = b.export_session(77).unwrap();
+        assert_eq!(out.epoch, 6, "export must fence above the local high-water mark");
+        assert_eq!(out.next_pos, 4);
+        assert_eq!(out.fence.as_ref().unwrap().0, 3);
+        assert_eq!(out.control.unwrap().qa_bits, 8);
+        assert_eq!(b.live_sessions(), 0, "export leaked the admission charge");
+        assert_eq!(b.fence_entries(), 0, "export leaked the replay fence");
+        assert_eq!(b.cloud().control_entries(), 0, "export leaked control state");
+        assert_eq!(b.cloud().resume_entries(), 0, "export leaked the epoch fence");
+        assert_eq!(b.stats.exported, 1);
+
+        a.import_session(1, &out).unwrap().expect("A admits the exported state");
+        let back = a.export_session(77).unwrap();
+        assert_eq!(back.epoch, 7);
+        b.import_session(1, &back).unwrap().expect("B re-admits after a full round trip");
+    }
+
+    #[test]
+    fn export_demands_a_live_session_and_a_known_connection() {
+        let mut a = sched(FleetConfig::default());
+        let _c = conn(&mut a, 1);
+        assert!(a.export_session(99).is_err(), "unknown session must fail loudly");
+        let state = migrated(5, 1);
+        assert!(
+            a.import_session(42, &state).is_err(),
+            "import onto an unregistered connection must fail loudly"
+        );
+    }
+
+    /// A migrated session faces the same Eq. 8c gate as a reconnecting
+    /// edge: with per-worker budget for one session, the second import is
+    /// a typed ADMISSION rejection and charges stay exact.
+    #[test]
+    fn import_respects_the_per_worker_admission_gate() {
+        let probe = sched(FleetConfig::default());
+        let per_session = probe.session_kv_bytes();
+        drop(probe);
+        let mut b = sched(FleetConfig {
+            kv_budget_bytes: Some(per_session),
+            ..FleetConfig::default()
+        });
+        let _c = conn(&mut b, 1);
+        b.import_session(1, &migrated(7, 1)).unwrap().expect("first session fits");
+        let rj = b
+            .import_session(1, &migrated(8, 1))
+            .unwrap()
+            .expect_err("second session must be refused");
+        assert_eq!(rj.code, reject::ADMISSION);
+        assert_eq!(b.live_sessions(), 1);
+        assert_eq!(b.stats.admission_rejected, 1);
+        assert_eq!(
+            b.cloud().resume_entries(),
+            1,
+            "a refused import must not leave an epoch entry behind"
+        );
     }
 }

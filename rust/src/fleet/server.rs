@@ -216,6 +216,10 @@ impl FleetServer {
             }
         }
         self.scheduler.poll_connections();
+        // Idle sweep (when configured): a socket whose peer went silent —
+        // wedged device, half-open TCP — would otherwise pin its Credits
+        // and cloud-side session state forever.
+        self.scheduler.sweep_idle();
         self.scheduler.serve_round()
     }
 

@@ -10,5 +10,6 @@ pub mod runtime;
 pub mod coordinator;
 pub mod eval;
 pub mod fleet;
+pub mod pool;
 pub mod trace;
 pub mod util;

@@ -8,6 +8,7 @@
 //!   serve     run a workload trace over N edge devices (e2e driver)
 //!   cloud     run the cloud half as a standalone frame server (socket)
 //!   edge      run the edge half against a remote cloud (socket)
+//!   pool      sharded cloud pool demo: placement, worker kills, failover
 //!   sweep     τ x Q̄a payload sweep on a captured hidden block
 
 use std::rc::Rc;
@@ -18,15 +19,16 @@ use splitserve::adapt::AdaptPolicy;
 use splitserve::channel::ChannelTrace;
 use splitserve::coordinator::{
     build_pipeline, build_serve_loop, DeploymentSpec, EdgeClient, Request, RetryPolicy,
-    ServeSpec, TokenControl,
+    ServeSpec, Session, SessionAction, TokenControl,
 };
 use splitserve::fleet::{serve_listener, FleetConfig, FleetServer};
 use splitserve::model::ModelConfig;
 use splitserve::planner::{plan, AnalyticAccuracyModel, PlanChoice, PlanInputs};
+use splitserve::pool::{CloudPool, PoolConfig};
 use splitserve::runtime::Engine;
 use splitserve::trace::{generate_trace, ArrivalPattern, WorkloadSpec};
 use splitserve::util::cli::Args;
-use splitserve::wire::{SocketTransport, WireListener, WireTransport};
+use splitserve::wire::{EdgePort, Loopback, SocketTransport, WireListener, WireTransport};
 
 const USAGE: &str = "\
 splitserve — adaptive split computing for LLM inference
@@ -60,6 +62,12 @@ USAGE: splitserve <subcommand> [flags]
              both halves must be built with the same model/split flags;
              --retry N survives N wire failures per step — reconnect with
              jittered exponential backoff from B ms, resume, retransmit)
+  pool      --workers 3 --sessions 6 --kill 1 [--model sim7b --layers 8
+            --split 4 --seed 1337 --max-new 8]
+            (in-process sharded-cloud demo: places sessions across a pool
+             of fleet workers, kills --kill workers mid-stream, and
+             asserts every stream recovered bit-identically with zero
+             leaked charges, fences, or placements — the CI pool smoke)
   sweep     (see examples/compression_sweep for the richer version)
 ";
 
@@ -330,6 +338,117 @@ fn main() -> Result<()> {
                 client.generate(&req)?
             };
             print_generation(&res);
+        }
+        Some("pool") => {
+            let cfg = model_from(&args)?;
+            let split = args.usize_or("split", cfg.n_layers / 2);
+            let workers = args.usize_or("workers", 3);
+            let sessions = args.usize_or("sessions", 6);
+            let kill = args.usize_or("kill", 0);
+            let seed = args.usize_or("seed", 0x5EED) as u64;
+            let max_new = args.usize_or("max-new", 8);
+            let engine = Rc::new(Engine::load("artifacts", &cfg)?);
+            let spec = DeploymentSpec::defaults(cfg.clone(), split);
+            let pool_cfg = PoolConfig { workers, seed, ..PoolConfig::default() };
+            let fspec = spec.clone();
+            let feng = engine.clone();
+            let mut pool =
+                CloudPool::new(move || fspec.build_cloud_server(feng.clone()), pool_cfg)?;
+            let edge = spec.build_edge_device(engine.clone())?;
+
+            struct PoolTenant {
+                session: Session,
+                port: EdgePort,
+                up: Option<splitserve::channel::TransferOutcome>,
+            }
+            let requests: Vec<Request> = (0..sessions)
+                .map(|i| {
+                    let i = i as u32;
+                    Request::new(u64::from(i) + 1, vec![3 + i % 97, 50, 9, i % 13 + 1], max_new)
+                })
+                .collect();
+            let mut tenants: Vec<PoolTenant> = requests
+                .iter()
+                .map(|r| {
+                    let (edge_half, pool_half) = Loopback::pair();
+                    pool.add_edge(WireTransport::Loopback(pool_half));
+                    PoolTenant {
+                        session: Session::for_edge(r.clone(), &edge, spec.edge_controller()),
+                        port: EdgePort::new(WireTransport::Loopback(edge_half)),
+                        up: None,
+                    }
+                })
+                .collect();
+
+            // Drive every session against the pool, killing workers
+            // mid-stream on a fixed schedule so the run is reproducible.
+            let mut steps = 0u64;
+            let mut killed = 0usize;
+            while tenants.iter().any(|t| !t.session.is_terminal()) {
+                steps += 1;
+                anyhow::ensure!(steps < 200_000, "pool demo did not converge");
+                for t in tenants.iter_mut() {
+                    if t.session.is_terminal() || t.up.is_some() {
+                        continue;
+                    }
+                    if let SessionAction::Transmit(p) = t.session.poll(&edge)? {
+                        t.up = Some(t.port.send_payload(&p)?);
+                    }
+                }
+                if killed < kill && steps == 5 + killed as u64 * 7 {
+                    let victim = killed % workers;
+                    pool.kill_worker(victim)?;
+                    println!("pool: killed worker {victim} at step {steps}");
+                    killed += 1;
+                }
+                pool.poll()?;
+                for t in tenants.iter_mut() {
+                    if t.session.is_terminal() {
+                        continue;
+                    }
+                    if let Some((reply, cloud_s, down)) = t.port.try_recv_reply()? {
+                        let up = t.up.take().expect("reply without in-flight payload");
+                        t.session.on_reply(&edge, &reply, cloud_s, up, down)?;
+                    }
+                }
+            }
+
+            // Bit-identity: every stream must match the solo single-
+            // session oracle, worker kills and all.
+            for r in &requests {
+                let mut pipe =
+                    build_pipeline(engine.clone(), &DeploymentSpec::defaults(cfg.clone(), split))?;
+                let want = pipe.generate(r)?;
+                let got = tenants
+                    .iter()
+                    .find(|t| t.session.request_id() == r.id)
+                    .expect("tenant exists")
+                    .session
+                    .tokens()
+                    .to_vec();
+                anyhow::ensure!(
+                    got == want.tokens,
+                    "req {} diverged after failover: {got:?} vs {:?}",
+                    r.id,
+                    want.tokens
+                );
+            }
+            anyhow::ensure!(
+                pool.live_sessions() == 0
+                    && pool.fence_entries() == 0
+                    && pool.placed_sessions() == 0
+                    && pool.inflight_frames() == 0,
+                "pool leaked state after all sessions finished"
+            );
+            let s = pool.stats;
+            println!(
+                "pool: {sessions} sessions over {workers} workers, {killed} kills — \
+                 all streams bit-identical to solo, zero leaked state"
+            );
+            println!(
+                "pool stats: placed {} | kills {} | failovers {} | migrations {} | replies {}",
+                s.placed, s.kills, s.failovers, s.migrations, s.replies_forwarded
+            );
         }
         Some("sweep") => {
             println!("see `cargo run --release --example compression_sweep` for the full sweep");

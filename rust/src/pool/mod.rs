@@ -1,0 +1,41 @@
+//! Sharded cloud pool: many fleet workers behind one placement layer.
+//!
+//! PR 7's fleet made one cloud process serve thousands of edges — and
+//! made that process a single point of failure and a hard capacity
+//! ceiling. This module shards the cloud across a pool of workers (each
+//! a full [`FleetScheduler`](crate::fleet::FleetScheduler) over its own
+//! [`CloudServer`](crate::coordinator::CloudServer)) without giving up
+//! the robustness contract the repo has defended since PR 6:
+//!
+//! > A worker crash, drain, or rebalance at any decode step either
+//! > continues the exact fault-free token stream or fails typed — never
+//! > silent wrong tokens.
+//!
+//! Three properties make that contract cheap to keep:
+//!
+//! 1. **The cloud is stateless and sampling is (seed, request, pos)-
+//!    keyed** — any worker built from the same deployment spec produces
+//!    bit-identical replies for the same payload, so moving a session
+//!    between workers can never change its tokens, only its timing.
+//! 2. **Decode payloads carry the session's state** — the fleet
+//!    scheduler's mid-stream adoption path (built for reconnects) means
+//!    a replacement worker needs no warm state to continue a stream.
+//! 3. **Replay fences + resume epochs are serializable** — a session's
+//!    entire cloud-side residue (last answered position, its cached
+//!    reply frame, announced control settings, epoch high-water mark)
+//!    fits in a [`MigrateState`](crate::coordinator::protocol::MigrateState)
+//!    and ships worker-to-worker as wire frame kind 7.
+//!
+//! * [`placement`] — the Eq. 8c admission gate lifted to per-worker KV
+//!   budgets: sessions go to the worker with most headroom, tie-broken
+//!   by a seeded hash so placement is deterministic and observable.
+//! * [`pool`] — the [`CloudPool`] itself: edge frame routing, worker
+//!   health sweeps, seeded [`FaultPlan`](crate::wire::FaultPlan) worker
+//!   kills, failover with the ≤1 re-served position bound, and live
+//!   drain/rebalance via export → Migrate frame → import.
+
+pub mod placement;
+pub mod pool;
+
+pub use placement::{Candidate, PlacementDecision};
+pub use pool::{CloudPool, Placement, PoolConfig, PoolStats};

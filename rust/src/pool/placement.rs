@@ -1,0 +1,100 @@
+//! Placement: the Eq. 8c admission gate lifted to per-worker KV budgets.
+//!
+//! The fleet scheduler admits a session while aggregate live-session KV
+//! fits ONE worker's `kv_budget_bytes`. With a pool of workers the same
+//! constraint becomes a placement problem: a new session should land on
+//! the worker where its back-segment KV working set fits with the most
+//! headroom (best-fit-decreasing in reverse — most headroom first keeps
+//! the pool level, which is what makes a later worker loss survivable).
+//!
+//! Placement must also be **deterministic and observable**: the pool
+//! replays identically under a seed (benches, chaos reproduction), and
+//! every decision is logged as a [`PlacementDecision`]. Ties between
+//! equally-empty workers are broken by a seeded splitmix hash of
+//! (seed, request, worker) — not by map iteration order, which would
+//! leak `HashMap` nondeterminism into the fleet layout.
+
+/// One worker eligible to host a session, with its current headroom in
+/// whole sessions (budget ÷ per-session KV bytes, minus already-placed).
+#[derive(Clone, Copy, Debug)]
+pub struct Candidate {
+    pub worker: usize,
+    pub headroom: u64,
+}
+
+/// An observable record of one placement: which worker won and how much
+/// headroom it had when it did.
+#[derive(Clone, Copy, Debug)]
+pub struct PlacementDecision {
+    pub request_id: u64,
+    pub worker: usize,
+    pub headroom: u64,
+}
+
+/// splitmix64 — the standard 64-bit finalizer; good avalanche, no state.
+fn mix(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Pick the candidate with the most headroom; among ties, the one whose
+/// seeded (seed, request, worker) hash is largest. Deterministic in the
+/// candidate SET (order-independent) and in the seed. `None` when no
+/// worker has room — the caller owes the session a typed ADMISSION
+/// rejection, not a silent drop.
+pub fn pick(seed: u64, request_id: u64, candidates: &[Candidate]) -> Option<usize> {
+    candidates
+        .iter()
+        .filter(|c| c.headroom > 0)
+        .max_by_key(|c| (c.headroom, mix(seed ^ request_id ^ (c.worker as u64).wrapping_mul(0xA24B_AED4_963E_E407))))
+        .map(|c| c.worker)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cands(hs: &[u64]) -> Vec<Candidate> {
+        hs.iter().enumerate().map(|(worker, &headroom)| Candidate { worker, headroom }).collect()
+    }
+
+    #[test]
+    fn most_headroom_wins() {
+        assert_eq!(pick(7, 1, &cands(&[1, 3, 2])), Some(1));
+    }
+
+    #[test]
+    fn full_workers_are_ineligible() {
+        assert_eq!(pick(7, 1, &cands(&[0, 0, 2])), Some(2));
+        assert_eq!(pick(7, 1, &cands(&[0, 0, 0])), None);
+        assert_eq!(pick(7, 1, &[]), None);
+    }
+
+    #[test]
+    fn placement_is_deterministic_and_order_independent() {
+        let a = cands(&[4, 4, 4, 4]);
+        let mut b = a.clone();
+        b.reverse();
+        for rid in 0..200u64 {
+            let w = pick(99, rid, &a);
+            assert_eq!(w, pick(99, rid, &b), "rid {rid}: candidate order changed the pick");
+            assert_eq!(w, pick(99, rid, &a), "rid {rid}: pick not reproducible");
+        }
+    }
+
+    #[test]
+    fn tie_break_spreads_across_workers_and_follows_the_seed() {
+        let even = cands(&[4, 4, 4, 4]);
+        let mut hits = [0usize; 4];
+        for rid in 0..400u64 {
+            hits[pick(5, rid, &even).unwrap()] += 1;
+        }
+        for (w, &h) in hits.iter().enumerate() {
+            assert!(h > 40, "worker {w} starved by the tie-break: {hits:?}");
+        }
+        let moved = (0..400u64).filter(|&rid| pick(5, rid, &even) != pick(6, rid, &even)).count();
+        assert!(moved > 100, "changing the seed barely moved the layout ({moved}/400)");
+    }
+}

@@ -1,0 +1,754 @@
+//! The cloud pool runtime: edge frame routing over many fleet workers,
+//! with failover, drain and live migration.
+//!
+//! A [`CloudPool`] owns N worker slots. Each slot is a full
+//! [`FleetScheduler`] over its own [`CloudServer`], built by a stored
+//! factory closure — so a crashed worker can be respawned with the exact
+//! same weights and sampling keys, which is what makes failover
+//! bit-identical rather than merely "close".
+//!
+//! Edges connect to the POOL (any [`WireTransport`]); per (edge, worker)
+//! pair the pool lazily opens an internal loopback route whose worker
+//! half is a polled fleet connection. The pool's event loop
+//! ([`CloudPool::poll`]) then:
+//!
+//! 1. **pumps edges** — classifies each arriving frame from its header
+//!    (payload prefix peek / control kind), places unknown sessions via
+//!    [`placement::pick`] (per-worker Eq. 8c headroom, seeded
+//!    deterministic tie-break), and forwards it down the owning worker's
+//!    route, remembering the last unanswered payload per session;
+//! 2. **steps workers** — intake + one DRR serve round each; a serve
+//!    error or an armed seeded [`FaultPlan`] kill is a worker crash:
+//!    the slot (scheduler, admission charges, fences, control entries,
+//!    routes) is dropped WHOLESALE and respawned, and every victim
+//!    session is re-placed and its unanswered payload re-delivered —
+//!    at most one position is ever re-served, and re-serving is
+//!    bit-identical because cloud sampling is (seed, request, pos)-keyed;
+//! 3. **pumps workers** — forwards replies back to the owning edge,
+//!    retiring pool placement and inflight state at EOS.
+//!
+//! Drain and rebalance ride the same machinery as failover but move
+//! LIVE state: the source worker is quiesced, the session's cloud-side
+//! residue is exported, shipped through the real kind-7 Migrate codec,
+//! and imported on the target through the PR 6 `Resume` epoch fence —
+//! duplicate or stale deliveries get a typed STALE_EPOCH, never a second
+//! live copy. Rebalance is the placement-level analogue of the adaptive
+//! controller's re-planning (re-plan can now also mean "move"); the
+//! controller side holds its end of the bargain by deferring — typed,
+//! never aborting — any per-session reconfig while a Resume handshake
+//! is in flight (`adapt::ReconcileDecision::Defer`).
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::coordinator::protocol::{reject, RejectFrame};
+use crate::coordinator::CloudServer;
+use crate::fleet::{FleetConfig, FleetScheduler};
+use crate::wire::{
+    self, FaultPlan, FrameKind, Loopback, PollRecv, Transport, WireError, WireTransport,
+};
+
+use super::placement::{self, Candidate, PlacementDecision};
+
+/// Knobs of the pool.
+#[derive(Clone, Copy, Debug)]
+pub struct PoolConfig {
+    /// Worker slots to spawn.
+    pub workers: usize,
+    /// Per-worker fleet scheduler config (`kv_budget_bytes` here is the
+    /// PER-WORKER Eq. 8c budget the placement layer packs against).
+    pub fleet: FleetConfig,
+    /// Seed of the placement tie-break hash — the whole fleet layout
+    /// replays identically under one seed.
+    pub seed: u64,
+    /// Run `maybe_rebalance` inside `poll` (the pool's own control loop).
+    pub auto_rebalance: bool,
+    /// Rebalance only when max and min worker occupancy differ by at
+    /// least this many sessions (hysteresis).
+    pub rebalance_gap: usize,
+    /// Minimum polls between rebalance migrations (cooldown).
+    pub rebalance_cooldown: u64,
+}
+
+impl Default for PoolConfig {
+    fn default() -> Self {
+        PoolConfig {
+            workers: 2,
+            fleet: FleetConfig::default(),
+            seed: 0x5EED,
+            auto_rebalance: false,
+            rebalance_gap: 4,
+            rebalance_cooldown: 32,
+        }
+    }
+}
+
+/// Counters of everything the pool did (tests and `benches/pool.rs`
+/// assert on these).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PoolStats {
+    /// Placement decisions taken (every new session, plus re-placements).
+    pub placed: u64,
+    /// Sessions refused because no worker had KV headroom.
+    pub placement_rejected: u64,
+    /// Worker crashes detected (armed fault, serve error, or `kill_worker`).
+    pub kills: u64,
+    /// Fresh workers spawned to replace crashed ones.
+    pub respawns: u64,
+    /// Victim sessions successfully re-placed after a worker loss.
+    pub failovers: u64,
+    /// Unanswered payloads re-delivered during failover — by construction
+    /// at most one per victim per crash (the ≤1 re-served position bound).
+    pub failover_redelivered: u64,
+    /// Victim sessions that found no capacity (typed ADMISSION to edge).
+    pub failover_rejected: u64,
+    /// Live migrations completed (drain + rebalance + explicit).
+    pub migrations: u64,
+    /// Migrations refused by the target (typed, session rolled back).
+    pub migration_rejected: u64,
+    /// Drain operations started.
+    pub drains: u64,
+    /// Rebalance migrations triggered.
+    pub rebalances: u64,
+    /// Reply frames forwarded to edges.
+    pub replies_forwarded: u64,
+    /// Edge connections closed.
+    pub edges_closed: u64,
+}
+
+/// Where a session lives: its worker and the edge connection that owns
+/// its reply path.
+#[derive(Clone, Copy, Debug)]
+pub struct Placement {
+    pub worker: usize,
+    pub edge: u64,
+}
+
+struct WorkerSlot {
+    scheduler: FleetScheduler,
+    /// Pool-side halves of this worker's per-edge loopback routes,
+    /// keyed by edge connection id (also the worker-side conn id).
+    routes: BTreeMap<u64, WireTransport>,
+    /// Draining workers accept no new placements.
+    draining: bool,
+    /// Armed seeded kill: the worker "crashes" once its served-payload
+    /// count reaches `plan.disconnect_after` (mid-prefill at 0,
+    /// mid-decode at k) — the pool-level use of the wire fault plans.
+    fault: Option<FaultPlan>,
+    /// Payloads this incarnation has served (the fault clock).
+    ops: u64,
+}
+
+pub struct CloudPool {
+    factory: Box<dyn Fn() -> Result<CloudServer>>,
+    cfg: PoolConfig,
+    workers: Vec<WorkerSlot>,
+    /// Edge-facing transports, keyed by edge connection id.
+    edges: BTreeMap<u64, WireTransport>,
+    /// Session → (worker, owning edge). BTreeMaps keep every sweep and
+    /// failover in sorted order — the layout is a pure function of the
+    /// seed and the frame arrival order, never of hash iteration.
+    placements: BTreeMap<u64, Placement>,
+    /// Last unanswered payload frame per session: the ≤1-position
+    /// failover replay buffer. Cleared when the reply is forwarded.
+    inflight: BTreeMap<u64, Vec<u8>>,
+    decisions: Vec<PlacementDecision>,
+    next_edge: u64,
+    polls: u64,
+    last_rebalance: u64,
+    pub stats: PoolStats,
+}
+
+impl CloudPool {
+    /// Build a pool of `cfg.workers` workers, each from a fresh call to
+    /// `factory` (same spec → same weights and sampling keys, the
+    /// precondition for bit-identical failover and migration).
+    pub fn new<F>(factory: F, cfg: PoolConfig) -> Result<CloudPool>
+    where
+        F: Fn() -> Result<CloudServer> + 'static,
+    {
+        anyhow::ensure!(cfg.workers >= 1, "a pool needs at least one worker");
+        let factory: Box<dyn Fn() -> Result<CloudServer>> = Box::new(factory);
+        let mut workers = Vec::with_capacity(cfg.workers);
+        for _ in 0..cfg.workers {
+            workers.push(Self::spawn_worker(factory.as_ref(), cfg.fleet)?);
+        }
+        Ok(CloudPool {
+            factory,
+            cfg,
+            workers,
+            edges: BTreeMap::new(),
+            placements: BTreeMap::new(),
+            inflight: BTreeMap::new(),
+            decisions: Vec::new(),
+            next_edge: 0,
+            polls: 0,
+            last_rebalance: 0,
+            stats: PoolStats::default(),
+        })
+    }
+
+    fn spawn_worker(
+        factory: &dyn Fn() -> Result<CloudServer>,
+        fleet: FleetConfig,
+    ) -> Result<WorkerSlot> {
+        Ok(WorkerSlot {
+            scheduler: FleetScheduler::new(factory()?, fleet),
+            routes: BTreeMap::new(),
+            draining: false,
+            fault: None,
+            ops: 0,
+        })
+    }
+
+    /// Register an edge-facing connection. The pool owns the transport;
+    /// sessions arriving on it are placed on first contact.
+    pub fn add_edge(&mut self, transport: WireTransport) -> u64 {
+        let id = self.next_edge;
+        self.next_edge += 1;
+        self.edges.insert(id, transport);
+        id
+    }
+
+    /// Arm a seeded kill on a worker: it crashes when its served-payload
+    /// count reaches the plan's `disconnect_after` (0 = before serving
+    /// anything — mid-prefill; k = after its k-th payload — mid-decode).
+    pub fn arm_worker_fault(&mut self, idx: usize, plan: FaultPlan) {
+        self.workers[idx].fault = Some(plan);
+    }
+
+    // ---- observability ---------------------------------------------------
+
+    pub fn worker_count(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Direct read access to one worker's scheduler (stats, hygiene
+    /// counters; tests assert zero leaks through this).
+    pub fn worker(&self, idx: usize) -> &FleetScheduler {
+        &self.workers[idx].scheduler
+    }
+
+    pub fn is_draining(&self, idx: usize) -> bool {
+        self.workers[idx].draining
+    }
+
+    /// Every placement decision taken so far, in order.
+    pub fn decisions(&self) -> &[PlacementDecision] {
+        &self.decisions
+    }
+
+    pub fn placement_of(&self, request_id: u64) -> Option<Placement> {
+        self.placements.get(&request_id).copied()
+    }
+
+    /// Sessions currently placed (pool-side view).
+    pub fn placed_sessions(&self) -> usize {
+        self.placements.len()
+    }
+
+    /// Unanswered payload frames held for failover replay.
+    pub fn inflight_frames(&self) -> usize {
+        self.inflight.len()
+    }
+
+    pub fn edge_count(&self) -> usize {
+        self.edges.len()
+    }
+
+    /// Aggregate admission charges across all workers.
+    pub fn live_sessions(&self) -> usize {
+        self.workers.iter().map(|w| w.scheduler.live_sessions()).sum()
+    }
+
+    /// Aggregate replay-fence entries across all workers.
+    pub fn fence_entries(&self) -> usize {
+        self.workers.iter().map(|w| w.scheduler.fence_entries()).sum()
+    }
+
+    /// Aggregate cloud control-plane entries across all workers.
+    pub fn control_entries(&self) -> usize {
+        self.workers.iter().map(|w| w.scheduler.cloud().control_entries()).sum()
+    }
+
+    /// Aggregate resume-epoch fence entries across all workers.
+    pub fn resume_entries(&self) -> usize {
+        self.workers.iter().map(|w| w.scheduler.cloud().resume_entries()).sum()
+    }
+
+    // ---- event loop ------------------------------------------------------
+
+    /// One pool step: pump edge frames in, step every worker (intake +
+    /// one DRR round + health check), pump replies out, and — when
+    /// enabled — let the rebalancer move one session. Returns payloads
+    /// served this step.
+    pub fn poll(&mut self) -> Result<usize> {
+        self.polls += 1;
+        self.pump_edges()?;
+        let served = self.step_workers()?;
+        self.pump_workers();
+        if self.cfg.auto_rebalance {
+            self.maybe_rebalance()?;
+        }
+        Ok(served)
+    }
+
+    fn pump_edges(&mut self) -> Result<()> {
+        let ids: Vec<u64> = self.edges.keys().copied().collect();
+        for id in ids {
+            let mut arrived: Vec<Vec<u8>> = Vec::new();
+            let mut closed = false;
+            {
+                let Some(t) = self.edges.get_mut(&id) else { continue };
+                loop {
+                    match t.poll_recv() {
+                        Ok(PollRecv::Frame(f, _)) => arrived.push(f),
+                        Ok(PollRecv::Empty) => break,
+                        Ok(PollRecv::Closed) | Err(_) => {
+                            closed = true;
+                            break;
+                        }
+                    }
+                }
+            }
+            for f in arrived {
+                if self.route_edge_frame(id, f).is_err() {
+                    closed = true;
+                    break;
+                }
+            }
+            if closed {
+                self.close_edge(id);
+            }
+        }
+        Ok(())
+    }
+
+    /// Classify one edge frame from its header and route it to the
+    /// owning (or newly chosen) worker. `Err` is edge-connection-fatal
+    /// (wire damage, or a frame kind an edge must never send).
+    fn route_edge_frame(&mut self, edge_id: u64, frame: Vec<u8>) -> Result<()> {
+        match wire::peek_payload_prefix(&frame) {
+            Ok(pfx) => {
+                let rid = pfx.request_id;
+                let w = match self.placements.get(&rid) {
+                    Some(p) => p.worker,
+                    None => match self.place(rid, edge_id) {
+                        Some(w) => w,
+                        None => {
+                            self.stats.placement_rejected += 1;
+                            self.reject_to_edge(edge_id, rid, "no worker has KV headroom");
+                            return Ok(());
+                        }
+                    },
+                };
+                // The failover replay buffer: if the worker dies before
+                // this frame's reply escapes, re-delivering it re-serves
+                // AT MOST one position — bit-identically, since cloud
+                // sampling is (seed, request, pos)-keyed.
+                self.inflight.insert(rid, frame.clone());
+                self.deliver(w, edge_id, frame)
+            }
+            Err(WireError::WrongKind { got: FrameKind::Reconfig, .. }) => {
+                let rc = wire::decode_reconfig_frame(&frame)?;
+                self.route_control(edge_id, rc.request_id, frame)
+            }
+            Err(WireError::WrongKind { got: FrameKind::Resume, .. }) => {
+                let rs = wire::decode_resume_frame(&frame)?;
+                self.route_control(edge_id, rs.request_id, frame)
+            }
+            Err(e) => Err(e.into()),
+        }
+    }
+
+    fn route_control(&mut self, edge_id: u64, rid: u64, frame: Vec<u8>) -> Result<()> {
+        let w = match self.placements.get(&rid) {
+            Some(p) => p.worker,
+            None => match self.place(rid, edge_id) {
+                Some(w) => w,
+                None => {
+                    self.stats.placement_rejected += 1;
+                    self.reject_to_edge(edge_id, rid, "no worker has KV headroom");
+                    return Ok(());
+                }
+            },
+        };
+        self.deliver(w, edge_id, frame)
+    }
+
+    /// Send a frame down a worker route. A refused send means the
+    /// worker's receiving half is gone — treat it as a crash and run
+    /// failover now instead of waiting for the next health sweep.
+    fn deliver(&mut self, w: usize, edge_id: u64, frame: Vec<u8>) -> Result<()> {
+        if self.route(w, edge_id).send(&frame).is_ok() {
+            return Ok(());
+        }
+        self.fail_worker(w)
+    }
+
+    /// The (edge × worker) loopback route, opened lazily: the worker
+    /// half registers as a polled fleet connection under the EDGE's id.
+    fn route(&mut self, w: usize, edge_id: u64) -> &mut WireTransport {
+        let slot = &mut self.workers[w];
+        if !slot.routes.contains_key(&edge_id) {
+            let (pool_half, worker_half) = Loopback::pair();
+            slot.scheduler.register_polled(edge_id, WireTransport::Loopback(worker_half));
+            slot.routes.insert(edge_id, WireTransport::Loopback(pool_half));
+        }
+        slot.routes.get_mut(&edge_id).expect("route just ensured")
+    }
+
+    fn step_workers(&mut self) -> Result<usize> {
+        let mut served = 0usize;
+        let mut crashed: Vec<usize> = Vec::new();
+        for w in 0..self.workers.len() {
+            let slot = &mut self.workers[w];
+            if let Some(at) = slot.fault.as_ref().and_then(|p| p.disconnect_after) {
+                if slot.ops >= at {
+                    crashed.push(w);
+                    continue;
+                }
+            }
+            slot.scheduler.poll_connections();
+            match slot.scheduler.serve_round() {
+                Ok(n) => {
+                    slot.ops += n as u64;
+                    served += n;
+                }
+                Err(_) => crashed.push(w),
+            }
+        }
+        for w in crashed {
+            self.fail_worker(w)?;
+        }
+        Ok(served)
+    }
+
+    fn pump_workers(&mut self) {
+        for w in 0..self.workers.len() {
+            let eids: Vec<u64> = self.workers[w].routes.keys().copied().collect();
+            for eid in eids {
+                let mut arrived: Vec<Vec<u8>> = Vec::new();
+                let mut dead_route = false;
+                {
+                    let Some(t) = self.workers[w].routes.get_mut(&eid) else { continue };
+                    loop {
+                        match t.poll_recv() {
+                            Ok(PollRecv::Frame(f, _)) => arrived.push(f),
+                            Ok(PollRecv::Empty) => break,
+                            Ok(PollRecv::Closed) | Err(_) => {
+                                dead_route = true;
+                                break;
+                            }
+                        }
+                    }
+                }
+                for f in arrived {
+                    self.forward_to_edge(eid, f);
+                }
+                if dead_route {
+                    // The worker swept this connection (idle deadline,
+                    // dead peer): drop our half too.
+                    self.workers[w].scheduler.close_connection(eid);
+                    self.workers[w].routes.remove(&eid);
+                }
+            }
+        }
+    }
+
+    fn forward_to_edge(&mut self, edge_id: u64, frame: Vec<u8>) {
+        match wire::peek_reply_meta(&frame) {
+            Ok(meta) => {
+                // Answered: the replay buffer entry is spent. EOS also
+                // retires the placement — the pool-side mirror of the
+                // worker's admission-charge release.
+                self.inflight.remove(&meta.request_id);
+                if meta.token == 0 {
+                    self.placements.remove(&meta.request_id);
+                }
+                self.stats.replies_forwarded += 1;
+            }
+            Err(_) => {
+                // ResumeAck, or a typed rejection. A rejection that
+                // condemns the session clears its pool residue too.
+                if let Ok(rj) = wire::decode_error_frame(&frame) {
+                    if rj.code == reject::ADMISSION || rj.code == reject::FAILED {
+                        self.placements.remove(&rj.request_id);
+                        self.inflight.remove(&rj.request_id);
+                    }
+                }
+            }
+        }
+        let Some(t) = self.edges.get_mut(&edge_id) else { return };
+        if t.send(&frame).is_err() {
+            self.close_edge(edge_id);
+        }
+    }
+
+    /// Tear down an edge connection: its worker routes, placements and
+    /// replay buffers go with it (the worker-side close releases the
+    /// admission charges, same as any fleet connection death).
+    pub fn close_edge(&mut self, edge_id: u64) {
+        if self.edges.remove(&edge_id).is_none() {
+            return;
+        }
+        for slot in self.workers.iter_mut() {
+            if slot.routes.remove(&edge_id).is_some() {
+                slot.scheduler.close_connection(edge_id);
+            }
+        }
+        let owned: Vec<u64> = self
+            .placements
+            .iter()
+            .filter(|(_, p)| p.edge == edge_id)
+            .map(|(&rid, _)| rid)
+            .collect();
+        for rid in owned {
+            self.placements.remove(&rid);
+            self.inflight.remove(&rid);
+        }
+        self.stats.edges_closed += 1;
+    }
+
+    // ---- placement -------------------------------------------------------
+
+    /// Eligible workers with per-worker KV headroom, measured in whole
+    /// sessions against the POOL's placement ledger (not the workers'
+    /// live counts, which lag by a serve round) — this keeps placement a
+    /// pure function of arrival order and seed.
+    fn candidates(&self, exclude: usize) -> Vec<Candidate> {
+        let mut counts = vec![0u64; self.workers.len()];
+        for p in self.placements.values() {
+            counts[p.worker] += 1;
+        }
+        self.workers
+            .iter()
+            .enumerate()
+            .filter(|&(w, slot)| w != exclude && !slot.draining)
+            .map(|(w, slot)| {
+                let cap = match self.cfg.fleet.kv_budget_bytes {
+                    Some(b) => b / slot.scheduler.session_kv_bytes().max(1),
+                    None => u64::MAX / 2,
+                };
+                Candidate { worker: w, headroom: cap.saturating_sub(counts[w]) }
+            })
+            .collect()
+    }
+
+    fn place(&mut self, request_id: u64, edge: u64) -> Option<usize> {
+        let cands = self.candidates(usize::MAX);
+        let w = placement::pick(self.cfg.seed, request_id, &cands)?;
+        let headroom =
+            cands.iter().find(|c| c.worker == w).expect("picked from candidates").headroom;
+        self.placements.insert(request_id, Placement { worker: w, edge });
+        self.decisions.push(PlacementDecision { request_id, worker: w, headroom });
+        self.stats.placed += 1;
+        Some(w)
+    }
+
+    fn reject_to_edge(&mut self, edge_id: u64, rid: u64, why: &str) {
+        let rj = RejectFrame {
+            code: reject::ADMISSION,
+            request_id: rid,
+            message: format!("pool: {why}"),
+        };
+        let out = wire::encode_error_frame(&rj);
+        if let Some(t) = self.edges.get_mut(&edge_id) {
+            if t.send(&out).is_err() {
+                self.close_edge(edge_id);
+            }
+        }
+    }
+
+    // ---- failure handling ------------------------------------------------
+
+    /// Crash a worker now (tests and the chaos harness drive this; the
+    /// event loop calls the same path on serve errors and armed faults).
+    pub fn kill_worker(&mut self, idx: usize) -> Result<()> {
+        anyhow::ensure!(idx < self.workers.len(), "no worker {idx}");
+        self.fail_worker(idx)
+    }
+
+    fn fail_worker(&mut self, idx: usize) -> Result<()> {
+        self.stats.kills += 1;
+        // The slot dies WHOLESALE: scheduler (admission charges, fences,
+        // control entries), cloud server, and routes all drop together —
+        // a dead worker cannot leak charges because the ledger that held
+        // them no longer exists. A fresh worker from the same factory
+        // takes the slot (same weights, same sampling keys).
+        let fresh = Self::spawn_worker(self.factory.as_ref(), self.cfg.fleet)?;
+        self.workers[idx] = fresh;
+        self.stats.respawns += 1;
+
+        // Re-place every victim (sorted order: deterministic recovery),
+        // re-delivering its last unanswered payload. The replacement
+        // re-serves at most that ONE position; decode payloads carry the
+        // session's state, so no other warm state is needed.
+        let victims: Vec<(u64, u64)> = self
+            .placements
+            .iter()
+            .filter(|(_, p)| p.worker == idx)
+            .map(|(&rid, p)| (rid, p.edge))
+            .collect();
+        for (rid, edge) in victims {
+            self.placements.remove(&rid);
+            match self.place(rid, edge) {
+                Some(w) => {
+                    self.stats.failovers += 1;
+                    if let Some(frame) = self.inflight.get(&rid).cloned() {
+                        self.stats.failover_redelivered += 1;
+                        self.deliver(w, edge, frame)?;
+                    }
+                }
+                None => {
+                    self.stats.failover_rejected += 1;
+                    self.inflight.remove(&rid);
+                    self.reject_to_edge(edge, rid, "no capacity to fail over");
+                }
+            }
+        }
+        Ok(())
+    }
+
+    // ---- drain / rebalance / migration ------------------------------------
+
+    /// Pump a worker until it has answered everything it owes: no
+    /// pending frames, nothing served in the last round, replies
+    /// forwarded. Migration requires this quiescence (the scheduler's
+    /// export guard makes a violation loud).
+    fn quiesce_worker(&mut self, w: usize) -> Result<()> {
+        for _ in 0..10_000 {
+            self.workers[w].scheduler.poll_connections();
+            let served = self.workers[w].scheduler.serve_round()?;
+            self.pump_workers();
+            if served == 0 && self.workers[w].scheduler.pending_frames() == 0 {
+                return Ok(());
+            }
+        }
+        anyhow::bail!("worker {w} would not quiesce")
+    }
+
+    /// Live-migrate one session: quiesce the source, export its cloud
+    /// residue, ship it through the real kind-7 Migrate codec, import on
+    /// the target behind the Resume epoch fence. On a typed target
+    /// rejection the session is rolled back onto its source — and if
+    /// even that fails, it fails TYPED to the edge. Tokens can never
+    /// change: the fence's cached reply frame moves byte-for-byte, and
+    /// both workers sample from the same (seed, request, pos) keys.
+    pub fn migrate_session(
+        &mut self,
+        rid: u64,
+        target: usize,
+    ) -> Result<std::result::Result<(), RejectFrame>> {
+        anyhow::ensure!(target < self.workers.len(), "no worker {target}");
+        let Some(p) = self.placements.get(&rid).copied() else {
+            anyhow::bail!("request {rid} is not placed on this pool");
+        };
+        if p.worker == target {
+            return Ok(Ok(()));
+        }
+        self.quiesce_worker(p.worker)?;
+        let ms = self.workers[p.worker].scheduler.export_session(rid)?;
+        let bytes = wire::encode_migrate_frame(&ms);
+        let ms = wire::decode_migrate_frame(&bytes)?;
+        self.route(target, p.edge);
+        match self.workers[target].scheduler.import_session(p.edge, &ms)? {
+            Ok(_ack) => {
+                self.placements.insert(rid, Placement { worker: target, edge: p.edge });
+                self.stats.migrations += 1;
+                Ok(Ok(()))
+            }
+            Err(rj) => {
+                self.stats.migration_rejected += 1;
+                // Roll back onto the source: its epoch entry was removed
+                // at export, so the same MigrateState re-admits there.
+                self.route(p.worker, p.edge);
+                match self.workers[p.worker].scheduler.import_session(p.edge, &ms)? {
+                    Ok(_) => Ok(Err(rj)),
+                    Err(rj2) => {
+                        self.placements.remove(&rid);
+                        self.inflight.remove(&rid);
+                        self.reject_to_edge(p.edge, rid, &rj2.message.clone());
+                        Ok(Err(rj2))
+                    }
+                }
+            }
+        }
+    }
+
+    /// First-class drain: stop placing onto the worker, then move every
+    /// resident session off it (live, bit-identical). Returns how many
+    /// sessions moved. The worker stays registered and draining — ready
+    /// for maintenance or `undrain_worker`.
+    pub fn drain_worker(&mut self, idx: usize) -> Result<usize> {
+        anyhow::ensure!(idx < self.workers.len(), "no worker {idx}");
+        self.workers[idx].draining = true;
+        self.stats.drains += 1;
+        self.quiesce_worker(idx)?;
+        let resident: Vec<u64> = self
+            .placements
+            .iter()
+            .filter(|(_, p)| p.worker == idx)
+            .map(|(&rid, _)| rid)
+            .collect();
+        let mut moved = 0usize;
+        for rid in resident {
+            let cands = self.candidates(idx);
+            match placement::pick(self.cfg.seed, rid, &cands) {
+                Some(target) => {
+                    if self.migrate_session(rid, target)?.is_ok() {
+                        moved += 1;
+                    }
+                }
+                None => {
+                    // Nowhere to put it: typed failure, never a silent drop.
+                    let p = self.placements.remove(&rid).expect("resident");
+                    let _ = self.workers[idx].scheduler.export_session(rid)?;
+                    self.inflight.remove(&rid);
+                    self.reject_to_edge(p.edge, rid, "drained worker had no target");
+                }
+            }
+        }
+        Ok(moved)
+    }
+
+    pub fn undrain_worker(&mut self, idx: usize) {
+        self.workers[idx].draining = false;
+    }
+
+    /// One hysteresis-gated rebalance step: when the hottest and coldest
+    /// workers differ by at least `rebalance_gap` sessions (and the
+    /// cooldown has passed), migrate ONE session hot → cold. Bounded
+    /// pause per trigger; repeated polls converge the layout.
+    pub fn maybe_rebalance(&mut self) -> Result<bool> {
+        if self.polls.saturating_sub(self.last_rebalance) < self.cfg.rebalance_cooldown {
+            return Ok(false);
+        }
+        let mut counts = vec![0u64; self.workers.len()];
+        for p in self.placements.values() {
+            counts[p.worker] += 1;
+        }
+        let eligible: Vec<usize> =
+            (0..self.workers.len()).filter(|&w| !self.workers[w].draining).collect();
+        if eligible.len() < 2 {
+            return Ok(false);
+        }
+        let &hot = eligible.iter().max_by_key(|&&w| counts[w]).expect("non-empty");
+        let &cold = eligible.iter().min_by_key(|&&w| counts[w]).expect("non-empty");
+        if counts[hot] - counts[cold] < self.cfg.rebalance_gap as u64 {
+            return Ok(false);
+        }
+        let Some(rid) =
+            self.placements.iter().find(|(_, p)| p.worker == hot).map(|(&rid, _)| rid)
+        else {
+            return Ok(false);
+        };
+        self.last_rebalance = self.polls;
+        let ok = self.migrate_session(rid, cold)?.is_ok();
+        if ok {
+            self.stats.rebalances += 1;
+        }
+        Ok(ok)
+    }
+}

@@ -53,10 +53,20 @@
 //!
 //! `Error` (kind 6): `[code u8][request_id u64][len u16][UTF-8 message]`
 //! (11 + len bytes) — the cloud's in-band typed rejection.
+//!
+//! The v6 pool frame:
+//!
+//! `Migrate` (kind 7): `[request_id u64][epoch u32][next_pos u64][flags u8]`
+//! (21 bytes; flags bit0 = fence present, bit1 = control present), then when
+//! bit0 `[fence_pos u64][frame_len u32][cached reply frame bytes]` — the
+//! embedded frame is a complete kind-2 reply frame and is re-validated on
+//! decode (envelope, CRC, matching request/pos) — then when bit1 the 22-byte
+//! `Reconfig` body verbatim.
 
 use crate::adapt::Reconfig;
 use crate::coordinator::protocol::{
-    CloudReply, CompressedKv, CompressedTensor, RejectFrame, Resume, ResumeAck, SplitPayload,
+    CloudReply, CompressedKv, CompressedTensor, MigrateState, RejectFrame, Resume, ResumeAck,
+    SplitPayload,
 };
 use crate::coordinator::sampling::SamplingSpec;
 use crate::quant::rans::CodedStream;
@@ -72,6 +82,8 @@ pub const PAYLOAD_OVERHEAD: u64 = FRAME_OVERHEAD;
 pub const REPLY_OVERHEAD: u64 = FRAME_OVERHEAD + 8;
 /// Fixed bytes a reconfig frame adds on top of `Reconfig::wire_bytes()`.
 pub const RECONFIG_OVERHEAD: u64 = FRAME_OVERHEAD;
+/// Fixed bytes a migrate frame adds on top of `MigrateState::wire_bytes()`.
+pub const MIGRATE_OVERHEAD: u64 = FRAME_OVERHEAD;
 
 const FLAG_PREFILL: u8 = 1;
 const FLAG_KV: u8 = 1 << 1;
@@ -84,6 +96,10 @@ const RC_FLAG_KV: u8 = 1;
 const RS_FLAG_KV: u8 = 1;
 /// ResumeAck body flag: the `last_pos` field is meaningful.
 const RA_FLAG_LAST_POS: u8 = 1;
+/// Migrate body flag: a replay fence (pos + cached reply frame) is shipped.
+const MG_FLAG_FENCE: u8 = 1;
+/// Migrate body flag: announced control-plane settings are shipped.
+const MG_FLAG_CONTROL: u8 = 1 << 1;
 
 fn malformed(m: impl Into<String>) -> WireError {
     WireError::Malformed(m.into())
@@ -656,6 +672,137 @@ pub fn decode_error_frame(bytes: &[u8]) -> Result<RejectFrame, WireError> {
     let e = read_reject(&mut r)?;
     r.done()?;
     Ok(e)
+}
+
+fn write_migrate(out: &mut Vec<u8>, ms: &MigrateState) {
+    out.extend_from_slice(&ms.request_id.to_le_bytes());
+    out.extend_from_slice(&ms.epoch.to_le_bytes());
+    out.extend_from_slice(&ms.next_pos.to_le_bytes());
+    let mut flags = 0u8;
+    if ms.fence.is_some() {
+        flags |= MG_FLAG_FENCE;
+    }
+    if ms.control.is_some() {
+        flags |= MG_FLAG_CONTROL;
+    }
+    out.push(flags);
+    if let Some((pos, frame)) = &ms.fence {
+        assert!(frame.len() <= u32::MAX as usize, "fenced reply frame overflows the wire's u32");
+        out.extend_from_slice(&pos.to_le_bytes());
+        out.extend_from_slice(&(frame.len() as u32).to_le_bytes());
+        out.extend_from_slice(frame);
+    }
+    if let Some(rc) = &ms.control {
+        write_reconfig(out, rc);
+    }
+}
+
+fn read_migrate(r: &mut Reader) -> Result<MigrateState, WireError> {
+    let request_id = r.u64()?;
+    let epoch = r.u32()?;
+    let next_pos = r.u64()?;
+    let flags = r.u8()?;
+    if flags & !(MG_FLAG_FENCE | MG_FLAG_CONTROL) != 0 {
+        return Err(malformed(format!("unknown migrate flags {flags:#04x}")));
+    }
+    let fence = if flags & MG_FLAG_FENCE != 0 {
+        let pos = r.u64()?;
+        let len = r.u32()? as usize;
+        let frame = r.take(len)?.to_vec();
+        // The cached frame is replayed verbatim to the edge on a duplicate
+        // position, so a migrate that ships garbage here would turn into a
+        // silent wrong answer later. Validate the whole embedded frame NOW:
+        // envelope, CRC, structure, and that it fences this very session at
+        // this very position.
+        let (reply, _server_s) = decode_reply_frame(&frame)?;
+        if reply.request_id != request_id {
+            return Err(malformed(format!(
+                "fenced reply is for request {}, migrate is for {request_id}",
+                reply.request_id
+            )));
+        }
+        if reply.pos != pos {
+            return Err(malformed(format!(
+                "fenced reply answers pos {}, fence claims {pos}",
+                reply.pos
+            )));
+        }
+        if next_pos != pos + 1 {
+            return Err(malformed(format!(
+                "migrate next_pos {next_pos} disagrees with fence pos {pos}"
+            )));
+        }
+        Some((pos, frame))
+    } else {
+        None
+    };
+    let control = if flags & MG_FLAG_CONTROL != 0 {
+        let rc = read_reconfig(r)?;
+        if rc.request_id != request_id {
+            return Err(malformed(format!(
+                "migrated control is for request {}, migrate is for {request_id}",
+                rc.request_id
+            )));
+        }
+        Some(rc)
+    } else {
+        None
+    };
+    Ok(MigrateState { request_id, epoch, next_pos, fence, control })
+}
+
+/// Encode one worker-to-worker session migration as a complete frame.
+/// Body length is asserted equal to `wire_bytes()` — the handoff is
+/// byte-accounted exactly like the data plane.
+pub fn encode_migrate_frame(ms: &MigrateState) -> Vec<u8> {
+    let mut body = Vec::with_capacity(ms.wire_bytes() as usize);
+    write_migrate(&mut body, ms);
+    debug_assert_eq!(
+        body.len() as u64,
+        ms.wire_bytes(),
+        "migrate body must encode to exactly wire_bytes()"
+    );
+    frame::encode_frame(FrameKind::Migrate, &body)
+}
+
+/// Strict decode of a migrate frame (kind, CRC, structure, consumption),
+/// including full re-validation of the embedded replay-fence reply frame.
+pub fn decode_migrate_frame(bytes: &[u8]) -> Result<MigrateState, WireError> {
+    let (kind, body) = frame::decode_frame(bytes)?;
+    if kind != FrameKind::Migrate {
+        return Err(WireError::WrongKind { want: FrameKind::Migrate, got: kind });
+    }
+    let mut r = Reader::new(body);
+    let ms = read_migrate(&mut r)?;
+    r.done()?;
+    Ok(ms)
+}
+
+/// The peekable fixed prefix of an encoded reply frame's body — what the
+/// pool needs to route a worker's answer back to its edge and retire
+/// finished streams (EOS = token 0) without decoding the KV rows.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ReplyMeta {
+    pub request_id: u64,
+    pub pos: u64,
+    pub token: u32,
+}
+
+/// Peek the `[request_id][pos][token]` fields of an encoded *reply frame*
+/// (they sit behind the 8-byte server-compute-seconds prefix). The frame
+/// envelope is fully validated — corrupted replies must never be routed.
+pub fn peek_reply_meta(frame_bytes: &[u8]) -> Result<ReplyMeta, WireError> {
+    let (kind, body) = frame::decode_frame(frame_bytes)?;
+    if kind != FrameKind::Reply {
+        return Err(WireError::WrongKind { want: FrameKind::Reply, got: kind });
+    }
+    if body.len() < 28 {
+        return Err(WireError::Truncated { need: 28, have: body.len() });
+    }
+    let request_id = u64::from_le_bytes(body[8..16].try_into().unwrap());
+    let pos = u64::from_le_bytes(body[16..24].try_into().unwrap());
+    let token = u32::from_le_bytes(body[24..28].try_into().unwrap());
+    Ok(ReplyMeta { request_id, pos, token })
 }
 
 /// The peekable fixed prefix of an encoded payload frame's body —

@@ -117,6 +117,60 @@ impl FaultPlan {
     }
 }
 
+/// One seeded plan deriving **correlated** fault windows across a whole
+/// set of connections — the coordinated-failure mode independent
+/// per-connection plans cannot express (a backhaul cut or cell outage
+/// takes 30% of a fleet down in the *same* window, not 30% of frames
+/// spread uniformly over time).
+///
+/// Cohort membership and each member's exact failure op are both pure
+/// functions of `(seed, conn_id)`, so any party holding the plan — the
+/// storm driver, the assertion at the other end, a replaying debugger —
+/// derives the identical outage without coordination.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CorrelatedOutage {
+    /// Seed of the whole correlated plan.
+    pub seed: u64,
+    /// Fraction of connections in the outage cohort, in `[0, 1]`.
+    pub fraction: f64,
+    /// First transport op of the shared outage window.
+    pub window_start: u64,
+    /// Window width in transport ops: every cohort member's link dies at
+    /// an op in `[window_start, window_start + window_ops)`.
+    pub window_ops: u64,
+}
+
+impl CorrelatedOutage {
+    pub fn new(seed: u64, fraction: f64, window_start: u64, window_ops: u64) -> CorrelatedOutage {
+        assert!((0.0..=1.0).contains(&fraction), "cohort fraction must be a probability");
+        assert!(window_ops >= 1, "the outage window must span at least one op");
+        CorrelatedOutage { seed, fraction, window_start, window_ops }
+    }
+
+    fn conn_rng(&self, conn_id: u64) -> Rng {
+        // Per-connection stream: decorrelate ids without decorrelating
+        // the plan (same (seed, conn) ⇒ same draws, always).
+        Rng::new(self.seed ^ conn_id.wrapping_mul(0x9E37_79B9_7F4A_7C15))
+    }
+
+    /// Is this connection in the outage cohort?
+    pub fn hits(&self, conn_id: u64) -> bool {
+        self.conn_rng(conn_id).f64() < self.fraction
+    }
+
+    /// The per-connection [`FaultPlan`] this correlated plan implies:
+    /// cohort members disconnect at a seeded op inside the shared window,
+    /// everyone else runs clean.
+    pub fn plan_for(&self, conn_id: u64) -> FaultPlan {
+        let mut rng = self.conn_rng(conn_id);
+        if rng.f64() >= self.fraction {
+            return FaultPlan::clean(self.seed ^ conn_id);
+        }
+        let at = self.window_start + rng.below(self.window_ops as usize) as u64;
+        FaultPlan::disconnect(self.seed ^ conn_id, at)
+    }
+}
+
 /// Counts of the faults actually injected — the chaos harness asserts
 /// both determinism (same seed ⇒ same counts) and coverage (the sweep
 /// really exercised every class).
@@ -172,6 +226,12 @@ impl FaultyTransport {
 
     pub fn plan(&self) -> &FaultPlan {
         &self.plan
+    }
+
+    /// The wrapped transport. The fleet sweep's shutdown path needs to
+    /// reach an OS socket hiding behind fault injection.
+    pub fn inner(&self) -> &WireTransport {
+        &self.inner
     }
 
     /// The transport hit its scheduled disconnect (every further op errors).
@@ -461,5 +521,78 @@ mod tests {
         assert!(agg.reordered > 0, "sweep must reorder");
         assert!(agg.stalled > 0, "sweep must stall");
         assert!(agg.disconnected, "sweep must disconnect");
+    }
+
+    #[test]
+    fn correlated_outage_is_deterministic() {
+        let plan = CorrelatedOutage::new(0xC0DE, 0.3, 40, 16);
+        for conn in 0..200u64 {
+            assert_eq!(plan.hits(conn), plan.hits(conn));
+            assert_eq!(plan.plan_for(conn), plan.plan_for(conn));
+            // membership and the derived plan must agree
+            assert_eq!(plan.hits(conn), plan.plan_for(conn).disconnect_after.is_some());
+        }
+    }
+
+    #[test]
+    fn correlated_outage_cohort_matches_the_fraction() {
+        let plan = CorrelatedOutage::new(7, 0.3, 100, 32);
+        let hit = (0..2000u64).filter(|&c| plan.hits(c)).count();
+        let frac = hit as f64 / 2000.0;
+        assert!(
+            (0.25..=0.35).contains(&frac),
+            "cohort fraction {frac} strays from the requested 0.3"
+        );
+    }
+
+    #[test]
+    fn correlated_outage_confines_failures_to_the_window() {
+        let plan = CorrelatedOutage::new(99, 0.5, 100, 32);
+        let mut in_cohort = 0;
+        for conn in 0..500u64 {
+            let fp = plan.plan_for(conn);
+            match fp.disconnect_after {
+                Some(at) => {
+                    in_cohort += 1;
+                    assert!(
+                        (100..132).contains(&at),
+                        "conn {conn} dies at op {at}, outside the [100, 132) window"
+                    );
+                    // cohort members fail by disconnect ONLY — no
+                    // uncorrelated frame-level noise rides along
+                    assert_eq!(fp.corrupt_rate, 0.0);
+                    assert_eq!(fp.stall_rate, 0.0);
+                }
+                None => assert_eq!(fp, FaultPlan::clean(plan.seed ^ conn)),
+            }
+        }
+        assert!(in_cohort > 150, "half the fleet should be in the cohort");
+    }
+
+    #[test]
+    fn correlated_outage_different_seeds_differ() {
+        let a = CorrelatedOutage::new(1, 0.3, 50, 16);
+        let b = CorrelatedOutage::new(2, 0.3, 50, 16);
+        let cohort = |p: &CorrelatedOutage| (0..300u64).filter(|&c| p.hits(c)).collect::<Vec<_>>();
+        assert_ne!(cohort(&a), cohort(&b), "seeds must decorrelate the cohorts");
+    }
+
+    #[test]
+    fn correlated_outage_drives_a_faulty_transport_down_in_window() {
+        let plan = CorrelatedOutage::new(0xFEED, 1.0, 3, 4);
+        let fp = plan.plan_for(42);
+        let at = fp.disconnect_after.expect("fraction 1.0 puts everyone in the cohort");
+        let (mut tx, _rx) = faulty_pair(fp);
+        let f = frame::encode_frame(FrameKind::Payload, b"storm");
+        let mut ok = 0u64;
+        loop {
+            if tx.send(&f).is_err() {
+                break;
+            }
+            ok += 1;
+            assert!(ok < 64, "transport must die at its scheduled op");
+        }
+        assert_eq!(ok, at, "link survives exactly its scheduled ops then dies");
+        assert!(tx.is_dead());
     }
 }

@@ -2,10 +2,10 @@
 //!
 //! ```text
 //! [magic   u32]  0x53504C57 ("SPLW", little-endian "WLPS" on the wire)
-//! [version u8 ]  5 (wire format v5: v4 layouts + position-stamped
-//!                replies and the Resume/ResumeAck/Error recovery frames)
+//! [version u8 ]  6 (wire format v6: v5 layouts + the worker-to-worker
+//!                Migrate frame carrying a session's cloud-side state)
 //! [kind    u8 ]  1 = SplitPayload, 2 = CloudReply, 3 = Reconfig,
-//!                4 = Resume, 5 = ResumeAck, 6 = Error
+//!                4 = Resume, 5 = ResumeAck, 6 = Error, 7 = Migrate
 //! [len     u32]  body length in bytes
 //! [body       ]  len bytes (see `wire::codec` for the per-kind layout)
 //! [crc32   u32]  IEEE CRC-32 over version, kind, len and body
@@ -34,13 +34,13 @@ pub const MAGIC: u32 = 0x53504C57;
 /// allocates or blocks reading gigabytes it will only throw away at the
 /// CRC check.
 pub const MAX_BODY_BYTES: usize = 256 << 20;
-/// Wire format v5: the v4 layouts with a position stamp on every
-/// `CloudReply` (so a duplicated or stale reply is a typed rejection,
-/// never a silent double-apply), plus the session-recovery frames —
-/// `Resume`/`ResumeAck` for reconnect-and-continue after a disconnect or
-/// cloud restart, and `Error` for in-band typed rejections that keep the
-/// connection serving (see `wire::codec` and the coordinator).
-pub const VERSION: u8 = 5;
+/// Wire format v6: the v5 layouts (position-stamped replies, the
+/// `Resume`/`ResumeAck` recovery handshake, in-band `Error` rejections)
+/// plus `Migrate` — a worker-to-worker frame carrying a session's entire
+/// cloud-side state (replay fence, announced control settings, resume
+/// epoch) so the cloud pool can move a live session between workers
+/// without forking its token stream (see `wire::codec` and `pool`).
+pub const VERSION: u8 = 6;
 
 /// What a frame's body contains.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -65,6 +65,12 @@ pub enum FrameKind {
     /// position, unknown session). The connection keeps serving — the
     /// error frame *is* the typed error, not a torn socket.
     Error = 6,
+    /// Worker→worker live-migration of a session's cloud-side state:
+    /// the replay fence (last answered position + its cached reply
+    /// frame), the announced control-plane settings, and a strictly
+    /// increasing migration epoch so duplicate or stale deliveries
+    /// during the handoff are fenced off exactly like a stale `Resume`.
+    Migrate = 7,
 }
 
 impl FrameKind {
@@ -76,6 +82,7 @@ impl FrameKind {
             4 => Ok(FrameKind::Resume),
             5 => Ok(FrameKind::ResumeAck),
             6 => Ok(FrameKind::Error),
+            7 => Ok(FrameKind::Migrate),
             other => Err(WireError::BadKind(other)),
         }
     }
@@ -327,8 +334,8 @@ mod tests {
         bad_version[4] = 99;
         assert!(matches!(decode_frame(&bad_version), Err(WireError::BadVersion(99))));
         let mut bad_kind = f.clone();
-        bad_kind[5] = 7;
-        assert!(matches!(decode_frame(&bad_kind), Err(WireError::BadKind(7))));
+        bad_kind[5] = 42;
+        assert!(matches!(decode_frame(&bad_kind), Err(WireError::BadKind(42))));
         let mut bad_len = f.clone();
         bad_len[6] ^= 1;
         assert!(matches!(decode_frame(&bad_len), Err(WireError::Length { .. })));

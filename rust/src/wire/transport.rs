@@ -295,6 +295,17 @@ impl SocketTransport {
         Ok(SocketTransport { stream })
     }
 
+    /// Shut the OS socket down in both directions. Every clone of the
+    /// stream sees it immediately: a reader thread blocked in `recv_eof`
+    /// on another clone returns EOF *now* instead of at its own I/O
+    /// deadline — the teeth of the fleet server's idle/half-open sweep.
+    pub fn shutdown(&self) {
+        let _ = match &self.stream {
+            SocketStream::Tcp(s) => s.shutdown(std::net::Shutdown::Both),
+            SocketStream::Unix(s) => s.shutdown(std::net::Shutdown::Both),
+        };
+    }
+
     /// Connect with retries. Only errors that mean "the peer is still
     /// binding" are retried (connection refused; unix socket file not
     /// created yet); a bad address or missing directory fails instantly
@@ -455,6 +466,23 @@ impl WireTransport {
             WireTransport::Loopback(t) => t.drain(),
             WireTransport::Socket(_) => 0,
             WireTransport::Faulty(t) => t.drain(),
+        }
+    }
+
+    /// Tear the underlying OS connection down, if there is one. Loopback
+    /// and sim transports close by drop (their channel halves disconnect);
+    /// a socket needs an explicit `shutdown` so clones held by a blocked
+    /// reader thread unblock immediately. Fault-wrapped transports
+    /// delegate to whatever they wrap.
+    pub fn shutdown(&self) {
+        match self {
+            WireTransport::Socket(t) => t.shutdown(),
+            WireTransport::Faulty(t) => {
+                if let WireTransport::Socket(inner) = t.inner() {
+                    inner.shutdown();
+                }
+            }
+            WireTransport::Sim(_) | WireTransport::Loopback(_) => {}
         }
     }
 

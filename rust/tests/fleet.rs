@@ -490,3 +490,69 @@ fn cloud_side_fault_injection_sweeps_the_victim_only() {
     assert_eq!(healthy[0].session.tokens(), &want.tokens[..]);
     let _ = victim_conn;
 }
+
+/// Regression (idle-deadline hardening): a connection that admits a
+/// session — charge held, replay fence installed — and then goes silent
+/// must be reaped by the idle sweep THROUGH the full `close_connection`
+/// path: charge, fence and connection all released, counted in
+/// `idle_swept`, while a connection registered after the stall streams
+/// to completion untouched.
+#[test]
+fn idle_sweep_reaps_a_stalled_connection_through_close() {
+    let eng = engine();
+    let spec = DeploymentSpec::defaults(small_cfg(4), 2);
+    let cloud = spec.build_cloud_server(eng.clone()).unwrap();
+    let edge = spec.build_edge_device(eng.clone()).unwrap();
+    let cfg = FleetConfig {
+        idle_timeout: Some(std::time::Duration::from_millis(50)),
+        ..FleetConfig::default()
+    };
+    let mut fleet = FleetServer::new(cloud, cfg);
+
+    // The staller: prefill admitted and served, then silence forever.
+    let stalled_req = Request::new(61, vec![10, 20, 30], 8);
+    let (mut stall_port, stall_conn) = dial(&mut fleet);
+    let mut stall_sess = Session::for_edge(stalled_req.clone(), &edge, spec.edge_controller());
+    let up = match stall_sess.poll(&edge).unwrap() {
+        SessionAction::Transmit(p) => stall_port.send_payload(&p).unwrap(),
+        other => panic!("expected the prefill transmit, got {other:?}"),
+    };
+    fleet.poll().unwrap();
+    let (reply, cloud_s, down) =
+        stall_port.try_recv_reply().unwrap().expect("the prefill must be served");
+    stall_sess.on_reply(&edge, &reply, cloud_s, up, down).unwrap();
+    if reply.token == 0 {
+        return; // stream ended at its first token; there is nothing to stall
+    }
+    assert_eq!(fleet.scheduler().live_sessions(), 1, "admission must charge the staller");
+    assert_eq!(fleet.scheduler().fence_entries(), 1, "the served prefill must be fenced");
+
+    // Wait out the deadline, then let the server turn once: the sweep
+    // must tear the stalled connection down end to end.
+    std::thread::sleep(std::time::Duration::from_millis(80));
+    fleet.poll().unwrap();
+    assert_eq!(fleet.stats().idle_swept, 1, "the sweep must count the stalled connection");
+    assert!(fleet.stats().closed_conns >= 1, "idle sweep must run through close_connection");
+    assert_eq!(fleet.scheduler().connections(), 0, "the stalled connection must be gone");
+    assert_eq!(fleet.scheduler().live_sessions(), 0, "the staller's charge must be released");
+    assert_eq!(fleet.scheduler().fence_entries(), 0, "the staller's fence must be swept");
+
+    // The freed capacity is genuinely reusable: a fresh tenant registered
+    // AFTER the stall (recent `last_seen`, so the sweep must not touch
+    // it) streams to completion bit-identically.
+    let req = Request::new(62, vec![3, 141, 59, 26], 8);
+    let (port, conn_id) = dial(&mut fleet);
+    let mut tenants = vec![Tenant {
+        session: Session::for_edge(req.clone(), &edge, spec.edge_controller()),
+        port,
+        conn_id,
+        up: None,
+    }];
+    drive_all(&mut fleet, &edge, &mut tenants);
+    assert_eq!(fleet.stats().idle_swept, 1, "a live connection was swept as idle");
+    let dspec = DeploymentSpec::defaults(small_cfg(4), 2);
+    let mut pipe = build_pipeline(eng, &dspec).unwrap();
+    let want = pipe.generate(&req).unwrap();
+    assert_eq!(tenants[0].session.tokens(), &want.tokens[..]);
+    let _ = stall_conn;
+}

@@ -1,0 +1,644 @@
+//! Integration tests for the sharded cloud pool: worker failover, drain,
+//! and live bit-identical session migration.
+//!
+//! The robustness contract under test, everywhere: a worker crash,
+//! drain, or rebalance at ANY decode step either continues the exact
+//! fault-free token stream or fails typed — never silent wrong tokens.
+//! Every test therefore ends in one of two ways: the session's tokens
+//! equal the solo `SplitPipeline::generate` oracle bit-for-bit, or the
+//! edge saw a typed in-band rejection. On top of that the pool must be
+//! hygienic: admission charges, replay fences, control entries,
+//! placements and replay buffers all return to zero once the sessions
+//! and their edge connections are gone.
+
+use std::collections::HashSet;
+use std::rc::Rc;
+
+use splitserve::channel::TransferOutcome;
+use splitserve::coordinator::{
+    build_pipeline, protocol::reject, DeploymentSpec, EdgeDevice, Request, Session, SessionAction,
+};
+use splitserve::fleet::FleetConfig;
+use splitserve::model::ModelConfig;
+use splitserve::pool::{CloudPool, PoolConfig};
+use splitserve::runtime::Engine;
+use splitserve::util::rng::Rng;
+use splitserve::wire::{self, EdgePort, FaultPlan, Loopback, Transport, WireError, WireTransport};
+
+fn small_cfg(n_layers: usize) -> ModelConfig {
+    let mut cfg = ModelConfig::sim7b();
+    cfg.n_layers = n_layers;
+    cfg
+}
+
+fn engine() -> Rc<Engine> {
+    Rc::new(Engine::load("artifacts", &ModelConfig::sim7b()).expect("run `make artifacts`"))
+}
+
+/// Pool over `cfg.workers` fresh `CloudServer`s built from one spec —
+/// same weights and sampling keys per worker, the precondition for
+/// bit-identical failover and migration.
+fn mk_pool(eng: &Rc<Engine>, spec: &DeploymentSpec, cfg: PoolConfig) -> CloudPool {
+    let fspec = spec.clone();
+    let feng = eng.clone();
+    CloudPool::new(move || fspec.build_cloud_server(feng.clone()), cfg).unwrap()
+}
+
+fn pcfg(workers: usize, seed: u64) -> PoolConfig {
+    PoolConfig { workers, seed, ..PoolConfig::default() }
+}
+
+/// Solo oracle: the same request through the blocking single-session
+/// pipeline (stateless cloud + (seed, request, pos)-keyed sampling means
+/// nothing the pool does may change a single token of this).
+fn oracle(eng: &Rc<Engine>, spec: &DeploymentSpec, req: &Request) -> Vec<u32> {
+    let mut pipe = build_pipeline(eng.clone(), spec).unwrap();
+    pipe.generate(req).unwrap().tokens
+}
+
+/// One edge session riding its own pool connection.
+struct Tenant {
+    session: Session,
+    port: EdgePort,
+    edge_id: u64,
+    up: Option<TransferOutcome>,
+}
+
+fn connect(pool: &mut CloudPool, edge: &EdgeDevice, spec: &DeploymentSpec, req: &Request) -> Tenant {
+    let (edge_half, pool_half) = Loopback::pair();
+    let edge_id = pool.add_edge(WireTransport::Loopback(pool_half));
+    Tenant {
+        session: Session::for_edge(req.clone(), edge, spec.edge_controller()),
+        port: EdgePort::new(WireTransport::Loopback(edge_half)),
+        edge_id,
+        up: None,
+    }
+}
+
+/// One interleaved step: every non-terminal session ships what it has,
+/// the pool turns once, and whatever replies came back are absorbed.
+/// Returns how many replies were absorbed this step.
+fn step_pool(pool: &mut CloudPool, edge: &EdgeDevice, tenants: &mut [Tenant]) -> usize {
+    for t in tenants.iter_mut() {
+        if t.session.is_terminal() || t.up.is_some() {
+            continue;
+        }
+        if let SessionAction::Transmit(p) = t.session.poll(edge).unwrap() {
+            t.up = Some(t.port.send_payload(&p).unwrap());
+        }
+    }
+    pool.poll().unwrap();
+    let mut absorbed = 0usize;
+    for t in tenants.iter_mut() {
+        if t.session.is_terminal() {
+            continue;
+        }
+        if let Some((reply, cloud_s, down)) = t.port.try_recv_reply().unwrap() {
+            let up = t.up.take().expect("reply without an in-flight payload");
+            t.session.on_reply(edge, &reply, cloud_s, up, down).unwrap();
+            absorbed += 1;
+        }
+    }
+    absorbed
+}
+
+fn drive_pool(pool: &mut CloudPool, edge: &EdgeDevice, tenants: &mut [Tenant]) {
+    let mut guard = 0usize;
+    while tenants.iter().any(|t| !t.session.is_terminal()) {
+        guard += 1;
+        assert!(guard < 100_000, "pool drive did not converge");
+        step_pool(pool, edge, tenants);
+    }
+}
+
+/// Zero-leak invariant, checked after the sessions (and, for streams
+/// that end by edge-side budget exhaustion rather than a served EOS,
+/// their edge connections) are gone.
+fn assert_leak_free(pool: &CloudPool, ctx: &str) {
+    assert_eq!(pool.live_sessions(), 0, "{ctx}: admission charges leaked");
+    assert_eq!(pool.fence_entries(), 0, "{ctx}: replay fences leaked");
+    assert_eq!(pool.control_entries(), 0, "{ctx}: control entries leaked");
+    assert_eq!(pool.placed_sessions(), 0, "{ctx}: pool placements leaked");
+    assert_eq!(pool.inflight_frames(), 0, "{ctx}: replay buffers leaked");
+}
+
+/// ACCEPTANCE: migrating a session between two workers after EVERY
+/// decode step yields the bit-identical token stream, with the charge
+/// moving atomically and nothing leaked afterwards.
+#[test]
+fn migration_at_every_decode_step_is_bit_identical() {
+    let eng = engine();
+    let spec = DeploymentSpec::defaults(small_cfg(4), 2);
+    let edge = spec.build_edge_device(eng.clone()).unwrap();
+    let req = Request::new(4242, vec![3, 141, 59, 26], 8);
+    let want = oracle(&eng, &spec, &req);
+    let total = want.len();
+    assert!(total >= 2, "stream too short to migrate mid-decode ({total} tokens)");
+
+    for k in 1..total {
+        let mut pool = mk_pool(&eng, &spec, pcfg(2, 0xA11CE));
+        let mut t = connect(&mut pool, &edge, &spec, &req);
+        let mut absorbed = 0usize;
+        let mut guard = 0usize;
+        while absorbed < k {
+            guard += 1;
+            assert!(guard < 10_000, "k={k}: pre-migration drive did not converge");
+            absorbed += step_pool(&mut pool, &edge, std::slice::from_mut(&mut t));
+        }
+        let src = pool.placement_of(req.id).expect("mid-stream session must be placed").worker;
+        let dst = 1 - src;
+        pool.migrate_session(req.id, dst)
+            .unwrap()
+            .unwrap_or_else(|rj| panic!("k={k}: target refused the migration: {rj:?}"));
+        assert_eq!(pool.placement_of(req.id).unwrap().worker, dst, "k={k}: placement stayed put");
+        assert_eq!(pool.worker(src).live_sessions(), 0, "k={k}: source kept the charge");
+        assert_eq!(pool.worker(dst).live_sessions(), 1, "k={k}: target never took the charge");
+        while !t.session.is_terminal() {
+            guard += 1;
+            assert!(guard < 10_000, "k={k}: post-migration drive did not converge");
+            step_pool(&mut pool, &edge, std::slice::from_mut(&mut t));
+        }
+        assert_eq!(
+            t.session.tokens(),
+            &want[..],
+            "k={k}: migrating after the {k}-th reply changed the token stream"
+        );
+        assert_eq!(pool.stats.migrations, 1, "k={k}: exactly one migration expected");
+        assert_eq!(pool.stats.migration_rejected, 0, "k={k}");
+        if want.last() == Some(&0) {
+            assert_eq!(pool.resume_entries(), 0, "k={k}: EOS left a resume epoch behind");
+        }
+        pool.close_edge(t.edge_id);
+        assert_leak_free(&pool, &format!("k={k}"));
+    }
+}
+
+/// ACCEPTANCE: a seeded worker-kill storm over a 64-session pool. Every
+/// session recovers (none is rejected — the budget is unbounded), every
+/// stream is bit-identical to its solo oracle, at most one position is
+/// re-served per victim per crash, and the pool is leak-free after.
+#[test]
+fn seeded_worker_kill_storm_recovers_every_session() {
+    let eng = engine();
+    let spec = DeploymentSpec::defaults(small_cfg(2), 1);
+    let edge = spec.build_edge_device(eng.clone()).unwrap();
+    let reqs: Vec<Request> = (0..64u64)
+        .map(|i| {
+            Request::new(
+                1 + i,
+                vec![3 + (i % 97) as u32, 50, 9, 1 + (i % 13) as u32],
+                4 + (i % 3) as usize,
+            )
+        })
+        .collect();
+    let mut pool = mk_pool(&eng, &spec, pcfg(4, 0x5708));
+    let mut tenants: Vec<Tenant> =
+        reqs.iter().map(|r| connect(&mut pool, &edge, &spec, r)).collect();
+
+    let mut rng = Rng::new(0xC0FFEE);
+    let mut steps = 0u64;
+    let mut kills = 0u64;
+    while tenants.iter().any(|t| !t.session.is_terminal()) {
+        steps += 1;
+        assert!(steps < 100_000, "storm drive did not converge");
+        if steps % 2 == 0 && kills < 10 && pool.placed_sessions() > 0 {
+            pool.kill_worker(rng.below(4)).unwrap();
+            kills += 1;
+        }
+        step_pool(&mut pool, &edge, &mut tenants);
+    }
+    assert!(kills >= 2, "the storm never materialized ({kills} kills in {steps} steps)");
+    assert_eq!(pool.stats.kills, kills);
+    assert_eq!(pool.stats.respawns, kills, "every crash must respawn a worker");
+    assert!(pool.stats.failovers > 0, "no kill ever hit a live session: {:?}", pool.stats);
+    assert!(
+        pool.stats.failover_redelivered <= pool.stats.failovers,
+        "more than one position re-served per victim: {:?}",
+        pool.stats
+    );
+    assert_eq!(pool.stats.failover_rejected, 0, "unbounded budget must fail nobody over");
+    assert_eq!(pool.stats.placement_rejected, 0);
+
+    for (t, req) in tenants.iter().zip(&reqs) {
+        let want = oracle(&eng, &spec, req);
+        assert_eq!(t.session.tokens(), &want[..], "req {} diverged through the storm", req.id);
+    }
+    assert_eq!(pool.resume_entries(), 0, "failover must not mint resume epochs");
+    let ids: Vec<u64> = tenants.iter().map(|t| t.edge_id).collect();
+    for id in ids {
+        pool.close_edge(id);
+    }
+    assert_leak_free(&pool, "after the storm");
+}
+
+/// A thousand kill/recover cycles leave ZERO cloud-side state: charges,
+/// fences, control entries, resume epochs, placements and replay buffers
+/// all return to baseline every cycle. Even cycles kill the host after
+/// its prefill was served (the charge dies with the worker's ledger);
+/// odd cycles crash every worker mid-prefill via armed seeded kills (the
+/// unanswered prefill is re-delivered and served by the fresh slot).
+#[test]
+fn thousand_kill_recover_cycles_leave_no_state() {
+    let eng = engine();
+    let spec = DeploymentSpec::defaults(small_cfg(2), 1);
+    let edge = spec.build_edge_device(eng.clone()).unwrap();
+    // One real edge prefill, re-identified per cycle (same trick as the
+    // fleet hygiene test: the wire sees a distinct request every time
+    // without 1000 edge-side prefill computations).
+    let (proto, _state, _s) = edge.prefill(0, &[5, 6, 7]).unwrap();
+    let mut pool = mk_pool(&eng, &spec, pcfg(2, 0xDEAD));
+
+    for cycle in 0..1000u64 {
+        let (edge_half, pool_half) = Loopback::pair();
+        let eid = pool.add_edge(WireTransport::Loopback(pool_half));
+        let mut port = EdgePort::new(WireTransport::Loopback(edge_half));
+        let rid = 5000 + cycle;
+        let mut p = proto.clone();
+        p.request_id = rid;
+        port.transport.send(&wire::encode_payload_frame(&p)).unwrap();
+
+        if cycle % 2 == 0 {
+            pool.poll().unwrap();
+            // The greedy argmax may be the EOS id, which already released
+            // everything at serve time — kill the host only while the
+            // session still holds its charge somewhere.
+            if let Some(placed) = pool.placement_of(rid) {
+                pool.kill_worker(placed.worker).unwrap();
+            }
+            assert_eq!(pool.live_sessions(), 0, "cycle {cycle}: dead ledger kept its charge");
+        } else {
+            pool.arm_worker_fault(0, FaultPlan::disconnect(cycle, 0));
+            pool.arm_worker_fault(1, FaultPlan::disconnect(cycle ^ 1, 0));
+            pool.poll().unwrap(); // both crash; the prefill is re-delivered
+            pool.poll().unwrap(); // a fresh slot serves it
+        }
+        pool.close_edge(eid);
+        drop(port);
+
+        assert_eq!(pool.live_sessions(), 0, "cycle {cycle}: admission charge leaked");
+        assert_eq!(pool.fence_entries(), 0, "cycle {cycle}: replay fence leaked");
+        assert_eq!(pool.control_entries(), 0, "cycle {cycle}: control entry leaked");
+        assert_eq!(pool.resume_entries(), 0, "cycle {cycle}: resume epoch leaked");
+        assert_eq!(pool.placed_sessions(), 0, "cycle {cycle}: placement leaked");
+        assert_eq!(pool.inflight_frames(), 0, "cycle {cycle}: replay buffer leaked");
+    }
+    assert!(pool.stats.kills >= 1000, "kill cycles undercounted: {:?}", pool.stats);
+    assert_eq!(pool.stats.respawns, pool.stats.kills);
+    assert!(
+        pool.stats.failover_redelivered >= 500,
+        "mid-prefill crashes never re-delivered: {:?}",
+        pool.stats
+    );
+}
+
+/// Satellite: a worker dying around prefill admission releases the
+/// fleet-level charge exactly once, across seeded kill timings. Timing A
+/// arms a seeded kill that fires mid-prefill (payload delivered, nothing
+/// served); timing B kills the host between prefill admission and the
+/// first decode (charge held, first reply already out). In both, the
+/// aggregate charge count never exceeds one and the stream is
+/// bit-identical to the solo oracle.
+#[test]
+fn worker_death_around_prefill_admission_charges_exactly_once() {
+    let eng = engine();
+    let spec = DeploymentSpec::defaults(small_cfg(2), 1);
+    let edge = spec.build_edge_device(eng.clone()).unwrap();
+
+    let mut exercised = 0usize;
+    for seed in [11u64, 23, 47] {
+        let req = Request::new(600 + seed, vec![7 + (seed % 400) as u32, 12, 5], 5);
+        let want = oracle(&eng, &spec, &req);
+        // A stream that ends at its first token never outlives its
+        // prefill: there is no admission window to kill a worker inside.
+        if want.len() < 2 {
+            continue;
+        }
+        exercised += 1;
+
+        // Timing A. Probe where placement will land (it is a pure
+        // function of the seed and arrival order), then arm the kill on
+        // that worker in a fresh pool.
+        let host = {
+            let mut pool = mk_pool(&eng, &spec, pcfg(2, seed));
+            let mut t = connect(&mut pool, &edge, &spec, &req);
+            let mut guard = 0usize;
+            while pool.placement_of(req.id).is_none() {
+                guard += 1;
+                assert!(guard < 100, "seed {seed}: prefill never placed");
+                step_pool(&mut pool, &edge, std::slice::from_mut(&mut t));
+            }
+            pool.placement_of(req.id).unwrap().worker
+        };
+        let mut pool = mk_pool(&eng, &spec, pcfg(2, seed));
+        pool.arm_worker_fault(host, FaultPlan::disconnect(seed, 0));
+        let mut t = connect(&mut pool, &edge, &spec, &req);
+        let mut guard = 0usize;
+        while !t.session.is_terminal() {
+            guard += 1;
+            assert!(guard < 10_000, "seed {seed}: timing A did not converge");
+            step_pool(&mut pool, &edge, std::slice::from_mut(&mut t));
+            assert!(pool.live_sessions() <= 1, "seed {seed}: the charge is held twice");
+        }
+        assert_eq!(pool.stats.kills, 1, "seed {seed}: exactly one armed crash expected");
+        assert_eq!(pool.stats.failovers, 1, "seed {seed}: victim not re-placed");
+        assert_eq!(
+            pool.stats.failover_redelivered, 1,
+            "seed {seed}: the unanswered prefill must be re-delivered exactly once"
+        );
+        assert_eq!(t.session.tokens(), &want[..], "seed {seed}: timing A changed the stream");
+        pool.close_edge(t.edge_id);
+        assert_leak_free(&pool, &format!("seed {seed} timing A"));
+
+        // Timing B: between prefill admission and the first decode.
+        let mut pool = mk_pool(&eng, &spec, pcfg(2, seed));
+        let mut t = connect(&mut pool, &edge, &spec, &req);
+        let mut absorbed = 0usize;
+        let mut guard = 0usize;
+        while absorbed < 1 {
+            guard += 1;
+            assert!(guard < 10_000, "seed {seed}: prefill reply never arrived");
+            absorbed += step_pool(&mut pool, &edge, std::slice::from_mut(&mut t));
+        }
+        let host = pool.placement_of(req.id).expect("admitted session is placed").worker;
+        assert_eq!(pool.live_sessions(), 1, "seed {seed}: prefill admission must charge once");
+        pool.kill_worker(host).unwrap();
+        assert_eq!(pool.live_sessions(), 0, "seed {seed}: dead ledger must drop its charge");
+        assert_eq!(
+            pool.stats.failover_redelivered, 0,
+            "seed {seed}: an answered prefill must not be replayed"
+        );
+        while !t.session.is_terminal() {
+            guard += 1;
+            assert!(guard < 10_000, "seed {seed}: timing B did not converge");
+            step_pool(&mut pool, &edge, std::slice::from_mut(&mut t));
+            assert!(pool.live_sessions() <= 1, "seed {seed}: the charge is held twice");
+        }
+        assert_eq!(t.session.tokens(), &want[..], "seed {seed}: timing B changed the stream");
+        pool.close_edge(t.edge_id);
+        assert_leak_free(&pool, &format!("seed {seed} timing B"));
+    }
+    assert!(exercised >= 1, "every seeded stream ended at its first token; nothing was tested");
+}
+
+/// Placement is deterministic and observable: the same seed replays the
+/// same (request → worker) layout decision-for-decision, a different
+/// seed moves it, and most-headroom packing actually spreads the load.
+#[test]
+fn placement_layout_replays_under_a_seed_and_moves_with_it() {
+    let eng = engine();
+    let spec = DeploymentSpec::defaults(small_cfg(2), 1);
+    let edge = spec.build_edge_device(eng.clone()).unwrap();
+    let (proto, _state, _s) = edge.prefill(0, &[5, 6, 7]).unwrap();
+
+    let layout = |seed: u64| -> Vec<(u64, usize)> {
+        let mut pool = mk_pool(&eng, &spec, pcfg(4, seed));
+        let mut ports = Vec::new();
+        for i in 0..16u64 {
+            let (edge_half, pool_half) = Loopback::pair();
+            pool.add_edge(WireTransport::Loopback(pool_half));
+            let mut port = EdgePort::new(WireTransport::Loopback(edge_half));
+            let mut p = proto.clone();
+            p.request_id = 9000 + i;
+            port.transport.send(&wire::encode_payload_frame(&p)).unwrap();
+            ports.push(port);
+        }
+        pool.poll().unwrap();
+        let got: Vec<(u64, usize)> =
+            pool.decisions().iter().map(|d| (d.request_id, d.worker)).collect();
+        assert_eq!(got.len(), 16, "every prefill must produce a placement decision");
+        got
+    };
+
+    let a = layout(0xFEED);
+    assert_eq!(a, layout(0xFEED), "the same seed must replay the same layout");
+    assert_ne!(a, layout(0xFEED ^ 1), "the layout must depend on the seed");
+    let spread: HashSet<usize> = a.iter().map(|&(_, w)| w).collect();
+    assert!(spread.len() >= 2, "most-headroom placement never spread the load: {a:?}");
+}
+
+/// Satellite: with per-worker budget for one session each, the third
+/// arrival finds no headroom anywhere and gets the typed in-band
+/// ADMISSION rejection from the POOL — the connection stays up, the
+/// other tenants stream to completion untouched.
+#[test]
+fn pool_placement_rejects_typed_when_no_worker_has_headroom() {
+    let eng = engine();
+    let spec = DeploymentSpec::defaults(small_cfg(2), 1);
+    let edge = spec.build_edge_device(eng.clone()).unwrap();
+    let per_session = mk_pool(&eng, &spec, pcfg(1, 1)).worker(0).session_kv_bytes();
+    let cfg = PoolConfig {
+        workers: 2,
+        seed: 0x10CA,
+        fleet: FleetConfig { kv_budget_bytes: Some(per_session), ..FleetConfig::default() },
+        ..PoolConfig::default()
+    };
+    let mut pool = mk_pool(&eng, &spec, cfg);
+
+    let reqs = [
+        Request::new(1, vec![3, 141, 59], 4),
+        Request::new(2, vec![10, 20, 30], 4),
+        Request::new(3, vec![7, 90, 200], 4),
+    ];
+    let mut tenants: Vec<Tenant> =
+        reqs.iter().map(|r| connect(&mut pool, &edge, &spec, r)).collect();
+    for t in tenants.iter_mut() {
+        if let SessionAction::Transmit(p) = t.session.poll(&edge).unwrap() {
+            t.up = Some(t.port.send_payload(&p).unwrap());
+        }
+    }
+    pool.poll().unwrap();
+
+    let err = tenants[2]
+        .port
+        .try_recv_reply()
+        .expect_err("third session must be refused placement");
+    match err.downcast_ref::<WireError>() {
+        Some(WireError::Rejected { code, request_id, .. }) => {
+            assert_eq!(*code, reject::ADMISSION, "wrong rejection code");
+            assert_eq!(*request_id, 3);
+        }
+        other => panic!("expected a typed ADMISSION rejection, got {other:?}"),
+    }
+    assert_eq!(pool.stats.placement_rejected, 1);
+    assert_eq!(pool.stats.placed, 2);
+    let d = pool.decisions();
+    assert_ne!(d[0].worker, d[1].worker, "headroom packing must spread one session per worker");
+
+    tenants[2].session.cancel();
+    tenants[2].up = None;
+    drive_pool(&mut pool, &edge, &mut tenants);
+    for (t, req) in tenants.iter().take(2).zip(&reqs) {
+        let want = oracle(&eng, &spec, req);
+        assert_eq!(t.session.tokens(), &want[..], "req {} diverged after the rejection", req.id);
+    }
+    let ids: Vec<u64> = tenants.iter().map(|t| t.edge_id).collect();
+    for id in ids {
+        pool.close_edge(id);
+    }
+    assert_leak_free(&pool, "after a typed pool admission rejection");
+}
+
+/// Drain is first-class: live sessions move off the draining worker
+/// (bit-identically), new arrivals avoid it, and `undrain` restores it.
+#[test]
+fn drain_moves_live_sessions_without_changing_tokens() {
+    let eng = engine();
+    let spec = DeploymentSpec::defaults(small_cfg(2), 1);
+    let edge = spec.build_edge_device(eng.clone()).unwrap();
+    let reqs: Vec<Request> =
+        (0..4u64).map(|i| Request::new(300 + i, vec![7 + i as u32, 90, 200], 5)).collect();
+    let mut pool = mk_pool(&eng, &spec, pcfg(2, 0xD8A1));
+    let mut tenants: Vec<Tenant> =
+        reqs.iter().map(|r| connect(&mut pool, &edge, &spec, r)).collect();
+
+    // Everyone absorbs at least its prefill reply: live on both workers.
+    let mut guard = 0usize;
+    while tenants.iter().any(|t| !t.session.is_terminal() && t.session.tokens().is_empty()) {
+        guard += 1;
+        assert!(guard < 10_000, "prefill phase did not converge");
+        step_pool(&mut pool, &edge, &mut tenants);
+    }
+    let resident: Vec<u64> = reqs
+        .iter()
+        .map(|r| r.id)
+        .filter(|rid| pool.placement_of(*rid).map(|p| p.worker) == Some(0))
+        .collect();
+    assert!(!resident.is_empty(), "most-headroom placement left worker 0 empty");
+
+    let moved = pool.drain_worker(0).unwrap();
+    assert_eq!(moved, resident.len(), "drain must move every resident session");
+    assert!(pool.is_draining(0));
+    assert_eq!(pool.worker(0).live_sessions(), 0, "drained worker still holds charges");
+    assert_eq!(pool.stats.drains, 1);
+    assert_eq!(pool.stats.migrations as usize, moved);
+    for rid in &resident {
+        assert_eq!(pool.placement_of(*rid).map(|p| p.worker), Some(1), "rid {rid} did not move");
+    }
+
+    // New arrivals avoid the draining worker.
+    let extra = Request::new(399, vec![1, 2, 3], 4);
+    tenants.push(connect(&mut pool, &edge, &spec, &extra));
+    let all_reqs: Vec<Request> = reqs.iter().cloned().chain([extra]).collect();
+    drive_pool(&mut pool, &edge, &mut tenants);
+    let d = pool
+        .decisions()
+        .iter()
+        .rev()
+        .find(|d| d.request_id == 399)
+        .expect("the late session was never placed");
+    assert_eq!(d.worker, 1, "a draining worker accepted a new session");
+
+    for (t, req) in tenants.iter().zip(&all_reqs) {
+        let want = oracle(&eng, &spec, req);
+        assert_eq!(t.session.tokens(), &want[..], "req {} diverged across the drain", req.id);
+    }
+    pool.undrain_worker(0);
+    assert!(!pool.is_draining(0));
+    let ids: Vec<u64> = tenants.iter().map(|t| t.edge_id).collect();
+    for id in ids {
+        pool.close_edge(id);
+    }
+    assert_leak_free(&pool, "after the drain");
+}
+
+/// A drain with nowhere to go fails TYPED, never silent: with every
+/// other worker also draining, the resident session is evicted with an
+/// in-band rejection and zero cloud-side state left behind.
+#[test]
+fn drain_with_no_target_fails_typed_not_silent() {
+    let eng = engine();
+    let spec = DeploymentSpec::defaults(small_cfg(2), 1);
+    let edge = spec.build_edge_device(eng.clone()).unwrap();
+    let mut pool = mk_pool(&eng, &spec, pcfg(2, 0x7A9));
+    assert_eq!(pool.drain_worker(1).unwrap(), 0, "an empty worker drains vacuously");
+
+    let req = Request::new(888, vec![5, 77, 3], 6);
+    let mut t = connect(&mut pool, &edge, &spec, &req);
+    let mut guard = 0usize;
+    while !t.session.is_terminal() && t.session.tokens().is_empty() {
+        guard += 1;
+        assert!(guard < 10_000, "prefill did not converge");
+        step_pool(&mut pool, &edge, std::slice::from_mut(&mut t));
+    }
+    if t.session.is_terminal() {
+        return; // the stream ended at its first token; nothing left to drain
+    }
+    assert_eq!(pool.placement_of(req.id).map(|p| p.worker), Some(0));
+
+    assert_eq!(pool.drain_worker(0).unwrap(), 0, "with no eligible target nothing may move");
+    assert_eq!(pool.placed_sessions(), 0, "an undrainable session must be evicted");
+    let err = t.port.try_recv_reply().expect_err("the evicted session must see a typed rejection");
+    match err.downcast_ref::<WireError>() {
+        Some(WireError::Rejected { code, request_id, .. }) => {
+            assert_eq!(*code, reject::ADMISSION, "wrong rejection code");
+            assert_eq!(*request_id, req.id);
+        }
+        other => panic!("expected a typed rejection, got {other:?}"),
+    }
+    // The export-and-discard path must leave nothing behind even though
+    // the edge connection is still up.
+    assert_leak_free(&pool, "after a no-target drain");
+    pool.close_edge(t.edge_id);
+}
+
+/// Rebalance — the placement-level "re-plan can also mean move" — pulls
+/// a hand-skewed pool level, one hysteresis-gated migration at a time,
+/// without changing a single token.
+#[test]
+fn rebalance_levels_a_skewed_pool() {
+    let eng = engine();
+    let spec = DeploymentSpec::defaults(small_cfg(2), 1);
+    let edge = spec.build_edge_device(eng.clone()).unwrap();
+    let mut cfg = pcfg(2, 0xB0B);
+    cfg.rebalance_gap = 2;
+    cfg.rebalance_cooldown = 0;
+    let mut pool = mk_pool(&eng, &spec, cfg);
+
+    // Skew by hand: with worker 1 draining, every arrival lands on 0.
+    assert_eq!(pool.drain_worker(1).unwrap(), 0);
+    let reqs: Vec<Request> =
+        (0..5u64).map(|i| Request::new(700 + i, vec![11 + i as u32, 33, 2], 6)).collect();
+    let mut tenants: Vec<Tenant> =
+        reqs.iter().map(|r| connect(&mut pool, &edge, &spec, r)).collect();
+    let mut guard = 0usize;
+    while tenants.iter().any(|t| !t.session.is_terminal() && t.session.tokens().is_empty()) {
+        guard += 1;
+        assert!(guard < 10_000, "prefill phase did not converge");
+        step_pool(&mut pool, &edge, &mut tenants);
+    }
+    let on_zero = reqs
+        .iter()
+        .filter(|r| pool.placement_of(r.id).map(|p| p.worker) == Some(0))
+        .count();
+    assert!(on_zero >= 2, "the skew never formed ({on_zero} sessions on worker 0)");
+    pool.undrain_worker(1);
+
+    let mut moved = 0usize;
+    while pool.maybe_rebalance().unwrap() {
+        moved += 1;
+        assert!(moved <= 8, "the rebalancer would not converge");
+    }
+    assert!(moved >= 1, "a {on_zero}-vs-0 skew must trigger the rebalancer");
+    assert_eq!(pool.stats.rebalances as usize, moved);
+    let mut counts = [0usize; 2];
+    for r in &reqs {
+        if let Some(p) = pool.placement_of(r.id) {
+            counts[p.worker] += 1;
+        }
+    }
+    assert!(
+        counts[0].abs_diff(counts[1]) < 2,
+        "rebalance left the pool skewed: {counts:?}"
+    );
+
+    drive_pool(&mut pool, &edge, &mut tenants);
+    for (t, req) in tenants.iter().zip(&reqs) {
+        let want = oracle(&eng, &spec, req);
+        assert_eq!(t.session.tokens(), &want[..], "req {} diverged across rebalance", req.id);
+    }
+    let ids: Vec<u64> = tenants.iter().map(|t| t.edge_id).collect();
+    for id in ids {
+        pool.close_edge(id);
+    }
+    assert_leak_free(&pool, "after the rebalance");
+}

@@ -6,18 +6,18 @@
 
 use splitserve::adapt::Reconfig;
 use splitserve::coordinator::{
-    reject, CloudReply, CompressedKv, CompressedTensor, CompressionConfig, RejectFrame, Resume,
-    ResumeAck, SamplingSpec, SplitPayload,
+    reject, CloudReply, CompressedKv, CompressedTensor, CompressionConfig, MigrateState,
+    RejectFrame, Resume, ResumeAck, SamplingSpec, SplitPayload,
 };
 use splitserve::runtime::LayerKv;
 use splitserve::util::prop::run_cases;
 use splitserve::util::rng::Rng;
 use splitserve::wire::{
-    crc32, decode_error_frame, decode_frame, decode_payload_frame, decode_reconfig_frame,
-    decode_reply_frame, decode_resume_ack_frame, decode_resume_frame, encode_error_frame,
-    encode_payload_frame, encode_reconfig_frame, encode_reply_frame, encode_resume_ack_frame,
-    encode_resume_frame, Loopback, Transport, WireError, PAYLOAD_OVERHEAD, RECONFIG_OVERHEAD,
-    REPLY_OVERHEAD,
+    crc32, decode_error_frame, decode_frame, decode_migrate_frame, decode_payload_frame,
+    decode_reconfig_frame, decode_reply_frame, decode_resume_ack_frame, decode_resume_frame,
+    encode_error_frame, encode_migrate_frame, encode_payload_frame, encode_reconfig_frame,
+    encode_reply_frame, encode_resume_ack_frame, encode_resume_frame, Loopback, Transport,
+    WireError, MIGRATE_OVERHEAD, PAYLOAD_OVERHEAD, RECONFIG_OVERHEAD, REPLY_OVERHEAD,
 };
 
 fn heavy_block(rng: &mut Rng, rows: usize, cols: usize) -> Vec<f32> {
@@ -228,15 +228,16 @@ fn unknown_frame_kind_is_a_typed_error_not_a_panic() {
     let mut f = Vec::with_capacity(HEADER_BYTES + body.len() + 4);
     f.extend_from_slice(&MAGIC.to_le_bytes());
     f.push(VERSION);
-    f.push(7); // unknown kind
+    f.push(42); // unknown kind (7 became Migrate in wire v6)
     f.extend_from_slice(&(body.len() as u32).to_le_bytes());
     f.extend_from_slice(body);
     let crc = crc32(&f[4..]);
     f.extend_from_slice(&crc.to_le_bytes());
-    assert!(matches!(decode_frame(&f), Err(WireError::BadKind(7))));
-    assert!(matches!(decode_payload_frame(&f), Err(WireError::BadKind(7))));
-    assert!(matches!(decode_reply_frame(&f), Err(WireError::BadKind(7))));
-    assert!(matches!(decode_reconfig_frame(&f), Err(WireError::BadKind(7))));
+    assert!(matches!(decode_frame(&f), Err(WireError::BadKind(42))));
+    assert!(matches!(decode_payload_frame(&f), Err(WireError::BadKind(42))));
+    assert!(matches!(decode_reply_frame(&f), Err(WireError::BadKind(42))));
+    assert!(matches!(decode_reconfig_frame(&f), Err(WireError::BadKind(42))));
+    assert!(matches!(decode_migrate_frame(&f), Err(WireError::BadKind(42))));
 }
 
 #[test]
@@ -559,4 +560,189 @@ fn stale_resume_epoch_is_rejected_in_band() {
     assert_eq!(decode_resume_ack_frame(&frame).unwrap().epoch, 3);
     drop(edge_half);
     assert_eq!(server.join().unwrap().unwrap(), 0, "resumes are control, not served payloads");
+}
+
+// ---------------------------------------------------------------------------
+// Wire v6 Migrate frame (kind 7): the worker-to-worker session handoff
+// obeys the same codec contract as the data plane — identity roundtrip,
+// exact byte accounting, typed rejection of corruption, truncation and
+// kind confusion — plus cross-field validation of the embedded replay
+// fence (a migrate that shipped a mismatched cached reply would turn
+// into a silent wrong answer at the next edge retransmission).
+// ---------------------------------------------------------------------------
+
+/// A migrate state whose embedded fence frame is a genuine encoded reply
+/// frame for the same (request, pos) — the only shape `decode` admits.
+fn random_migrate(rng: &mut Rng) -> MigrateState {
+    let request_id = rng.below(1 << 20) as u64;
+    let fence = if rng.below(4) > 0 {
+        let pos = rng.below(1 << 12) as u64;
+        let n_layers = rng.below(4);
+        let row_len = 8 * (1 + rng.below(8));
+        let new_kv_rows: Vec<(Vec<f32>, Vec<f32>)> = (0..n_layers)
+            .map(|_| {
+                let k: Vec<f32> = (0..row_len).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+                let v: Vec<f32> = (0..row_len).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+                (k, v)
+            })
+            .collect();
+        let reply = CloudReply {
+            request_id,
+            pos,
+            token: 1 + rng.below(511) as u32,
+            new_kv_rows,
+            logits_entropy: rng.normal_f32(2.0, 0.5),
+        };
+        Some((pos, encode_reply_frame(&reply, rng.f64() * 0.25)))
+    } else {
+        None
+    };
+    let next_pos = match &fence {
+        Some((pos, _)) => pos + 1,
+        None => 0,
+    };
+    let control = if rng.below(2) == 0 {
+        Some(Reconfig { request_id, ..random_reconfig(rng) })
+    } else {
+        None
+    };
+    MigrateState { request_id, epoch: 1 + rng.below(1 << 10) as u32, next_pos, fence, control }
+}
+
+#[test]
+fn migrate_roundtrip_identity_and_size() {
+    run_cases(60, 0xF8, |case, rng| {
+        let ms = random_migrate(rng);
+        let frame = encode_migrate_frame(&ms);
+        assert_eq!(
+            frame.len() as u64,
+            ms.wire_bytes() + MIGRATE_OVERHEAD,
+            "case {case}: migrate frame length must be wire_bytes + fixed overhead"
+        );
+        let back = decode_migrate_frame(&frame).expect("well-formed migrate decodes");
+        assert_eq!(back, ms, "case {case}: decode must invert encode exactly");
+        // The shipped fence frame itself stays a valid, byte-identical
+        // reply frame — what the target will replay verbatim.
+        if let Some((pos, cached)) = &back.fence {
+            let (reply, _) = decode_reply_frame(cached).expect("embedded fence frame decodes");
+            assert_eq!(reply.request_id, ms.request_id, "case {case}");
+            assert_eq!(reply.pos, *pos, "case {case}");
+        }
+    });
+}
+
+#[test]
+fn corrupt_migrate_frames_rejected_never_panic() {
+    // Full per-byte, per-bit sweep on a migrate with a minimal fence (no
+    // KV rows keeps the frame small enough to sweep every bit), plus the
+    // truncation and trailing-garbage sweeps every other frame kind gets.
+    let reply = CloudReply {
+        request_id: 31,
+        pos: 4,
+        token: 9,
+        new_kv_rows: vec![],
+        logits_entropy: 1.25,
+    };
+    let ms = MigrateState {
+        request_id: 31,
+        epoch: 3,
+        next_pos: 5,
+        fence: Some((4, encode_reply_frame(&reply, 0.0125))),
+        control: Some(Reconfig {
+            request_id: 31,
+            epoch: 2,
+            qa_bits: 6,
+            tau: 2.5,
+            include_kv: true,
+            budget_cap: Reconfig::NO_BUDGET_CAP,
+        }),
+    };
+    let frame = encode_migrate_frame(&ms);
+    for byte in 0..frame.len() {
+        for bit in 0..8 {
+            let mut bad = frame.clone();
+            bad[byte] ^= 1 << bit;
+            match decode_migrate_frame(&bad) {
+                Err(_) => {}
+                Ok(got) => panic!(
+                    "flip at byte {byte} bit {bit} silently decoded (changed: {})",
+                    got != ms
+                ),
+            }
+        }
+    }
+    for cut in 0..frame.len() {
+        assert!(decode_migrate_frame(&frame[..cut]).is_err(), "truncation to {cut}");
+    }
+    let mut padded = frame.clone();
+    padded.push(0xC3);
+    assert!(decode_migrate_frame(&padded).is_err(), "trailing garbage must be rejected");
+}
+
+#[test]
+fn migrate_cross_field_mismatches_are_typed_errors() {
+    let mk_reply_frame = |rid: u64, pos: u64| {
+        let reply = CloudReply {
+            request_id: rid,
+            pos,
+            token: 5,
+            new_kv_rows: vec![],
+            logits_entropy: 0.5,
+        };
+        encode_reply_frame(&reply, 0.01)
+    };
+    // Fence frame answers a DIFFERENT request: the envelope and CRC are
+    // all valid, only the cross-check can catch it.
+    let ms = MigrateState {
+        request_id: 10,
+        epoch: 2,
+        next_pos: 8,
+        fence: Some((7, mk_reply_frame(11, 7))),
+        control: None,
+    };
+    assert!(
+        matches!(decode_migrate_frame(&encode_migrate_frame(&ms)), Err(WireError::Malformed(_))),
+        "a fence for another request must be Malformed"
+    );
+    // Fence frame answers a different POSITION than the fence claims.
+    let ms = MigrateState { fence: Some((7, mk_reply_frame(10, 6))), ..ms };
+    assert!(
+        matches!(decode_migrate_frame(&encode_migrate_frame(&ms)), Err(WireError::Malformed(_))),
+        "a fence whose reply answers another position must be Malformed"
+    );
+    // next_pos that disagrees with the fence position.
+    let ms = MigrateState { next_pos: 9, fence: Some((7, mk_reply_frame(10, 7))), ..ms };
+    assert!(
+        matches!(decode_migrate_frame(&encode_migrate_frame(&ms)), Err(WireError::Malformed(_))),
+        "next_pos must be fence pos + 1"
+    );
+    // Migrated control settings for a different request.
+    let ms = MigrateState {
+        request_id: 10,
+        epoch: 2,
+        next_pos: 0,
+        fence: None,
+        control: Some(Reconfig {
+            request_id: 11,
+            epoch: 1,
+            qa_bits: 4,
+            tau: 5.0,
+            include_kv: true,
+            budget_cap: Reconfig::NO_BUDGET_CAP,
+        }),
+    };
+    assert!(
+        matches!(decode_migrate_frame(&encode_migrate_frame(&ms)), Err(WireError::Malformed(_))),
+        "control for another request must be Malformed"
+    );
+    // And the migrate frame participates in kind confusion, both ways.
+    let mut rng = Rng::new(0xF9);
+    let good = encode_migrate_frame(&random_migrate(&mut rng));
+    assert!(matches!(decode_payload_frame(&good), Err(WireError::WrongKind { .. })));
+    assert!(matches!(decode_reply_frame(&good), Err(WireError::WrongKind { .. })));
+    let p = random_payload(&mut rng, &CompressionConfig::default(), false, true);
+    assert!(matches!(
+        decode_migrate_frame(&encode_payload_frame(&p)),
+        Err(WireError::WrongKind { .. })
+    ));
 }

@@ -46,7 +46,14 @@ BENCH_JSON="$CHAOS_JSON" cargo bench --bench chaos "$@"
 FLEET_JSON="${BENCH_FLEET_JSON:-BENCH_fleet.json}"
 BENCH_JSON="$FLEET_JSON" cargo bench --bench fleet "$@"
 
-for f in "$BENCH_JSON" "$ENGINE_JSON" "$WIRE_JSON" "$ADAPT_JSON" "$CHAOS_JSON" "$FLEET_JSON"; do
+# Sharded cloud pool: migration pause (p50/p95 stall tokens), failover
+# time-to-first-recovered-token, and throughput retention under a rolling
+# worker-restart storm. The binary ASSERTS bit-identity and zero-leak
+# hygiene in every phase — a panic fails this script.
+POOL_JSON="${BENCH_POOL_JSON:-BENCH_pool.json}"
+BENCH_JSON="$POOL_JSON" cargo bench --bench pool "$@"
+
+for f in "$BENCH_JSON" "$ENGINE_JSON" "$WIRE_JSON" "$ADAPT_JSON" "$CHAOS_JSON" "$FLEET_JSON" "$POOL_JSON"; do
     if [ -f "$f" ]; then
         echo "--- $f ---"
         cat "$f"

@@ -14,9 +14,29 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
+# `scripts/chaos.sh --pool` additionally runs the cloud-pool robustness
+# suite (worker kill storms, live migration at every decode step, drain/
+# rebalance) and the pool bench in release mode.
+POOL=0
+if [ "${1:-}" = "--pool" ]; then
+    POOL=1
+    shift
+fi
+
 export CHAOS_SEEDS="${CHAOS_SEEDS:-240}"
 echo "chaos sweep: CHAOS_SEEDS=$CHAOS_SEEDS"
 cargo test --release --test chaos -- "$@"
+
+if [ "$POOL" = 1 ]; then
+    echo "pool chaos: kill storms, migration sweep, drain/rebalance"
+    cargo test --release --test pool -- "$@"
+    POOL_JSON="${BENCH_POOL_JSON:-BENCH_pool.json}"
+    BENCH_JSON="$POOL_JSON" cargo bench --bench pool
+    if [ -f "$POOL_JSON" ]; then
+        echo "--- $POOL_JSON ---"
+        cat "$POOL_JSON"
+    fi
+fi
 
 CHAOS_JSON="${BENCH_CHAOS_JSON:-BENCH_chaos.json}"
 BENCH_JSON="$CHAOS_JSON" cargo bench --bench chaos
