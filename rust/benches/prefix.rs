@@ -1,0 +1,241 @@
+//! Content-addressed prefix KV cache bench: what sharing a prompt
+//! prefill actually buys, measured end to end through the split.
+//!
+//! Three phases over one warm-capable deployment:
+//!
+//! 1. **TTFT, cold vs warm** — for N distinct 16-token prefixes: serve
+//!    the prefix cold (full front compute + full two-block upload + full
+//!    cloud prefill), then serve a divergent-suffix prompt warm
+//!    (suffix-only compute on both halves, 32-byte token on the wire).
+//!    Reported p50/p95 of each, plus the speedup.
+//! 2. **Wire bytes vs share ratio** — prefill uplink bytes cold vs warm
+//!    at 50% / 75% / 94% prefix share of the prompt. The acceptance bar
+//!    asserted in-binary: warm is STRICTLY below cold at ≥50% share.
+//! 3. **Diurnal trace** — a day of traffic over three prompt families
+//!    ("personas") whose popularity rotates by hour; reports the edge
+//!    cache hit rate and the cloud store's steady-state charge.
+//!
+//! Invariants ASSERTED in-binary, every phase: every stream (cold,
+//! warm, miss, whatever) is bit-identical to the same request served by
+//! a fresh caching-off deployment, and after retiring every request the
+//! cloud store holds zero attachments.
+//!
+//! Emits `BENCH_prefix.json` (override with `BENCH_JSON`);
+//! `BENCH_SMOKE=1` runs the reduced CI configuration.
+
+use std::rc::Rc;
+use std::time::Instant;
+
+use splitserve::coordinator::{
+    build_pipeline, DeploymentSpec, PrefixDecision, Request, SplitPipeline,
+};
+use splitserve::model::ModelConfig;
+use splitserve::prefix::CHUNK_TOKENS;
+use splitserve::runtime::Engine;
+use splitserve::util::bench::JsonReport;
+use splitserve::util::rng::Rng;
+
+const CACHE_BYTES: u64 = 256 * 1024 * 1024;
+
+fn small_cfg(n_layers: usize) -> ModelConfig {
+    let mut cfg = ModelConfig::sim7b();
+    cfg.n_layers = n_layers;
+    cfg
+}
+
+fn engine() -> Rc<Engine> {
+    Rc::new(Engine::load("artifacts", &ModelConfig::sim7b()).expect("run `make artifacts`"))
+}
+
+fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() - 1) as f64 * p).round() as usize;
+    sorted[idx]
+}
+
+/// `n_chunks` 16-token chunks seeded by `family`, plus a divergent tail.
+/// Every token stays inside sim7b's 512-token vocabulary.
+fn prompt_for(family: u64, n_chunks: usize, tail: &[u32]) -> Vec<u32> {
+    let mut p: Vec<u32> =
+        (0..(n_chunks * CHUNK_TOKENS) as u64).map(|i| ((7 + 13 * family + i) % 509) as u32).collect();
+    p.extend_from_slice(tail);
+    p
+}
+
+/// Serve `req` on the shared warm pipeline, assert the stream equals the
+/// caching-off oracle's, retire, and return (wall_ms, prefill uplink).
+fn timed_serve(
+    pipe: &mut SplitPipeline,
+    oracle: &mut SplitPipeline,
+    req: &Request,
+) -> anyhow::Result<(f64, u64)> {
+    let t0 = Instant::now();
+    let got = pipe.generate(req)?;
+    let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+    pipe.cloud.retire_request(req.id);
+    let want = oracle.generate(req)?;
+    assert_eq!(
+        got.tokens, want.tokens,
+        "req {}: the prefix cache changed the token stream",
+        req.id
+    );
+    Ok((wall_ms, got.prefill.uplink_bytes))
+}
+
+fn main() -> anyhow::Result<()> {
+    let smoke = std::env::var("BENCH_SMOKE").is_ok();
+    let trials: u64 = if smoke { 8 } else { 32 };
+    let diurnal_requests: u64 = if smoke { 72 } else { 288 };
+
+    let eng = engine();
+    let spec = DeploymentSpec::defaults(small_cfg(2), 1).with_prefix_cache(CACHE_BYTES);
+    let mut pipe = build_pipeline(eng.clone(), &spec)?;
+    // ONE caching-off deployment serves every oracle run: same seeds,
+    // stateless cloud, so it reproduces each request's pre-v7 stream.
+    let mut oracle = build_pipeline(eng.clone(), &DeploymentSpec::defaults(small_cfg(2), 1))?;
+
+    println!("prefix bench: {trials} TTFT trials, {diurnal_requests}-request diurnal trace");
+
+    // --- Phase 1: TTFT cold vs warm over distinct prefixes. ---
+    let mut cold_ms = Vec::new();
+    let mut warm_ms = Vec::new();
+    let mut rid = 1u64;
+    for fam in 0..trials {
+        let cold_req = Request::new(rid, prompt_for(fam, 1, &[400, 31]), 1);
+        rid += 1;
+        assert!(
+            matches!(pipe.edge.prefix_decision(&cold_req.prompt), PrefixDecision::Insert { .. }),
+            "family {fam}: first sight of a prefix must insert"
+        );
+        let (ms, _) = timed_serve(&mut pipe, &mut oracle, &cold_req)?;
+        cold_ms.push(ms);
+
+        let warm_req = Request::new(rid, prompt_for(fam, 1, &[401, 17, 5]), 1);
+        rid += 1;
+        assert!(
+            matches!(pipe.edge.prefix_decision(&warm_req.prompt), PrefixDecision::Warm { .. }),
+            "family {fam}: second sight of a prefix must be warm"
+        );
+        let (ms, _) = timed_serve(&mut pipe, &mut oracle, &warm_req)?;
+        warm_ms.push(ms);
+    }
+    cold_ms.sort_by(|a, b| a.total_cmp(b));
+    warm_ms.sort_by(|a, b| a.total_cmp(b));
+    let cold_p50 = percentile(&cold_ms, 0.50);
+    let cold_p95 = percentile(&cold_ms, 0.95);
+    let warm_p50 = percentile(&warm_ms, 0.50);
+    let warm_p95 = percentile(&warm_ms, 0.95);
+    println!(
+        "ttft: cold p50 {cold_p50:.3} ms / p95 {cold_p95:.3} ms | warm p50 {warm_p50:.3} ms / \
+         p95 {warm_p95:.3} ms | speedup p50 {:.2}x",
+        cold_p50 / warm_p50.max(1e-9)
+    );
+
+    // --- Phase 2: prefill wire bytes vs prefix share of the prompt. ---
+    // (shared chunks, total prompt tokens): the tail is kept shorter than
+    // one chunk past the shared span, so the longest chunk boundary — the
+    // one `prefix_decision` always picks — IS the shared prefix. Share =
+    // shared / prompt: 16/32 = 50%, 48/64 = 75%, 16/17 = 94%.
+    let shares: [(usize, usize); 3] = [(1, 32), (3, 64), (1, 17)];
+    let mut share_metrics = Vec::new();
+    for (i, &(chunks, prompt_len)) in shares.iter().enumerate() {
+        let wp = chunks * CHUNK_TOKENS;
+        let tail_len = prompt_len - wp;
+        let fam = 1000 + i as u64; // fresh families: phase 1 stays out of the way
+        let cold_tail: Vec<u32> = (0..tail_len as u32).map(|j| 100 + (j % 300)).collect();
+        let warm_tail: Vec<u32> = (0..tail_len as u32).map(|j| 101 + (j % 300)).collect();
+
+        let cold_req = Request::new(rid, prompt_for(fam, chunks, &cold_tail), 1);
+        rid += 1;
+        assert!(
+            matches!(pipe.edge.prefix_decision(&cold_req.prompt), PrefixDecision::Insert { .. }),
+            "share {i}: the shared span must be the longest chunk boundary"
+        );
+        let (_, cold_bytes) = timed_serve(&mut pipe, &mut oracle, &cold_req)?;
+        let warm_req = Request::new(rid, prompt_for(fam, chunks, &warm_tail), 1);
+        rid += 1;
+        assert!(matches!(pipe.edge.prefix_decision(&warm_req.prompt), PrefixDecision::Warm { .. }));
+        let (_, warm_bytes) = timed_serve(&mut pipe, &mut oracle, &warm_req)?;
+
+        let share = wp as f64 / prompt_len as f64;
+        println!(
+            "wire @ {:>3.0}% share: cold {cold_bytes} B -> warm {warm_bytes} B ({:.2}x)",
+            share * 100.0,
+            cold_bytes as f64 / warm_bytes.max(1) as f64
+        );
+        if share >= 0.5 {
+            assert!(
+                warm_bytes < cold_bytes,
+                "at {:.0}% share the warm prefill ({warm_bytes} B) must undercut cold \
+                 ({cold_bytes} B)",
+                share * 100.0
+            );
+        }
+        share_metrics.push((share, cold_bytes, warm_bytes));
+    }
+
+    // --- Phase 3: diurnal trace over three prompt families. ---
+    // Popularity rotates by hour: each family dominates an 8-hour band,
+    // the way assistant / coding / translation system prompts trade
+    // places across a day.
+    let mut rng = Rng::new(0xD1A1);
+    let mut edge_hits = 0u64;
+    for n in 0..diurnal_requests {
+        let hour = (n * 24 / diurnal_requests) % 24;
+        let dominant = (hour / 8) as usize; // family 0, then 1, then 2
+        let fam = if rng.below(10) < 7 { dominant } else { rng.below(3) } as u64;
+        let tail: Vec<u32> = (0..1 + rng.below(3)).map(|_| 200 + rng.below(200) as u32).collect();
+        let req = Request::new(rid, prompt_for(2000 + fam, 1, &tail), 1);
+        rid += 1;
+        if matches!(pipe.edge.prefix_decision(&req.prompt), PrefixDecision::Warm { .. }) {
+            edge_hits += 1;
+        }
+        timed_serve(&mut pipe, &mut oracle, &req)?;
+    }
+    let hit_rate = edge_hits as f64 / diurnal_requests as f64;
+    let store = pipe.cloud.prefix_stats();
+    println!(
+        "diurnal: {diurnal_requests} requests | edge hit rate {:.1}% | store {} inserts / {} \
+         evictions | {:.1} KiB charged",
+        hit_rate * 100.0,
+        store.inserts,
+        store.evictions,
+        pipe.cloud.prefix_charged_bytes() as f64 / 1024.0
+    );
+    // Three resident families → everything after the first sighting of
+    // each family should run warm.
+    assert!(
+        edge_hits >= diurnal_requests - 3,
+        "only {edge_hits}/{diurnal_requests} warm: the cache is not retaining the trace"
+    );
+    assert_eq!(pipe.cloud.prefix_live_attachments(), 0, "the bench leaked refcounts");
+
+    let mut report = JsonReport::new();
+    report.add_metric("prefix_ttft_trials", trials as f64);
+    report.add_metric("prefix_cold_ttft_p50_ms", cold_p50);
+    report.add_metric("prefix_cold_ttft_p95_ms", cold_p95);
+    report.add_metric("prefix_warm_ttft_p50_ms", warm_p50);
+    report.add_metric("prefix_warm_ttft_p95_ms", warm_p95);
+    report.add_metric("prefix_ttft_speedup_p50", cold_p50 / warm_p50.max(1e-9));
+    for (share, cold_bytes, warm_bytes) in share_metrics {
+        let pct = (share * 100.0).round() as u64;
+        report.add_metric(&format!("prefix_wire_cold_bytes_share{pct}"), cold_bytes as f64);
+        report.add_metric(&format!("prefix_wire_warm_bytes_share{pct}"), warm_bytes as f64);
+        report.add_metric(
+            &format!("prefix_wire_reduction_share{pct}"),
+            cold_bytes as f64 / warm_bytes.max(1) as f64,
+        );
+    }
+    report.add_metric("prefix_diurnal_requests", diurnal_requests as f64);
+    report.add_metric("prefix_diurnal_hit_rate", hit_rate);
+    report.add_metric("prefix_store_inserts", store.inserts as f64);
+    report.add_metric("prefix_store_evictions", store.evictions as f64);
+    report.add_metric("prefix_store_charged_bytes", pipe.cloud.prefix_charged_bytes() as f64);
+
+    let path = std::env::var("BENCH_JSON").unwrap_or_else(|_| "BENCH_prefix.json".to_string());
+    report.write(&path)?;
+    println!("wrote {path}");
+    Ok(())
+}

@@ -43,6 +43,7 @@ fn decode_payload(rng: &mut Rng, n_layers: usize, used: usize, width: usize) -> 
         kv: Some(kv),
         is_prefill: false,
         sampling: SamplingSpec::Greedy,
+        prefix: None,
     }
 }
 

@@ -46,6 +46,11 @@ pub struct DeploymentSpec {
     pub deadline_s: Option<f64>,
     pub edge_profile: DeviceProfile,
     pub cloud_profile: DeviceProfile,
+    /// Content-addressed prefix KV cache budget in BYTES, applied to
+    /// both halves (edge front-segment cache and cloud back-segment
+    /// store). 0 disables prefix caching entirely — every payload is
+    /// byte-identical to the pre-v7 wire.
+    pub prefix_cache_bytes: u64,
 }
 
 impl DeploymentSpec {
@@ -62,7 +67,15 @@ impl DeploymentSpec {
             deadline_s: None,
             edge_profile: DeviceProfile::edge_default(),
             cloud_profile: DeviceProfile::cloud_default(),
+            prefix_cache_bytes: 0,
         }
+    }
+
+    /// Builder-style: enable the prefix KV cache with a byte budget
+    /// shared by the edge cache and the cloud store.
+    pub fn with_prefix_cache(mut self, budget_bytes: u64) -> DeploymentSpec {
+        self.prefix_cache_bytes = budget_bytes;
+        self
     }
 
     fn check_split(&self) -> Result<usize> {
@@ -112,12 +125,16 @@ impl DeploymentSpec {
         weights: Rc<ModelWeights>,
     ) -> Result<EdgeDevice> {
         let edge_node = NodeRuntime::new(engine, weights, 0..split, false)?;
-        Ok(EdgeDevice::new(
+        let edge = EdgeDevice::new(
             edge_node,
             self.model.n_layers - split,
             self.edge_profile.clone(),
             self.compression,
-        ))
+        );
+        if self.prefix_cache_bytes > 0 {
+            edge.set_prefix_cache_budget(self.prefix_cache_bytes);
+        }
+        Ok(edge)
     }
 
     /// Build the full-precision cloud back segment (paper §2.1: the
@@ -125,7 +142,11 @@ impl DeploymentSpec {
     fn build_cloud(&self, engine: Rc<Engine>, split: usize) -> Result<CloudServer> {
         let cloud_weights = Rc::new(ModelWeights::synthetic(&self.model, self.weight_seed));
         let cloud_node = NodeRuntime::new(engine, cloud_weights, split..self.model.n_layers, true)?;
-        Ok(CloudServer::new(cloud_node, self.cloud_profile.clone()))
+        let cloud = CloudServer::new(cloud_node, self.cloud_profile.clone());
+        if self.prefix_cache_bytes > 0 {
+            cloud.set_prefix_budget(self.prefix_cache_bytes);
+        }
+        Ok(cloud)
     }
 
     /// Build just the edge half of this deployment — the piece a

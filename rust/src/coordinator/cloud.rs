@@ -24,12 +24,36 @@ use std::time::Instant;
 use anyhow::Result;
 
 use super::profile::DeviceProfile;
-use super::protocol::{reject, CloudReply, RejectFrame, Resume, ResumeAck, SplitPayload};
+use super::protocol::{
+    reject, CloudReply, PrefixAck, PrefixProbe, PrefixRef, RejectFrame, Resume, ResumeAck,
+    SplitPayload,
+};
 use super::sampling::{self, sample};
 use crate::adapt::Reconfig;
+use crate::prefix::{PrefixDigest, PrefixKv, PrefixStore, PrefixStoreStats};
 use crate::quant::ScratchPool;
 use crate::runtime::{LayerKv, NodeRuntime};
 use crate::wire::FrameKind;
+
+/// Typed miss for a warm prefix payload whose digest is not resident (or
+/// whose stored shape disagrees with the reference): the edge presented a
+/// cache token this server cannot honor — evicted, migrated away, forged,
+/// or stale. Wire paths map it to an in-band [`reject::PREFIX`] so the
+/// session can rebuild the prefill as a full insert and retransmit; it is
+/// never served with silently-wrong state.
+#[derive(Debug)]
+pub struct PrefixMiss {
+    pub request_id: u64,
+    pub message: String,
+}
+
+impl std::fmt::Display for PrefixMiss {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "request {}: prefix miss: {}", self.request_id, self.message)
+    }
+}
+
+impl std::error::Error for PrefixMiss {}
 
 /// How one `handle_batch` call actually spent the server's wall time, so
 /// the serve loop can charge its simulated clock without re-modeling work
@@ -78,6 +102,11 @@ pub struct CloudServer {
     /// `Resume` from a dead connection must be rejectable after the live
     /// one reconnected. Entries are dropped when the EOS reply is served.
     resume_epochs: Mutex<HashMap<u64, u32>>,
+    /// Content-addressed store of back-segment prefill KV, shared across
+    /// every session this server serves (the whole point). Budget 0
+    /// (default) disables it and the serving paths reduce to their
+    /// pre-prefix behavior. Mutex-guarded so `handle` stays `&self`.
+    prefix: Mutex<PrefixStore>,
 }
 
 impl CloudServer {
@@ -92,6 +121,81 @@ impl CloudServer {
             control: Mutex::new(HashMap::new()),
             reconfigs_applied: AtomicU64::new(0),
             resume_epochs: Mutex::new(HashMap::new()),
+            prefix: Mutex::new(PrefixStore::new(0)),
+        }
+    }
+
+    /// Size (bytes) of the content-addressed prefix store. 0 disables
+    /// prefix caching on this server. Replaces the store wholesale, so
+    /// call it at deployment build time, before sessions attach.
+    pub fn set_prefix_budget(&self, budget_bytes: u64) {
+        *self.prefix.lock().expect("prefix store poisoned") = PrefixStore::new(budget_bytes);
+    }
+
+    fn prefix_store(&self) -> std::sync::MutexGuard<'_, PrefixStore> {
+        self.prefix.lock().expect("prefix store poisoned")
+    }
+
+    /// Whether `digest` is resident in this server's prefix store
+    /// (placement signal for the worker pool; does not bump LRU).
+    pub fn prefix_resident(&self, digest: &PrefixDigest) -> bool {
+        self.prefix_store().resident(digest)
+    }
+
+    /// Bytes the prefix store currently charges against Eq. 8c's cloud
+    /// memory term — each shared prefix counted once, no matter how many
+    /// sessions attach.
+    pub fn prefix_charged_bytes(&self) -> u64 {
+        self.prefix_store().charged_bytes()
+    }
+
+    /// Outstanding request→prefix attachments (leak audits: must return
+    /// to zero once every session has retired).
+    pub fn prefix_live_attachments(&self) -> usize {
+        self.prefix_store().live_attachments()
+    }
+
+    /// Prefix-store counters (hits/misses/inserts/evictions).
+    pub fn prefix_stats(&self) -> PrefixStoreStats {
+        self.prefix_store().stats
+    }
+
+    /// Answer a `PrefixProbe`: attach the request to the digest if it is
+    /// resident (pinning it so an acked hit cannot be evicted before the
+    /// warm payload lands) and report hit/miss. Misses are not sticky —
+    /// the session's insert payload will make the digest resident.
+    pub fn handle_probe(&self, probe: &PrefixProbe) -> PrefixAck {
+        let hit = self.prefix_store().attach(probe.request_id, &probe.digest);
+        PrefixAck { request_id: probe.request_id, digest: probe.digest, hit }
+    }
+
+    /// Extract and RELEASE a migrating session's prefix attachment so the
+    /// source worker holds no refcount for it after the handoff (zero-leak
+    /// invariant). Returns the digest and prefix length to ride the
+    /// `Migrate` frame; `None` when the session holds no attachment.
+    pub fn export_prefix(&self, request_id: u64) -> Option<(PrefixDigest, u32)> {
+        let mut store = self.prefix_store();
+        let digest = store.attachment(request_id)?;
+        let len = store.get(&digest).map(|kv| kv.prefix_len as u32);
+        store.release(request_id);
+        len.map(|l| (digest, l))
+    }
+
+    /// Re-attach a migrated session's prefix on this (target) server.
+    /// Returns residency: a miss is survivable — the session's next warm
+    /// payload draws a typed `PREFIX` reject and is rebuilt as an insert.
+    pub fn import_prefix(&self, request_id: u64, digest: &PrefixDigest) -> bool {
+        self.prefix_store().attach(request_id, digest)
+    }
+
+    /// Map a serve error to its in-band reject code: a typed
+    /// [`PrefixMiss`] becomes `reject::PREFIX` (the session rebuilds as
+    /// an insert and retransmits); everything else stays `FAILED`.
+    pub fn reject_code_for(e: &anyhow::Error) -> u8 {
+        if e.downcast_ref::<PrefixMiss>().is_some() {
+            reject::PREFIX
+        } else {
+            reject::FAILED
         }
     }
 
@@ -173,6 +277,15 @@ impl CloudServer {
                     rc.qa_bits
                 );
             }
+        }
+        if let Some(ins) = payload.prefix.as_ref().and_then(|pr| pr.insert.as_ref()) {
+            anyhow::ensure!(
+                ins.chosen_bits < rc.qa_bits,
+                "request {}: prefix block quantized at {} bits exceeds the announced Q̄a = {}",
+                payload.request_id,
+                ins.chosen_bits,
+                rc.qa_bits
+            );
         }
         Ok(())
     }
@@ -263,9 +376,13 @@ impl CloudServer {
     /// exhaustion, cancellation, error) and `serve_connection` sweeps the
     /// ids its connection announced — otherwise entries would accumulate
     /// on a long-lived server and a later session reusing the request id
-    /// would be held to a dead session's announcement.
+    /// would be held to a dead session's announcement. Also the single
+    /// choke point through which prefix refcounts drain: EOS, budget
+    /// exhaustion, cancellation, connection sweep and worker death all
+    /// funnel here, so none of them can leak a pinned prefix.
     pub fn retire_request(&self, request_id: u64) {
         self.control.lock().expect("control plane poisoned").remove(&request_id);
+        self.prefix_store().release(request_id);
     }
 
     /// Serve one payload. Returns (reply, scaled_compute_seconds).
@@ -306,7 +423,16 @@ impl CloudServer {
                     Err(rj) => crate::wire::encode_error_frame(&rj),
                 }))
             }
-            FrameKind::Reply | FrameKind::ResumeAck | FrameKind::Error | FrameKind::Migrate => {
+            FrameKind::PrefixProbe => {
+                let probe = crate::wire::decode_prefix_probe_frame(frame_bytes)?;
+                let ack = self.handle_probe(&probe);
+                Ok(Some(crate::wire::encode_prefix_ack_frame(&ack)))
+            }
+            FrameKind::Reply
+            | FrameKind::ResumeAck
+            | FrameKind::Error
+            | FrameKind::Migrate
+            | FrameKind::PrefixAck => {
                 anyhow::bail!("cloud server received a {kind:?} frame")
             }
         }
@@ -397,14 +523,26 @@ impl CloudServer {
                         }
                         Err(e) => {
                             transport.send(&crate::wire::encode_error_frame(&RejectFrame {
-                                code: reject::FAILED,
+                                code: Self::reject_code_for(&e),
                                 request_id: id,
                                 message: format!("{e:#}"),
                             }))?;
                         }
                     }
                 }
-                FrameKind::Reply | FrameKind::ResumeAck | FrameKind::Error | FrameKind::Migrate => {
+                FrameKind::PrefixProbe => {
+                    let probe = crate::wire::decode_prefix_probe_frame(&frame_bytes)?;
+                    let ack = self.handle_probe(&probe);
+                    // The probe may have pinned a refcount; sweep it with
+                    // the connection like any other announcement.
+                    announced.push(probe.request_id);
+                    transport.send(&crate::wire::encode_prefix_ack_frame(&ack))?;
+                }
+                FrameKind::Reply
+                | FrameKind::ResumeAck
+                | FrameKind::Error
+                | FrameKind::Migrate
+                | FrameKind::PrefixAck => {
                     anyhow::bail!("cloud server received a {kind:?} frame")
                 }
             }
@@ -560,7 +698,124 @@ impl CloudServer {
         Ok((out, wall_s))
     }
 
+    /// Serve a prefill payload that carries a prefix reference.
+    ///
+    /// * **Insert** (`pr.insert` present): the payload ships TWO
+    ///   independently coded blocks — the prefix rows inside the
+    ///   reference and the suffix rows in `payload.hidden`. They are
+    ///   decompressed, concatenated and served as a normal full prefill;
+    ///   then the back segment's prefix KV rows are published into the
+    ///   store under the digest (first insert charges the bytes once; a
+    ///   racing duplicate deduplicates to a refcount). The reply carries
+    ///   all `w` KV rows, exactly like a cold prefill.
+    /// * **Warm** (no insert): only the suffix block was transmitted.
+    ///   The stored prefix KV is read (typed [`PrefixMiss`] when absent
+    ///   or shape-mismatched — forged and stale tokens land here) and
+    ///   the back segment runs a suffix-only prefill against it; the
+    ///   suffix hidden rows and logits are bit-identical to the insert
+    ///   path's rows at the same positions (pinned by
+    ///   `suffix_prefill_is_bit_identical_to_whole_block`), so the
+    ///   sampled token stream cannot depend on cache temperature. The
+    ///   reply carries only the suffix KV rows; the edge already holds
+    ///   the prefix rows in its own cache entry.
+    fn serve_prefix_prefill(&self, payload: &SplitPayload, pr: &PrefixRef) -> Result<CloudReply> {
+        let cfg = self.cfg().clone();
+        let d = cfg.d_model;
+        let kvw = cfg.kv_width();
+        anyhow::ensure!(payload.is_prefill, "prefix reference on a non-prefill payload");
+        let wp = pr.prefix_len as usize;
+        let w_suf = payload.hidden.rows;
+        let w = wp + w_suf;
+        anyhow::ensure!(wp > 0, "empty prefix reference");
+        anyhow::ensure!(w <= cfg.prefill_len, "prefix + suffix exceed prefill width");
+        anyhow::ensure!(
+            payload.pos >= wp && payload.pos < w,
+            "position {} outside the suffix rows [{wp}, {w})",
+            payload.pos
+        );
+        if let Some(ins) = &pr.insert {
+            anyhow::ensure!(ins.rows == wp, "prefix block rows disagree with the reference");
+            let mut h = self.scratch.with(|s| ins.decompress_with(s))?;
+            let h_suf = self.scratch.with(|s| payload.hidden.decompress_with(s))?;
+            h.extend_from_slice(&h_suf);
+            h.resize(cfg.prefill_len * d, 0.0); // zero-pad to static width
+            let (h_out, kv_rows) = self.node.prefill(&h)?;
+            let logits = self.node.logits_prefill(&h_out)?;
+            let row = &logits[payload.pos * cfg.vocab..(payload.pos + 1) * cfg.vocab];
+            let token = sample(row, payload.sampling, payload.request_id, payload.pos);
+            let prefix_kv = PrefixKv {
+                prefix_len: wp,
+                kv_width: kvw,
+                layers: kv_rows
+                    .iter()
+                    .map(|(k, v)| (k[..wp * kvw].to_vec(), v[..wp * kvw].to_vec()))
+                    .collect(),
+            };
+            self.prefix_store().insert(payload.request_id, &pr.digest, prefix_kv);
+            let new_kv_rows = kv_rows
+                .into_iter()
+                .map(|(k, v)| (k[..w * kvw].to_vec(), v[..w * kvw].to_vec()))
+                .collect();
+            Ok(CloudReply {
+                request_id: payload.request_id,
+                pos: payload.pos as u64,
+                token,
+                new_kv_rows,
+                logits_entropy: sampling::entropy(row),
+            })
+        } else {
+            let prefix_layers: Vec<(Vec<f32>, Vec<f32>)> = {
+                let mut store = self.prefix_store();
+                // A warm payload normally arrives pre-attached by its
+                // probe; attach here too so a (legitimately) probe-less
+                // in-process driver still pins and retires cleanly.
+                store.attach(payload.request_id, &pr.digest);
+                let Some(kv) = store.get(&pr.digest) else {
+                    return Err(PrefixMiss {
+                        request_id: payload.request_id,
+                        message: format!("digest not resident (prefix_len {wp})"),
+                    }
+                    .into());
+                };
+                if kv.prefix_len != wp || kv.kv_width != kvw {
+                    return Err(PrefixMiss {
+                        request_id: payload.request_id,
+                        message: format!(
+                            "stored shape ({} rows, width {}) disagrees with the reference \
+                             ({wp} rows, width {kvw})",
+                            kv.prefix_len, kv.kv_width
+                        ),
+                    }
+                    .into());
+                }
+                kv.layers.clone()
+            };
+            let mut h_suf = self.scratch.with(|s| payload.hidden.decompress_with(s))?;
+            h_suf.resize((cfg.prefill_len - wp) * d, 0.0); // zero-pad to static width
+            let (h_out, kv_suf) = self.node.prefill_suffix(&h_suf, wp, &prefix_layers)?;
+            let logits = self.node.logits_rows(&h_out, cfg.prefill_len - wp)?;
+            let local = payload.pos - wp; // suffix-local sample row
+            let row = &logits[local * cfg.vocab..(local + 1) * cfg.vocab];
+            let token = sample(row, payload.sampling, payload.request_id, payload.pos);
+            // Suffix rows only: the edge's cache entry supplies [0, wp).
+            let new_kv_rows = kv_suf
+                .into_iter()
+                .map(|(k, v)| (k[..w_suf * kvw].to_vec(), v[..w_suf * kvw].to_vec()))
+                .collect();
+            Ok(CloudReply {
+                request_id: payload.request_id,
+                pos: payload.pos as u64,
+                token,
+                new_kv_rows,
+                logits_entropy: sampling::entropy(row),
+            })
+        }
+    }
+
     fn serve_payload(&self, payload: &SplitPayload) -> Result<CloudReply> {
+        if let Some(pr) = &payload.prefix {
+            return self.serve_prefix_prefill(payload, pr);
+        }
         let cfg = self.cfg().clone();
         let d = cfg.d_model;
         let kvw = cfg.kv_width();

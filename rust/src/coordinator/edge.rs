@@ -1,17 +1,60 @@
 //! Edge device: runs the OPSC front segment, owns all per-request state
 //! (the paper's stateless-cloud design), compresses intermediate outputs,
 //! and talks to the cloud over the simulated wireless link.
+//!
+//! The device also owns the edge half of the content-addressed prefix
+//! cache (`crate::prefix`): [`EdgeDevice::prefix_decision`] picks the
+//! longest cacheable prefix of a prompt, and
+//! [`EdgeDevice::prefill_ex`] serves it — suffix-only front compute when
+//! the prefix is resident locally, two-block encoding (prefix block +
+//! divergent suffix block) on the wire so the cloud can populate its
+//! store, and a 36-byte reference instead of the prefix block once both
+//! halves are warm.
 
+use std::cell::RefCell;
 use std::time::Instant;
 
 use anyhow::Result;
 
 use super::profile::DeviceProfile;
-use super::protocol::{CompressedKv, CompressedTensor, CompressionConfig, SplitPayload};
+use super::protocol::{
+    CompressedKv, CompressedTensor, CompressionConfig, PrefixRef, SplitPayload,
+};
 use super::sampling::SamplingSpec;
 use crate::planner::TxSettings;
+use crate::prefix::{
+    prefix_candidates, EdgePrefixCache, EdgePrefixEntry, PlanIdentity, PrefixDigest, CHUNK_TOKENS,
+};
 use crate::quant::ScratchPool;
 use crate::runtime::{LayerKv, NodeRuntime};
+
+/// How a prefill should engage the prefix cache. Chosen by
+/// [`EdgeDevice::prefix_decision`] before the first payload is built;
+/// drivers may downgrade `Warm` to `Insert` when the cloud's probe
+/// answers miss (or a warm payload draws a typed `PREFIX` reject).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PrefixDecision {
+    /// No cacheable prefix (short prompt, cache disabled): today's
+    /// single-block payload, byte for byte.
+    Off,
+    /// Ship the prefix as its own compressed block so the cloud can
+    /// serve this session AND populate its store for later ones.
+    Insert { digest: PrefixDigest, prefix_len: usize },
+    /// Both halves hold the prefix: ship the 36-byte reference plus the
+    /// divergent suffix block only. Requires a resident edge entry.
+    Warm { digest: PrefixDigest, prefix_len: usize },
+}
+
+impl PrefixDecision {
+    /// The (digest, prefix_len) this decision addresses, if any.
+    pub fn reference(&self) -> Option<(PrefixDigest, usize)> {
+        match *self {
+            PrefixDecision::Off => None,
+            PrefixDecision::Insert { digest, prefix_len }
+            | PrefixDecision::Warm { digest, prefix_len } => Some((digest, prefix_len)),
+        }
+    }
+}
 
 /// Outcome of probing the wire size a payload WOULD have under some
 /// transmission settings. Typed so the early-exit controller can tell
@@ -72,6 +115,10 @@ pub struct EdgeDevice {
     /// shared with the parallel KV-layer workers (zero steady-state
     /// allocation on the compression hot path).
     pub scratch: ScratchPool,
+    /// Edge half of the content-addressed prefix cache (budget 0 =
+    /// disabled, which keeps every payload byte-identical to the
+    /// pre-prefix wire format).
+    pub prefix_cache: RefCell<EdgePrefixCache>,
 }
 
 impl EdgeDevice {
@@ -81,11 +128,61 @@ impl EdgeDevice {
         profile: DeviceProfile,
         compression: CompressionConfig,
     ) -> EdgeDevice {
-        EdgeDevice { node, profile, compression, n_cloud_layers, scratch: ScratchPool::new() }
+        EdgeDevice {
+            node,
+            profile,
+            compression,
+            n_cloud_layers,
+            scratch: ScratchPool::new(),
+            prefix_cache: RefCell::new(EdgePrefixCache::new(0)),
+        }
+    }
+
+    /// (Re)size the edge prefix cache. 0 disables it; resizing resets the
+    /// cache (entries are cheap to re-learn from the next cold prefill).
+    pub fn set_prefix_cache_budget(&self, budget_bytes: u64) {
+        *self.prefix_cache.borrow_mut() = EdgePrefixCache::new(budget_bytes);
     }
 
     fn cfg(&self) -> &crate::model::ModelConfig {
         &self.node.weights.cfg
+    }
+
+    /// The plan identity scoping this device's prefix digests: any change
+    /// to the split point, compression settings, or model shape lands in
+    /// a different address space, so stale plans miss instead of aliasing.
+    pub fn prefix_plan(&self) -> PlanIdentity {
+        let cfg = self.cfg();
+        PlanIdentity {
+            split_layer: self.node.layer_range.end as u32,
+            q_bar: self.compression.q_bar,
+            tau_bits: self.compression.tau.to_bits() as u64,
+            delta_bits: self.compression.delta.to_bits(),
+            use_rans: self.compression.use_rans,
+            i_kv: false, // prefill blocks never ship KV; decode mode is orthogonal
+            d_model: cfg.d_model as u32,
+            n_layers: cfg.n_layers as u32,
+            prefill_len: cfg.prefill_len as u32,
+        }
+    }
+
+    /// Pick this prompt's prefix-cache engagement: the longest cacheable
+    /// chunk boundary, `Warm` if the edge already holds it, `Insert`
+    /// otherwise, `Off` when nothing is cacheable or the cache is off.
+    pub fn prefix_decision(&self, prompt: &[u32]) -> PrefixDecision {
+        let mut cache = self.prefix_cache.borrow_mut();
+        if !cache.enabled() {
+            return PrefixDecision::Off;
+        }
+        let plan = self.prefix_plan();
+        let Some(&(prefix_len, digest)) = prefix_candidates(prompt, &plan).last() else {
+            return PrefixDecision::Off;
+        };
+        if cache.contains(&digest) {
+            PrefixDecision::Warm { digest, prefix_len }
+        } else {
+            PrefixDecision::Insert { digest, prefix_len }
+        }
     }
 
     /// Compress one tensor through the fused engine on this device's
@@ -100,9 +197,27 @@ impl EdgeDevice {
         self.scratch.with(|s| CompressedTensor::compress_with(s, t, rows, cols, comp))
     }
 
-    /// Prefill the front segment and build the first payload.
-    /// Returns (payload, state, scaled_compute_seconds).
+    /// Prefill the front segment and build the first payload, without
+    /// engaging the prefix cache — byte-identical to the pre-prefix wire
+    /// format. Returns (payload, state, scaled_compute_seconds).
     pub fn prefill(&self, request_id: u64, prompt: &[u32]) -> Result<(SplitPayload, EdgeRequestState, f64)> {
+        self.prefill_ex(request_id, prompt, PrefixDecision::Off)
+    }
+
+    /// Prefill under a prefix-cache decision (see [`PrefixDecision`]).
+    ///
+    /// With a resident edge entry (always for `Warm`, opportunistically
+    /// for `Insert` after a downgrade) only the divergent suffix rows are
+    /// computed and compressed; the front K/V, hidden history and payload
+    /// bytes are bit-identical to the full-compute path by the suffix-
+    /// prefill kernel's equivalence guarantee, so warm and cold streams
+    /// cannot diverge.
+    pub fn prefill_ex(
+        &self,
+        request_id: u64,
+        prompt: &[u32],
+        decision: PrefixDecision,
+    ) -> Result<(SplitPayload, EdgeRequestState, f64)> {
         let cfg = self.cfg();
         anyhow::ensure!(!prompt.is_empty(), "empty prompt");
         anyhow::ensure!(
@@ -111,24 +226,123 @@ impl EdgeDevice {
             prompt.len(),
             cfg.prefill_len
         );
+        let d = cfg.d_model;
+        let kvw = cfg.kv_width();
+        let w = prompt.len();
+        if let Some((_, prefix_len)) = decision.reference() {
+            anyhow::ensure!(
+                prefix_len > 0 && prefix_len < w && prefix_len % CHUNK_TOKENS == 0,
+                "prefix length {prefix_len} is not a chunk boundary inside the prompt ({w})"
+            );
+        }
+        let entry = match decision.reference() {
+            Some((digest, _)) => self.prefix_cache.borrow_mut().get(&digest),
+            None => None,
+        };
+        if let (PrefixDecision::Warm { .. }, None) = (decision, &entry) {
+            anyhow::bail!("warm prefix decision without a resident edge entry");
+        }
+
         let t0 = Instant::now();
-        let x = self.node.weights.embed_padded(prompt, cfg.prefill_len);
-        let (h, kv_rows) = self.node.prefill(&x)?;
-        let front_kv = self.node.install_prefill_kv(&kv_rows, prompt.len());
+        let (hidden_history, front_kv) = match (&entry, decision.reference()) {
+            (Some(e), Some((_, wp))) => {
+                // Suffix-only front compute against the cached prefix.
+                anyhow::ensure!(
+                    e.prefix_len == wp,
+                    "edge entry covers {} tokens, decision claims {wp}",
+                    e.prefix_len
+                );
+                let x_suffix =
+                    self.node.weights.embed_padded(&prompt[wp..], cfg.prefill_len - wp);
+                let (h_suf, kv_suf) = self.node.prefill_suffix(&x_suffix, wp, &e.front_kv)?;
+                let mut hidden_history = Vec::with_capacity(cfg.max_seq * d);
+                hidden_history.extend_from_slice(&e.hidden);
+                hidden_history.extend_from_slice(&h_suf[..(w - wp) * d]);
+                let front_kv: Vec<LayerKv> = e
+                    .front_kv
+                    .iter()
+                    .zip(&kv_suf)
+                    .map(|((pk, pv), (sk, sv))| {
+                        let mut k = Vec::with_capacity(cfg.max_seq * kvw);
+                        k.extend_from_slice(pk);
+                        k.extend_from_slice(&sk[..(w - wp) * kvw]);
+                        k.resize(cfg.max_seq * kvw, 0.0);
+                        let mut v = Vec::with_capacity(cfg.max_seq * kvw);
+                        v.extend_from_slice(pv);
+                        v.extend_from_slice(&sv[..(w - wp) * kvw]);
+                        v.resize(cfg.max_seq * kvw, 0.0);
+                        LayerKv { k, v }
+                    })
+                    .collect();
+                (hidden_history, front_kv)
+            }
+            _ => {
+                // Full-block front compute (cold path, today's behavior).
+                let x = self.node.weights.embed_padded(prompt, cfg.prefill_len);
+                let (h, kv_rows) = self.node.prefill(&x)?;
+                // Sized for the whole request up front: decode appends one
+                // row per step, so reserving max_seq rows avoids
+                // re-allocating (and re-copying) the history on the decode
+                // hot path.
+                let mut hidden_history = Vec::with_capacity(cfg.max_seq * d);
+                hidden_history.extend_from_slice(&h[..w * d]);
+                (hidden_history, self.node.install_prefill_kv(&kv_rows, w))
+            }
+        };
         let compute_s = self.profile.scale(t0.elapsed().as_secs_f64());
 
-        let d = cfg.d_model;
-        let w = prompt.len();
-        // Sized for the whole request up front: decode appends one row per
-        // step, so reserving max_seq rows avoids re-allocating (and
-        // re-copying) the history on the decode hot path.
-        let mut hidden_history = Vec::with_capacity(cfg.max_seq * d);
-        hidden_history.extend_from_slice(&h[..w * d]);
-        let hidden = self.compress_block(&hidden_history, w, d, &self.compression);
+        // Pre-fill the cloud-KV mirror from the entry's learned back rows
+        // on the warm path — the cloud's warm reply carries suffix rows
+        // only, so the mirror's prefix must come from here.
+        let mut cloud_kv =
+            vec![LayerKv::zeros(cfg.max_seq, cfg.kv_width()); self.n_cloud_layers];
+        if let (PrefixDecision::Warm { prefix_len, .. }, Some(e)) = (decision, &entry) {
+            anyhow::ensure!(
+                e.back_kv.len() == self.n_cloud_layers
+                    && e.back_kv.iter().all(|(k, v)| {
+                        k.len() == prefix_len * kvw && v.len() == prefix_len * kvw
+                    }),
+                "edge entry's back-segment rows do not cover the cloud layers"
+            );
+            for (cache, (bk, bv)) in cloud_kv.iter_mut().zip(&e.back_kv) {
+                cache.k[..prefix_len * kvw].copy_from_slice(bk);
+                cache.v[..prefix_len * kvw].copy_from_slice(bv);
+            }
+        }
+
+        let (hidden, prefix) = match decision {
+            PrefixDecision::Off => {
+                (self.compress_block(&hidden_history, w, d, &self.compression), None)
+            }
+            PrefixDecision::Insert { digest, prefix_len: wp } => {
+                // Two-block encode: the prefix travels as its own tensor so
+                // the cloud's store entry (and every later warm suffix) is
+                // independent of this prompt's divergent tail.
+                let prefix_block =
+                    self.compress_block(&hidden_history[..wp * d], wp, d, &self.compression);
+                let suffix_block = self.compress_block(
+                    &hidden_history[wp * d..w * d],
+                    w - wp,
+                    d,
+                    &self.compression,
+                );
+                let r = PrefixRef { digest, prefix_len: wp as u32, insert: Some(prefix_block) };
+                (suffix_block, Some(r))
+            }
+            PrefixDecision::Warm { digest, prefix_len: wp } => {
+                let suffix_block = self.compress_block(
+                    &hidden_history[wp * d..w * d],
+                    w - wp,
+                    d,
+                    &self.compression,
+                );
+                (suffix_block, Some(PrefixRef { digest, prefix_len: wp as u32, insert: None }))
+            }
+        };
         let state = EdgeRequestState {
             request_id,
             front_kv,
-            cloud_kv: vec![LayerKv::zeros(cfg.max_seq, cfg.kv_width()); self.n_cloud_layers],
+            cloud_kv,
             hidden_history,
             tokens: prompt.to_vec(),
         };
@@ -139,8 +353,85 @@ impl EdgeDevice {
             kv: None, // nothing to ship yet — the cloud builds its KV in prefill
             is_prefill: true,
             sampling: SamplingSpec::default(),
+            prefix,
         };
         Ok((payload, state, compute_s))
+    }
+
+    /// Learn an edge cache entry from a freshly served cold/insert
+    /// prefill: front prefix K/V from the local caches, split-layer
+    /// hidden prefix from the history, back prefix K/V from the absorbed
+    /// cloud reply. Call AFTER `absorb_reply` of the prefill reply.
+    /// Idempotent — a resident digest only gets its recency bumped.
+    pub fn learn_prefix(&self, state: &EdgeRequestState, digest: &PrefixDigest, prefix_len: usize) {
+        let mut cache = self.prefix_cache.borrow_mut();
+        if !cache.enabled() || cache.contains(digest) {
+            return;
+        }
+        let cfg = self.cfg();
+        let (d, kvw) = (cfg.d_model, cfg.kv_width());
+        let wp = prefix_len;
+        if wp == 0 || state.seq_len() < wp {
+            return;
+        }
+        let entry = EdgePrefixEntry {
+            prefix_len: wp,
+            front_kv: state
+                .front_kv
+                .iter()
+                .map(|c| (c.k[..wp * kvw].to_vec(), c.v[..wp * kvw].to_vec()))
+                .collect(),
+            hidden: state.hidden_history[..wp * d].to_vec(),
+            back_kv: state
+                .cloud_kv
+                .iter()
+                .map(|c| (c.k[..wp * kvw].to_vec(), c.v[..wp * kvw].to_vec()))
+                .collect(),
+        };
+        cache.insert(digest, entry);
+    }
+
+    /// Rebuild a warm prefill payload as a full insert after the cloud
+    /// answered with a typed `PREFIX` reject (store restart, eviction,
+    /// forged token): no front compute is redone — the prefix block is
+    /// re-compressed from the hidden history, which by determinism equals
+    /// the bytes a cold insert would have shipped. The caller re-stamps
+    /// the sampling spec before retransmitting.
+    pub fn rebuild_prefill_as_insert(
+        &self,
+        state: &EdgeRequestState,
+        digest: &PrefixDigest,
+        prefix_len: usize,
+    ) -> Result<SplitPayload> {
+        let cfg = self.cfg();
+        let d = cfg.d_model;
+        let w = state.seq_len();
+        let wp = prefix_len;
+        anyhow::ensure!(
+            wp > 0 && wp < w && state.hidden_history.len() >= w * d,
+            "prefix length {wp} does not split the prompt ({w})"
+        );
+        let prefix_block =
+            self.compress_block(&state.hidden_history[..wp * d], wp, d, &self.compression);
+        let suffix_block = self.compress_block(
+            &state.hidden_history[wp * d..w * d],
+            w - wp,
+            d,
+            &self.compression,
+        );
+        Ok(SplitPayload {
+            request_id: state.request_id,
+            pos: w - 1,
+            hidden: suffix_block,
+            kv: None,
+            is_prefill: true,
+            sampling: SamplingSpec::default(),
+            prefix: Some(PrefixRef {
+                digest: *digest,
+                prefix_len: wp as u32,
+                insert: Some(prefix_block),
+            }),
+        })
     }
 
     /// One decode step: embed `token`, run the front segment at position
@@ -207,6 +498,7 @@ impl EdgeDevice {
             kv,
             is_prefill: false,
             sampling: SamplingSpec::default(),
+            prefix: None, // the prefix only rides prefill payloads
         };
         Ok((payload, compute_s))
     }
@@ -318,6 +610,7 @@ impl EdgeDevice {
             kv,
             is_prefill: false,
             sampling: SamplingSpec::default(),
+            prefix: None,
         })
     }
 }

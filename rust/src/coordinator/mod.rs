@@ -28,13 +28,13 @@ pub mod snapshot;
 
 pub use batcher::{BatcherParams, DynamicBatcher};
 pub use builder::{build_pipeline, build_serve_loop, DeploymentSpec, ServeSpec};
-pub use cloud::{BatchCompute, CloudServer};
-pub use edge::{EdgeDevice, EdgeRequestState, ProbeOutcome};
+pub use cloud::{BatchCompute, CloudServer, PrefixMiss};
+pub use edge::{EdgeDevice, EdgeRequestState, PrefixDecision, ProbeOutcome};
 pub use pipeline::{EdgeClient, RetryPolicy, SplitPipeline};
 pub use profile::DeviceProfile;
 pub use protocol::{
     reject, CloudReply, CompressedKv, CompressedTensor, CompressionConfig, MigrateState,
-    RejectFrame, Resume, ResumeAck, SplitPayload,
+    PrefixAck, PrefixProbe, PrefixRef, RejectFrame, Resume, ResumeAck, SplitPayload,
 };
 pub use request::{GenerationResult, Request, StepStats};
 pub use router::{RouteDecision, Router};

@@ -14,15 +14,15 @@
 //!
 //! The generation logic itself (decode loop, Algorithm-2 escalation,
 //! `StepStats` accounting) lives in `Session`; these drivers only perform
-//! the IO the session asks for, through one shared [`drive_session`]
+//! the IO the session asks for, through one shared [`drive_prepared`]
 //! loop. The many-to-one counterpart is
 //! [`ServeLoop`](super::serve_loop::ServeLoop).
 
 use anyhow::Result;
 
-use super::cloud::CloudServer;
-use super::edge::EdgeDevice;
-use super::protocol::{reject, CloudReply, Resume, SplitPayload};
+use super::cloud::{CloudServer, PrefixMiss};
+use super::edge::{EdgeDevice, PrefixDecision};
+use super::protocol::{reject, CloudReply, PrefixProbe, Resume, SplitPayload};
 use super::request::{GenerationResult, Request};
 use super::session::{Session, SessionAction};
 use super::snapshot::SessionSnapshot;
@@ -33,31 +33,50 @@ use crate::wire::{
     CloudPort, EdgePort, LinkTransport, SocketTransport, WireError, WireTransport,
 };
 
-/// Drive one session to completion through an exchange function that
-/// delivers a payload and produces (reply, server compute seconds,
+/// Whether a failed exchange is the cloud's typed refusal of a warm
+/// prefix token — in-band `reject::PREFIX` on wire paths, a downcastable
+/// [`PrefixMiss`] on in-process paths. Drivers answer it by rebuilding
+/// the prefill as a full insert and retransmitting; anything else is a
+/// genuine failure.
+pub(crate) fn is_prefix_reject(e: &anyhow::Error) -> bool {
+    matches!(
+        e.downcast_ref::<WireError>(),
+        Some(WireError::Rejected { code: reject::PREFIX, .. })
+    ) || e.downcast_ref::<PrefixMiss>().is_some()
+}
+
+/// Drive a prepared session to completion through an exchange function
+/// that delivers a payload and produces (reply, server compute seconds,
 /// uplink outcome, downlink outcome). Both blocking drivers share this
 /// loop, so single-process and cross-process generation differ ONLY in
-/// how frames move.
-pub(crate) fn drive_session(
+/// how frames move. A typed `PREFIX` reject is survived in place: the
+/// prefill is rebuilt as a full insert and retransmitted once.
+pub(crate) fn drive_prepared(
+    session: &mut Session,
     edge: &EdgeDevice,
-    controller: Option<EarlyExitController>,
-    req: &Request,
     mut exchange: impl FnMut(&SplitPayload) -> Result<(CloudReply, f64, TransferOutcome, TransferOutcome)>,
-) -> Result<GenerationResult> {
-    let mut session = Session::for_edge(req.clone(), edge, controller);
+) -> Result<()> {
     loop {
         match session.poll(edge)? {
             SessionAction::Transmit(payload) => {
-                let (reply, server_s, up, down) = exchange(&payload)?;
+                let (reply, server_s, up, down) = match exchange(&payload) {
+                    Ok(ok) => ok,
+                    Err(e) if is_prefix_reject(&e) => {
+                        let rebuilt = session.rebuild_prefill_as_insert(edge)?;
+                        exchange(&rebuilt)?
+                    }
+                    Err(e) => return Err(e),
+                };
                 session.on_reply(edge, &reply, server_s, up, down)?;
             }
             // A single blocking driver never observes Yield: every
             // transmit is answered before the next poll.
             SessionAction::Yield => unreachable!("no in-flight IO in the blocking driver"),
-            SessionAction::Finished => return Ok(session.into_result()),
+            SessionAction::Finished => return Ok(()),
         }
     }
 }
+
 
 pub struct SplitPipeline {
     pub edge: EdgeDevice,
@@ -92,17 +111,37 @@ impl SplitPipeline {
     /// Run a full request to completion. EOS is vocabulary token 0
     /// (synthetic convention). Behavior-identical to driving a fresh
     /// `Session` by hand: poll → transmit → reply, until finished — with
-    /// every transmission crossing the codec as real frame bytes.
+    /// every transmission crossing the codec as real frame bytes. When
+    /// the edge holds a warm prefix entry, a `PrefixProbe`/`PrefixAck`
+    /// handshake (also real frames over the same wire) pins the cloud's
+    /// copy before the prefill ships suffix-only; a probe miss downgrades
+    /// to an insert.
     pub fn generate(&mut self, req: &Request) -> Result<GenerationResult> {
         let SplitPipeline { edge, cloud, port, cloud_port, controller } = self;
-        drive_session(edge, *controller, req, |payload| {
+        let mut session = Session::for_edge(req.clone(), edge, *controller);
+        let mut decision = edge.prefix_decision(&req.prompt);
+        if let PrefixDecision::Warm { digest, prefix_len } = decision {
+            let probe =
+                PrefixProbe { request_id: req.id, digest, prefix_len: prefix_len as u32 };
+            port.send_prefix_probe(&probe)?;
+            let (decoded, _) = cloud_port.recv_prefix_probe()?;
+            let ack = cloud.handle_probe(&decoded);
+            cloud_port.send_prefix_ack(&ack)?;
+            let (ack, _) = port.recv_prefix_ack()?;
+            if !(ack.hit && ack.digest == digest) {
+                decision = PrefixDecision::Insert { digest, prefix_len };
+            }
+        }
+        session.set_prefix_decision(decision);
+        drive_prepared(&mut session, edge, |payload| {
             let up = port.send_payload(payload)?;
             let (decoded, _) = cloud_port.recv_payload()?;
             let (reply, cloud_s) = cloud.handle(&decoded)?;
             cloud_port.send_reply(&reply, cloud_s)?;
             let (reply, server_s, down) = port.recv_reply()?;
             Ok((reply, server_s, up, down))
-        })
+        })?;
+        Ok(session.into_result())
     }
 }
 
@@ -200,10 +239,30 @@ impl EdgeClient {
         Ok(())
     }
 
+    /// Plan the session's prefix engagement: when the edge holds a warm
+    /// entry, run the probe handshake against the remote cloud and
+    /// downgrade to an insert on a miss (or a mis-addressed ack).
+    fn plan_prefix(&mut self, req: &Request) -> Result<PrefixDecision> {
+        let mut decision = self.edge.prefix_decision(&req.prompt);
+        if let PrefixDecision::Warm { digest, prefix_len } = decision {
+            let probe =
+                PrefixProbe { request_id: req.id, digest, prefix_len: prefix_len as u32 };
+            self.port.send_prefix_probe(&probe)?;
+            let (ack, _) = self.port.recv_prefix_ack()?;
+            if !(ack.hit && ack.digest == digest) {
+                decision = PrefixDecision::Insert { digest, prefix_len };
+            }
+        }
+        Ok(decision)
+    }
+
     /// Run a full request to completion against the remote cloud.
     pub fn generate(&mut self, req: &Request) -> Result<GenerationResult> {
+        let decision = self.plan_prefix(req)?;
         let EdgeClient { edge, port, controller, .. } = self;
-        drive_session(edge, *controller, req, |payload| {
+        let mut session = Session::for_edge(req.clone(), edge, *controller);
+        session.set_prefix_decision(decision);
+        drive_prepared(&mut session, edge, |payload| {
             let up = port.send_payload(payload)?;
             let (reply, server_s, mut down) = port.recv_reply()?;
             // The blocking recv's wall time spans the server's whole
@@ -213,7 +272,8 @@ impl EdgeClient {
             // count them twice.
             down.latency_s = (down.latency_s - server_s).max(0.0);
             Ok((reply, server_s, up, down))
-        })
+        })?;
+        Ok(session.into_result())
     }
 
     /// Like [`generate`](EdgeClient::generate), but every wire failure is
@@ -223,6 +283,7 @@ impl EdgeClient {
     /// retried — the cloud answered; the answer was no.
     pub fn generate_resilient(&mut self, req: &Request) -> Result<GenerationResult> {
         let mut session = Session::for_edge(req.clone(), &self.edge, self.controller);
+        session.set_prefix_decision(self.plan_prefix(req)?);
         self.drive_resilient(&mut session)?;
         Ok(session.into_result())
     }
@@ -246,7 +307,17 @@ impl EdgeClient {
             match session.poll(&self.edge)? {
                 SessionAction::Transmit(payload) => {
                     let (reply, server_s, up, down) =
-                        self.exchange_with_recovery(session, &payload, &mut rng)?;
+                        match self.exchange_with_recovery(session, &payload, &mut rng) {
+                            Ok(ok) => ok,
+                            // Typed PREFIX reject: the cloud cannot honor
+                            // the warm token (evicted, migrated, stale) —
+                            // rebuild as a full insert and retransmit.
+                            Err(e) if is_prefix_reject(&e) => {
+                                let rebuilt = session.rebuild_prefill_as_insert(&self.edge)?;
+                                self.exchange_with_recovery(session, &rebuilt, &mut rng)?
+                            }
+                            Err(e) => return Err(e),
+                        };
                     session.on_reply(&self.edge, &reply, server_s, up, down)?;
                 }
                 SessionAction::Yield => unreachable!("no in-flight IO in the blocking driver"),

@@ -324,6 +324,38 @@ impl CompressedKv {
     }
 }
 
+/// Prefix-cache reference riding a prefill `SplitPayload` (wire v7).
+///
+/// On a **warm** transmission (`insert == None`) this is the headline
+/// wire saving: the 32-byte content digest + prefix length stand in for
+/// the prefix's share of the compressed hidden block — the cloud
+/// reconstructs the prefix from its [`prefix::PrefixStore`]
+/// (crate::prefix) and the payload's `hidden` tensor covers only the
+/// divergent suffix rows `[prefix_len, w)`. On an **insert**
+/// transmission the prefix rows travel once as their own compressed
+/// block (`insert`) so the cloud can serve the session *and* populate
+/// the store for every later session sharing the prefix.
+///
+/// A warm reference to a digest the cloud does not hold (forged token,
+/// store restart, eviction race) is answered with a typed in-band
+/// [`reject::PREFIX`] — never silent wrong tokens.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PrefixRef {
+    pub digest: crate::prefix::PrefixDigest,
+    /// Prompt positions `[0, prefix_len)` covered by the digest.
+    pub prefix_len: u32,
+    /// Compressed split-layer hidden rows of the prefix (insert only).
+    pub insert: Option<CompressedTensor>,
+}
+
+impl PrefixRef {
+    /// digest 32 + prefix_len u32 (+ the insert tensor when present; its
+    /// presence is a payload flag bit, not extra header bytes).
+    pub fn wire_bytes(&self) -> u64 {
+        36 + self.insert.as_ref().map_or(0, |t| t.wire_bytes())
+    }
+}
+
 /// What one edge→cloud transmission carries (paper Eq. 3).
 #[derive(Clone, Debug, PartialEq)]
 pub struct SplitPayload {
@@ -331,7 +363,8 @@ pub struct SplitPayload {
     /// Position of the last token in `hidden` (the token being decoded, or
     /// prompt_len-1 for prefill).
     pub pos: usize,
-    /// Compressed hidden-state rows at the split layer.
+    /// Compressed hidden-state rows at the split layer. With a warm
+    /// `prefix` reference these are the divergent suffix rows only.
     pub hidden: CompressedTensor,
     /// I_kv = 1: the cloud layers' KV caches travel too (stateless cloud).
     pub kv: Option<CompressedKv>,
@@ -340,16 +373,55 @@ pub struct SplitPayload {
     /// Decode policy for the stateless cloud (Session stamps it from the
     /// Request; direct edge-API callers get greedy).
     pub sampling: super::sampling::SamplingSpec,
+    /// Prefix-cache reference (wire v7, prefill only). `None` keeps the
+    /// pre-prefix layout byte-for-byte.
+    pub prefix: Option<PrefixRef>,
 }
 
 impl SplitPayload {
     pub fn wire_bytes(&self) -> u64 {
         // 17-byte fixed header (request id, pos, flags — greedy decode is
         // a flag bit) + the sampling spec's own bytes when it carries
-        // top-k parameters.
+        // top-k parameters + the optional prefix reference.
         17 + self.sampling.wire_bytes()
+            + self.prefix.as_ref().map_or(0, |p| p.wire_bytes())
             + self.hidden.wire_bytes()
             + self.kv.as_ref().map_or(0, |k| k.wire_bytes())
+    }
+}
+
+/// Edge→cloud prefix-cache probe (frame kind 8, wire v7): "is this
+/// (digest, prefix_len) resident?". A hit attaches the probing request to
+/// the entry (refcount++), pinning it until the request retires — the ack
+/// is a *promise* the warm payload can rely on, not a racy snapshot.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PrefixProbe {
+    pub request_id: u64,
+    pub digest: crate::prefix::PrefixDigest,
+    pub prefix_len: u32,
+}
+
+impl PrefixProbe {
+    /// request id u64 + digest 32 + prefix_len u32.
+    pub fn wire_bytes(&self) -> u64 {
+        44
+    }
+}
+
+/// Cloud→edge answer to a [`PrefixProbe`] (frame kind 9, wire v7).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PrefixAck {
+    pub request_id: u64,
+    /// Echo of the probed digest (cross-field mismatch is a typed error).
+    pub digest: crate::prefix::PrefixDigest,
+    /// Resident (and now pinned for this request) or not.
+    pub hit: bool,
+}
+
+impl PrefixAck {
+    /// request id u64 + digest 32 + flags u8 (bit 0 = hit).
+    pub fn wire_bytes(&self) -> u64 {
+        41
     }
 }
 
@@ -452,6 +524,11 @@ pub mod reject {
     /// cloud's aggregate KV working memory past the budget (the Eq. 8c
     /// gate extended across all tenants of one server).
     pub const ADMISSION: u8 = 4;
+    /// A warm payload referenced a prefix digest the cloud does not hold
+    /// (forged or stale cache token, store restart, eviction). The edge
+    /// falls back to a full insert payload — the stream continues
+    /// bit-identically, it just pays the cold wire cost.
+    pub const PREFIX: u8 = 5;
 }
 
 /// Cloud→edge in-band typed rejection (frame kind 6, wire v5): the
@@ -505,16 +582,23 @@ pub struct MigrateState {
     /// The session's announced control-plane settings, verbatim (so a
     /// later `Reconfig` with a higher epoch still applies on the target).
     pub control: Option<crate::adapt::Reconfig>,
+    /// The session's prefix-cache attachment (wire v7): the digest it
+    /// holds a refcount on, plus the prefix length. Export releases the
+    /// refcount on the source worker; import re-attaches on the target
+    /// if the digest is resident there (a miss is benign — the prefix
+    /// only matters at prefill, which has already happened).
+    pub prefix: Option<(crate::prefix::PrefixDigest, u32)>,
 }
 
 impl MigrateState {
     /// request id u64 + epoch u32 + next_pos u64 + flags u8, then
-    /// optionally [fence pos u64 + frame len u32 + frame bytes] and the
-    /// 22-byte `Reconfig` body.
+    /// optionally [fence pos u64 + frame len u32 + frame bytes], the
+    /// 22-byte `Reconfig` body, and the 36-byte prefix attachment.
     pub fn wire_bytes(&self) -> u64 {
         let fence = self.fence.as_ref().map_or(0, |(_, f)| 12 + f.len() as u64);
         let control = if self.control.is_some() { 22 } else { 0 };
-        21 + fence + control
+        let prefix = if self.prefix.is_some() { 36 } else { 0 };
+        21 + fence + control + prefix
     }
 }
 

@@ -44,8 +44,9 @@ use anyhow::Result;
 
 use super::batcher::BatcherParams;
 use super::cloud::CloudServer;
-use super::edge::EdgeDevice;
-use super::protocol::SplitPayload;
+use super::edge::{EdgeDevice, PrefixDecision};
+use super::pipeline::is_prefix_reject;
+use super::protocol::{PrefixProbe, SplitPayload};
 use super::request::{GenerationResult, Request};
 use super::router::{RouteDecision, Router};
 use super::session::{Session, SessionAction};
@@ -260,7 +261,37 @@ impl ServeLoop {
                 };
                 let arrival_s = req.arrival_s;
                 let base_bits = self.edges[device].edge.compression.q_bar;
-                let session = Session::for_edge(req, &self.edges[device].edge, self.controller);
+                // Prefix planning: when the device holds a warm entry for
+                // this prompt, probe the shared cloud over THIS session's
+                // own wire (real frames) so the store pins the digest
+                // before the suffix-only prefill ships. A probe miss — or
+                // a wire fault during the handshake — downgrades to an
+                // insert, which is always safe (full payload).
+                let mut decision = self.edges[device].edge.prefix_decision(&req.prompt);
+                if let PrefixDecision::Warm { digest, prefix_len } = decision {
+                    let probe =
+                        PrefixProbe { request_id: req.id, digest, prefix_len: prefix_len as u32 };
+                    let ep = &mut self.edges[device];
+                    let acked = ep.port.send_prefix_probe(&probe).and_then(|_| {
+                        let (decoded, _) = ep.cloud_port.recv_prefix_probe()?;
+                        let ack = self.cloud.handle_probe(&decoded);
+                        ep.cloud_port.send_prefix_ack(&ack)?;
+                        let (ack, _) = ep.port.recv_prefix_ack()?;
+                        Ok(ack)
+                    });
+                    match acked {
+                        Ok(ack) if ack.hit && ack.digest == digest => {}
+                        Ok(_) => decision = PrefixDecision::Insert { digest, prefix_len },
+                        Err(_) => {
+                            ep.port.transport.drain();
+                            ep.cloud_port.transport.drain();
+                            decision = PrefixDecision::Insert { digest, prefix_len };
+                        }
+                    }
+                }
+                let mut session =
+                    Session::for_edge(req, &self.edges[device].edge, self.controller);
+                session.set_prefix_decision(decision);
                 active.push(ActiveSession {
                     session,
                     device,
@@ -391,7 +422,7 @@ impl ServeLoop {
             // payload alone so the fault is attributed to ITS session and
             // everyone else's step still completes.
             let b = payloads.len();
-            let (served, compute): (Vec<std::result::Result<_, String>>, _) =
+            let (served, compute): (Vec<std::result::Result<_, anyhow::Error>>, _) =
                 match self.cloud.handle_batch(&payloads) {
                     Ok((served, compute)) => (served.into_iter().map(Ok).collect(), compute),
                     Err(_) => {
@@ -404,7 +435,7 @@ impl ServeLoop {
                                     compute.solo_n += 1;
                                     served.push(Ok((r, s)));
                                 }
-                                Err(e) => served.push(Err(format!("{e:#}"))),
+                                Err(e) => served.push(Err(e)),
                             }
                         }
                         (served, compute)
@@ -417,10 +448,53 @@ impl ServeLoop {
                 let a = &mut active[i];
                 let device = a.device;
                 let edge_s = a.session.pending_edge_s().unwrap_or(0.0);
-                let (reply, cloud_s) = match outcome {
-                    Ok(x) => x,
-                    Err(msg) => {
-                        fail_session(a, &mut report, anyhow::anyhow!(msg).context("cloud serve"));
+                let (reply, cloud_s, up) = match outcome {
+                    Ok((r, s)) => (r, s, up),
+                    // Typed PREFIX reject: the cloud refused the warm
+                    // cache token. Rebuild the prefill as a full insert
+                    // and retransmit on this session's own wire — served
+                    // solo, so everyone else's step is untouched. The
+                    // retransmission's uplink outcome replaces the warm
+                    // attempt's in the step accounting (it is the frame
+                    // that actually got answered).
+                    Err(e) if is_prefix_reject(&e) => {
+                        let rebuilt =
+                            match a.session.rebuild_prefill_as_insert(&self.edges[device].edge) {
+                                Ok(p) => p,
+                                Err(e) => {
+                                    fail_session(
+                                        a,
+                                        &mut report,
+                                        e.context("rebuilding prefill as insert"),
+                                    );
+                                    continue;
+                                }
+                            };
+                        let ep = &mut self.edges[device];
+                        let resent = ep.port.send_payload(&rebuilt).and_then(|up2| {
+                            let (decoded, _) = ep.cloud_port.recv_payload()?;
+                            let (reply, cloud_s) = self.cloud.handle(&decoded)?;
+                            Ok((reply, cloud_s, up2))
+                        });
+                        match resent {
+                            Ok(x) => x,
+                            Err(e) => {
+                                ep.port.transport.drain();
+                                ep.cloud_port.transport.drain();
+                                fail_session(
+                                    a,
+                                    &mut report,
+                                    e.context("prefix insert retransmission"),
+                                );
+                                if let Some(ctrl) = self.adapt.as_mut() {
+                                    ctrl.reanchor(device);
+                                }
+                                continue;
+                            }
+                        }
+                    }
+                    Err(e) => {
+                        fail_session(a, &mut report, e.context("cloud serve"));
                         continue;
                     }
                 };

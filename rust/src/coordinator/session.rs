@@ -30,7 +30,7 @@
 
 use anyhow::Result;
 
-use super::edge::{EdgeDevice, EdgeRequestState};
+use super::edge::{EdgeDevice, EdgeRequestState, PrefixDecision};
 use super::protocol::{CloudReply, SplitPayload};
 use super::request::{GenerationResult, Request, StepStats};
 use super::snapshot::{SessionSnapshot, StateSnapshot};
@@ -102,6 +102,12 @@ pub struct Session {
     /// session, so the cloud can fence traffic from dead connections.
     /// Survives snapshot/restore.
     resume_epoch: u32,
+    /// How the prefill engages the prefix cache (Off / Insert / Warm).
+    /// Set by the driver before the first poll (after the probe
+    /// handshake, for Warm); only consulted at prefill time, so it is
+    /// deliberately NOT snapshotted — a restored mid-stream session has
+    /// no prefill left to cache.
+    prefix_decision: PrefixDecision,
     pending: Option<PendingTx>,
     result: GenerationResult,
 }
@@ -126,6 +132,7 @@ impl Session {
             budget,
             cloud_kv_stale: false,
             resume_epoch: 0,
+            prefix_decision: PrefixDecision::Off,
             pending: None,
             result,
         }
@@ -212,6 +219,44 @@ impl Session {
         self.resume_epoch
     }
 
+    /// How the prefill will engage (or engaged) the prefix cache.
+    pub fn prefix_decision(&self) -> PrefixDecision {
+        self.prefix_decision
+    }
+
+    /// Install the driver's prefix decision. Must be called before the
+    /// prefill polls; for `Warm` the driver is expected to have completed
+    /// the probe handshake (a hit-acked digest), downgrading to `Insert`
+    /// on a probe miss.
+    pub fn set_prefix_decision(&mut self, decision: PrefixDecision) {
+        self.prefix_decision = decision;
+    }
+
+    /// Recover from an in-band `PREFIX` reject: the cloud could not
+    /// honor the warm cache token (evicted between ack and payload,
+    /// migrated away, or stale). Rebuild the in-flight prefill as a full
+    /// insert payload — recompressed deterministically from the edge
+    /// state, so its bytes equal a cold insert's — and return it for
+    /// retransmission. The session stays `AwaitingReply` for the same
+    /// position, and the decision is downgraded so the eventual reply is
+    /// absorbed as an insert (full KV rows).
+    pub fn rebuild_prefill_as_insert(&mut self, edge: &EdgeDevice) -> Result<SplitPayload> {
+        let pending = self
+            .pending
+            .as_mut()
+            .ok_or_else(|| anyhow::anyhow!("PREFIX reject with nothing in flight"))?;
+        anyhow::ensure!(pending.is_prefill, "PREFIX reject on a decode step");
+        let Some((digest, prefix_len)) = self.prefix_decision.reference() else {
+            anyhow::bail!("PREFIX reject but the session holds no prefix decision");
+        };
+        let state = self.state.as_ref().expect("reject before prefill");
+        let mut payload = edge.rebuild_prefill_as_insert(state, &digest, prefix_len)?;
+        payload.sampling = self.request.sampling;
+        pending.chosen_bits = payload.hidden.chosen_bits;
+        self.prefix_decision = PrefixDecision::Insert { digest, prefix_len };
+        Ok(payload)
+    }
+
     /// TS threshold currently in force: the device's configured τ unless
     /// a reconfiguration overrode it (what a `Resume` re-announces).
     pub fn current_tau(&self, edge: &EdgeDevice) -> f32 {
@@ -283,7 +328,8 @@ impl Session {
     }
 
     fn poll_prefill(&mut self, edge: &EdgeDevice) -> Result<SessionAction> {
-        let (mut payload, state, edge_s) = edge.prefill(self.request.id, &self.request.prompt)?;
+        let (mut payload, state, edge_s) =
+            edge.prefill_ex(self.request.id, &self.request.prompt, self.prefix_decision)?;
         payload.sampling = self.request.sampling;
         self.pending = Some(PendingTx {
             edge_s,
@@ -417,6 +463,16 @@ impl Session {
             if let Err(e) = edge.absorb_reply(state, pending.pos, &reply.new_kv_rows) {
                 self.cancel();
                 return Err(e.context("absorbing cloud reply"));
+            }
+            // The prefill state is now complete on both halves; publish
+            // the prefix into the edge cache so the NEXT session sharing
+            // it prefills suffix-only (no-op when already resident, when
+            // caching is off, or when the reply was warm — a warm reply
+            // implies the entry already existed).
+            if pending.is_prefill {
+                if let Some((digest, prefix_len)) = self.prefix_decision.reference() {
+                    edge.learn_prefix(state, &digest, prefix_len);
+                }
             }
         } else {
             // Stateless step: the cloud recomputed from the full hidden

@@ -388,6 +388,16 @@ impl FleetScheduler {
                 };
                 self.send_to(conn_id, &out)
             }
+            FrameKind::PrefixProbe => {
+                let probe = wire::decode_prefix_probe_frame(&frame)?;
+                let ack = self.cloud.handle_probe(&probe);
+                // A hit pinned a refcount under this request id; announce
+                // it so the connection sweep retires (releases) it even if
+                // the session never completes here.
+                let conn = self.conns.get_mut(&conn_id).expect("checked in on_frame");
+                conn.announced.insert(probe.request_id);
+                self.send_to(conn_id, &wire::encode_prefix_ack_frame(&ack))
+            }
             other => anyhow::bail!("cloud fleet received a {other:?} frame"),
         }
     }
@@ -552,7 +562,7 @@ impl FleetScheduler {
         }
         let mut served = 0usize;
         if !payloads.is_empty() {
-            type Served = std::result::Result<(CloudReply, f64), String>;
+            type Served = std::result::Result<(CloudReply, f64), (u8, String)>;
             let replies: Vec<Served> = match self.cloud.handle_batch(&payloads) {
                 Ok((replies, _)) => replies.into_iter().map(Ok).collect(),
                 Err(_) => {
@@ -560,10 +570,16 @@ impl FleetScheduler {
                     // stateless and sampling is (seed, request, pos)-
                     // keyed, so re-serving individually returns the
                     // identical tokens; only server-side counters see
-                    // the retry.
+                    // the retry. The typed reject code survives (a warm
+                    // prefix miss must reach the edge as PREFIX, not
+                    // FAILED, so it rebuilds as an insert).
                     payloads
                         .iter()
-                        .map(|p| self.cloud.handle(p).map_err(|e| format!("{e:#}")))
+                        .map(|p| {
+                            self.cloud
+                                .handle(p)
+                                .map_err(|e| (CloudServer::reject_code_for(&e), format!("{e:#}")))
+                        })
                         .collect()
                 }
             };
@@ -583,10 +599,10 @@ impl FleetScheduler {
                         }
                         reply_frame
                     }
-                    Err(msg) => {
+                    Err((code, msg)) => {
                         self.stats.failed += 1;
                         wire::encode_error_frame(&RejectFrame {
-                            code: reject::FAILED,
+                            code,
                             request_id: pfx.request_id,
                             message: msg,
                         })
@@ -648,6 +664,11 @@ impl FleetScheduler {
         conn.announced.remove(&request_id);
         self.live.remove(&request_id);
         let (control, epoch) = self.cloud.export_control(request_id);
+        // The prefix attachment ships as (digest, len) and is RELEASED
+        // here — after export this worker holds no refcount for the
+        // session (zero-leak). The shared rows themselves stay resident
+        // (other sessions may pin them); the target re-attaches by digest.
+        let prefix = self.cloud.export_prefix(request_id);
         self.stats.exported += 1;
         Ok(MigrateState {
             request_id,
@@ -655,6 +676,7 @@ impl FleetScheduler {
             next_pos: fence.as_ref().map_or(0, |(p, _)| p + 1),
             fence,
             control,
+            prefix,
         })
     }
 
@@ -698,6 +720,13 @@ impl FleetScheduler {
         match &ms.control {
             Some(rc) => self.cloud.restore_control(rc),
             None => self.cloud.retire_request(ms.request_id),
+        }
+        // Re-attach the shipped prefix reference when the digest is
+        // resident here; a miss is survivable (the session's next warm
+        // payload draws a typed PREFIX reject and rebuilds as an insert).
+        // Must come after the retire above, which releases attachments.
+        if let Some((digest, _len)) = &ms.prefix {
+            self.cloud.import_prefix(ms.request_id, digest);
         }
         self.live.insert(ms.request_id, conn_id);
         let conn = self.conns.get_mut(&conn_id).expect("existence checked above");
@@ -758,6 +787,7 @@ mod tests {
                 include_kv: true,
                 budget_cap: Reconfig::NO_BUDGET_CAP,
             }),
+            prefix: None,
         }
     }
 

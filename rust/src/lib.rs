@@ -6,6 +6,7 @@ pub mod channel;
 pub mod adapt;
 pub mod wire;
 pub mod planner;
+pub mod prefix;
 pub mod runtime;
 pub mod coordinator;
 pub mod eval;

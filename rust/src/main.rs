@@ -40,15 +40,20 @@ USAGE: splitserve <subcommand> [flags]
   plan      --model sim7b --budget-mb 16 --w-bar 128
             (prints the Eq. 8 PlanChoice as JSON; exits 2 when infeasible)
   generate  --model sim7b --layers 8 --split 4 --prompt 5,6,7 --max-new 12
+            [--prefix-cache-mb N]
   serve     --model sim7b --layers 8 --devices 2 --requests 6 --max-batch 8
             [--adapt] [--scenario constant|step|drift|outage]
             [--arrival poisson|flash-crowd|churn|diurnal [--period-s 60]]
+            [--prefix-cache-mb N]
             (--adapt turns on the online control plane; --scenario replays
              a time-varying channel trace on every device link; --arrival
              picks the workload shape — diurnal is a sinusoidal day/night
-             load curve)
+             load curve; --prefix-cache-mb enables the content-addressed
+             prefix KV cache on both halves, 0 = off and byte-identical
+             to the pre-v7 wire)
   cloud     --listen 127.0.0.1:7433 --model sim7b --layers 8 --split 4 [--once]
             [--max-batch 8 --fleet-budget-mb 64 --fault-seed S]
+            [--prefix-cache-mb N]
             (default is fleet mode: every connection served concurrently,
              cross-connection decode batching, DRR fairness, aggregate-KV
              admission (--fleet-budget-mb, typed ADMISSION rejects when
@@ -58,12 +63,13 @@ USAGE: splitserve <subcommand> [flags]
              fault injection)
   edge      --connect 127.0.0.1:7433 --model sim7b --layers 8 --split 4 \\
             --prompt 5,6,7 --max-new 12 [--retry N --backoff-ms B]
+            [--prefix-cache-mb N]
             (addresses may be unix:/path/to.sock for unix domain sockets;
              both halves must be built with the same model/split flags;
              --retry N survives N wire failures per step — reconnect with
              jittered exponential backoff from B ms, resume, retransmit)
   pool      --workers 3 --sessions 6 --kill 1 [--model sim7b --layers 8
-            --split 4 --seed 1337 --max-new 8]
+            --split 4 --seed 1337 --max-new 8 --prefix-cache-mb N]
             (in-process sharded-cloud demo: places sessions across a pool
              of fleet workers, kills --kill workers mid-stream, and
              asserts every stream recovered bit-identically with zero
@@ -76,6 +82,12 @@ fn prompt_from(args: &Args) -> Vec<u32> {
         .split(',')
         .map(|t| t.trim().parse().unwrap_or(1))
         .collect()
+}
+
+/// `--prefix-cache-mb N` → bytes. 0 (the default) disables prefix
+/// caching entirely: payloads are byte-identical to the pre-v7 wire.
+fn prefix_cache_bytes(args: &Args) -> u64 {
+    args.usize_or("prefix-cache-mb", 0) as u64 * 1024 * 1024
 }
 
 /// Shared result printout of the one-request drivers (`generate`, `edge`).
@@ -179,6 +191,7 @@ fn main() -> Result<()> {
             let max_new = args.usize_or("max-new", 12);
             let engine = Rc::new(Engine::load("artifacts", &cfg)?);
             let mut spec = DeploymentSpec::defaults(cfg, split);
+            spec.prefix_cache_bytes = prefix_cache_bytes(&args);
             if let Some(d) = args.flag("deadline-ms") {
                 spec.deadline_s = Some(d.parse::<f64>()? / 1e3);
             }
@@ -194,6 +207,7 @@ fn main() -> Result<()> {
             let engine = Rc::new(Engine::load("artifacts", &cfg)?);
             let mut spec = ServeSpec::defaults(cfg.clone(), split, devices);
             spec.deployment.link_seed = 100;
+            spec.deployment.prefix_cache_bytes = prefix_cache_bytes(&args);
             spec.batcher.max_batch = args.usize_or("max-batch", spec.batcher.max_batch);
             if let Some(d) = args.flag("deadline-ms") {
                 spec.deployment.deadline_s = Some(d.parse::<f64>()? / 1e3);
@@ -270,7 +284,8 @@ fn main() -> Result<()> {
             let split = args.usize_or("split", cfg.n_layers / 2);
             let listen = args.str_or("listen", "127.0.0.1:7433");
             let engine = Rc::new(Engine::load("artifacts", &cfg)?);
-            let spec = DeploymentSpec::defaults(cfg, split);
+            let mut spec = DeploymentSpec::defaults(cfg, split);
+            spec.prefix_cache_bytes = prefix_cache_bytes(&args);
             let cloud = spec.build_cloud_server(engine)?;
             let listener = WireListener::bind(listen)?;
             if args.has("once") {
@@ -317,6 +332,7 @@ fn main() -> Result<()> {
             let max_new = args.usize_or("max-new", 12);
             let engine = Rc::new(Engine::load("artifacts", &cfg)?);
             let mut spec = DeploymentSpec::defaults(cfg, split);
+            spec.prefix_cache_bytes = prefix_cache_bytes(&args);
             if let Some(d) = args.flag("deadline-ms") {
                 spec.deadline_s = Some(d.parse::<f64>()? / 1e3);
             }
@@ -348,7 +364,8 @@ fn main() -> Result<()> {
             let seed = args.usize_or("seed", 0x5EED) as u64;
             let max_new = args.usize_or("max-new", 8);
             let engine = Rc::new(Engine::load("artifacts", &cfg)?);
-            let spec = DeploymentSpec::defaults(cfg.clone(), split);
+            let mut spec = DeploymentSpec::defaults(cfg.clone(), split);
+            spec.prefix_cache_bytes = prefix_cache_bytes(&args);
             let pool_cfg = PoolConfig { workers, seed, ..PoolConfig::default() };
             let fspec = spec.clone();
             let feng = engine.clone();

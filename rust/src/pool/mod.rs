@@ -32,7 +32,11 @@
 //! * [`pool`] — the [`CloudPool`] itself: edge frame routing, worker
 //!   health sweeps, seeded [`FaultPlan`](crate::wire::FaultPlan) worker
 //!   kills, failover with the ≤1 re-served position bound, and live
-//!   drain/rebalance via export → Migrate frame → import.
+//!   drain/rebalance via export → Migrate frame → import. Placement
+//!   prefers a worker already holding a prefill's prefix digest (wire
+//!   v7), so shared prompts land where their cached KV lives; a
+//!   session's prefix attachment rides the Migrate frame and is
+//!   released/re-attached across the handoff.
 
 pub mod placement;
 pub mod pool;

@@ -45,6 +45,7 @@ use anyhow::Result;
 use crate::coordinator::protocol::{reject, RejectFrame};
 use crate::coordinator::CloudServer;
 use crate::fleet::{FleetConfig, FleetScheduler};
+use crate::prefix::PrefixDigest;
 use crate::wire::{
     self, FaultPlan, FrameKind, Loopback, PollRecv, Transport, WireError, WireTransport,
 };
@@ -107,6 +108,11 @@ pub struct PoolStats {
     pub migrations: u64,
     /// Migrations refused by the target (typed, session rolled back).
     pub migration_rejected: u64,
+    /// Placements steered onto a worker already holding the session's
+    /// prefix digest (cross-worker prefix-cache affinity).
+    pub prefix_placements: u64,
+    /// Armed mid-handoff migrate-frame corruptions injected (chaos).
+    pub migrate_frame_faults: u64,
     /// Drain operations started.
     pub drains: u64,
     /// Rebalance migrations triggered.
@@ -138,6 +144,12 @@ struct WorkerSlot {
     fault: Option<FaultPlan>,
     /// Payloads this incarnation has served (the fault clock).
     ops: u64,
+    /// Chaos: corrupted capacity telemetry. When set, the placement
+    /// layer sees THIS headroom capacity (in sessions) instead of the
+    /// real Eq. 8c figure. The worker's own admission gate is the
+    /// backstop — a lie can cost typed ADMISSION rejects, never a
+    /// silent over-commit.
+    telemetry_override: Option<u64>,
 }
 
 pub struct CloudPool {
@@ -157,6 +169,9 @@ pub struct CloudPool {
     next_edge: u64,
     polls: u64,
     last_rebalance: u64,
+    /// Armed chaos: XOR one bit into the NEXT worker-to-worker migrate
+    /// frame mid-handoff (one-shot; the bit index wraps over the frame).
+    migrate_fault: Option<usize>,
     pub stats: PoolStats,
 }
 
@@ -185,6 +200,7 @@ impl CloudPool {
             next_edge: 0,
             polls: 0,
             last_rebalance: 0,
+            migrate_fault: None,
             stats: PoolStats::default(),
         })
     }
@@ -199,6 +215,7 @@ impl CloudPool {
             draining: false,
             fault: None,
             ops: 0,
+            telemetry_override: None,
         })
     }
 
@@ -216,6 +233,27 @@ impl CloudPool {
     /// anything — mid-prefill; k = after its k-th payload — mid-decode).
     pub fn arm_worker_fault(&mut self, idx: usize, plan: FaultPlan) {
         self.workers[idx].fault = Some(plan);
+    }
+
+    /// Arm a one-shot mid-handoff fault: the next worker-to-worker
+    /// Migrate frame gets one bit flipped in flight. The handoff must
+    /// fail TYPED and roll the session back onto its source — never a
+    /// half-imported session or a leaked charge.
+    pub fn arm_migrate_fault(&mut self, bit: usize) {
+        self.migrate_fault = Some(bit);
+    }
+
+    /// Chaos: corrupt one worker's capacity telemetry. The placement
+    /// layer will believe the worker holds `lie` sessions of capacity
+    /// regardless of its real Eq. 8c budget; the worker's own admission
+    /// gate remains the backstop. Cleared on respawn (a fresh worker
+    /// reports honestly) or via [`CloudPool::clear_headroom_telemetry`].
+    pub fn corrupt_headroom_telemetry(&mut self, idx: usize, lie: u64) {
+        self.workers[idx].telemetry_override = Some(lie);
+    }
+
+    pub fn clear_headroom_telemetry(&mut self, idx: usize) {
+        self.workers[idx].telemetry_override = None;
     }
 
     // ---- observability ---------------------------------------------------
@@ -277,6 +315,18 @@ impl CloudPool {
         self.workers.iter().map(|w| w.scheduler.cloud().resume_entries()).sum()
     }
 
+    /// Aggregate prefix-store charged bytes across all workers (Eq. 8c
+    /// ledger side; the leak audits assert this returns to baseline).
+    pub fn prefix_charged_bytes(&self) -> u64 {
+        self.workers.iter().map(|w| w.scheduler.cloud().prefix_charged_bytes()).sum()
+    }
+
+    /// Aggregate live prefix-store attachments (pinned refcounts) across
+    /// all workers.
+    pub fn prefix_attachments(&self) -> usize {
+        self.workers.iter().map(|w| w.scheduler.cloud().prefix_live_attachments()).sum()
+    }
+
     // ---- event loop ------------------------------------------------------
 
     /// One pool step: pump edge frames in, step every worker (intake +
@@ -334,7 +384,14 @@ impl CloudPool {
                 let rid = pfx.request_id;
                 let w = match self.placements.get(&rid) {
                     Some(p) => p.worker,
-                    None => match self.place(rid, edge_id) {
+                    // Prefix-bearing prefills prefer a worker already
+                    // holding the digest (warm hit; insert dedups into
+                    // an attach instead of a second copy of the rows).
+                    None => match self.place_preferring(
+                        rid,
+                        edge_id,
+                        pfx.prefix.as_ref().map(|(d, _)| d),
+                    ) {
                         Some(w) => w,
                         None => {
                             self.stats.placement_rejected += 1;
@@ -357,6 +414,26 @@ impl CloudPool {
             Err(WireError::WrongKind { got: FrameKind::Resume, .. }) => {
                 let rs = wire::decode_resume_frame(&frame)?;
                 self.route_control(edge_id, rs.request_id, frame)
+            }
+            Err(WireError::WrongKind { got: FrameKind::PrefixProbe, .. }) => {
+                // The probe is the session's FIRST contact: place it
+                // now, steering toward a worker where the digest is
+                // already resident — that worker's ack turns the prefill
+                // into a 32-byte token instead of a full re-upload.
+                let probe = wire::decode_prefix_probe_frame(&frame)?;
+                let rid = probe.request_id;
+                let w = match self.placements.get(&rid) {
+                    Some(p) => p.worker,
+                    None => match self.place_preferring(rid, edge_id, Some(&probe.digest)) {
+                        Some(w) => w,
+                        None => {
+                            self.stats.placement_rejected += 1;
+                            self.reject_to_edge(edge_id, rid, "no worker has KV headroom");
+                            return Ok(());
+                        }
+                    },
+                };
+                self.deliver(w, edge_id, frame)
             }
             Err(e) => Err(e.into()),
         }
@@ -470,8 +547,12 @@ impl CloudPool {
                 self.stats.replies_forwarded += 1;
             }
             Err(_) => {
-                // ResumeAck, or a typed rejection. A rejection that
-                // condemns the session clears its pool residue too.
+                // ResumeAck, PrefixAck (passes through verbatim — the
+                // edge owns the hit/miss decision), or a typed
+                // rejection. A rejection that condemns the session
+                // clears its pool residue too; a PREFIX reject does NOT
+                // — the edge rebuilds the prefill as an insert and
+                // retransmits on the same placement.
                 if let Ok(rj) = wire::decode_error_frame(&frame) {
                     if rj.code == reject::ADMISSION || rj.code == reject::FAILED {
                         self.placements.remove(&rj.request_id);
@@ -527,9 +608,11 @@ impl CloudPool {
             .enumerate()
             .filter(|&(w, slot)| w != exclude && !slot.draining)
             .map(|(w, slot)| {
-                let cap = match self.cfg.fleet.kv_budget_bytes {
-                    Some(b) => b / slot.scheduler.session_kv_bytes().max(1),
-                    None => u64::MAX / 2,
+                let cap = match (slot.telemetry_override, self.cfg.fleet.kv_budget_bytes) {
+                    // Chaos: the lie replaces the real capacity figure.
+                    (Some(lie), _) => lie,
+                    (None, Some(b)) => b / slot.scheduler.session_kv_bytes().max(1),
+                    (None, None) => u64::MAX / 2,
                 };
                 Candidate { worker: w, headroom: cap.saturating_sub(counts[w]) }
             })
@@ -537,8 +620,35 @@ impl CloudPool {
     }
 
     fn place(&mut self, request_id: u64, edge: u64) -> Option<usize> {
+        self.place_preferring(request_id, edge, None)
+    }
+
+    /// Place a session, preferring — among workers with headroom — one
+    /// whose prefix store already holds `digest`. Falls back to the
+    /// plain most-headroom pick when no eligible worker is resident.
+    fn place_preferring(
+        &mut self,
+        request_id: u64,
+        edge: u64,
+        digest: Option<&PrefixDigest>,
+    ) -> Option<usize> {
         let cands = self.candidates(usize::MAX);
-        let w = placement::pick(self.cfg.seed, request_id, &cands)?;
+        let mut w = None;
+        if let Some(dg) = digest {
+            let resident: Vec<Candidate> = cands
+                .iter()
+                .filter(|c| {
+                    c.headroom > 0
+                        && self.workers[c.worker].scheduler.cloud().prefix_resident(dg)
+                })
+                .copied()
+                .collect();
+            w = placement::pick(self.cfg.seed, request_id, &resident);
+            if w.is_some() {
+                self.stats.prefix_placements += 1;
+            }
+        }
+        let w = w.or_else(|| placement::pick(self.cfg.seed, request_id, &cands))?;
         let headroom =
             cands.iter().find(|c| c.worker == w).expect("picked from candidates").headroom;
         self.placements.insert(request_id, Placement { worker: w, edge });
@@ -650,8 +760,44 @@ impl CloudPool {
         }
         self.quiesce_worker(p.worker)?;
         let ms = self.workers[p.worker].scheduler.export_session(rid)?;
-        let bytes = wire::encode_migrate_frame(&ms);
-        let ms = wire::decode_migrate_frame(&bytes)?;
+        let mut bytes = wire::encode_migrate_frame(&ms);
+        if let Some(bit) = self.migrate_fault.take() {
+            // Chaos: damage the handoff frame in flight.
+            self.stats.migrate_frame_faults += 1;
+            let at = (bit / 8) % bytes.len();
+            bytes[at] ^= 1 << (bit % 8);
+        }
+        let ms = match wire::decode_migrate_frame(&bytes) {
+            Ok(decoded) => decoded,
+            Err(e) => {
+                // The handoff frame was damaged mid-flight (CRC or
+                // structural check caught it — typed, never a silent
+                // misdecode). The session was already exported from the
+                // source, so re-import the ORIGINAL state there: export
+                // removed its epoch entry and released its charges, so
+                // the same MigrateState re-admits and re-charges —
+                // nothing leaks, and the stream continues exactly where
+                // it was. If even the rollback is refused, fail TYPED to
+                // the edge.
+                self.route(p.worker, p.edge);
+                return match self.workers[p.worker].scheduler.import_session(p.edge, &ms)? {
+                    Ok(_) => {
+                        self.stats.migration_rejected += 1;
+                        Ok(Err(RejectFrame {
+                            code: reject::FAILED,
+                            request_id: rid,
+                            message: format!("migrate frame damaged in handoff: {e}"),
+                        }))
+                    }
+                    Err(rj) => {
+                        self.placements.remove(&rid);
+                        self.inflight.remove(&rid);
+                        self.reject_to_edge(p.edge, rid, &rj.message.clone());
+                        Ok(Err(rj))
+                    }
+                };
+            }
+        };
         self.route(target, p.edge);
         match self.workers[target].scheduler.import_session(p.edge, &ms)? {
             Ok(_ack) => {

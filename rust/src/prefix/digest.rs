@@ -1,0 +1,256 @@
+//! Content addressing for shared prompt prefixes.
+//!
+//! A prefix is identified by a 256-bit digest over (a) the prompt tokens
+//! it covers, absorbed in fixed-size chunks by a rolling sponge, and (b)
+//! the *plan identity* — split point, activation bit-width Q̄a, sparsity
+//! threshold τ, the KV-vs-hidden decode mode I_kv, and the model's shape
+//! class. Folding the plan in means a plan mismatch is a natural cache
+//! miss instead of a correctness hazard: front-segment KV computed under
+//! one OPSC configuration can never be addressed by a session running
+//! another.
+//!
+//! Chunking makes the address space *prefix-closed*: every multiple of
+//! [`CHUNK_TOKENS`] up to `prompt.len() - 1` yields a candidate digest,
+//! and because the sponge is rolling, all candidates for one prompt are
+//! produced in a single O(len) pass ([`prefix_candidates`]). The last
+//! token is never part of a cacheable prefix — the sample position
+//! `w - 1` must always be computed, so the divergent suffix is non-empty
+//! by construction.
+
+use std::fmt;
+
+/// Tokens per digest chunk. Prefix lengths are multiples of this, which
+/// bounds the candidate count per prompt and makes near-miss prefixes
+/// (shared template + one diverging token) still hit on the longest
+/// common chunk boundary.
+pub const CHUNK_TOKENS: usize = 16;
+
+/// 256-bit content address of (plan identity, token prefix).
+#[derive(Clone, Copy, PartialEq, Eq, Hash)]
+pub struct PrefixDigest(pub [u8; 32]);
+
+impl fmt::Debug for PrefixDigest {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // First 8 bytes are enough to tell entries apart in logs.
+        write!(
+            f,
+            "PrefixDigest({:02x}{:02x}{:02x}{:02x}{:02x}{:02x}{:02x}{:02x}…)",
+            self.0[0], self.0[1], self.0[2], self.0[3], self.0[4], self.0[5], self.0[6], self.0[7]
+        )
+    }
+}
+
+/// Everything that must match for cached prefix state to be reusable.
+/// Two sessions whose plans differ in any field hash to different
+/// digests, so they can never alias each other's cache entries.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PlanIdentity {
+    /// Split layer: number of layers in the edge front segment.
+    pub split_layer: u32,
+    /// Activation quantization bit-width Q̄a (TAB-Q budget).
+    pub q_bar: u32,
+    /// Top-κ sparsity threshold τ, bit-cast so float identity is exact.
+    pub tau_bits: u64,
+    /// TAB-Q outlier fraction Δ, bit-cast.
+    pub delta_bits: u64,
+    /// Whether the entropy-coding stage (rANS) is enabled.
+    pub use_rans: bool,
+    /// Decode transmission mode I_kv (1 = re-ship compressed cloud KV).
+    pub i_kv: bool,
+    /// Model shape identity: d_model, layer count, prefill block length.
+    pub d_model: u32,
+    pub n_layers: u32,
+    pub prefill_len: u32,
+}
+
+/// Rolling 4-lane sponge over 64-bit words (splitmix64 finalizer per
+/// absorb, cross-lane feed). Not cryptographic — the threat model is
+/// accidental collision across millions of live prefixes, where 256 bits
+/// of well-mixed state is overwhelming margin; a *forged* token is caught
+/// behind this by the typed `PREFIX` reject, not by digest secrecy.
+#[derive(Clone)]
+pub struct PrefixHasher {
+    lanes: [u64; 4],
+    absorbed: u64,
+}
+
+#[inline]
+fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = x;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+impl PrefixHasher {
+    /// Start a sponge seeded with the plan identity: the plan is absorbed
+    /// first, so every downstream chunk digest is plan-scoped.
+    pub fn new(plan: &PlanIdentity) -> PrefixHasher {
+        let mut h = PrefixHasher {
+            lanes: [
+                0x243F_6A88_85A3_08D3, // pi
+                0x1319_8A2E_0370_7344,
+                0xA409_3822_299F_31D0,
+                0x082E_FA98_EC4E_6C89,
+            ],
+            absorbed: 0,
+        };
+        h.absorb(plan.split_layer as u64);
+        h.absorb(plan.q_bar as u64);
+        h.absorb(plan.tau_bits);
+        h.absorb(plan.delta_bits);
+        h.absorb(plan.use_rans as u64);
+        h.absorb(plan.i_kv as u64);
+        h.absorb(plan.d_model as u64);
+        h.absorb(plan.n_layers as u64);
+        h.absorb(plan.prefill_len as u64);
+        h
+    }
+
+    #[inline]
+    fn absorb(&mut self, word: u64) {
+        self.absorbed = self.absorbed.wrapping_add(1);
+        let lane = (self.absorbed % 4) as usize;
+        let mixed = splitmix64(word ^ self.lanes[lane] ^ self.absorbed);
+        self.lanes[lane] = self.lanes[lane].rotate_left(23) ^ mixed;
+        // cross-lane feed so no lane is independent of any input word
+        self.lanes[(lane + 1) % 4] =
+            self.lanes[(lane + 1) % 4].wrapping_add(mixed.rotate_left(17));
+    }
+
+    /// Absorb one chunk of prompt tokens (callers pass exactly
+    /// [`CHUNK_TOKENS`]; the length is absorbed too, so unequal-length
+    /// prefixes can never collide by concatenation).
+    pub fn absorb_chunk(&mut self, tokens: &[u32]) {
+        self.absorb(tokens.len() as u64);
+        for &t in tokens {
+            self.absorb(t as u64);
+        }
+    }
+
+    /// Snapshot the current digest (the sponge keeps rolling afterwards).
+    pub fn digest(&self) -> PrefixDigest {
+        let mut out = [0u8; 32];
+        for (i, &lane) in self.lanes.iter().enumerate() {
+            // finalize each lane against the absorb count so a snapshot
+            // differs from the raw running state
+            let fin = splitmix64(lane ^ self.absorbed.wrapping_mul(0x2545_F491_4F6C_DD1D));
+            out[i * 8..(i + 1) * 8].copy_from_slice(&fin.to_le_bytes());
+        }
+        PrefixDigest(out)
+    }
+}
+
+/// All cacheable (prefix_len, digest) candidates for a prompt under one
+/// plan, ascending by length: one per [`CHUNK_TOKENS`] boundary up to
+/// `prompt.len() - 1`. Empty when the prompt is too short to leave both a
+/// full chunk and a non-empty suffix.
+pub fn prefix_candidates(prompt: &[u32], plan: &PlanIdentity) -> Vec<(usize, PrefixDigest)> {
+    if prompt.len() <= CHUNK_TOKENS {
+        return Vec::new();
+    }
+    let max_prefix = ((prompt.len() - 1) / CHUNK_TOKENS) * CHUNK_TOKENS;
+    let mut h = PrefixHasher::new(plan);
+    let mut out = Vec::with_capacity(max_prefix / CHUNK_TOKENS);
+    let mut covered = 0usize;
+    while covered + CHUNK_TOKENS <= max_prefix {
+        h.absorb_chunk(&prompt[covered..covered + CHUNK_TOKENS]);
+        covered += CHUNK_TOKENS;
+        out.push((covered, h.digest()));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn plan() -> PlanIdentity {
+        PlanIdentity {
+            split_layer: 2,
+            q_bar: 4,
+            tau_bits: 5.0f64.to_bits(),
+            delta_bits: 0.2f64.to_bits(),
+            use_rans: true,
+            i_kv: true,
+            d_model: 256,
+            n_layers: 4,
+            prefill_len: 64,
+        }
+    }
+
+    #[test]
+    fn candidates_cover_chunk_boundaries_and_spare_the_last_token() {
+        let p = plan();
+        let prompt: Vec<u32> = (0..40).collect();
+        let c = prefix_candidates(&prompt, &p);
+        // 40 tokens: prefixes of 16 and 32 are cacheable (48 > 39).
+        assert_eq!(c.iter().map(|(l, _)| *l).collect::<Vec<_>>(), vec![16, 32]);
+        // exactly at a boundary the last token still forces a suffix:
+        let prompt: Vec<u32> = (0..32).collect();
+        let c = prefix_candidates(&prompt, &p);
+        assert_eq!(c.iter().map(|(l, _)| *l).collect::<Vec<_>>(), vec![16]);
+        // too short: nothing cacheable
+        assert!(prefix_candidates(&prompt[..16], &p).is_empty());
+        assert!(prefix_candidates(&[], &p).is_empty());
+    }
+
+    #[test]
+    fn digests_are_deterministic_and_prefix_scoped() {
+        let p = plan();
+        let a: Vec<u32> = (0..64).map(|i| i * 7 % 512).collect();
+        let c1 = prefix_candidates(&a, &p);
+        let c2 = prefix_candidates(&a, &p);
+        assert_eq!(
+            c1.iter().map(|(l, d)| (*l, d.0)).collect::<Vec<_>>(),
+            c2.iter().map(|(l, d)| (*l, d.0)).collect::<Vec<_>>()
+        );
+        // a prompt sharing the first 32 tokens shares those digests...
+        let mut b = a.clone();
+        for t in b.iter_mut().skip(32) {
+            *t += 1;
+        }
+        let cb = prefix_candidates(&b, &p);
+        assert_eq!(c1[0].1, cb[0].1);
+        assert_eq!(c1[1].1, cb[1].1);
+        // ...and diverges from the first differing chunk on
+        assert_ne!(c1[2].1, cb[2].1);
+    }
+
+    #[test]
+    fn plan_identity_scopes_the_address_space() {
+        let prompt: Vec<u32> = (0..48).collect();
+        let base = plan();
+        let c0 = prefix_candidates(&prompt, &base);
+        for tweak in [
+            PlanIdentity { split_layer: 3, ..base },
+            PlanIdentity { q_bar: 8, ..base },
+            PlanIdentity { tau_bits: 7.0f64.to_bits(), ..base },
+            PlanIdentity { i_kv: false, ..base },
+            PlanIdentity { use_rans: false, ..base },
+            PlanIdentity { d_model: 128, ..base },
+            PlanIdentity { prefill_len: 128, ..base },
+        ] {
+            let c = prefix_candidates(&prompt, &tweak);
+            for ((l0, d0), (l1, d1)) in c0.iter().zip(c.iter()) {
+                assert_eq!(l0, l1);
+                assert_ne!(d0.0, d1.0, "plan tweak must change every digest");
+            }
+        }
+    }
+
+    #[test]
+    fn different_lengths_never_collide_by_concatenation() {
+        let p = plan();
+        // prompt whose tokens are all zero: the classic length-extension
+        // collision shape
+        let prompt = vec![0u32; 64];
+        let c = prefix_candidates(&prompt, &p);
+        for i in 0..c.len() {
+            for j in (i + 1)..c.len() {
+                assert_ne!(c[i].1, c[j].1, "lengths {} vs {}", c[i].0, c[j].0);
+            }
+        }
+    }
+}

@@ -1,0 +1,215 @@
+//! Edge-side prefix cache: everything a device needs to serve a warm
+//! prompt without recomputing or re-shipping its shared prefix.
+//!
+//! One entry per [`PrefixDigest`] holds three artifacts of the prefix's
+//! original cold prefill, all for positions `[0, prefix_len)`:
+//!
+//! * `front_kv` — the front segment's per-layer K/V rows, so the edge can
+//!   run a suffix-only front prefill (`NodeRuntime::prefill_suffix`)
+//!   instead of recomputing the whole padded block;
+//! * `hidden` — the split-layer hidden rows, needed to rebuild the full
+//!   hidden history (I_kv = 0 decode re-ships it) and to reconstruct a
+//!   cold insert payload when the cloud's store turns out not to hold the
+//!   prefix after all (restart, eviction — the typed `PREFIX` reject
+//!   path);
+//! * `back_kv` — the back segment's prefix K/V rows, learned from the
+//!   cold reply, so the edge can pre-fill its cloud-KV mirror on warm
+//!   paths where the cloud replies with suffix rows only.
+//!
+//! Entries are immutable and shared (`Rc`), LRU-evicted under a byte
+//! budget. Bit-identity note: all three artifacts are deterministic
+//! functions of (tokens, plan), so an entry learned from any cold run
+//! equals what every other cold run of the same prefix would produce.
+
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use super::digest::PrefixDigest;
+
+/// Cached per-prefix edge state (see module docs).
+#[derive(Debug)]
+pub struct EdgePrefixEntry {
+    pub prefix_len: usize,
+    /// Per front layer: (rotary-embedded K rows, raw V rows), each
+    /// `prefix_len * kv_width` floats.
+    pub front_kv: Vec<(Vec<f32>, Vec<f32>)>,
+    /// Split-layer hidden rows, `prefix_len * d_model` floats.
+    pub hidden: Vec<f32>,
+    /// Per back layer: prefix K/V rows learned from the cold reply.
+    pub back_kv: Vec<(Vec<f32>, Vec<f32>)>,
+}
+
+impl EdgePrefixEntry {
+    pub fn bytes(&self) -> u64 {
+        let kv: usize = self
+            .front_kv
+            .iter()
+            .chain(self.back_kv.iter())
+            .map(|(k, v)| k.len() + v.len())
+            .sum();
+        ((kv + self.hidden.len()) * 4) as u64
+    }
+}
+
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct EdgeCacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub inserts: u64,
+    pub evictions: u64,
+    pub rejected_over_budget: u64,
+}
+
+struct Slot {
+    entry: Rc<EdgePrefixEntry>,
+    last_used: u64,
+    bytes: u64,
+}
+
+/// Byte-budgeted LRU over [`EdgePrefixEntry`]. Budget 0 disables it.
+pub struct EdgePrefixCache {
+    budget_bytes: u64,
+    used_bytes: u64,
+    clock: u64,
+    entries: HashMap<PrefixDigest, Slot>,
+    pub stats: EdgeCacheStats,
+}
+
+impl EdgePrefixCache {
+    pub fn new(budget_bytes: u64) -> EdgePrefixCache {
+        EdgePrefixCache {
+            budget_bytes,
+            used_bytes: 0,
+            clock: 0,
+            entries: HashMap::new(),
+            stats: EdgeCacheStats::default(),
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.budget_bytes > 0
+    }
+
+    pub fn used_bytes(&self) -> u64 {
+        self.used_bytes
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn contains(&self, digest: &PrefixDigest) -> bool {
+        self.entries.contains_key(digest)
+    }
+
+    /// Fetch an entry, bumping recency. A clone of the `Rc` is returned
+    /// so the caller can keep using it across later inserts/evictions.
+    pub fn get(&mut self, digest: &PrefixDigest) -> Option<Rc<EdgePrefixEntry>> {
+        self.clock += 1;
+        let clock = self.clock;
+        match self.entries.get_mut(digest) {
+            Some(slot) => {
+                slot.last_used = clock;
+                self.stats.hits += 1;
+                Some(Rc::clone(&slot.entry))
+            }
+            None => {
+                self.stats.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Insert (idempotent per digest — entries for one digest are
+    /// bit-identical by construction, so a re-insert only bumps recency).
+    /// Returns whether the digest is resident afterwards.
+    pub fn insert(&mut self, digest: &PrefixDigest, entry: EdgePrefixEntry) -> bool {
+        if !self.enabled() {
+            return false;
+        }
+        self.clock += 1;
+        if let Some(slot) = self.entries.get_mut(digest) {
+            slot.last_used = self.clock;
+            return true;
+        }
+        let bytes = entry.bytes();
+        if bytes > self.budget_bytes {
+            self.stats.rejected_over_budget += 1;
+            return false;
+        }
+        while self.used_bytes + bytes > self.budget_bytes {
+            let victim = self
+                .entries
+                .iter()
+                .min_by_key(|(_, s)| s.last_used)
+                .map(|(d, _)| *d)
+                .expect("used_bytes > 0 implies an entry exists");
+            let s = self.entries.remove(&victim).expect("victim resident");
+            self.used_bytes -= s.bytes;
+            self.stats.evictions += 1;
+        }
+        self.entries.insert(
+            *digest,
+            Slot { entry: Rc::new(entry), last_used: self.clock, bytes },
+        );
+        self.used_bytes += bytes;
+        self.stats.inserts += 1;
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn digest(b: u8) -> PrefixDigest {
+        PrefixDigest([b; 32])
+    }
+
+    fn entry(prefix_len: usize) -> EdgePrefixEntry {
+        EdgePrefixEntry {
+            prefix_len,
+            front_kv: vec![(vec![0.5; prefix_len * 4], vec![0.25; prefix_len * 4])],
+            hidden: vec![1.0; prefix_len * 8],
+            back_kv: vec![(vec![0.1; prefix_len * 4], vec![0.2; prefix_len * 4]); 2],
+        }
+    }
+
+    #[test]
+    fn lru_eviction_respects_the_byte_budget() {
+        let per = entry(16).bytes();
+        let mut c = EdgePrefixCache::new(2 * per);
+        assert!(c.insert(&digest(1), entry(16)));
+        assert!(c.insert(&digest(2), entry(16)));
+        assert!(c.get(&digest(1)).is_some()); // 1 is now more recent than 2
+        assert!(c.insert(&digest(3), entry(16)));
+        assert!(!c.contains(&digest(2)), "LRU entry evicted");
+        assert!(c.contains(&digest(1)));
+        assert!(c.contains(&digest(3)));
+        assert_eq!(c.used_bytes(), 2 * per);
+        assert_eq!(c.stats.evictions, 1);
+    }
+
+    #[test]
+    fn disabled_cache_stores_nothing() {
+        let mut c = EdgePrefixCache::new(0);
+        assert!(!c.insert(&digest(1), entry(16)));
+        assert!(c.get(&digest(1)).is_none());
+        assert_eq!(c.used_bytes(), 0);
+    }
+
+    #[test]
+    fn rc_entries_survive_eviction_for_live_borrowers() {
+        let per = entry(16).bytes();
+        let mut c = EdgePrefixCache::new(per);
+        c.insert(&digest(1), entry(16));
+        let held = c.get(&digest(1)).unwrap();
+        c.insert(&digest(2), entry(16)); // evicts 1
+        assert!(!c.contains(&digest(1)));
+        assert_eq!(held.prefix_len, 16, "borrowed entry stays valid");
+    }
+}

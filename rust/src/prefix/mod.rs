@@ -1,0 +1,37 @@
+//! Content-addressed prefix KV cache spanning both halves of the split.
+//!
+//! At production scale most traffic shares long common prefixes (system
+//! prompts, few-shot templates), yet without this module every session
+//! recomputes front-segment prefill and re-ships compressed prefill
+//! state over the measured-byte wire. The prefix cache removes both
+//! costs:
+//!
+//! * **Addressing** ([`digest`]) — a chunked rolling hash over prompt
+//!   token IDs, scoped by the *plan identity* (split point, Q̄a, τ,
+//!   I_kv, model shape) so a plan mismatch is a natural miss.
+//! * **Edge half** ([`edge_cache`]) — per-device LRU of front-segment
+//!   prefill KV + split-layer hidden rows + learned back-segment rows;
+//!   a warm prompt computes and compresses only its divergent suffix.
+//! * **Cloud half** ([`store`]) — a refcounted, LRU, byte-budgeted store
+//!   of back-segment prefill KV keyed by the same digest. The first
+//!   insert charges the bytes once (Eq. 8c extended to shared state);
+//!   later sessions attach a refcount; eviction touches only
+//!   refcount-0 entries and releases the charge.
+//!
+//! On the wire (v7) a session whose prefix is resident on both halves
+//! ships a 32-byte cache token (`PrefixProbe`/`PrefixAck` handshake +
+//! a digest-bearing payload) instead of re-transmitting compressed
+//! prefill state; a miss or plan mismatch falls back to the full insert
+//! payload, and a forged or stale token is a typed in-band `PREFIX`
+//! reject — never silent wrong tokens. The core invariant, pinned by
+//! `tests/prefix.rs` across solo, stacked, fleet and pool serving:
+//! **cached-prefix token streams are bit-identical to cold ones**, at
+//! every divergence point.
+
+pub mod digest;
+pub mod edge_cache;
+pub mod store;
+
+pub use digest::{prefix_candidates, PlanIdentity, PrefixDigest, PrefixHasher, CHUNK_TOKENS};
+pub use edge_cache::{EdgeCacheStats, EdgePrefixCache, EdgePrefixEntry};
+pub use store::{PrefixKv, PrefixStore, PrefixStoreStats};

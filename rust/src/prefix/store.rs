@@ -1,0 +1,353 @@
+//! Cloud-side content-addressed store of back-segment prefill KV.
+//!
+//! One entry per [`PrefixDigest`]: the back segment's per-layer K/V rows
+//! for the prefix positions `[0, prefix_len)`. Entries are **immutable
+//! once inserted** — a warm prefill reads the shared rows into a fresh
+//! per-session cache and every later decode writes only suffix positions,
+//! so copy-on-write at the divergence point holds by construction (shared
+//! rows are never behind a `&mut`).
+//!
+//! Accounting follows Eq. 8c's spirit for shared state: the **first
+//! insert charges the entry's bytes once**; every later session that
+//! attaches to the same digest adds a refcount but zero bytes. Eviction
+//! is LRU over `refcount == 0` entries only (a pinned prefix can never be
+//! yanked out from under a session that was promised a hit), and releases
+//! the charge. Attachments are keyed by request id and released through
+//! the cloud's central retire sweep, so EOS, cancellation, connection
+//! close and worker death all drain refcounts through one code path.
+
+use std::collections::HashMap;
+
+use super::digest::PrefixDigest;
+
+/// Back-segment prefill KV rows for one prefix: per back layer, the
+/// rotary-embedded K rows and raw V rows for positions `[0, prefix_len)`,
+/// each `prefix_len * kv_width` floats.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PrefixKv {
+    pub prefix_len: usize,
+    pub kv_width: usize,
+    pub layers: Vec<(Vec<f32>, Vec<f32>)>,
+}
+
+impl PrefixKv {
+    /// Bytes this entry charges against the store budget.
+    pub fn bytes(&self) -> u64 {
+        (self.layers.len() * 2 * self.prefix_len * self.kv_width * 4) as u64
+    }
+}
+
+/// Counters surfaced in benches and leak audits.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PrefixStoreStats {
+    /// Probes/attaches that found the digest resident.
+    pub hits: u64,
+    /// Probes/attaches that missed.
+    pub misses: u64,
+    /// First-time inserts (each charged its bytes once).
+    pub inserts: u64,
+    /// Re-inserts of an already-resident digest (deduplicated: no bytes).
+    pub dedup_inserts: u64,
+    /// LRU evictions of refcount-0 entries (each released its charge).
+    pub evictions: u64,
+    /// Inserts rejected because the entry cannot fit even after evicting
+    /// every unpinned entry.
+    pub rejected_over_budget: u64,
+}
+
+struct Entry {
+    kv: PrefixKv,
+    refcount: usize,
+    last_used: u64,
+    bytes: u64,
+}
+
+/// Refcounted, LRU-evicted, byte-budgeted store. Budget 0 disables it:
+/// every probe misses and every insert is dropped, which reduces the
+/// serving paths to their pre-prefix behavior.
+pub struct PrefixStore {
+    budget_bytes: u64,
+    charged_bytes: u64,
+    clock: u64,
+    entries: HashMap<PrefixDigest, Entry>,
+    /// Live attachment per request id (a request attaches to at most one
+    /// prefix). Release is idempotent and keyed here so the retire sweep
+    /// never double-decrements.
+    by_request: HashMap<u64, PrefixDigest>,
+    pub stats: PrefixStoreStats,
+}
+
+impl PrefixStore {
+    pub fn new(budget_bytes: u64) -> PrefixStore {
+        PrefixStore {
+            budget_bytes,
+            charged_bytes: 0,
+            clock: 0,
+            entries: HashMap::new(),
+            by_request: HashMap::new(),
+            stats: PrefixStoreStats::default(),
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.budget_bytes > 0
+    }
+
+    pub fn budget_bytes(&self) -> u64 {
+        self.budget_bytes
+    }
+
+    /// Bytes currently charged for resident entries (shared prefixes are
+    /// charged once, regardless of how many sessions attach).
+    pub fn charged_bytes(&self) -> u64 {
+        self.charged_bytes
+    }
+
+    pub fn resident(&self, digest: &PrefixDigest) -> bool {
+        self.entries.contains_key(digest)
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Total refcount across entries plus outstanding request
+    /// attachments must agree; exposed for the leak audits.
+    pub fn live_attachments(&self) -> usize {
+        self.by_request.len()
+    }
+
+    pub fn refcount(&self, digest: &PrefixDigest) -> usize {
+        self.entries.get(digest).map_or(0, |e| e.refcount)
+    }
+
+    fn touch(clock: &mut u64, e: &mut Entry) {
+        *clock += 1;
+        e.last_used = *clock;
+    }
+
+    /// Probe + attach in one step: if the digest is resident, pin it for
+    /// `request_id` (refcount++) and return true; otherwise record a miss.
+    /// Attaching at probe time (not at payload time) closes the window
+    /// where an acked hit could be evicted before the warm payload lands.
+    /// Idempotent per (request, digest); re-attaching a request to a
+    /// *different* digest releases the old attachment first.
+    pub fn attach(&mut self, request_id: u64, digest: &PrefixDigest) -> bool {
+        if let Some(prev) = self.by_request.get(&request_id).copied() {
+            if prev == *digest {
+                let resident = self.entries.contains_key(digest);
+                if resident {
+                    self.stats.hits += 1;
+                } else {
+                    self.stats.misses += 1;
+                }
+                return resident;
+            }
+            self.release(request_id);
+        }
+        match self.entries.get_mut(digest) {
+            Some(e) => {
+                e.refcount += 1;
+                Self::touch(&mut self.clock, e);
+                self.by_request.insert(request_id, *digest);
+                self.stats.hits += 1;
+                true
+            }
+            None => {
+                self.stats.misses += 1;
+                false
+            }
+        }
+    }
+
+    /// Drop the attachment held by `request_id`, if any. Idempotent.
+    pub fn release(&mut self, request_id: u64) {
+        if let Some(digest) = self.by_request.remove(&request_id) {
+            if let Some(e) = self.entries.get_mut(&digest) {
+                debug_assert!(e.refcount > 0, "refcount underflow on release");
+                e.refcount = e.refcount.saturating_sub(1);
+            }
+        }
+    }
+
+    /// The digest `request_id` is attached to, if any (exported with a
+    /// session's `Migrate` state).
+    pub fn attachment(&self, request_id: u64) -> Option<PrefixDigest> {
+        self.by_request.get(&request_id).copied()
+    }
+
+    /// Read the shared rows for a resident digest (bumps LRU recency).
+    pub fn get(&mut self, digest: &PrefixDigest) -> Option<&PrefixKv> {
+        let clock = &mut self.clock;
+        self.entries.get_mut(digest).map(|e| {
+            Self::touch(clock, e);
+            &e.kv
+        })
+    }
+
+    /// Insert a prefix entry and attach `request_id` to it. The first
+    /// insert charges `kv.bytes()` once (evicting LRU refcount-0 entries
+    /// to make room); inserting an already-resident digest deduplicates —
+    /// the stored rows are kept (inserts for one digest are bit-identical
+    /// by construction) and only a refcount is added. Returns whether the
+    /// digest is resident afterwards: false means the store is disabled
+    /// or the entry cannot fit even after evicting everything unpinned —
+    /// the session is still served, just not cached.
+    pub fn insert(&mut self, request_id: u64, digest: &PrefixDigest, kv: PrefixKv) -> bool {
+        if !self.enabled() {
+            return false;
+        }
+        if self.entries.contains_key(digest) {
+            self.stats.dedup_inserts += 1;
+            self.attach(request_id, digest);
+            return true;
+        }
+        let bytes = kv.bytes();
+        if !self.make_room(bytes) {
+            self.stats.rejected_over_budget += 1;
+            return false;
+        }
+        self.clock += 1;
+        self.entries.insert(
+            *digest,
+            Entry { kv, refcount: 0, last_used: self.clock, bytes },
+        );
+        self.charged_bytes += bytes;
+        self.stats.inserts += 1;
+        self.attach(request_id, digest);
+        true
+    }
+
+    /// Evict LRU refcount-0 entries until `need` more bytes fit. Pinned
+    /// entries are untouchable; returns false if the budget cannot be met.
+    fn make_room(&mut self, need: u64) -> bool {
+        if need > self.budget_bytes {
+            return false;
+        }
+        while self.charged_bytes + need > self.budget_bytes {
+            let victim = self
+                .entries
+                .iter()
+                .filter(|(_, e)| e.refcount == 0)
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(d, _)| *d);
+            match victim {
+                Some(d) => {
+                    let e = self.entries.remove(&d).expect("victim resident");
+                    self.charged_bytes -= e.bytes;
+                    self.stats.evictions += 1;
+                }
+                None => return false, // everything left is pinned
+            }
+        }
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn digest(b: u8) -> PrefixDigest {
+        PrefixDigest([b; 32])
+    }
+
+    fn kv(prefix_len: usize) -> PrefixKv {
+        PrefixKv {
+            prefix_len,
+            kv_width: 4,
+            layers: vec![(vec![1.0; prefix_len * 4], vec![2.0; prefix_len * 4]); 2],
+        }
+    }
+
+    #[test]
+    fn shared_prefix_is_charged_once() {
+        let mut s = PrefixStore::new(1 << 20);
+        let d = digest(1);
+        assert!(s.insert(100, &d, kv(16)));
+        let one = s.charged_bytes();
+        assert!(one > 0);
+        // 9 more sessions attach: bytes flat, refcount grows
+        for rid in 101..110u64 {
+            assert!(s.attach(rid, &d), "resident digest must hit");
+        }
+        assert_eq!(s.charged_bytes(), one, "shared prefix charged once");
+        assert_eq!(s.refcount(&d), 10);
+        // dedup re-insert adds no bytes either
+        assert!(s.insert(110, &d, kv(16)));
+        assert_eq!(s.charged_bytes(), one);
+        assert_eq!(s.stats.dedup_inserts, 1);
+    }
+
+    #[test]
+    fn release_is_idempotent_and_keyed_by_request() {
+        let mut s = PrefixStore::new(1 << 20);
+        let d = digest(2);
+        s.insert(7, &d, kv(16));
+        s.attach(8, &d);
+        assert_eq!(s.refcount(&d), 2);
+        s.release(7);
+        s.release(7); // double release must not underflow
+        assert_eq!(s.refcount(&d), 1);
+        s.release(8);
+        assert_eq!(s.refcount(&d), 0);
+        assert_eq!(s.live_attachments(), 0);
+        // entry stays resident (warm for future sessions) until evicted
+        assert!(s.resident(&d));
+    }
+
+    #[test]
+    fn lru_evicts_only_unpinned_and_releases_the_charge() {
+        // budget fits exactly two entries of kv(16)
+        let per = kv(16).bytes();
+        let mut s = PrefixStore::new(2 * per);
+        s.insert(1, &digest(1), kv(16));
+        s.insert(2, &digest(2), kv(16));
+        // both pinned: a third insert cannot fit and is rejected
+        assert!(!s.insert(3, &digest(3), kv(16)));
+        assert_eq!(s.stats.rejected_over_budget, 1);
+        // unpin the older entry; now the third insert evicts it (LRU)
+        s.release(1);
+        assert!(s.insert(3, &digest(3), kv(16)));
+        assert!(!s.resident(&digest(1)), "LRU refcount-0 entry evicted");
+        assert!(s.resident(&digest(2)));
+        assert_eq!(s.charged_bytes(), 2 * per, "charge released and re-charged");
+        assert_eq!(s.stats.evictions, 1);
+    }
+
+    #[test]
+    fn disabled_store_misses_and_refuses_inserts() {
+        let mut s = PrefixStore::new(0);
+        let d = digest(9);
+        assert!(!s.insert(1, &d, kv(16)));
+        assert!(!s.attach(2, &d));
+        assert_eq!(s.charged_bytes(), 0);
+        assert_eq!(s.len(), 0);
+    }
+
+    #[test]
+    fn churn_leaks_nothing() {
+        let per = kv(16).bytes();
+        let mut s = PrefixStore::new(4 * per);
+        for cycle in 0..1000u64 {
+            let d = digest((cycle % 6) as u8);
+            let rid = 10_000 + cycle;
+            if !s.attach(rid, &d) {
+                s.insert(rid, &d, kv(16));
+            }
+            s.release(rid);
+        }
+        assert_eq!(s.live_attachments(), 0, "no leaked attachments");
+        for b in 0..6u8 {
+            assert_eq!(s.refcount(&digest(b)), 0, "no leaked refcounts");
+        }
+        assert!(s.charged_bytes() <= 4 * per, "charge within budget");
+        let resident: u64 =
+            (0..6u8).filter(|b| s.resident(&digest(*b))).count() as u64 * per;
+        assert_eq!(s.charged_bytes(), resident, "charge equals resident bytes");
+    }
+}

@@ -239,6 +239,67 @@ impl NodeRuntime {
         Ok((h, kvs))
     }
 
+    /// Suffix-only prefill (the prefix cache's warm path): run the rows
+    /// `[start, start + n)` of a logical prefill block through this
+    /// node's layers, with each layer's first `start` K/V rows supplied
+    /// from `prefix_kv` (layer-ordered, each row block `start * kv_width`
+    /// floats — exactly what a whole-block [`prefill`](Self::prefill)
+    /// returned for those rows). `x` holds only the suffix rows (n, d).
+    ///
+    /// Because every non-attention op is per-row and the suffix attention
+    /// kernel replays the whole-block kernel's arithmetic exactly, the
+    /// returned hidden rows and suffix K/V rows are **bit-identical** to
+    /// rows `[start, start + n)` of a whole-block prefill whose first
+    /// `start` rows matched the cached prefix.
+    pub fn prefill_suffix(
+        &self,
+        x: &[f32],
+        start: usize,
+        prefix_kv: &[(Vec<f32>, Vec<f32>)],
+    ) -> Result<(Vec<f32>, Vec<(Vec<f32>, Vec<f32>)>)> {
+        let cfg = self.cfg();
+        let d = cfg.d_model;
+        let kvw = cfg.kv_width();
+        anyhow::ensure!(x.len() % d == 0, "suffix block must be (n, {d})");
+        let n = x.len() / d;
+        anyhow::ensure!(n > 0, "suffix prefill needs at least one row");
+        anyhow::ensure!(
+            start > 0 && start + n <= cfg.prefill_len,
+            "suffix rows [{start}, {}) must sit inside the prefill block of {}",
+            start + n,
+            cfg.prefill_len
+        );
+        anyhow::ensure!(
+            prefix_kv.len() == self.layer_range.len(),
+            "one cached prefix K/V pair per layer ({} != {})",
+            prefix_kv.len(),
+            self.layer_range.len()
+        );
+        let mut h = x.to_vec();
+        let (cos, sin) = self.rope.rows(start, n);
+        let mut kvs = Vec::with_capacity(self.layer_range.len());
+        let mut scratch = self.scratch.borrow_mut();
+        for (bufs, (pk, pv)) in self.weight_bufs.iter().zip(prefix_kv.iter()) {
+            anyhow::ensure!(
+                pk.len() == start * kvw && pv.len() == start * kvw,
+                "cached prefix K/V must cover exactly ({start}, {kvw}) rows"
+            );
+            let (k_rows, v_rows) = self.engine.layer_prefill_suffix_inplace(
+                &mut scratch,
+                &mut h,
+                n,
+                start,
+                cos,
+                sin,
+                pk,
+                pv,
+                bufs,
+            )?;
+            kvs.push((k_rows, v_rows));
+        }
+        Ok((h, kvs))
+    }
+
     /// One decode step at `pos` through this node's layers. `kv` must hold
     /// one LayerKv per layer in `layer_range`; each cache is mutated in
     /// place — exactly one new (k, v) row is written at `pos`, nothing is
@@ -350,7 +411,11 @@ impl NodeRuntime {
         self.logits_rows(hs, rows)
     }
 
-    fn logits_rows(&self, h: &[f32], rows: usize) -> Result<Vec<f32>> {
+    /// Final norm + vocab projection for an arbitrary (rows, d) block —
+    /// the suffix-prefill path samples at a suffix-local row, so it needs
+    /// logits over a block narrower than `prefill_len`. Row-generic and
+    /// bit-identical per row to the fixed-width entry points above.
+    pub fn logits_rows(&self, h: &[f32], rows: usize) -> Result<Vec<f32>> {
         let (gf, w_out) = self.head_bufs.as_ref().expect("node has no lm head");
         let mut scratch = self.scratch.borrow_mut();
         let mut out = Vec::new();

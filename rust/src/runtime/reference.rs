@@ -183,6 +183,50 @@ impl Engine {
         Ok(layer_forward_prefill(s, h, rows, cos, sin, &lw))
     }
 
+    /// In-place single-layer prefill over the *suffix* rows
+    /// `[start, start + rows)` of a block whose first `start` rows were
+    /// prefilled earlier and whose per-layer K/V rows are supplied from a
+    /// prefix cache (`prefix_k` rotary-embedded, `prefix_v` raw — exactly
+    /// what [`layer_prefill_inplace`](Engine::layer_prefill_inplace)
+    /// returned for those rows). Every non-attention op in the layer is
+    /// strictly per-row and attention is strictly causal per query row,
+    /// so the suffix rows this computes are **bit-identical** to the same
+    /// rows of a whole-block prefill — the invariant the prefix cache's
+    /// warm ≡ cold guarantee rests on, pinned by
+    /// `suffix_prefill_is_bit_identical_to_whole_block` below.
+    ///
+    /// `cos`/`sin` must be the rope rows for the *global* positions
+    /// `[start, start + rows)`. Returns this layer's suffix K/V rows.
+    #[allow(clippy::too_many_arguments)]
+    pub fn layer_prefill_suffix_inplace(
+        &self,
+        s: &mut EngineScratch,
+        h: &mut [f32],
+        rows: usize,
+        start: usize,
+        cos: &[f32],
+        sin: &[f32],
+        prefix_k: &[f32],
+        prefix_v: &[f32],
+        w: &[Buffer],
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        let lw = LayerW::from_bufs(w)?;
+        ensure!(rows > 0 && h.len() == rows * lw.d, "suffix hidden must be ({rows}, {})", lw.d);
+        let half = cos.len() / rows;
+        let head_dim = 2 * half;
+        ensure!(
+            head_dim > 0 && lw.d % head_dim == 0,
+            "d_model {} not divisible by head_dim {head_dim}",
+            lw.d
+        );
+        ensure!(
+            prefix_k.len() == start * lw.d && prefix_v.len() == start * lw.d,
+            "prefix K/V must cover exactly ({start}, {}) rows",
+            lw.d
+        );
+        Ok(layer_forward_prefill_suffix(s, h, rows, start, cos, sin, prefix_k, prefix_v, &lw))
+    }
+
     /// In-place, stacked single-layer decode over B independent sessions:
     /// `hs` is the (B, d) residual block, `kvs[b][layer]` the cache this
     /// call mutates (one new row at `step.positions[b]`; never cloned or
@@ -334,6 +378,50 @@ fn layer_forward_prefill(
     apply_rope(&mut s.q, rows, heads, head_dim, cos, sin);
     apply_rope(&mut s.k, rows, heads, head_dim, cos, sin);
     attention_prefill(s, rows, heads, head_dim);
+    resize_buf(&mut s.proj, rows * d);
+    matmul_into(&mut s.proj, &s.attn, lw.wo, rows, d, d);
+    add_assign(h, &s.proj);
+    let k_rows = s.k.clone();
+    let v_rows = s.v.clone();
+    ffn_inplace(s, h, rows, lw);
+    (k_rows, v_rows)
+}
+
+/// One decoder layer over the suffix rows `[start, start + rows)` with
+/// the first `start` rows' K/V supplied from a prefix cache. The residual
+/// stream `h` holds only the suffix rows and is transformed in place;
+/// returns the suffix K/V rows. Arithmetic is ordered identically to
+/// [`layer_forward_prefill`] row for row — rms-norm, the Q/K/V/O/FFN
+/// matmuls and rope are per-row, and
+/// [`attention_prefill_with_prefix`] replays the exact ascending-j
+/// summation of [`attention_prefill`] — so the results match a
+/// whole-block prefill bit for bit.
+#[allow(clippy::too_many_arguments)]
+fn layer_forward_prefill_suffix(
+    s: &mut EngineScratch,
+    h: &mut [f32],
+    rows: usize,
+    start: usize,
+    cos: &[f32],
+    sin: &[f32],
+    prefix_k: &[f32],
+    prefix_v: &[f32],
+    lw: &LayerW<'_>,
+) -> (Vec<f32>, Vec<f32>) {
+    let d = lw.d;
+    let half = cos.len() / rows;
+    let head_dim = 2 * half;
+    let heads = d / head_dim;
+    rms_norm_into(h, rows, d, lw.g1, &mut s.h_norm);
+    resize_buf(&mut s.q, rows * d);
+    matmul_into(&mut s.q, &s.h_norm, lw.wq, rows, d, d);
+    resize_buf(&mut s.k, rows * d);
+    matmul_into(&mut s.k, &s.h_norm, lw.wk, rows, d, d);
+    resize_buf(&mut s.v, rows * d);
+    matmul_into(&mut s.v, &s.h_norm, lw.wv, rows, d, d);
+    apply_rope(&mut s.q, rows, heads, head_dim, cos, sin);
+    apply_rope(&mut s.k, rows, heads, head_dim, cos, sin);
+    attention_prefill_with_prefix(s, start, rows, heads, head_dim, prefix_k, prefix_v);
     resize_buf(&mut s.proj, rows * d);
     matmul_into(&mut s.proj, &s.attn, lw.wo, rows, d, d);
     add_assign(h, &s.proj);
@@ -593,6 +681,69 @@ fn attention_prefill(s: &mut EngineScratch, w: usize, heads: usize, head_dim: us
             let orow = &mut attn[i * kvw + off..i * kvw + off + head_dim];
             for (j, &p) in scores.iter().enumerate().take(i + 1) {
                 let vj = &v[j * kvw + off..j * kvw + off + head_dim];
+                let pw = p / z;
+                for (o, &vv) in orow.iter_mut().zip(vj) {
+                    *o += pw * vv;
+                }
+            }
+        }
+    }
+}
+
+/// Causal multi-head attention for suffix query rows `[start, start+rows)`
+/// where K/V rows `j < start` come from a prefix cache and rows
+/// `j >= start` from the scratch arena (`s.k`/`s.v`, suffix-local).
+/// Replays [`attention_prefill`]'s exact per-query arithmetic — ascending-j
+/// dot/scale/running-smax, then ascending exp/z, then ascending weighted-V
+/// accumulation — only the *source* of each K/V row differs, so every
+/// output row is bit-identical to the whole-block kernel's. Fills
+/// `s.attn` with the (rows, H*D) suffix attention output.
+fn attention_prefill_with_prefix(
+    s: &mut EngineScratch,
+    start: usize,
+    rows: usize,
+    heads: usize,
+    head_dim: usize,
+    prefix_k: &[f32],
+    prefix_v: &[f32],
+) {
+    let EngineScratch { q, k, v, attn, scores, .. } = s;
+    let kvw = heads * head_dim;
+    let scale = 1.0 / (head_dim as f32).sqrt();
+    attn.clear();
+    attn.resize(rows * kvw, 0.0);
+    scores.clear();
+    scores.resize(start + rows, 0.0);
+    for h in 0..heads {
+        let off = h * head_dim;
+        for i in 0..rows {
+            let gi = start + i; // global query position
+            let qi = &q[i * kvw + off..i * kvw + off + head_dim];
+            let mut smax = f32::NEG_INFINITY;
+            for (j, sc) in scores.iter_mut().enumerate().take(gi + 1) {
+                // K/V row `j` of the logical whole block: prefix cache
+                // below `start`, scratch (suffix-local) at or above it.
+                let kj = if j < start {
+                    &prefix_k[j * kvw + off..j * kvw + off + head_dim]
+                } else {
+                    &k[(j - start) * kvw + off..(j - start) * kvw + off + head_dim]
+                };
+                let dot: f32 = qi.iter().zip(kj).map(|(a, b)| a * b).sum();
+                *sc = dot * scale;
+                smax = smax.max(*sc);
+            }
+            let mut z = 0f32;
+            for sc in scores.iter_mut().take(gi + 1) {
+                *sc = (*sc - smax).exp();
+                z += *sc;
+            }
+            let orow = &mut attn[i * kvw + off..i * kvw + off + head_dim];
+            for (j, &p) in scores.iter().enumerate().take(gi + 1) {
+                let vj = if j < start {
+                    &prefix_v[j * kvw + off..j * kvw + off + head_dim]
+                } else {
+                    &v[(j - start) * kvw + off..(j - start) * kvw + off + head_dim]
+                };
                 let pw = p / z;
                 for (o, &vv) in orow.iter_mut().zip(vj) {
                     *o += pw * vv;
@@ -887,6 +1038,46 @@ mod tests {
                 assert_eq!(t.sin[p * half + i], ang.sin() as f32, "sin({p},{i})");
             }
         }
+    }
+
+    #[test]
+    fn suffix_prefill_is_bit_identical_to_whole_block() {
+        // ACCEPTANCE (prefix cache): prefilling only the suffix rows with
+        // cached prefix K/V must reproduce the whole-block prefill's
+        // suffix hidden rows AND suffix K/V rows bit for bit — on the
+        // front segment, the back segment, and the logits behind them.
+        run_cases(4, 0x9F1F, |case, rng| {
+            let mut cfg = ModelConfig::sim7b();
+            cfg.n_layers = 1 + rng.below(3);
+            let engine = Rc::new(Engine::load("artifacts", &cfg).unwrap());
+            let weights = Rc::new(ModelWeights::synthetic(&cfg, 300 + case as u64));
+            let node =
+                NodeRuntime::new(engine, weights.clone(), 0..cfg.n_layers, true).unwrap();
+            let d = cfg.d_model;
+            let kvw = cfg.kv_width();
+            let p = cfg.prefill_len;
+            let start = 1 + rng.below(p - 1); // split the block anywhere
+            let tokens: Vec<u32> = (0..p).map(|_| rng.below(cfg.vocab) as u32).collect();
+            let x = weights.embed_padded(&tokens, p);
+
+            let (h_full, kv_full) = node.prefill(&x).unwrap();
+            let prefix_kv: Vec<(Vec<f32>, Vec<f32>)> = kv_full
+                .iter()
+                .map(|(k, v)| (k[..start * kvw].to_vec(), v[..start * kvw].to_vec()))
+                .collect();
+            let (h_suf, kv_suf) = node.prefill_suffix(&x[start * d..], start, &prefix_kv).unwrap();
+
+            assert_eq!(h_suf.as_slice(), &h_full[start * d..], "suffix hidden rows");
+            for (li, ((ks, vs), (kf, vf))) in kv_suf.iter().zip(&kv_full).enumerate() {
+                assert_eq!(ks.as_slice(), &kf[start * kvw..], "layer {li} suffix K rows");
+                assert_eq!(vs.as_slice(), &vf[start * kvw..], "layer {li} suffix V rows");
+            }
+            // Logits over the suffix block == the same rows of the full
+            // block's logits (the warm cloud samples from these).
+            let lg_full = node.logits_prefill(&h_full).unwrap();
+            let lg_suf = node.logits_rows(&h_suf, p - start).unwrap();
+            assert_eq!(lg_suf.as_slice(), &lg_full[start * cfg.vocab..], "suffix logits");
+        });
     }
 
     #[test]

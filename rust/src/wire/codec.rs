@@ -61,14 +61,37 @@
 //! bit0 `[fence_pos u64][frame_len u32][cached reply frame bytes]` — the
 //! embedded frame is a complete kind-2 reply frame and is re-validated on
 //! decode (envelope, CRC, matching request/pos) — then when bit1 the 22-byte
-//! `Reconfig` body verbatim.
+//! `Reconfig` body verbatim. v7 adds flags bit2 = prefix attachment
+//! present: `[digest 32 bytes][prefix_len u32]` appended after the
+//! control body, so a migrating session's prefix-store refcount moves
+//! with it.
+//!
+//! The v7 prefix-cache messages:
+//!
+//! A prefill `SplitPayload` may carry a prefix-cache reference (flags
+//! bit3): `[digest 32 bytes][prefix_len u32]` placed immediately after
+//! the flags byte — a fixed offset, so the pool can peek the digest for
+//! residency-preferring placement without decoding tensors. Flags bit4
+//! (insert; requires bit3) appends the prefix's own compressed hidden
+//! block right after the 36-byte reference, ahead of the sampling spec.
+//! With bit3 and no bit4 (warm), the payload's `hidden` tensor covers
+//! only the divergent suffix rows.
+//!
+//! `PrefixProbe` (kind 8): `[request_id u64][digest 32][prefix_len u32]`
+//! (44 bytes) — "is this prefix resident?"; a hit pins the entry for
+//! this request.
+//!
+//! `PrefixAck` (kind 9): `[request_id u64][digest 32][flags u8]`
+//! (41 bytes; flags bit0 = hit) — the digest is echoed so a cross-field
+//! mismatch is a typed error, not a misapplied answer.
 
 use crate::adapt::Reconfig;
 use crate::coordinator::protocol::{
-    CloudReply, CompressedKv, CompressedTensor, MigrateState, RejectFrame, Resume, ResumeAck,
-    SplitPayload,
+    CloudReply, CompressedKv, CompressedTensor, MigrateState, PrefixAck, PrefixProbe, PrefixRef,
+    RejectFrame, Resume, ResumeAck, SplitPayload,
 };
 use crate::coordinator::sampling::SamplingSpec;
+use crate::prefix::PrefixDigest;
 use crate::quant::rans::CodedStream;
 use crate::quant::ts::SparseOutliers;
 use crate::util::bits_to_bytes;
@@ -84,10 +107,19 @@ pub const REPLY_OVERHEAD: u64 = FRAME_OVERHEAD + 8;
 pub const RECONFIG_OVERHEAD: u64 = FRAME_OVERHEAD;
 /// Fixed bytes a migrate frame adds on top of `MigrateState::wire_bytes()`.
 pub const MIGRATE_OVERHEAD: u64 = FRAME_OVERHEAD;
+/// Fixed bytes a prefix probe/ack frame adds on top of its `wire_bytes()`.
+pub const PREFIX_OVERHEAD: u64 = FRAME_OVERHEAD;
 
 const FLAG_PREFILL: u8 = 1;
 const FLAG_KV: u8 = 1 << 1;
 const FLAG_TOPK: u8 = 1 << 2;
+/// Payload flag (v7): a 36-byte prefix-cache reference follows the flags
+/// byte (digest 32 + prefix_len u32) — fixed offset, peekable.
+const FLAG_PREFIX: u8 = 1 << 3;
+/// Payload flag (v7): the prefix reference carries its own compressed
+/// hidden block (a cold insert populating the store). Requires
+/// [`FLAG_PREFIX`].
+const FLAG_PREFIX_INSERT: u8 = 1 << 4;
 
 /// Reconfig body flag: I_kv (ship the KV cache with each decode step).
 const RC_FLAG_KV: u8 = 1;
@@ -100,6 +132,11 @@ const RA_FLAG_LAST_POS: u8 = 1;
 const MG_FLAG_FENCE: u8 = 1;
 /// Migrate body flag: announced control-plane settings are shipped.
 const MG_FLAG_CONTROL: u8 = 1 << 1;
+/// Migrate body flag (v7): a prefix-store attachment (digest 32 +
+/// prefix_len u32) is shipped.
+const MG_FLAG_PREFIX: u8 = 1 << 2;
+/// PrefixAck body flag: the probed digest is resident (and now pinned).
+const PA_FLAG_HIT: u8 = 1;
 
 fn malformed(m: impl Into<String>) -> WireError {
     WireError::Malformed(m.into())
@@ -319,7 +356,21 @@ fn write_payload(out: &mut Vec<u8>, p: &SplitPayload) {
     if matches!(p.sampling, SamplingSpec::TopK { .. }) {
         flags |= FLAG_TOPK;
     }
+    if let Some(pr) = &p.prefix {
+        debug_assert!(p.is_prefill, "a prefix reference only makes sense on prefill");
+        flags |= FLAG_PREFIX;
+        if pr.insert.is_some() {
+            flags |= FLAG_PREFIX_INSERT;
+        }
+    }
     out.push(flags);
+    if let Some(pr) = &p.prefix {
+        out.extend_from_slice(&pr.digest.0);
+        out.extend_from_slice(&pr.prefix_len.to_le_bytes());
+        if let Some(t) = &pr.insert {
+            write_tensor(out, t);
+        }
+    }
     if let SamplingSpec::TopK { k, temperature, seed } = p.sampling {
         assert!(k <= u16::MAX as usize, "top-k shortlist exceeds the wire's u16");
         out.extend_from_slice(&(k as u16).to_le_bytes());
@@ -336,9 +387,27 @@ fn read_payload(r: &mut Reader) -> Result<SplitPayload, WireError> {
     let request_id = r.u64()?;
     let pos = r.u64()? as usize;
     let flags = r.u8()?;
-    if flags & !(FLAG_PREFILL | FLAG_KV | FLAG_TOPK) != 0 {
+    if flags & !(FLAG_PREFILL | FLAG_KV | FLAG_TOPK | FLAG_PREFIX | FLAG_PREFIX_INSERT) != 0 {
         return Err(malformed(format!("unknown payload flags {flags:#04x}")));
     }
+    if flags & FLAG_PREFIX_INSERT != 0 && flags & FLAG_PREFIX == 0 {
+        return Err(malformed("prefix-insert flag without a prefix reference"));
+    }
+    if flags & FLAG_PREFIX != 0 && flags & FLAG_PREFILL == 0 {
+        return Err(malformed("prefix reference on a non-prefill payload"));
+    }
+    let prefix = if flags & FLAG_PREFIX != 0 {
+        let digest = PrefixDigest(r.take(32)?.try_into().unwrap());
+        let prefix_len = r.u32()?;
+        if prefix_len == 0 {
+            return Err(malformed("prefix reference with zero prefix_len"));
+        }
+        let insert =
+            if flags & FLAG_PREFIX_INSERT != 0 { Some(read_tensor(r)?) } else { None };
+        Some(PrefixRef { digest, prefix_len, insert })
+    } else {
+        None
+    };
     let sampling = if flags & FLAG_TOPK != 0 {
         let k = r.u16()? as usize;
         let temperature = r.f32()?;
@@ -356,6 +425,7 @@ fn read_payload(r: &mut Reader) -> Result<SplitPayload, WireError> {
         kv,
         is_prefill: flags & FLAG_PREFILL != 0,
         sampling,
+        prefix,
     })
 }
 
@@ -674,6 +744,88 @@ pub fn decode_error_frame(bytes: &[u8]) -> Result<RejectFrame, WireError> {
     Ok(e)
 }
 
+fn write_prefix_probe(out: &mut Vec<u8>, p: &PrefixProbe) {
+    out.extend_from_slice(&p.request_id.to_le_bytes());
+    out.extend_from_slice(&p.digest.0);
+    out.extend_from_slice(&p.prefix_len.to_le_bytes());
+}
+
+fn read_prefix_probe(r: &mut Reader) -> Result<PrefixProbe, WireError> {
+    let request_id = r.u64()?;
+    let digest = PrefixDigest(r.take(32)?.try_into().unwrap());
+    let prefix_len = r.u32()?;
+    if prefix_len == 0 {
+        return Err(malformed("prefix probe with zero prefix_len"));
+    }
+    Ok(PrefixProbe { request_id, digest, prefix_len })
+}
+
+/// Encode one prefix-cache probe as a complete frame.
+pub fn encode_prefix_probe_frame(p: &PrefixProbe) -> Vec<u8> {
+    let mut body = Vec::with_capacity(p.wire_bytes() as usize);
+    write_prefix_probe(&mut body, p);
+    debug_assert_eq!(
+        body.len() as u64,
+        p.wire_bytes(),
+        "prefix-probe body must encode to exactly wire_bytes()"
+    );
+    frame::encode_frame(FrameKind::PrefixProbe, &body)
+}
+
+/// Strict decode of a prefix-probe frame (kind, CRC, structure,
+/// consumption).
+pub fn decode_prefix_probe_frame(bytes: &[u8]) -> Result<PrefixProbe, WireError> {
+    let (kind, body) = frame::decode_frame(bytes)?;
+    if kind != FrameKind::PrefixProbe {
+        return Err(WireError::WrongKind { want: FrameKind::PrefixProbe, got: kind });
+    }
+    let mut r = Reader::new(body);
+    let p = read_prefix_probe(&mut r)?;
+    r.done()?;
+    Ok(p)
+}
+
+fn write_prefix_ack(out: &mut Vec<u8>, a: &PrefixAck) {
+    out.extend_from_slice(&a.request_id.to_le_bytes());
+    out.extend_from_slice(&a.digest.0);
+    out.push(if a.hit { PA_FLAG_HIT } else { 0 });
+}
+
+fn read_prefix_ack(r: &mut Reader) -> Result<PrefixAck, WireError> {
+    let request_id = r.u64()?;
+    let digest = PrefixDigest(r.take(32)?.try_into().unwrap());
+    let flags = r.u8()?;
+    if flags & !PA_FLAG_HIT != 0 {
+        return Err(malformed(format!("unknown prefix-ack flags {flags:#04x}")));
+    }
+    Ok(PrefixAck { request_id, digest, hit: flags & PA_FLAG_HIT != 0 })
+}
+
+/// Encode one prefix-cache probe answer as a complete frame.
+pub fn encode_prefix_ack_frame(a: &PrefixAck) -> Vec<u8> {
+    let mut body = Vec::with_capacity(a.wire_bytes() as usize);
+    write_prefix_ack(&mut body, a);
+    debug_assert_eq!(
+        body.len() as u64,
+        a.wire_bytes(),
+        "prefix-ack body must encode to exactly wire_bytes()"
+    );
+    frame::encode_frame(FrameKind::PrefixAck, &body)
+}
+
+/// Strict decode of a prefix-ack frame (kind, CRC, structure,
+/// consumption).
+pub fn decode_prefix_ack_frame(bytes: &[u8]) -> Result<PrefixAck, WireError> {
+    let (kind, body) = frame::decode_frame(bytes)?;
+    if kind != FrameKind::PrefixAck {
+        return Err(WireError::WrongKind { want: FrameKind::PrefixAck, got: kind });
+    }
+    let mut r = Reader::new(body);
+    let a = read_prefix_ack(&mut r)?;
+    r.done()?;
+    Ok(a)
+}
+
 fn write_migrate(out: &mut Vec<u8>, ms: &MigrateState) {
     out.extend_from_slice(&ms.request_id.to_le_bytes());
     out.extend_from_slice(&ms.epoch.to_le_bytes());
@@ -685,6 +837,9 @@ fn write_migrate(out: &mut Vec<u8>, ms: &MigrateState) {
     if ms.control.is_some() {
         flags |= MG_FLAG_CONTROL;
     }
+    if ms.prefix.is_some() {
+        flags |= MG_FLAG_PREFIX;
+    }
     out.push(flags);
     if let Some((pos, frame)) = &ms.fence {
         assert!(frame.len() <= u32::MAX as usize, "fenced reply frame overflows the wire's u32");
@@ -695,6 +850,10 @@ fn write_migrate(out: &mut Vec<u8>, ms: &MigrateState) {
     if let Some(rc) = &ms.control {
         write_reconfig(out, rc);
     }
+    if let Some((digest, prefix_len)) = &ms.prefix {
+        out.extend_from_slice(&digest.0);
+        out.extend_from_slice(&prefix_len.to_le_bytes());
+    }
 }
 
 fn read_migrate(r: &mut Reader) -> Result<MigrateState, WireError> {
@@ -702,7 +861,7 @@ fn read_migrate(r: &mut Reader) -> Result<MigrateState, WireError> {
     let epoch = r.u32()?;
     let next_pos = r.u64()?;
     let flags = r.u8()?;
-    if flags & !(MG_FLAG_FENCE | MG_FLAG_CONTROL) != 0 {
+    if flags & !(MG_FLAG_FENCE | MG_FLAG_CONTROL | MG_FLAG_PREFIX) != 0 {
         return Err(malformed(format!("unknown migrate flags {flags:#04x}")));
     }
     let fence = if flags & MG_FLAG_FENCE != 0 {
@@ -748,7 +907,17 @@ fn read_migrate(r: &mut Reader) -> Result<MigrateState, WireError> {
     } else {
         None
     };
-    Ok(MigrateState { request_id, epoch, next_pos, fence, control })
+    let prefix = if flags & MG_FLAG_PREFIX != 0 {
+        let digest = PrefixDigest(r.take(32)?.try_into().unwrap());
+        let prefix_len = r.u32()?;
+        if prefix_len == 0 {
+            return Err(malformed("migrated prefix attachment with zero prefix_len"));
+        }
+        Some((digest, prefix_len))
+    } else {
+        None
+    };
+    Ok(MigrateState { request_id, epoch, next_pos, fence, control, prefix })
 }
 
 /// Encode one worker-to-worker session migration as a complete frame.
@@ -815,12 +984,23 @@ pub struct PayloadPrefix {
     pub pos: u64,
     pub is_prefill: bool,
     pub has_kv: bool,
+    /// The payload's prefix-cache reference (digest, prefix_len), when it
+    /// carries one (wire v7). It sits at a fixed offset right after the
+    /// flags byte precisely so this peek can read it — the pool prefers
+    /// placing a prefix-bearing prefill on a worker already holding the
+    /// digest.
+    pub prefix: Option<(PrefixDigest, u32)>,
+    /// The reference carries the prefix's own compressed block (a cold
+    /// insert) rather than relying on store residency.
+    pub prefix_insert: bool,
 }
 
 /// Peek the `[request_id u64][pos u64][flags u8]` prefix of an encoded
-/// *payload frame*. The frame envelope (magic, version, kind, length,
-/// CRC-32) is fully validated — a corrupted frame must never be routed by
-/// garbage — but the tensor payload behind the prefix is not decoded.
+/// *payload frame* — plus the fixed-offset 36-byte prefix-cache reference
+/// when flags bit3 says one is present. The frame envelope (magic,
+/// version, kind, length, CRC-32) is fully validated — a corrupted frame
+/// must never be routed by garbage — but the tensor payload behind the
+/// prefix is not decoded.
 pub fn peek_payload_prefix(frame_bytes: &[u8]) -> Result<PayloadPrefix, WireError> {
     let (kind, body) = frame::decode_frame(frame_bytes)?;
     if kind != FrameKind::Payload {
@@ -832,13 +1012,28 @@ pub fn peek_payload_prefix(frame_bytes: &[u8]) -> Result<PayloadPrefix, WireErro
     let request_id = u64::from_le_bytes(body[0..8].try_into().unwrap());
     let pos = u64::from_le_bytes(body[8..16].try_into().unwrap());
     let flags = body[16];
-    if flags & !(FLAG_PREFILL | FLAG_KV | FLAG_TOPK) != 0 {
+    if flags & !(FLAG_PREFILL | FLAG_KV | FLAG_TOPK | FLAG_PREFIX | FLAG_PREFIX_INSERT) != 0 {
         return Err(WireError::Malformed("unknown payload flags".into()));
     }
+    if flags & FLAG_PREFIX_INSERT != 0 && flags & FLAG_PREFIX == 0 {
+        return Err(WireError::Malformed("prefix-insert flag without a prefix reference".into()));
+    }
+    let prefix = if flags & FLAG_PREFIX != 0 {
+        if body.len() < 53 {
+            return Err(WireError::Truncated { need: 53, have: body.len() });
+        }
+        let digest = PrefixDigest(body[17..49].try_into().unwrap());
+        let prefix_len = u32::from_le_bytes(body[49..53].try_into().unwrap());
+        Some((digest, prefix_len))
+    } else {
+        None
+    };
     Ok(PayloadPrefix {
         request_id,
         pos,
         is_prefill: flags & FLAG_PREFILL != 0,
         has_kv: flags & FLAG_KV != 0,
+        prefix,
+        prefix_insert: flags & FLAG_PREFIX_INSERT != 0,
     })
 }

@@ -2,10 +2,12 @@
 //!
 //! ```text
 //! [magic   u32]  0x53504C57 ("SPLW", little-endian "WLPS" on the wire)
-//! [version u8 ]  6 (wire format v6: v5 layouts + the worker-to-worker
-//!                Migrate frame carrying a session's cloud-side state)
+//! [version u8 ]  7 (wire format v7: v6 layouts + the PrefixProbe /
+//!                PrefixAck prefix-cache handshake and digest-bearing
+//!                payloads)
 //! [kind    u8 ]  1 = SplitPayload, 2 = CloudReply, 3 = Reconfig,
-//!                4 = Resume, 5 = ResumeAck, 6 = Error, 7 = Migrate
+//!                4 = Resume, 5 = ResumeAck, 6 = Error, 7 = Migrate,
+//!                8 = PrefixProbe, 9 = PrefixAck
 //! [len     u32]  body length in bytes
 //! [body       ]  len bytes (see `wire::codec` for the per-kind layout)
 //! [crc32   u32]  IEEE CRC-32 over version, kind, len and body
@@ -34,13 +36,14 @@ pub const MAGIC: u32 = 0x53504C57;
 /// allocates or blocks reading gigabytes it will only throw away at the
 /// CRC check.
 pub const MAX_BODY_BYTES: usize = 256 << 20;
-/// Wire format v6: the v5 layouts (position-stamped replies, the
-/// `Resume`/`ResumeAck` recovery handshake, in-band `Error` rejections)
-/// plus `Migrate` — a worker-to-worker frame carrying a session's entire
-/// cloud-side state (replay fence, announced control settings, resume
-/// epoch) so the cloud pool can move a live session between workers
-/// without forking its token stream (see `wire::codec` and `pool`).
-pub const VERSION: u8 = 6;
+/// Wire format v7: the v6 layouts (position-stamped replies, the
+/// `Resume`/`ResumeAck` recovery handshake, in-band `Error` rejections,
+/// the worker-to-worker `Migrate` frame) plus the content-addressed
+/// prefix cache: `PrefixProbe`/`PrefixAck` frames and an optional
+/// 36-byte prefix reference on `SplitPayload` so a session whose prompt
+/// prefix is resident ships a digest instead of re-transmitting
+/// compressed prefill state (see `wire::codec` and `prefix`).
+pub const VERSION: u8 = 7;
 
 /// What a frame's body contains.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -71,6 +74,14 @@ pub enum FrameKind {
     /// increasing migration epoch so duplicate or stale deliveries
     /// during the handoff are fenced off exactly like a stale `Resume`.
     Migrate = 7,
+    /// Edge→cloud prefix-cache probe: "is this (digest, prefix_len)
+    /// resident?". A hit pins the entry for the probing request so it
+    /// cannot be evicted between the ack and the warm payload.
+    PrefixProbe = 8,
+    /// Cloud→edge answer to a `PrefixProbe`: echoes request id + digest
+    /// and reports hit/miss. A miss tells the edge to fall back to the
+    /// full insert payload.
+    PrefixAck = 9,
 }
 
 impl FrameKind {
@@ -83,6 +94,8 @@ impl FrameKind {
             5 => Ok(FrameKind::ResumeAck),
             6 => Ok(FrameKind::Error),
             7 => Ok(FrameKind::Migrate),
+            8 => Ok(FrameKind::PrefixProbe),
+            9 => Ok(FrameKind::PrefixAck),
             other => Err(WireError::BadKind(other)),
         }
     }
@@ -312,16 +325,18 @@ mod tests {
         // (valid magic, version, length and CRC) must decode to a typed
         // `BadKind` — never a panic, never a misparse. (The bit-flip
         // suite only covers kinds that also break the CRC.)
+        // kind byte 13 is unclaimed (v7 claims 1..=9; keep this probe off
+        // any value a future frame kind is likely to take next).
         let body = b"frame from the future";
         let mut f = Vec::new();
         f.extend_from_slice(&MAGIC.to_le_bytes());
         f.push(VERSION);
-        f.push(9); // unknown kind byte
+        f.push(13); // unknown kind byte
         f.extend_from_slice(&(body.len() as u32).to_le_bytes());
         f.extend_from_slice(body);
         let crc = crc32(&f[4..]);
         f.extend_from_slice(&crc.to_le_bytes());
-        assert!(matches!(decode_frame(&f), Err(WireError::BadKind(9))));
+        assert!(matches!(decode_frame(&f), Err(WireError::BadKind(13))));
     }
 
     #[test]

@@ -18,12 +18,14 @@ pub mod frame;
 pub mod transport;
 
 pub use codec::{
-    decode_error_frame, decode_migrate_frame, decode_payload_frame, decode_reconfig_frame,
-    decode_reply_frame, decode_resume_ack_frame, decode_resume_frame, encode_error_frame,
-    encode_migrate_frame, encode_payload_frame, encode_reconfig_frame, encode_reply_frame,
+    decode_error_frame, decode_migrate_frame, decode_payload_frame, decode_prefix_ack_frame,
+    decode_prefix_probe_frame, decode_reconfig_frame, decode_reply_frame,
+    decode_resume_ack_frame, decode_resume_frame,
+    encode_error_frame, encode_migrate_frame, encode_payload_frame, encode_prefix_ack_frame,
+    encode_prefix_probe_frame, encode_reconfig_frame, encode_reply_frame,
     encode_resume_ack_frame, encode_resume_frame, peek_payload_prefix, peek_reply_meta,
-    PayloadPrefix, ReplyMeta, MIGRATE_OVERHEAD, PAYLOAD_OVERHEAD, RECONFIG_OVERHEAD,
-    REPLY_OVERHEAD,
+    PayloadPrefix, ReplyMeta, MIGRATE_OVERHEAD, PAYLOAD_OVERHEAD, PREFIX_OVERHEAD,
+    RECONFIG_OVERHEAD, REPLY_OVERHEAD,
 };
 pub use fault::{CorrelatedOutage, FaultPlan, FaultyTransport};
 pub use frame::{crc32, decode_frame, encode_frame, FrameKind, WireError, FRAME_OVERHEAD};

@@ -614,6 +614,29 @@ impl EdgePort {
         let ack = codec::decode_resume_ack_frame(&frame_bytes)?;
         Ok((ack, down))
     }
+
+    /// Encode, frame and transmit one prefix-cache probe. Probe traffic
+    /// rides the same wire as the data plane and is charged real bytes.
+    pub fn send_prefix_probe(
+        &mut self,
+        p: &crate::coordinator::protocol::PrefixProbe,
+    ) -> Result<TransferOutcome> {
+        let frame_bytes = codec::encode_prefix_probe_frame(p);
+        self.transport.send(&frame_bytes)
+    }
+
+    /// Receive and strictly decode the cloud's prefix-probe answer.
+    /// An in-band `Error` frame surfaces as [`WireError::Rejected`].
+    pub fn recv_prefix_ack(
+        &mut self,
+    ) -> Result<(crate::coordinator::protocol::PrefixAck, TransferOutcome)> {
+        let (frame_bytes, down) = self.transport.recv()?;
+        if let Some(rej) = in_band_rejection(&frame_bytes) {
+            return Err(rej.into());
+        }
+        let ack = codec::decode_prefix_ack_frame(&frame_bytes)?;
+        Ok((ack, down))
+    }
 }
 
 /// Decode an in-band `Error` frame into its typed rejection, if the
@@ -678,6 +701,24 @@ impl CloudPort {
         e: &crate::coordinator::protocol::RejectFrame,
     ) -> Result<TransferOutcome> {
         let frame_bytes = codec::encode_error_frame(e);
+        self.transport.send(&frame_bytes)
+    }
+
+    /// Receive and strictly decode the next prefix-cache probe frame.
+    pub fn recv_prefix_probe(
+        &mut self,
+    ) -> Result<(crate::coordinator::protocol::PrefixProbe, TransferOutcome)> {
+        let (frame_bytes, out) = self.transport.recv()?;
+        let p = codec::decode_prefix_probe_frame(&frame_bytes)?;
+        Ok((p, out))
+    }
+
+    /// Encode, frame and transmit one prefix-probe answer.
+    pub fn send_prefix_ack(
+        &mut self,
+        ack: &crate::coordinator::protocol::PrefixAck,
+    ) -> Result<TransferOutcome> {
+        let frame_bytes = codec::encode_prefix_ack_frame(ack);
         self.transport.send(&frame_bytes)
     }
 }

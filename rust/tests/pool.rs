@@ -642,3 +642,194 @@ fn rebalance_levels_a_skewed_pool() {
     }
     assert_leak_free(&pool, "after the rebalance");
 }
+
+/// Satellite (pool control-plane chaos): one bit flipped mid-flight in
+/// the worker-to-worker kind-7 Migrate handoff frame. The damaged frame
+/// must be caught TYPED (CRC/structural check), the session rolled back
+/// onto its source with its charge re-admitted exactly once, and the
+/// stream must then finish bit-identical to the solo oracle — a clean
+/// migration afterwards still works. Swept over bit positions covering
+/// the magic, the header and the body.
+#[test]
+fn corrupted_migrate_handoff_fails_typed_and_rolls_back() {
+    let eng = engine();
+    let spec = DeploymentSpec::defaults(small_cfg(4), 2);
+    let edge = spec.build_edge_device(eng.clone()).unwrap();
+    let req = Request::new(9100, vec![3, 141, 59, 26], 8);
+    let want = oracle(&eng, &spec, &req);
+    assert!(want.len() >= 2, "stream too short to migrate mid-decode");
+
+    for bit in [0usize, 3, 77, 501, 12_345] {
+        let mut pool = mk_pool(&eng, &spec, pcfg(2, 0xC0DE));
+        let mut t = connect(&mut pool, &edge, &spec, &req);
+        let mut absorbed = 0usize;
+        let mut guard = 0usize;
+        while absorbed < 1 {
+            guard += 1;
+            assert!(guard < 10_000, "bit {bit}: prefill did not converge");
+            absorbed += step_pool(&mut pool, &edge, std::slice::from_mut(&mut t));
+        }
+        assert!(!t.session.is_terminal(), "bit {bit}: nothing left to migrate");
+        let src = pool.placement_of(req.id).expect("mid-stream session must be placed").worker;
+        let dst = 1 - src;
+
+        pool.arm_migrate_fault(bit);
+        let rj = pool
+            .migrate_session(req.id, dst)
+            .unwrap()
+            .expect_err("a damaged handoff frame must be refused, never imported");
+        assert_eq!(rj.code, reject::FAILED, "bit {bit}: wrong rejection code");
+        assert_eq!(rj.request_id, req.id, "bit {bit}");
+        assert_eq!(pool.stats.migrate_frame_faults, 1, "bit {bit}: fault not armed");
+        assert_eq!(pool.stats.migration_rejected, 1, "bit {bit}");
+        assert_eq!(pool.stats.migrations, 0, "bit {bit}: a damaged handoff must not count");
+        // Rolled back: still on the source, charged exactly once.
+        assert_eq!(pool.placement_of(req.id).map(|p| p.worker), Some(src), "bit {bit}");
+        assert_eq!(pool.live_sessions(), 1, "bit {bit}: rollback must re-charge exactly once");
+        assert_eq!(pool.worker(dst).live_sessions(), 0, "bit {bit}: target took the charge");
+
+        // The control-plane fault healed; a CLEAN migration still works
+        // and the stream is byte-for-byte the fault-free one.
+        pool.migrate_session(req.id, dst)
+            .unwrap()
+            .unwrap_or_else(|rj| panic!("bit {bit}: clean migration after rollback: {rj:?}"));
+        assert_eq!(pool.placement_of(req.id).map(|p| p.worker), Some(dst), "bit {bit}");
+        assert_eq!(pool.stats.migrations, 1, "bit {bit}");
+        while !t.session.is_terminal() {
+            guard += 1;
+            assert!(guard < 10_000, "bit {bit}: post-fault drive did not converge");
+            step_pool(&mut pool, &edge, std::slice::from_mut(&mut t));
+        }
+        assert_eq!(t.session.tokens(), &want[..], "bit {bit}: the fault changed the stream");
+        if want.last() == Some(&0) {
+            assert_eq!(pool.resume_entries(), 0, "bit {bit}: EOS left a resume epoch behind");
+        }
+        pool.close_edge(t.edge_id);
+        assert_leak_free(&pool, &format!("bit {bit}"));
+        assert_eq!(pool.prefix_charged_bytes(), 0, "bit {bit}: prefix bytes charged from nowhere");
+        assert_eq!(pool.prefix_attachments(), 0, "bit {bit}: prefix refcounts leaked");
+    }
+}
+
+/// Satellite (pool control-plane chaos): placement under CORRUPTED
+/// headroom telemetry. A worker lying "room for 100" (real budget: ONE
+/// session) draws every arrival; the worker's own Eq. 8c admission gate
+/// is the backstop — the overflow fails with a typed in-band ADMISSION
+/// rejection, never silent wrong tokens, and the sessions that are
+/// served stream bit-identical to the solo oracle. With every worker
+/// lying "zero headroom", the POOL itself rejects typed. Zero leaked
+/// charges afterwards.
+#[test]
+fn corrupted_headroom_telemetry_is_typed_or_exact_never_silent() {
+    let eng = engine();
+    let spec = DeploymentSpec::defaults(small_cfg(2), 1);
+    let edge = spec.build_edge_device(eng.clone()).unwrap();
+    let per_session = mk_pool(&eng, &spec, pcfg(1, 1)).worker(0).session_kv_bytes();
+    let cfg = PoolConfig {
+        workers: 2,
+        seed: 0x7E1E,
+        fleet: FleetConfig { kv_budget_bytes: Some(per_session), ..FleetConfig::default() },
+        ..PoolConfig::default()
+    };
+    let mut pool = mk_pool(&eng, &spec, cfg);
+    // Worker 0 lies: "room for 100 sessions". Its real budget is ONE.
+    pool.corrupt_headroom_telemetry(0, 100);
+
+    let reqs: Vec<Request> =
+        (0..3u64).map(|i| Request::new(9200 + i, vec![5 + i as u32, 77, 3], 4)).collect();
+    let mut tenants: Vec<Tenant> =
+        reqs.iter().map(|r| connect(&mut pool, &edge, &spec, r)).collect();
+
+    // Drive by hand: every tenant ends either terminal (served, exact)
+    // or with a typed in-band rejection — never silence, never a panic.
+    let mut rejected: Vec<u64> = Vec::new();
+    let mut guard = 0usize;
+    loop {
+        guard += 1;
+        assert!(guard < 10_000, "telemetry-chaos drive did not converge");
+        let mut live = false;
+        for (t, req) in tenants.iter_mut().zip(&reqs) {
+            if t.session.is_terminal() || rejected.contains(&req.id) {
+                continue;
+            }
+            live = true;
+            if t.up.is_none() {
+                if let SessionAction::Transmit(p) = t.session.poll(&edge).unwrap() {
+                    t.up = Some(t.port.send_payload(&p).unwrap());
+                }
+            }
+        }
+        if !live {
+            break;
+        }
+        pool.poll().unwrap();
+        for (t, req) in tenants.iter_mut().zip(&reqs) {
+            if t.session.is_terminal() || rejected.contains(&req.id) {
+                continue;
+            }
+            match t.port.try_recv_reply() {
+                Ok(Some((reply, cloud_s, down))) => {
+                    let up = t.up.take().expect("reply without an in-flight payload");
+                    t.session.on_reply(&edge, &reply, cloud_s, up, down).unwrap();
+                }
+                Ok(None) => {}
+                Err(e) => match e.downcast_ref::<WireError>() {
+                    Some(WireError::Rejected { code, request_id, .. }) => {
+                        assert_eq!(
+                            *code,
+                            reject::ADMISSION,
+                            "the lie may only surface as typed ADMISSION"
+                        );
+                        rejected.push(*request_id);
+                    }
+                    other => panic!("expected a typed rejection, got {other:?}"),
+                },
+            }
+        }
+    }
+
+    // The lie over-packed worker 0 past its real budget; the worker's
+    // own admission gate pushed the overflow back — typed.
+    assert!(!rejected.is_empty(), "the telemetry lie never caused admission pressure");
+    assert!(rejected.len() < reqs.len(), "nobody was served at all");
+    for (t, req) in tenants.iter().zip(&reqs) {
+        if rejected.contains(&req.id) {
+            continue;
+        }
+        let want = oracle(&eng, &spec, req);
+        assert_eq!(t.session.tokens(), &want[..], "req {} diverged under the lie", req.id);
+    }
+
+    // The opposite corruption — EVERY worker claiming zero headroom —
+    // must surface at the pool's own placement gate, typed.
+    pool.corrupt_headroom_telemetry(0, 0);
+    pool.corrupt_headroom_telemetry(1, 0);
+    let extra = Request::new(9300, vec![9, 9, 9], 3);
+    let mut t = connect(&mut pool, &edge, &spec, &extra);
+    if let SessionAction::Transmit(p) = t.session.poll(&edge).unwrap() {
+        t.up = Some(t.port.send_payload(&p).unwrap());
+    }
+    pool.poll().unwrap();
+    let err = t.port.try_recv_reply().expect_err("zero-headroom lies must reject typed");
+    match err.downcast_ref::<WireError>() {
+        Some(WireError::Rejected { code, request_id, .. }) => {
+            assert_eq!(*code, reject::ADMISSION, "wrong rejection code");
+            assert_eq!(*request_id, extra.id);
+        }
+        other => panic!("expected a typed ADMISSION rejection, got {other:?}"),
+    }
+    assert!(pool.stats.placement_rejected >= 1, "the pool gate never fired");
+
+    // Telemetry heals → the pool serves again (the lie left no scar).
+    pool.clear_headroom_telemetry(0);
+    pool.clear_headroom_telemetry(1);
+
+    let ids: Vec<u64> =
+        tenants.iter().map(|t| t.edge_id).chain([t.edge_id]).collect();
+    for id in ids {
+        pool.close_edge(id);
+    }
+    assert_leak_free(&pool, "after telemetry chaos");
+    assert_eq!(pool.prefix_charged_bytes(), 0, "prefix bytes charged from nowhere");
+    assert_eq!(pool.prefix_attachments(), 0, "prefix refcounts leaked");
+}

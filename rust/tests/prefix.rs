@@ -1,0 +1,685 @@
+//! Integration tests for the content-addressed prefix KV cache (wire v7).
+//!
+//! The core invariant, pinned here across every serving topology the repo
+//! has — solo (`SplitPipeline`), stacked (`ServeLoop`), fleet
+//! (`FleetServer`), sharded pool (`CloudPool`) — is:
+//!
+//! > A cached-prefix (warm) token stream is BIT-IDENTICAL to the cold
+//! > one, at every divergence point. Caching may only change bytes on
+//! > the wire and seconds on the clock — never a token.
+//!
+//! On top of bit-identity: a shared prefix is charged against the cloud
+//! memory term ONCE no matter how many sessions attach (Eq. 8c extended
+//! to shared state); every path a session can end through — EOS, budget
+//! exhaustion, cancellation, connection sweep, worker death — releases
+//! its refcount; forged or stale cache tokens fail TYPED (in-band
+//! `reject::PREFIX` / downcastable `PrefixMiss`), never silently; and a
+//! zero budget (`--prefix-cache-mb 0`) reproduces the pre-v7 byte
+//! stream exactly.
+
+use std::rc::Rc;
+
+use splitserve::coordinator::{
+    build_pipeline, build_serve_loop, protocol::reject, CloudServer, DeploymentSpec, EdgeDevice,
+    PrefixDecision, PrefixMiss, Request, ServeSpec, Session, SessionAction, TokenControl,
+};
+use splitserve::fleet::{FleetConfig, FleetServer};
+use splitserve::model::ModelConfig;
+use splitserve::pool::{CloudPool, PoolConfig};
+use splitserve::prefix::{PrefixDigest, CHUNK_TOKENS};
+use splitserve::runtime::Engine;
+use splitserve::wire::{self, EdgePort, Loopback, WireTransport};
+
+const CACHE_BYTES: u64 = 64 * 1024 * 1024;
+
+fn small_cfg(n_layers: usize) -> ModelConfig {
+    let mut cfg = ModelConfig::sim7b();
+    cfg.n_layers = n_layers;
+    cfg
+}
+
+fn engine() -> Rc<Engine> {
+    Rc::new(Engine::load("artifacts", &ModelConfig::sim7b()).expect("run `make artifacts`"))
+}
+
+/// Deployment with the prefix cache ON (both halves).
+fn warm_spec(n_layers: usize, split: usize) -> DeploymentSpec {
+    DeploymentSpec::defaults(small_cfg(n_layers), split).with_prefix_cache(CACHE_BYTES)
+}
+
+/// A prompt sharing one cacheable 16-token prefix, diverging into
+/// `suffix`. `CHUNK_TOKENS` is the digest chunk width, so this is the
+/// smallest prompt shape the cache engages.
+fn shared_prompt(suffix: &[u32]) -> Vec<u32> {
+    let mut p: Vec<u32> = (0..CHUNK_TOKENS as u32).map(|i| 10 + i).collect();
+    p.extend_from_slice(suffix);
+    p
+}
+
+/// Solo oracle with caching OFF: the exact stream every cached run must
+/// reproduce (fresh deployment, same seeds, default spec).
+fn cold_oracle(eng: &Rc<Engine>, n_layers: usize, split: usize, req: &Request) -> Vec<u32> {
+    let spec = DeploymentSpec::defaults(small_cfg(n_layers), split);
+    let mut pipe = build_pipeline(eng.clone(), &spec).unwrap();
+    pipe.generate(req).unwrap().tokens
+}
+
+// ---------------------------------------------------------------------------
+// Solo (SplitPipeline): the acceptance property.
+// ---------------------------------------------------------------------------
+
+/// ACCEPTANCE: warm streams are bit-identical to cold ones at EVERY
+/// divergence point. One pipeline is reused so the edge cache and cloud
+/// store persist; a cold insert seeds the prefix, then prompts diverging
+/// right after the shared prefix — different first suffix token,
+/// different suffix lengths — all run warm and must equal their
+/// caching-off oracles token for token.
+#[test]
+fn warm_solo_streams_bit_identical_to_cold_at_every_divergence_point() {
+    let eng = engine();
+    let spec = warm_spec(4, 2);
+    let mut pipe = build_pipeline(eng.clone(), &spec).unwrap();
+
+    // Cold seed: Insert (nothing resident anywhere yet).
+    let seed_req = Request::new(100, shared_prompt(&[200, 201, 202]), 6);
+    assert!(matches!(
+        pipe.edge.prefix_decision(&seed_req.prompt),
+        PrefixDecision::Insert { .. }
+    ));
+    let got = pipe.generate(&seed_req).unwrap().tokens;
+    assert_eq!(got, cold_oracle(&eng, 4, 2, &seed_req), "the INSERT path changed the stream");
+    assert!(pipe.cloud.prefix_stats().inserts >= 1, "the cold run never populated the store");
+    pipe.cloud.retire_request(seed_req.id);
+
+    // Divergence sweep: every prompt shares the 16-token prefix and
+    // diverges immediately after it — different token, different length.
+    let suffixes: [&[u32]; 4] = [&[300], &[301, 44], &[302, 45, 9], &[7, 7, 7, 7, 120]];
+    for (i, suffix) in suffixes.iter().enumerate() {
+        let req = Request::new(110 + i as u64, shared_prompt(suffix), 6);
+        assert!(
+            matches!(pipe.edge.prefix_decision(&req.prompt), PrefixDecision::Warm { .. }),
+            "suffix {i}: the edge cache lost the seeded prefix"
+        );
+        let hits_before = pipe.cloud.prefix_stats().hits;
+        let got = pipe.generate(&req).unwrap().tokens;
+        assert_eq!(
+            got,
+            cold_oracle(&eng, 4, 2, &req),
+            "suffix {i}: warm stream diverged from the cold oracle"
+        );
+        assert!(
+            pipe.cloud.prefix_stats().hits > hits_before,
+            "suffix {i}: the warm run never touched the store"
+        );
+        pipe.cloud.retire_request(req.id);
+    }
+
+    // Re-running the seed prompt itself (fresh id) is warm too.
+    let again = Request::new(130, shared_prompt(&[200, 201, 202]), 6);
+    assert!(matches!(pipe.edge.prefix_decision(&again.prompt), PrefixDecision::Warm { .. }));
+    let got = pipe.generate(&again).unwrap().tokens;
+    assert_eq!(got, cold_oracle(&eng, 4, 2, &again));
+    pipe.cloud.retire_request(again.id);
+    assert_eq!(pipe.cloud.prefix_live_attachments(), 0, "refcounts leaked across the sweep");
+}
+
+/// Satellite (CLI regression): budget 0 — `--prefix-cache-mb 0` —
+/// disables caching and must reproduce today's byte stream EXACTLY:
+/// the encoded prefill frame of a zero-budget deployment is
+/// byte-identical to the default (pre-v7) deployment's, and so is the
+/// token stream. Enabled caching, for contrast, changes the prefill's
+/// wire shape (two blocks) without changing a token.
+#[test]
+fn zero_budget_reproduces_the_legacy_byte_stream_exactly() {
+    let eng = engine();
+    let legacy = DeploymentSpec::defaults(small_cfg(2), 1);
+    let zeroed = DeploymentSpec::defaults(small_cfg(2), 1).with_prefix_cache(0);
+    let edge_legacy = legacy.build_edge_device(eng.clone()).unwrap();
+    let edge_zeroed = zeroed.build_edge_device(eng.clone()).unwrap();
+
+    let prompt = shared_prompt(&[400, 401, 402]);
+    assert!(matches!(edge_zeroed.prefix_decision(&prompt), PrefixDecision::Off));
+    let (p_legacy, _, _) = edge_legacy.prefill(777, &prompt).unwrap();
+    let (p_zeroed, _, _) = edge_zeroed.prefill_ex(777, &prompt, PrefixDecision::Off).unwrap();
+    assert_eq!(
+        wire::encode_payload_frame(&p_legacy),
+        wire::encode_payload_frame(&p_zeroed),
+        "budget 0 must keep the prefill frame byte-identical to the pre-v7 wire"
+    );
+
+    let req = Request::new(777, prompt, 5);
+    let mut pipe = build_pipeline(eng.clone(), &zeroed).unwrap();
+    let got = pipe.generate(&req).unwrap();
+    assert_eq!(got.tokens, cold_oracle(&eng, 2, 1, &req));
+    assert_eq!(pipe.cloud.prefix_charged_bytes(), 0, "budget 0 must never charge store bytes");
+
+    // Contrast: an ENABLED deployment's warm prefill really is smaller
+    // on the wire — cache bytes bought something measurable.
+    let spec = warm_spec(2, 1);
+    let mut warm_pipe = build_pipeline(eng.clone(), &spec).unwrap();
+    let cold = warm_pipe.generate(&Request::new(778, shared_prompt(&[400, 401, 402]), 5)).unwrap();
+    let warm = warm_pipe.generate(&Request::new(779, shared_prompt(&[400, 401, 402]), 5)).unwrap();
+    assert!(
+        warm.prefill.uplink_bytes < cold.prefill.uplink_bytes,
+        "warm prefill ({} B) must undercut cold ({} B)",
+        warm.prefill.uplink_bytes,
+        cold.prefill.uplink_bytes
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Cloud store: single charge, refcount lifecycle, typed misses.
+// ---------------------------------------------------------------------------
+
+/// Satellite (admission): N sessions sharing one prefix charge the
+/// cloud's Eq. 8c memory term ONCE — `prefix_charged_bytes` is flat as
+/// sessions join and leave — and every retirement path drains its
+/// refcount.
+#[test]
+fn shared_prefix_is_charged_once_across_sessions() {
+    let eng = engine();
+    let spec = warm_spec(2, 1);
+    let mut pipe = build_pipeline(eng.clone(), &spec).unwrap();
+
+    let seed = Request::new(200, shared_prompt(&[50, 51]), 4);
+    pipe.generate(&seed).unwrap();
+    pipe.cloud.retire_request(seed.id);
+    let charged = pipe.cloud.prefix_charged_bytes();
+    assert!(charged > 0, "the insert never charged the store");
+
+    for i in 0..8u64 {
+        let req = Request::new(210 + i, shared_prompt(&[60 + i as u32]), 4);
+        pipe.generate(&req).unwrap();
+        assert_eq!(
+            pipe.cloud.prefix_charged_bytes(),
+            charged,
+            "session {i}: a shared prefix was charged more than once"
+        );
+        pipe.cloud.retire_request(req.id);
+        assert_eq!(pipe.cloud.prefix_live_attachments(), 0, "session {i}: refcount leaked");
+    }
+}
+
+/// A forged or stale cache token is a TYPED failure — downcastable
+/// `PrefixMiss`, mapped to in-band `reject::PREFIX` — and the recovery
+/// (rebuild the prefill as a full insert) reproduces the cold reply
+/// bit-for-bit. Never a panic, never silently-wrong state.
+#[test]
+fn forged_or_stale_prefix_token_fails_typed_and_recovery_is_bit_identical() {
+    let eng = engine();
+    let spec = warm_spec(2, 1);
+    let edge = spec.build_edge_device(eng.clone()).unwrap();
+    let cloud = spec.build_cloud_server(eng.clone()).unwrap();
+
+    // Seed: serve a cold insert by hand, learn the edge entry from it.
+    let prompt = shared_prompt(&[90, 91, 92]);
+    let decision = edge.prefix_decision(&prompt);
+    let PrefixDecision::Insert { digest, prefix_len } = decision else {
+        panic!("fresh edge cache must decide Insert, got {decision:?}")
+    };
+    let (payload, mut state, _) = edge.prefill_ex(900, &prompt, decision).unwrap();
+    let (cold_reply, _) = cloud.handle(&payload).unwrap();
+    edge.absorb_reply(&mut state, payload.pos, &cold_reply.new_kv_rows).unwrap();
+    edge.learn_prefix(&state, &digest, prefix_len);
+    cloud.retire_request(900);
+
+    // STALE: the store restarts (budget reset wipes it); the edge still
+    // holds its entry and ships a warm token the cloud cannot honor.
+    cloud.set_prefix_budget(CACHE_BYTES);
+    let warm = edge
+        .prefill_ex(901, &prompt, PrefixDecision::Warm { digest, prefix_len })
+        .unwrap()
+        .0;
+    let err = cloud.handle(&warm).expect_err("a stale token must not serve");
+    assert!(err.downcast_ref::<PrefixMiss>().is_some(), "untyped stale-token failure: {err:#}");
+    assert_eq!(CloudServer::reject_code_for(&err), reject::PREFIX);
+
+    // Recovery: rebuild as a full insert from the same request's edge
+    // state. Sampling is (seed, request_id, pos)-keyed, so the oracle is
+    // a FRESH pre-v7 (caching-off) deployment serving rid 901 cold.
+    let ospec = DeploymentSpec::defaults(small_cfg(2), 1);
+    let oedge = ospec.build_edge_device(eng.clone()).unwrap();
+    let ocloud = ospec.build_cloud_server(eng.clone()).unwrap();
+    let (opayload, _, _) = oedge.prefill(901, &prompt).unwrap();
+    let (oracle_reply, _) = ocloud.handle(&opayload).unwrap();
+    ocloud.retire_request(901);
+
+    let st = edge.prefill_ex(901, &prompt, PrefixDecision::Off).unwrap().1;
+    let rebuilt = edge.rebuild_prefill_as_insert(&st, &digest, prefix_len).unwrap();
+    let (re_reply, _) = cloud.handle(&rebuilt).unwrap();
+    assert_eq!(re_reply.token, oracle_reply.token, "recovery changed the sampled token");
+    assert_eq!(re_reply.pos, oracle_reply.pos);
+    cloud.retire_request(901);
+
+    // FORGED: a digest that never existed is the same typed miss. The
+    // edge refuses to build a warm payload without a resident entry, so
+    // forge at the wire level — take a valid warm payload and swap the
+    // digest, exactly what a hostile edge would transmit.
+    let mut hostile = edge
+        .prefill_ex(902, &prompt, PrefixDecision::Warm { digest, prefix_len })
+        .unwrap()
+        .0;
+    hostile.prefix.as_mut().unwrap().digest = PrefixDigest([0xAB; 32]);
+    let err = cloud.handle(&hostile).expect_err("a forged token must not serve");
+    assert!(err.downcast_ref::<PrefixMiss>().is_some(), "untyped forged-token failure: {err:#}");
+    assert_eq!(CloudServer::reject_code_for(&err), reject::PREFIX);
+    cloud.retire_request(902);
+    assert_eq!(cloud.prefix_live_attachments(), 0, "typed misses leaked refcounts");
+}
+
+/// A probe MISS (store lost the digest between sessions) downgrades the
+/// session to a full insert inside the pipeline's own handshake — and
+/// the stream still equals the cold oracle.
+#[test]
+fn probe_miss_downgrades_to_insert_and_stream_is_exact() {
+    let eng = engine();
+    let spec = warm_spec(2, 1);
+    let mut pipe = build_pipeline(eng.clone(), &spec).unwrap();
+
+    let seed = Request::new(300, shared_prompt(&[120, 121]), 4);
+    pipe.generate(&seed).unwrap();
+    pipe.cloud.retire_request(seed.id);
+
+    // Wipe the cloud store; the edge cache still decides Warm.
+    pipe.cloud.set_prefix_budget(CACHE_BYTES);
+    assert_eq!(pipe.cloud.prefix_charged_bytes(), 0);
+    let req = Request::new(301, shared_prompt(&[122, 9]), 4);
+    assert!(matches!(pipe.edge.prefix_decision(&req.prompt), PrefixDecision::Warm { .. }));
+    let got = pipe.generate(&req).unwrap().tokens;
+    assert_eq!(got, cold_oracle(&eng, 2, 1, &req), "the downgrade changed the stream");
+    assert!(
+        pipe.cloud.prefix_stats().inserts >= 1,
+        "the downgraded session never re-populated the store"
+    );
+    pipe.cloud.retire_request(req.id);
+    assert_eq!(pipe.cloud.prefix_live_attachments(), 0);
+}
+
+// ---------------------------------------------------------------------------
+// Stacked serving (ServeLoop): one shared cloud, continuous batching.
+// ---------------------------------------------------------------------------
+
+/// Warm streams through the continuous-batching serve loop equal their
+/// caching-off solo oracles, and the run leaves zero refcounts (the
+/// loop retires every session through the single choke point whether it
+/// ends by EOS, budget, or cancellation).
+#[test]
+fn stacked_serve_loop_warm_streams_match_cold_solo() {
+    let eng = engine();
+    let mut spec = ServeSpec::defaults(small_cfg(4), 2, 1);
+    spec.deployment.prefix_cache_bytes = CACHE_BYTES;
+    let mut serve = build_serve_loop(eng.clone(), &spec).unwrap();
+
+    // Round 1: same-prefix prompts, all cold (decisions are taken at
+    // submission, before any prefill reply could seed the edge cache).
+    let round1 = vec![
+        Request::new(400, shared_prompt(&[140, 1]), 5),
+        Request::new(401, shared_prompt(&[141, 2, 3]), 5),
+    ];
+    let report = serve.run(round1.clone(), |_, _| TokenControl::Continue).unwrap();
+    assert_eq!(report.failed, 0);
+    for req in &round1 {
+        let got = report.results.iter().find(|r| r.request_id == req.id).unwrap();
+        assert_eq!(got.tokens, cold_oracle(&eng, 4, 2, req), "req {} (cold round)", req.id);
+    }
+    let hits_before = serve.cloud.prefix_stats().hits;
+
+    // Round 2: the same device now holds the prefix — warm end to end.
+    let round2 = vec![
+        Request::new(402, shared_prompt(&[142]), 5),
+        Request::new(403, shared_prompt(&[143, 77, 8, 9]), 5),
+    ];
+    let report = serve.run(round2.clone(), |_, _| TokenControl::Continue).unwrap();
+    assert_eq!(report.failed, 0);
+    for req in &round2 {
+        let got = report.results.iter().find(|r| r.request_id == req.id).unwrap();
+        assert_eq!(got.tokens, cold_oracle(&eng, 4, 2, req), "req {} (warm round)", req.id);
+    }
+    assert!(serve.cloud.prefix_stats().hits > hits_before, "round 2 never ran warm");
+    assert_eq!(serve.cloud.prefix_live_attachments(), 0, "the serve loop leaked refcounts");
+    assert_eq!(serve.cloud.control_entries(), 0);
+}
+
+// ---------------------------------------------------------------------------
+// Fleet (one cloud process, many connections): probe handshake over real
+// frames, connection-sweep refcount release, churn hygiene.
+// ---------------------------------------------------------------------------
+
+struct FleetTenant {
+    session: Session,
+    port: EdgePort,
+    conn_id: u64,
+    up: Option<splitserve::channel::TransferOutcome>,
+}
+
+fn fleet_dial(fleet: &mut FleetServer) -> (EdgePort, u64) {
+    let (edge_half, cloud_half) = Loopback::pair();
+    let conn_id = fleet.add_polled(WireTransport::Loopback(cloud_half));
+    (EdgePort::new(WireTransport::Loopback(edge_half)), conn_id)
+}
+
+/// Plan a fleet tenant's prefix engagement the way `EdgeClient` does:
+/// probe over the tenant's own wire when the edge cache is warm, and
+/// downgrade to an insert on a miss.
+fn fleet_plan_prefix(
+    fleet: &mut FleetServer,
+    edge: &EdgeDevice,
+    port: &mut EdgePort,
+    req: &Request,
+) -> PrefixDecision {
+    let mut decision = edge.prefix_decision(&req.prompt);
+    if let PrefixDecision::Warm { digest, prefix_len } = decision {
+        let probe = splitserve::coordinator::PrefixProbe {
+            request_id: req.id,
+            digest,
+            prefix_len: prefix_len as u32,
+        };
+        port.send_prefix_probe(&probe).unwrap();
+        fleet.poll().unwrap();
+        let (ack, _) = port.recv_prefix_ack().unwrap();
+        if !(ack.hit && ack.digest == digest) {
+            decision = PrefixDecision::Insert { digest, prefix_len };
+        }
+    }
+    decision
+}
+
+fn fleet_drive(fleet: &mut FleetServer, edge: &EdgeDevice, tenants: &mut [FleetTenant]) {
+    let mut guard = 0usize;
+    while tenants.iter().any(|t| !t.session.is_terminal()) {
+        guard += 1;
+        assert!(guard < 100_000, "fleet drive did not converge");
+        for t in tenants.iter_mut() {
+            if t.session.is_terminal() || t.up.is_some() {
+                continue;
+            }
+            if let SessionAction::Transmit(p) = t.session.poll(edge).unwrap() {
+                t.up = Some(t.port.send_payload(&p).unwrap());
+            }
+        }
+        fleet.poll().unwrap();
+        for t in tenants.iter_mut() {
+            if t.session.is_terminal() {
+                continue;
+            }
+            if let Some((reply, cloud_s, down)) = t.port.try_recv_reply().unwrap() {
+                let up = t.up.take().expect("reply without an in-flight payload");
+                t.session.on_reply(edge, &reply, cloud_s, up, down).unwrap();
+            }
+        }
+    }
+}
+
+/// Warm fleet tenants — probe handshake as real frames on each tenant's
+/// own connection — stream bit-identical to their caching-off solo
+/// oracles, share ONE store charge, and the connection sweep releases
+/// every refcount even for sessions that never completed.
+#[test]
+fn fleet_warm_streams_share_one_charge_and_sweep_releases() {
+    let eng = engine();
+    let spec = warm_spec(2, 1);
+    let edge = spec.build_edge_device(eng.clone()).unwrap();
+    let cloud = spec.build_cloud_server(eng.clone()).unwrap();
+    let mut fleet = FleetServer::new(cloud, FleetConfig::default());
+
+    // Cold seed tenant populates the store and the edge cache.
+    let seed = Request::new(500, shared_prompt(&[160, 5]), 4);
+    let (mut port, conn_id) = fleet_dial(&mut fleet);
+    let decision = fleet_plan_prefix(&mut fleet, &edge, &mut port, &seed);
+    assert!(matches!(decision, PrefixDecision::Insert { .. }));
+    let mut session = Session::for_edge(seed.clone(), &edge, spec.edge_controller());
+    session.set_prefix_decision(decision);
+    let mut tenants = vec![FleetTenant { session, port, conn_id, up: None }];
+    fleet_drive(&mut fleet, &edge, &mut tenants);
+    assert_eq!(tenants[0].session.tokens(), &cold_oracle(&eng, 2, 1, &seed)[..]);
+    let charged = fleet.scheduler().cloud().prefix_charged_bytes();
+    assert!(charged > 0);
+
+    // Warm tenants on their own connections; the aggregate charge must
+    // not move as they join.
+    let reqs: Vec<Request> =
+        (0..4u64).map(|i| Request::new(510 + i, shared_prompt(&[170 + i as u32]), 4)).collect();
+    let mut warm_tenants: Vec<FleetTenant> = reqs
+        .iter()
+        .map(|r| {
+            let (mut port, conn_id) = fleet_dial(&mut fleet);
+            let decision = fleet_plan_prefix(&mut fleet, &edge, &mut port, r);
+            assert!(
+                matches!(decision, PrefixDecision::Warm { .. }),
+                "req {}: probe against a resident store must stay warm",
+                r.id
+            );
+            let mut session = Session::for_edge(r.clone(), &edge, spec.edge_controller());
+            session.set_prefix_decision(decision);
+            FleetTenant { session, port, conn_id, up: None }
+        })
+        .collect();
+    assert_eq!(
+        fleet.scheduler().cloud().prefix_charged_bytes(),
+        charged,
+        "attaching sessions must never re-charge a shared prefix"
+    );
+    fleet_drive(&mut fleet, &edge, &mut warm_tenants);
+    for (t, req) in warm_tenants.iter().zip(&reqs) {
+        assert_eq!(
+            t.session.tokens(),
+            &cold_oracle(&eng, 2, 1, req)[..],
+            "req {} diverged when served warm over the fleet",
+            req.id
+        );
+    }
+
+    // Connection sweep: close everything — including a tenant whose
+    // probe pinned a refcount but whose prefill never shipped.
+    let (mut port, stillborn_conn) = fleet_dial(&mut fleet);
+    let stillborn = Request::new(520, shared_prompt(&[180]), 4);
+    let d = fleet_plan_prefix(&mut fleet, &edge, &mut port, &stillborn);
+    assert!(matches!(d, PrefixDecision::Warm { .. }));
+    assert!(fleet.scheduler().cloud().prefix_live_attachments() >= 1, "the probe never pinned");
+    fleet.close_connection(stillborn_conn);
+    for t in &tenants {
+        fleet.close_connection(t.conn_id);
+    }
+    for t in &warm_tenants {
+        fleet.close_connection(t.conn_id);
+    }
+    assert_eq!(
+        fleet.scheduler().cloud().prefix_live_attachments(),
+        0,
+        "the connection sweep leaked prefix refcounts"
+    );
+    assert_eq!(fleet.scheduler().live_sessions(), 0, "admission charges leaked");
+    assert_eq!(
+        fleet.scheduler().cloud().prefix_charged_bytes(),
+        charged,
+        "releasing refcounts must keep the shared rows resident (LRU owns eviction)"
+    );
+}
+
+/// Satellite (admission churn): a thousand probe-pin/abandon cycles —
+/// the canonical way a refcount could leak — leave ZERO outstanding
+/// attachments. Odd cycles recv the ack then vanish; even cycles close
+/// the connection with the ack still queued.
+#[test]
+fn thousand_probe_churn_cycles_leak_no_refcounts() {
+    let eng = engine();
+    let spec = warm_spec(2, 1);
+    let edge = spec.build_edge_device(eng.clone()).unwrap();
+    let cloud = spec.build_cloud_server(eng.clone()).unwrap();
+    let mut fleet = FleetServer::new(cloud, FleetConfig::default());
+
+    // Seed the store once so every later probe is a genuine hit (a pin).
+    let seed = Request::new(600, shared_prompt(&[190, 6]), 3);
+    let (mut port, conn_id) = fleet_dial(&mut fleet);
+    let decision = fleet_plan_prefix(&mut fleet, &edge, &mut port, &seed);
+    let mut session = Session::for_edge(seed.clone(), &edge, spec.edge_controller());
+    session.set_prefix_decision(decision);
+    let mut tenants = vec![FleetTenant { session, port, conn_id, up: None }];
+    fleet_drive(&mut fleet, &edge, &mut tenants);
+    fleet.close_connection(tenants[0].conn_id);
+    let charged = fleet.scheduler().cloud().prefix_charged_bytes();
+    assert!(charged > 0, "churn needs a resident digest to pin");
+    let PrefixDecision::Warm { digest, prefix_len } = edge.prefix_decision(&seed.prompt) else {
+        panic!("seeded edge cache must be warm")
+    };
+
+    for cycle in 0..1000u64 {
+        let (mut port, conn_id) = fleet_dial(&mut fleet);
+        let probe = splitserve::coordinator::PrefixProbe {
+            request_id: 10_000 + cycle,
+            digest,
+            prefix_len: prefix_len as u32,
+        };
+        port.send_prefix_probe(&probe).unwrap();
+        fleet.poll().unwrap();
+        if cycle % 2 == 1 {
+            let (ack, _) = port.recv_prefix_ack().unwrap();
+            assert!(ack.hit, "cycle {cycle}: resident digest must ack hit");
+        }
+        fleet.close_connection(conn_id);
+        assert_eq!(
+            fleet.scheduler().cloud().prefix_live_attachments(),
+            0,
+            "cycle {cycle}: abandoned probe pin leaked"
+        );
+    }
+    assert_eq!(fleet.scheduler().cloud().prefix_charged_bytes(), charged);
+    assert_eq!(fleet.scheduler().live_sessions(), 0);
+}
+
+// ---------------------------------------------------------------------------
+// Pool (sharded cloud): prefix-affinity placement, worker death.
+// ---------------------------------------------------------------------------
+
+struct PoolTenant {
+    session: Session,
+    port: EdgePort,
+    edge_id: u64,
+    up: Option<splitserve::channel::TransferOutcome>,
+}
+
+fn pool_connect(
+    pool: &mut CloudPool,
+    edge: &EdgeDevice,
+    spec: &DeploymentSpec,
+    req: &Request,
+) -> PoolTenant {
+    let (edge_half, pool_half) = Loopback::pair();
+    let edge_id = pool.add_edge(WireTransport::Loopback(pool_half));
+    PoolTenant {
+        session: Session::for_edge(req.clone(), edge, spec.edge_controller()),
+        port: EdgePort::new(WireTransport::Loopback(edge_half)),
+        edge_id,
+        up: None,
+    }
+}
+
+fn pool_step(pool: &mut CloudPool, edge: &EdgeDevice, t: &mut PoolTenant) -> usize {
+    if !t.session.is_terminal() && t.up.is_none() {
+        if let SessionAction::Transmit(p) = t.session.poll(edge).unwrap() {
+            t.up = Some(t.port.send_payload(&p).unwrap());
+        }
+    }
+    pool.poll().unwrap();
+    if t.session.is_terminal() {
+        return 0;
+    }
+    if let Some((reply, cloud_s, down)) = t.port.try_recv_reply().unwrap() {
+        let up = t.up.take().expect("reply without an in-flight payload");
+        t.session.on_reply(edge, &reply, cloud_s, up, down).unwrap();
+        return 1;
+    }
+    0
+}
+
+/// ACCEPTANCE (pool): the probe handshake routes through the pool,
+/// placement steers a warm session onto the worker already holding its
+/// prefix, the warm stream is bit-identical to the cold solo oracle —
+/// and a worker death right after the warm prefill drops that worker's
+/// refcounts with the ledger while the stream finishes exactly.
+#[test]
+fn pool_steers_warm_sessions_to_resident_workers_and_survives_death() {
+    let eng = engine();
+    let spec = warm_spec(2, 1);
+    let edge = spec.build_edge_device(eng.clone()).unwrap();
+    let fspec = spec.clone();
+    let feng = eng.clone();
+    let mut pool = CloudPool::new(
+        move || fspec.build_cloud_server(feng.clone()),
+        PoolConfig { workers: 2, seed: 0x9A7, ..PoolConfig::default() },
+    )
+    .unwrap();
+
+    // Cold seed: lands wherever placement likes; populates that worker's
+    // store and the (shared) edge cache.
+    let seed = Request::new(700, shared_prompt(&[210, 7]), 4);
+    let mut t = pool_connect(&mut pool, &edge, &spec, &seed);
+    t.session.set_prefix_decision(edge.prefix_decision(&seed.prompt));
+    let mut guard = 0usize;
+    while !t.session.is_terminal() {
+        guard += 1;
+        assert!(guard < 10_000, "seed drive did not converge");
+        pool_step(&mut pool, &edge, &mut t);
+    }
+    assert_eq!(t.session.tokens(), &cold_oracle(&eng, 2, 1, &seed)[..]);
+    let seed_digest = edge.prefix_decision(&seed.prompt).reference().unwrap().0;
+    let host = (0..2)
+        .find(|&i| pool.worker(i).cloud().prefix_resident(&seed_digest))
+        .expect("the seed insert populated no worker store");
+    pool.close_edge(t.edge_id);
+
+    // Warm tenant: probe over the pool wire; placement must steer it to
+    // the resident worker, and the stream must equal its cold oracle.
+    let req = Request::new(701, shared_prompt(&[211, 8, 9]), 6);
+    let mut t = pool_connect(&mut pool, &edge, &spec, &req);
+    let mut decision = edge.prefix_decision(&req.prompt);
+    let PrefixDecision::Warm { digest, prefix_len } = decision else {
+        panic!("edge cache must be warm after the seed, got {decision:?}")
+    };
+    let probe = splitserve::coordinator::PrefixProbe {
+        request_id: req.id,
+        digest,
+        prefix_len: prefix_len as u32,
+    };
+    t.port.send_prefix_probe(&probe).unwrap();
+    pool.poll().unwrap();
+    let (ack, _) = t.port.recv_prefix_ack().unwrap();
+    if !(ack.hit && ack.digest == digest) {
+        decision = PrefixDecision::Insert { digest, prefix_len };
+    }
+    assert!(matches!(decision, PrefixDecision::Warm { .. }), "pool probe lost the residency");
+    assert_eq!(
+        pool.placement_of(req.id).map(|p| p.worker),
+        Some(host),
+        "placement ignored prefix residency"
+    );
+    assert!(pool.stats.prefix_placements >= 1, "the steered pick was not counted");
+    t.session.set_prefix_decision(decision);
+
+    // Absorb the warm prefill, then kill the host: its ledger — and its
+    // store's refcounts — die with it; the stream continues on the
+    // respawned/other worker bit-identically (decode needs no prefix).
+    let mut absorbed = 0usize;
+    while absorbed < 1 {
+        guard += 1;
+        assert!(guard < 10_000, "warm prefill did not converge");
+        absorbed += pool_step(&mut pool, &edge, &mut t);
+    }
+    assert!(pool.prefix_attachments() >= 1, "the warm serve never pinned");
+    pool.kill_worker(host).unwrap();
+    assert_eq!(pool.prefix_attachments(), 0, "a dead worker's refcounts must die with it");
+    while !t.session.is_terminal() {
+        guard += 1;
+        assert!(guard < 10_000, "post-kill drive did not converge");
+        pool_step(&mut pool, &edge, &mut t);
+    }
+    assert_eq!(
+        t.session.tokens(),
+        &cold_oracle(&eng, 2, 1, &req)[..],
+        "warm pool stream diverged across the worker death"
+    );
+    pool.close_edge(t.edge_id);
+    assert_eq!(pool.live_sessions(), 0, "admission charges leaked");
+    assert_eq!(pool.placed_sessions(), 0, "placements leaked");
+    assert_eq!(pool.prefix_attachments(), 0, "prefix refcounts leaked");
+}

@@ -7,18 +7,29 @@
 use splitserve::adapt::Reconfig;
 use splitserve::coordinator::{
     reject, CloudReply, CompressedKv, CompressedTensor, CompressionConfig, MigrateState,
-    RejectFrame, Resume, ResumeAck, SamplingSpec, SplitPayload,
+    PrefixAck, PrefixProbe, PrefixRef, RejectFrame, Resume, ResumeAck, SamplingSpec, SplitPayload,
 };
+use splitserve::prefix::PrefixDigest;
 use splitserve::runtime::LayerKv;
 use splitserve::util::prop::run_cases;
 use splitserve::util::rng::Rng;
 use splitserve::wire::{
     crc32, decode_error_frame, decode_frame, decode_migrate_frame, decode_payload_frame,
-    decode_reconfig_frame, decode_reply_frame, decode_resume_ack_frame, decode_resume_frame,
-    encode_error_frame, encode_migrate_frame, encode_payload_frame, encode_reconfig_frame,
-    encode_reply_frame, encode_resume_ack_frame, encode_resume_frame, Loopback, Transport,
-    WireError, MIGRATE_OVERHEAD, PAYLOAD_OVERHEAD, RECONFIG_OVERHEAD, REPLY_OVERHEAD,
+    decode_prefix_ack_frame, decode_prefix_probe_frame, decode_reconfig_frame, decode_reply_frame,
+    decode_resume_ack_frame, decode_resume_frame, encode_error_frame, encode_migrate_frame,
+    encode_payload_frame, encode_prefix_ack_frame, encode_prefix_probe_frame,
+    encode_reconfig_frame, encode_reply_frame, encode_resume_ack_frame, encode_resume_frame,
+    Loopback, Transport, WireError, MIGRATE_OVERHEAD, PAYLOAD_OVERHEAD, PREFIX_OVERHEAD,
+    RECONFIG_OVERHEAD, REPLY_OVERHEAD,
 };
+
+fn random_digest(rng: &mut Rng) -> PrefixDigest {
+    let mut d = [0u8; 32];
+    for b in &mut d {
+        *b = rng.below(256) as u8;
+    }
+    PrefixDigest(d)
+}
 
 fn heavy_block(rng: &mut Rng, rows: usize, cols: usize) -> Vec<f32> {
     (0..rows * cols).map(|_| rng.heavy_tailed(1.0, 0.001, 150.0)).collect()
@@ -60,7 +71,25 @@ fn random_payload(rng: &mut Rng, c: &CompressionConfig, include_kv: bool, prefil
         kv,
         is_prefill: prefill,
         sampling,
+        prefix: None,
     }
+}
+
+/// A prefill payload carrying a wire-v7 prefix reference: warm (digest
+/// only) or insert (digest + the prefix's own compressed hidden block).
+fn random_prefix_payload(rng: &mut Rng, c: &CompressionConfig, insert: bool) -> SplitPayload {
+    let mut p = random_payload(rng, c, false, true);
+    let prefix_len = 1 + rng.below(64) as u32;
+    let ins = if insert {
+        let d = 16 + 8 * rng.below(8);
+        let rows = prefix_len as usize;
+        let t = heavy_block(rng, rows, d);
+        Some(CompressedTensor::compress(&t, rows, d, c))
+    } else {
+        None
+    };
+    p.prefix = Some(PrefixRef { digest: random_digest(rng), prefix_len, insert: ins });
+    p
 }
 
 #[test]
@@ -228,7 +257,9 @@ fn unknown_frame_kind_is_a_typed_error_not_a_panic() {
     let mut f = Vec::with_capacity(HEADER_BYTES + body.len() + 4);
     f.extend_from_slice(&MAGIC.to_le_bytes());
     f.push(VERSION);
-    f.push(42); // unknown kind (7 became Migrate in wire v6)
+    // 42 is safely clear of every claimed kind value (7 became Migrate
+    // in wire v6; 8/9 became PrefixProbe/PrefixAck in wire v7).
+    f.push(42);
     f.extend_from_slice(&(body.len() as u32).to_le_bytes());
     f.extend_from_slice(body);
     let crc = crc32(&f[4..]);
@@ -238,6 +269,8 @@ fn unknown_frame_kind_is_a_typed_error_not_a_panic() {
     assert!(matches!(decode_reply_frame(&f), Err(WireError::BadKind(42))));
     assert!(matches!(decode_reconfig_frame(&f), Err(WireError::BadKind(42))));
     assert!(matches!(decode_migrate_frame(&f), Err(WireError::BadKind(42))));
+    assert!(matches!(decode_prefix_probe_frame(&f), Err(WireError::BadKind(42))));
+    assert!(matches!(decode_prefix_ack_frame(&f), Err(WireError::BadKind(42))));
 }
 
 #[test]
@@ -606,7 +639,20 @@ fn random_migrate(rng: &mut Rng) -> MigrateState {
     } else {
         None
     };
-    MigrateState { request_id, epoch: 1 + rng.below(1 << 10) as u32, next_pos, fence, control }
+    // One migrate in three carries a prefix-store attachment (wire v7).
+    let prefix = if rng.below(3) == 0 {
+        Some((random_digest(rng), 1 + rng.below(64) as u32))
+    } else {
+        None
+    };
+    MigrateState {
+        request_id,
+        epoch: 1 + rng.below(1 << 10) as u32,
+        next_pos,
+        fence,
+        control,
+        prefix,
+    }
 }
 
 #[test]
@@ -656,6 +702,8 @@ fn corrupt_migrate_frames_rejected_never_panic() {
             include_kv: true,
             budget_cap: Reconfig::NO_BUDGET_CAP,
         }),
+        // The v7 prefix attachment joins the sweep too.
+        prefix: Some((PrefixDigest([0x5A; 32]), 4)),
     };
     let frame = encode_migrate_frame(&ms);
     for byte in 0..frame.len() {
@@ -699,6 +747,7 @@ fn migrate_cross_field_mismatches_are_typed_errors() {
         next_pos: 8,
         fence: Some((7, mk_reply_frame(11, 7))),
         control: None,
+        prefix: None,
     };
     assert!(
         matches!(decode_migrate_frame(&encode_migrate_frame(&ms)), Err(WireError::Malformed(_))),
@@ -730,6 +779,7 @@ fn migrate_cross_field_mismatches_are_typed_errors() {
             include_kv: true,
             budget_cap: Reconfig::NO_BUDGET_CAP,
         }),
+        prefix: None,
     };
     assert!(
         matches!(decode_migrate_frame(&encode_migrate_frame(&ms)), Err(WireError::Malformed(_))),
@@ -745,4 +795,224 @@ fn migrate_cross_field_mismatches_are_typed_errors() {
         decode_migrate_frame(&encode_payload_frame(&p)),
         Err(WireError::WrongKind { .. })
     ));
+}
+
+// ---------------------------------------------------------------------------
+// Wire v7 prefix frames (kinds 8/9) and the prefix-bearing payload: the
+// content-addressed prefill handshake obeys the full codec contract —
+// identity roundtrip, exact byte accounting, typed rejection of
+// corruption, truncation, kind confusion and cross-field mismatches. A
+// forged or garbled 32-byte prefix token must never decode into a
+// reference to a DIFFERENT cached prefix: the CRC catches every
+// single-bit flip, and structural validators catch the valid-CRC
+// forgery shapes below.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prefix_probe_and_ack_roundtrip_identity_and_size() {
+    run_cases(60, 0xFA, |case, rng| {
+        let probe = PrefixProbe {
+            request_id: rng.below(1 << 20) as u64,
+            digest: random_digest(rng),
+            prefix_len: 1 + rng.below(1 << 12) as u32,
+        };
+        let pf = encode_prefix_probe_frame(&probe);
+        assert_eq!(pf.len() as u64, probe.wire_bytes() + PREFIX_OVERHEAD, "case {case}");
+        assert_eq!(decode_prefix_probe_frame(&pf).expect("probe decodes"), probe, "case {case}");
+        let ack = PrefixAck {
+            request_id: probe.request_id,
+            digest: probe.digest,
+            hit: rng.below(2) == 0,
+        };
+        let af = encode_prefix_ack_frame(&ack);
+        assert_eq!(af.len() as u64, ack.wire_bytes() + PREFIX_OVERHEAD, "case {case}");
+        assert_eq!(decode_prefix_ack_frame(&af).unwrap(), ack, "case {case}");
+        // kind confusion between the two new frames is typed, both ways
+        assert!(matches!(decode_prefix_ack_frame(&pf), Err(WireError::WrongKind { .. })));
+        assert!(matches!(decode_prefix_probe_frame(&af), Err(WireError::WrongKind { .. })));
+        // every truncation fails (small fixed-size frames: sweep all cuts)
+        for cut in 0..pf.len() {
+            assert!(decode_prefix_probe_frame(&pf[..cut]).is_err(), "case {case}: cut {cut}");
+        }
+        for cut in 0..af.len() {
+            assert!(decode_prefix_ack_frame(&af[..cut]).is_err(), "case {case}: cut {cut}");
+        }
+    });
+}
+
+#[test]
+fn corrupt_prefix_frames_rejected_never_panic() {
+    // Full per-byte, per-bit sweep on both new frame kinds (fixed 44 /
+    // 41 byte bodies keep this cheap), plus trailing garbage.
+    let probe = PrefixProbe { request_id: 9, digest: PrefixDigest([0xA7; 32]), prefix_len: 12 };
+    let pf = encode_prefix_probe_frame(&probe);
+    for byte in 0..pf.len() {
+        for bit in 0..8 {
+            let mut bad = pf.clone();
+            bad[byte] ^= 1 << bit;
+            match decode_prefix_probe_frame(&bad) {
+                Err(_) => {}
+                Ok(got) => panic!(
+                    "probe flip at byte {byte} bit {bit} silently decoded (changed: {})",
+                    got != probe
+                ),
+            }
+        }
+    }
+    let ack = PrefixAck { request_id: 9, digest: PrefixDigest([0xA7; 32]), hit: true };
+    let af = encode_prefix_ack_frame(&ack);
+    for byte in 0..af.len() {
+        for bit in 0..8 {
+            let mut bad = af.clone();
+            bad[byte] ^= 1 << bit;
+            match decode_prefix_ack_frame(&bad) {
+                Err(_) => {}
+                Ok(got) => panic!(
+                    "ack flip at byte {byte} bit {bit} silently decoded (changed: {})",
+                    got != ack
+                ),
+            }
+        }
+    }
+    let mut padded = pf.clone();
+    padded.push(0x11);
+    assert!(decode_prefix_probe_frame(&padded).is_err(), "trailing garbage (probe)");
+    let mut padded = af.clone();
+    padded.push(0x22);
+    assert!(decode_prefix_ack_frame(&padded).is_err(), "trailing garbage (ack)");
+}
+
+#[test]
+fn hostile_prefix_frames_with_valid_crc_are_typed_errors() {
+    // The forgeries a CRC can NOT catch: structurally wrong frames
+    // re-sealed with a correct checksum. Frame layout: header 10 B
+    // (magic 4, version, kind, body-len u32), body, CRC-32 over
+    // everything after the magic.
+    let reseal = |f: &mut Vec<u8>| {
+        let n = f.len();
+        let crc = crc32(&f[4..n - 4]);
+        f[n - 4..].copy_from_slice(&crc.to_le_bytes());
+    };
+    // Probe with zero prefix_len (body: request_id u64, digest 32,
+    // prefix_len u32 at body[40..44] — in-frame offset 50..54).
+    let probe = PrefixProbe { request_id: 3, digest: PrefixDigest([1; 32]), prefix_len: 7 };
+    let mut bad = encode_prefix_probe_frame(&probe);
+    for b in &mut bad[50..54] {
+        *b = 0;
+    }
+    reseal(&mut bad);
+    assert!(
+        matches!(decode_prefix_probe_frame(&bad), Err(WireError::Malformed(_))),
+        "zero-length probe must be Malformed"
+    );
+    // Ack with unknown flag bits set (flags at body[40] — in-frame 50).
+    let ack = PrefixAck { request_id: 3, digest: PrefixDigest([1; 32]), hit: true };
+    let mut bad = encode_prefix_ack_frame(&ack);
+    bad[50] |= 0x40;
+    reseal(&mut bad);
+    assert!(
+        matches!(decode_prefix_ack_frame(&bad), Err(WireError::Malformed(_))),
+        "unknown ack flag bits must be Malformed"
+    );
+    // Both new kinds participate in kind confusion against the older
+    // planes, both directions.
+    let pf = encode_prefix_probe_frame(&probe);
+    assert!(matches!(decode_payload_frame(&pf), Err(WireError::WrongKind { .. })));
+    assert!(matches!(decode_reply_frame(&pf), Err(WireError::WrongKind { .. })));
+    assert!(matches!(decode_migrate_frame(&pf), Err(WireError::WrongKind { .. })));
+    let mut rng = Rng::new(0xFB);
+    let p = random_payload(&mut rng, &CompressionConfig::default(), false, true);
+    let payload_frame = encode_payload_frame(&p);
+    assert!(matches!(decode_prefix_probe_frame(&payload_frame), Err(WireError::WrongKind { .. })));
+    assert!(matches!(decode_prefix_ack_frame(&payload_frame), Err(WireError::WrongKind { .. })));
+}
+
+#[test]
+fn prefix_bearing_payload_roundtrip_identity_and_size() {
+    // Warm (digest-only reference: 36 extra wire bytes) and insert
+    // (reference plus the prefix's own compressed block) prefill
+    // payloads obey the exact byte accounting the data plane promises.
+    run_cases(40, 0xFC, |case, rng| {
+        let c = CompressionConfig {
+            tau: [0.0f32, 1.0, 5.0][rng.below(3)],
+            q_bar: 2 + rng.below(8) as u32,
+            delta: [0.0, 0.2, 1.0][rng.below(3)],
+            use_rans: rng.below(2) == 0,
+        };
+        let p = random_prefix_payload(rng, &c, rng.below(2) == 0);
+        let frame = encode_payload_frame(&p);
+        assert_eq!(
+            frame.len() as u64,
+            p.wire_bytes() + PAYLOAD_OVERHEAD,
+            "case {case}: prefix payload frame length must be wire_bytes + overhead"
+        );
+        let back = decode_payload_frame(&frame).expect("well-formed prefix payload decodes");
+        assert_eq!(back, p, "case {case}: decode must invert encode exactly");
+    });
+}
+
+#[test]
+fn hostile_prefix_payload_shapes_with_valid_crc_are_typed_errors() {
+    // Payload body layout: request_id u64 [0..8], pos u64 [8..16], flags
+    // u8 [16], then (prefix present) digest [17..49], prefix_len u32
+    // [49..53]; the frame header is 10 bytes, so in-frame: flags at 26,
+    // prefix_len at 59..63.
+    let reseal = |f: &mut Vec<u8>| {
+        let n = f.len();
+        let crc = crc32(&f[4..n - 4]);
+        f[n - 4..].copy_from_slice(&crc.to_le_bytes());
+    };
+    let mut rng = Rng::new(0xFD);
+    let c = CompressionConfig::default();
+    let p = random_prefix_payload(&mut rng, &c, false);
+    let frame = encode_payload_frame(&p);
+
+    // Zero prefix_len behind a valid CRC.
+    let mut bad = frame.clone();
+    for b in &mut bad[59..63] {
+        *b = 0;
+    }
+    reseal(&mut bad);
+    assert!(
+        matches!(decode_payload_frame(&bad), Err(WireError::Malformed(_))),
+        "zero prefix_len must be Malformed"
+    );
+    // Prefix reference on a NON-prefill payload (clear the prefill bit).
+    let mut bad = frame.clone();
+    bad[26] &= !1; // FLAG_PREFILL
+    reseal(&mut bad);
+    assert!(
+        matches!(decode_payload_frame(&bad), Err(WireError::Malformed(_))),
+        "prefix on a decode payload must be Malformed"
+    );
+    // Insert flag without the prefix flag itself.
+    let plain = random_payload(&mut rng, &c, false, true);
+    let mut bad = encode_payload_frame(&plain);
+    bad[26] |= 1 << 4; // FLAG_PREFIX_INSERT without FLAG_PREFIX
+    reseal(&mut bad);
+    assert!(
+        matches!(decode_payload_frame(&bad), Err(WireError::Malformed(_))),
+        "insert flag without a prefix reference must be Malformed"
+    );
+}
+
+#[test]
+fn corrupt_prefix_payload_token_never_misdecodes() {
+    // The 32-byte prefix token rides inside the payload frame: a single
+    // bit flip ANYWHERE in the digest region (in-frame bytes 27..59)
+    // must be rejected by the CRC — never decoded into a reference to a
+    // different cached prefix.
+    let mut rng = Rng::new(0xFE);
+    let p = random_prefix_payload(&mut rng, &CompressionConfig::default(), false);
+    let frame = encode_payload_frame(&p);
+    for byte in 27..59 {
+        for bit in 0..8 {
+            let mut bad = frame.clone();
+            bad[byte] ^= 1 << bit;
+            assert!(
+                decode_payload_frame(&bad).is_err(),
+                "digest flip at byte {byte} bit {bit} must be rejected"
+            );
+        }
+    }
 }

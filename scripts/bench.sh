@@ -53,7 +53,15 @@ BENCH_JSON="$FLEET_JSON" cargo bench --bench fleet "$@"
 POOL_JSON="${BENCH_POOL_JSON:-BENCH_pool.json}"
 BENCH_JSON="$POOL_JSON" cargo bench --bench pool "$@"
 
-for f in "$BENCH_JSON" "$ENGINE_JSON" "$WIRE_JSON" "$ADAPT_JSON" "$CHAOS_JSON" "$FLEET_JSON" "$POOL_JSON"; do
+# Content-addressed prefix KV cache: cold vs warm TTFT (p50/p95), prefill
+# wire bytes vs prefix share, and the edge hit rate under a diurnal
+# trace. The binary ASSERTS bit-identity (every warm stream equals its
+# caching-off oracle), the ≥50%-share wire-byte win, and zero leaked
+# refcounts — a panic fails this script.
+PREFIX_JSON="${BENCH_PREFIX_JSON:-BENCH_prefix.json}"
+BENCH_JSON="$PREFIX_JSON" cargo bench --bench prefix "$@"
+
+for f in "$BENCH_JSON" "$ENGINE_JSON" "$WIRE_JSON" "$ADAPT_JSON" "$CHAOS_JSON" "$FLEET_JSON" "$POOL_JSON" "$PREFIX_JSON"; do
     if [ -f "$f" ]; then
         echo "--- $f ---"
         cat "$f"

@@ -16,7 +16,9 @@ cd "$(dirname "$0")/.."
 
 # `scripts/chaos.sh --pool` additionally runs the cloud-pool robustness
 # suite (worker kill storms, live migration at every decode step, drain/
-# rebalance) and the pool bench in release mode.
+# rebalance, bit-flips mid-frame into the worker-to-worker Migrate
+# handoff, placement under corrupted headroom telemetry) plus the
+# prefix-cache property suite and the pool bench in release mode.
 POOL=0
 if [ "${1:-}" = "--pool" ]; then
     POOL=1
@@ -28,8 +30,10 @@ echo "chaos sweep: CHAOS_SEEDS=$CHAOS_SEEDS"
 cargo test --release --test chaos -- "$@"
 
 if [ "$POOL" = 1 ]; then
-    echo "pool chaos: kill storms, migration sweep, drain/rebalance"
+    echo "pool chaos: kill storms, migration sweep, drain/rebalance, frame faults"
     cargo test --release --test pool -- "$@"
+    echo "prefix properties: warm==cold bit-identity, typed misses, refcount hygiene"
+    cargo test --release --test prefix -- "$@"
     POOL_JSON="${BENCH_POOL_JSON:-BENCH_pool.json}"
     BENCH_JSON="$POOL_JSON" cargo bench --bench pool
     if [ -f "$POOL_JSON" ]; then
