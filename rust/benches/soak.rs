@@ -1,0 +1,126 @@
+//! Soak bench: one long-horizon virtual-time scenario — diurnal churn,
+//! rolling restarts, drains and chaos over an asymmetric multi-region
+//! pool — reported as `BENCH_soak.json`.
+//!
+//! Unlike the timing benches this one reports *correctness under churn*:
+//! the audit pass bits (leak residue, drift checks/violations), the
+//! session/token throughput of the scenario, and the per-region p95
+//! time-to-token spread the RegionProfile asymmetry produces. The run
+//! ABORTS (non-zero exit) if either audit comes back dirty — CI treats
+//! this binary as the long-horizon regression gate.
+//!
+//! `BENCH_SMOKE=1` shrinks the horizon to CI size (~10 simulated
+//! minutes); the default is the 2-simulated-hour scenario from the
+//! acceptance criteria.
+
+use std::rc::Rc;
+use std::sync::Arc;
+
+use splitserve::coordinator::DeploymentSpec;
+use splitserve::model::ModelConfig;
+use splitserve::obs::{soak, RegionProfile, Registry, SoakConfig};
+use splitserve::runtime::Engine;
+use splitserve::util::bench::JsonReport;
+
+fn main() -> anyhow::Result<()> {
+    let smoke = std::env::var("BENCH_SMOKE").is_ok();
+    let mut cfg = ModelConfig::sim7b();
+    cfg.n_layers = 2;
+    let eng = Rc::new(Engine::load("artifacts", &cfg).expect("run `make artifacts`"));
+    let spec = DeploymentSpec::defaults(cfg, 1).with_prefix_cache(32 * 1024 * 1024);
+
+    let minutes = if smoke { 10.0 } else { 120.0 };
+    let mut scfg = SoakConfig::default().with_horizon_minutes(minutes);
+    scfg.workers = if smoke { 3 } else { 4 };
+    scfg.regions = vec![
+        RegionProfile::local(),
+        RegionProfile::preset("us-east").unwrap(),
+        RegionProfile::preset("ap-south").unwrap(),
+    ];
+    scfg.max_sessions = if smoke { 80 } else { 600 };
+    // Stretch arrivals across the horizon so restarts/drains/chaos all
+    // land mid-traffic (cadences scaled to the smoke horizon).
+    scfg.period_s = if smoke { 300.0 } else { 3600.0 };
+    scfg.peak_rate = if smoke { 0.5 } else { 0.2 };
+    scfg.trough_rate = if smoke { 0.1 } else { 0.04 };
+    if smoke {
+        scfg.restart_every_s = 70.0;
+        scfg.drain_every_s = 110.0;
+        scfg.chaos_every_s = 150.0;
+    }
+    // Tight per-worker budgets: placement pressure spills sessions onto
+    // the far regions, which is what makes the p95 spread observable.
+    scfg.sessions_per_worker = Some(3);
+
+    let reg = Arc::new(Registry::new());
+    let out = soak::run(eng, &spec, &scfg, reg.clone())?;
+
+    println!(
+        "soak: {:.0} sim s in {:.1} wall s — {} sessions, {} completed, {} typed-failed, \
+         {} tokens",
+        out.sim_s, out.wall_s, out.sessions, out.completed, out.failed_typed, out.tokens
+    );
+    println!(
+        "churn: {} kills | {} drains | {} migrations | {} events",
+        out.kills, out.drains, out.migrations, out.events_total
+    );
+    for (name, p95) in &out.region_p95_ms {
+        println!("region {name}: p95 time-to-token {p95} ms");
+    }
+    println!(
+        "audits: leak residue {} | drift {} stream + {} reconcile checks, {} violations",
+        out.leak.total(),
+        out.drift_stream_checks,
+        out.drift_reconcile_checks,
+        out.drift_violations
+    );
+    for d in &out.drift_details {
+        eprintln!("drift: {d}");
+    }
+
+    let mut report = JsonReport::new();
+    report.add_metric("sim_s", out.sim_s);
+    report.add_metric("wall_s", out.wall_s);
+    report.add_metric("sessions", out.sessions as f64);
+    report.add_metric("completed", out.completed as f64);
+    report.add_metric("failed_typed", out.failed_typed as f64);
+    report.add_metric("tokens", out.tokens as f64);
+    report.add_metric("kills", out.kills as f64);
+    report.add_metric("drains", out.drains as f64);
+    report.add_metric("migrations", out.migrations as f64);
+    report.add_metric("events_total", out.events_total as f64);
+    report.add_metric("leak_audit_pass", if out.leak.clean() { 1.0 } else { 0.0 });
+    report.add_metric("leak_residue", out.leak.total() as f64);
+    report.add_metric("drift_audit_pass", if out.drift_violations == 0 { 1.0 } else { 0.0 });
+    report.add_metric("drift_stream_checks", out.drift_stream_checks as f64);
+    report.add_metric("drift_reconcile_checks", out.drift_reconcile_checks as f64);
+    report.add_metric("drift_violations", out.drift_violations as f64);
+    let mut spread_min = u64::MAX;
+    let mut spread_max = 0u64;
+    for (name, p95) in &out.region_p95_ms {
+        report.add_metric(&format!("region_p95_ms_{name}"), *p95 as f64);
+        spread_min = spread_min.min(*p95);
+        spread_max = spread_max.max(*p95);
+    }
+    if out.region_p95_ms.len() >= 2 {
+        let spread = spread_max.saturating_sub(spread_min);
+        report.add_metric("region_p95_spread_ms", spread as f64);
+        // The asymmetry must be visible: a far/thin region's p95 above
+        // the local one's. A zero spread means the latency model or the
+        // placement spill broke.
+        anyhow::ensure!(spread > 0, "multi-region p95 spread collapsed to zero");
+    }
+
+    let path = std::env::var("BENCH_JSON").unwrap_or_else(|_| "BENCH_soak.json".to_string());
+    report.write(&path)?;
+    println!("wrote {path}");
+
+    anyhow::ensure!(
+        out.passed(),
+        "soak FAILED: leak residue {} / drift violations {}",
+        out.leak.total(),
+        out.drift_violations
+    );
+    println!("soak PASSED: both audits clean");
+    Ok(())
+}

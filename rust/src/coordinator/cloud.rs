@@ -17,7 +17,6 @@
 //! serving each payload alone (pinned by `tests/session_serve.rs`).
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Instant;
 
@@ -30,6 +29,7 @@ use super::protocol::{
 };
 use super::sampling::{self, sample};
 use crate::adapt::Reconfig;
+use crate::obs::{Counter, Registry};
 use crate::prefix::{PrefixDigest, PrefixKv, PrefixStore, PrefixStoreStats};
 use crate::quant::ScratchPool;
 use crate::runtime::{LayerKv, NodeRuntime};
@@ -76,11 +76,12 @@ pub struct CloudServer {
     /// Back segment (layers split..L) + lm head, full precision.
     pub node: NodeRuntime,
     pub profile: DeviceProfile,
-    /// Tokens served (for Fig. 5(b) accounting); atomic so `handle` stays
-    /// `&self` under many-to-one sharing.
-    tokens_generated: AtomicU64,
+    /// Tokens served (for Fig. 5(b) accounting); an obs counter so
+    /// `handle` stays `&self` under many-to-one sharing and the value
+    /// exports to the metrics registry without extra glue.
+    tokens_generated: Counter,
     /// Tokens served through the stacked (B >= 2) decode path.
-    tokens_stacked: AtomicU64,
+    tokens_stacked: Counter,
     /// Decompression scratch (rANS slot-lookup table, code buffers),
     /// reused across requests and KV layers.
     pub scratch: ScratchPool,
@@ -96,7 +97,7 @@ pub struct CloudServer {
     /// `&self` under many-to-one sharing.
     control: Mutex<HashMap<u64, Reconfig>>,
     /// Reconfigurations applied over the life of the server.
-    reconfigs_applied: AtomicU64,
+    reconfigs_applied: Counter,
     /// Resumption fence: the highest resume epoch accepted per request.
     /// OUTLIVES connections (unlike `control`) — a delayed duplicate
     /// `Resume` from a dead connection must be rejectable after the live
@@ -114,12 +115,12 @@ impl CloudServer {
         CloudServer {
             node,
             profile,
-            tokens_generated: AtomicU64::new(0),
-            tokens_stacked: AtomicU64::new(0),
+            tokens_generated: Counter::new(),
+            tokens_stacked: Counter::new(),
             scratch: ScratchPool::new(),
             stacked: true,
             control: Mutex::new(HashMap::new()),
-            reconfigs_applied: AtomicU64::new(0),
+            reconfigs_applied: Counter::new(),
             resume_epochs: Mutex::new(HashMap::new()),
             prefix: Mutex::new(PrefixStore::new(0)),
         }
@@ -147,6 +148,12 @@ impl CloudServer {
     /// sessions attach.
     pub fn prefix_charged_bytes(&self) -> u64 {
         self.prefix_store().charged_bytes()
+    }
+
+    /// The prefix store's byte budget (0 = prefix caching disabled).
+    /// The leak audit checks `charged ≤ budget` on every worker.
+    pub fn prefix_budget_bytes(&self) -> u64 {
+        self.prefix_store().budget_bytes()
     }
 
     /// Outstanding request→prefix attachments (leak audits: must return
@@ -204,20 +211,32 @@ impl CloudServer {
     }
 
     /// Tokens served over the life of the server (all sessions).
+    /// Deprecated shim — the value now lives on the obs counters; prefer
+    /// [`CloudServer::export_metrics`] for registry-wide exposition.
     pub fn tokens_generated(&self) -> u64 {
-        self.tokens_generated.load(Ordering::Relaxed)
+        self.tokens_generated.get()
     }
 
     /// Tokens served through the stacked decode path (observability for
-    /// tests and the engine bench).
+    /// tests and the engine bench). Deprecated shim over the obs counter.
     pub fn tokens_stacked(&self) -> u64 {
-        self.tokens_stacked.load(Ordering::Relaxed)
+        self.tokens_stacked.get()
     }
 
     /// Control-plane reconfigurations applied over the life of the
     /// server (observability for tests and the adaptation bench).
+    /// Deprecated shim over the obs counter.
     pub fn reconfigs_applied(&self) -> u64 {
-        self.reconfigs_applied.load(Ordering::Relaxed)
+        self.reconfigs_applied.get()
+    }
+
+    /// Mirror this server's counters into an obs registry (`cloud_*`
+    /// counters plus the `prefix_store_*` family).
+    pub fn export_metrics(&self, reg: &Registry) {
+        reg.counter("cloud_tokens_generated").set(self.tokens_generated.get());
+        reg.counter("cloud_tokens_stacked").set(self.tokens_stacked.get());
+        reg.counter("cloud_reconfigs_applied").set(self.reconfigs_applied.get());
+        reg.publish(&self.prefix_stats());
     }
 
     /// Live control-plane entries (announced sessions not yet retired).
@@ -245,7 +264,7 @@ impl CloudServer {
             }
         }
         control.insert(rc.request_id, *rc);
-        self.reconfigs_applied.fetch_add(1, Ordering::Relaxed);
+        self.reconfigs_applied.inc();
     }
 
     /// Hold an arriving payload to its session's announced settings: no
@@ -391,7 +410,7 @@ impl CloudServer {
         self.check_control(payload)?;
         let reply = self.serve_payload(payload)?;
         self.retire_control(payload.request_id, &reply);
-        self.tokens_generated.fetch_add(1, Ordering::Relaxed);
+        self.tokens_generated.inc();
         let compute_s = self.profile.scale(t0.elapsed().as_secs_f64());
         Ok((reply, compute_s))
     }
@@ -680,8 +699,8 @@ impl CloudServer {
             self.node.decode_batch(&mut hs, &mut cache_refs, &positions)?;
         }
         let logits = self.node.logits_decode_batch(&hs, b)?;
-        self.tokens_generated.fetch_add(b as u64, Ordering::Relaxed);
-        self.tokens_stacked.fetch_add(b as u64, Ordering::Relaxed);
+        self.tokens_generated.add(b as u64);
+        self.tokens_stacked.add(b as u64);
         let wall_s = self.profile.scale(t0.elapsed().as_secs_f64());
         let per_payload_s = wall_s / b as f64;
         let out: Vec<(CloudReply, f64)> = stacked

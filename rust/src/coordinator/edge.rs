@@ -166,22 +166,30 @@ impl EdgeDevice {
         }
     }
 
-    /// Pick this prompt's prefix-cache engagement: the longest cacheable
-    /// chunk boundary, `Warm` if the edge already holds it, `Insert`
-    /// otherwise, `Off` when nothing is cacheable or the cache is off.
+    /// Pick this prompt's prefix-cache engagement. Chunk boundaries are
+    /// probed **longest-first for residency**: when the longest boundary
+    /// misses but a shorter one is already cached, the shorter warm
+    /// match wins over a cold insert of the longest (a 2-chunk prompt
+    /// sharing its first chunk with a hot prefix reuses that chunk
+    /// instead of prefetching both from scratch). Only a fully cold
+    /// prompt inserts — at the LONGEST boundary, so the cache learns the
+    /// widest reusable prefix. `Off` when nothing is cacheable or the
+    /// cache is disabled.
     pub fn prefix_decision(&self, prompt: &[u32]) -> PrefixDecision {
         let mut cache = self.prefix_cache.borrow_mut();
         if !cache.enabled() {
             return PrefixDecision::Off;
         }
         let plan = self.prefix_plan();
-        let Some(&(prefix_len, digest)) = prefix_candidates(prompt, &plan).last() else {
-            return PrefixDecision::Off;
-        };
-        if cache.contains(&digest) {
-            PrefixDecision::Warm { digest, prefix_len }
-        } else {
-            PrefixDecision::Insert { digest, prefix_len }
+        let cands = prefix_candidates(prompt, &plan);
+        for &(prefix_len, digest) in cands.iter().rev() {
+            if cache.contains(&digest) {
+                return PrefixDecision::Warm { digest, prefix_len };
+            }
+        }
+        match cands.last() {
+            Some(&(prefix_len, digest)) => PrefixDecision::Insert { digest, prefix_len },
+            None => PrefixDecision::Off,
         }
     }
 

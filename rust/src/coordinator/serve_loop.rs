@@ -202,6 +202,37 @@ impl ServeLoop {
         ServeLoop { cloud, edges, router, params, controller: None, adapt: None }
     }
 
+    /// Mirror a finished run's counters into an obs registry: `serve_*`
+    /// counters/gauges from the report, the `serve_latency_us` histogram,
+    /// the shared cloud's `cloud_*`/`prefix_store_*` family, and the
+    /// per-edge prefix cache totals. This is what `--metrics PATH` on the
+    /// serve modes snapshots.
+    pub fn export_metrics(&self, reg: &crate::obs::Registry, report: &ServeReport) {
+        reg.counter("serve_total_tokens").set(report.total_tokens);
+        reg.counter("serve_iterations").set(report.iterations);
+        reg.counter("serve_cancelled").set(report.cancelled);
+        reg.counter("serve_failed").set(report.failed);
+        reg.counter("serve_reconfigs").set(report.reconfigs);
+        reg.counter("serve_replans").set(report.replans);
+        reg.counter("serve_control_bytes").set(report.control_bytes);
+        reg.counter("serve_results").set(report.results.len() as u64);
+        reg.gauge("serve_peak_batch").set(report.peak_batch as i64);
+        reg.gauge("serve_clock_us").set((report.clock_s * 1e6) as i64);
+        reg.gauge("serve_server_busy_us").set((report.server_busy_s * 1e6) as i64);
+        let lat = reg.histogram("serve_latency_us");
+        for &s in &report.latencies_s {
+            lat.record((s * 1e6).max(1.0) as u64);
+        }
+        self.cloud.export_metrics(reg);
+        let mut edge_totals: std::collections::BTreeMap<&'static str, u64> =
+            std::collections::BTreeMap::new();
+        for ep in &self.edges {
+            let stats = ep.edge.prefix_cache.borrow().stats;
+            crate::obs::accumulate(&mut edge_totals, &stats);
+        }
+        reg.publish_totals(&edge_totals);
+    }
+
     fn least_loaded_device(&self) -> usize {
         self.router
             .devices

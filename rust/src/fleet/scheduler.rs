@@ -114,6 +114,29 @@ pub struct FleetStats {
     pub imported: u64,
 }
 
+impl crate::obs::MetricSource for FleetStats {
+    /// `fleet_*` counters for the obs registry. `peak_batch` is excluded:
+    /// it is a high-water mark, not a monotone counter — the pool mirrors
+    /// it as the `fleet_peak_batch` gauge instead.
+    fn metrics(&self) -> Vec<(&'static str, u64)> {
+        vec![
+            ("fleet_payloads_served", self.payloads_served),
+            ("fleet_batches", self.batches),
+            ("fleet_replayed", self.replayed),
+            ("fleet_stale_rejected", self.stale_rejected),
+            ("fleet_admission_rejected", self.admission_rejected),
+            ("fleet_deduped", self.deduped),
+            ("fleet_reconfigs", self.reconfigs),
+            ("fleet_resumes", self.resumes),
+            ("fleet_closed_conns", self.closed_conns),
+            ("fleet_failed", self.failed),
+            ("fleet_idle_swept", self.idle_swept),
+            ("fleet_exported", self.exported),
+            ("fleet_imported", self.imported),
+        ]
+    }
+}
+
 /// How a connection's frames reach the scheduler.
 enum ConnMode {
     /// In-process transport swept by [`FleetScheduler::poll_connections`];

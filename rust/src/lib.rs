@@ -11,6 +11,7 @@ pub mod runtime;
 pub mod coordinator;
 pub mod eval;
 pub mod fleet;
+pub mod obs;
 pub mod pool;
 pub mod trace;
 pub mod util;

@@ -9,7 +9,13 @@
 //!   cloud     run the cloud half as a standalone frame server (socket)
 //!   edge      run the edge half against a remote cloud (socket)
 //!   pool      sharded cloud pool demo: placement, worker kills, failover
+//!   soak      long-horizon virtual-time soak with leak + drift audits
+//!   bench-summary  aggregate BENCH_*.json into BENCH_summary.json
 //!   sweep     τ x Q̄a payload sweep on a captured hidden block
+//!
+//! Every serving mode accepts `--metrics PATH`: on exit it writes a JSON
+//! snapshot of the obs registry to PATH and a Prometheus text rendering
+//! to PATH.prom.
 
 use std::rc::Rc;
 use std::time::Duration;
@@ -23,6 +29,7 @@ use splitserve::coordinator::{
 };
 use splitserve::fleet::{serve_listener, FleetConfig, FleetServer};
 use splitserve::model::ModelConfig;
+use splitserve::obs::{self, RegionProfile, Registry, SoakConfig};
 use splitserve::planner::{plan, AnalyticAccuracyModel, PlanChoice, PlanInputs};
 use splitserve::pool::{CloudPool, PoolConfig};
 use splitserve::runtime::Engine;
@@ -74,7 +81,20 @@ USAGE: splitserve <subcommand> [flags]
              of fleet workers, kills --kill workers mid-stream, and
              asserts every stream recovered bit-identically with zero
              leaked charges, fences, or placements — the CI pool smoke)
+  soak      --minutes 120 --workers 4 [--regions local,us-east,eu-west,ap-south
+            --sessions 4000 --seed S --tick-ms 100 --restart-every-s 600
+            --drain-every-s 870 --chaos-every-s 1130 --prefix-cache-mb 8
+            --model sim7b --layers 8 --split 4]
+            (virtual-time long-horizon soak: diurnal churn + rolling
+             restarts + drains + chaos over a multi-region pool; exits
+             non-zero unless BOTH the leak and drift audits are clean)
+  bench-summary  [--dir . --out BENCH_summary.json]
+            (aggregate every BENCH_*.json in --dir into one summary)
   sweep     (see examples/compression_sweep for the richer version)
+
+Serving modes (generate, serve, cloud, edge, pool, soak) also accept
+  --metrics PATH   write a JSON metrics snapshot to PATH and Prometheus
+                   text to PATH.prom on exit
 ";
 
 fn prompt_from(args: &Args) -> Vec<u32> {
@@ -88,6 +108,34 @@ fn prompt_from(args: &Args) -> Vec<u32> {
 /// caching entirely: payloads are byte-identical to the pre-v7 wire.
 fn prefix_cache_bytes(args: &Args) -> u64 {
     args.usize_or("prefix-cache-mb", 0) as u64 * 1024 * 1024
+}
+
+/// `--metrics PATH` → write the registry's JSON snapshot to PATH and its
+/// Prometheus text rendering to PATH.prom. No flag, no files.
+fn maybe_write_metrics(args: &Args, reg: &Registry) -> Result<()> {
+    if let Some(path) = args.flag("metrics") {
+        obs::write_metrics(reg, path)?;
+        println!("metrics: wrote {path} and {path}.prom");
+    }
+    Ok(())
+}
+
+/// `--regions a,b,c` → profiles (defaults to `base` when absent).
+fn regions_from(args: &Args, base: Vec<RegionProfile>) -> Result<Vec<RegionProfile>> {
+    match args.flag("regions") {
+        None => Ok(base),
+        Some(list) => list
+            .split(',')
+            .map(|n| {
+                let n = n.trim();
+                RegionProfile::preset(n).ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "unknown region '{n}' (try: local, us-east, us-west, eu-west, ap-south)"
+                    )
+                })
+            })
+            .collect(),
+    }
 }
 
 /// Shared result printout of the one-request drivers (`generate`, `edge`).
@@ -198,6 +246,10 @@ fn main() -> Result<()> {
             let mut pipe = build_pipeline(engine, &spec)?;
             let res = pipe.generate(&Request::new(1, prompt, max_new))?;
             print_generation(&res);
+            let reg = Registry::new();
+            reg.counter("serve_total_tokens").set(res.tokens.len() as u64);
+            pipe.cloud.export_metrics(&reg);
+            maybe_write_metrics(&args, &reg)?;
         }
         Some("serve") => {
             let cfg = model_from(&args)?;
@@ -278,6 +330,9 @@ fn main() -> Result<()> {
                     serve.cloud.reconfigs_applied()
                 );
             }
+            let reg = Registry::new();
+            serve.export_metrics(&reg, &report);
+            maybe_write_metrics(&args, &reg)?;
         }
         Some("cloud") => {
             let cfg = model_from(&args)?;
@@ -295,6 +350,9 @@ fn main() -> Result<()> {
                 let mut conn = listener.accept()?;
                 let n = cloud.serve_connection(&mut conn)?;
                 println!("cloud: served {n} payloads, exiting (--once)");
+                let reg = Registry::new();
+                cloud.export_metrics(&reg);
+                maybe_write_metrics(&args, &reg)?;
             } else {
                 // Fleet mode: accept thread + one scheduler thread serving
                 // every connection concurrently with cross-connection
@@ -320,6 +378,10 @@ fn main() -> Result<()> {
                 );
                 let stop = std::sync::atomic::AtomicBool::new(false); // runs until killed
                 serve_listener(listener, &mut fleet, fault_seed, &stop)?;
+                let reg = Registry::new();
+                reg.publish(&fleet.stats());
+                fleet.scheduler().cloud().export_metrics(&reg);
+                maybe_write_metrics(&args, &reg)?;
             }
         }
         Some("edge") => {
@@ -354,6 +416,11 @@ fn main() -> Result<()> {
                 client.generate(&req)?
             };
             print_generation(&res);
+            let reg = Registry::new();
+            reg.counter("serve_total_tokens").set(res.tokens.len() as u64);
+            let edge_stats = client.edge.prefix_cache.borrow().stats;
+            reg.publish(&edge_stats);
+            maybe_write_metrics(&args, &reg)?;
         }
         Some("pool") => {
             let cfg = model_from(&args)?;
@@ -465,6 +532,96 @@ fn main() -> Result<()> {
             println!(
                 "pool stats: placed {} | kills {} | failovers {} | migrations {} | replies {}",
                 s.placed, s.kills, s.failovers, s.migrations, s.replies_forwarded
+            );
+            pool.publish_metrics();
+            maybe_write_metrics(&args, pool.obs())?;
+        }
+        Some("soak") => {
+            let cfg = model_from(&args)?;
+            let split = args.usize_or("split", cfg.n_layers / 2);
+            let engine = Rc::new(Engine::load("artifacts", &cfg)?);
+            let mut spec = DeploymentSpec::defaults(cfg, split);
+            spec.prefix_cache_bytes = args.usize_or("prefix-cache-mb", 8) as u64 * 1024 * 1024;
+            let mut scfg =
+                SoakConfig::default().with_horizon_minutes(args.f64_or("minutes", 120.0));
+            scfg.workers = args.usize_or("workers", scfg.workers);
+            scfg.seed = args.u64_or("seed", scfg.seed);
+            scfg.tick_ms = args.u64_or("tick-ms", scfg.tick_ms);
+            scfg.max_sessions = args.usize_or("sessions", scfg.max_sessions);
+            scfg.restart_every_s = args.f64_or("restart-every-s", scfg.restart_every_s);
+            scfg.drain_every_s = args.f64_or("drain-every-s", scfg.drain_every_s);
+            scfg.chaos_every_s = args.f64_or("chaos-every-s", scfg.chaos_every_s);
+            scfg.regions = regions_from(&args, scfg.regions)?;
+            let reg = std::sync::Arc::new(Registry::new());
+            let out = splitserve::obs::soak::run(engine, &spec, &scfg, reg.clone())?;
+            println!(
+                "soak: {:.0} simulated s in {:.1} wall s — {} sessions ({} completed, \
+                 {} typed-failed), {} tokens",
+                out.sim_s, out.wall_s, out.sessions, out.completed, out.failed_typed, out.tokens
+            );
+            println!(
+                "churn: {} kills | {} drains | {} migrations | {} events",
+                out.kills, out.drains, out.migrations, out.events_total
+            );
+            for (name, p95) in &out.region_p95_ms {
+                println!("region {name}: p95 time-to-token {p95} ms");
+            }
+            println!(
+                "audits: leak {} (residue {}) | drift {} ({} stream + {} reconcile checks, \
+                 {} violations)",
+                if out.leak.clean() { "CLEAN" } else { "DIRTY" },
+                out.leak.total(),
+                if out.drift_violations == 0 { "CLEAN" } else { "DIRTY" },
+                out.drift_stream_checks,
+                out.drift_reconcile_checks,
+                out.drift_violations
+            );
+            for d in &out.drift_details {
+                eprintln!("drift: {d}");
+            }
+            maybe_write_metrics(&args, &reg)?;
+            anyhow::ensure!(
+                out.passed(),
+                "soak FAILED: leak residue {} / drift violations {}",
+                out.leak.total(),
+                out.drift_violations
+            );
+            println!("soak PASSED: both audits clean");
+        }
+        Some("bench-summary") => {
+            let dir = args.str_or("dir", ".");
+            let out_name = args.str_or("out", "BENCH_summary.json");
+            let mut benches: std::collections::BTreeMap<String, String> =
+                std::collections::BTreeMap::new();
+            for entry in std::fs::read_dir(dir)? {
+                let entry = entry?;
+                let name = entry.file_name().to_string_lossy().into_owned();
+                if !name.starts_with("BENCH_") || !name.ends_with(".json") || name == out_name {
+                    continue;
+                }
+                let text = std::fs::read_to_string(entry.path())?;
+                // Only well-formed reports aggregate; a truncated file
+                // from a crashed bench is reported, not silently merged.
+                if splitserve::util::json::Json::parse(&text).is_err() {
+                    eprintln!("bench-summary: skipping malformed {name}");
+                    continue;
+                }
+                let key = name.trim_start_matches("BENCH_").trim_end_matches(".json").to_string();
+                benches.insert(key, text.trim().to_string());
+            }
+            let body: Vec<String> =
+                benches.iter().map(|(k, v)| format!("  \"{k}\": {v}")).collect();
+            let summary = format!(
+                "{{\n\"bench_count\": {},\n\"benches\": {{\n{}\n}}\n}}\n",
+                benches.len(),
+                body.join(",\n")
+            );
+            let out_path = std::path::Path::new(dir).join(out_name);
+            std::fs::write(&out_path, &summary)?;
+            println!(
+                "bench-summary: aggregated {} reports into {}",
+                benches.len(),
+                out_path.display()
             );
         }
         Some("sweep") => {

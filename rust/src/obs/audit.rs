@@ -1,0 +1,196 @@
+//! Leak and drift audits over registry snapshots and pool ledgers.
+//!
+//! The paper's Eq. 8c admission story is only trustworthy if, after
+//! hours of churn, every charge it took is provably given back. Two
+//! audit passes make that checkable:
+//!
+//! * **Leak audit** ([`LeakReport`]): after every edge has closed and
+//!   every session retired — through whatever mix of normal EOS,
+//!   drain, rebalance, kill/recover, and migration the run saw — the
+//!   pool must hold ZERO live admission charges, replay fences, control
+//!   entries, resume fences, placements, in-flight replay buffers,
+//!   queued frames, and prefix attachments. Resident *unpinned* prefix
+//!   rows are cache, not leak: the LRU owns them, so charged bytes are
+//!   audited against the store budget rather than against zero.
+//!
+//! * **Drift audit** ([`DriftAudit`]): during the run, (a) completed
+//!   token streams are spot-checked bit-for-bit against a fault-free
+//!   solo replay, (b) the registry's mirrored gauges are reconciled
+//!   against the live pool getters they claim to mirror, and (c) every
+//!   worker's headroom accounting is reconciled: live KV charged on a
+//!   worker must never exceed its Eq. 8c budget.
+//!
+//! Both audits are the soak pass criterion: a soak run that streams
+//! millions of tokens but leaks one fence, or serves one silently
+//! different token, fails.
+
+use crate::obs::Registry;
+use crate::pool::CloudPool;
+
+/// Outstanding-state census of a pool that should be empty. Every field
+/// is a leak when non-zero (see module docs for the prefix-bytes rule).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct LeakReport {
+    /// Live Eq. 8c admission charges summed across workers.
+    pub live_sessions: u64,
+    /// Replay fences summed across workers.
+    pub fence_entries: u64,
+    /// Reconfig control entries summed across workers.
+    pub control_entries: u64,
+    /// Resume epoch fences summed across workers.
+    pub resume_entries: u64,
+    /// Pool placement ledger entries.
+    pub placed_sessions: u64,
+    /// Pool-level in-flight replay buffers.
+    pub inflight_frames: u64,
+    /// Frames still queued inside worker schedulers.
+    pub pending_frames: u64,
+    /// Pinned prefix refcounts summed across workers.
+    pub prefix_attachments: u64,
+    /// Bytes the prefix stores charge BEYOND their configured budgets
+    /// (resident-under-budget rows are cache, not leak).
+    pub prefix_over_budget_bytes: u64,
+}
+
+impl LeakReport {
+    /// Census the pool now. Call after closing every edge.
+    pub fn audit(pool: &CloudPool) -> LeakReport {
+        let mut pending_frames = 0u64;
+        for i in 0..pool.worker_count() {
+            pending_frames += pool.worker(i).pending_frames() as u64;
+        }
+        LeakReport {
+            live_sessions: pool.live_sessions() as u64,
+            fence_entries: pool.fence_entries() as u64,
+            control_entries: pool.control_entries() as u64,
+            resume_entries: pool.resume_entries() as u64,
+            placed_sessions: pool.placed_sessions() as u64,
+            inflight_frames: pool.inflight_frames() as u64,
+            pending_frames,
+            prefix_attachments: pool.prefix_attachments() as u64,
+            prefix_over_budget_bytes: pool
+                .prefix_charged_bytes()
+                .saturating_sub(pool.prefix_budget_bytes()),
+        }
+    }
+
+    pub fn clean(&self) -> bool {
+        *self == LeakReport::default()
+    }
+
+    /// Total outstanding entries (the "leak count" the bench reports).
+    pub fn total(&self) -> u64 {
+        self.live_sessions
+            + self.fence_entries
+            + self.control_entries
+            + self.resume_entries
+            + self.placed_sessions
+            + self.inflight_frames
+            + self.pending_frames
+            + self.prefix_attachments
+            + self.prefix_over_budget_bytes
+    }
+
+    /// Publish the census as registry gauges (`leak_*` schema).
+    pub fn publish(&self, reg: &Registry) {
+        reg.gauge("leak_live_sessions").set(self.live_sessions as i64);
+        reg.gauge("leak_fence_entries").set(self.fence_entries as i64);
+        reg.gauge("leak_control_entries").set(self.control_entries as i64);
+        reg.gauge("leak_resume_entries").set(self.resume_entries as i64);
+        reg.gauge("leak_placed_sessions").set(self.placed_sessions as i64);
+        reg.gauge("leak_inflight_frames").set(self.inflight_frames as i64);
+        reg.gauge("leak_pending_frames").set(self.pending_frames as i64);
+        reg.gauge("leak_prefix_attachments").set(self.prefix_attachments as i64);
+        reg.gauge("leak_prefix_over_budget_bytes").set(self.prefix_over_budget_bytes as i64);
+    }
+}
+
+/// Accumulating drift auditor. Feed it spot-check comparisons and
+/// reconciliation passes during the run; `clean()` is the pass bit.
+#[derive(Debug, Default)]
+pub struct DriftAudit {
+    pub stream_checks: u64,
+    pub reconcile_checks: u64,
+    pub violations: u64,
+    /// First few violation descriptions (bounded; this is evidence, not
+    /// a log).
+    pub details: Vec<String>,
+}
+
+impl DriftAudit {
+    pub fn new() -> DriftAudit {
+        DriftAudit::default()
+    }
+
+    fn violation(&mut self, detail: String) {
+        self.violations += 1;
+        if self.details.len() < 16 {
+            self.details.push(detail);
+        }
+    }
+
+    /// Bit-identity spot check: a live stream against its fault-free
+    /// replay. Any mismatch — position, value, or length — is drift.
+    pub fn check_stream(&mut self, request_id: u64, got: &[u32], want: &[u32]) {
+        self.stream_checks += 1;
+        if got != want {
+            let shared = got.len().min(want.len());
+            let pos = got.iter().zip(want).position(|(g, w)| g != w).unwrap_or(shared);
+            self.violation(format!(
+                "req {request_id}: stream drift at position {pos} (got {} tokens, want {})",
+                got.len(),
+                want.len()
+            ));
+        }
+    }
+
+    /// Reconcile the registry's mirrored pool gauges/counters against
+    /// the live getters, and every worker's headroom accounting against
+    /// its Eq. 8c budget. Call after `pool.publish_metrics()`.
+    pub fn reconcile(&mut self, reg: &Registry, pool: &CloudPool) {
+        self.reconcile_checks += 1;
+        let pairs: [(&str, u64); 6] = [
+            ("pool_live_sessions", pool.live_sessions() as u64),
+            ("pool_fence_entries", pool.fence_entries() as u64),
+            ("pool_placed_sessions", pool.placed_sessions() as u64),
+            ("pool_inflight_frames", pool.inflight_frames() as u64),
+            ("pool_prefix_charged_bytes", pool.prefix_charged_bytes()),
+            ("pool_prefix_attachments", pool.prefix_attachments() as u64),
+        ];
+        for (name, want) in pairs {
+            let got = reg.gauge(name).get();
+            if got != want as i64 {
+                self.violation(format!("gauge {name}={got} disagrees with live getter {want}"));
+            }
+        }
+        let counters: [(&str, u64); 4] = [
+            ("pool_placed", pool.stats.placed),
+            ("pool_kills", pool.stats.kills),
+            ("pool_failovers", pool.stats.failovers),
+            ("pool_migrations", pool.stats.migrations),
+        ];
+        for (name, want) in counters {
+            let got = reg.counter(name).get();
+            if got != want {
+                self.violation(format!("counter {name}={got} disagrees with PoolStats {want}"));
+            }
+        }
+        // Headroom accounting: charged KV on a worker never exceeds its
+        // budget (the admission gate's whole promise).
+        for i in 0..pool.worker_count() {
+            let w = pool.worker(i);
+            if let Some(budget) = w.config().kv_budget_bytes {
+                let charged = w.live_sessions() as u64 * w.session_kv_bytes();
+                if charged > budget {
+                    self.violation(format!(
+                        "worker {i}: {charged} KV bytes charged over budget {budget}"
+                    ));
+                }
+            }
+        }
+    }
+
+    pub fn clean(&self) -> bool {
+        self.violations == 0
+    }
+}

@@ -1,0 +1,194 @@
+//! Bounded structured event ring.
+//!
+//! Control-plane transitions (admission, reconfig, migrate, failover,
+//! prefix attach/release, region hops, ...) are recorded as fixed-size
+//! `Copy` events into a ring of fixed capacity: pushing never allocates
+//! after construction, and when the ring is full the oldest event is
+//! overwritten (the `dropped` counter keeps the loss honest). The ring
+//! is a flight recorder, not a ledger — the audits read the *registry*,
+//! the ring explains what the registry's numbers came from.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// What happened. Variants map 1:1 onto the control-plane transitions
+/// of the pool/fleet/prefix layers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EventKind {
+    /// A session was placed on a worker (`a` = worker).
+    Admission,
+    /// Placement found no headroom anywhere (typed reject to the edge).
+    AdmissionReject,
+    /// A plan reconfig was applied to a live session.
+    Reconfig,
+    /// An epoch-fenced resume was admitted.
+    Resume,
+    /// Live migration src→dst (`a` = source worker, `b` = target).
+    Migrate,
+    /// Migration refused or rolled back (`a` = source, `b` = target).
+    MigrateReject,
+    /// A killed worker's session was re-placed (`a` = new worker).
+    Failover,
+    /// A worker was killed (`a` = worker).
+    Kill,
+    /// A worker slot was respawned (`a` = worker).
+    Respawn,
+    /// A worker entered drain (`a` = worker, `b` = sessions moved).
+    Drain,
+    /// A worker left drain (`a` = worker).
+    Undrain,
+    /// Auto-rebalance moved one session (`a` = hot worker, `b` = cold).
+    Rebalance,
+    /// A prefix digest gained an attachment (`a` = worker).
+    PrefixAttach,
+    /// A prefix attachment was released (`a` = worker).
+    PrefixRelease,
+    /// A migration crossed a region boundary (`a` = src worker,
+    /// `b` = dst worker).
+    RegionHop,
+    /// An edge connection was closed and swept.
+    EdgeClosed,
+}
+
+impl EventKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            EventKind::Admission => "admission",
+            EventKind::AdmissionReject => "admission_reject",
+            EventKind::Reconfig => "reconfig",
+            EventKind::Resume => "resume",
+            EventKind::Migrate => "migrate",
+            EventKind::MigrateReject => "migrate_reject",
+            EventKind::Failover => "failover",
+            EventKind::Kill => "kill",
+            EventKind::Respawn => "respawn",
+            EventKind::Drain => "drain",
+            EventKind::Undrain => "undrain",
+            EventKind::Rebalance => "rebalance",
+            EventKind::PrefixAttach => "prefix_attach",
+            EventKind::PrefixRelease => "prefix_release",
+            EventKind::RegionHop => "region_hop",
+            EventKind::EdgeClosed => "edge_closed",
+        }
+    }
+}
+
+/// One recorded transition. `a`/`b` are kind-specific operands (worker
+/// indices, counts) documented on [`EventKind`]; `at_ms` is the
+/// registry's virtual clock at push time (0 outside the soak driver).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Event {
+    pub seq: u64,
+    pub at_ms: u64,
+    pub kind: EventKind,
+    pub request_id: u64,
+    pub a: u64,
+    pub b: u64,
+}
+
+/// Fixed-capacity overwrite-oldest ring. The mutex guards a pre-sized
+/// `VecDeque` of `Copy` events — a push is a lock, a bounds check, and
+/// a struct copy; no allocation once warm.
+#[derive(Debug)]
+pub struct EventRing {
+    cap: usize,
+    inner: Mutex<VecDeque<Event>>,
+    seq: AtomicU64,
+    dropped: AtomicU64,
+}
+
+impl EventRing {
+    pub fn new(cap: usize) -> EventRing {
+        let cap = cap.max(1);
+        EventRing {
+            cap,
+            inner: Mutex::new(VecDeque::with_capacity(cap)),
+            seq: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+        }
+    }
+
+    pub fn push(&self, kind: EventKind, at_ms: u64, request_id: u64, a: u64, b: u64) {
+        let seq = self.seq.fetch_add(1, Ordering::Relaxed);
+        let mut ring = self.inner.lock().unwrap();
+        if ring.len() == self.cap {
+            ring.pop_front();
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+        ring.push_back(Event { seq, at_ms, kind, request_id, a, b });
+    }
+
+    /// Oldest-first copy of the retained window.
+    pub fn recent(&self) -> Vec<Event> {
+        self.inner.lock().unwrap().iter().copied().collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Events overwritten because the ring was full.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Total events ever pushed (retained + dropped).
+    pub fn total(&self) -> u64 {
+        self.seq.load(Ordering::Relaxed)
+    }
+
+    /// JSON-lines rendering of the retained window (one object per
+    /// event), used by the `--metrics` dump.
+    pub fn to_json_lines(&self) -> String {
+        let mut s = String::new();
+        for e in self.recent() {
+            s.push_str(&format!(
+                "{{\"seq\": {}, \"at_ms\": {}, \"kind\": \"{}\", \"request_id\": {}, \
+                 \"a\": {}, \"b\": {}}}\n",
+                e.seq,
+                e.at_ms,
+                e.kind.name(),
+                e.request_id,
+                e.a,
+                e.b
+            ));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_is_bounded_and_overwrites_oldest() {
+        let ring = EventRing::new(4);
+        for i in 0..10u64 {
+            ring.push(EventKind::Admission, i, i, 0, 0);
+        }
+        let events = ring.recent();
+        assert_eq!(events.len(), 4);
+        assert_eq!(ring.dropped(), 6);
+        assert_eq!(ring.total(), 10);
+        assert_eq!(events.first().unwrap().seq, 6, "oldest retained must be seq 6");
+        assert_eq!(events.last().unwrap().seq, 9);
+        assert!(events.windows(2).all(|w| w[0].seq < w[1].seq));
+    }
+
+    #[test]
+    fn json_lines_parse_per_line() {
+        let ring = EventRing::new(8);
+        ring.push(EventKind::Migrate, 42, 7, 1, 2);
+        for line in ring.to_json_lines().lines() {
+            let v = crate::util::json::Json::parse(line).expect("each event line is json");
+            assert_eq!(v.get("kind").unwrap().as_str(), Some("migrate"));
+            assert_eq!(v.get("a").unwrap().as_usize(), Some(1));
+        }
+    }
+}

@@ -1,0 +1,117 @@
+//! Observability: metrics registry, structured events, audits, soak.
+//!
+//! Nine PRs in, the repo had grown one ad-hoc counter struct per layer —
+//! `CloudServer` atomics, `ServeReport` fields, `FleetStats`,
+//! `PoolStats`, two prefix-cache stat blocks — each with its own
+//! getters, none comparable to the others, none exposable without
+//! bespoke glue. This module is the one schema they all report through:
+//!
+//! * [`registry`] — counters, gauges, and log-linear histograms behind
+//!   a [`Registry`]. Registration allocates once; the record path is a
+//!   single relaxed atomic RMW (no locks, no strings, no allocator),
+//!   and the final state is interleaving-independent, so concurrent
+//!   runs snapshot bit-identically to a serial replay.
+//! * [`snapshot`] — plain-data [`Snapshot`]s forming a group under
+//!   `diff`/`merge` (`a.diff(b).merge(b) == a`), with JSON and
+//!   Prometheus text exposition (`--metrics PATH` writes both).
+//! * [`events`] — a bounded overwrite-oldest [`EventRing`] of `Copy`
+//!   control-plane transitions (admission, reconfig, migrate, failover,
+//!   prefix attach/release, region hops): a flight recorder explaining
+//!   where the registry's numbers came from.
+//! * [`region`] — [`RegionProfile`] RTT/goodput asymmetry. Placement
+//!   scores `headroom × region weight`; the soak driver uses the same
+//!   profile as a virtual-latency model.
+//! * [`audit`] — the two soak pass criteria. [`LeakReport`]: after all
+//!   sessions retire, every admission charge, fence, placement,
+//!   refcount, and replay buffer must net to zero. [`DriftAudit`]:
+//!   streams spot-check bit-identical against fault-free replays, and
+//!   the registry's mirrors reconcile against the live ledgers.
+//! * [`soak`] — the long-horizon virtual-time driver: hours of
+//!   simulated diurnal churn, rolling worker restarts, drains and
+//!   chaos faults over a multi-region pool, passing only if both
+//!   audits come back clean.
+
+pub mod audit;
+pub mod events;
+pub mod region;
+pub mod registry;
+pub mod snapshot;
+pub mod soak;
+
+pub use audit::{DriftAudit, LeakReport};
+pub use events::{Event, EventKind, EventRing};
+pub use region::RegionProfile;
+pub use registry::{accumulate, Counter, Gauge, Histogram, MetricSource, Registry};
+pub use snapshot::{HistSnapshot, Snapshot};
+pub use soak::{SoakConfig, SoakOutcome};
+
+use anyhow::Result;
+
+/// Write a registry snapshot to `path` (JSON: counters, gauges,
+/// histograms, recent events) and its Prometheus text rendering next to
+/// it at `path.prom`. This is what the `--metrics PATH` flag on every
+/// CLI mode calls on exit.
+pub fn write_metrics(reg: &Registry, path: &str) -> Result<()> {
+    let snap = reg.snapshot();
+    let mut json = snap.to_json();
+    // Splice the event window in as a JSON array field (the snapshot
+    // itself is pure metrics; events are the flight recorder).
+    let events: Vec<String> = reg
+        .events()
+        .iter()
+        .map(|e| {
+            format!(
+                "{{\"seq\": {}, \"at_ms\": {}, \"kind\": \"{}\", \"request_id\": {}, \
+                 \"a\": {}, \"b\": {}}}",
+                e.seq,
+                e.at_ms,
+                e.kind.name(),
+                e.request_id,
+                e.a,
+                e.b
+            )
+        })
+        .collect();
+    let tail = format!(
+        ", \"events_dropped\": {}, \"events\": [{}]}}",
+        reg.events_dropped(),
+        events.join(", ")
+    );
+    // snapshot JSON ends with its closing '}' (plus trailing newline) —
+    // pop both and splice our tail in as extra top-level fields.
+    while json.ends_with(char::is_whitespace) {
+        json.pop();
+    }
+    json.pop();
+    json.push_str(&tail);
+    std::fs::write(path, &json)?;
+    std::fs::write(format!("{path}.prom"), snap.to_prometheus())?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn write_metrics_emits_parseable_json_and_prom_text() {
+        let reg = Registry::new();
+        reg.counter("demo_total").add(3);
+        reg.gauge("demo_level").set(-2);
+        reg.histogram("demo_us").record(140);
+        reg.event(EventKind::Admission, 9, 1, 0);
+        let dir = std::env::temp_dir().join("splitserve_obs_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("metrics.json");
+        let path = path.to_str().unwrap();
+        write_metrics(&reg, path).unwrap();
+        let text = std::fs::read_to_string(path).unwrap();
+        let v = crate::util::json::Json::parse(&text).expect("metrics json parses");
+        let events = v.get("events").and_then(|e| e.as_arr().map(|a| a.len()));
+        assert_eq!(events, Some(1));
+        let prom = std::fs::read_to_string(format!("{path}.prom")).unwrap();
+        assert!(prom.contains("demo_total 3"), "{prom}");
+        assert!(prom.contains("demo_level -2"), "{prom}");
+        assert!(prom.contains("demo_us_count 1"), "{prom}");
+    }
+}

@@ -1,0 +1,105 @@
+//! Per-region worker asymmetry: RTT and goodput profiles.
+//!
+//! A sharded cloud is rarely one rack. Workers live in regions with
+//! different edge→worker round-trip times and sustained goodput, and
+//! the paper's latency constraint (Eq. 5's deadline) is paid on every
+//! hop — so placement scoring must weigh *where* a worker is, not just
+//! how much KV headroom it has. [`RegionProfile::weight`] folds a
+//! profile into a deterministic integer multiplier for the placement
+//! score: a worker in a slow region needs proportionally more headroom
+//! to win a placement over a near one, and among equal regions the
+//! original most-headroom + seeded-tie-break behavior is unchanged.
+//!
+//! The soak driver also uses the profile as a *virtual-latency model*:
+//! [`RegionProfile::reply_delay_s`] is the simulated extra time a reply
+//! of a given size spends on the region's link, which is what produces
+//! the per-region time-to-token spread `BENCH_soak.json` reports.
+
+/// RTT/goodput profile of the link between the edge population and one
+/// worker's region.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RegionProfile {
+    pub name: String,
+    /// Round-trip time, seconds.
+    pub rtt_s: f64,
+    /// Sustained goodput, bits per second.
+    pub goodput_bps: f64,
+}
+
+impl RegionProfile {
+    pub fn new(name: &str, rtt_s: f64, goodput_bps: f64) -> RegionProfile {
+        RegionProfile {
+            name: name.to_string(),
+            rtt_s: rtt_s.max(0.0),
+            goodput_bps: goodput_bps.max(1.0),
+        }
+    }
+
+    /// The same-rack default every worker gets unless told otherwise.
+    /// Its weight is the reference point: a pool with uniform regions
+    /// places exactly as the region-blind pool did.
+    pub fn local() -> RegionProfile {
+        RegionProfile::new("local", 0.0005, 2.5e9)
+    }
+
+    /// Named presets for the CLI (`--regions us-east,eu-west,...`).
+    pub fn preset(name: &str) -> Option<RegionProfile> {
+        match name {
+            "local" => Some(RegionProfile::local()),
+            "us-east" => Some(RegionProfile::new("us-east", 0.012, 1.25e9)),
+            "us-west" => Some(RegionProfile::new("us-west", 0.035, 1.0e9)),
+            "eu-west" => Some(RegionProfile::new("eu-west", 0.048, 6.0e8)),
+            "ap-south" => Some(RegionProfile::new("ap-south", 0.085, 3.0e8)),
+            _ => None,
+        }
+    }
+
+    /// Deterministic integer placement weight in [1, 256]. Pure
+    /// function of the profile (fixed f64 arithmetic, rounded once), so
+    /// pool layouts stay seed-reproducible. Reference scales: 25 ms RTT
+    /// halves the weight; goodput saturates above a few Mb/s so the
+    /// term only punishes genuinely thin links.
+    pub fn weight(&self) -> u64 {
+        let f_rtt = 0.025 / (0.025 + self.rtt_s);
+        let f_bw = self.goodput_bps / (self.goodput_bps + 2.0e6);
+        ((256.0 * f_rtt * f_bw).round() as u64).max(1)
+    }
+
+    /// Simulated one-way reply delay for `bytes` on this region's link:
+    /// RTT plus serialization at goodput. Used by the soak driver's
+    /// virtual clock — never by real transports.
+    pub fn reply_delay_s(&self, bytes: u64) -> f64 {
+        self.rtt_s + (bytes as f64 * 8.0) / self.goodput_bps
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn weights_order_by_distance() {
+        let w = |n: &str| RegionProfile::preset(n).unwrap().weight();
+        assert!(w("local") > w("us-east"), "{} vs {}", w("local"), w("us-east"));
+        assert!(w("us-east") > w("us-west"));
+        assert!(w("us-west") > w("eu-west"));
+        assert!(w("eu-west") > w("ap-south"));
+        assert!(w("ap-south") >= 1);
+        assert!(w("local") <= 256);
+    }
+
+    #[test]
+    fn weight_is_deterministic() {
+        let a = RegionProfile::new("x", 0.033, 7.5e8);
+        let b = RegionProfile::new("x", 0.033, 7.5e8);
+        assert_eq!(a.weight(), b.weight());
+    }
+
+    #[test]
+    fn reply_delay_scales_with_bytes_and_rtt() {
+        let near = RegionProfile::preset("us-east").unwrap();
+        let far = RegionProfile::preset("ap-south").unwrap();
+        assert!(far.reply_delay_s(4096) > near.reply_delay_s(4096));
+        assert!(near.reply_delay_s(1 << 20) > near.reply_delay_s(1 << 10));
+    }
+}

@@ -1,0 +1,450 @@
+//! Metrics registry: counters, gauges, and log-linear histograms.
+//!
+//! Design constraints, in order:
+//!
+//! 1. **Zero allocation on the hot path.** Registration (name lookup,
+//!    bucket array allocation) happens once, up front; after that a
+//!    handle is a plain `Arc` and every `inc`/`add`/`record` is a single
+//!    relaxed atomic RMW. Nothing on the record path touches a `String`,
+//!    a lock, or the allocator.
+//! 2. **Deterministic.** A counter is a commutative sum and a histogram
+//!    is a vector of commutative bucket sums, so the final state depends
+//!    only on the *multiset* of recorded values — not on thread
+//!    interleaving. That is what lets the soak harness assert exact
+//!    equality between a concurrent run and a single-threaded replay.
+//! 3. **Snapshot-diffable.** [`Registry::snapshot`] captures every
+//!    metric into a plain-data [`Snapshot`](super::Snapshot) that forms
+//!    a group under `diff`/`merge` (`a.diff(b).merge(b) == a`), which is
+//!    the algebra the leak and drift audits are written against.
+//!
+//! Histograms are log-linear (HDR-style): values below 8 get exact unit
+//! buckets; above that, every power-of-two octave is split into 8 linear
+//! sub-buckets, bounding the relative quantile error at 12.5% while
+//! covering the full `u64` range in [`BUCKETS`] slots.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use super::events::{Event, EventKind, EventRing};
+use super::snapshot::{HistSnapshot, Snapshot};
+
+/// Monotone event counter. `set` exists for *mirror publication* — a
+/// subsystem that still owns a legacy stat struct republishes absolute
+/// values into the registry — and must not be mixed with `inc`/`add` on
+/// the same metric.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub const fn new() -> Counter {
+        Counter(AtomicU64::new(0))
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Mirror an externally-maintained absolute value.
+    #[inline]
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Instantaneous level (headroom bytes, live sessions, ...).
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicI64);
+
+impl Gauge {
+    pub const fn new() -> Gauge {
+        Gauge(AtomicI64::new(0))
+    }
+
+    #[inline]
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add(&self, d: i64) {
+        self.0.fetch_add(d, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Sub-buckets per power-of-two octave (log-linear resolution).
+pub const SUB_BUCKETS: usize = 8;
+
+/// Total bucket count covering the full `u64` domain: 8 exact unit
+/// buckets for v < 8, then 8 sub-buckets for each octave m in 3..=63.
+pub const BUCKETS: usize = 8 + 61 * SUB_BUCKETS;
+
+/// Bucket index for a recorded value. Values below 8 map exactly; above
+/// that the octave is `msb(v)` and the sub-bucket is the next 3 bits.
+#[inline]
+pub fn bucket_index(v: u64) -> usize {
+    if v < 8 {
+        return v as usize;
+    }
+    let msb = 63 - v.leading_zeros() as usize; // >= 3
+    let sub = ((v >> (msb - 3)) & 7) as usize;
+    8 + (msb - 3) * SUB_BUCKETS + sub
+}
+
+/// Inclusive lower bound of a bucket.
+pub fn bucket_lower(i: usize) -> u64 {
+    if i < 8 {
+        return i as u64;
+    }
+    let oct = (i - 8) / SUB_BUCKETS;
+    let sub = ((i - 8) % SUB_BUCKETS) as u64;
+    let m = (oct + 3) as u32;
+    (1u64 << m) + sub * (1u64 << (m - 3))
+}
+
+/// Exclusive upper bound of a bucket (saturating at `u64::MAX`).
+pub fn bucket_upper(i: usize) -> u64 {
+    if i + 1 < BUCKETS {
+        bucket_lower(i + 1)
+    } else {
+        u64::MAX
+    }
+}
+
+/// Log-linear histogram over `u64` values (latencies in microseconds,
+/// byte counts, ...). Bucket counts are relaxed atomics: recording is
+/// one RMW, and the final distribution is interleaving-independent.
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: Vec<AtomicU64>,
+    sum: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        let buckets = (0..BUCKETS).map(|_| AtomicU64::new(0)).collect();
+        Histogram { buckets, sum: AtomicU64::new(0) }
+    }
+
+    #[inline]
+    pub fn record(&self, v: u64) {
+        self.buckets[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).sum()
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    /// Sparse `(bucket index, count)` pairs for non-empty buckets.
+    pub fn sparse(&self) -> Vec<(u32, u64)> {
+        self.buckets
+            .iter()
+            .enumerate()
+            .filter_map(|(i, b)| {
+                let n = b.load(Ordering::Relaxed);
+                (n > 0).then_some((i as u32, n))
+            })
+            .collect()
+    }
+
+    /// Quantile estimate (q in [0, 1]); relative error bounded by the
+    /// bucket half-width (6.25% above 8, exact below).
+    pub fn quantile(&self, q: f64) -> u64 {
+        HistSnapshot { count: self.count(), sum: self.sum(), buckets: self.sparse(), label: None }
+            .quantile(q)
+    }
+
+    pub fn to_snapshot(&self, label: Option<(String, String)>) -> HistSnapshot {
+        HistSnapshot { count: self.count(), sum: self.sum(), buckets: self.sparse(), label }
+    }
+}
+
+/// A subsystem whose legacy stat struct can be republished into the
+/// registry under stable metric names. This is the thin-wrapper layer
+/// the ad-hoc `PoolStats`/`FleetStats`/prefix counters sit behind: the
+/// structs keep their fields (callers don't break), but the registry is
+/// the one schema every path reports through.
+pub trait MetricSource {
+    /// `(metric name, absolute value)` pairs. Names must be stable —
+    /// they are the exposition schema.
+    fn metrics(&self) -> Vec<(&'static str, u64)>;
+}
+
+/// Fold a [`MetricSource`] into a running total map (used to aggregate
+/// one schema across pool workers).
+pub fn accumulate(into: &mut BTreeMap<&'static str, u64>, src: &impl MetricSource) {
+    for (k, v) in src.metrics() {
+        *into.entry(k).or_insert(0) += v;
+    }
+}
+
+/// The metrics registry: named counters, gauges, histograms, plus the
+/// bounded structured event ring and a virtual-time source the soak
+/// driver advances.
+#[derive(Debug)]
+pub struct Registry {
+    counters: Mutex<BTreeMap<String, Arc<Counter>>>,
+    gauges: Mutex<BTreeMap<String, Arc<Gauge>>>,
+    hists: Mutex<BTreeMap<String, (Option<(String, String)>, Arc<Histogram>)>>,
+    events: EventRing,
+    now_ms: AtomicU64,
+}
+
+impl Default for Registry {
+    fn default() -> Registry {
+        Registry::new()
+    }
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::with_event_capacity(4096)
+    }
+
+    pub fn with_event_capacity(cap: usize) -> Registry {
+        Registry {
+            counters: Mutex::new(BTreeMap::new()),
+            gauges: Mutex::new(BTreeMap::new()),
+            hists: Mutex::new(BTreeMap::new()),
+            events: EventRing::new(cap),
+            now_ms: AtomicU64::new(0),
+        }
+    }
+
+    /// Get-or-register a counter. Allocates only on first use of a name;
+    /// hold the returned handle for hot-path recording.
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        let mut m = self.counters.lock().unwrap();
+        if let Some(c) = m.get(name) {
+            return c.clone();
+        }
+        let c = Arc::new(Counter::new());
+        m.insert(name.to_string(), c.clone());
+        c
+    }
+
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        let mut m = self.gauges.lock().unwrap();
+        if let Some(g) = m.get(name) {
+            return g.clone();
+        }
+        let g = Arc::new(Gauge::new());
+        m.insert(name.to_string(), g.clone());
+        g
+    }
+
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        self.histogram_entry(name.to_string(), None)
+    }
+
+    /// Histogram carrying one `key="value"` label (per-region latency
+    /// series). The label rides into exposition; the map key is the
+    /// rendered `name{key="value"}` form, so distinct label values are
+    /// distinct series.
+    pub fn histogram_labeled(&self, name: &str, key: &str, value: &str) -> Arc<Histogram> {
+        let rendered = format!("{name}{{{key}=\"{value}\"}}");
+        self.histogram_entry(rendered, Some((key.to_string(), value.to_string())))
+    }
+
+    fn histogram_entry(&self, key: String, label: Option<(String, String)>) -> Arc<Histogram> {
+        let mut m = self.hists.lock().unwrap();
+        if let Some((_, h)) = m.get(&key) {
+            return h.clone();
+        }
+        let h = Arc::new(Histogram::new());
+        m.insert(key, (label, h.clone()));
+        h
+    }
+
+    /// Republish a legacy stat struct's counters (mirror semantics).
+    pub fn publish(&self, src: &impl MetricSource) {
+        for (k, v) in src.metrics() {
+            self.counter(k).set(v);
+        }
+    }
+
+    pub fn publish_totals(&self, totals: &BTreeMap<&'static str, u64>) {
+        for (k, v) in totals {
+            self.counter(k).set(*v);
+        }
+    }
+
+    /// Virtual "now" in milliseconds; the soak driver owns this clock,
+    /// real-time paths may leave it at zero.
+    pub fn set_time_ms(&self, t: u64) {
+        self.now_ms.store(t, Ordering::Relaxed);
+    }
+
+    pub fn time_ms(&self) -> u64 {
+        self.now_ms.load(Ordering::Relaxed)
+    }
+
+    /// Push a structured event stamped with the registry's virtual time.
+    pub fn event(&self, kind: EventKind, request_id: u64, a: u64, b: u64) {
+        self.events.push(kind, self.time_ms(), request_id, a, b);
+    }
+
+    pub fn events(&self) -> Vec<Event> {
+        self.events.recent()
+    }
+
+    pub fn events_dropped(&self) -> u64 {
+        self.events.dropped()
+    }
+
+    /// Total events ever pushed (retained + overwritten).
+    pub fn events_total(&self) -> u64 {
+        self.events.total()
+    }
+
+    /// Capture every metric into plain diffable data. Zero-valued
+    /// counters/gauges and empty histograms are dropped so the snapshot
+    /// is canonical (required for the diff/merge group laws).
+    pub fn snapshot(&self) -> Snapshot {
+        let mut snap = Snapshot::default();
+        for (k, c) in self.counters.lock().unwrap().iter() {
+            let v = c.get();
+            if v != 0 {
+                snap.counters.insert(k.clone(), v);
+            }
+        }
+        for (k, g) in self.gauges.lock().unwrap().iter() {
+            let v = g.get();
+            if v != 0 {
+                snap.gauges.insert(k.clone(), v);
+            }
+        }
+        for (k, (label, h)) in self.hists.lock().unwrap().iter() {
+            let hs = h.to_snapshot(label.clone());
+            if hs.count != 0 {
+                snap.hists.insert(k.clone(), hs);
+            }
+        }
+        snap
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_boundaries_are_exact_below_eight_and_log_linear_above() {
+        // Exact unit buckets below 8.
+        for v in 0..8u64 {
+            let i = bucket_index(v);
+            assert_eq!(bucket_lower(i), v);
+            assert_eq!(bucket_upper(i), v + 1);
+        }
+        // Every value lands inside its bucket's [lower, upper) span.
+        for &v in &[8u64, 9, 15, 16, 17, 100, 1023, 1024, 1 << 20, (1 << 40) + 12345, u64::MAX] {
+            let i = bucket_index(v);
+            assert!(i < BUCKETS, "index {i} out of range for {v}");
+            assert!(bucket_lower(i) <= v, "v={v} below bucket {i} lower {}", bucket_lower(i));
+            assert!(v < bucket_upper(i) || bucket_upper(i) == u64::MAX, "v={v} above bucket {i}");
+        }
+        // Octave boundaries: lower(8 + 8k) == 2^(3+k).
+        for k in 0..10usize {
+            assert_eq!(bucket_lower(8 + SUB_BUCKETS * k), 1u64 << (3 + k));
+        }
+        // Relative width within an octave is 1/8 of the octave base.
+        let i = bucket_index(1 << 20);
+        assert_eq!(bucket_upper(i) - bucket_lower(i), (1 << 20) / 8);
+    }
+
+    #[test]
+    fn bucket_index_is_monotone() {
+        let mut prev = 0usize;
+        let mut v = 1u64;
+        while v < (1u64 << 40) {
+            let i = bucket_index(v);
+            assert!(i >= prev, "index regressed at v={v}");
+            prev = i;
+            v = v.saturating_mul(3) / 2 + 1;
+        }
+    }
+
+    #[test]
+    fn quantiles_respect_the_log_linear_error_bound() {
+        let h = Histogram::new();
+        for v in 1..=10_000u64 {
+            h.record(v);
+        }
+        for &(q, exact) in &[(0.50, 5000u64), (0.95, 9500), (0.99, 9900)] {
+            let est = h.quantile(q);
+            let err = (est as f64 - exact as f64).abs() / exact as f64;
+            assert!(err <= 0.125, "q={q}: est {est} vs exact {exact} (err {err:.4})");
+        }
+        assert_eq!(h.count(), 10_000);
+        assert_eq!(h.sum(), 10_000 * 10_001 / 2);
+    }
+
+    #[test]
+    fn concurrent_recording_is_deterministic() {
+        // The same multiset of values, recorded across 8 scoped threads
+        // in whatever interleaving the scheduler picks, must produce a
+        // snapshot EQUAL to the single-threaded reference.
+        let reg = Registry::new();
+        let c = reg.counter("ops");
+        let h = reg.histogram("latency_us");
+        std::thread::scope(|s| {
+            for t in 0..8u64 {
+                let c = c.clone();
+                let h = h.clone();
+                s.spawn(move || {
+                    for i in 0..1000u64 {
+                        c.inc();
+                        h.record(t * 1000 + i);
+                    }
+                });
+            }
+        });
+        let reference = Registry::new();
+        let rc = reference.counter("ops");
+        let rh = reference.histogram("latency_us");
+        for v in 0..8000u64 {
+            rc.inc();
+            rh.record(v);
+        }
+        assert_eq!(reg.snapshot(), reference.snapshot());
+    }
+
+    #[test]
+    fn handles_are_shared_per_name() {
+        let reg = Registry::new();
+        reg.counter("x").add(3);
+        reg.counter("x").add(4);
+        assert_eq!(reg.counter("x").get(), 7);
+        reg.gauge("g").set(-2);
+        assert_eq!(reg.gauge("g").get(), -2);
+        reg.histogram("h").record(5);
+        assert_eq!(reg.histogram("h").count(), 1);
+    }
+}

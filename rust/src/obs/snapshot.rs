@@ -1,0 +1,371 @@
+//! Snapshot algebra + exposition (JSON and Prometheus text).
+//!
+//! A [`Snapshot`] is plain data — counters, gauges, sparse histogram
+//! buckets — closed under two operations:
+//!
+//! * `a.diff(b)`: element-wise wrapping subtraction ("what happened
+//!   between b and a"), and
+//! * `d.merge(b)`: element-wise wrapping addition.
+//!
+//! Entries that land on zero are dropped, so snapshots are canonical and
+//! `a.diff(b).merge(b) == a` holds exactly (pinned in tests below). The
+//! audits lean on this: a leak audit is "the diff of the post-retire
+//! snapshot against baseline has no outstanding gauge entries", and a
+//! soak phase report is just a diff.
+//!
+//! Exposition is intentionally boring: `to_json` uses the same JSON
+//! dialect `util::json` parses back, and `to_prometheus` emits the text
+//! format with names sanitized to `[a-zA-Z0-9_:]` and label values
+//! escaped per the spec (`\\`, `\"`, `\n`).
+
+use std::collections::BTreeMap;
+
+use super::registry::{bucket_lower, bucket_upper};
+
+/// Plain-data capture of one histogram: total count, sum of recorded
+/// values, and sparse non-zero `(bucket index, count)` pairs.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct HistSnapshot {
+    pub count: u64,
+    pub sum: u64,
+    pub buckets: Vec<(u32, u64)>,
+    /// Optional `key="value"` label carried into exposition.
+    pub label: Option<(String, String)>,
+}
+
+impl HistSnapshot {
+    /// Quantile estimate: walk the cumulative sparse buckets to the
+    /// target rank and return the bucket midpoint (exact for unit
+    /// buckets below 8).
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let target = ((q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64).max(1);
+        let mut cum = 0u64;
+        for &(i, n) in &self.buckets {
+            cum += n;
+            if cum >= target {
+                let lo = bucket_lower(i as usize);
+                let hi = bucket_upper(i as usize);
+                return lo + (hi - lo - 1) / 2;
+            }
+        }
+        let last = self.buckets.last().map(|&(i, _)| i as usize).unwrap_or(0);
+        bucket_lower(last)
+    }
+
+    fn wrapping_combine(&self, other: &HistSnapshot, sub: bool) -> HistSnapshot {
+        let mut buckets: BTreeMap<u32, u64> = self.buckets.iter().copied().collect();
+        for &(i, n) in &other.buckets {
+            let e = buckets.entry(i).or_insert(0);
+            *e = if sub { e.wrapping_sub(n) } else { e.wrapping_add(n) };
+        }
+        let buckets: Vec<(u32, u64)> = buckets.into_iter().filter(|&(_, n)| n != 0).collect();
+        HistSnapshot {
+            count: if sub {
+                self.count.wrapping_sub(other.count)
+            } else {
+                self.count.wrapping_add(other.count)
+            },
+            sum: if sub {
+                self.sum.wrapping_sub(other.sum)
+            } else {
+                self.sum.wrapping_add(other.sum)
+            },
+            buckets,
+            label: self.label.clone().or_else(|| other.label.clone()),
+        }
+    }
+
+    fn is_zero(&self) -> bool {
+        self.count == 0 && self.sum == 0 && self.buckets.is_empty()
+    }
+}
+
+/// Point-in-time capture of a whole registry. See the module docs for
+/// the diff/merge algebra.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Snapshot {
+    pub counters: BTreeMap<String, u64>,
+    pub gauges: BTreeMap<String, i64>,
+    pub hists: BTreeMap<String, HistSnapshot>,
+}
+
+impl Snapshot {
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn gauge(&self, name: &str) -> i64 {
+        self.gauges.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn hist(&self, key: &str) -> Option<&HistSnapshot> {
+        self.hists.get(key)
+    }
+
+    /// `self - earlier`, element-wise wrapping, zero entries dropped.
+    pub fn diff(&self, earlier: &Snapshot) -> Snapshot {
+        self.combine(earlier, true)
+    }
+
+    /// `self + other`, element-wise wrapping, zero entries dropped.
+    pub fn merge(&self, other: &Snapshot) -> Snapshot {
+        self.combine(other, false)
+    }
+
+    fn combine(&self, other: &Snapshot, sub: bool) -> Snapshot {
+        let mut out = Snapshot::default();
+        let keys = |a: &BTreeMap<String, u64>, b: &BTreeMap<String, u64>| -> Vec<String> {
+            a.keys().chain(b.keys()).cloned().collect()
+        };
+        for k in keys(&self.counters, &other.counters) {
+            let a = self.counter(&k);
+            let b = other.counter(&k);
+            let v = if sub { a.wrapping_sub(b) } else { a.wrapping_add(b) };
+            if v != 0 {
+                out.counters.insert(k, v);
+            }
+        }
+        let gkeys: Vec<String> = self.gauges.keys().chain(other.gauges.keys()).cloned().collect();
+        for k in gkeys {
+            let a = self.gauge(&k);
+            let b = other.gauge(&k);
+            let v = if sub { a.wrapping_sub(b) } else { a.wrapping_add(b) };
+            if v != 0 {
+                out.gauges.insert(k, v);
+            }
+        }
+        let empty = HistSnapshot::default();
+        let hkeys: Vec<String> = self.hists.keys().chain(other.hists.keys()).cloned().collect();
+        for k in hkeys {
+            if out.hists.contains_key(&k) {
+                continue;
+            }
+            let a = self.hists.get(&k).unwrap_or(&empty);
+            let b = other.hists.get(&k).unwrap_or(&empty);
+            let h = a.wrapping_combine(b, sub);
+            if !h.is_zero() {
+                out.hists.insert(k, h);
+            }
+        }
+        out
+    }
+
+    /// JSON exposition (round-trips through `util::json::Json::parse`).
+    pub fn to_json(&self) -> String {
+        let mut s = String::new();
+        s.push_str("{\n  \"counters\": {");
+        push_map(&mut s, self.counters.iter().map(|(k, v)| (k.as_str(), v.to_string())));
+        s.push_str("},\n  \"gauges\": {");
+        push_map(&mut s, self.gauges.iter().map(|(k, v)| (k.as_str(), v.to_string())));
+        s.push_str("},\n  \"histograms\": {");
+        let hists: Vec<(&str, String)> = self
+            .hists
+            .iter()
+            .map(|(k, h)| {
+                let buckets: Vec<String> =
+                    h.buckets.iter().map(|&(i, n)| format!("[{i},{n}]")).collect();
+                let body = format!(
+                    "{{\"count\": {}, \"sum\": {}, \"p50\": {}, \"p95\": {}, \"p99\": {}, \
+                     \"buckets\": [{}]}}",
+                    h.count,
+                    h.sum,
+                    h.quantile(0.50),
+                    h.quantile(0.95),
+                    h.quantile(0.99),
+                    buckets.join(",")
+                );
+                (k.as_str(), body)
+            })
+            .collect();
+        push_map(&mut s, hists.iter().map(|(k, v)| (*k, v.clone())));
+        s.push_str("}\n}\n");
+        s
+    }
+
+    /// Prometheus text exposition. Histogram `le` bounds are the
+    /// exclusive log-linear bucket uppers rendered as inclusive edges —
+    /// within the documented 12.5% bucket resolution.
+    pub fn to_prometheus(&self) -> String {
+        let mut s = String::new();
+        for (k, v) in &self.counters {
+            let name = sanitize_metric_name(k);
+            s.push_str(&format!("# TYPE {name} counter\n{name} {v}\n"));
+        }
+        for (k, v) in &self.gauges {
+            let name = sanitize_metric_name(k);
+            s.push_str(&format!("# TYPE {name} gauge\n{name} {v}\n"));
+        }
+        for (k, h) in &self.hists {
+            // The map key may be the rendered `name{key="value"}` form;
+            // recover the bare name, then re-emit the label escaped.
+            let bare = k.split('{').next().unwrap_or(k);
+            let name = sanitize_metric_name(bare);
+            let label = h
+                .label
+                .as_ref()
+                .map(|(lk, lv)| {
+                    format!("{}=\"{}\",", sanitize_metric_name(lk), escape_label_value(lv))
+                })
+                .unwrap_or_default();
+            let bare_label = match label.trim_end_matches(',') {
+                "" => String::new(),
+                l => format!("{{{l}}}"),
+            };
+            s.push_str(&format!("# TYPE {name} histogram\n"));
+            let mut cum = 0u64;
+            for &(i, n) in &h.buckets {
+                cum += n;
+                let le = bucket_upper(i as usize);
+                s.push_str(&format!("{name}_bucket{{{label}le=\"{le}\"}} {cum}\n"));
+            }
+            s.push_str(&format!("{name}_bucket{{{label}le=\"+Inf\"}} {}\n", h.count));
+            s.push_str(&format!("{name}_sum{bare_label} {}\n", h.sum));
+            s.push_str(&format!("{name}_count{bare_label} {}\n", h.count));
+        }
+        s
+    }
+}
+
+fn push_map<'a>(s: &mut String, entries: impl Iterator<Item = (&'a str, String)>) {
+    let mut first = true;
+    for (k, v) in entries {
+        if !first {
+            s.push(',');
+        }
+        first = false;
+        s.push_str(&format!("\n    \"{}\": {v}", escape_json(k)));
+    }
+    if !first {
+        s.push_str("\n  ");
+    }
+}
+
+/// Escape a string for embedding in a JSON string literal.
+pub fn escape_json(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Prometheus metric names admit `[a-zA-Z0-9_:]`; anything else becomes
+/// `_`, and a leading digit gets a `_` prefix.
+pub fn sanitize_metric_name(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for (i, c) in s.chars().enumerate() {
+        let ok = c.is_ascii_alphanumeric() || c == '_' || c == ':';
+        if i == 0 && c.is_ascii_digit() {
+            out.push('_');
+        }
+        out.push(if ok { c } else { '_' });
+    }
+    out
+}
+
+/// Prometheus label-value escaping: backslash, double-quote, newline.
+pub fn escape_label_value(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::registry::Registry;
+    use super::*;
+
+    fn sample() -> (Registry, Snapshot, Snapshot) {
+        let reg = Registry::new();
+        reg.counter("a").add(5);
+        reg.gauge("g").set(3);
+        reg.histogram("h").record(100);
+        let early = reg.snapshot();
+        reg.counter("a").add(2);
+        reg.counter("b").inc();
+        reg.gauge("g").set(-1);
+        reg.histogram("h").record(100);
+        reg.histogram("h").record(9000);
+        let late = reg.snapshot();
+        (reg, early, late)
+    }
+
+    #[test]
+    fn diff_merge_round_trips() {
+        let (_reg, early, late) = sample();
+        assert_eq!(late.diff(&early).merge(&early), late);
+        assert_eq!(early.diff(&late).merge(&late), early);
+        // Self-diff is the empty (canonical) snapshot.
+        assert_eq!(late.diff(&late), Snapshot::default());
+        // The delta itself reads correctly.
+        let d = late.diff(&early);
+        assert_eq!(d.counter("a"), 2);
+        assert_eq!(d.counter("b"), 1);
+        assert_eq!(d.gauge("g"), -4);
+        assert_eq!(d.hist("h").unwrap().count, 2);
+    }
+
+    #[test]
+    fn merge_is_commutative_on_disjoint_and_shared_keys() {
+        let (_reg, early, late) = sample();
+        let d = late.diff(&early);
+        assert_eq!(d.merge(&early), early.merge(&d));
+    }
+
+    #[test]
+    fn json_round_trips_through_the_in_tree_parser() {
+        let (_reg, _early, late) = sample();
+        let doc = crate::util::json::Json::parse(&late.to_json()).expect("valid json");
+        assert_eq!(doc.get("counters").unwrap().get("a").unwrap().as_usize(), Some(7));
+        let h = doc.get("histograms").unwrap().get("h").unwrap();
+        assert_eq!(h.get("count").unwrap().as_usize(), Some(3));
+        assert!(h.get("p50").unwrap().as_f64().is_some());
+    }
+
+    #[test]
+    fn prometheus_text_escapes_and_sanitizes() {
+        let reg = Registry::new();
+        reg.counter("weird-name.count").inc();
+        reg.histogram_labeled("lat_us", "region", "eu\"west\\x\n1").record(7);
+        let text = reg.snapshot().to_prometheus();
+        assert!(text.contains("# TYPE weird_name_count counter"), "{text}");
+        assert!(text.contains("weird_name_count 1"), "{text}");
+        // Label value: quote, backslash, newline all escaped.
+        assert!(text.contains(r#"region="eu\"west\\x\n1""#), "{text}");
+        assert!(text.contains("lat_us_bucket{"), "{text}");
+        assert!(text.contains("le=\"+Inf\"} 1"), "{text}");
+        assert_eq!(escape_label_value("a\\b\"c\nd"), "a\\\\b\\\"c\\nd");
+        assert_eq!(sanitize_metric_name("9lives-of.cats"), "_9lives_of_cats");
+    }
+
+    #[test]
+    fn quantiles_from_sparse_snapshots_match_the_histogram() {
+        let reg = Registry::new();
+        let h = reg.histogram("h");
+        for v in 1..=1000u64 {
+            h.record(v);
+        }
+        let hs = reg.snapshot().hists.get("h").unwrap().clone();
+        for &q in &[0.5, 0.95, 0.99] {
+            assert_eq!(hs.quantile(q), h.quantile(q));
+        }
+    }
+}

@@ -1,0 +1,504 @@
+//! Long-horizon soak harness: hours of simulated churn over a
+//! multi-region pool, passing only if the leak AND drift audits are
+//! clean.
+//!
+//! The driver runs on **virtual time**: a tick advances the registry
+//! clock by `tick_ms` simulated milliseconds, admits the diurnal
+//! trace's arrivals that came due, runs the maintenance cadences
+//! (rolling worker restarts, drain/undrain, armed chaos faults), and
+//! pumps every live session one payload/reply step. Idle troughs are
+//! jumped over, so a 2-simulated-hour scenario finishes in bounded
+//! wall time regardless of how quiet the night side of the diurnal
+//! curve is.
+//!
+//! Per-region latency asymmetry: each worker's [`RegionProfile`] both
+//! biases placement (`headroom × weight`) and contributes a simulated
+//! reply delay (`rtt + bytes/goodput`) to that token's recorded
+//! latency, so `soak_token_latency_ms{region=...}` histograms show the
+//! spread a real multi-region deployment would.
+//!
+//! Pass criteria (checked by [`SoakOutcome::passed`]):
+//!
+//! * **Leak audit** — after every session retires (EOS, typed reject,
+//!   kill-recover, drain, migration), the pool holds zero admission
+//!   charges, fences, placements, replay buffers, queued frames and
+//!   prefix refcounts, and no store is charged beyond its budget.
+//! * **Drift audit** — spot-checked completed streams are bit-identical
+//!   to their fault-free solo replays, registry mirrors reconcile with
+//!   the live ledgers, and no worker's KV charge ever exceeds its
+//!   Eq. 8c budget.
+
+use std::rc::Rc;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::channel::TransferOutcome;
+use crate::coordinator::{
+    build_pipeline, DeploymentSpec, EdgeDevice, PrefixDecision, PrefixProbe, Request, Session,
+    SessionAction,
+};
+use crate::fleet::{FleetConfig, FleetScheduler};
+use crate::obs::{DriftAudit, Histogram, LeakReport, RegionProfile, Registry};
+use crate::pool::{CloudPool, PoolConfig};
+use crate::prefix::CHUNK_TOKENS;
+use crate::runtime::Engine;
+use crate::trace::{generate_trace, ArrivalPattern, WorkloadSpec};
+use crate::util::rng::Rng;
+use crate::wire::{EdgePort, FaultPlan, Loopback, WireTransport};
+
+/// Knobs of one soak scenario. Every field is simulated time or a
+/// seed — the run is deterministic end to end.
+#[derive(Clone, Debug)]
+pub struct SoakConfig {
+    /// Simulated horizon in seconds (arrivals beyond it are dropped).
+    pub horizon_s: f64,
+    /// Simulated milliseconds per driver tick.
+    pub tick_ms: u64,
+    pub workers: usize,
+    /// Region profiles, cycled over the worker slots.
+    pub regions: Vec<RegionProfile>,
+    pub seed: u64,
+    /// Diurnal arrival curve (requests/s at peak and trough, period).
+    pub period_s: f64,
+    pub peak_rate: f64,
+    pub trough_rate: f64,
+    /// Hard cap on trace length (memory bound).
+    pub max_sessions: usize,
+    pub max_new: usize,
+    /// Fraction of prompts rewritten to share one hot 16-token prefix.
+    pub prefix_share: f64,
+    /// Per-worker Eq. 8c budget, in whole sessions (None = gate off —
+    /// but then the heaviest region wins every placement, so keep it
+    /// finite when regions differ).
+    pub sessions_per_worker: Option<u64>,
+    /// Rolling worker-restart cadence, simulated seconds (0 = off).
+    pub restart_every_s: f64,
+    /// Drain + undrain cadence, simulated seconds (0 = off).
+    pub drain_every_s: f64,
+    /// Chaos cadence: alternates an armed seeded worker kill and a
+    /// one-shot migrate-frame bit flip (0 = off).
+    pub chaos_every_s: f64,
+    /// Bit-identity spot check every Nth completed session...
+    pub drift_check_every: u64,
+    /// ...up to this many solo replays (compute bound).
+    pub max_drift_replays: u64,
+    /// Registry-vs-ledger reconciliation cadence, simulated seconds.
+    pub reconcile_every_s: f64,
+}
+
+impl Default for SoakConfig {
+    fn default() -> SoakConfig {
+        SoakConfig {
+            horizon_s: 7200.0,
+            tick_ms: 100,
+            workers: 4,
+            regions: vec![
+                RegionProfile::local(),
+                RegionProfile::preset("us-east").expect("preset"),
+                RegionProfile::preset("eu-west").expect("preset"),
+                RegionProfile::preset("ap-south").expect("preset"),
+            ],
+            seed: 0x50AC,
+            period_s: 3600.0,
+            peak_rate: 1.0,
+            trough_rate: 0.15,
+            max_sessions: 4000,
+            max_new: 6,
+            prefix_share: 0.35,
+            sessions_per_worker: Some(8),
+            restart_every_s: 600.0,
+            drain_every_s: 870.0,
+            chaos_every_s: 1130.0,
+            drift_check_every: 7,
+            max_drift_replays: 32,
+            reconcile_every_s: 30.0,
+        }
+    }
+}
+
+impl SoakConfig {
+    /// Scale the horizon (CI smoke runs ~10 simulated minutes).
+    pub fn with_horizon_minutes(mut self, minutes: f64) -> SoakConfig {
+        self.horizon_s = (minutes * 60.0).max(60.0);
+        self
+    }
+}
+
+/// What the run did, and whether it passed.
+#[derive(Clone, Debug)]
+pub struct SoakOutcome {
+    pub sim_s: f64,
+    pub wall_s: f64,
+    pub sessions: u64,
+    pub completed: u64,
+    /// Sessions that ended in a TYPED rejection (admission pressure,
+    /// failover without capacity, chaos) — expected under load, never a
+    /// pass/fail criterion by itself.
+    pub failed_typed: u64,
+    pub tokens: u64,
+    pub kills: u64,
+    pub drains: u64,
+    pub migrations: u64,
+    pub leak: LeakReport,
+    pub drift_stream_checks: u64,
+    pub drift_reconcile_checks: u64,
+    pub drift_violations: u64,
+    pub drift_details: Vec<String>,
+    /// Per-region p95 time-to-token, simulated ms (regions that served
+    /// no tokens are omitted).
+    pub region_p95_ms: Vec<(String, u64)>,
+    pub events_total: u64,
+}
+
+impl SoakOutcome {
+    /// The soak pass bit: both audits clean.
+    pub fn passed(&self) -> bool {
+        self.leak.clean() && self.drift_violations == 0
+    }
+}
+
+struct Tenant {
+    req: Request,
+    session: Session,
+    port: EdgePort,
+    edge_id: u64,
+    up: Option<TransferOutcome>,
+    sent_at_ms: u64,
+    /// Last observed owning worker (refreshed every tick; replies are
+    /// attributed to the region that actually served them).
+    worker: usize,
+}
+
+enum Admit {
+    Tenant(Box<Tenant>),
+    Rejected,
+}
+
+/// Open an edge connection for one request and run the prefix probe
+/// handshake when the edge cache claims a warm hit. A typed rejection
+/// at the probe (no headroom anywhere) rejects the session.
+fn admit(
+    pool: &mut CloudPool,
+    edge: &EdgeDevice,
+    spec: &DeploymentSpec,
+    req: &Request,
+) -> Result<Admit> {
+    let (edge_half, pool_half) = Loopback::pair();
+    let edge_id = pool.add_edge(WireTransport::Loopback(pool_half));
+    let mut port = EdgePort::new(WireTransport::Loopback(edge_half));
+    let mut session = Session::for_edge(req.clone(), edge, spec.edge_controller());
+    let mut decision = edge.prefix_decision(&req.prompt);
+    if let PrefixDecision::Warm { digest, prefix_len } = decision {
+        let probe =
+            PrefixProbe { request_id: req.id, digest, prefix_len: prefix_len as u32 };
+        port.send_prefix_probe(&probe)?;
+        pool.poll()?;
+        match port.recv_prefix_ack() {
+            Ok((ack, _)) if ack.hit && ack.digest == digest => {}
+            Ok(_) => decision = PrefixDecision::Insert { digest, prefix_len },
+            Err(_) => {
+                // Typed in-band rejection: the pool had no headroom.
+                pool.close_edge(edge_id);
+                return Ok(Admit::Rejected);
+            }
+        }
+    }
+    session.set_prefix_decision(decision);
+    Ok(Admit::Tenant(Box::new(Tenant {
+        req: req.clone(),
+        session,
+        port,
+        edge_id,
+        up: None,
+        sent_at_ms: 0,
+        worker: 0,
+    })))
+}
+
+/// Run one soak scenario to completion. All metrics, events, and audit
+/// gauges land on `reg` (which the pool shares); the returned outcome
+/// summarizes them.
+pub fn run(
+    eng: Rc<Engine>,
+    spec: &DeploymentSpec,
+    cfg: &SoakConfig,
+    reg: Arc<Registry>,
+) -> Result<SoakOutcome> {
+    anyhow::ensure!(cfg.workers >= 1, "soak needs at least one worker");
+    anyhow::ensure!(!cfg.regions.is_empty(), "soak needs at least one region profile");
+    let wall0 = Instant::now();
+
+    // Per-worker Eq. 8c budget, converted from sessions to bytes using
+    // a throwaway scheduler's per-session KV figure.
+    let kv_budget_bytes = match cfg.sessions_per_worker {
+        Some(n) => {
+            let probe =
+                FleetScheduler::new(spec.build_cloud_server(eng.clone())?, FleetConfig::default());
+            Some(n.max(1) * probe.session_kv_bytes().max(1))
+        }
+        None => None,
+    };
+
+    let fspec = spec.clone();
+    let feng = eng.clone();
+    let mut pool = CloudPool::new(
+        move || fspec.build_cloud_server(feng.clone()),
+        PoolConfig {
+            workers: cfg.workers,
+            fleet: FleetConfig { kv_budget_bytes, ..FleetConfig::default() },
+            seed: cfg.seed,
+            auto_rebalance: true,
+            ..PoolConfig::default()
+        },
+    )?;
+    pool.attach_obs(reg.clone());
+    for w in 0..cfg.workers {
+        pool.set_worker_region(w, cfg.regions[w % cfg.regions.len()].clone());
+    }
+    let regions: Vec<RegionProfile> =
+        (0..cfg.workers).map(|w| pool.worker_region(w).clone()).collect();
+    let region_hist: Vec<Arc<Histogram>> = regions
+        .iter()
+        .map(|r| reg.histogram_labeled("soak_token_latency_ms", "region", &r.name))
+        .collect();
+
+    // Diurnal trace, truncated to the horizon; a seeded fraction of
+    // prompts is rewritten to share one hot chunk-aligned prefix.
+    let mut reqs = generate_trace(&WorkloadSpec {
+        n_requests: cfg.max_sessions,
+        arrival_rate: cfg.peak_rate.max(0.001),
+        arrival: ArrivalPattern::Diurnal {
+            period_s: cfg.period_s,
+            peak_rate: cfg.peak_rate,
+            trough_rate: cfg.trough_rate.min(cfg.peak_rate),
+        },
+        prompt_len_min: 4,
+        prompt_len_max: 24,
+        output_len_min: 2,
+        output_len_max: cfg.max_new.max(2),
+        vocab: spec.model.vocab.clamp(32, 512),
+        seed: cfg.seed,
+    });
+    reqs.retain(|r| r.arrival_s < cfg.horizon_s);
+    let mut share_rng = Rng::new(cfg.seed ^ 0x5AAE);
+    let hot: Vec<u32> = (0..CHUNK_TOKENS as u32).map(|i| 10 + i).collect();
+    for r in reqs.iter_mut() {
+        if share_rng.f64() < cfg.prefix_share {
+            let mut p = hot.clone();
+            p.extend(r.prompt.iter().copied().take(8));
+            if p.len() <= CHUNK_TOKENS {
+                p.push(7);
+            }
+            r.prompt = p;
+        }
+    }
+    let sessions = reqs.len() as u64;
+
+    let edge = spec.build_edge_device(eng.clone())?;
+    // Fault-free solo oracle for the drift spot checks, prefix cache
+    // off: warm streams must be bit-identical to COLD replays.
+    let mut oracle_spec = spec.clone();
+    oracle_spec.prefix_cache_bytes = 0;
+    let mut oracle = build_pipeline(eng.clone(), &oracle_spec)?;
+
+    let mut drift = DriftAudit::new();
+    let mut active: Vec<Tenant> = Vec::new();
+    let mut next = 0usize;
+    let mut now_ms = 0u64;
+    let mut completed = 0u64;
+    let mut failed_typed = 0u64;
+    let mut tokens = 0u64;
+    let mut next_restart_s = cfg.restart_every_s;
+    let mut next_drain_s = cfg.drain_every_s;
+    let mut next_chaos_s = cfg.chaos_every_s;
+    let mut next_reconcile_s = cfg.reconcile_every_s.max(1.0);
+    let mut rr_kill = 0usize;
+    let mut rr_drain = 0usize;
+    let mut chaos_n = 0u64;
+    let mut steps = 0u64;
+
+    while next < reqs.len() || !active.is_empty() {
+        steps += 1;
+        anyhow::ensure!(steps < 100_000_000, "soak driver did not converge");
+        // Jump the virtual clock across idle troughs.
+        if active.is_empty() && next < reqs.len() {
+            let due_ms = (reqs[next].arrival_s * 1000.0) as u64;
+            now_ms = now_ms.max(due_ms);
+        }
+        now_ms += cfg.tick_ms.max(1);
+        reg.set_time_ms(now_ms);
+        let now_s = now_ms as f64 / 1000.0;
+
+        // Admissions due this tick.
+        while next < reqs.len() && reqs[next].arrival_s * 1000.0 <= now_ms as f64 {
+            let req = reqs[next].clone();
+            next += 1;
+            match admit(&mut pool, &edge, spec, &req)? {
+                Admit::Tenant(t) => active.push(*t),
+                Admit::Rejected => {
+                    failed_typed += 1;
+                    reg.counter("soak_sessions_rejected").inc();
+                }
+            }
+        }
+
+        // Maintenance cadences, on simulated time.
+        if cfg.restart_every_s > 0.0 && now_s >= next_restart_s {
+            next_restart_s += cfg.restart_every_s;
+            pool.kill_worker(rr_kill % cfg.workers)?;
+            rr_kill += 1;
+        }
+        if cfg.chaos_every_s > 0.0 && now_s >= next_chaos_s {
+            next_chaos_s += cfg.chaos_every_s;
+            chaos_n += 1;
+            if chaos_n % 2 == 1 {
+                let w = (rr_kill + 1) % cfg.workers;
+                pool.arm_worker_fault(w, FaultPlan::disconnect(cfg.seed ^ chaos_n, 2));
+            } else {
+                pool.arm_migrate_fault(chaos_n as usize * 13 + 5);
+            }
+        }
+        if cfg.drain_every_s > 0.0 && cfg.workers > 1 && now_s >= next_drain_s {
+            next_drain_s += cfg.drain_every_s;
+            let w = rr_drain % cfg.workers;
+            rr_drain += 1;
+            pool.drain_worker(w)?;
+            pool.undrain_worker(w);
+        }
+
+        // One payload per idle session, one pool step, then absorb
+        // whatever replied.
+        for t in active.iter_mut() {
+            if t.session.is_terminal() || t.up.is_some() {
+                continue;
+            }
+            if let SessionAction::Transmit(p) = t.session.poll(&edge)? {
+                t.up = Some(t.port.send_payload(&p)?);
+                t.sent_at_ms = now_ms;
+            }
+        }
+        pool.poll()?;
+        for t in active.iter_mut() {
+            if let Some(p) = pool.placement_of(t.req.id) {
+                t.worker = p.worker;
+            }
+        }
+
+        let mut i = 0usize;
+        while i < active.len() {
+            // None = still running; Some(failed) = session over.
+            let done: Option<bool> = {
+                let t = &mut active[i];
+                if t.session.is_terminal() {
+                    Some(false)
+                } else {
+                    match t.port.try_recv_reply() {
+                        Ok(Some((reply, cloud_s, down))) => {
+                            let up = t.up.take().expect("reply without an in-flight payload");
+                            let wire_bytes = up.payload_bytes + down.payload_bytes;
+                            match t.session.on_reply(&edge, &reply, cloud_s, up, down) {
+                                Ok(()) => {
+                                    let delay = regions[t.worker].reply_delay_s(wire_bytes);
+                                    let ms = now_ms.saturating_sub(t.sent_at_ms)
+                                        + (delay * 1000.0) as u64;
+                                    region_hist[t.worker].record(ms.max(1));
+                                    t.session.is_terminal().then_some(false)
+                                }
+                                Err(_) => Some(true),
+                            }
+                        }
+                        Ok(None) => None,
+                        // Typed in-band rejection (admission pressure,
+                        // failover without capacity, chaos fallout).
+                        Err(_) => Some(true),
+                    }
+                }
+            };
+            match done {
+                None => i += 1,
+                Some(failed) => {
+                    let t = active.swap_remove(i);
+                    pool.close_edge(t.edge_id);
+                    if failed {
+                        failed_typed += 1;
+                        reg.counter("soak_sessions_failed").inc();
+                    } else {
+                        completed += 1;
+                        let n = t.session.tokens().len() as u64;
+                        tokens += n;
+                        reg.counter("soak_sessions_completed").inc();
+                        reg.counter("soak_tokens_total").add(n);
+                        if completed % cfg.drift_check_every.max(1) == 0
+                            && drift.stream_checks < cfg.max_drift_replays
+                        {
+                            let want = oracle.generate(&t.req)?;
+                            drift.check_stream(t.req.id, t.session.tokens(), &want.tokens);
+                        }
+                    }
+                }
+            }
+        }
+
+        if now_s >= next_reconcile_s {
+            next_reconcile_s += cfg.reconcile_every_s.max(1.0);
+            pool.publish_metrics();
+            drift.reconcile(&reg, &pool);
+        }
+    }
+
+    // Settle: flush any straggler frames, then run both audits.
+    for _ in 0..8 {
+        pool.poll()?;
+    }
+    pool.publish_metrics();
+    drift.reconcile(&reg, &pool);
+    let leak = LeakReport::audit(&pool);
+    leak.publish(&reg);
+    reg.gauge("soak_sim_ms").set(now_ms as i64);
+
+    let mut region_p95_ms: Vec<(String, u64)> = Vec::new();
+    for (w, r) in regions.iter().enumerate() {
+        if region_p95_ms.iter().any(|(n, _)| n == &r.name) {
+            continue;
+        }
+        if region_hist[w].count() > 0 {
+            region_p95_ms.push((r.name.clone(), region_hist[w].quantile(0.95)));
+        }
+    }
+
+    Ok(SoakOutcome {
+        sim_s: now_ms as f64 / 1000.0,
+        wall_s: wall0.elapsed().as_secs_f64(),
+        sessions,
+        completed,
+        failed_typed,
+        tokens,
+        kills: pool.stats.kills,
+        drains: pool.stats.drains,
+        migrations: pool.stats.migrations,
+        leak,
+        drift_stream_checks: drift.stream_checks,
+        drift_reconcile_checks: drift.reconcile_checks,
+        drift_violations: drift.violations,
+        drift_details: drift.details.clone(),
+        region_p95_ms,
+        events_total: reg.events_total(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_config_is_sane() {
+        let cfg = SoakConfig::default();
+        assert!(cfg.horizon_s >= 7200.0, "the default scenario is the 2-simulated-hour soak");
+        assert!(cfg.trough_rate <= cfg.peak_rate);
+        assert_eq!(cfg.regions.len(), 4);
+        let short = cfg.with_horizon_minutes(10.0);
+        assert_eq!(short.horizon_s, 600.0);
+    }
+}

@@ -37,6 +37,14 @@
 //!   v7), so shared prompts land where their cached KV lives; a
 //!   session's prefix attachment rides the Migrate frame and is
 //!   released/re-attached across the handoff.
+//!
+//! Workers carry a [`RegionProfile`](crate::obs::RegionProfile):
+//! placement scores `headroom × region weight`, so a worker behind a
+//! far/thin link needs proportionally more free capacity to win a
+//! session. Every pool owns an [`obs::Registry`](crate::obs::Registry)
+//! (see [`CloudPool::obs`]) that mirrors all pool/fleet/cloud/prefix
+//! counters and records control-plane transitions in a bounded event
+//! ring.
 
 pub mod placement;
 pub mod pool;

@@ -7,19 +7,31 @@
 //! headroom (best-fit-decreasing in reverse — most headroom first keeps
 //! the pool level, which is what makes a later worker loss survivable).
 //!
+//! Workers are not interchangeable across regions, though: Eq. 5's
+//! deadline is paid on every edge→worker hop, so a worker behind a
+//! far/thin link must offer proportionally MORE headroom to win. Each
+//! candidate carries a region `weight` (see
+//! [`crate::obs::RegionProfile::weight`]) and the score is
+//! `headroom × weight`, computed in u128 so an unbounded-budget pool
+//! (headroom `u64::MAX / 2`) cannot saturate into a tie that erases
+//! the weights.
+//!
 //! Placement must also be **deterministic and observable**: the pool
 //! replays identically under a seed (benches, chaos reproduction), and
 //! every decision is logged as a [`PlacementDecision`]. Ties between
-//! equally-empty workers are broken by a seeded splitmix hash of
+//! equally-scored workers are broken by a seeded splitmix hash of
 //! (seed, request, worker) — not by map iteration order, which would
 //! leak `HashMap` nondeterminism into the fleet layout.
 
 /// One worker eligible to host a session, with its current headroom in
-/// whole sessions (budget ÷ per-session KV bytes, minus already-placed).
+/// whole sessions (budget ÷ per-session KV bytes, minus already-placed)
+/// and its region weight (1..=256; 1 = farthest, uniform weights
+/// reproduce the region-blind most-headroom behavior exactly).
 #[derive(Clone, Copy, Debug)]
 pub struct Candidate {
     pub worker: usize,
     pub headroom: u64,
+    pub weight: u64,
 }
 
 /// An observable record of one placement: which worker won and how much
@@ -39,16 +51,22 @@ fn mix(mut z: u64) -> u64 {
     z ^ (z >> 31)
 }
 
-/// Pick the candidate with the most headroom; among ties, the one whose
-/// seeded (seed, request, worker) hash is largest. Deterministic in the
-/// candidate SET (order-independent) and in the seed. `None` when no
-/// worker has room — the caller owes the session a typed ADMISSION
-/// rejection, not a silent drop.
+/// Pick the candidate with the highest `headroom × weight` score; among
+/// ties, the one whose seeded (seed, request, worker) hash is largest.
+/// Deterministic in the candidate SET (order-independent) and in the
+/// seed. A weight can never resurrect a FULL worker: zero headroom is
+/// ineligible regardless of region. `None` when no worker has room —
+/// the caller owes the session a typed ADMISSION rejection, not a
+/// silent drop.
 pub fn pick(seed: u64, request_id: u64, candidates: &[Candidate]) -> Option<usize> {
     candidates
         .iter()
         .filter(|c| c.headroom > 0)
-        .max_by_key(|c| (c.headroom, mix(seed ^ request_id ^ (c.worker as u64).wrapping_mul(0xA24B_AED4_963E_E407))))
+        .max_by_key(|c| {
+            let score = (c.headroom as u128) * (c.weight.max(1) as u128);
+            let salt = (c.worker as u64).wrapping_mul(0xA24B_AED4_963E_E407);
+            (score, mix(seed ^ request_id ^ salt))
+        })
         .map(|c| c.worker)
 }
 
@@ -57,7 +75,10 @@ mod tests {
     use super::*;
 
     fn cands(hs: &[u64]) -> Vec<Candidate> {
-        hs.iter().enumerate().map(|(worker, &headroom)| Candidate { worker, headroom }).collect()
+        hs.iter()
+            .enumerate()
+            .map(|(worker, &headroom)| Candidate { worker, headroom, weight: 1 })
+            .collect()
     }
 
     #[test]
@@ -96,5 +117,50 @@ mod tests {
         }
         let moved = (0..400u64).filter(|&rid| pick(5, rid, &even) != pick(6, rid, &even)).count();
         assert!(moved > 100, "changing the seed barely moved the layout ({moved}/400)");
+    }
+
+    #[test]
+    fn region_weight_scales_the_headroom_score() {
+        // Equal headroom: the heavier (nearer) region wins outright.
+        let near_far = vec![
+            Candidate { worker: 0, headroom: 4, weight: 58 },
+            Candidate { worker: 1, headroom: 4, weight: 251 },
+        ];
+        for rid in 0..50u64 {
+            assert_eq!(pick(9, rid, &near_far), Some(1));
+        }
+        // Enough extra headroom flips the pick back to the far region.
+        let far_has_room = vec![
+            Candidate { worker: 0, headroom: 40, weight: 58 },
+            Candidate { worker: 1, headroom: 4, weight: 251 },
+        ];
+        for rid in 0..50u64 {
+            assert_eq!(pick(9, rid, &far_has_room), Some(0));
+        }
+    }
+
+    #[test]
+    fn weight_never_resurrects_a_full_worker() {
+        let full_but_near = vec![
+            Candidate { worker: 0, headroom: 0, weight: 256 },
+            Candidate { worker: 1, headroom: 1, weight: 1 },
+        ];
+        assert_eq!(pick(3, 11, &full_but_near), Some(1));
+        let all_full = vec![Candidate { worker: 0, headroom: 0, weight: 256 }];
+        assert_eq!(pick(3, 11, &all_full), None);
+    }
+
+    #[test]
+    fn unbounded_headroom_does_not_saturate_the_weighted_score() {
+        // headroom u64::MAX/2 is the "no budget" sentinel; the u128
+        // score must still separate the weights instead of clamping
+        // both to the same max.
+        let unbounded = vec![
+            Candidate { worker: 0, headroom: u64::MAX / 2, weight: 58 },
+            Candidate { worker: 1, headroom: u64::MAX / 2, weight: 251 },
+        ];
+        for rid in 0..50u64 {
+            assert_eq!(pick(4, rid, &unbounded), Some(1));
+        }
     }
 }

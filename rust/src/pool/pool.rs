@@ -39,12 +39,14 @@
 //! is in flight (`adapt::ReconcileDecision::Defer`).
 
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
 use anyhow::Result;
 
 use crate::coordinator::protocol::{reject, RejectFrame};
 use crate::coordinator::CloudServer;
 use crate::fleet::{FleetConfig, FleetScheduler};
+use crate::obs::{self, EventKind, MetricSource, RegionProfile, Registry};
 use crate::prefix::PrefixDigest;
 use crate::wire::{
     self, FaultPlan, FrameKind, Loopback, PollRecv, Transport, WireError, WireTransport,
@@ -150,6 +152,11 @@ struct WorkerSlot {
     /// backstop — a lie can cost typed ADMISSION rejects, never a
     /// silent over-commit.
     telemetry_override: Option<u64>,
+    /// Where this worker lives. Placement scoring multiplies headroom
+    /// by the region's weight, so a far/thin region needs proportionally
+    /// more free capacity to win a session. Survives respawn (the
+    /// replacement rack is in the same region).
+    region: RegionProfile,
 }
 
 pub struct CloudPool {
@@ -172,7 +179,33 @@ pub struct CloudPool {
     /// Armed chaos: XOR one bit into the NEXT worker-to-worker migrate
     /// frame mid-handoff (one-shot; the bit index wraps over the frame).
     migrate_fault: Option<usize>,
+    /// Metrics registry + structured event ring. Every pool owns one;
+    /// `attach_obs` swaps in a shared registry (the soak driver and the
+    /// `--metrics` CLI flag do this) so one snapshot covers the run.
+    obs: Arc<Registry>,
     pub stats: PoolStats,
+}
+
+impl MetricSource for PoolStats {
+    fn metrics(&self) -> Vec<(&'static str, u64)> {
+        vec![
+            ("pool_placed", self.placed),
+            ("pool_placement_rejected", self.placement_rejected),
+            ("pool_kills", self.kills),
+            ("pool_respawns", self.respawns),
+            ("pool_failovers", self.failovers),
+            ("pool_failover_redelivered", self.failover_redelivered),
+            ("pool_failover_rejected", self.failover_rejected),
+            ("pool_migrations", self.migrations),
+            ("pool_migration_rejected", self.migration_rejected),
+            ("pool_prefix_placements", self.prefix_placements),
+            ("pool_migrate_frame_faults", self.migrate_frame_faults),
+            ("pool_drains", self.drains),
+            ("pool_rebalances", self.rebalances),
+            ("pool_replies_forwarded", self.replies_forwarded),
+            ("pool_edges_closed", self.edges_closed),
+        ]
+    }
 }
 
 impl CloudPool {
@@ -201,6 +234,7 @@ impl CloudPool {
             polls: 0,
             last_rebalance: 0,
             migrate_fault: None,
+            obs: Arc::new(Registry::new()),
             stats: PoolStats::default(),
         })
     }
@@ -216,7 +250,30 @@ impl CloudPool {
             fault: None,
             ops: 0,
             telemetry_override: None,
+            region: RegionProfile::local(),
         })
+    }
+
+    /// Assign a worker to a region. Placement scoring weighs the
+    /// region's RTT/goodput profile from the next poll on; the region
+    /// sticks to the SLOT, so a respawned worker inherits it.
+    pub fn set_worker_region(&mut self, idx: usize, region: RegionProfile) {
+        self.workers[idx].region = region;
+    }
+
+    pub fn worker_region(&self, idx: usize) -> &RegionProfile {
+        &self.workers[idx].region
+    }
+
+    /// The pool's metrics registry + event ring.
+    pub fn obs(&self) -> &Arc<Registry> {
+        &self.obs
+    }
+
+    /// Swap in a shared registry (the `--metrics` flag and the soak
+    /// driver do this so one snapshot covers the whole run).
+    pub fn attach_obs(&mut self, obs: Arc<Registry>) {
+        self.obs = obs;
     }
 
     /// Register an edge-facing connection. The pool owns the transport;
@@ -327,6 +384,65 @@ impl CloudPool {
         self.workers.iter().map(|w| w.scheduler.cloud().prefix_live_attachments()).sum()
     }
 
+    /// Aggregate prefix-store byte budgets across all workers (the leak
+    /// audit allows charged bytes up to this — resident rows are cache).
+    pub fn prefix_budget_bytes(&self) -> u64 {
+        self.workers.iter().map(|w| w.scheduler.cloud().prefix_budget_bytes()).sum()
+    }
+
+    /// Publish every pool/fleet/cloud/prefix counter and gauge onto the
+    /// registry. Runs at the end of each `poll`; also callable directly
+    /// before a snapshot. Counters are mirrored with `set` (publication,
+    /// not accumulation), so re-publishing is idempotent.
+    pub fn publish_metrics(&self) {
+        // Prefix attach/release transitions, observed as ledger deltas
+        // (the stores themselves have no event channel).
+        let prev = self.obs.gauge("pool_prefix_attachments").get();
+        let now = self.prefix_attachments() as i64;
+        if now > prev {
+            self.obs.event(EventKind::PrefixAttach, 0, (now - prev) as u64, 0);
+        } else if now < prev {
+            self.obs.event(EventKind::PrefixRelease, 0, (prev - now) as u64, 0);
+        }
+        self.obs.publish(&self.stats);
+        self.obs.gauge("pool_live_sessions").set(self.live_sessions() as i64);
+        self.obs.gauge("pool_fence_entries").set(self.fence_entries() as i64);
+        self.obs.gauge("pool_control_entries").set(self.control_entries() as i64);
+        self.obs.gauge("pool_resume_entries").set(self.resume_entries() as i64);
+        self.obs.gauge("pool_placed_sessions").set(self.placed_sessions() as i64);
+        self.obs.gauge("pool_inflight_frames").set(self.inflight_frames() as i64);
+        self.obs.gauge("pool_edge_count").set(self.edge_count() as i64);
+        self.obs.gauge("pool_workers").set(self.workers.len() as i64);
+        self.obs.gauge("pool_prefix_charged_bytes").set(self.prefix_charged_bytes() as i64);
+        self.obs.gauge("pool_prefix_attachments").set(now);
+        // Fleet + cloud + prefix-store totals, aggregated across workers.
+        let mut totals: BTreeMap<&'static str, u64> = BTreeMap::new();
+        let mut peak_batch = 0u64;
+        let mut pending = 0u64;
+        for slot in &self.workers {
+            let s = &slot.scheduler;
+            obs::accumulate(&mut totals, &s.stats);
+            obs::accumulate(&mut totals, &s.cloud().prefix_stats());
+            totals
+                .entry("cloud_tokens_generated")
+                .and_modify(|v| *v += s.cloud().tokens_generated())
+                .or_insert(s.cloud().tokens_generated());
+            totals
+                .entry("cloud_tokens_stacked")
+                .and_modify(|v| *v += s.cloud().tokens_stacked())
+                .or_insert(s.cloud().tokens_stacked());
+            totals
+                .entry("cloud_reconfigs_applied")
+                .and_modify(|v| *v += s.cloud().reconfigs_applied())
+                .or_insert(s.cloud().reconfigs_applied());
+            peak_batch = peak_batch.max(s.stats.peak_batch as u64);
+            pending += s.pending_frames() as u64;
+        }
+        self.obs.publish_totals(&totals);
+        self.obs.gauge("fleet_peak_batch").set(peak_batch as i64);
+        self.obs.gauge("fleet_pending_frames").set(pending as i64);
+    }
+
     // ---- event loop ------------------------------------------------------
 
     /// One pool step: pump edge frames in, step every worker (intake +
@@ -341,6 +457,7 @@ impl CloudPool {
         if self.cfg.auto_rebalance {
             self.maybe_rebalance()?;
         }
+        self.publish_metrics();
         Ok(served)
     }
 
@@ -395,6 +512,7 @@ impl CloudPool {
                         Some(w) => w,
                         None => {
                             self.stats.placement_rejected += 1;
+                            self.obs.event(EventKind::AdmissionReject, rid, 0, 0);
                             self.reject_to_edge(edge_id, rid, "no worker has KV headroom");
                             return Ok(());
                         }
@@ -409,10 +527,12 @@ impl CloudPool {
             }
             Err(WireError::WrongKind { got: FrameKind::Reconfig, .. }) => {
                 let rc = wire::decode_reconfig_frame(&frame)?;
+                self.obs.event(EventKind::Reconfig, rc.request_id, 0, 0);
                 self.route_control(edge_id, rc.request_id, frame)
             }
             Err(WireError::WrongKind { got: FrameKind::Resume, .. }) => {
                 let rs = wire::decode_resume_frame(&frame)?;
+                self.obs.event(EventKind::Resume, rs.request_id, 0, 0);
                 self.route_control(edge_id, rs.request_id, frame)
             }
             Err(WireError::WrongKind { got: FrameKind::PrefixProbe, .. }) => {
@@ -428,6 +548,7 @@ impl CloudPool {
                         Some(w) => w,
                         None => {
                             self.stats.placement_rejected += 1;
+                            self.obs.event(EventKind::AdmissionReject, rid, 0, 0);
                             self.reject_to_edge(edge_id, rid, "no worker has KV headroom");
                             return Ok(());
                         }
@@ -446,6 +567,7 @@ impl CloudPool {
                 Some(w) => w,
                 None => {
                     self.stats.placement_rejected += 1;
+                    self.obs.event(EventKind::AdmissionReject, rid, 0, 0);
                     self.reject_to_edge(edge_id, rid, "no worker has KV headroom");
                     return Ok(());
                 }
@@ -590,6 +712,7 @@ impl CloudPool {
             self.inflight.remove(&rid);
         }
         self.stats.edges_closed += 1;
+        self.obs.event(EventKind::EdgeClosed, 0, edge_id, 0);
     }
 
     // ---- placement -------------------------------------------------------
@@ -614,7 +737,11 @@ impl CloudPool {
                     (None, Some(b)) => b / slot.scheduler.session_kv_bytes().max(1),
                     (None, None) => u64::MAX / 2,
                 };
-                Candidate { worker: w, headroom: cap.saturating_sub(counts[w]) }
+                Candidate {
+                    worker: w,
+                    headroom: cap.saturating_sub(counts[w]),
+                    weight: slot.region.weight(),
+                }
             })
             .collect()
     }
@@ -654,6 +781,7 @@ impl CloudPool {
         self.placements.insert(request_id, Placement { worker: w, edge });
         self.decisions.push(PlacementDecision { request_id, worker: w, headroom });
         self.stats.placed += 1;
+        self.obs.event(EventKind::Admission, request_id, w as u64, headroom);
         Some(w)
     }
 
@@ -682,14 +810,19 @@ impl CloudPool {
 
     fn fail_worker(&mut self, idx: usize) -> Result<()> {
         self.stats.kills += 1;
+        self.obs.event(EventKind::Kill, 0, idx as u64, 0);
         // The slot dies WHOLESALE: scheduler (admission charges, fences,
         // control entries), cloud server, and routes all drop together —
         // a dead worker cannot leak charges because the ledger that held
         // them no longer exists. A fresh worker from the same factory
-        // takes the slot (same weights, same sampling keys).
-        let fresh = Self::spawn_worker(self.factory.as_ref(), self.cfg.fleet)?;
+        // takes the slot (same weights, same sampling keys); the
+        // replacement rack stands in the same region.
+        let region = self.workers[idx].region.clone();
+        let mut fresh = Self::spawn_worker(self.factory.as_ref(), self.cfg.fleet)?;
+        fresh.region = region;
         self.workers[idx] = fresh;
         self.stats.respawns += 1;
+        self.obs.event(EventKind::Respawn, 0, idx as u64, 0);
 
         // Re-place every victim (sorted order: deterministic recovery),
         // re-delivering its last unanswered payload. The replacement
@@ -706,6 +839,7 @@ impl CloudPool {
             match self.place(rid, edge) {
                 Some(w) => {
                     self.stats.failovers += 1;
+                    self.obs.event(EventKind::Failover, rid, w as u64, 0);
                     if let Some(frame) = self.inflight.get(&rid).cloned() {
                         self.stats.failover_redelivered += 1;
                         self.deliver(w, edge, frame)?;
@@ -783,6 +917,8 @@ impl CloudPool {
                 return match self.workers[p.worker].scheduler.import_session(p.edge, &ms)? {
                     Ok(_) => {
                         self.stats.migration_rejected += 1;
+                        let (a, b) = (p.worker as u64, target as u64);
+                        self.obs.event(EventKind::MigrateReject, rid, a, b);
                         Ok(Err(RejectFrame {
                             code: reject::FAILED,
                             request_id: rid,
@@ -803,10 +939,15 @@ impl CloudPool {
             Ok(_ack) => {
                 self.placements.insert(rid, Placement { worker: target, edge: p.edge });
                 self.stats.migrations += 1;
+                self.obs.event(EventKind::Migrate, rid, p.worker as u64, target as u64);
+                if self.workers[p.worker].region.name != self.workers[target].region.name {
+                    self.obs.event(EventKind::RegionHop, rid, p.worker as u64, target as u64);
+                }
                 Ok(Ok(()))
             }
             Err(rj) => {
                 self.stats.migration_rejected += 1;
+                self.obs.event(EventKind::MigrateReject, rid, p.worker as u64, target as u64);
                 // Roll back onto the source: its epoch entry was removed
                 // at export, so the same MigrateState re-admits there.
                 self.route(p.worker, p.edge);
@@ -831,6 +972,7 @@ impl CloudPool {
         anyhow::ensure!(idx < self.workers.len(), "no worker {idx}");
         self.workers[idx].draining = true;
         self.stats.drains += 1;
+        self.obs.event(EventKind::Drain, 0, idx as u64, 0);
         self.quiesce_worker(idx)?;
         let resident: Vec<u64> = self
             .placements
@@ -861,6 +1003,7 @@ impl CloudPool {
 
     pub fn undrain_worker(&mut self, idx: usize) {
         self.workers[idx].draining = false;
+        self.obs.event(EventKind::Undrain, 0, idx as u64, 0);
     }
 
     /// One hysteresis-gated rebalance step: when the hottest and coldest
@@ -894,6 +1037,7 @@ impl CloudPool {
         let ok = self.migrate_session(rid, cold)?.is_ok();
         if ok {
             self.stats.rebalances += 1;
+            self.obs.event(EventKind::Rebalance, rid, hot as u64, cold as u64);
         }
         Ok(ok)
     }

@@ -60,6 +60,19 @@ pub struct EdgeCacheStats {
     pub rejected_over_budget: u64,
 }
 
+impl crate::obs::MetricSource for EdgeCacheStats {
+    /// `edge_prefix_*` counters for the obs registry.
+    fn metrics(&self) -> Vec<(&'static str, u64)> {
+        vec![
+            ("edge_prefix_hits", self.hits),
+            ("edge_prefix_misses", self.misses),
+            ("edge_prefix_inserts", self.inserts),
+            ("edge_prefix_evictions", self.evictions),
+            ("edge_prefix_rejected_over_budget", self.rejected_over_budget),
+        ]
+    }
+}
+
 struct Slot {
     entry: Rc<EdgePrefixEntry>,
     last_used: u64,

@@ -55,6 +55,20 @@ pub struct PrefixStoreStats {
     pub rejected_over_budget: u64,
 }
 
+impl crate::obs::MetricSource for PrefixStoreStats {
+    /// `prefix_store_*` counters for the obs registry.
+    fn metrics(&self) -> Vec<(&'static str, u64)> {
+        vec![
+            ("prefix_store_hits", self.hits),
+            ("prefix_store_misses", self.misses),
+            ("prefix_store_inserts", self.inserts),
+            ("prefix_store_dedup_inserts", self.dedup_inserts),
+            ("prefix_store_evictions", self.evictions),
+            ("prefix_store_rejected_over_budget", self.rejected_over_budget),
+        ]
+    }
+}
+
 struct Entry {
     kv: PrefixKv,
     refcount: usize,

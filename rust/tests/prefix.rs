@@ -683,3 +683,65 @@ fn pool_steers_warm_sessions_to_resident_workers_and_survives_death() {
     assert_eq!(pool.placed_sessions(), 0, "placements leaked");
     assert_eq!(pool.prefix_attachments(), 0, "prefix refcounts leaked");
 }
+
+// ---------------------------------------------------------------------------
+// Nested chunk-boundary matching: a shorter RESIDENT boundary beats a
+// cold insert of the longest.
+// ---------------------------------------------------------------------------
+
+/// The edge probes chunk boundaries longest-first for RESIDENCY: a
+/// 2-chunk prompt whose first chunk is already hot reuses that chunk
+/// (`Warm` at the 16-token boundary) instead of cold-inserting the
+/// 32-token prefix — and the nested warm stream is still bit-identical
+/// to its cold oracle. A fully cold prompt inserts at the LONGEST
+/// boundary so the cache learns the widest reusable prefix.
+#[test]
+fn shorter_resident_boundary_beats_cold_insert_of_the_longest() {
+    let eng = engine();
+    let spec = warm_spec(4, 2);
+    let mut pipe = build_pipeline(eng.clone(), &spec).unwrap();
+
+    // Seed: a 1-chunk-plus-suffix prompt caches the 16-token boundary.
+    let seed_req = Request::new(800, shared_prompt(&[880, 881, 882]), 6);
+    assert!(matches!(
+        pipe.edge.prefix_decision(&seed_req.prompt),
+        PrefixDecision::Insert { prefix_len, .. } if prefix_len == CHUNK_TOKENS
+    ));
+    pipe.generate(&seed_req).unwrap();
+    pipe.cloud.retire_request(seed_req.id);
+
+    // Two-chunk prompt sharing ONLY the first chunk: its 32-token
+    // boundary has never been seen, but the 16-token one is resident —
+    // the nested match must pick the shorter warm boundary.
+    let mut long_prompt = shared_prompt(&[]);
+    long_prompt.extend((0..CHUNK_TOKENS as u32).map(|i| 600 + i));
+    long_prompt.extend_from_slice(&[77, 78]);
+    assert!(long_prompt.len() > 2 * CHUNK_TOKENS);
+    let req = Request::new(801, long_prompt.clone(), 6);
+    match pipe.edge.prefix_decision(&req.prompt) {
+        PrefixDecision::Warm { prefix_len, .. } => assert_eq!(
+            prefix_len, CHUNK_TOKENS,
+            "nested match must engage the resident 16-token boundary"
+        ),
+        other => panic!("expected a nested Warm match, got {other:?}"),
+    }
+    let got = pipe.generate(&req).unwrap().tokens;
+    assert_eq!(
+        got,
+        cold_oracle(&eng, 4, 2, &req),
+        "nested warm stream diverged from the cold oracle"
+    );
+    pipe.cloud.retire_request(req.id);
+
+    // The same prompt against a FRESH deployment (nothing resident)
+    // inserts at the longest boundary, not the shortest.
+    let fresh = build_pipeline(eng.clone(), &spec).unwrap();
+    match fresh.edge.prefix_decision(&long_prompt) {
+        PrefixDecision::Insert { prefix_len, .. } => assert_eq!(
+            prefix_len,
+            2 * CHUNK_TOKENS,
+            "a fully cold prompt must learn the widest boundary"
+        ),
+        other => panic!("expected a longest-boundary Insert, got {other:?}"),
+    }
+}

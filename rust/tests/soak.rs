@@ -1,0 +1,192 @@
+//! Integration tests for the observability subsystem's soak harness.
+//!
+//! Two layers are pinned here:
+//!
+//! 1. **The soak itself** — a short (CI-sized) virtual-time scenario
+//!    with diurnal churn, rolling restarts, drains and chaos over an
+//!    asymmetric multi-region pool must finish with BOTH audits clean:
+//!    zero leaked charges/fences/placements/refcounts and zero drift
+//!    violations (bit-identity spot checks + registry/ledger
+//!    reconciliation).
+//! 2. **Metrics reconciliation** — the obs registry is a *mirror*, not
+//!    a second truth: its counters must equal the existing getters
+//!    (`ServeReport` fields, `CloudServer` counters, pool stats) that
+//!    tests and benches have asserted on since the counters were ad-hoc.
+
+use std::rc::Rc;
+use std::sync::Arc;
+
+use splitserve::coordinator::{build_serve_loop, DeploymentSpec, ServeSpec, TokenControl};
+use splitserve::model::ModelConfig;
+use splitserve::obs::{soak, RegionProfile, Registry, SoakConfig};
+use splitserve::runtime::Engine;
+use splitserve::trace::{generate_trace, WorkloadSpec};
+
+fn engine() -> Rc<Engine> {
+    Rc::new(Engine::load("artifacts", &ModelConfig::sim7b()).expect("run `make artifacts`"))
+}
+
+fn small_cfg(n_layers: usize) -> ModelConfig {
+    let mut cfg = ModelConfig::sim7b();
+    cfg.n_layers = n_layers;
+    cfg
+}
+
+/// ACCEPTANCE: a CI-sized soak — simulated minutes of diurnal churn,
+/// rolling worker restarts, drain/undrain cycles and armed chaos over
+/// three asymmetric regions — completes with the leak audit AND the
+/// drift audit clean. Typed session failures under chaos are allowed;
+/// dirty audits are not.
+#[test]
+fn short_soak_passes_both_audits_under_churn_and_chaos() {
+    let eng = engine();
+    let spec = DeploymentSpec::defaults(small_cfg(2), 1).with_prefix_cache(32 * 1024 * 1024);
+    let mut cfg = SoakConfig::default().with_horizon_minutes(8.0);
+    cfg.workers = 3;
+    cfg.regions = vec![
+        RegionProfile::local(),
+        RegionProfile::preset("us-east").unwrap(),
+        RegionProfile::preset("ap-south").unwrap(),
+    ];
+    cfg.max_sessions = 60;
+    // Slow diurnal arrivals (~0.3/s mean) stretch the 60 sessions across
+    // a few simulated minutes so every maintenance cadence fires.
+    cfg.period_s = 240.0;
+    cfg.peak_rate = 0.5;
+    cfg.trough_rate = 0.1;
+    cfg.restart_every_s = 60.0;
+    cfg.drain_every_s = 90.0;
+    cfg.chaos_every_s = 140.0;
+    cfg.reconcile_every_s = 15.0;
+    cfg.drift_check_every = 3;
+    let reg = Arc::new(Registry::new());
+    let out = soak::run(eng, &spec, &cfg, reg.clone()).unwrap();
+
+    assert!(out.sessions > 10, "the diurnal trace admitted almost nothing: {}", out.sessions);
+    assert!(out.completed > 0, "no session ever completed");
+    assert!(out.tokens > 0);
+    assert!(out.kills >= 1, "the restart cadence never fired");
+    assert!(out.drains >= 1, "the drain cadence never fired");
+    assert!(out.drift_stream_checks >= 1, "no stream was ever spot-checked");
+    assert!(out.drift_reconcile_checks >= 1, "the registry was never reconciled");
+    assert!(out.leak.clean(), "leak audit dirty: {:?}", out.leak);
+    assert_eq!(out.drift_violations, 0, "drift audit dirty: {:?}", out.drift_details);
+    assert!(out.passed());
+    assert!(
+        !out.region_p95_ms.is_empty(),
+        "no region ever recorded a token latency"
+    );
+
+    // The registry mirrors the outcome (the soak's own counters) and the
+    // pool's ledgers (pool_* counters published every poll).
+    let snap = reg.snapshot();
+    assert_eq!(snap.counter("soak_sessions_completed"), out.completed);
+    assert_eq!(snap.counter("soak_tokens_total"), out.tokens);
+    assert_eq!(snap.counter("pool_kills"), out.kills);
+    assert_eq!(snap.counter("pool_drains"), out.drains);
+    assert!(snap.counter("fleet_payloads_served") > 0, "fleet counters never aggregated");
+    assert_eq!(snap.gauge("pool_live_sessions"), 0, "gauge disagrees with the drained pool");
+    assert!(reg.events_total() > 0, "no control-plane event was ever recorded");
+}
+
+/// The per-region latency histograms see the region asymmetry: with one
+/// local and one far/thin region and per-worker budgets small enough to
+/// force spill, the far region's p95 time-to-token must sit above the
+/// local one's.
+#[test]
+fn region_asymmetry_shows_up_as_p95_spread() {
+    let eng = engine();
+    let spec = DeploymentSpec::defaults(small_cfg(2), 1);
+    let mut cfg = SoakConfig::default().with_horizon_minutes(6.0);
+    cfg.workers = 2;
+    cfg.regions = vec![RegionProfile::local(), RegionProfile::preset("ap-south").unwrap()];
+    cfg.max_sessions = 50;
+    // Fast arrivals + tight per-worker budgets force overlap, so the
+    // local worker fills and sessions spill to the far region.
+    cfg.peak_rate = 8.0;
+    cfg.trough_rate = 4.0;
+    cfg.sessions_per_worker = Some(2);
+    cfg.prefix_share = 0.0;
+    cfg.restart_every_s = 0.0; // isolate placement: no churn
+    cfg.drain_every_s = 0.0;
+    cfg.chaos_every_s = 0.0;
+    let reg = Arc::new(Registry::new());
+    let out = soak::run(eng, &spec, &cfg, reg).unwrap();
+    assert!(out.passed(), "leak {:?} / drift {:?}", out.leak, out.drift_details);
+
+    let p95 = |name: &str| {
+        out.region_p95_ms
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|&(_, v)| v)
+    };
+    let (local, far) = (p95("local"), p95("ap-south"));
+    assert!(local.is_some(), "the local region served nothing: {:?}", out.region_p95_ms);
+    assert!(
+        far.is_some(),
+        "tight budgets never spilled a session to the far region: {:?}",
+        out.region_p95_ms
+    );
+    assert!(
+        far.unwrap() > local.unwrap(),
+        "an 85 ms RTT region p95 ({:?} ms) should exceed the local one ({:?} ms)",
+        far,
+        local
+    );
+}
+
+/// `ServeLoop::export_metrics` mirrors, never re-derives: every `serve_*`
+/// counter equals the `ServeReport` field it came from, the `cloud_*`
+/// counters equal the `CloudServer` getters, and the latency histogram
+/// holds exactly the report's completion latencies.
+#[test]
+fn serve_metrics_reconcile_with_the_report_and_cloud_getters() {
+    let eng = engine();
+    let spec = ServeSpec::defaults(small_cfg(2), 1, 2);
+    let mut serve = build_serve_loop(eng, &spec).unwrap();
+    let trace = generate_trace(&WorkloadSpec { n_requests: 5, ..Default::default() });
+    let report = serve.run(trace, |_, _| TokenControl::Continue).unwrap();
+    assert!(report.total_tokens > 0);
+
+    let reg = Registry::new();
+    serve.export_metrics(&reg, &report);
+    let snap = reg.snapshot();
+    assert_eq!(snap.counter("serve_total_tokens"), report.total_tokens);
+    assert_eq!(snap.counter("serve_iterations"), report.iterations);
+    assert_eq!(snap.counter("serve_results"), report.results.len() as u64);
+    assert_eq!(snap.counter("serve_cancelled"), report.cancelled);
+    assert_eq!(snap.counter("serve_failed"), report.failed);
+    assert_eq!(snap.counter("serve_reconfigs"), report.reconfigs);
+    assert_eq!(snap.gauge("serve_peak_batch"), report.peak_batch as i64);
+    assert_eq!(snap.counter("cloud_tokens_generated"), serve.cloud.tokens_generated());
+    assert_eq!(snap.counter("cloud_tokens_stacked"), serve.cloud.tokens_stacked());
+    assert_eq!(snap.counter("cloud_reconfigs_applied"), serve.cloud.reconfigs_applied());
+    let lat = snap.hist("serve_latency_us").expect("latency histogram exported");
+    assert_eq!(lat.count, report.latencies_s.len() as u64);
+}
+
+/// The deprecated `CloudServer` getters are shims over the obs counters:
+/// getter and registry snapshot must be the same number, before and
+/// after more serving.
+#[test]
+fn cloud_counter_shims_equal_their_registry_mirrors() {
+    let eng = engine();
+    let spec = ServeSpec::defaults(small_cfg(2), 1, 1);
+    let mut serve = build_serve_loop(eng, &spec).unwrap();
+    let trace = generate_trace(&WorkloadSpec { n_requests: 3, ..Default::default() });
+    serve.run(trace, |_, _| TokenControl::Continue).unwrap();
+    let before = serve.cloud.tokens_generated();
+    assert!(before > 0);
+
+    let reg = Registry::new();
+    serve.cloud.export_metrics(&reg);
+    assert_eq!(reg.snapshot().counter("cloud_tokens_generated"), before);
+
+    // Serve more; the shim and a fresh export move together.
+    let trace = generate_trace(&WorkloadSpec { n_requests: 2, seed: 77, ..Default::default() });
+    serve.run(trace, |_, _| TokenControl::Continue).unwrap();
+    let after = serve.cloud.tokens_generated();
+    assert!(after > before, "the shim stopped counting");
+    serve.cloud.export_metrics(&reg);
+    assert_eq!(reg.snapshot().counter("cloud_tokens_generated"), after);
+}

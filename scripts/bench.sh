@@ -61,9 +61,22 @@ BENCH_JSON="$POOL_JSON" cargo bench --bench pool "$@"
 PREFIX_JSON="${BENCH_PREFIX_JSON:-BENCH_prefix.json}"
 BENCH_JSON="$PREFIX_JSON" cargo bench --bench prefix "$@"
 
-for f in "$BENCH_JSON" "$ENGINE_JSON" "$WIRE_JSON" "$ADAPT_JSON" "$CHAOS_JSON" "$FLEET_JSON" "$POOL_JSON" "$PREFIX_JSON"; do
+# Long-horizon soak: simulated hours of diurnal churn + restarts + chaos
+# over an asymmetric multi-region pool. The binary ASSERTS that BOTH the
+# leak audit and the drift audit come back clean, and that the
+# multi-region p95 spread is visible — a panic fails this script.
+SOAK_JSON="${BENCH_SOAK_JSON:-BENCH_soak.json}"
+BENCH_JSON="$SOAK_JSON" cargo bench --bench soak "$@"
+
+for f in "$BENCH_JSON" "$ENGINE_JSON" "$WIRE_JSON" "$ADAPT_JSON" "$CHAOS_JSON" "$FLEET_JSON" "$POOL_JSON" "$PREFIX_JSON" "$SOAK_JSON"; do
     if [ -f "$f" ]; then
         echo "--- $f ---"
         cat "$f"
     fi
 done
+
+# Roll every per-bench report into one BENCH_summary.json for the
+# trajectory record (and for tooling that wants a single artifact).
+cargo run --release --quiet -- bench-summary
+echo "--- BENCH_summary.json ---"
+cat BENCH_summary.json

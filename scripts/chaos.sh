@@ -19,11 +19,19 @@ cd "$(dirname "$0")/.."
 # rebalance, bit-flips mid-frame into the worker-to-worker Migrate
 # handoff, placement under corrupted headroom telemetry) plus the
 # prefix-cache property suite and the pool bench in release mode.
+#
+# `scripts/chaos.sh --soak` runs the long-horizon soak on top: the
+# virtual-time diurnal scenario with rolling restarts, drains, and armed
+# chaos faults, gated on the leak + drift audits (tests + bench).
 POOL=0
-if [ "${1:-}" = "--pool" ]; then
-    POOL=1
+SOAK=0
+while [ "${1:-}" = "--pool" ] || [ "${1:-}" = "--soak" ]; do
+    case "$1" in
+        --pool) POOL=1 ;;
+        --soak) SOAK=1 ;;
+    esac
     shift
-fi
+done
 
 export CHAOS_SEEDS="${CHAOS_SEEDS:-240}"
 echo "chaos sweep: CHAOS_SEEDS=$CHAOS_SEEDS"
@@ -39,6 +47,17 @@ if [ "$POOL" = 1 ]; then
     if [ -f "$POOL_JSON" ]; then
         echo "--- $POOL_JSON ---"
         cat "$POOL_JSON"
+    fi
+fi
+
+if [ "$SOAK" = 1 ]; then
+    echo "soak: long-horizon diurnal churn + restarts + chaos, audit-gated"
+    cargo test --release --test soak -- "$@"
+    SOAK_JSON="${BENCH_SOAK_JSON:-BENCH_soak.json}"
+    BENCH_JSON="$SOAK_JSON" cargo bench --bench soak
+    if [ -f "$SOAK_JSON" ]; then
+        echo "--- $SOAK_JSON ---"
+        cat "$SOAK_JSON"
     fi
 fi
 
